@@ -1,0 +1,7 @@
+"""Let `pytest python/tests/` run from the repo root: the test modules
+import the build-time package as `compile.*`, which lives in python/."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

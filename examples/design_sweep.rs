@@ -1,0 +1,42 @@
+//! Design-size sweep (paper Fig 8): performance vs number of PEs for all
+//! four algorithms on both networks, using synthetic statistics (fast;
+//! run `resnet18_imagenet` for the golden-stats version).
+//!
+//! ```sh
+//! cargo run --release --example design_sweep [-- --steps 6 --hw 64]
+//! ```
+
+use cimfab::coordinator::{Driver, DriverOpts, StatsSource};
+use cimfab::report;
+use cimfab::util::cli::Args;
+
+fn main() -> cimfab::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["csv"]).map_err(anyhow::Error::msg)?;
+    let steps = args.get_usize("steps", 5).map_err(anyhow::Error::msg)?;
+    let hw = args.get_usize("hw", 64).map_err(anyhow::Error::msg)?;
+
+    for net in ["resnet18", "vgg11"] {
+        let d = Driver::prepare(DriverOpts {
+            net: net.into(),
+            hw,
+            stats: StatsSource::Synthetic,
+            profile_images: 2,
+            sim_images: 8,
+            seed: 7,
+            artifacts_dir: "artifacts".into(),
+        })?;
+        let mut t = report::fig8_table();
+        for pes in d.sweep_sizes(steps) {
+            for (alg, r) in d.run_all(pes)? {
+                t.row(report::fig8_row(alg, pes, &r));
+            }
+        }
+        if args.has_flag("csv") {
+            println!("# {net}\n{}", t.to_csv());
+        } else {
+            println!("== Fig 8 — {net} @ {hw}x{hw} (min {} PEs) ==\n{}", d.min_pes(), t.render());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Cross-language numerics check: every functional path must agree.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example golden_check
+//! ```
+//!
+//! Chains: AOT model over PJRT (L2+L1) → activation tensors → Rust
+//! reference convolution ↔ im2col path ↔ crossbar `SubArray` (both read
+//! modes) ↔ the Pallas `cim_matmul` kernel executed over PJRT. Any
+//! disagreement anywhere is a hard failure.
+
+use cimfab::config::ArrayCfg;
+use cimfab::runtime::{CimKernel, Engine, GoldenModel, Manifest};
+use cimfab::tensor::{conv_ref, im2col_u8, Im2colSpec, Tensor};
+use cimfab::util::prng::Prng;
+use cimfab::xbar::{ReadMode, SubArray};
+
+fn main() -> cimfab::Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let engine = Engine::cpu()?;
+    let mut checks = 0;
+
+    for net in ["resnet18", "vgg11"] {
+        let model = GoldenModel::load(&engine, &manifest, net)?;
+        let (acts, logits) = model.run(&GoldenModel::gen_image(model.meta.hw, 5))?;
+        anyhow::ensure!(logits.iter().all(|l| l.is_finite()), "{net}: non-finite logits");
+        anyhow::ensure!(acts.len() == model.meta.conv_layers.len(), "{net}: activation count");
+
+        // every activation tensor: shape matches the conv meta
+        for (a, meta) in acts.iter().zip(&model.meta.conv_layers) {
+            anyhow::ensure!(a.shape()[0] == meta.in_ch, "{net}/{}: channel mismatch", meta.name);
+        }
+        checks += acts.len();
+
+        // conv paths agree on real activations
+        let mut rng = Prng::new(17);
+        for li in [1usize, acts.len() - 1] {
+            let meta = &model.meta.conv_layers[li];
+            let act = &acts[li];
+            let w: Tensor<i8> = Tensor::from_fn(
+                &[4, meta.in_ch, meta.k, meta.k],
+                |_| rng.next_u32() as i8,
+            );
+            let direct = conv_ref::conv2d_i32(act, &w, meta.stride, meta.pad);
+            let via = conv_ref::conv2d_via_im2col(act, &w, meta.stride, meta.pad);
+            anyhow::ensure!(direct == via, "{net}/{}: conv paths disagree", meta.name);
+            checks += 1;
+        }
+
+        // SubArray on real patch slices: ZeroSkip == Baseline == exact
+        let meta = &model.meta.conv_layers[2];
+        let act = &acts[2];
+        let spec = Im2colSpec {
+            in_ch: meta.in_ch,
+            in_h: act.shape()[1],
+            in_w: act.shape()[2],
+            k: meta.k,
+            stride: meta.stride,
+            pad: meta.pad,
+        };
+        let patches = im2col_u8(act, &spec);
+        let rows = spec.patch_len().min(128);
+        let cfg = ArrayCfg::paper();
+        let ws: Vec<i8> = (0..rows * cfg.weight_cols()).map(|_| rng.next_u32() as i8).collect();
+        let sa = SubArray::program(cfg, &ws);
+        for p in 0..8.min(patches.shape()[0]) {
+            let slice = &patches.data()[p * spec.patch_len()..p * spec.patch_len() + rows];
+            let (zs, _) = sa.matvec(slice, ReadMode::ZeroSkip);
+            let (base, _) = sa.matvec(slice, ReadMode::Baseline);
+            let exact = sa.matvec_ref(slice);
+            anyhow::ensure!(zs == exact && base == exact, "{net}: SubArray modes disagree");
+            checks += 1;
+        }
+    }
+
+    // Pallas kernel over PJRT == SubArray on random data
+    let kernel = CimKernel::load(&engine, &manifest)?;
+    let mut rng = Prng::new(23);
+    let xs: Vec<u8> = (0..kernel.patches * kernel.rows).map(|_| rng.next_u32() as u8).collect();
+    let ws: Vec<i8> = (0..kernel.rows * kernel.cols).map(|_| rng.next_u32() as i8).collect();
+    let got = kernel.matmul(&xs, &ws)?;
+    let mut cfg = ArrayCfg::paper();
+    cfg.cols = kernel.cols * cfg.weight_bits;
+    let sa = SubArray::program(cfg, &ws);
+    let mut want = Vec::new();
+    for p in 0..kernel.patches {
+        want.extend(sa.matvec(&xs[p * kernel.rows..(p + 1) * kernel.rows], ReadMode::ZeroSkip).0);
+    }
+    anyhow::ensure!(got == want, "Pallas kernel != SubArray");
+    checks += 1;
+
+    println!("golden_check: all {checks} cross-language checks passed");
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Quickstart: allocate and simulate a small CIM chip in ~20 lines.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds ResNet18, profiles synthetic activation statistics, runs all
+//! four allocation algorithms on a 172-PE chip (2× the minimum), and
+//! prints the headline speedup table (paper Fig 8's core comparison).
+
+use cimfab::coordinator::{Driver, DriverOpts, StatsSource};
+use cimfab::report;
+
+fn main() -> cimfab::Result<()> {
+    let driver = Driver::prepare(DriverOpts {
+        net: "resnet18".into(),
+        hw: 64,
+        stats: StatsSource::Synthetic,
+        profile_images: 2,
+        sim_images: 8,
+        seed: 7,
+        artifacts_dir: "artifacts".into(),
+    })?;
+
+    println!(
+        "{}: {} conv layers, {} blocks, {} minimum arrays ({} PEs)",
+        driver.map.net_name,
+        driver.map.grids.len(),
+        driver.map.total_blocks(),
+        driver.map.min_arrays(),
+        driver.min_pes()
+    );
+
+    let pes = driver.min_pes() * 2;
+    let results = driver.run_all(pes)?;
+    println!("\n== algorithms @ {pes} PEs ==");
+    println!("{}", report::speedup_summary(&results).render());
+
+    let best = results.iter().max_by(|a, b| a.1.throughput_ips.total_cmp(&b.1.throughput_ips));
+    if let Some((alg, r)) = best {
+        println!(
+            "winner: {} at {:.0} inferences/s (chip utilization {:.0}%)",
+            alg.name(),
+            r.throughput_ips,
+            r.chip_util * 100.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! End-to-end driver: ResNet18 on synthetic-ImageNet through ALL layers
+//! of the stack (paper §V, first workload).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example resnet18_imagenet
+//! ```
+//!
+//! What runs, in order:
+//! 1. **L2/L1 artifacts over PJRT** — the AOT-exported quantized ResNet18
+//!    (with the Pallas crossbar kernel) executes from Rust on synthetic
+//!    images; its per-layer u8 activations are the *real* word-line data.
+//! 2. **Functional cross-check** — one sub-array's worth of those
+//!    activations goes through the PJRT Pallas kernel and the Rust
+//!    `xbar::SubArray`; results must be bit-identical.
+//! 3. **Profiling** — exact per-(patch, block) zero-skip durations.
+//! 4. **Allocation + cycle-accurate simulation** — all four algorithms
+//!    at several design sizes (Fig 8 series) + utilization (Fig 9).
+//!
+//! Results land in EXPERIMENTS.md §E2E.
+
+use cimfab::alloc::Algorithm;
+use cimfab::coordinator::{Driver, DriverOpts, StatsSource};
+use cimfab::report;
+use cimfab::runtime::{CimKernel, Engine, GoldenModel, Manifest};
+use cimfab::util::prng::Prng;
+use cimfab::xbar::{ReadMode, SubArray};
+
+fn main() -> cimfab::Result<()> {
+    // ---- 1+2: runtime path + functional verification ------------------
+    let manifest = Manifest::load("artifacts")?;
+    let engine = Engine::cpu()?;
+    let model = GoldenModel::load(&engine, &manifest, "resnet18")?;
+    let hw = model.meta.hw;
+    println!("[1] PJRT ({}) loaded resnet18 @ {hw}x{hw}", engine.platform());
+
+    let image = GoldenModel::gen_image(hw, 42);
+    let (acts, logits) = model.run(&image)?;
+    println!("    forward OK: {} conv activations, |logits| = {}", acts.len(), logits.len());
+
+    let kernel = CimKernel::load(&engine, &manifest)?;
+    let act = &acts[6];
+    let xs: Vec<u8> =
+        act.data().iter().cycle().take(kernel.patches * kernel.rows).copied().collect();
+    let mut rng = Prng::new(99);
+    let ws: Vec<i8> = (0..kernel.rows * kernel.cols).map(|_| rng.next_u32() as i8).collect();
+    let pjrt_out = kernel.matmul(&xs, &ws)?;
+    let mut cfg = cimfab::config::ArrayCfg::paper();
+    cfg.cols = kernel.cols * cfg.weight_bits;
+    let sa = SubArray::program(cfg, &ws);
+    let mut rust_out = Vec::new();
+    for p in 0..kernel.patches {
+        rust_out.extend(sa.matvec(&xs[p * kernel.rows..(p + 1) * kernel.rows], ReadMode::ZeroSkip).0);
+    }
+    anyhow::ensure!(pjrt_out == rust_out, "Pallas kernel != SubArray");
+    println!("[2] Pallas kernel over PJRT == Rust SubArray ({} values, bit-exact)", pjrt_out.len());
+
+    // ---- 3: profile from golden activations ---------------------------
+    let driver = Driver::prepare(DriverOpts {
+        net: "resnet18".into(),
+        hw,
+        stats: StatsSource::Golden,
+        profile_images: 2,
+        sim_images: 8,
+        seed: 42,
+        artifacts_dir: "artifacts".into(),
+    })?;
+    println!(
+        "[3] profiled {} layers from golden activations; layer densities {:.1}%..{:.1}%",
+        driver.map.grids.len(),
+        driver.profile.layer_density.iter().cloned().fold(f64::MAX, f64::min) * 100.0,
+        driver.profile.layer_density.iter().cloned().fold(0.0, f64::max) * 100.0
+    );
+
+    // ---- 4: Fig 8 series + Fig 9 utilization ---------------------------
+    let sizes = driver.sweep_sizes(4);
+    let mut fig8 = report::fig8_table();
+    for &pes in &sizes {
+        for (alg, r) in driver.run_all(pes)? {
+            fig8.row(report::fig8_row(alg, pes, &r));
+        }
+    }
+    println!("[4] Fig 8 (golden stats):\n{}", fig8.render());
+
+    let results = driver.run_all(sizes[2])?;
+    let zs: Vec<(Algorithm, &cimfab::sim::SimResult)> =
+        results.iter().filter(|(a, _)| a.zero_skip()).map(|(a, r)| (*a, r)).collect();
+    println!("Fig 9 @ {} PEs:\n{}", sizes[2], report::fig9_table(&driver.map, &zs).render());
+    println!("headline:\n{}", report::speedup_summary(&results).render());
+    Ok(())
+}

@@ -1,0 +1,145 @@
+"""AOT export: lower the L2 models + L1 kernels to HLO *text*.
+
+Run once at build time (``make artifacts``); Python never executes on
+the request path. The Rust runtime (``rust/src/runtime``) loads each
+``artifacts/*.hlo.txt`` through ``HloModuleProto::from_text_file``,
+compiles it on the PJRT CPU client, and executes it.
+
+HLO **text** — not ``.serialize()`` — is the interchange format: jax ≥
+0.5 emits HloModuleProtos with 64-bit instruction ids that the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and gen_hlo.py there).
+
+Exported artifacts:
+
+* ``<net>_stats.hlo.txt``   — fn(image f32[3,hw,hw], wflat i8[N]) →
+  (u8 input activations of every conv layer…, f32 logits). Drives the
+  Rust profiling + golden paths.
+* ``weights_<net>.bin``     — the flat i8 weight buffer for that model.
+* ``cim_matmul.hlo.txt``    — the Pallas crossbar kernel (one 128×16
+  sub-array, 16-patch tile), interpret-lowered.
+* ``bitstats.hlo.txt``      — the Pallas profiling kernel.
+* ``manifest.json``         — shapes, dtypes, seeds, weight layout.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import cim_matmul as K
+
+SCHEMA_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_model(net: str, hw: int, seed: int, out_dir: str) -> dict:
+    qm = M.build(net, hw, seed=seed)
+    wflat = qm.flat_weights()
+    img_spec = jax.ShapeDtypeStruct((3, hw, hw), jnp.float32)
+    w_spec = jax.ShapeDtypeStruct((wflat.size,), jnp.int8)
+
+    def fn(image, wflat_param):
+        acts, logits = qm.forward_flat(image, wflat_param)
+        return (*acts, logits)
+
+    lowered = jax.jit(fn).lower(img_spec, w_spec)
+    hlo_path = os.path.join(out_dir, f"{net}_stats.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    wpath = os.path.join(out_dir, f"weights_{net}.bin")
+    wflat.tofile(wpath)
+
+    return {
+        "hlo": os.path.basename(hlo_path),
+        "weights": os.path.basename(wpath),
+        "weight_bytes": int(wflat.size),
+        "hw": hw,
+        "seed": seed,
+        "num_classes": qm.num_classes,
+        "conv_layers": [
+            {
+                "name": s.name,
+                "in_ch": s.in_ch,
+                "out_ch": s.out_ch,
+                "k": s.k,
+                "stride": s.stride,
+                "pad": s.pad,
+            }
+            for s in qm.specs
+        ],
+        "weight_layout": qm.weight_layout(),
+        "outputs": [f"act:{s.name}" for s in qm.specs] + ["logits"],
+    }
+
+
+def export_cim_kernel(out_dir: str, patches: int = 16, rows: int = 128, cols: int = 16) -> dict:
+    x_spec = jax.ShapeDtypeStruct((patches, rows), jnp.int32)
+    w_spec = jax.ShapeDtypeStruct((K.WEIGHT_BITS, rows, cols), jnp.int32)
+
+    def fn(x, planes):
+        return (K.cim_matmul_graph(x, planes, adc_bits=3),)
+
+    lowered = jax.jit(fn).lower(x_spec, w_spec)
+    path = os.path.join(out_dir, "cim_matmul.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {"hlo": os.path.basename(path), "patches": patches, "rows": rows, "cols": cols, "adc_bits": 3}
+
+
+def export_bitstats(out_dir: str, patches: int = 64, rows: int = 128) -> dict:
+    x_spec = jax.ShapeDtypeStruct((patches, rows), jnp.int32)
+
+    def fn(x):
+        return (K.bitstats_graph(x),)
+
+    lowered = jax.jit(fn).lower(x_spec)
+    path = os.path.join(out_dir, "bitstats.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {"hlo": os.path.basename(path), "patches": patches, "rows": rows}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--hw", type=int, default=32, help="input resolution")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--nets", default="resnet18,vgg11")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest: dict = {"schema": SCHEMA_VERSION, "models": {}, "kernels": {}}
+    for net in args.nets.split(","):
+        print(f"[aot] lowering {net} @ {args.hw}x{args.hw} …")
+        manifest["models"][net] = export_model(net, args.hw, args.seed, args.out)
+    print("[aot] lowering pallas cim_matmul kernel …")
+    manifest["kernels"]["cim_matmul"] = export_cim_kernel(args.out)
+    print("[aot] lowering pallas bitstats kernel …")
+    manifest["kernels"]["bitstats"] = export_bitstats(args.out)
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""L1 Pallas kernels: the CIM crossbar compute hot-spot.
+
+Two kernels, both tiled over patches with a ``BlockSpec`` so one grid
+step holds a single (patch-tile × 128-row × 16-column) working set in
+VMEM — the same HBM↔VMEM schedule the accelerator's input buffers
+implement (DESIGN.md §Hardware-Adaptation):
+
+* :func:`cim_matmul` — the bit-serial, ADC-batched matrix product of one
+  crossbar sub-array (the functional twin of Rust
+  ``xbar::SubArray::matvec`` and of ``ref.adc_model``).
+* :func:`bitstats` — per-input-bit-plane ones counts (the profiling
+  hot-spot behind the paper's Figs 4 & 6; functional twin of Rust
+  ``util::bitops::plane_counts``).
+
+Pallas runs with ``interpret=True`` everywhere: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so the kernels lower to plain HLO
+(see /opt/xla-example/README.md). VMEM/MXU estimates for a real TPU are
+recorded in DESIGN.md §9.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+
+INPUT_BITS = ref.INPUT_BITS
+WEIGHT_BITS = ref.WEIGHT_BITS
+
+# Patch-tile height: one grid step processes this many patches.
+TILE_P = 16
+
+
+def _cim_kernel(x_ref, w_ref, o_ref, *, adc_bits: int, group_rows: int):
+    """One grid step: ``x [TP, R] i32`` × planes ``w [WB, R, C] i32``."""
+    x = x_ref[...]
+    w = w_ref[...]
+    tp, r = x.shape
+    wb, _, c = w.shape
+    g = r // group_rows
+    adc_max = 1 << adc_bits
+
+    xg = x.reshape(tp, g, group_rows)
+    wg = w.reshape(wb, g, group_rows, c)
+    # Per-plane significance as Python ints (pallas kernels may not
+    # capture constant arrays): [1, 2, …, 64, -128].
+    sig = [int(s) for s in ref.plane_significance()]
+
+    acc = jnp.zeros((tp, c), jnp.int32)
+    for ib in range(INPUT_BITS):
+        xb = (xg >> ib) & 1
+        # ADC samples: one per (weight plane, patch, row group, column).
+        s = jnp.einsum("pgr,wgrc->wpgc", xb, wg, preferred_element_type=jnp.int32)
+        code = jnp.clip(s, 0, adc_max)  # the ADC transfer function
+        # shift-and-add recombination across weight planes
+        contrib = sum(sig[b] * jnp.sum(code[b], axis=1) for b in range(wb))
+        acc = acc + (contrib << ib)
+    o_ref[...] = acc
+
+
+def _pad_to(a: np.ndarray, axis: int, multiple: int) -> np.ndarray:
+    n = a.shape[axis]
+    rem = (-n) % multiple
+    if rem == 0:
+        return a
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, rem)
+    return np.pad(a, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("adc_bits", "group_rows"))
+def _cim_call(x_i32, planes_i32, *, adc_bits: int, group_rows: int):
+    p, r = x_i32.shape
+    c = planes_i32.shape[2]
+    grid = (p // TILE_P,)
+    return pl.pallas_call(
+        functools.partial(_cim_kernel, adc_bits=adc_bits, group_rows=group_rows),
+        out_shape=jax.ShapeDtypeStruct((p, c), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_P, r), lambda i: (i, 0)),
+            pl.BlockSpec((WEIGHT_BITS, r, c), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_P, c), lambda i: (i, 0)),
+        interpret=True,
+    )(x_i32, planes_i32)
+
+
+def cim_matmul(
+    x: np.ndarray,
+    w: np.ndarray,
+    *,
+    adc_bits: int = 3,
+    group_rows: int | None = None,
+) -> np.ndarray:
+    """Crossbar product ``x (u8 [P, R]) × w (i8 [R, C]) -> i32 [P, C]``.
+
+    ``group_rows`` defaults to ``2**adc_bits`` (the paper's lossless
+    discipline); pass more rows to reproduce the §III-A saturation of
+    under-provisioned ADCs.
+    """
+    assert x.dtype == np.uint8 and w.dtype == np.int8
+    if group_rows is None:
+        group_rows = 1 << adc_bits
+    p, r = x.shape
+    planes = ref.weight_planes(w)  # [WB, R, C]
+    xp = _pad_to(_pad_to(x.astype(np.int32), 1, group_rows), 0, TILE_P)
+    wp = _pad_to(planes, 1, group_rows)
+    out = _cim_call(
+        jnp.asarray(xp), jnp.asarray(wp), adc_bits=adc_bits, group_rows=group_rows
+    )
+    return np.asarray(out)[:p]
+
+
+def _bitstats_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    cols = [jnp.sum((x >> b) & 1, axis=1) for b in range(INPUT_BITS)]
+    o_ref[...] = jnp.stack(cols, axis=1)
+
+
+@jax.jit
+def _bitstats_call(x_i32):
+    p, r = x_i32.shape
+    return pl.pallas_call(
+        _bitstats_kernel,
+        out_shape=jax.ShapeDtypeStruct((p, INPUT_BITS), jnp.int32),
+        grid=(p // TILE_P,),
+        in_specs=[pl.BlockSpec((TILE_P, r), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((TILE_P, INPUT_BITS), lambda i: (i, 0)),
+        interpret=True,
+    )(x_i32)
+
+
+def bitstats(x: np.ndarray) -> np.ndarray:
+    """Per-bit-plane ones counts: ``u8 [P, R] -> i32 [P, 8]``."""
+    assert x.dtype == np.uint8
+    p = x.shape[0]
+    xp = _pad_to(x.astype(np.int32), 0, TILE_P)
+    return np.asarray(_bitstats_call(jnp.asarray(xp)))[:p]
+
+
+# ---------------------------------------------------------------------------
+# jit-able graph fragments for AOT export (called from compile.aot): same
+# kernels but taking jnp arrays so they lower into the surrounding HLO.
+# ---------------------------------------------------------------------------
+
+
+def cim_matmul_graph(x_i32, planes_i32, *, adc_bits: int = 3):
+    """Traceable kernel call for AOT export; shapes must be pre-padded
+    (P multiple of TILE_P, R multiple of ``2**adc_bits``)."""
+    return _cim_call(x_i32, planes_i32, adc_bits=adc_bits, group_rows=1 << adc_bits)
+
+
+def bitstats_graph(x_i32):
+    """Traceable bitstats call for AOT export (P multiple of TILE_P)."""
+    return _bitstats_call(x_i32)

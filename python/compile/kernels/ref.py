@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for the L1 CIM kernels.
+
+These are the correctness references the Pallas kernels (and, across the
+language boundary, the Rust ``xbar::SubArray`` model) must match exactly:
+
+* :func:`matmul_exact` — the ideal integer dot product a crossbar layer
+  computes when the ADC discipline never saturates.
+* :func:`adc_model` — the bit-serial, row-batched, ADC-clipped procedure
+  of the hardware (paper Fig 1(B)): 8-bit signed weights as binary cell
+  planes (two's complement, MSB negative), unsigned 8-bit inputs shifted
+  in LSB-first, each input bit-plane read in ``group_rows``-row batches
+  whose analog sum is digitized by a ``adc_bits``-bit ADC (saturating at
+  ``2**adc_bits``), then shift-and-add recombination.
+
+With ``group_rows == 2**adc_bits`` (the paper's discipline: 8 rows on a
+3-bit ADC) the clip never binds and ``adc_model == matmul_exact`` — that
+identity is what lets the whole performance simulator use exact integer
+math. With larger batches (prior work's 5–8-bit ADCs over 128 rows) the
+model exhibits exactly the saturation errors §III-A warns about.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+INPUT_BITS = 8
+WEIGHT_BITS = 8
+
+
+def weight_planes(w: np.ndarray) -> np.ndarray:
+    """Decompose signed int8 weights ``[R, C]`` into binary cell planes
+    ``[WEIGHT_BITS, R, C]`` (two's complement bit patterns)."""
+    assert w.dtype == np.int8
+    u = w.astype(np.uint8)
+    return np.stack([((u >> b) & 1).astype(np.int32) for b in range(WEIGHT_BITS)])
+
+
+def plane_significance() -> np.ndarray:
+    """Per-weight-plane significance: [1, 2, …, 64, -128]."""
+    sig = [1 << b for b in range(WEIGHT_BITS - 1)] + [-(1 << (WEIGHT_BITS - 1))]
+    return np.asarray(sig, dtype=np.int32)
+
+
+def matmul_exact(x: np.ndarray, w: np.ndarray) -> jnp.ndarray:
+    """Ideal integer product: ``x (u8 [P, R]) @ w (i8 [R, C]) -> i32``."""
+    assert x.dtype == np.uint8 and w.dtype == np.int8
+    return jnp.dot(x.astype(np.int32), w.astype(np.int32))
+
+
+def adc_model(
+    x: np.ndarray,
+    w: np.ndarray,
+    *,
+    adc_bits: int = 3,
+    group_rows: int | None = None,
+) -> jnp.ndarray:
+    """Bit-serial ADC-batched product (see module docstring).
+
+    ``group_rows`` defaults to ``2**adc_bits`` (the paper's lossless
+    discipline). R must be padded to a multiple of ``group_rows`` by the
+    caller (zero rows are harmless).
+    """
+    assert x.dtype == np.uint8 and w.dtype == np.int8
+    if group_rows is None:
+        group_rows = 1 << adc_bits
+    p, r = x.shape
+    r2, c = w.shape
+    assert r == r2, f"shape mismatch {x.shape} vs {w.shape}"
+    assert r % group_rows == 0, f"R={r} not a multiple of group_rows={group_rows}"
+    g = r // group_rows
+    adc_max = 1 << adc_bits
+
+    planes = jnp.asarray(weight_planes(w)).reshape(WEIGHT_BITS, g, group_rows, c)
+    sig = jnp.asarray(plane_significance())
+    xi = jnp.asarray(x.astype(np.int32)).reshape(p, g, group_rows)
+
+    acc = jnp.zeros((p, c), jnp.int32)
+    for ib in range(INPUT_BITS):
+        xb = (xi >> ib) & 1  # [P, G, group_rows]
+        # one ADC sample per (weight plane, patch, group, column)
+        s = jnp.einsum("pgr,wgrc->wpgc", xb, planes)
+        code = jnp.clip(s, 0, adc_max)
+        contrib = jnp.einsum("wpgc,w->pc", code, sig)
+        acc = acc + (contrib << ib)
+    return acc
+
+
+def plane_counts(x: np.ndarray) -> jnp.ndarray:
+    """Per-input-bit-plane ones count: ``u8 [P, R] -> i32 [P, INPUT_BITS]``.
+
+    Reference for the `bitstats` profiling kernel; mirrors Rust
+    ``util::bitops::plane_counts``.
+    """
+    assert x.dtype == np.uint8
+    xi = jnp.asarray(x.astype(np.int32))
+    return jnp.stack([jnp.sum((xi >> b) & 1, axis=1) for b in range(INPUT_BITS)], axis=1)
+
+
+def zs_cycles(counts: jnp.ndarray, *, adc_bits: int = 3, col_mux: int = 8) -> jnp.ndarray:
+    """Zero-skip cycle cost from plane counts (mirrors Rust
+    ``xbar::scheduler::zs_cycles``): ``Σ_b ceil(ones_b / 2^adc) × mux``."""
+    adc_rows = 1 << adc_bits
+    batches = -(-counts // adc_rows)  # ceil div, 0 stays 0
+    return jnp.sum(batches, axis=1) * col_mux

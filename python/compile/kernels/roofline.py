@@ -1,0 +1,104 @@
+"""L1 TPU roofline estimator (structural, DESIGN.md §9).
+
+Pallas runs under ``interpret=True`` here (CPU PJRT cannot execute
+Mosaic custom-calls), so TPU performance statements are *estimates from
+the kernel's BlockSpec structure*, not wallclock: VMEM footprint of one
+grid step, and the MXU utilization ceiling imposed by the ADC-batched
+compute pattern.
+
+The interesting (and honest) result: modeling the crossbar faithfully
+costs MXU efficiency by construction. The ADC clips after every
+``group_rows``-row partial sum, so the longest uninterrupted contraction
+the MXU can run is ``group_rows`` (8) instead of the full 128 rows — a
+~`group_rows / 128` structural ceiling before int8-packing games. This
+is a property of simulating the hardware, not a missed optimization;
+EXPERIMENTS.md §Perf quotes these numbers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from . import cim_matmul as K
+
+# TPU v4-ish per-core budgets (order-of-magnitude constants for the
+# estimate; exact values vary by generation).
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_DIM = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEstimate:
+    tile_p: int
+    rows: int
+    cols: int
+    group_rows: int
+    vmem_bytes: int
+    vmem_fraction: float
+    #: MACs actually needed per grid step (useful work)
+    macs: int
+    #: MXU utilization ceiling from the batched-contraction structure
+    mxu_ceiling: float
+
+    def fits_vmem(self) -> bool:
+        return self.vmem_bytes <= VMEM_BYTES
+
+
+def estimate(
+    tile_p: int = K.TILE_P,
+    rows: int = 128,
+    cols: int = 16,
+    *,
+    adc_bits: int = 3,
+    input_bits: int = K.INPUT_BITS,
+    weight_bits: int = K.WEIGHT_BITS,
+) -> KernelEstimate:
+    """Estimate one grid step of `cim_matmul` (all buffers i32)."""
+    group_rows = 1 << adc_bits
+    groups = -(-rows // group_rows)
+    i32 = 4
+    x_tile = tile_p * rows * i32
+    w_tile = weight_bits * rows * cols * i32
+    out_tile = tile_p * cols * i32
+    # largest intermediate: the per-(plane, patch, group, col) ADC codes
+    codes = weight_bits * tile_p * groups * cols * i32
+    vmem = x_tile + w_tile + out_tile + codes
+
+    macs = tile_p * rows * cols * input_bits * weight_bits  # bit-plane MACs
+    # Structure: per (input bit, weight plane) the kernel runs `groups`
+    # independent (tile_p × group_rows) × (group_rows × cols)
+    # contractions. The MXU's 128-deep systolic contraction is cut to
+    # group_rows, and cols < 128 leaves lanes idle:
+    mxu_ceiling = min(1.0, group_rows / MXU_DIM) * min(1.0, cols / MXU_DIM)
+
+    return KernelEstimate(
+        tile_p=tile_p,
+        rows=rows,
+        cols=cols,
+        group_rows=group_rows,
+        vmem_bytes=vmem,
+        vmem_fraction=vmem / VMEM_BYTES,
+        macs=macs,
+        mxu_ceiling=mxu_ceiling,
+    )
+
+
+def report() -> str:
+    lines = ["cim_matmul TPU roofline estimate (structural)"]
+    for tile_p in (16, 128, 1024):
+        e = estimate(tile_p=tile_p)
+        lines.append(
+            f"  tile_p={tile_p:5d}: VMEM {e.vmem_bytes / 1024:8.1f} KiB "
+            f"({e.vmem_fraction * 100:5.2f}% of 16 MiB), "
+            f"MXU ceiling {e.mxu_ceiling * 100:4.1f}%"
+        )
+    e = estimate()
+    lines.append(
+        f"  structural MXU ceiling = (group {e.group_rows}/{MXU_DIM}) x "
+        f"(cols {e.cols}/{MXU_DIM}) — set by the ADC batching the kernel models"
+    )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

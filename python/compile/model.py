@@ -1,0 +1,291 @@
+"""L2: quantized ResNet18 / VGG11 forward passes in JAX.
+
+These mirror the Rust graph builders (``dnn::resnet18`` / ``dnn::vgg11``)
+exactly — same conv stack, same layer order (block conv1, conv2, then
+projection downsample), same CHW im2col patch order — so the activation
+statistics and golden outputs they produce line up one-to-one with the
+Rust ``mapping::NetworkMap`` grids.
+
+Arithmetic is true 8-bit CIM arithmetic: activations quantize to u8
+(post-ReLU, affine, zero-point 0), weights to i8 (symmetric), every conv
+is an im2col + *integer* matmul accumulated in i32 — bit-exact with what
+the crossbar sub-arrays compute (the Pallas `cim_matmul` kernel and Rust
+`xbar::SubArray` produce these very numbers; `test_model.py` pins the
+identity). Floating point appears only between layers (dequantize →
+pool/residual → requantize), standing in for the chip's digital vector
+units (paper §IV).
+
+The forward pass returns every conv layer's quantized u8 *input* — the
+word-line data the simulator's traces are built from.
+
+Weights are generated from a seed (He-init with per-channel lognormal
+scale diversity; DESIGN.md §3) — there are no trained checkpoints in
+this environment, and cycle counts depend only on activation statistics.
+For AOT export the int8 weights travel as a single flat *parameter*
+(``flat_weights``), keeping the HLO text free of megabyte constants; the
+Rust runtime feeds the same buffer from ``artifacts/weights_<net>.bin``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+ACT_BITS = 8
+ACT_MAX = (1 << ACT_BITS) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    name: str
+    in_ch: int
+    out_ch: int
+    k: int
+    stride: int
+    pad: int
+
+    @property
+    def rows(self) -> int:
+        return self.k * self.k * self.in_ch
+
+
+def _he_weights(rng: np.random.Generator, spec: ConvSpec, channel_sigma: float = 0.4):
+    fan_in = spec.rows
+    w = rng.normal(0.0, np.sqrt(2.0 / fan_in), size=(spec.out_ch, fan_in))
+    # per-output-channel scale diversity → next layer's per-channel (and
+    # hence per-block) bit-density spread (Fig 6)
+    w *= np.exp(channel_sigma * rng.normal(size=(spec.out_ch, 1)))
+    return w.astype(np.float32)
+
+
+def _quantize_weights(w: np.ndarray) -> tuple[np.ndarray, float]:
+    scale = float(np.abs(w).max()) / 127.0
+    if scale == 0.0:
+        scale = 1.0
+    q = np.clip(np.round(w / scale), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def im2col(x, k: int, stride: int, pad: int):
+    """CHW patch lowering: ``x [C, H, W] -> [P, C*k*k]``, rows ordered
+    (channel, ky, kx) — identical to Rust ``tensor::im2col_u8``."""
+    c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    cols = []
+    for ky in range(k):
+        for kx in range(k):
+            sl = xp[
+                :,
+                ky : ky + (oh - 1) * stride + 1 : stride,
+                kx : kx + (ow - 1) * stride + 1 : stride,
+            ]
+            cols.append(sl)  # [C, OH, OW]
+    patches = jnp.stack(cols, axis=1)  # [C, k*k, OH, OW]
+    return patches.reshape(c * k * k, oh * ow).T, oh, ow
+
+
+def quantize_act(x):
+    """Affine u8 quantization of a non-negative float tensor; returns
+    (q_u8, scale). Scale is computed in-graph (dynamic calibration)."""
+    mx = jnp.maximum(jnp.max(x), 1e-6)
+    scale = mx / ACT_MAX
+    q = jnp.clip(jnp.round(x / scale), 0, ACT_MAX).astype(jnp.uint8)
+    return q, scale
+
+
+def qconv_apply(spec: ConvSpec, w_q, w_scale: float, x_float):
+    """Quantize input → integer conv → dequantized float output.
+
+    ``w_q``: i32 weight matrix ``[R, Cout]`` in crossbar row order.
+    Returns ``(y_float [Cout, OH, OW], x_q [Cin, H, W] u8)`` where
+    ``x_q`` is the crossbar's word-line view of this layer's input.
+    """
+    x_q, x_scale = quantize_act(x_float)
+    patches, oh, ow = im2col(x_q.astype(jnp.int32), spec.k, spec.stride, spec.pad)
+    acc = patches @ w_q  # exact i32, [P, Cout]
+    y = acc.astype(jnp.float32) * (x_scale * w_scale)
+    y = y.T.reshape(spec.out_ch, oh, ow)
+    return y, x_q
+
+
+def maxpool2(x):
+    c, h, w = x.shape
+    return x.reshape(c, h // 2, 2, w // 2, 2).max(axis=(2, 4))
+
+
+@dataclasses.dataclass
+class QModel:
+    """A quantized network: conv specs + baked i8 weights + forward fn."""
+
+    name: str
+    hw: int
+    num_classes: int
+    specs: list[ConvSpec]
+    conv_w: list[np.ndarray]  # int8 [R, Cout] each
+    conv_scales: list[float]
+    fc_w: np.ndarray  # int8 [in, out]
+    fc_scale: float
+
+    def forward(self, image, conv_w: Sequence, fc_w):
+        """Pure forward given weight arrays (i32 jnp). Returns
+        ``(acts tuple of u8, logits f32)``."""
+        raise NotImplementedError  # set per-architecture below
+
+    def apply(self, image):
+        """Forward with the baked weights."""
+        conv_w = [jnp.asarray(w, jnp.int32) for w in self.conv_w]
+        fc_w = jnp.asarray(self.fc_w, jnp.int32)
+        return self.forward(image, conv_w, fc_w)
+
+    # --- flat-weight (AOT parameter) interface ---------------------------
+
+    def flat_weights(self) -> np.ndarray:
+        """All conv weights + fc concatenated as one i8 buffer."""
+        parts = [w.reshape(-1) for w in self.conv_w] + [self.fc_w.reshape(-1)]
+        return np.concatenate(parts).astype(np.int8)
+
+    def weight_layout(self) -> list[dict]:
+        """Per-tensor (name, offset, shape) for the manifest."""
+        out = []
+        off = 0
+        for spec, w in zip(self.specs, self.conv_w):
+            out.append({"name": spec.name, "offset": off, "shape": list(w.shape)})
+            off += w.size
+        out.append({"name": "fc", "offset": off, "shape": list(self.fc_w.shape)})
+        return out
+
+    def forward_flat(self, image, wflat_i8):
+        """Forward where all weights arrive as one flat i8 parameter —
+        the AOT-exported entry point."""
+        wi = wflat_i8.astype(jnp.int32)
+        conv_w = []
+        off = 0
+        for w in self.conv_w:
+            n = w.size
+            conv_w.append(wi[off : off + n].reshape(w.shape))
+            off += n
+        fc = wi[off : off + self.fc_w.size].reshape(self.fc_w.shape)
+        return self.forward(image, conv_w, fc)
+
+
+def _resnet_specs() -> list[ConvSpec]:
+    specs: list[ConvSpec] = [ConvSpec("conv1", 3, 64, 7, 2, 3)]
+    stage_ch = [64, 128, 256, 512]
+    in_ch = 64
+    for s, ch in enumerate(stage_ch):
+        for b in range(2):
+            stride = 2 if (s > 0 and b == 0) else 1
+            tag = f"l{s + 1}b{b}"
+            specs.append(ConvSpec(f"{tag}.conv1", in_ch, ch, 3, stride, 1))
+            specs.append(ConvSpec(f"{tag}.conv2", ch, ch, 3, 1, 1))
+            if stride != 1 or in_ch != ch:
+                specs.append(ConvSpec(f"{tag}.downsample", in_ch, ch, 1, stride, 0))
+            in_ch = ch
+    return specs
+
+
+def build_resnet18(hw: int = 32, num_classes: int = 10, seed: int = 0) -> QModel:
+    """Mirror of Rust ``dnn::resnet18`` (20 conv layers + fc)."""
+    assert hw % 32 == 0, "hw must be divisible by 32"
+    rng = np.random.default_rng(seed)
+    specs = _resnet_specs()
+    qs = [_quantize_weights(_he_weights(rng, s)) for s in specs]
+    conv_w = [q.T.copy() for q, _ in qs]
+    conv_scales = [s for _, s in qs]
+    fc_w, fc_scale = _quantize_weights(
+        rng.normal(0.0, np.sqrt(2.0 / 512), size=(512, num_classes)).astype(np.float32)
+    )
+    m = QModel("resnet18", hw, num_classes, specs, conv_w, conv_scales, fc_w, fc_scale)
+    idx = {s.name: i for i, s in enumerate(specs)}
+    stage_ch = [64, 128, 256, 512]
+
+    def forward(image, cw, fc):
+        acts: list = [None] * len(specs)
+
+        def run(name, x):
+            i = idx[name]
+            y, x_q = qconv_apply(specs[i], cw[i], conv_scales[i], x)
+            acts[i] = x_q
+            return y
+
+        x = run("conv1", image)
+        x = jnp.maximum(x, 0.0)
+        x = maxpool2(x)
+        in_c = 64
+        for s, ch in enumerate(stage_ch):
+            for b in range(2):
+                stride = 2 if (s > 0 and b == 0) else 1
+                tag = f"l{s + 1}b{b}"
+                identity = x
+                y = jnp.maximum(run(f"{tag}.conv1", x), 0.0)
+                y = run(f"{tag}.conv2", y)
+                if stride != 1 or in_c != ch:
+                    identity = run(f"{tag}.downsample", x)
+                x = jnp.maximum(y + identity, 0.0)
+                in_c = ch
+        x = x.mean(axis=(1, 2))  # GAP -> [512]
+        x_q, x_scale = quantize_act(x)
+        logits = (x_q.astype(jnp.int32) @ fc).astype(jnp.float32) * (x_scale * fc_scale)
+        return tuple(acts), logits
+
+    m.forward = forward  # type: ignore[method-assign]
+    return m
+
+
+def build_vgg11(hw: int = 32, num_classes: int = 10, seed: int = 1) -> QModel:
+    """Mirror of Rust ``dnn::vgg11`` (8 conv layers + fc)."""
+    assert hw % 32 == 0, "hw must be divisible by 32"
+    rng = np.random.default_rng(seed)
+    cfg = [(64, True), (128, True), (256, False), (256, True), (512, False), (512, True), (512, False), (512, True)]
+    specs = []
+    in_ch = 3
+    for i, (ch, _pool) in enumerate(cfg):
+        specs.append(ConvSpec(f"conv{i + 1}", in_ch, ch, 3, 1, 1))
+        in_ch = ch
+    qs = [_quantize_weights(_he_weights(rng, s)) for s in specs]
+    conv_w = [q.T.copy() for q, _ in qs]
+    conv_scales = [s for _, s in qs]
+    fc_w, fc_scale = _quantize_weights(
+        rng.normal(0.0, np.sqrt(2.0 / 512), size=(512, num_classes)).astype(np.float32)
+    )
+    m = QModel("vgg11", hw, num_classes, specs, conv_w, conv_scales, fc_w, fc_scale)
+
+    def forward(image, cw, fc):
+        acts = []
+        x = image
+        for i, (spec, (_, pool)) in enumerate(zip(specs, cfg)):
+            y, x_q = qconv_apply(spec, cw[i], conv_scales[i], x)
+            acts.append(x_q)
+            x = jnp.maximum(y, 0.0)
+            if pool:
+                x = maxpool2(x)
+        x = x.mean(axis=(1, 2))
+        x_q, x_scale = quantize_act(x)
+        logits = (x_q.astype(jnp.int32) @ fc).astype(jnp.float32) * (x_scale * fc_scale)
+        return tuple(acts), logits
+
+    m.forward = forward  # type: ignore[method-assign]
+    return m
+
+
+def build(name: str, hw: int, num_classes: int = 10, seed: int = 0) -> QModel:
+    if name == "resnet18":
+        return build_resnet18(hw, num_classes, seed)
+    if name == "vgg11":
+        return build_vgg11(hw, num_classes, seed)
+    raise ValueError(f"unknown model '{name}'")
+
+
+def synthetic_image(hw: int, seed: int = 0) -> np.ndarray:
+    """Smoothed uniform 'natural' image in [0, 255], f32 [3, hw, hw] —
+    matches the Rust synthetic generator's pixel statistics."""
+    rng = np.random.default_rng(seed)
+    img = rng.uniform(0, 255, size=(3, hw, hw)).astype(np.float32)
+    # cheap spatial low-pass for patch-to-patch correlation
+    img = (img + np.roll(img, 1, axis=1) + np.roll(img, 1, axis=2) + np.roll(img, (1, 1), (1, 2))) / 4.0
+    return img.astype(np.float32)

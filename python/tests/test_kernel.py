@@ -1,0 +1,140 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (hypothesis sweeps).
+
+The chain under test, end to end:
+    Pallas `cim_matmul`  ==  ref.adc_model  ==  ref.matmul_exact
+(the right identity holding whenever group_rows == 2**adc_bits), plus the
+`bitstats` profiling kernel against its reference. The same semantics are
+implemented in Rust (`xbar::SubArray`, `util::bitops`) and pinned there
+by mirrored unit tests.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cim_matmul as k
+from compile.kernels import ref
+
+
+def rand_case(seed, p, r, c):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 256, size=(p, r), dtype=np.uint8)
+    w = rng.integers(-128, 128, size=(r, c), dtype=np.int8)
+    return x, w
+
+
+# --- exactness of the paper's operating point ------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    p=st.integers(1, 40),
+    r=st.sampled_from([8, 16, 24, 64, 120, 128]),
+    c=st.integers(1, 16),
+)
+def test_pallas_matches_exact_matmul(seed, p, r, c):
+    x, w = rand_case(seed, p, r, c)
+    got = k.cim_matmul(x, w, adc_bits=3)
+    want = np.asarray(ref.matmul_exact(x, w))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    adc_bits=st.sampled_from([1, 2, 3, 4]),
+)
+def test_lossless_for_any_adc_when_batched_to_match(seed, adc_bits):
+    # group_rows == 2**adc_bits ⇒ the ADC never saturates (paper §II).
+    x, w = rand_case(seed, 8, 64, 4)
+    got = k.cim_matmul(x, w, adc_bits=adc_bits)
+    want = np.asarray(ref.matmul_exact(x, w))
+    np.testing.assert_array_equal(got, want)
+
+
+# --- saturation of under-provisioned ADCs (§III-A) -------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_oversized_batches_match_adc_model(seed):
+    # 32-row batches on a 3-bit ADC: the prior-work regime. The kernel
+    # must agree with the saturating reference, not the exact product.
+    x, w = rand_case(seed, 8, 64, 4)
+    got = k.cim_matmul(x, w, adc_bits=3, group_rows=32)
+    want = np.asarray(ref.adc_model(x, w, adc_bits=3, group_rows=32))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_oversized_batches_actually_err():
+    # all-ones inputs and positive weights force saturation
+    x = np.full((4, 64), 255, dtype=np.uint8)
+    w = np.ones((64, 4), dtype=np.int8)
+    exact = np.asarray(ref.matmul_exact(x, w))
+    clipped = k.cim_matmul(x, w, adc_bits=3, group_rows=64)
+    assert (clipped < exact).all(), "64-row reads on a 3-bit ADC must clip"
+
+
+# --- structured edge cases --------------------------------------------------
+
+
+def test_zero_input_gives_zero():
+    x = np.zeros((4, 128), dtype=np.uint8)
+    w = np.full((128, 16), 55, dtype=np.int8)
+    np.testing.assert_array_equal(k.cim_matmul(x, w), 0)
+
+
+def test_negative_weights_recombine():
+    x = np.zeros((1, 8), dtype=np.uint8)
+    x[0, 0] = 255
+    w = np.zeros((8, 2), dtype=np.int8)
+    w[0, 0] = -128
+    w[0, 1] = -1
+    out = k.cim_matmul(x, w)
+    assert out[0, 0] == -128 * 255
+    assert out[0, 1] == -255
+
+def test_single_patch_and_column():
+    x, w = rand_case(7, 1, 8, 1)
+    got = k.cim_matmul(x, w)
+    np.testing.assert_array_equal(got, np.asarray(ref.matmul_exact(x, w)))
+
+
+def test_unpadded_row_counts_rejected_via_padding():
+    # R not a multiple of the group: wrapper pads with zero rows, which
+    # must not change the result.
+    x, w = rand_case(11, 5, 8, 3)
+    x3, w3 = x[:, :6].copy(), w[:6].copy()
+    got = k.cim_matmul(x3, w3)
+    want = np.asarray(ref.matmul_exact(x3, w3))
+    np.testing.assert_array_equal(got, want)
+
+
+# --- bitstats ----------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    p=st.integers(1, 50),
+    r=st.integers(1, 128),
+)
+def test_bitstats_matches_reference(seed, p, r):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 256, size=(p, r), dtype=np.uint8)
+    got = k.bitstats(x)
+    want = np.asarray(ref.plane_counts(x))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_zs_cycles_paper_extremes():
+    # full-on 128-row slice: 16 batches × 8 planes × 8 mux = 1024
+    counts = np.full((1, 8), 128, dtype=np.int32)
+    assert int(ref.zs_cycles(counts)[0]) == 1024
+    # ≤8 ones per plane: 8 batches total × 8 mux = 64
+    counts = np.full((1, 8), 8, dtype=np.int32)
+    assert int(ref.zs_cycles(counts)[0]) == 64
+    # all-zero: free
+    counts = np.zeros((1, 8), dtype=np.int32)
+    assert int(ref.zs_cycles(counts)[0]) == 0

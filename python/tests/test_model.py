@@ -1,0 +1,121 @@
+"""L2 model correctness: shapes, quantization, kernel-vs-model identity."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import cim_matmul as K
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def rn18():
+    return M.build_resnet18(hw=32, num_classes=10, seed=0)
+
+
+@pytest.fixture(scope="module")
+def rn18_out(rn18):
+    img = M.synthetic_image(32, seed=3)
+    return rn18.apply(jnp.asarray(img))
+
+
+def test_resnet18_has_20_convs(rn18):
+    assert len(rn18.specs) == 20  # paper: 20 convolutional layers
+    names = [s.name for s in rn18.specs]
+    # projection shortcuts appear after their block's conv2 (rust order)
+    assert names.index("l2b0.downsample") == names.index("l2b0.conv2") + 1
+
+
+def test_activation_shapes_match_specs(rn18, rn18_out):
+    acts, logits = rn18_out
+    assert len(acts) == 20
+    for a, s in zip(acts, rn18.specs):
+        assert a.dtype == jnp.uint8
+        assert a.shape[0] == s.in_ch, f"{s.name}: {a.shape}"
+    assert logits.shape == (10,)
+
+
+def test_stem_sees_dense_pixels_deeper_layers_sparser(rn18_out):
+    acts, _ = rn18_out
+    def density(a):
+        bits = np.unpackbits(np.asarray(a).reshape(-1))
+        return bits.mean()
+    d0 = density(acts[0])
+    deep = [density(a) for a in acts[5:]]
+    assert d0 > 0.3, f"stem density {d0} should be pixel-like"
+    assert np.mean(deep) < d0, "post-ReLU layers should be sparser than pixels"
+
+
+def test_vgg11_shapes():
+    m = M.build_vgg11(hw=32, num_classes=10, seed=1)
+    acts, logits = m.apply(jnp.asarray(M.synthetic_image(32, seed=4)))
+    assert len(acts) == 8
+    assert acts[0].shape == (3, 32, 32)
+    assert acts[-1].shape == (512, 2, 2)  # after 4 of the 5 pools: 32→2
+    assert logits.shape == (10,)
+
+
+def test_forward_flat_equals_apply(rn18):
+    img = jnp.asarray(M.synthetic_image(32, seed=5))
+    a1, l1 = rn18.apply(img)
+    a2, l2 = rn18.forward_flat(img, jnp.asarray(rn18.flat_weights()))
+    for x, y in zip(a1, a2):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-6)
+
+
+def test_weight_layout_covers_buffer(rn18):
+    layout = rn18.weight_layout()
+    flat = rn18.flat_weights()
+    total = sum(int(np.prod(e["shape"])) for e in layout)
+    assert total == flat.size
+    # offsets strictly increasing and contiguous
+    off = 0
+    for e in layout:
+        assert e["offset"] == off
+        off += int(np.prod(e["shape"]))
+
+
+def test_model_conv_matches_pallas_kernel(rn18, rn18_out):
+    """The L2 integer conv and the L1 crossbar kernel compute the same
+    numbers: take a real layer's quantized input, run its first 128-row
+    slice / 16-column tile through the Pallas kernel, compare with the
+    plain integer matmul the model used."""
+    acts, _ = rn18_out
+    i = next(j for j, s in enumerate(rn18.specs) if s.name == "l1b0.conv1")
+    spec = rn18.specs[i]
+    x_q = np.asarray(acts[i])
+    patches, _, _ = M.im2col(jnp.asarray(x_q.astype(np.int32)), spec.k, spec.stride, spec.pad)
+    patches = np.asarray(patches).astype(np.uint8)  # values ≤ 255
+    # one sub-array worth: first 128 rows x first 16 weight columns
+    xs = patches[:32, :128]
+    ws = rn18.conv_w[i][:128, :16]
+    got = K.cim_matmul(xs, ws, adc_bits=3)
+    want = np.asarray(ref.matmul_exact(xs, ws))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_im2col_matches_rust_contract():
+    # channel-major, then ky, kx — pinned against a hand example mirroring
+    # rust tensor::im2col tests.
+    x = jnp.arange(8, dtype=jnp.int32).reshape(2, 2, 2)  # [C=2, 2, 2]
+    patches, oh, ow = M.im2col(x, k=2, stride=1, pad=0)
+    assert (oh, ow) == (1, 1)
+    np.testing.assert_array_equal(np.asarray(patches)[0], [0, 1, 2, 3, 4, 5, 6, 7])
+
+
+def test_quantize_act_range():
+    x = jnp.asarray([0.0, 1.0, 2.0])
+    q, scale = M.quantize_act(x)
+    assert q.dtype == jnp.uint8
+    assert int(q[2]) == 255
+    assert float(scale) == pytest.approx(2.0 / 255.0)
+
+
+def test_deterministic_weights():
+    a = M.build_resnet18(32, 10, seed=7).flat_weights()
+    b = M.build_resnet18(32, 10, seed=7).flat_weights()
+    c = M.build_resnet18(32, 10, seed=8).flat_weights()
+    assert (a == b).all()
+    assert (a != c).any()

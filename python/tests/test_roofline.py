@@ -1,0 +1,38 @@
+"""Roofline estimator sanity: VMEM headroom + structural MXU ceiling."""
+
+from compile.kernels import roofline
+
+
+def test_default_tile_fits_vmem_with_huge_headroom():
+    e = roofline.estimate()
+    assert e.fits_vmem()
+    assert e.vmem_fraction < 0.02, f"default tile uses {e.vmem_fraction:.2%} of VMEM"
+
+
+def test_tile_can_grow_64x_before_pressure():
+    e = roofline.estimate(tile_p=16 * 64)
+    assert e.fits_vmem(), f"1024-patch tile should still fit ({e.vmem_bytes} B)"
+
+
+def test_mxu_ceiling_matches_adc_structure():
+    e = roofline.estimate()
+    # 8-row groups on a 128-deep MXU, 16 columns on 128 lanes
+    assert abs(e.mxu_ceiling - (8 / 128) * (16 / 128)) < 1e-12
+
+
+def test_wider_adc_raises_ceiling():
+    lo = roofline.estimate(adc_bits=3)
+    hi = roofline.estimate(adc_bits=5)
+    assert hi.mxu_ceiling > lo.mxu_ceiling
+
+
+def test_vmem_scales_linearly_in_tile():
+    a = roofline.estimate(tile_p=16)
+    b = roofline.estimate(tile_p=32)
+    # w_tile is tile-independent; the rest doubles
+    assert a.vmem_bytes < b.vmem_bytes < 2 * a.vmem_bytes
+
+
+def test_report_renders():
+    r = roofline.report()
+    assert "VMEM" in r and "MXU" in r

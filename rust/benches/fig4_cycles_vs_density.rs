@@ -1,0 +1,48 @@
+//! Fig 4 reproduction: cycles per array vs '% of 1s' in the 8-bit input
+//! features, one point per ResNet18 conv layer. The paper infers "a
+//! linear relationship between the percentage of '1's … and the expected
+//! number of cycles"; we regenerate the scatter and report the OLS fit.
+
+use cimfab::coordinator::{Driver, DriverOpts, StatsSource};
+use cimfab::report;
+use cimfab::util::bench::{banner, Bencher};
+use cimfab::util::stats::linear_fit;
+
+fn main() {
+    banner(
+        "Fig 4",
+        "cycles per array vs %-of-1s across the 20 ResNet18 conv layers\n\
+         paper: linear relationship (their Fig 4); expect r² close to 1",
+    );
+    let mut b = Bencher::new(0, 3);
+    let mut driver = None;
+    b.bench("profile resnet18 (2 images, synthetic)", || {
+        driver = Some(
+            Driver::prepare(DriverOpts {
+                net: "resnet18".into(),
+                hw: 64,
+                stats: StatsSource::Synthetic,
+                profile_images: 2,
+                sim_images: 4,
+                seed: 7,
+                artifacts_dir: "artifacts".into(),
+            })
+            .unwrap(),
+        );
+    });
+    let d = driver.unwrap();
+
+    println!("{}", report::fig4_table(&d.map, &d.profile).render());
+
+    let xs: Vec<f64> = d.profile.layer_density.clone();
+    let ys: Vec<f64> = d.profile.layer_mean_block_cycles.clone();
+    let (a, slope, r2) = linear_fit(&xs, &ys);
+    println!("OLS fit: cycles = {a:.1} + {slope:.1} × density, r² = {r2:.4}");
+    println!(
+        "paper shape check: linear relationship (r² > 0.9): {}",
+        if r2 > 0.9 { "PASS" } else { "FAIL" }
+    );
+    assert!(r2 > 0.9, "Fig 4 linearity violated (r² = {r2})");
+
+    println!("\n{}", b.report());
+}

@@ -1,0 +1,103 @@
+//! Micro-benchmarks of the simulator's hot paths — the §Perf baseline
+//! (EXPERIMENTS.md). Covers: bit-plane popcounts, the zero-skip cycle
+//! model, functional sub-array matvec, im2col, trace building, the
+//! block-wise allocator, one stage simulation, and the pipeline
+//! recurrence.
+
+use cimfab::alloc::{allocate, Algorithm};
+use cimfab::config::{ArrayCfg, ChipCfg};
+use cimfab::dnn::resnet18;
+use cimfab::mapping::{map_network, place};
+use cimfab::sim::{simulate, SimCfg};
+use cimfab::stats::synth::{synth_activations, SynthCfg};
+use cimfab::stats::{trace_from_activations, NetworkProfile};
+use cimfab::tensor::{im2col_u8, Im2colSpec, Tensor};
+use cimfab::util::bench::{banner, Bencher};
+use cimfab::util::bitops;
+use cimfab::util::prng::Prng;
+use cimfab::xbar::{zs_cycles_for_slice, ReadMode, SubArray};
+
+fn main() {
+    banner("micro", "hot-path micro benchmarks (§Perf baseline)");
+    let mut b = Bencher::new(1, 5);
+    let mut rng = Prng::new(42);
+
+    // --- bit ops ---------------------------------------------------------
+    let buf: Vec<u8> = (0..1_000_000).map(|_| rng.next_u32() as u8).collect();
+    b.bench("plane_counts 1MB", || {
+        let mut acc = 0u32;
+        for chunk in buf.chunks(128) {
+            acc = acc.wrapping_add(bitops::plane_counts(chunk)[0]);
+        }
+        acc
+    });
+    let cfg = ArrayCfg::paper();
+    b.bench("zs_cycles 1MB (128-row slices)", || {
+        let mut acc = 0u64;
+        for chunk in buf.chunks(128) {
+            acc += zs_cycles_for_slice(&cfg, chunk) as u64;
+        }
+        acc
+    });
+
+    // --- functional sub-array ---------------------------------------------
+    let ws: Vec<i8> = (0..128 * 16).map(|_| rng.next_u32() as i8).collect();
+    let sa = SubArray::program(cfg, &ws);
+    let xs: Vec<u8> = (0..128).map(|_| rng.next_u32() as u8).collect();
+    b.bench("SubArray::matvec zero-skip (128x16)", || sa.matvec(&xs, ReadMode::ZeroSkip));
+    b.bench("SubArray::matvec baseline (128x16)", || sa.matvec(&xs, ReadMode::Baseline));
+
+    // --- im2col + trace ----------------------------------------------------
+    let act: Tensor<u8> = Tensor::from_fn(&[128, 16, 16], |_| rng.next_u32() as u8);
+    let spec = Im2colSpec { in_ch: 128, in_h: 16, in_w: 16, k: 3, stride: 1, pad: 1 };
+    b.bench("im2col 128x16x16 k3", || im2col_u8(&act, &spec));
+
+    let g = resnet18(64, 1000);
+    let map = map_network(&g, ArrayCfg::paper(), false);
+    let acts = synth_activations(&g, &map, 1, 7, SynthCfg::default());
+    b.bench("trace_from_activations resnet18@64 (1 image)", || {
+        trace_from_activations(&g, &map, &acts)
+    });
+    let trace = trace_from_activations(&g, &map, &acts);
+    let prof = NetworkProfile::from_trace(&map, &trace);
+
+    // --- allocator ----------------------------------------------------------
+    let chip = ChipCfg::paper(344);
+    b.bench("block-wise allocator (247 blocks, 22k arrays)", || {
+        allocate(Algorithm::BlockWise, &map, &prof, chip.total_arrays()).unwrap()
+    });
+
+    // --- full simulation -----------------------------------------------------
+    let plan = allocate(Algorithm::BlockWise, &map, &prof, chip.total_arrays()).unwrap();
+    let placement = place(&map, &plan, &chip).unwrap();
+    b.bench("simulate resnet18@64 block-wise, 8 images", || {
+        simulate(
+            &chip,
+            &map,
+            &plan,
+            &placement,
+            &trace,
+            SimCfg::for_algorithm(Algorithm::BlockWise, 8),
+        )
+    });
+    b.bench("simulate resnet18@64 layer-wise, 8 images", || {
+        simulate(
+            &chip,
+            &map,
+            &plan_layerwise(&map, &prof, &chip),
+            &place(&map, &plan_layerwise(&map, &prof, &chip), &chip).unwrap(),
+            &trace,
+            SimCfg::for_algorithm(Algorithm::PerfBased, 8),
+        )
+    });
+
+    println!("{}", b.report());
+}
+
+fn plan_layerwise(
+    map: &cimfab::mapping::NetworkMap,
+    prof: &NetworkProfile,
+    chip: &ChipCfg,
+) -> cimfab::mapping::AllocationPlan {
+    allocate(Algorithm::PerfBased, map, prof, chip.total_arrays()).unwrap()
+}

@@ -1,0 +1,196 @@
+//! Array allocation algorithms (paper §III).
+//!
+//! All three allocators share the same greedy skeleton the paper
+//! describes: start from one copy of everything, then repeatedly grant a
+//! copy to the unit with the highest *expected remaining latency*
+//! until the budget runs out. They differ in the unit granted and the
+//! latency estimate:
+//!
+//! | algorithm | unit granted | latency estimate |
+//! |---|---|---|
+//! | [`Algorithm::WeightBased`] | whole layer | layer MACs (assumes uniform array speed — prior work) |
+//! | [`Algorithm::PerfBased`]   | whole layer | profiled one-copy layer cycles under zero-skipping |
+//! | [`Algorithm::BlockWise`]   | single block | profiled one-copy block cycles (the contribution) |
+//!
+//! [`Algorithm::Baseline`] is weight-based allocation *without*
+//! zero-skipping at simulation time (prior work's deterministic regime,
+//! where weight-based allocation is in fact optimal).
+
+pub mod greedy;
+pub mod oracle;
+
+use crate::mapping::{AllocationPlan, NetworkMap};
+use crate::stats::NetworkProfile;
+
+/// The four algorithms compared in the paper's evaluation (Figs 8 & 9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// Weight-based allocation, zero-skipping disabled.
+    Baseline,
+    /// Weight-based allocation + zero-skipping.
+    WeightBased,
+    /// Performance-based layer-wise allocation + zero-skipping.
+    PerfBased,
+    /// Block-wise allocation + block-wise dataflow (the contribution).
+    BlockWise,
+}
+
+impl Algorithm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Baseline => "baseline",
+            Algorithm::WeightBased => "weight-based",
+            Algorithm::PerfBased => "perf-based",
+            Algorithm::BlockWise => "block-wise",
+        }
+    }
+
+    pub fn all() -> [Algorithm; 4] {
+        [Algorithm::Baseline, Algorithm::WeightBased, Algorithm::PerfBased, Algorithm::BlockWise]
+    }
+
+    /// Does this algorithm run with zero-skipping?
+    pub fn zero_skip(&self) -> bool {
+        !matches!(self, Algorithm::Baseline)
+    }
+
+    /// Does this algorithm use the block-wise dataflow?
+    pub fn blockwise_dataflow(&self) -> bool {
+        matches!(self, Algorithm::BlockWise)
+    }
+
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s {
+            "baseline" => Some(Algorithm::Baseline),
+            "weight-based" | "weight" => Some(Algorithm::WeightBased),
+            "perf-based" | "perf" => Some(Algorithm::PerfBased),
+            "block-wise" | "block" => Some(Algorithm::BlockWise),
+            _ => None,
+        }
+    }
+}
+
+/// Allocate `budget_arrays` arrays across `map` using `alg`.
+pub fn allocate(
+    alg: Algorithm,
+    map: &NetworkMap,
+    profile: &NetworkProfile,
+    budget_arrays: usize,
+) -> crate::Result<AllocationPlan> {
+    let plan = match alg {
+        Algorithm::Baseline | Algorithm::WeightBased => {
+            // Prior work: equalize layer completion times assuming every
+            // array performs uniformly (deterministic reads). The
+            // one-copy deterministic stage time is positions × worst
+            // baseline block cost — proportional to MACs per allocated
+            // array, which is what "allocate arrays based on total MACs
+            // per layer" achieves (§III-A).
+            greedy::layerwise(map, &profile.layer_baseline_cycles, budget_arrays)?
+        }
+        Algorithm::PerfBased => {
+            greedy::layerwise(map, &profile.layer_barrier_cycles, budget_arrays)?
+        }
+        Algorithm::BlockWise => greedy::blockwise(map, &profile.block_cycles, budget_arrays)?,
+    };
+    let mut plan = plan;
+    plan.algorithm = alg.name().to_string();
+    plan.validate(map, budget_arrays).map_err(|e| anyhow::anyhow!(e))?;
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArrayCfg;
+    use crate::dnn::resnet18;
+    use crate::mapping::map_network;
+    use crate::stats::synth::{synth_activations, SynthCfg};
+    use crate::stats::trace_from_activations;
+
+    fn setup() -> (NetworkMap, NetworkProfile) {
+        let g = resnet18(32, 10);
+        let map = map_network(&g, ArrayCfg::paper(), false);
+        let acts = synth_activations(&g, &map, 1, 5, SynthCfg::default());
+        let trace = trace_from_activations(&g, &map, &acts);
+        let prof = NetworkProfile::from_trace(&map, &trace);
+        (map, prof)
+    }
+
+    #[test]
+    fn all_algorithms_produce_valid_plans() {
+        let (map, prof) = setup();
+        let budget = map.min_arrays() * 2;
+        for alg in Algorithm::all() {
+            let plan = allocate(alg, &map, &prof, budget).unwrap();
+            plan.validate(&map, budget).unwrap();
+            assert_eq!(plan.algorithm, alg.name());
+        }
+    }
+
+    #[test]
+    fn layerwise_plans_are_uniform_within_layers() {
+        let (map, prof) = setup();
+        let budget = map.min_arrays() * 3;
+        for alg in [Algorithm::Baseline, Algorithm::WeightBased, Algorithm::PerfBased] {
+            let plan = allocate(alg, &map, &prof, budget).unwrap();
+            assert!(plan.is_layerwise(), "{} plan not layer-uniform", alg.name());
+        }
+    }
+
+    #[test]
+    fn insufficient_budget_is_error() {
+        let (map, prof) = setup();
+        assert!(allocate(Algorithm::BlockWise, &map, &prof, map.min_arrays() - 1).is_err());
+    }
+
+    #[test]
+    fn exact_min_budget_gives_minimal_plan() {
+        let (map, prof) = setup();
+        let plan = allocate(Algorithm::BlockWise, &map, &prof, map.min_arrays()).unwrap();
+        assert_eq!(plan.arrays_used(&map), map.min_arrays());
+        for d in &plan.duplicates {
+            assert!(d.iter().all(|&x| x == 1));
+        }
+    }
+
+    #[test]
+    fn blockwise_balances_per_block_latency() {
+        let (map, prof) = setup();
+        let budget = map.min_arrays() * 4;
+        let plan = allocate(Algorithm::BlockWise, &map, &prof, budget).unwrap();
+        // effective latency of the slowest block must be within 2x of the
+        // fastest *granted* block (greedy water-filling property), taken
+        // over blocks with meaningful work.
+        let mut effs: Vec<f64> = vec![];
+        for (l, dups) in plan.duplicates.iter().enumerate() {
+            for (r, &d) in dups.iter().enumerate() {
+                let c = prof.block_cycles[l][r];
+                if c > 0.0 {
+                    effs.push(c / d as f64);
+                }
+            }
+        }
+        let max = effs.iter().cloned().fold(0.0, f64::max);
+        let mean = effs.iter().sum::<f64>() / effs.len() as f64;
+        assert!(max / mean < 5.0, "imbalance too high: max {max}, mean {mean}");
+    }
+
+    #[test]
+    fn more_budget_never_reduces_duplicates_total() {
+        let (map, prof) = setup();
+        let a = allocate(Algorithm::BlockWise, &map, &prof, map.min_arrays() * 2).unwrap();
+        let b = allocate(Algorithm::BlockWise, &map, &prof, map.min_arrays() * 3).unwrap();
+        let total = |p: &crate::mapping::AllocationPlan| -> usize {
+            p.duplicates.iter().flat_map(|d| d.iter()).sum()
+        };
+        assert!(total(&b) >= total(&a));
+    }
+
+    #[test]
+    fn algorithm_parse_roundtrip() {
+        for alg in Algorithm::all() {
+            assert_eq!(Algorithm::parse(alg.name()), Some(alg));
+        }
+        assert_eq!(Algorithm::parse("nope"), None);
+    }
+}

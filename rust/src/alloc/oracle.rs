@@ -1,0 +1,156 @@
+//! Fractional allocation oracle — a lower bound on achievable stage
+//! latency (extension).
+//!
+//! Relax the integer copy counts to reals: minimize `max_i L_i / x_i`
+//! subject to `Σ c_i x_i ≤ B`, `x_i ≥ 1` (L = expected one-copy block
+//! cycles, c = arrays per copy, B = array budget). At the optimum every
+//! unclamped block satisfies `L_i / x_i = T`, so
+//! `T = Σ_unclamped c_i L_i / (B − Σ_clamped c_i)`; blocks whose
+//! `x_i = L_i / T` would fall below 1 are clamped and the system
+//! re-solved (at most N rounds). The greedy integer allocator can then
+//! be judged against this bound — the `alloc` tests pin the gap.
+
+use crate::mapping::NetworkMap;
+
+/// Optimal fractional makespan (slowest-block expected cycles) for the
+/// block-wise relaxation, and the fractional copy vector.
+pub fn fractional_bound(
+    map: &NetworkMap,
+    block_latency: &[Vec<f64>],
+    budget_arrays: usize,
+) -> (f64, Vec<Vec<f64>>) {
+    let blocks = map.blocks();
+    let lat: Vec<f64> = blocks.iter().map(|b| block_latency[b.layer][b.row]).collect();
+    let cost: Vec<f64> =
+        blocks.iter().map(|b| map.grids[b.layer].arrays_per_block as f64).collect();
+    let budget = budget_arrays as f64;
+    assert!(
+        cost.iter().sum::<f64>() <= budget,
+        "budget below one copy of everything"
+    );
+
+    let n = blocks.len();
+    let mut clamped = vec![false; n];
+    let mut t;
+    loop {
+        let mut weighted = 0.0; // Σ_unclamped c_i L_i
+        let mut fixed_cost = 0.0; // Σ_clamped c_i (x=1)
+        for i in 0..n {
+            if clamped[i] {
+                fixed_cost += cost[i];
+            } else {
+                weighted += cost[i] * lat[i];
+            }
+        }
+        if weighted == 0.0 {
+            t = 0.0;
+            break;
+        }
+        t = weighted / (budget - fixed_cost);
+        // clamp any block whose ideal share is below one copy
+        let mut changed = false;
+        for i in 0..n {
+            if !clamped[i] && lat[i] / t < 1.0 {
+                clamped[i] = true;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // materialize x
+    let mut x = vec![1.0; n];
+    for i in 0..n {
+        if !clamped[i] && t > 0.0 {
+            x[i] = (lat[i] / t).max(1.0);
+        }
+    }
+    let makespan = (0..n)
+        .map(|i| if x[i] > 0.0 { lat[i] / x[i] } else { 0.0 })
+        .fold(0.0, f64::max);
+
+    // reshape to [layer][row]
+    let mut out: Vec<Vec<f64>> =
+        map.grids.iter().map(|g| vec![1.0; g.blocks_per_copy]).collect();
+    for (i, b) in blocks.iter().enumerate() {
+        out[b.layer][b.row] = x[i];
+    }
+    (makespan, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::greedy::blockwise;
+    use crate::config::ArrayCfg;
+    use crate::dnn::resnet18;
+    use crate::mapping::map_network;
+    use crate::stats::synth::{synth_activations, SynthCfg};
+    use crate::stats::{trace_from_activations, NetworkProfile};
+
+    fn setup() -> (crate::mapping::NetworkMap, Vec<Vec<f64>>) {
+        let g = resnet18(32, 10);
+        let map = map_network(&g, ArrayCfg::paper(), false);
+        let acts = synth_activations(&g, &map, 1, 5, SynthCfg::default());
+        let trace = trace_from_activations(&g, &map, &acts);
+        let prof = NetworkProfile::from_trace(&map, &trace);
+        (map, prof.block_cycles)
+    }
+
+    #[test]
+    fn bound_respects_budget() {
+        let (map, lat) = setup();
+        let budget = map.min_arrays() * 3;
+        let (_, x) = fractional_bound(&map, &lat, budget);
+        let used: f64 = x
+            .iter()
+            .zip(&map.grids)
+            .map(|(xs, g)| xs.iter().sum::<f64>() * g.arrays_per_block as f64)
+            .sum();
+        assert!(used <= budget as f64 + 1e-6, "fractional uses {used} > {budget}");
+        for xs in &x {
+            for &v in xs {
+                assert!(v >= 1.0 - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_is_near_fractional_optimum() {
+        // Integer water-filling should be within one grant of the
+        // fractional bound: slowest-block latency ratio < 2 always, and
+        // typically much closer.
+        let (map, lat) = setup();
+        for mult in [2usize, 4, 8] {
+            let budget = map.min_arrays() * mult;
+            let (bound, _) = fractional_bound(&map, &lat, budget);
+            let plan = blockwise(&map, &lat, budget).unwrap();
+            let worst = map
+                .blocks()
+                .iter()
+                .map(|b| lat[b.layer][b.row] / plan.duplicates[b.layer][b.row] as f64)
+                .fold(0.0, f64::max);
+            assert!(
+                worst <= bound * 2.0 + 1e-6,
+                "mult={mult}: greedy {worst} vs fractional bound {bound}"
+            );
+            assert!(worst >= bound - 1e-6, "integer cannot beat the relaxation");
+        }
+    }
+
+    #[test]
+    fn uniform_latencies_give_uniform_copies() {
+        let (map, _) = setup();
+        let lat: Vec<Vec<f64>> =
+            map.grids.iter().map(|g| vec![100.0; g.blocks_per_copy]).collect();
+        let (t, x) = fractional_bound(&map, &lat, map.min_arrays() * 2);
+        assert!(t > 0.0);
+        // all unclamped copies equal within tolerance
+        let vals: Vec<f64> = x.iter().flatten().copied().collect();
+        let hi = vals.iter().cloned().fold(0.0, f64::max);
+        let lo = vals.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(hi / lo < 1.01, "{lo}..{hi}");
+    }
+}

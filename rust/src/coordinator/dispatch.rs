@@ -1,0 +1,268 @@
+//! Live block-wise dataflow (paper §III-C), with real compute.
+//!
+//! This is the paper's proposed runtime organization actually running:
+//!
+//! * a **memory controller** owns the work queue of (patch, block-row)
+//!   items — "send work to the next available block";
+//! * each physical **block instance** is a worker thread holding its
+//!   programmed crossbar rows ([`crate::xbar::SubArray`]); it pulls an
+//!   item, computes the partial dot product, and sends the packetized
+//!   partial sums (tagged with the destination-accumulator id carried in
+//!   the input packet, §III-C) to the vector unit;
+//! * the **vector unit** thread gathers partial sums per output
+//!   position; when all block rows of a patch have reported, the
+//!   accumulated result is committed to the output feature map.
+//!
+//! The committed OFM is verified against the reference convolution —
+//! demonstrating that relaxing the gather/accumulate pairing (the whole
+//! point of the block-wise dataflow) preserves functional correctness.
+
+use crate::config::ArrayCfg;
+use crate::tensor::{conv_ref, im2col_u8, Im2colSpec, Tensor};
+use crate::xbar::{ReadMode, SubArray};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// One work item: compute block row `row`'s slice of patch `patch`.
+#[derive(Debug, Clone, Copy)]
+struct WorkItem {
+    patch: usize,
+    row: usize,
+    /// Destination-accumulator address (§III-C packet header).
+    accumulator: usize,
+}
+
+/// A partial-sum packet from a block instance to the vector unit.
+#[derive(Debug, Clone)]
+struct PsumPacket {
+    patch: usize,
+    row: usize,
+    accumulator: usize,
+    psums: Vec<i32>,
+    /// Which physical instance produced this packet (telemetry).
+    #[allow(dead_code)]
+    worker: usize,
+}
+
+/// Result of a dispatch run.
+#[derive(Debug)]
+pub struct DispatchReport {
+    /// Total work items executed.
+    pub items: usize,
+    /// Items per worker (shows dynamic balancing across duplicates).
+    pub per_worker: Vec<usize>,
+    /// Output feature map, `[out_ch, oh*ow]` i32 accumulations.
+    pub ofm: Tensor<i32>,
+    /// Did the OFM match the reference convolution exactly?
+    pub verified: bool,
+    /// Simulated zero-skip cycles summed per worker (busy work).
+    pub busy_cycles: Vec<u64>,
+}
+
+/// Run one conv layer through the live block-wise dataflow.
+///
+/// `dups[r]` = physical duplicates of block row `r`; `threads` spawn one
+/// worker per duplicate. Correctness does not depend on scheduling
+/// order — that is the property being demonstrated.
+pub fn run_conv_blockwise(
+    cfg: &ArrayCfg,
+    input: &Tensor<u8>,
+    weights: &Tensor<i8>, // [Cout, Cin, K, K]
+    stride: usize,
+    pad: usize,
+    dups: &[usize],
+) -> crate::Result<DispatchReport> {
+    let (cin, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+    let (cout, k) = (weights.shape()[0], weights.shape()[2]);
+    let spec = Im2colSpec { in_ch: cin, in_h: h, in_w: w, k, stride, pad };
+    let patches = Arc::new(im2col_u8(input, &spec));
+    let plen = spec.patch_len();
+    let positions = spec.positions();
+    let n_rows = plen.div_ceil(cfg.rows);
+    anyhow::ensure!(dups.len() == n_rows, "need one dup count per block row ({n_rows})");
+
+    // Weight matrix in crossbar row order (CHW patches), [plen, cout].
+    let mut wmat = vec![0i8; plen * cout];
+    for oc in 0..cout {
+        let mut r = 0;
+        for ic in 0..cin {
+            for ky in 0..k {
+                for kx in 0..k {
+                    wmat[r * cout + oc] = weights.get(&[oc, ic, ky, kx]);
+                    r += 1;
+                }
+            }
+        }
+    }
+
+    // Program one wide sub-array slice per block row. (A block is
+    // arrays_per_block physical arrays sharing word lines; functionally
+    // that is one matrix slice, modeled here as a SubArray with
+    // `cout` 8-bit columns.)
+    let mut slice_cfg = *cfg;
+    slice_cfg.cols = cout * slice_cfg.weight_bits;
+    let block_arrays: Vec<Arc<SubArray>> = (0..n_rows)
+        .map(|r| {
+            let lo = r * cfg.rows;
+            let hi = ((r + 1) * cfg.rows).min(plen);
+            Arc::new(SubArray::program(slice_cfg, &wmat[lo * cout..hi * cout]))
+        })
+        .collect();
+
+    // Memory controller: per-block-row shared queues (workers of row r
+    // pull from queue r — "request additional work from the memory
+    // controller").
+    let queues: Vec<Arc<Mutex<Vec<WorkItem>>>> = (0..n_rows)
+        .map(|r| {
+            // reversed so pop() serves patch 0 first
+            let items: Vec<WorkItem> = (0..positions)
+                .rev()
+                .map(|p| WorkItem { patch: p, row: r, accumulator: p % 4 })
+                .collect();
+            Arc::new(Mutex::new(items))
+        })
+        .collect();
+
+    let (psum_tx, psum_rx) = mpsc::channel::<PsumPacket>();
+
+    // Workers: one thread per physical block instance.
+    let mut handles = Vec::new();
+    let mut worker_id = 0usize;
+    for r in 0..n_rows {
+        for _ in 0..dups[r] {
+            let queue = Arc::clone(&queues[r]);
+            let array = Arc::clone(&block_arrays[r]);
+            let patches = Arc::clone(&patches);
+            let tx = psum_tx.clone();
+            let id = worker_id;
+            let rows_lo = r * cfg.rows;
+            let rows_hi = ((r + 1) * cfg.rows).min(plen);
+            handles.push(thread::spawn(move || -> (usize, usize, u64) {
+                let mut done = 0usize;
+                let mut busy = 0u64;
+                loop {
+                    let item = { queue.lock().unwrap().pop() };
+                    let Some(item) = item else { break };
+                    let row_data =
+                        &patches.data()[item.patch * plen + rows_lo..item.patch * plen + rows_hi];
+                    let (psums, cycles) = array.matvec(row_data, ReadMode::ZeroSkip);
+                    busy += cycles as u64;
+                    tx.send(PsumPacket {
+                        patch: item.patch,
+                        row: item.row,
+                        accumulator: item.accumulator,
+                        psums,
+                        worker: id,
+                    })
+                    .expect("vector unit alive");
+                    done += 1;
+                }
+                (id, done, busy)
+            }));
+            worker_id += 1;
+        }
+    }
+    drop(psum_tx);
+    let n_workers = worker_id;
+
+    // Vector unit: gather by (patch, row) until each patch has all rows.
+    let vu = thread::spawn(move || -> (Tensor<i32>, usize) {
+        let mut ofm: Tensor<i32> = Tensor::zeros(&[cout, positions]);
+        let mut remaining = vec![n_rows; positions];
+        let mut committed = 0usize;
+        while let Ok(pkt) = psum_rx.recv() {
+            debug_assert!(pkt.accumulator < 4);
+            for (c, &v) in pkt.psums.iter().enumerate() {
+                let off = c * positions + pkt.patch;
+                ofm.data_mut()[off] += v;
+            }
+            remaining[pkt.patch] -= 1;
+            if remaining[pkt.patch] == 0 {
+                committed += 1;
+            }
+            let _ = pkt.row;
+        }
+        (ofm, committed)
+    });
+
+    let mut per_worker = vec![0usize; n_workers];
+    let mut busy_cycles = vec![0u64; n_workers];
+    for h in handles {
+        let (id, done, busy) = h.join().expect("worker panicked");
+        per_worker[id] = done;
+        busy_cycles[id] = busy;
+    }
+    let (ofm, committed) = vu.join().expect("vector unit panicked");
+    anyhow::ensure!(committed == positions, "only {committed}/{positions} patches completed");
+
+    // Verify against the reference convolution.
+    let reference = conv_ref::conv2d_i32(input, weights, stride, pad);
+    let verified = reference.data() == ofm.data();
+
+    Ok(DispatchReport {
+        items: positions * n_rows,
+        per_worker,
+        ofm,
+        verified,
+        busy_cycles,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn setup(cin: usize, cout: usize, hw: usize, seed: u64) -> (Tensor<u8>, Tensor<i8>) {
+        let mut rng = Prng::new(seed);
+        let input = Tensor::from_fn(&[cin, hw, hw], |_| (rng.next_u32() as u8) & 0x3F);
+        let weights = Tensor::from_fn(&[cout, cin, 3, 3], |_| rng.next_u32() as i8);
+        (input, weights)
+    }
+
+    #[test]
+    fn single_block_single_worker_verifies() {
+        let (input, weights) = setup(4, 8, 6, 1);
+        let r = run_conv_blockwise(&ArrayCfg::paper(), &input, &weights, 1, 1, &[1]).unwrap();
+        assert!(r.verified, "OFM mismatch");
+        assert_eq!(r.items, 36);
+    }
+
+    #[test]
+    fn multi_block_multi_duplicate_verifies() {
+        // 32 ch * 9 = 288 rows -> 3 block rows; uneven duplicates
+        let (input, weights) = setup(32, 16, 8, 2);
+        let r =
+            run_conv_blockwise(&ArrayCfg::paper(), &input, &weights, 1, 1, &[3, 1, 2]).unwrap();
+        assert!(r.verified, "OFM mismatch with uneven duplicates");
+        assert_eq!(r.per_worker.len(), 6);
+        // conservation: block 0's three workers together did all patches
+        // (how the 64 items split between them is scheduling-dependent —
+        // on a 2-core host one worker may drain the queue early)
+        assert_eq!(r.per_worker[0] + r.per_worker[1] + r.per_worker[2], 64);
+    }
+
+    #[test]
+    fn strided_conv_verifies() {
+        let (input, weights) = setup(8, 8, 8, 3);
+        let r = run_conv_blockwise(&ArrayCfg::paper(), &input, &weights, 2, 1, &[1]).unwrap();
+        assert!(r.verified);
+    }
+
+    #[test]
+    fn busy_cycles_are_plausible() {
+        let (input, weights) = setup(16, 8, 6, 4);
+        let r = run_conv_blockwise(&ArrayCfg::paper(), &input, &weights, 1, 1, &[2, 1]).unwrap();
+        assert!(r.verified);
+        let total: u64 = r.busy_cycles.iter().sum();
+        // 36 patches x 2 block rows, each 0..=1024 cycles
+        assert!(total > 0 && total <= 36 * 2 * 1024);
+    }
+
+    #[test]
+    fn wrong_dup_count_rejected() {
+        let (input, weights) = setup(4, 4, 6, 5);
+        assert!(run_conv_blockwise(&ArrayCfg::paper(), &input, &weights, 1, 1, &[1, 1]).is_err());
+    }
+}

@@ -1,0 +1,202 @@
+//! End-to-end driver: profile → allocate → simulate → report.
+
+use crate::alloc::{allocate, Algorithm};
+use crate::config::{ArrayCfg, ChipCfg};
+use crate::dnn::{resnet18, vgg11, Graph};
+use crate::mapping::{map_network, place, AllocationPlan, NetworkMap};
+use crate::runtime::{Engine, GoldenModel, Manifest};
+use crate::sim::{simulate, SimCfg, SimResult};
+use crate::stats::synth::{synth_activations, SynthCfg};
+use crate::stats::{trace_from_activations, NetTrace, NetworkProfile};
+use anyhow::Result;
+
+/// Where activation statistics come from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StatsSource {
+    /// Synthetic generator (no artifacts needed; benches use this).
+    Synthetic,
+    /// The AOT-exported quantized model executed over PJRT — real
+    /// activations of the real (randomly-initialized) network.
+    Golden,
+}
+
+impl StatsSource {
+    pub fn parse(s: &str) -> Option<StatsSource> {
+        match s {
+            "synth" | "synthetic" => Some(StatsSource::Synthetic),
+            "golden" | "pjrt" => Some(StatsSource::Golden),
+            _ => None,
+        }
+    }
+}
+
+/// Driver configuration.
+#[derive(Debug, Clone)]
+pub struct DriverOpts {
+    pub net: String,
+    /// Input resolution (must match the artifact when `Golden`).
+    pub hw: usize,
+    pub stats: StatsSource,
+    /// Images used for profiling statistics.
+    pub profile_images: usize,
+    /// Images pushed through the pipelined simulation.
+    pub sim_images: usize,
+    pub seed: u64,
+    pub artifacts_dir: String,
+}
+
+impl Default for DriverOpts {
+    fn default() -> Self {
+        DriverOpts {
+            net: "resnet18".into(),
+            hw: 64,
+            stats: StatsSource::Synthetic,
+            profile_images: 2,
+            sim_images: 8,
+            seed: 7,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+/// A fully prepared experiment: everything up to (but excluding) the
+/// allocation/simulation choices.
+pub struct Driver {
+    pub opts: DriverOpts,
+    pub graph: Graph,
+    pub map: NetworkMap,
+    pub trace: NetTrace,
+    pub profile: NetworkProfile,
+}
+
+impl Driver {
+    /// Build the graph, gather statistics, derive the profile.
+    pub fn prepare(opts: DriverOpts) -> Result<Driver> {
+        let graph = build_graph(&opts.net, opts.hw)?;
+        graph.validate().map_err(|e| anyhow::anyhow!(e))?;
+        let map = map_network(&graph, ArrayCfg::paper(), false);
+        let acts = match opts.stats {
+            StatsSource::Synthetic => {
+                synth_activations(&graph, &map, opts.profile_images, opts.seed, SynthCfg::default())
+            }
+            StatsSource::Golden => {
+                let manifest = Manifest::load(&opts.artifacts_dir)?;
+                let engine = Engine::cpu()?;
+                let model = GoldenModel::load(&engine, &manifest, &opts.net)?;
+                anyhow::ensure!(
+                    model.meta.hw == opts.hw,
+                    "artifact exported at hw={}, requested {} — re-run `make artifacts` \
+                     with --hw or adjust --hw",
+                    model.meta.hw,
+                    opts.hw
+                );
+                model.profile(opts.profile_images, opts.seed)?
+            }
+        };
+        let trace = trace_from_activations(&graph, &map, &acts);
+        let profile = NetworkProfile::from_trace(&map, &trace);
+        Ok(Driver { opts, graph, map, trace, profile })
+    }
+
+    /// Allocate + place + simulate one algorithm on a chip of `pes` PEs.
+    pub fn run(&self, alg: Algorithm, pes: usize) -> Result<(AllocationPlan, SimResult)> {
+        let chip = ChipCfg::paper(pes);
+        let plan = allocate(alg, &self.map, &self.profile, chip.total_arrays())?;
+        let placement = place(&self.map, &plan, &chip)?;
+        let cfg = SimCfg::for_algorithm(alg, self.opts.sim_images);
+        let result = simulate(&chip, &self.map, &plan, &placement, &self.trace, cfg);
+        Ok((plan, result))
+    }
+
+    /// Run all four paper algorithms at one design size.
+    pub fn run_all(&self, pes: usize) -> Result<Vec<(Algorithm, SimResult)>> {
+        Algorithm::all()
+            .into_iter()
+            .map(|alg| Ok((alg, self.run(alg, pes)?.1)))
+            .collect()
+    }
+
+    /// Minimum PEs that fit one copy of the network (paper: 86 for
+    /// ResNet18).
+    pub fn min_pes(&self) -> usize {
+        let per_pe = ChipCfg::paper(1).arrays_per_pe;
+        self.map.min_arrays().div_ceil(per_pe)
+    }
+
+    /// The paper's design-size sweep: half-powers of two from the
+    /// minimum (§V: "we begin increasing the design size by ½ powers
+    /// of 2").
+    pub fn sweep_sizes(&self, steps: usize) -> Vec<usize> {
+        let min = self.min_pes();
+        (0..steps)
+            .map(|i| ((min as f64) * 2f64.powf(i as f64 / 2.0)).round() as usize)
+            .collect()
+    }
+}
+
+fn build_graph(net: &str, hw: usize) -> Result<Graph> {
+    match net {
+        "resnet18" => Ok(resnet18(hw, 1000)),
+        "resnet34" => Ok(crate::dnn::resnet34(hw, 1000)),
+        "vgg11" => Ok(vgg11(hw, 10)),
+        other => anyhow::bail!("unknown network '{other}' (resnet18|resnet34|vgg11)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth_driver(net: &str) -> Driver {
+        Driver::prepare(DriverOpts {
+            net: net.into(),
+            hw: 32,
+            profile_images: 1,
+            sim_images: 4,
+            ..DriverOpts::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn resnet18_min_pes_matches_paper() {
+        let d = synth_driver("resnet18");
+        assert_eq!(d.min_pes(), 86); // §V
+    }
+
+    #[test]
+    fn sweep_sizes_half_powers() {
+        let d = synth_driver("resnet18");
+        let sizes = d.sweep_sizes(5);
+        assert_eq!(sizes[0], 86);
+        assert_eq!(sizes[2], 172);
+        assert_eq!(sizes[4], 344);
+        assert!((sizes[1] as f64 - 86.0 * 2f64.sqrt()).abs() < 1.0);
+    }
+
+    #[test]
+    fn run_all_produces_ordered_speedups() {
+        let d = synth_driver("resnet18");
+        let results = d.run_all(172).unwrap();
+        let get = |alg: Algorithm| {
+            results.iter().find(|(a, _)| *a == alg).unwrap().1.throughput_ips
+        };
+        assert!(get(Algorithm::BlockWise) >= get(Algorithm::PerfBased));
+        assert!(get(Algorithm::PerfBased) >= get(Algorithm::WeightBased) * 0.95);
+        assert!(get(Algorithm::WeightBased) > get(Algorithm::Baseline));
+    }
+
+    #[test]
+    fn vgg11_driver_works() {
+        let d = synth_driver("vgg11");
+        let (plan, result) = d.run(Algorithm::BlockWise, d.min_pes() * 2).unwrap();
+        plan.validate(&d.map, ChipCfg::paper(d.min_pes() * 2).total_arrays()).unwrap();
+        assert!(result.throughput_ips > 0.0);
+    }
+
+    #[test]
+    fn unknown_net_rejected() {
+        assert!(Driver::prepare(DriverOpts { net: "alexnet".into(), ..DriverOpts::default() })
+            .is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 coordinator: the end-to-end driver and the live block-wise
+//! dispatch engine.
+//!
+//! * [`driver`] wires the whole stack together: artifacts → activation
+//!   profiling (PJRT golden or synthetic) → mapping → allocation →
+//!   cycle-accurate simulation → report tables. This is what the CLI and
+//!   the examples call.
+//! * [`dispatch`] is a *live* implementation of the paper's block-wise
+//!   dataflow (§III-C): a memory-controller work queue, one worker
+//!   thread per physical block instance computing real partial dot
+//!   products on programmed [`crate::xbar::SubArray`]s, and a
+//!   vector-unit thread that gathers packetized partial sums by
+//!   destination-accumulator id. Output feature maps are verified
+//!   against the reference convolution — the dataflow is not just
+//!   simulated, it runs.
+
+pub mod driver;
+pub mod dispatch;
+
+pub use driver::{Driver, DriverOpts, StatsSource};

@@ -1,0 +1,186 @@
+//! Sequential DNN graph with residual edges.
+
+use super::layer::{Layer, Op};
+
+/// A network: an ordered list of layers. Control flow is sequential;
+/// `Op::Add { from }` references an earlier layer's output (residual).
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub name: String,
+    pub input_shape: [usize; 3],
+    pub layers: Vec<Layer>,
+}
+
+impl Graph {
+    pub fn new(name: &str, input_shape: [usize; 3]) -> Graph {
+        Graph { name: name.to_string(), input_shape, layers: vec![] }
+    }
+
+    /// Shape flowing into the next appended layer.
+    pub fn cursor_shape(&self) -> [usize; 3] {
+        self.layers.last().map(|l| l.out_shape).unwrap_or(self.input_shape)
+    }
+
+    /// Append an operator, inferring shapes. Returns the new layer index.
+    pub fn push(&mut self, name: &str, op: Op) -> usize {
+        let in_shape = self.cursor_shape();
+        if let Op::Add { from } = op {
+            assert!(from < self.layers.len(), "residual from {from} out of range");
+            assert_eq!(
+                self.layers[from].out_shape, in_shape,
+                "residual shape mismatch: layer {from} produces {:?}, cursor is {:?}",
+                self.layers[from].out_shape, in_shape
+            );
+        }
+        let out_shape = Layer::infer_out_shape(&op, in_shape);
+        self.layers.push(Layer { name: name.to_string(), op, in_shape, out_shape, from: None });
+        self.layers.len() - 1
+    }
+
+    /// Append an operator whose input is layer `from`'s output instead of
+    /// the previous layer (branch input, e.g. a projection shortcut).
+    pub fn push_from(&mut self, name: &str, op: Op, from: usize) -> usize {
+        assert!(from < self.layers.len(), "push_from({from}) out of range");
+        let in_shape = self.layers[from].out_shape;
+        let out_shape = Layer::infer_out_shape(&op, in_shape);
+        self.layers.push(Layer {
+            name: name.to_string(),
+            op,
+            in_shape,
+            out_shape,
+            from: Some(from),
+        });
+        self.layers.len() - 1
+    }
+
+    /// Indices + refs of CIM-mapped layers (conv/linear), in order.
+    pub fn cim_layers(&self) -> Vec<(usize, &Layer)> {
+        self.layers.iter().enumerate().filter(|(_, l)| l.is_cim()).collect()
+    }
+
+    /// Conv layers only (the paper's figures cover the conv stack).
+    pub fn conv_layers(&self) -> Vec<(usize, &Layer)> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| matches!(l.op, Op::Conv { .. }))
+            .collect()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_count()).sum()
+    }
+
+    /// Sanity-check internal consistency (shape chaining, residual refs).
+    pub fn validate(&self) -> Result<(), String> {
+        let mut cursor = self.input_shape;
+        for (i, l) in self.layers.iter().enumerate() {
+            let expected_in = match l.from {
+                None => cursor,
+                Some(f) => {
+                    if f >= i {
+                        return Err(format!("layer {i} 'from' references {f} >= {i}"));
+                    }
+                    self.layers[f].out_shape
+                }
+            };
+            if l.in_shape != expected_in {
+                return Err(format!(
+                    "layer {i} '{}' in_shape {:?} != expected {:?}",
+                    l.name, l.in_shape, expected_in
+                ));
+            }
+            if let Op::Add { from } = l.op {
+                if from >= i {
+                    return Err(format!("layer {i} residual references {from} >= {i}"));
+                }
+                if self.layers[from].out_shape != l.in_shape {
+                    return Err(format!(
+                        "layer {i} residual shape {:?} != {:?}",
+                        self.layers[from].out_shape, l.in_shape
+                    ));
+                }
+            }
+            cursor = l.out_shape;
+        }
+        Ok(())
+    }
+
+    /// One-line-per-layer summary (used by the CLI `report` command).
+    pub fn summary(&self) -> String {
+        let mut t = crate::util::table::Table::new([
+            "#", "name", "op", "in", "out", "MACs", "weights",
+        ]);
+        for (i, l) in self.layers.iter().enumerate() {
+            t.row([
+                i.to_string(),
+                l.name.clone(),
+                format!("{:?}", std::mem::discriminant(&l.op))
+                    .replace("Discriminant(", "")
+                    .replace(')', ""),
+                format!("{:?}", l.in_shape),
+                format!("{:?}", l.out_shape),
+                crate::util::table::fmt_int(l.macs()),
+                crate::util::table::fmt_int(l.weight_count()),
+            ]);
+        }
+        format!(
+            "{} (input {:?}, {} layers, {} MACs)\n{}",
+            self.name,
+            self.input_shape,
+            self.layers.len(),
+            crate::util::table::fmt_int(self.total_macs()),
+            t.render()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_chains_shapes() {
+        let mut g = Graph::new("t", [3, 8, 8]);
+        g.push("c1", Op::Conv { in_ch: 3, out_ch: 4, k: 3, stride: 1, pad: 1 });
+        g.push("r1", Op::Relu);
+        g.push("p1", Op::MaxPool { k: 2, stride: 2 });
+        assert_eq!(g.cursor_shape(), [4, 4, 4]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn residual_shape_checked() {
+        let mut g = Graph::new("t", [4, 8, 8]);
+        let a = g.push("c1", Op::Conv { in_ch: 4, out_ch: 4, k: 3, stride: 1, pad: 1 });
+        g.push("c2", Op::Conv { in_ch: 4, out_ch: 4, k: 3, stride: 1, pad: 1 });
+        g.push("add", Op::Add { from: a });
+        g.validate().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "residual shape mismatch")]
+    fn bad_residual_panics() {
+        let mut g = Graph::new("t", [4, 8, 8]);
+        let a = g.push("c1", Op::Conv { in_ch: 4, out_ch: 8, k: 3, stride: 2, pad: 1 });
+        g.push("c2", Op::Conv { in_ch: 8, out_ch: 8, k: 3, stride: 1, pad: 1 });
+        // cursor is [8,4,4], layer a is [8,4,4] — actually make a true mismatch:
+        g.push("c3", Op::Conv { in_ch: 8, out_ch: 4, k: 3, stride: 1, pad: 1 });
+        g.push("add", Op::Add { from: a });
+    }
+
+    #[test]
+    fn cim_layer_filter() {
+        let mut g = Graph::new("t", [3, 8, 8]);
+        g.push("c1", Op::Conv { in_ch: 3, out_ch: 4, k: 3, stride: 1, pad: 1 });
+        g.push("r", Op::Relu);
+        g.push("gap", Op::GlobalAvgPool);
+        g.push("fc", Op::Linear { in_features: 4, out_features: 10 });
+        assert_eq!(g.cim_layers().len(), 2);
+        assert_eq!(g.conv_layers().len(), 1);
+    }
+}

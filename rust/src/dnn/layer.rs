@@ -1,0 +1,164 @@
+//! Layer IR: operators, shape inference, MAC accounting.
+
+/// Operator kinds. Only `Conv` and `Linear` are mapped to CIM arrays;
+/// pooling, ReLU and residual adds execute on the chip's digital vector
+/// units (paper §IV) and contribute no array work.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Op {
+    /// 2-D convolution, square kernel, same in/out dtype (8-bit quantized).
+    Conv { in_ch: usize, out_ch: usize, k: usize, stride: usize, pad: usize },
+    /// Fully connected.
+    Linear { in_features: usize, out_features: usize },
+    /// Max pooling (vector unit).
+    MaxPool { k: usize, stride: usize },
+    /// Global average pooling to 1x1 (vector unit).
+    GlobalAvgPool,
+    /// Residual add with the output of an earlier layer (by index).
+    Add { from: usize },
+    /// ReLU (folded into the vector-unit accumulate in hardware; explicit
+    /// here because it gates activation sparsity, which drives the paper).
+    Relu,
+}
+
+/// A layer instance with resolved shapes. Shapes are `[C, H, W]`; `Linear`
+/// layers use `[F, 1, 1]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layer {
+    pub name: String,
+    pub op: Op,
+    pub in_shape: [usize; 3],
+    pub out_shape: [usize; 3],
+    /// Input edge: `None` = previous layer's output (sequential);
+    /// `Some(i)` = layer `i`'s output (branch input, e.g. a ResNet
+    /// projection shortcut that reads the block's input).
+    pub from: Option<usize>,
+}
+
+impl Layer {
+    /// Does this layer occupy CIM arrays?
+    pub fn is_cim(&self) -> bool {
+        matches!(self.op, Op::Conv { .. } | Op::Linear { .. })
+    }
+
+    /// Multiply-accumulate count for one inference.
+    pub fn macs(&self) -> u64 {
+        match self.op {
+            Op::Conv { in_ch, out_ch, k, .. } => {
+                let positions = (self.out_shape[1] * self.out_shape[2]) as u64;
+                positions * (k * k * in_ch) as u64 * out_ch as u64
+            }
+            Op::Linear { in_features, out_features } => (in_features * out_features) as u64,
+            _ => 0,
+        }
+    }
+
+    /// Number of stored weights.
+    pub fn weight_count(&self) -> u64 {
+        match self.op {
+            Op::Conv { in_ch, out_ch, k, .. } => (k * k * in_ch * out_ch) as u64,
+            Op::Linear { in_features, out_features } => (in_features * out_features) as u64,
+            _ => 0,
+        }
+    }
+
+    /// CIM matrix dimensions `(rows, cols)` = (patch length, output
+    /// channels). `None` for non-CIM layers. Rows map to word lines,
+    /// cols to 8-bit weight columns (8 cells each).
+    pub fn matrix_dims(&self) -> Option<(usize, usize)> {
+        match self.op {
+            Op::Conv { in_ch, out_ch, k, .. } => Some((k * k * in_ch, out_ch)),
+            Op::Linear { in_features, out_features } => Some((in_features, out_features)),
+            _ => None,
+        }
+    }
+
+    /// Output positions per inference: how many patch vectors stream
+    /// through the layer's arrays (1 for Linear).
+    pub fn positions(&self) -> usize {
+        match self.op {
+            Op::Conv { .. } => self.out_shape[1] * self.out_shape[2],
+            Op::Linear { .. } => 1,
+            _ => 0,
+        }
+    }
+
+    /// Infer the output shape for `op` applied to `in_shape`.
+    pub fn infer_out_shape(op: &Op, in_shape: [usize; 3]) -> [usize; 3] {
+        let [c, h, w] = in_shape;
+        match *op {
+            Op::Conv { in_ch, out_ch, k, stride, pad } => {
+                assert_eq!(c, in_ch, "conv in_ch mismatch: graph has {c}, op wants {in_ch}");
+                let oh = (h + 2 * pad - k) / stride + 1;
+                let ow = (w + 2 * pad - k) / stride + 1;
+                [out_ch, oh, ow]
+            }
+            Op::Linear { in_features, out_features } => {
+                assert_eq!(c * h * w, in_features, "linear in_features mismatch");
+                [out_features, 1, 1]
+            }
+            Op::MaxPool { k, stride } => [c, (h - k) / stride + 1, (w - k) / stride + 1],
+            Op::GlobalAvgPool => [c, 1, 1],
+            Op::Add { .. } | Op::Relu => in_shape,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(in_ch: usize, out_ch: usize, k: usize, stride: usize, pad: usize, hw: usize) -> Layer {
+        let op = Op::Conv { in_ch, out_ch, k, stride, pad };
+        let in_shape = [in_ch, hw, hw];
+        let out_shape = Layer::infer_out_shape(&op, in_shape);
+        Layer { name: "t".into(), op, in_shape, out_shape, from: None }
+    }
+
+    #[test]
+    fn conv_shape_inference() {
+        let l = conv(64, 128, 3, 2, 1, 56);
+        assert_eq!(l.out_shape, [128, 28, 28]);
+    }
+
+    #[test]
+    fn conv_macs() {
+        // 3x3x64 -> 128 at 28x28: 784 * 576 * 128
+        let l = conv(64, 128, 3, 1, 1, 28);
+        assert_eq!(l.macs(), 784 * 576 * 128);
+        assert_eq!(l.weight_count(), 576 * 128);
+        assert_eq!(l.matrix_dims(), Some((576, 128)));
+        assert_eq!(l.positions(), 784);
+    }
+
+    #[test]
+    fn linear_dims() {
+        let op = Op::Linear { in_features: 512, out_features: 1000 };
+        let out = Layer::infer_out_shape(&op, [512, 1, 1]);
+        assert_eq!(out, [1000, 1, 1]);
+        let l = Layer { name: "fc".into(), op, in_shape: [512, 1, 1], out_shape: out, from: None };
+        assert_eq!(l.macs(), 512_000);
+        assert_eq!(l.positions(), 1);
+    }
+
+    #[test]
+    fn vector_ops_are_not_cim() {
+        let op = Op::MaxPool { k: 2, stride: 2 };
+        let l = Layer {
+            name: "p".into(),
+            op,
+            in_shape: [64, 8, 8],
+            out_shape: Layer::infer_out_shape(&Op::MaxPool { k: 2, stride: 2 }, [64, 8, 8]),
+            from: None,
+        };
+        assert!(!l.is_cim());
+        assert_eq!(l.macs(), 0);
+        assert_eq!(l.out_shape, [64, 4, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "conv in_ch mismatch")]
+    fn conv_channel_mismatch_panics() {
+        let op = Op::Conv { in_ch: 3, out_ch: 8, k: 3, stride: 1, pad: 1 };
+        Layer::infer_out_shape(&op, [4, 8, 8]);
+    }
+}

@@ -1,0 +1,17 @@
+//! DNN graph IR and the two paper workloads (ResNet18, VGG11).
+//!
+//! The IR is deliberately small: the simulator cares about the sequence of
+//! CIM-mapped layers (conv / linear) — their matrix dimensions, output
+//! positions and MAC counts — plus enough pooling/residual structure to
+//! run a functional forward pass for golden checks and to derive the
+//! activation shapes each crossbar sees.
+
+pub mod layer;
+pub mod graph;
+pub mod resnet;
+pub mod vgg;
+
+pub use graph::Graph;
+pub use layer::{Layer, Op};
+pub use resnet::{resnet18, resnet34};
+pub use vgg::vgg11;

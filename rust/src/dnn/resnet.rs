@@ -1,0 +1,146 @@
+//! ResNet18 builder (He et al. [7]), the paper's primary workload.
+//!
+//! 20 conv layers — the stem, 16 basic-block convs, 3 downsample 1x1
+//! convs — plus the classifier FC. At the paper's array geometry
+//! (128x128, 8-bit weights) this yields exactly the paper's numbers:
+//! **247 conv blocks** and **5,472 minimum conv arrays** (§V: "86 PEs …
+//! minimum number of arrays (5472)"); the FC adds 252 more arrays and is
+//! excluded from the paper's counts, so allocation defaults to conv-only
+//! (see [`crate::mapping::GridCfg::include_linear`]).
+
+use super::graph::Graph;
+use super::layer::Op;
+
+/// Build ResNet18 (basic blocks per stage: `[2, 2, 2, 2]`).
+pub fn resnet18(input_hw: usize, num_classes: usize) -> Graph {
+    resnet_basic("resnet18", [2, 2, 2, 2], input_hw, num_classes)
+}
+
+/// Build ResNet34 (basic blocks per stage: `[3, 4, 6, 3]`) — extension
+/// workload: 36 conv layers, stressing the paper's "deeper networks
+/// benefit more from block-wise allocation" claim further.
+pub fn resnet34(input_hw: usize, num_classes: usize) -> Graph {
+    resnet_basic("resnet34", [3, 4, 6, 3], input_hw, num_classes)
+}
+
+/// Shared basic-block ResNet builder. `input_hw` is the square input
+/// resolution (224 for the paper's ImageNet runs; smaller values keep
+/// the cycle-accurate simulator fast — block structure is independent of
+/// resolution, see DESIGN.md §3).
+fn resnet_basic(name: &str, blocks: [usize; 4], input_hw: usize, num_classes: usize) -> Graph {
+    assert!(input_hw >= 32, "{name} needs input >= 32, got {input_hw}");
+    let mut g = Graph::new(name, [3, input_hw, input_hw]);
+
+    // Stem: 7x7/2 conv + 3x3/2 maxpool.
+    g.push("conv1", Op::Conv { in_ch: 3, out_ch: 64, k: 7, stride: 2, pad: 3 });
+    g.push("relu1", Op::Relu);
+    g.push("maxpool", Op::MaxPool { k: 2, stride: 2 });
+
+    // 4 stages; first block of stages 2-4 downsamples.
+    let stage_ch = [64usize, 128, 256, 512];
+    let mut in_ch = 64usize;
+    for (s, &ch) in stage_ch.iter().enumerate() {
+        for b in 0..blocks[s] {
+            let stride = if s > 0 && b == 0 { 2 } else { 1 };
+            let tag = format!("l{}b{}", s + 1, b);
+            // Branch point: the block's input (stem guarantees this exists).
+            let branch = g.layers.len() - 1;
+            g.push(
+                &format!("{tag}.conv1"),
+                Op::Conv { in_ch, out_ch: ch, k: 3, stride, pad: 1 },
+            );
+            g.push(&format!("{tag}.relu1"), Op::Relu);
+            g.push(
+                &format!("{tag}.conv2"),
+                Op::Conv { in_ch: ch, out_ch: ch, k: 3, stride: 1, pad: 1 },
+            );
+            let main_out = g.layers.len() - 1;
+            if stride != 1 || in_ch != ch {
+                // Projection shortcut: 1x1/stride conv on the branch input,
+                // then add the main path back in.
+                g.push_from(
+                    &format!("{tag}.downsample"),
+                    Op::Conv { in_ch, out_ch: ch, k: 1, stride, pad: 0 },
+                    branch,
+                );
+                g.push(&format!("{tag}.add"), Op::Add { from: main_out });
+            } else {
+                g.push(&format!("{tag}.add"), Op::Add { from: branch });
+            }
+            g.push(&format!("{tag}.relu2"), Op::Relu);
+            in_ch = ch;
+        }
+    }
+
+    g.push("gap", Op::GlobalAvgPool);
+    g.push("fc", Op::Linear { in_features: 512, out_features: num_classes });
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_20_conv_layers_plus_fc() {
+        let g = resnet18(224, 1000);
+        assert_eq!(g.conv_layers().len(), 20, "paper: 20 convolutional layers");
+        assert_eq!(g.cim_layers().len(), 21);
+    }
+
+    #[test]
+    fn imagenet_shapes() {
+        let g = resnet18(224, 1000);
+        // stem output 64x56x56 after maxpool
+        let mp = g.layers.iter().find(|l| l.name == "maxpool").unwrap();
+        assert_eq!(mp.out_shape, [64, 56, 56]);
+        let last = g.layers.last().unwrap();
+        assert_eq!(last.out_shape, [1000, 1, 1]);
+    }
+
+    #[test]
+    fn total_macs_at_224_matches_published_scale() {
+        // Published ResNet18 @224 ≈ 1.8 GMACs; conv-only slightly less.
+        let g = resnet18(224, 1000);
+        let gmacs = g.total_macs() as f64 / 1e9;
+        assert!((1.5..2.1).contains(&gmacs), "got {gmacs} GMACs");
+    }
+
+    #[test]
+    fn small_resolution_same_conv_count() {
+        let g = resnet18(64, 1000);
+        assert_eq!(g.conv_layers().len(), 20);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn layer10_is_3x3x128x128() {
+        // Paper Fig 5: layer 10 (1-indexed in the conv stack) is a
+        // 3x3x128x128 filter. Our conv stack order: conv1, l1b0.conv1/2,
+        // l1b1.conv1/2, l2b0.conv1/2, l2b0.downsample, l2b1.conv1/2, ...
+        let g = resnet18(224, 1000);
+        let convs = g.conv_layers();
+        let dims: Vec<(usize, usize)> =
+            convs.iter().map(|(_, l)| l.matrix_dims().unwrap()).collect();
+        // find 3x3x128->128 convs (rows 1152, cols 128)
+        let n_1152 = dims.iter().filter(|d| **d == (1152, 128)).count();
+        assert_eq!(n_1152, 3, "ResNet18 has three 3x3x128x128 convs");
+    }
+
+    #[test]
+    fn validates() {
+        resnet18(224, 1000).validate().unwrap();
+        resnet18(32, 10).validate().unwrap();
+        resnet34(224, 1000).validate().unwrap();
+    }
+
+    #[test]
+    fn resnet34_has_36_convs() {
+        // 1 stem + 2*(3+4+6+3)=32 block convs + 3 downsamples
+        let g = resnet34(224, 1000);
+        assert_eq!(g.conv_layers().len(), 36);
+        // torchvision resnet34 ≈ 3.6 GMACs at 224
+        let gmacs = g.total_macs() as f64 / 1e9;
+        assert!((3.0..4.2).contains(&gmacs), "{gmacs} GMACs");
+    }
+}

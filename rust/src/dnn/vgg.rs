@@ -1,0 +1,75 @@
+//! VGG11 builder (configuration A), the paper's CIFAR10 workload.
+
+use super::graph::Graph;
+use super::layer::Op;
+
+/// Build VGG11 for `input_hw`-square inputs (32 for CIFAR10 as in the
+/// paper). Conv stack: 64, M, 128, M, 256, 256, M, 512, 512, M, 512, 512,
+/// M — 8 conv layers ("roughly half the layers ResNet18 has", §V), then a
+/// compact CIFAR-style classifier.
+pub fn vgg11(input_hw: usize, num_classes: usize) -> Graph {
+    assert!(input_hw >= 32, "vgg11 needs input >= 32, got {input_hw}");
+    let mut g = Graph::new("vgg11", [3, input_hw, input_hw]);
+    let cfg: [(usize, bool); 8] = [
+        (64, true),
+        (128, true),
+        (256, false),
+        (256, true),
+        (512, false),
+        (512, true),
+        (512, false),
+        (512, true),
+    ];
+    let mut in_ch = 3usize;
+    for (i, &(ch, pool)) in cfg.iter().enumerate() {
+        g.push(
+            &format!("conv{}", i + 1),
+            Op::Conv { in_ch, out_ch: ch, k: 3, stride: 1, pad: 1 },
+        );
+        g.push(&format!("relu{}", i + 1), Op::Relu);
+        if pool {
+            g.push(&format!("pool{}", i + 1), Op::MaxPool { k: 2, stride: 2 });
+        }
+        in_ch = ch;
+    }
+    // CIFAR-style head: GAP + single FC (the paper maps conv layers only;
+    // see resnet.rs for the same convention).
+    g.push("gap", Op::GlobalAvgPool);
+    g.push("fc", Op::Linear { in_features: 512, out_features: num_classes });
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_8_conv_layers() {
+        let g = vgg11(32, 10);
+        assert_eq!(g.conv_layers().len(), 8);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn cifar_shapes() {
+        let g = vgg11(32, 10);
+        // 5 pools: 32 -> 16 -> 8 -> 4 -> 2 -> 1
+        let last_pool = g.layers.iter().rev().find(|l| matches!(l.op, Op::MaxPool { .. })).unwrap();
+        assert_eq!(last_pool.out_shape, [512, 1, 1]);
+        assert_eq!(g.layers.last().unwrap().out_shape, [10, 1, 1]);
+    }
+
+    #[test]
+    fn conv_matrix_dims() {
+        let g = vgg11(32, 10);
+        let convs = g.conv_layers();
+        assert_eq!(convs[0].1.matrix_dims(), Some((27, 64)));
+        assert_eq!(convs[7].1.matrix_dims(), Some((4608, 512)));
+    }
+
+    #[test]
+    fn macs_dominated_by_middle_layers() {
+        let g = vgg11(32, 10);
+        assert!(g.total_macs() > 100_000_000, "VGG11@32 should be >100 MMACs");
+    }
+}

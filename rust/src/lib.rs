@@ -1,0 +1,44 @@
+//! # cimfab — compute-in-memory fabric simulator & allocator
+//!
+//! Reproduction of *"Breaking Barriers: Maximizing Array Utilization for
+//! Compute In-Memory Fabrics"* (Crafton et al., 2020).
+//!
+//! The crate is the Layer-3 (Rust) half of a three-layer stack:
+//!
+//! * **L1** — a Pallas kernel (`python/compile/kernels/`) functionally
+//!   modelling one 128x128 eNVM crossbar with bit-serial inputs and
+//!   3-bit ADC reads.
+//! * **L2** — quantized ResNet18 / VGG11 forward passes in JAX
+//!   (`python/compile/model.py`), AOT-lowered to HLO text.
+//! * **L3** — this crate: the DNN graph, the sub-array cycle model, the
+//!   array-grid/block mapping, the three allocation algorithms
+//!   (weight-based, performance-based, block-wise), the cycle-accurate
+//!   discrete-event simulator with layer pipelining and both dataflows,
+//!   a mesh-NoC model, and the PJRT runtime that executes the AOT
+//!   artifacts for activation profiling and golden checks.
+//!
+//! Entry points:
+//! * [`coordinator::Driver`] — end-to-end: profile → allocate → simulate
+//!   → report.
+//! * [`sim::simulate`] — run one chip configuration on one network trace.
+//! * [`alloc`] — the allocation algorithms (the paper's contribution).
+//!
+//! See `DESIGN.md` for the module inventory and the experiment index.
+
+pub mod util;
+pub mod tensor;
+pub mod dnn;
+pub mod xbar;
+pub mod mapping;
+pub mod alloc;
+pub mod stats;
+pub mod noc;
+pub mod sim;
+pub mod energy;
+pub mod runtime;
+pub mod coordinator;
+pub mod config;
+pub mod report;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

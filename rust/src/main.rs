@@ -1,0 +1,281 @@
+//! `cimfab` CLI — the leader entrypoint.
+//!
+//! ```text
+//! cimfab report   --net resnet18 --hw 64             graph + mapping summary
+//! cimfab profile  --net resnet18 --hw 64 [--stats golden]   Figs 4 & 6 tables
+//! cimfab simulate --net resnet18 --pes 172 --alg block-wise one run
+//! cimfab sweep    --net resnet18 --steps 6           Fig 8 table
+//! cimfab util     --net resnet18 --pes 172           Fig 9 table
+//! cimfab golden   --net vgg11                        PJRT golden cross-check
+//! cimfab dispatch                                    live block-wise dataflow demo
+//! cimfab variance                                    ADC/variance ablation (§III-A)
+//! ```
+
+use cimfab::alloc::Algorithm;
+use cimfab::coordinator::{Driver, DriverOpts, StatsSource};
+use cimfab::report;
+use cimfab::tensor::Tensor;
+use cimfab::util::cli::Args;
+use cimfab::util::table::{fmt_f, Table};
+use cimfab::xbar::variance;
+
+fn main() {
+    let args = match Args::from_env(&["verbose", "csv"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn driver_opts(args: &Args) -> Result<DriverOpts, String> {
+    Ok(DriverOpts {
+        net: args.get_or("net", "resnet18").to_string(),
+        hw: args.get_usize("hw", 64)?,
+        stats: StatsSource::parse(args.get_or("stats", "synth"))
+            .ok_or_else(|| "bad --stats (synth|golden)".to_string())?,
+        profile_images: args.get_usize("profile-images", 2)?,
+        sim_images: args.get_usize("images", 8)?,
+        seed: args.get_u64("seed", 7)?,
+        artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
+    })
+}
+
+fn run(args: &Args) -> cimfab::Result<()> {
+    match args.subcommand.as_deref() {
+        Some("report") => {
+            let opts = driver_opts(args).map_err(anyhow::Error::msg)?;
+            let d = Driver::prepare(opts)?;
+            println!("{}", d.graph.summary());
+            println!(
+                "mapping: {} CIM layers, {} blocks, {} min arrays, {} min PEs",
+                d.map.grids.len(),
+                d.map.total_blocks(),
+                cimfab::util::table::fmt_int(d.map.min_arrays() as u64),
+                d.min_pes()
+            );
+            Ok(())
+        }
+        Some("profile") => {
+            let opts = driver_opts(args).map_err(anyhow::Error::msg)?;
+            let d = Driver::prepare(opts)?;
+            println!("== Fig 4: layer density vs cycles per array ==");
+            println!("{}", report::fig4_table(&d.map, &d.profile).render());
+            // Fig 6: the layers with 9 and 18 blocks (10 & 15 in the paper)
+            for (l, g) in d.map.grids.iter().enumerate() {
+                if g.blocks_per_copy == 9 || g.blocks_per_copy == 18 {
+                    println!(
+                        "== Fig 6: blocks of layer {} ({}), spread {:.1}% ==",
+                        l,
+                        g.name,
+                        d.profile.layer_block_spread(l) * 100.0
+                    );
+                    println!("{}", report::fig6_table(&d.map, &d.profile, l).render());
+                }
+            }
+            Ok(())
+        }
+        Some("simulate") => {
+            let opts = driver_opts(args).map_err(anyhow::Error::msg)?;
+            let alg = Algorithm::parse(args.get_or("alg", "block-wise"))
+                .ok_or_else(|| anyhow::anyhow!("bad --alg"))?;
+            let d = Driver::prepare(opts)?;
+            let pes = args.get_usize("pes", d.min_pes() * 2).map_err(anyhow::Error::msg)?;
+            let (plan, result) = d.run(alg, pes)?;
+            if args.has_flag("verbose") {
+                println!("{}", plan.summary(&d.map));
+            }
+            println!(
+                "{} @ {pes} PEs: {:.2} inferences/s, chip util {:.1}%, makespan {} cycles, \
+                 NoC peak link util {:.3}",
+                alg.name(),
+                result.throughput_ips,
+                result.chip_util * 100.0,
+                result.makespan,
+                result.noc.peak_link_utilization
+            );
+            Ok(())
+        }
+        Some("sweep") => {
+            let opts = driver_opts(args).map_err(anyhow::Error::msg)?;
+            let steps = args.get_usize("steps", 5).map_err(anyhow::Error::msg)?;
+            let d = Driver::prepare(opts)?;
+            let mut t = report::fig8_table();
+            for pes in d.sweep_sizes(steps) {
+                for (alg, r) in d.run_all(pes)? {
+                    t.row(report::fig8_row(alg, pes, &r));
+                }
+            }
+            if args.has_flag("csv") {
+                println!("{}", t.to_csv());
+            } else {
+                println!("== Fig 8: performance vs design size ==\n{}", t.render());
+            }
+            Ok(())
+        }
+        Some("util") => {
+            let opts = driver_opts(args).map_err(anyhow::Error::msg)?;
+            let d = Driver::prepare(opts)?;
+            let pes = args.get_usize("pes", d.min_pes() * 2).map_err(anyhow::Error::msg)?;
+            let results = d.run_all(pes)?;
+            let with_zs: Vec<(Algorithm, &cimfab::sim::SimResult)> = results
+                .iter()
+                .filter(|(a, _)| a.zero_skip())
+                .map(|(a, r)| (*a, r))
+                .collect();
+            println!("== Fig 9: array utilization by layer @ {pes} PEs ==");
+            println!("{}", report::fig9_table(&d.map, &with_zs).render());
+            println!("== headline speedups ==\n{}", report::speedup_summary(&results).render());
+            Ok(())
+        }
+        Some("golden") => {
+            let opts = driver_opts(args).map_err(anyhow::Error::msg)?;
+            golden_check(&opts)
+        }
+        Some("energy") => {
+            let opts = driver_opts(args).map_err(anyhow::Error::msg)?;
+            let d = Driver::prepare(opts)?;
+            let pes = args.get_usize("pes", d.min_pes() * 2).map_err(anyhow::Error::msg)?;
+            let chip = cimfab::config::ChipCfg::paper(pes);
+            let macs: u64 = d.map.grids.iter().map(|g| g.macs).sum();
+            let mut rows = Vec::new();
+            for alg in Algorithm::all() {
+                let (plan, r) = d.run(alg, pes)?;
+                let e = cimfab::energy::estimate(
+                    &cimfab::energy::EnergyCfg::default(),
+                    &chip,
+                    &d.map,
+                    &plan,
+                    &d.trace,
+                    &r,
+                );
+                rows.push((alg.name().to_string(), e, macs));
+            }
+            println!("== energy per inference @ {pes} PEs (extension; paper §V) ==");
+            println!("{}", cimfab::energy::energy_table(&rows).render());
+            Ok(())
+        }
+        Some("dispatch") => dispatch_demo(args),
+        Some("variance") => {
+            println!("== §III-A: ADC read error vs rows-per-read (5% device variance) ==");
+            let mut t = Table::new(["rows/read", "ADC bits", "error rate", "rel. ADC area"]);
+            for (rows, bits) in [(8usize, 3usize), (16, 4), (32, 5), (64, 6), (128, 7)] {
+                t.row([
+                    rows.to_string(),
+                    bits.to_string(),
+                    format!("{:.2e}", variance::read_error_rate(rows, 0.05)),
+                    fmt_f(cimfab::xbar::adc::Adc::new(bits).relative_area(), 1),
+                ]);
+            }
+            println!("{}", t.render());
+            Ok(())
+        }
+        _ => {
+            eprintln!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+fn golden_check(opts: &DriverOpts) -> cimfab::Result<()> {
+    use cimfab::runtime::{CimKernel, Engine, GoldenModel, Manifest};
+    let manifest = Manifest::load(&opts.artifacts_dir)?;
+    let engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // 1. model forward: activations have the right shapes + logits finite
+    let model = GoldenModel::load(&engine, &manifest, &opts.net)?;
+    let image = GoldenModel::gen_image(model.meta.hw, opts.seed);
+    let (acts, logits) = model.run(&image)?;
+    println!(
+        "{}: {} conv activations, logits[0..4] = {:?}",
+        opts.net,
+        acts.len(),
+        &logits[..4.min(logits.len())]
+    );
+
+    // 2. the Pallas kernel vs the rust SubArray on real activation data
+    let kernel = CimKernel::load(&engine, &manifest)?;
+    let act = &acts[acts.len() / 2];
+    let take = kernel.patches * kernel.rows;
+    let xs: Vec<u8> = act.data().iter().cycle().take(take).copied().collect();
+    let mut rng = cimfab::util::prng::Prng::new(opts.seed);
+    let ws: Vec<i8> = (0..kernel.rows * kernel.cols).map(|_| rng.next_u32() as i8).collect();
+    let got = kernel.matmul(&xs, &ws)?;
+
+    let mut cfg = cimfab::config::ArrayCfg::paper();
+    cfg.cols = kernel.cols * cfg.weight_bits;
+    let sa = cimfab::xbar::SubArray::program(cfg, &ws);
+    let mut want = Vec::with_capacity(got.len());
+    for p in 0..kernel.patches {
+        let (psums, _) = sa.matvec(
+            &xs[p * kernel.rows..(p + 1) * kernel.rows],
+            cimfab::xbar::ReadMode::ZeroSkip,
+        );
+        want.extend(psums);
+    }
+    anyhow::ensure!(got == want, "Pallas kernel != rust SubArray");
+    println!("cim_matmul (Pallas over PJRT) == xbar::SubArray: OK ({} values)", got.len());
+
+    // 3. integer conv cross-check on the first exported layer
+    let meta = &model.meta.conv_layers[1];
+    let act = &acts[1];
+    let mut rng = cimfab::util::prng::Prng::new(opts.seed + 1);
+    let w: Tensor<i8> = Tensor::from_fn(
+        &[meta.out_ch.min(8), meta.in_ch, meta.k, meta.k],
+        |_| rng.next_u32() as i8,
+    );
+    let a = cimfab::tensor::conv_ref::conv2d_i32(act, &w, meta.stride, meta.pad);
+    let b = cimfab::tensor::conv_ref::conv2d_via_im2col(act, &w, meta.stride, meta.pad);
+    anyhow::ensure!(a == b, "conv paths disagree");
+    println!("golden activations drive conv paths consistently: OK");
+    Ok(())
+}
+
+fn dispatch_demo(args: &Args) -> cimfab::Result<()> {
+    use cimfab::coordinator::dispatch::run_conv_blockwise;
+    let seed = args.get_u64("seed", 3).map_err(anyhow::Error::msg)?;
+    let mut rng = cimfab::util::prng::Prng::new(seed);
+    let input: Tensor<u8> = Tensor::from_fn(&[64, 12, 12], |_| (rng.next_u32() as u8) & 0x3F);
+    let weights: Tensor<i8> = Tensor::from_fn(&[32, 64, 3, 3], |_| rng.next_u32() as i8);
+    // 576 rows -> 5 block rows; give the middle blocks extra duplicates
+    let dups = [2usize, 3, 3, 2, 1];
+    let r = run_conv_blockwise(&cimfab::config::ArrayCfg::paper(), &input, &weights, 1, 1, &dups)?;
+    println!(
+        "dispatch: {} items over {} workers, verified = {}",
+        r.items,
+        r.per_worker.len(),
+        r.verified
+    );
+    let mut t = Table::new(["worker", "items", "busy cycles"]);
+    for (i, (&n, &b)) in r.per_worker.iter().zip(&r.busy_cycles).enumerate() {
+        t.row([i.to_string(), n.to_string(), b.to_string()]);
+    }
+    println!("{}", t.render());
+    anyhow::ensure!(r.verified, "dispatch output failed verification");
+    Ok(())
+}
+
+const HELP: &str = "\
+cimfab — compute-in-memory fabric simulator (Breaking Barriers reproduction)
+
+USAGE: cimfab <report|profile|simulate|sweep|util|energy|golden|dispatch|variance> [options]
+
+Common options:
+  --net resnet18|resnet34|vgg11   network (default resnet18)
+  --hw N                   input resolution (default 64; use 32 for golden)
+  --stats synth|golden     activation statistics source (default synth)
+  --pes N                  processing elements on chip
+  --alg baseline|weight-based|perf-based|block-wise
+  --images N               pipelined images per simulation (default 8)
+  --steps N                design sizes in a sweep (default 5)
+  --seed N --csv --verbose --artifacts DIR";

@@ -1,0 +1,235 @@
+//! Layer → array-grid geometry.
+
+use crate::config::ArrayCfg;
+use crate::dnn::Graph;
+
+/// Identifies one block: grid row `row` of CIM layer `layer_idx`'s grid.
+/// (`layer_idx` indexes [`NetworkMap::grids`], not the raw graph.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId {
+    pub layer: usize,
+    pub row: usize,
+}
+
+/// One CIM layer mapped onto an array grid.
+#[derive(Debug, Clone)]
+pub struct LayerGrid {
+    /// Index of the source layer in the graph.
+    pub graph_idx: usize,
+    pub name: String,
+    /// Weight-matrix rows (patch length).
+    pub matrix_rows: usize,
+    /// Weight-matrix cols in 8-bit weights (output channels).
+    pub matrix_cols: usize,
+    /// Grid height: blocks per copy of this layer.
+    pub blocks_per_copy: usize,
+    /// Grid width: arrays per block.
+    pub arrays_per_block: usize,
+    /// Patch vectors per inference.
+    pub positions: usize,
+    /// MACs per inference.
+    pub macs: u64,
+}
+
+impl LayerGrid {
+    /// Arrays in one full copy of the layer.
+    pub fn arrays_per_copy(&self) -> usize {
+        self.blocks_per_copy * self.arrays_per_block
+    }
+
+    /// Word-line rows driven in block `row` (the last block may be
+    /// partial).
+    pub fn rows_in_block(&self, row: usize, cfg: &ArrayCfg) -> usize {
+        assert!(row < self.blocks_per_copy);
+        let start = row * cfg.rows;
+        (self.matrix_rows - start).min(cfg.rows)
+    }
+
+    /// MACs performed by one block for one patch.
+    pub fn macs_per_block_patch(&self, row: usize, cfg: &ArrayCfg) -> u64 {
+        (self.rows_in_block(row, cfg) * self.matrix_cols) as u64
+    }
+}
+
+/// A whole network mapped to array grids.
+#[derive(Debug, Clone)]
+pub struct NetworkMap {
+    pub net_name: String,
+    pub array: ArrayCfg,
+    pub grids: Vec<LayerGrid>,
+    /// Map conv layers only (paper counts; see `dnn::resnet`) or all CIM
+    /// layers including Linear.
+    pub include_linear: bool,
+}
+
+impl NetworkMap {
+    /// Total distinct blocks (paper: 247 for ResNet18 conv stack).
+    pub fn total_blocks(&self) -> usize {
+        self.grids.iter().map(|g| g.blocks_per_copy).sum()
+    }
+
+    /// Minimum arrays to store one copy of every layer (paper: 5,472 for
+    /// ResNet18 conv stack).
+    pub fn min_arrays(&self) -> usize {
+        self.grids.iter().map(|g| g.arrays_per_copy()).sum()
+    }
+
+    /// Flat enumeration of all blocks.
+    pub fn blocks(&self) -> Vec<BlockId> {
+        let mut out = Vec::with_capacity(self.total_blocks());
+        for (l, g) in self.grids.iter().enumerate() {
+            for r in 0..g.blocks_per_copy {
+                out.push(BlockId { layer: l, row: r });
+            }
+        }
+        out
+    }
+
+    /// Global dense index of a block (for counter arrays).
+    pub fn block_index(&self, id: BlockId) -> usize {
+        let mut base = 0;
+        for (l, g) in self.grids.iter().enumerate() {
+            if l == id.layer {
+                assert!(id.row < g.blocks_per_copy);
+                return base + id.row;
+            }
+            base += g.blocks_per_copy;
+        }
+        panic!("layer {} out of range", id.layer);
+    }
+}
+
+/// Map every CIM layer of `graph` onto grids.
+pub fn map_network(graph: &Graph, array: ArrayCfg, include_linear: bool) -> NetworkMap {
+    let mut grids = Vec::new();
+    for (graph_idx, layer) in &graph.cim_layers() {
+        if !include_linear && !matches!(layer.op, crate::dnn::Op::Conv { .. }) {
+            continue;
+        }
+        let (rows, cols) = layer.matrix_dims().expect("cim layer has matrix dims");
+        grids.push(LayerGrid {
+            graph_idx: *graph_idx,
+            name: layer.name.clone(),
+            matrix_rows: rows,
+            matrix_cols: cols,
+            blocks_per_copy: rows.div_ceil(array.rows),
+            arrays_per_block: (cols * array.cells_per_weight()).div_ceil(array.cols),
+            positions: layer.positions(),
+            macs: layer.macs(),
+        });
+    }
+    NetworkMap { net_name: graph.name.clone(), array, grids, include_linear }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::{resnet18, vgg11};
+
+    #[test]
+    fn resnet18_matches_paper_counts() {
+        // §III-B: "ResNet18, where there are 247 blocks";
+        // §V: "the minimum number of arrays (5472)".
+        let map = map_network(&resnet18(224, 1000), ArrayCfg::paper(), false);
+        assert_eq!(map.grids.len(), 20);
+        assert_eq!(map.total_blocks(), 247);
+        assert_eq!(map.min_arrays(), 5472);
+    }
+
+    #[test]
+    fn fig5_layer10_geometry() {
+        // Fig 5: the 3x3x128x128 filter maps to 72 arrays in a 9×8 grid.
+        let map = map_network(&resnet18(224, 1000), ArrayCfg::paper(), false);
+        let g = map
+            .grids
+            .iter()
+            .find(|g| g.matrix_rows == 1152 && g.matrix_cols == 128)
+            .expect("3x3x128x128 layer");
+        assert_eq!(g.blocks_per_copy, 9);
+        assert_eq!(g.arrays_per_block, 8);
+        assert_eq!(g.arrays_per_copy(), 72);
+    }
+
+    #[test]
+    fn fig6_layer15_has_18_blocks() {
+        // Fig 6: layer 15 is 3x3x256x256 → 18 blocks.
+        let map = map_network(&resnet18(224, 1000), ArrayCfg::paper(), false);
+        let g = map
+            .grids
+            .iter()
+            .find(|g| g.matrix_rows == 2304 && g.matrix_cols == 256)
+            .expect("3x3x256x256 layer");
+        assert_eq!(g.blocks_per_copy, 18);
+    }
+
+    #[test]
+    fn partial_last_block_rows() {
+        let map = map_network(&resnet18(224, 1000), ArrayCfg::paper(), false);
+        // conv1: 7*7*3 = 147 rows → blocks of 128 + 19
+        let g = &map.grids[0];
+        assert_eq!(g.matrix_rows, 147);
+        assert_eq!(g.blocks_per_copy, 2);
+        assert_eq!(g.rows_in_block(0, &map.array), 128);
+        assert_eq!(g.rows_in_block(1, &map.array), 19);
+    }
+
+    #[test]
+    fn include_linear_adds_fc() {
+        let with_fc = map_network(&resnet18(224, 1000), ArrayCfg::paper(), true);
+        assert_eq!(with_fc.grids.len(), 21);
+        // fc 512→1000: 4 blocks × ceil(8000/128)=63 arrays
+        let fc = with_fc.grids.last().unwrap();
+        assert_eq!(fc.blocks_per_copy, 4);
+        assert_eq!(fc.arrays_per_block, 63);
+        assert_eq!(with_fc.min_arrays(), 5472 + 4 * 63);
+    }
+
+    #[test]
+    fn no_block_exceeds_pe_capacity() {
+        // §IV: "no block contains 64 sub-arrays"
+        for map in [
+            map_network(&resnet18(224, 1000), ArrayCfg::paper(), false),
+            map_network(&vgg11(32, 10), ArrayCfg::paper(), false),
+        ] {
+            for g in &map.grids {
+                assert!(g.arrays_per_block < 64, "{} block too wide", g.name);
+            }
+        }
+    }
+
+    #[test]
+    fn block_index_is_dense_and_ordered() {
+        let map = map_network(&vgg11(32, 10), ArrayCfg::paper(), false);
+        let blocks = map.blocks();
+        for (i, b) in blocks.iter().enumerate() {
+            assert_eq!(map.block_index(*b), i);
+        }
+        assert_eq!(blocks.len(), map.total_blocks());
+    }
+
+    #[test]
+    fn multilevel_cells_shrink_the_grid() {
+        // 2-bit cells: 4 cells per 8-bit weight → 32 weight columns per
+        // array → half the arrays per block (paper §II's MLC remark).
+        let mut mlc = ArrayCfg::paper();
+        mlc.cell_bits = 2;
+        let map1 = map_network(&resnet18(224, 1000), ArrayCfg::paper(), false);
+        let map2 = map_network(&resnet18(224, 1000), mlc, false);
+        assert_eq!(map2.total_blocks(), map1.total_blocks(), "blocks depend on rows only");
+        assert_eq!(map2.min_arrays(), 2736, "half of the binary-cell 5472");
+        let mlc4 = {
+            let mut c = ArrayCfg::paper();
+            c.cell_bits = 4;
+            c
+        };
+        let map4 = map_network(&resnet18(224, 1000), mlc4, false);
+        assert!(map4.min_arrays() < map2.min_arrays());
+    }
+
+    #[test]
+    fn vgg11_block_count() {
+        let map = map_network(&vgg11(32, 10), ArrayCfg::paper(), false);
+        // 27→1, 576→5, 1152→9, 2304→18, 2304→18, 4608→36, 4608→36, 4608→36
+        assert_eq!(map.total_blocks(), 1 + 5 + 9 + 18 + 18 + 36 + 36 + 36);
+    }
+}

@@ -1,0 +1,16 @@
+//! Mapping DNN layers onto crossbar array grids, blocks, and PEs.
+//!
+//! A CIM layer's weight matrix (`rows = K·K·Cin`, `cols = Cout` 8-bit
+//! weights) is tiled over `128×128` arrays into a grid of
+//! `blocks_per_copy × arrays_per_block` arrays (paper Fig 5). A **block**
+//! is one grid row: the arrays share word lines, operate in lockstep, and
+//! form "our minimal deterministic compute unit" (§III-A). Everything the
+//! allocators and the simulator reason about is derived from this mapping.
+
+pub mod grid;
+pub mod plan;
+pub mod placement;
+
+pub use grid::{map_network, BlockId, LayerGrid, NetworkMap};
+pub use plan::AllocationPlan;
+pub use placement::{place, Placement};

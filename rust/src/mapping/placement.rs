@@ -1,0 +1,119 @@
+//! Physical placement: block instances → PEs.
+//!
+//! Each PE holds `arrays_per_pe` (64) arrays; since no block is wider
+//! than a PE (§IV), each block instance lives wholly inside one PE and
+//! "different blocks share the same virtualized input and output ports".
+//! Placement is greedy first-fit in layer order — the same dense packing
+//! the paper's chip-level configuration implies — and determines each
+//! instance's mesh coordinates for the NoC model.
+
+use super::grid::NetworkMap;
+use super::plan::AllocationPlan;
+use crate::config::ChipCfg;
+
+/// Where every physical block instance lives.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    /// `pe_of[layer][row][dup]` = PE index hosting that instance.
+    pub pe_of: Vec<Vec<Vec<usize>>>,
+    /// Arrays occupied per PE.
+    pub pe_used: Vec<usize>,
+}
+
+impl Placement {
+    /// Overall array-occupancy fraction.
+    pub fn occupancy(&self, chip: &ChipCfg) -> f64 {
+        let used: usize = self.pe_used.iter().sum();
+        used as f64 / chip.total_arrays() as f64
+    }
+}
+
+/// First-fit placement of all block instances.
+pub fn place(map: &NetworkMap, plan: &AllocationPlan, chip: &ChipCfg) -> crate::Result<Placement> {
+    let mut pe_used = vec![0usize; chip.pes];
+    let mut cursor = 0usize; // first PE that might still have space
+    let mut pe_of = Vec::with_capacity(map.grids.len());
+    for (g, dups) in map.grids.iter().zip(&plan.duplicates) {
+        anyhow::ensure!(
+            g.arrays_per_block <= chip.arrays_per_pe,
+            "block of layer '{}' ({} arrays) exceeds PE capacity {}",
+            g.name,
+            g.arrays_per_block,
+            chip.arrays_per_pe
+        );
+        let mut layer_units = Vec::with_capacity(dups.len());
+        for &d in dups {
+            let mut instances = Vec::with_capacity(d);
+            for _ in 0..d {
+                // first-fit from cursor
+                let mut pe = cursor;
+                while pe < chip.pes && pe_used[pe] + g.arrays_per_block > chip.arrays_per_pe {
+                    pe += 1;
+                }
+                anyhow::ensure!(
+                    pe < chip.pes,
+                    "placement overflow: plan needs more arrays than chip has ({} PEs)",
+                    chip.pes
+                );
+                pe_used[pe] += g.arrays_per_block;
+                if pe_used[pe] == chip.arrays_per_pe && pe == cursor {
+                    cursor += 1;
+                }
+                instances.push(pe);
+            }
+            layer_units.push(instances);
+        }
+        pe_of.push(layer_units);
+    }
+    Ok(Placement { pe_of, pe_used })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArrayCfg;
+    use crate::dnn::resnet18;
+    use crate::mapping::grid::map_network;
+
+    #[test]
+    fn minimal_resnet_fits_86_pes() {
+        // paper §V: 86 PEs hold the 5,472 minimum arrays
+        let map = map_network(&resnet18(64, 1000), ArrayCfg::paper(), false);
+        let plan = AllocationPlan::minimal(&map);
+        let chip = ChipCfg::paper(86);
+        let p = place(&map, &plan, &chip).unwrap();
+        let used: usize = p.pe_used.iter().sum();
+        assert_eq!(used, 5472);
+        assert!(p.occupancy(&chip) > 0.99 * 5472.0 / 5504.0);
+    }
+
+    #[test]
+    fn too_small_chip_fails() {
+        let map = map_network(&resnet18(64, 1000), ArrayCfg::paper(), false);
+        let plan = AllocationPlan::minimal(&map);
+        let chip = ChipCfg::paper(50);
+        assert!(place(&map, &plan, &chip).is_err());
+    }
+
+    #[test]
+    fn every_instance_is_placed_within_capacity() {
+        let map = map_network(&resnet18(64, 1000), ArrayCfg::paper(), false);
+        let mut plan = AllocationPlan::minimal(&map);
+        // add some duplicates
+        for l in 0..plan.duplicates.len() {
+            for r in 0..plan.duplicates[l].len() {
+                plan.duplicates[l][r] = 1 + (l + r) % 3;
+            }
+        }
+        let chip = ChipCfg::paper(300);
+        let p = place(&map, &plan, &chip).unwrap();
+        for (l, layer) in p.pe_of.iter().enumerate() {
+            for (r, dups) in layer.iter().enumerate() {
+                assert_eq!(dups.len(), plan.duplicates[l][r]);
+            }
+        }
+        for &u in &p.pe_used {
+            assert!(u <= chip.arrays_per_pe);
+        }
+    }
+}

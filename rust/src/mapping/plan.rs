@@ -1,0 +1,144 @@
+//! Allocation plans: how many physical copies each block gets.
+
+use super::grid::NetworkMap;
+
+/// The output of every allocator: per-layer, per-block duplicate counts.
+///
+/// Layer-wise allocators produce uniform counts within a layer (whole-layer
+/// copies); block-wise allocation varies counts per block. The simulator
+/// treats both uniformly: block (l, r) exists in `duplicates[l][r]`
+/// physical instances.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AllocationPlan {
+    pub algorithm: String,
+    /// `duplicates[layer][row]` ≥ 1.
+    pub duplicates: Vec<Vec<usize>>,
+}
+
+impl AllocationPlan {
+    /// The minimal plan: one copy of everything.
+    pub fn minimal(map: &NetworkMap) -> AllocationPlan {
+        AllocationPlan {
+            algorithm: "minimal".into(),
+            duplicates: map.grids.iter().map(|g| vec![1; g.blocks_per_copy]).collect(),
+        }
+    }
+
+    /// Total arrays consumed under `map`'s geometry.
+    pub fn arrays_used(&self, map: &NetworkMap) -> usize {
+        self.duplicates
+            .iter()
+            .zip(&map.grids)
+            .map(|(dups, g)| dups.iter().sum::<usize>() * g.arrays_per_block)
+            .sum()
+    }
+
+    /// Whole-layer copy count (min over blocks) — meaningful for
+    /// layer-wise plans where all blocks of a layer match.
+    pub fn layer_duplicates(&self, layer: usize) -> usize {
+        self.duplicates[layer].iter().copied().min().unwrap_or(0)
+    }
+
+    /// Is this plan uniform within every layer (i.e. layer-wise)?
+    pub fn is_layerwise(&self) -> bool {
+        self.duplicates
+            .iter()
+            .all(|d| d.iter().all(|&x| x == d[0]))
+    }
+
+    /// Validate invariants: every block ≥ 1 copy; fits the array budget.
+    pub fn validate(&self, map: &NetworkMap, budget_arrays: usize) -> Result<(), String> {
+        if self.duplicates.len() != map.grids.len() {
+            return Err(format!(
+                "plan covers {} layers, map has {}",
+                self.duplicates.len(),
+                map.grids.len()
+            ));
+        }
+        for (l, (dups, g)) in self.duplicates.iter().zip(&map.grids).enumerate() {
+            if dups.len() != g.blocks_per_copy {
+                return Err(format!(
+                    "layer {l} plan has {} blocks, grid has {}",
+                    dups.len(),
+                    g.blocks_per_copy
+                ));
+            }
+            if dups.iter().any(|&d| d == 0) {
+                return Err(format!("layer {l} has a block with zero copies"));
+            }
+        }
+        let used = self.arrays_used(map);
+        if used > budget_arrays {
+            return Err(format!("plan uses {used} arrays > budget {budget_arrays}"));
+        }
+        Ok(())
+    }
+
+    /// Summary table for reports.
+    pub fn summary(&self, map: &NetworkMap) -> String {
+        let mut t = crate::util::table::Table::new([
+            "layer", "blocks", "arr/blk", "dup(min)", "dup(max)", "arrays",
+        ]);
+        for (dups, g) in self.duplicates.iter().zip(&map.grids) {
+            t.row([
+                g.name.clone(),
+                g.blocks_per_copy.to_string(),
+                g.arrays_per_block.to_string(),
+                dups.iter().min().unwrap().to_string(),
+                dups.iter().max().unwrap().to_string(),
+                (dups.iter().sum::<usize>() * g.arrays_per_block).to_string(),
+            ]);
+        }
+        format!(
+            "plan '{}': {} arrays total\n{}",
+            self.algorithm,
+            crate::util::table::fmt_int(self.arrays_used(map) as u64),
+            t.render()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArrayCfg;
+    use crate::dnn::resnet18;
+    use crate::mapping::grid::map_network;
+
+    fn rn18_map() -> NetworkMap {
+        map_network(&resnet18(224, 1000), ArrayCfg::paper(), false)
+    }
+
+    #[test]
+    fn minimal_plan_uses_min_arrays() {
+        let map = rn18_map();
+        let plan = AllocationPlan::minimal(&map);
+        assert_eq!(plan.arrays_used(&map), map.min_arrays());
+        plan.validate(&map, map.min_arrays()).unwrap();
+        assert!(plan.is_layerwise());
+    }
+
+    #[test]
+    fn validate_rejects_overbudget() {
+        let map = rn18_map();
+        let plan = AllocationPlan::minimal(&map);
+        assert!(plan.validate(&map, map.min_arrays() - 1).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_copies() {
+        let map = rn18_map();
+        let mut plan = AllocationPlan::minimal(&map);
+        plan.duplicates[3][0] = 0;
+        assert!(plan.validate(&map, 100_000).is_err());
+    }
+
+    #[test]
+    fn blockwise_plan_detected() {
+        let map = rn18_map();
+        let mut plan = AllocationPlan::minimal(&map);
+        plan.duplicates[5][2] = 3;
+        assert!(!plan.is_layerwise());
+        assert_eq!(plan.layer_duplicates(5), 1);
+    }
+}

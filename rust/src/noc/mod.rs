@@ -1,0 +1,21 @@
+//! 2-D mesh network-on-chip model (paper Fig 7).
+//!
+//! One router per PE in an N×N mesh; the global input-feature buffer
+//! attaches at the west edge, vector units (accumulate + bias + quantize
+//! + ReLU) at the east edge, one per mesh row. Input features are routed
+//! global-buffer → PE; partial sums PE → vector unit (§IV, packetized
+//! with destination-accumulator addresses).
+//!
+//! Fidelity: XY wormhole routing with deterministic per-packet latency
+//! (`router_latency × hops + serialization`), plus aggregate per-link
+//! byte-hop accounting to report link utilization. Flit-level contention
+//! is *not* simulated — the compute:transfer cycle ratio at the paper's
+//! operating point (≥64 compute cycles per 4-cycle packet) keeps links
+//! far from saturation; the reported [`mesh::NocStats`] peak link
+//! utilization verifies that assumption every run (DESIGN.md §3).
+
+pub mod mesh;
+pub mod packet;
+
+pub use mesh::{Mesh, Node, NocStats};
+pub use packet::{Packet, PacketKind};

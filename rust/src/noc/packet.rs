@@ -1,0 +1,86 @@
+//! Packet format for the block-wise dataflow (paper §III-C).
+//!
+//! "We include output feature destination addresses in the packet
+//! containing data when sending input features to each block. Upon
+//! completing a partial dot product, a block sends their computed partial
+//! sums to the designated accumulator and requests additional work from
+//! the memory controller."
+
+use super::mesh::Node;
+
+/// What a packet carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PacketKind {
+    /// Input-feature slice for one (patch, block-row) work item.
+    InputFeature {
+        layer: usize,
+        patch: usize,
+        block_row: usize,
+    },
+    /// Partial sums headed for an accumulator (vector unit).
+    PartialSum {
+        layer: usize,
+        patch: usize,
+        block_row: usize,
+    },
+    /// Work request from a finished block back to the memory controller.
+    WorkRequest { layer: usize, block_row: usize },
+}
+
+/// A routed packet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Packet {
+    pub kind: PacketKind,
+    pub src: Node,
+    pub dst: Node,
+    pub bytes: usize,
+    /// Destination-accumulator id carried in the header (§III-C): which
+    /// vector unit slot accumulates this patch's partial sums.
+    pub accumulator: usize,
+}
+
+impl Packet {
+    pub fn input(layer: usize, patch: usize, block_row: usize, dst: Node, bytes: usize, accumulator: usize) -> Packet {
+        Packet {
+            kind: PacketKind::InputFeature { layer, patch, block_row },
+            src: Node::GlobalBuffer,
+            dst,
+            bytes,
+            accumulator,
+        }
+    }
+
+    pub fn psum(layer: usize, patch: usize, block_row: usize, src: Node, accumulator: usize, bytes: usize) -> Packet {
+        Packet {
+            kind: PacketKind::PartialSum { layer, patch, block_row },
+            src,
+            dst: Node::VectorUnit(accumulator),
+            bytes,
+            accumulator,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn input_packet_carries_destination_accumulator() {
+        let p = Packet::input(3, 17, 2, Node::Pe(5), 128, 4);
+        assert_eq!(p.accumulator, 4);
+        assert_eq!(p.dst, Node::Pe(5));
+        match p.kind {
+            PacketKind::InputFeature { layer, patch, block_row } => {
+                assert_eq!((layer, patch, block_row), (3, 17, 2));
+            }
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn psum_routes_to_vector_unit() {
+        let p = Packet::psum(3, 17, 2, Node::Pe(5), 1, 64);
+        assert_eq!(p.dst, Node::VectorUnit(1));
+    }
+}

@@ -1,0 +1,132 @@
+//! Figure/table regeneration helpers shared by benches, examples and the
+//! CLI `report` command. Each function renders one paper artifact from
+//! simulation results (numbers will match the paper in *shape*, not
+//! absolutely — see DESIGN.md §7).
+
+use crate::alloc::Algorithm;
+use crate::mapping::NetworkMap;
+use crate::sim::SimResult;
+use crate::stats::NetworkProfile;
+use crate::util::table::{fmt_f, Table};
+
+/// Fig 4: per-layer mean '% of 1s' vs mean cycles per array.
+pub fn fig4_table(map: &NetworkMap, prof: &NetworkProfile) -> Table {
+    let mut t = Table::new(["layer", "%1s", "cycles/array"]);
+    for (l, g) in map.grids.iter().enumerate() {
+        t.row([
+            g.name.clone(),
+            fmt_f(prof.layer_density[l] * 100.0, 2),
+            fmt_f(prof.layer_mean_block_cycles[l], 1),
+        ]);
+    }
+    t
+}
+
+/// Fig 6: per-block '% of 1s' vs mean cycles for one layer.
+pub fn fig6_table(map: &NetworkMap, prof: &NetworkProfile, layer: usize) -> Table {
+    let mut t = Table::new(["block", "%1s", "cycles"]);
+    let g = &map.grids[layer];
+    for r in 0..g.blocks_per_copy {
+        t.row([
+            format!("{}[{}]", g.name, r),
+            fmt_f(prof.block_density[layer][r] * 100.0, 2),
+            fmt_f(prof.block_cycles[layer][r] / g.positions.max(1) as f64, 1),
+        ]);
+    }
+    t
+}
+
+/// One Fig 8 series: performance vs design size for one algorithm.
+pub fn fig8_row(alg: Algorithm, pes: usize, result: &SimResult) -> Vec<String> {
+    vec![
+        alg.name().to_string(),
+        pes.to_string(),
+        fmt_f(result.throughput_ips, 2),
+        fmt_f(result.chip_util * 100.0, 1),
+    ]
+}
+
+/// Fig 8 table skeleton.
+pub fn fig8_table() -> Table {
+    Table::new(["algorithm", "PEs", "inferences/s", "chip util %"])
+}
+
+/// Fig 9: per-layer utilization for a set of algorithm results.
+pub fn fig9_table(map: &NetworkMap, results: &[(Algorithm, &SimResult)]) -> Table {
+    let mut header = vec!["layer".to_string()];
+    header.extend(results.iter().map(|(a, _)| a.name().to_string()));
+    let mut t = Table::new(header);
+    for (l, g) in map.grids.iter().enumerate() {
+        let mut row = vec![g.name.clone()];
+        for (_, r) in results {
+            row.push(fmt_f(r.layer_util[l] * 100.0, 1));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Throughput speedup summary (the paper's headline numbers).
+pub fn speedup_summary(results: &[(Algorithm, SimResult)]) -> Table {
+    let mut t = Table::new(["algorithm", "inferences/s", "vs baseline", "vs weight", "vs perf"]);
+    let find = |alg: Algorithm| results.iter().find(|(a, _)| *a == alg).map(|(_, r)| r);
+    for (alg, r) in results {
+        let rel = |other: Option<&SimResult>| match other {
+            Some(o) if o.throughput_ips > 0.0 => {
+                fmt_f(r.throughput_ips / o.throughput_ips, 2)
+            }
+            _ => "-".to_string(),
+        };
+        t.row([
+            alg.name().to_string(),
+            fmt_f(r.throughput_ips, 2),
+            rel(find(Algorithm::Baseline)),
+            rel(find(Algorithm::WeightBased)),
+            rel(find(Algorithm::PerfBased)),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::NocStats;
+
+    fn dummy_result(ips: f64) -> SimResult {
+        SimResult {
+            makespan: 1000,
+            images: 4,
+            throughput_ips: ips,
+            stage_cycles: vec![100.0, 200.0],
+            layer_util: vec![0.9, 0.5],
+            block_util: vec![vec![0.9], vec![0.5]],
+            chip_util: 0.7,
+            noc: NocStats {
+                packets: 10,
+                byte_hops: 100,
+                mean_link_utilization: 0.01,
+                peak_link_utilization: 0.05,
+            },
+        }
+    }
+
+    #[test]
+    fn speedup_summary_computes_ratios() {
+        let results = vec![
+            (Algorithm::Baseline, dummy_result(10.0)),
+            (Algorithm::BlockWise, dummy_result(74.7)),
+        ];
+        let t = speedup_summary(&results);
+        let rendered = t.render();
+        assert!(rendered.contains("7.47"), "{rendered}");
+    }
+
+    #[test]
+    fn fig8_row_formats() {
+        let r = dummy_result(42.0);
+        let row = fig8_row(Algorithm::BlockWise, 86, &r);
+        assert_eq!(row[0], "block-wise");
+        assert_eq!(row[1], "86");
+    }
+}

@@ -1,0 +1,209 @@
+//! Artifact manifest (`artifacts/manifest.json`) parsing.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// One conv layer as exported by the L2 model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvMeta {
+    pub name: String,
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+/// One weight tensor's slot in the flat buffer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WeightSlot {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+/// One exported model.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub hlo: String,
+    pub weights: String,
+    pub weight_bytes: usize,
+    pub hw: usize,
+    pub seed: usize,
+    pub num_classes: usize,
+    pub conv_layers: Vec<ConvMeta>,
+    pub weight_layout: Vec<WeightSlot>,
+}
+
+/// One exported kernel.
+#[derive(Debug, Clone)]
+pub struct KernelMeta {
+    pub hlo: String,
+    pub patches: usize,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: String,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub kernels: BTreeMap<String, KernelMeta>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        anyhow::ensure!(
+            j.get("schema").as_usize() == Some(1),
+            "unsupported manifest schema {:?}",
+            j.get("schema")
+        );
+        let mut models = BTreeMap::new();
+        if let Some(obj) = j.get("models").as_obj() {
+            for (name, m) in obj {
+                models.insert(name.clone(), parse_model(m)?);
+            }
+        }
+        let mut kernels = BTreeMap::new();
+        if let Some(obj) = j.get("kernels").as_obj() {
+            for (name, k) in obj {
+                kernels.insert(
+                    name.clone(),
+                    KernelMeta {
+                        hlo: req_str(k, "hlo")?,
+                        patches: k.get("patches").as_usize().unwrap_or(0),
+                        rows: k.get("rows").as_usize().unwrap_or(0),
+                        cols: k.get("cols").as_usize().unwrap_or(0),
+                    },
+                );
+            }
+        }
+        Ok(Manifest { dir: dir.to_string(), models, kernels })
+    }
+
+    pub fn model(&self, net: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(net)
+            .ok_or_else(|| anyhow::anyhow!("model '{net}' not in manifest ({:?})", self.models.keys()))
+    }
+
+    pub fn kernel(&self, name: &str) -> Result<&KernelMeta> {
+        self.kernels
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("kernel '{name}' not in manifest"))
+    }
+
+    pub fn path_of(&self, file: &str) -> String {
+        format!("{}/{}", self.dir, file)
+    }
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    j.get(key)
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| anyhow::anyhow!("manifest missing string '{key}'"))
+}
+
+fn parse_model(m: &Json) -> Result<ModelMeta> {
+    let conv_layers = m
+        .get("conv_layers")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .map(|c| {
+            Ok(ConvMeta {
+                name: req_str(c, "name")?,
+                in_ch: c.get("in_ch").as_usize().unwrap_or(0),
+                out_ch: c.get("out_ch").as_usize().unwrap_or(0),
+                k: c.get("k").as_usize().unwrap_or(0),
+                stride: c.get("stride").as_usize().unwrap_or(1),
+                pad: c.get("pad").as_usize().unwrap_or(0),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let weight_layout = m
+        .get("weight_layout")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .map(|s| {
+            Ok(WeightSlot {
+                name: req_str(s, "name")?,
+                offset: s.get("offset").as_usize().unwrap_or(0),
+                shape: s
+                    .get("shape")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|d| d.as_usize())
+                    .collect(),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ModelMeta {
+        hlo: req_str(m, "hlo")?,
+        weights: req_str(m, "weights")?,
+        weight_bytes: m.get("weight_bytes").as_usize().unwrap_or(0),
+        hw: m.get("hw").as_usize().unwrap_or(32),
+        seed: m.get("seed").as_usize().unwrap_or(0),
+        num_classes: m.get("num_classes").as_usize().unwrap_or(10),
+        conv_layers,
+        weight_layout,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("cimfab_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let doc = r#"{
+            "schema": 1,
+            "models": {"vgg11": {
+                "hlo": "vgg11_stats.hlo.txt", "weights": "w.bin",
+                "weight_bytes": 100, "hw": 32, "seed": 1, "num_classes": 10,
+                "conv_layers": [{"name": "conv1", "in_ch": 3, "out_ch": 64,
+                                  "k": 3, "stride": 1, "pad": 1}],
+                "weight_layout": [{"name": "conv1", "offset": 0, "shape": [27, 64]}],
+                "outputs": ["act:conv1", "logits"]
+            }},
+            "kernels": {"cim_matmul": {"hlo": "k.hlo.txt", "patches": 16,
+                                        "rows": 128, "cols": 16, "adc_bits": 3}}
+        }"#;
+        std::fs::write(dir.join("manifest.json"), doc).unwrap();
+        let m = Manifest::load(dir.to_str().unwrap()).unwrap();
+        let vgg = m.model("vgg11").unwrap();
+        assert_eq!(vgg.conv_layers.len(), 1);
+        assert_eq!(vgg.conv_layers[0].out_ch, 64);
+        assert_eq!(vgg.weight_layout[0].shape, vec![27, 64]);
+        assert_eq!(m.kernel("cim_matmul").unwrap().rows, 128);
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful_error() {
+        let err = Manifest::load("/nonexistent/dir").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // When `make artifacts` has run, validate the real file too.
+        if let Ok(m) = Manifest::load("artifacts") {
+            let rn = m.model("resnet18").unwrap();
+            assert_eq!(rn.conv_layers.len(), 20);
+            assert!(m.kernel("cim_matmul").is_ok());
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Golden model + kernel execution over PJRT.
+
+use super::artifacts::{Manifest, ModelMeta};
+use super::pjrt::{literal_dims, literal_f32, literal_i32, literal_i8, Engine, Module};
+use crate::tensor::Tensor;
+use crate::util::prng::Prng;
+use anyhow::{Context, Result};
+
+/// The AOT-exported quantized network, executable from Rust.
+///
+/// Outputs per run: the u8 input activations of every conv layer (the
+/// word-line data for trace building) and the f32 logits.
+pub struct GoldenModel {
+    module: Module,
+    weights: Vec<i8>,
+    pub meta: ModelMeta,
+    pub net: String,
+}
+
+impl GoldenModel {
+    pub fn load(engine: &Engine, manifest: &Manifest, net: &str) -> Result<GoldenModel> {
+        let meta = manifest.model(net)?.clone();
+        let module = engine.load_hlo_text(&manifest.path_of(&meta.hlo))?;
+        let wpath = manifest.path_of(&meta.weights);
+        let bytes = std::fs::read(&wpath).with_context(|| format!("reading {wpath}"))?;
+        anyhow::ensure!(bytes.len() == meta.weight_bytes, "weight file size mismatch");
+        let weights: Vec<i8> = bytes.iter().map(|&b| b as i8).collect();
+        Ok(GoldenModel { module, weights, meta, net: net.to_string() })
+    }
+
+    /// Forward pass: `(conv input activations, logits)`.
+    pub fn run(&self, image: &Tensor<f32>) -> Result<(Vec<Tensor<u8>>, Vec<f32>)> {
+        let hw = self.meta.hw;
+        anyhow::ensure!(
+            image.shape() == [3, hw, hw],
+            "image shape {:?}, model wants [3, {hw}, {hw}]",
+            image.shape()
+        );
+        let img_lit = literal_f32(image.data(), &[3, hw as i64, hw as i64])?;
+        let w_lit = literal_i8(&self.weights, &[self.weights.len() as i64])?;
+        let outs = self.module.execute(&[img_lit, w_lit])?;
+        anyhow::ensure!(
+            outs.len() == self.meta.conv_layers.len() + 1,
+            "expected {} outputs, got {}",
+            self.meta.conv_layers.len() + 1,
+            outs.len()
+        );
+        let mut acts = Vec::with_capacity(self.meta.conv_layers.len());
+        for lit in &outs[..outs.len() - 1] {
+            let dims = literal_dims(lit)?;
+            let data: Vec<u8> = lit.to_vec::<u8>()?;
+            acts.push(Tensor::from_vec(&dims, data));
+        }
+        let logits = outs.last().unwrap().to_vec::<f32>()?;
+        Ok((acts, logits))
+    }
+
+    /// Synthetic input image (smoothed uniform pixels, [0,255]).
+    pub fn gen_image(hw: usize, seed: u64) -> Tensor<f32> {
+        let mut rng = Prng::new(seed);
+        let mut data = vec![0f32; 3 * hw * hw];
+        for c in 0..3 {
+            let mut prev = rng.f32() * 255.0;
+            for i in 0..hw * hw {
+                let fresh = rng.f32() * 255.0;
+                prev = (prev * 3.0 + fresh) / 4.0;
+                data[c * hw * hw + i] = prev;
+            }
+        }
+        Tensor::from_vec(&[3, hw, hw], data)
+    }
+
+    /// Run `n` synthetic images and collect per-image activation sets —
+    /// the profiling pass that feeds [`crate::stats::trace_from_activations`].
+    pub fn profile(&self, n: usize, seed: u64) -> Result<Vec<Vec<Tensor<u8>>>> {
+        (0..n)
+            .map(|i| Ok(self.run(&Self::gen_image(self.meta.hw, seed + i as u64))?.0))
+            .collect()
+    }
+}
+
+/// The L1 Pallas crossbar kernel, executable from Rust. Fixed shapes per
+/// the manifest (one 128×16 sub-array, 16-patch tile by default).
+pub struct CimKernel {
+    module: Module,
+    pub patches: usize,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl CimKernel {
+    pub fn load(engine: &Engine, manifest: &Manifest) -> Result<CimKernel> {
+        let meta = manifest.kernel("cim_matmul")?;
+        let module = engine.load_hlo_text(&manifest.path_of(&meta.hlo))?;
+        Ok(CimKernel { module, patches: meta.patches, rows: meta.rows, cols: meta.cols })
+    }
+
+    /// Execute: `x` is `patches × rows` u8 activations, `w` is
+    /// `rows × cols` i8 weights. Returns i32 `patches × cols`.
+    pub fn matmul(&self, x: &[u8], w: &[i8]) -> Result<Vec<i32>> {
+        anyhow::ensure!(x.len() == self.patches * self.rows, "x length mismatch");
+        anyhow::ensure!(w.len() == self.rows * self.cols, "w length mismatch");
+        let xi: Vec<i32> = x.iter().map(|&v| v as i32).collect();
+        // weight bit planes, two's complement (mirrors ref.weight_planes)
+        let mut planes = vec![0i32; 8 * self.rows * self.cols];
+        for (i, &wv) in w.iter().enumerate() {
+            let u = wv as u8;
+            for b in 0..8 {
+                planes[b * self.rows * self.cols + i] = ((u >> b) & 1) as i32;
+            }
+        }
+        let x_lit = literal_i32(&xi, &[self.patches as i64, self.rows as i64])?;
+        let w_lit = literal_i32(&planes, &[8, self.rows as i64, self.cols as i64])?;
+        let outs = self.module.execute(&[x_lit, w_lit])?;
+        Ok(outs[0].to_vec::<i32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_image_is_pixel_like() {
+        let img = GoldenModel::gen_image(16, 4);
+        assert_eq!(img.shape(), &[3, 16, 16]);
+        let mean: f32 = img.data().iter().sum::<f32>() / img.len() as f32;
+        assert!((60.0..200.0).contains(&mean), "mean {mean}");
+        assert!(img.data().iter().all(|&v| (0.0..=255.0).contains(&v)));
+    }
+
+    #[test]
+    fn gen_image_deterministic() {
+        assert_eq!(GoldenModel::gen_image(8, 1).data(), GoldenModel::gen_image(8, 1).data());
+        assert_ne!(GoldenModel::gen_image(8, 1).data(), GoldenModel::gen_image(8, 2).data());
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: load and execute the AOT artifacts from Rust.
+//!
+//! The build-time Python step (`make artifacts`) lowers the L2 quantized
+//! models and L1 Pallas kernels to HLO **text** (see
+//! `python/compile/aot.py` for why text, not serialized protos). This
+//! module is the request-path half: [`pjrt::Engine`] wraps the `xla`
+//! crate's PJRT CPU client; [`artifacts::Manifest`] describes what was
+//! exported; [`golden::GoldenModel`] runs the quantized network forward
+//! to (a) produce the *real* activation statistics that drive
+//! allocation and (b) serve as the functional golden reference the
+//! simulator is validated against; [`golden::CimKernel`] executes the
+//! Pallas crossbar kernel itself.
+
+pub mod pjrt;
+pub mod artifacts;
+pub mod golden;
+
+pub use artifacts::Manifest;
+pub use golden::{CimKernel, GoldenModel};
+pub use pjrt::{Engine, Module};

@@ -1,0 +1,92 @@
+//! Thin wrapper over the `xla` crate's PJRT client.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. All exported computations are lowered
+//! with `return_tuple=True`, so outputs always decompose into a tuple.
+
+use anyhow::{Context, Result};
+
+/// A live PJRT client. One per process is plenty; compiled [`Module`]s
+/// keep it alive through reference counting inside the C++ layer, but we
+/// keep the struct around for clarity.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// CPU PJRT client (the only backend in this environment; TPU
+    /// artifacts would need the Mosaic-capable plugin — see DESIGN.md).
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load_hlo_text(&self, path: &str) -> Result<Module> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path}"))?;
+        Ok(Module { exe, path: path.to_string() })
+    }
+}
+
+/// One compiled executable.
+pub struct Module {
+    exe: xla::PjRtLoadedExecutable,
+    path: String,
+}
+
+impl Module {
+    /// Execute with literal arguments; returns the decomposed output
+    /// tuple.
+    pub fn execute(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.path))?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True
+        Ok(result.to_tuple()?)
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+}
+
+/// Build an f32 literal from a flat buffer + dims.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i8 literal from a flat buffer + dims. (`i8` has no
+/// `NativeType` impl in xla 0.1.6, so go through the untyped-data path.)
+pub fn literal_i8(data: &[i8], dims: &[i64]) -> Result<xla::Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+    let dims_usize: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S8,
+        &dims_usize,
+        bytes,
+    )?)
+}
+
+/// Build an i32 literal from a flat buffer + dims.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Read a literal's array dims as usizes.
+pub fn literal_dims(lit: &xla::Literal) -> Result<Vec<usize>> {
+    Ok(lit.array_shape()?.dims().iter().map(|&d| d as usize).collect())
+}

@@ -1,0 +1,134 @@
+//! Layer pipelining (paper §II): inter-stage schedule composition.
+//!
+//! "Images are pipelined through the network to keep all arrays utilized.
+//! Although this compromises single example latency, it maintains maximum
+//! throughput." Each stage (layer) holds one image at a time and a single
+//! output buffer: stage `l` can begin image `i` once (a) it finished
+//! image `i−1`, (b) stage `l−1` delivered image `i`, and (c) its output
+//! buffer was drained — i.e. stage `l+1` began image `i−1`. Term (c) is
+//! the backpressure that makes consistently-fast layers "stall because
+//! layers downstream will not be able to buffer [their] outputs" (§III-A).
+
+/// Start/end schedule of every (image, layer) plus the makespan.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// `begin[i][l]`, `end[i][l]` in cycles.
+    pub begin: Vec<Vec<u64>>,
+    pub end: Vec<Vec<u64>>,
+    pub makespan: u64,
+}
+
+/// Compose per-stage processing times `t[i][l]` into the pipeline
+/// schedule.
+pub fn schedule(t: &[Vec<u64>]) -> Schedule {
+    let images = t.len();
+    assert!(images > 0);
+    let layers = t[0].len();
+    let mut begin = vec![vec![0u64; layers]; images];
+    let mut end = vec![vec![0u64; layers]; images];
+    for i in 0..images {
+        for l in 0..layers {
+            let own_prev = if i > 0 { end[i - 1][l] } else { 0 };
+            let upstream = if l > 0 { end[i][l - 1] } else { 0 };
+            // backpressure: our output buffer for image i-1 frees when
+            // the downstream stage begins it
+            let drain = if i > 0 && l + 1 < layers { begin[i - 1][l + 1] } else { 0 };
+            begin[i][l] = own_prev.max(upstream).max(drain);
+            end[i][l] = begin[i][l] + t[i][l];
+        }
+    }
+    let makespan = end[images - 1][layers - 1];
+    Schedule { begin, end, makespan }
+}
+
+/// Steady-state initiation interval (cycle distance between consecutive
+/// image completions at the last stage), measured over the tail half.
+pub fn steady_interval(s: &Schedule) -> f64 {
+    let images = s.end.len();
+    let last = s.end[0].len() - 1;
+    if images < 2 {
+        return s.makespan as f64;
+    }
+    let mid = images / 2;
+    (s.end[images - 1][last] - s.end[mid - 1][last]) as f64 / (images - mid) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+    use crate::util::propcheck;
+
+    #[test]
+    fn single_stage_serializes_images() {
+        let t = vec![vec![10], vec![10], vec![10]];
+        let s = schedule(&t);
+        assert_eq!(s.makespan, 30);
+        assert_eq!(s.begin[2][0], 20);
+    }
+
+    #[test]
+    fn balanced_pipeline_throughput_is_stage_time() {
+        // 3 stages of 10 cycles, 10 images: interval → 10
+        let t: Vec<Vec<u64>> = (0..10).map(|_| vec![10, 10, 10]).collect();
+        let s = schedule(&t);
+        assert_eq!(s.makespan, 10 * 3 + 9 * 10);
+        assert!((steady_interval(&s) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bottleneck_stage_dominates() {
+        // middle stage 3x slower → interval = 30
+        let t: Vec<Vec<u64>> = (0..12).map(|_| vec![10, 30, 10]).collect();
+        let s = schedule(&t);
+        assert!((steady_interval(&s) - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fast_upstream_stalls_on_backpressure() {
+        // stage 0 fast, stage 1 slow: stage 0 cannot run ahead more than
+        // one buffered image
+        let t: Vec<Vec<u64>> = (0..6).map(|_| vec![1, 100]).collect();
+        let s = schedule(&t);
+        for i in 2..6 {
+            // begin of image i at stage 0 is gated by stage 1's progress
+            assert!(
+                s.begin[i][0] >= s.begin[i - 1][1],
+                "image {i} began {} before downstream drain {}",
+                s.begin[i][0],
+                s.begin[i - 1][1]
+            );
+        }
+    }
+
+    #[test]
+    fn schedule_is_causal_and_monotone() {
+        propcheck::check("pipeline causality", 0xCAFE, 100, |rng| {
+            let images = 2 + rng.index(6);
+            let layers = 1 + rng.index(6);
+            let t: Vec<Vec<u64>> = (0..images)
+                .map(|_| (0..layers).map(|_| 1 + rng.below(100)).collect())
+                .collect();
+            let s = schedule(&t);
+            for i in 0..images {
+                for l in 0..layers {
+                    crate::prop_assert!(s.end[i][l] == s.begin[i][l] + t[i][l], "duration mismatch");
+                    if l > 0 {
+                        crate::prop_assert!(
+                            s.begin[i][l] >= s.end[i][l - 1],
+                            "image {i} started layer {l} before layer {}",
+                            l - 1
+                        );
+                    }
+                    if i > 0 {
+                        crate::prop_assert!(s.begin[i][l] >= s.end[i - 1][l], "stage overlap");
+                    }
+                }
+            }
+            // makespan ≥ critical path lower bounds
+            let path0: u64 = (0..layers).map(|l| t[0][l]).sum();
+            crate::prop_assert!(s.makespan >= path0, "makespan below first-image path");
+            Ok(())
+        });
+    }
+}

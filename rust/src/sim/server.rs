@@ -1,0 +1,132 @@
+//! Event-driven server pool: the simulator's scheduling core.
+//!
+//! A pool models the physical duplicates of one block: each work item
+//! (one patch's partial dot product) goes to the earliest-free instance.
+//! A min-heap over instance free-times gives O(log D) per item and exact
+//! completion times.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// A pool of `d` identical servers (block duplicates).
+#[derive(Debug, Clone)]
+pub struct ServerPool {
+    /// min-heap of (free_time, instance index)
+    heap: BinaryHeap<Reverse<(u64, usize)>>,
+    n: usize,
+}
+
+impl ServerPool {
+    /// All servers free at `t0`.
+    pub fn new(d: usize, t0: u64) -> ServerPool {
+        assert!(d >= 1);
+        ServerPool { heap: (0..d).map(|i| Reverse((t0, i))).collect(), n: d }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Assign a work item available at `ready` with duration `dur`;
+    /// returns `(instance, start, end)`.
+    pub fn assign(&mut self, ready: u64, dur: u64) -> (usize, u64, u64) {
+        let Reverse((free, idx)) = self.heap.pop().expect("pool is non-empty");
+        let start = free.max(ready);
+        let end = start + dur;
+        self.heap.push(Reverse((end, idx)));
+        (idx, start, end)
+    }
+
+    /// Completion time of the last assigned item.
+    pub fn makespan(&self) -> u64 {
+        self.heap.iter().map(|Reverse((t, _))| *t).max().unwrap_or(0)
+    }
+
+    /// Earliest free time among servers.
+    pub fn earliest_free(&self) -> u64 {
+        self.heap.peek().map(|Reverse((t, _))| *t).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+    use crate::util::propcheck;
+
+    #[test]
+    fn single_server_serializes() {
+        let mut p = ServerPool::new(1, 0);
+        let (_, s1, e1) = p.assign(0, 10);
+        let (_, s2, e2) = p.assign(0, 5);
+        assert_eq!((s1, e1), (0, 10));
+        assert_eq!((s2, e2), (10, 15));
+        assert_eq!(p.makespan(), 15);
+    }
+
+    #[test]
+    fn two_servers_parallelize() {
+        let mut p = ServerPool::new(2, 0);
+        p.assign(0, 10);
+        let (_, s2, _) = p.assign(0, 10);
+        assert_eq!(s2, 0);
+        assert_eq!(p.makespan(), 10);
+    }
+
+    #[test]
+    fn ready_time_respected() {
+        let mut p = ServerPool::new(2, 0);
+        let (_, s, e) = p.assign(100, 10);
+        assert_eq!((s, e), (100, 110));
+    }
+
+    #[test]
+    fn greedy_assignment_is_work_conserving() {
+        // makespan ≤ (total work)/d + max item (list-scheduling bound)
+        propcheck::check("list scheduling bound", 0x11ff, 100, |rng| {
+            let d = 1 + rng.index(8);
+            let mut pool = ServerPool::new(d, 0);
+            let n = 1 + rng.index(200);
+            let mut total = 0u64;
+            let mut max_item = 0u64;
+            for _ in 0..n {
+                let dur = 1 + rng.below(1000);
+                total += dur;
+                max_item = max_item.max(dur);
+                pool.assign(0, dur);
+            }
+            let bound = total / d as u64 + max_item;
+            crate::prop_assert!(
+                pool.makespan() <= bound,
+                "makespan {} > bound {bound}",
+                pool.makespan()
+            );
+            // and it can't beat the perfect split
+            crate::prop_assert!(
+                pool.makespan() >= total.div_ceil(d as u64),
+                "makespan {} < lower bound {}",
+                pool.makespan(),
+                total / d as u64
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mut rng = Prng::new(3);
+        let durs: Vec<u64> = (0..50).map(|_| rng.below(100)).collect();
+        let run = |durs: &[u64]| {
+            let mut p = ServerPool::new(3, 0);
+            for &d in durs {
+                p.assign(0, d);
+            }
+            p.makespan()
+        };
+        assert_eq!(run(&durs), run(&durs));
+    }
+}

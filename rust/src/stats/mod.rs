@@ -1,0 +1,22 @@
+//! Input statistics: traces, profiles, and synthetic activations.
+//!
+//! Zero-skipping makes array speed a function of input bit density, so
+//! the allocators need *measured statistics* (paper §III-B: run a cycle
+//! simulator on example data, or profile activations from a GPU run).
+//! This module turns per-layer activation tensors into:
+//!
+//! * a [`trace::NetTrace`] — exact per-(image, layer, patch, block)
+//!   zero-skip cycle durations, the simulator's workload input;
+//! * a [`profile::NetworkProfile`] — aggregate expected cycles and bit
+//!   densities, the allocators' input (and Figs 4 & 6).
+//!
+//! Activations come either from the PJRT golden model
+//! ([`crate::runtime::golden`]) or from [`synth`] (synthetic data with
+//! realistic post-ReLU bit-density spread; see DESIGN.md §3).
+
+pub mod trace;
+pub mod profile;
+pub mod synth;
+
+pub use profile::NetworkProfile;
+pub use trace::{trace_from_activations, ImageTrace, LayerTrace, NetTrace};

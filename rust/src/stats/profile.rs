@@ -1,0 +1,177 @@
+//! Aggregate profile: expected cycles + densities per layer/block.
+//!
+//! This is what the allocators consume (paper §III-B: "gather an
+//! approximation of the average MAC per cycle for each block of arrays").
+
+use super::trace::NetTrace;
+use crate::mapping::NetworkMap;
+
+/// Aggregated statistics over a [`NetTrace`].
+#[derive(Debug, Clone)]
+pub struct NetworkProfile {
+    /// `block_cycles[l][r]`: expected zero-skip cycles for block (l, r) to
+    /// stream one image's patches through one physical copy.
+    pub block_cycles: Vec<Vec<f64>>,
+    /// `block_density[l][r]`: mean '% of 1s' the block's word lines see.
+    pub block_density: Vec<Vec<f64>>,
+    /// `layer_barrier_cycles[l]`: one-copy layer latency under the
+    /// layer-wise dataflow (per-patch barrier): Σ_p max_r dur(p, r).
+    pub layer_barrier_cycles: Vec<f64>,
+    /// `layer_baseline_cycles[l]`: one-copy latency without zero-skipping
+    /// (deterministic): positions × max_r baseline(r).
+    pub layer_baseline_cycles: Vec<f64>,
+    /// Mean '% of 1s' per layer (Fig 4 x-axis).
+    pub layer_density: Vec<f64>,
+    /// Mean zero-skip cycles per (full patch, block) pair per layer
+    /// (Fig 4 y-axis: "cycles per array" for the layer's 128×16 matvec).
+    pub layer_mean_block_cycles: Vec<f64>,
+    /// MACs per layer (weight-based allocation input).
+    pub layer_macs: Vec<u64>,
+}
+
+impl NetworkProfile {
+    /// Build from a trace (averaging across its images).
+    pub fn from_trace(map: &NetworkMap, trace: &NetTrace) -> NetworkProfile {
+        let nl = map.grids.len();
+        assert!(!trace.images.is_empty(), "profile needs >= 1 traced image");
+        let mut block_cycles = vec![vec![]; nl];
+        let mut block_density = vec![vec![]; nl];
+        let mut layer_barrier_cycles = vec![0.0; nl];
+        let mut layer_baseline_cycles = vec![0.0; nl];
+        let mut layer_density = vec![0.0; nl];
+        let mut layer_mean_block_cycles = vec![0.0; nl];
+        let n_img = trace.images.len() as f64;
+
+        for l in 0..nl {
+            let blocks = map.grids[l].blocks_per_copy;
+            let mut cyc = vec![0.0f64; blocks];
+            let mut dens = vec![0.0f64; blocks];
+            let mut barrier = 0.0f64;
+            let mut mean_block = 0.0f64;
+            for img in &trace.images {
+                let lt = &img.layers[l];
+                assert_eq!(lt.blocks, blocks);
+                for r in 0..blocks {
+                    cyc[r] += lt.block_mean_zs(r) * lt.positions as f64;
+                    dens[r] += lt.block_density(r);
+                }
+                // Σ_p max_r — the layer-wise dataflow's one-copy latency.
+                let mut b_sum = 0u64;
+                let mut all_sum = 0u64;
+                for p in 0..lt.positions {
+                    let mut mx = 0u32;
+                    for r in 0..blocks {
+                        let d = lt.zs_at(p, r);
+                        mx = mx.max(d);
+                        all_sum += d as u64;
+                    }
+                    b_sum += mx as u64;
+                }
+                barrier += b_sum as f64;
+                mean_block += all_sum as f64 / (lt.positions * blocks) as f64;
+                layer_density[l] += lt.layer_density();
+                layer_baseline_cycles[l] += lt.positions as f64
+                    * lt.baseline.iter().copied().max().unwrap_or(0) as f64;
+            }
+            block_cycles[l] = cyc.iter().map(|c| c / n_img).collect();
+            block_density[l] = dens.iter().map(|d| d / n_img).collect();
+            layer_barrier_cycles[l] = barrier / n_img;
+            layer_baseline_cycles[l] /= n_img;
+            layer_density[l] /= n_img;
+            layer_mean_block_cycles[l] = mean_block / n_img;
+        }
+
+        NetworkProfile {
+            block_cycles,
+            block_density,
+            layer_barrier_cycles,
+            layer_baseline_cycles,
+            layer_density,
+            layer_mean_block_cycles,
+            layer_macs: map.grids.iter().map(|g| g.macs).collect(),
+        }
+    }
+
+    /// Slowest-block cycles for a layer (the layer-wise dataflow's
+    /// bottleneck within one copy).
+    pub fn layer_max_block_cycles(&self, l: usize) -> f64 {
+        self.block_cycles[l].iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Paper Fig 6 quantity: relative spread (max-min)/max of block cycle
+    /// times within a layer (12% for layer 10, 27% for layer 15).
+    pub fn layer_block_spread(&self, l: usize) -> f64 {
+        let max = self.block_cycles[l].iter().cloned().fold(f64::MIN, f64::max);
+        let min = self.block_cycles[l].iter().cloned().fold(f64::MAX, f64::min);
+        if max <= 0.0 {
+            0.0
+        } else {
+            (max - min) / max
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArrayCfg;
+    use crate::dnn::{Graph, Op};
+    use crate::mapping::map_network;
+    use crate::stats::trace::trace_from_activations;
+    use crate::tensor::Tensor;
+    use crate::util::prng::Prng;
+
+    fn setup(images: usize) -> (NetworkMap, NetworkProfile) {
+        let mut g = Graph::new("t", [16, 6, 6]);
+        g.push("c1", Op::Conv { in_ch: 16, out_ch: 32, k: 3, stride: 1, pad: 1 });
+        let map = map_network(&g, ArrayCfg::paper(), false);
+        let mut rng = Prng::new(9);
+        let acts: Vec<Vec<Tensor<u8>>> = (0..images)
+            .map(|_| vec![Tensor::from_fn(&[16, 6, 6], |_| (rng.next_u32() as u8) & 0x3F)])
+            .collect();
+        let trace = trace_from_activations(&g, &map, &acts);
+        let prof = NetworkProfile::from_trace(&map, &trace);
+        (map, prof)
+    }
+
+    #[test]
+    fn barrier_at_least_max_block() {
+        let (_, prof) = setup(2);
+        for l in 0..prof.block_cycles.len() {
+            assert!(
+                prof.layer_barrier_cycles[l] >= prof.layer_max_block_cycles(l) - 1e-9,
+                "barrier {} < max block {}",
+                prof.layer_barrier_cycles[l],
+                prof.layer_max_block_cycles(l)
+            );
+        }
+    }
+
+    #[test]
+    fn baseline_dominates_zs() {
+        let (_, prof) = setup(1);
+        for l in 0..prof.block_cycles.len() {
+            assert!(prof.layer_baseline_cycles[l] >= prof.layer_barrier_cycles[l]);
+        }
+    }
+
+    #[test]
+    fn densities_in_unit_interval() {
+        let (_, prof) = setup(3);
+        for l in 0..prof.block_density.len() {
+            for &d in &prof.block_density[l] {
+                assert!((0.0..=1.0).contains(&d));
+            }
+            assert!((0.0..=1.0).contains(&prof.layer_density[l]));
+        }
+    }
+
+    #[test]
+    fn spread_nonnegative() {
+        let (_, prof) = setup(2);
+        for l in 0..prof.block_cycles.len() {
+            let s = prof.layer_block_spread(l);
+            assert!((0.0..=1.0).contains(&s));
+        }
+    }
+}

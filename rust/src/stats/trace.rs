@@ -1,0 +1,263 @@
+//! Workload traces: exact per-patch, per-block cycle durations.
+
+use crate::config::ArrayCfg;
+use crate::dnn::{Graph, Op};
+use crate::mapping::NetworkMap;
+use crate::tensor::{im2col_u8, Im2colSpec, Tensor};
+use crate::util::bitops::{plane_counts, BIT_PLANES};
+use crate::xbar::scheduler::{baseline_cycles, zs_cycles};
+
+/// One CIM layer's workload for one image.
+#[derive(Debug, Clone)]
+pub struct LayerTrace {
+    pub positions: usize,
+    pub blocks: usize,
+    /// Zero-skip duration of (patch p, block r): `zs[p * blocks + r]`.
+    pub zs: Vec<u32>,
+    /// Baseline duration per block (input-independent).
+    pub baseline: Vec<u32>,
+    /// Ones / total-bits per block (densities for Figs 4 & 6).
+    pub block_ones: Vec<u64>,
+    pub block_bits: Vec<u64>,
+}
+
+impl LayerTrace {
+    #[inline]
+    pub fn zs_at(&self, patch: usize, block: usize) -> u32 {
+        self.zs[patch * self.blocks + block]
+    }
+
+    /// Mean zero-skip cycles for one block over all patches.
+    pub fn block_mean_zs(&self, block: usize) -> f64 {
+        if self.positions == 0 {
+            return 0.0;
+        }
+        let sum: u64 = (0..self.positions).map(|p| self.zs_at(p, block) as u64).sum();
+        sum as f64 / self.positions as f64
+    }
+
+    /// Bit density ('% of 1s') for one block.
+    pub fn block_density(&self, block: usize) -> f64 {
+        if self.block_bits[block] == 0 {
+            return 0.0;
+        }
+        self.block_ones[block] as f64 / self.block_bits[block] as f64
+    }
+
+    /// Layer-mean density over all blocks.
+    pub fn layer_density(&self) -> f64 {
+        let ones: u64 = self.block_ones.iter().sum();
+        let bits: u64 = self.block_bits.iter().sum();
+        if bits == 0 {
+            0.0
+        } else {
+            ones as f64 / bits as f64
+        }
+    }
+}
+
+/// All CIM layers for one image.
+#[derive(Debug, Clone)]
+pub struct ImageTrace {
+    pub layers: Vec<LayerTrace>,
+}
+
+/// The full workload: one [`ImageTrace`] per profiled image.
+#[derive(Debug, Clone)]
+pub struct NetTrace {
+    pub layers_meta: usize,
+    pub images: Vec<ImageTrace>,
+}
+
+/// Build the exact trace for a batch of images.
+///
+/// `acts[i][l]` is the quantized input tensor of CIM layer `l` (same
+/// order as `map.grids`) for image `i`: `[C, H, W]` for conv layers,
+/// `[F, 1, 1]` for linear.
+pub fn trace_from_activations(
+    graph: &Graph,
+    map: &NetworkMap,
+    acts: &[Vec<Tensor<u8>>],
+) -> NetTrace {
+    let mut images = Vec::with_capacity(acts.len());
+    for img in acts {
+        assert_eq!(img.len(), map.grids.len(), "one activation tensor per CIM layer");
+        let mut layers = Vec::with_capacity(map.grids.len());
+        for (g, act) in map.grids.iter().zip(img) {
+            layers.push(layer_trace(graph, map, g, act));
+        }
+        images.push(ImageTrace { layers });
+    }
+    NetTrace { layers_meta: map.grids.len(), images }
+}
+
+fn layer_trace(
+    graph: &Graph,
+    map: &NetworkMap,
+    g: &crate::mapping::LayerGrid,
+    act: &Tensor<u8>,
+) -> LayerTrace {
+    let cfg = &map.array;
+    let layer = &graph.layers[g.graph_idx];
+    let patches: Tensor<u8> = match layer.op {
+        Op::Conv { in_ch, k, stride, pad, .. } => {
+            assert_eq!(
+                act.shape(),
+                &layer.in_shape,
+                "activation shape mismatch for layer '{}'",
+                layer.name
+            );
+            let spec = Im2colSpec {
+                in_ch,
+                in_h: layer.in_shape[1],
+                in_w: layer.in_shape[2],
+                k,
+                stride,
+                pad,
+            };
+            im2col_u8(act, &spec)
+        }
+        Op::Linear { in_features, .. } => {
+            assert_eq!(act.len(), in_features, "linear input length mismatch");
+            Tensor::from_vec(&[1, in_features], act.data().to_vec())
+        }
+        _ => unreachable!("non-CIM layer in grid"),
+    };
+    trace_from_patches(cfg, g, &patches)
+}
+
+/// Trace a pre-lowered patch matrix (also used by tests and the synthetic
+/// path).
+pub fn trace_from_patches(
+    cfg: &ArrayCfg,
+    g: &crate::mapping::LayerGrid,
+    patches: &Tensor<u8>,
+) -> LayerTrace {
+    let positions = patches.shape()[0];
+    let plen = patches.shape()[1];
+    assert_eq!(plen, g.matrix_rows, "patch length != matrix rows");
+    assert_eq!(positions, g.positions.max(positions.min(g.positions)),);
+    let blocks = g.blocks_per_copy;
+    let mut zs = vec![0u32; positions * blocks];
+    let mut block_ones = vec![0u64; blocks];
+    let mut block_bits = vec![0u64; blocks];
+    for p in 0..positions {
+        let row = &patches.data()[p * plen..(p + 1) * plen];
+        for b in 0..blocks {
+            let start = b * cfg.rows;
+            let end = (start + cfg.rows).min(plen);
+            let slice = &row[start..end];
+            let counts = plane_counts(slice);
+            zs[p * blocks + b] = zs_cycles(cfg, &counts);
+            block_ones[b] += counts.iter().map(|&c| c as u64).sum::<u64>();
+            block_bits[b] += (slice.len() * BIT_PLANES) as u64;
+        }
+    }
+    let baseline =
+        (0..blocks).map(|b| baseline_cycles(cfg, g.rows_in_block(b, cfg))).collect();
+    LayerTrace { positions, blocks, zs, baseline, block_ones, block_bits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArrayCfg;
+    use crate::dnn::resnet18;
+    use crate::mapping::map_network;
+    use crate::util::prng::Prng;
+
+    fn tiny_graph_and_acts(seed: u64) -> (Graph, NetworkMap, Vec<Vec<Tensor<u8>>>) {
+        let mut g = Graph::new("tiny", [8, 6, 6]);
+        g.push("c1", Op::Conv { in_ch: 8, out_ch: 16, k: 3, stride: 1, pad: 1 });
+        g.push("r1", Op::Relu);
+        g.push("c2", Op::Conv { in_ch: 16, out_ch: 16, k: 3, stride: 1, pad: 1 });
+        let map = map_network(&g, ArrayCfg::paper(), false);
+        let mut rng = Prng::new(seed);
+        let acts = vec![vec![
+            Tensor::from_fn(&[8, 6, 6], |_| rng.next_u32() as u8),
+            Tensor::from_fn(&[16, 6, 6], |_| (rng.next_u32() as u8) & 0x1F),
+        ]];
+        (g, map, acts)
+    }
+
+    #[test]
+    fn trace_dimensions_match_map() {
+        let (g, map, acts) = tiny_graph_and_acts(1);
+        let trace = trace_from_activations(&g, &map, &acts);
+        assert_eq!(trace.images.len(), 1);
+        let img = &trace.images[0];
+        assert_eq!(img.layers.len(), 2);
+        assert_eq!(img.layers[0].positions, 36);
+        assert_eq!(img.layers[0].blocks, 1); // 72 rows -> 1 block
+        assert_eq!(img.layers[1].blocks, 2); // 144 rows -> 2 blocks
+    }
+
+    #[test]
+    fn durations_bounded_by_scheduler_extremes() {
+        let (g, map, acts) = tiny_graph_and_acts(2);
+        let trace = trace_from_activations(&g, &map, &acts);
+        let cfg = ArrayCfg::paper();
+        for lt in &trace.images[0].layers {
+            for (i, &d) in lt.zs.iter().enumerate() {
+                let b = i % lt.blocks;
+                assert!(d <= lt.baseline[b], "zs {d} > baseline {}", lt.baseline[b]);
+                let _ = cfg;
+            }
+        }
+    }
+
+    #[test]
+    fn density_zero_for_zero_input() {
+        let mut g = Graph::new("z", [4, 4, 4]);
+        g.push("c", Op::Conv { in_ch: 4, out_ch: 8, k: 3, stride: 1, pad: 1 });
+        let map = map_network(&g, ArrayCfg::paper(), false);
+        let acts = vec![vec![Tensor::zeros(&[4, 4, 4])]];
+        let trace = trace_from_activations(&g, &map, &acts);
+        let lt = &trace.images[0].layers[0];
+        assert_eq!(lt.layer_density(), 0.0);
+        assert!(lt.zs.iter().all(|&d| d == 0));
+        assert!(lt.baseline.iter().all(|&b| b > 0));
+    }
+
+    #[test]
+    fn resnet18_trace_small_image() {
+        // End-to-end shape check on the real network at small resolution.
+        let g = resnet18(32, 10);
+        let map = map_network(&g, ArrayCfg::paper(), false);
+        let mut rng = Prng::new(3);
+        let acts: Vec<Tensor<u8>> = map
+            .grids
+            .iter()
+            .map(|gr| {
+                let l = &g.layers[gr.graph_idx];
+                Tensor::from_fn(&l.in_shape.to_vec(), |_| (rng.next_u32() as u8) & 0x3F)
+            })
+            .collect();
+        let trace = trace_from_activations(&g, &map, &[acts]);
+        assert_eq!(trace.images[0].layers.len(), 20);
+        for (lt, gr) in trace.images[0].layers.iter().zip(&map.grids) {
+            assert_eq!(lt.positions, gr.positions);
+            assert_eq!(lt.blocks, gr.blocks_per_copy);
+        }
+    }
+
+    #[test]
+    fn higher_density_input_yields_longer_trace() {
+        let (g, map, _) = tiny_graph_and_acts(4);
+        let mut rng = Prng::new(5);
+        let sparse: Vec<Vec<Tensor<u8>>> = vec![vec![
+            Tensor::from_fn(&[8, 6, 6], |_| (rng.next_u32() as u8) & 0x03),
+            Tensor::from_fn(&[16, 6, 6], |_| (rng.next_u32() as u8) & 0x03),
+        ]];
+        let dense: Vec<Vec<Tensor<u8>>> = vec![vec![
+            Tensor::from_fn(&[8, 6, 6], |_| (rng.next_u32() as u8) | 0x7F),
+            Tensor::from_fn(&[16, 6, 6], |_| (rng.next_u32() as u8) | 0x7F),
+        ]];
+        let ts = trace_from_activations(&g, &map, &sparse);
+        let td = trace_from_activations(&g, &map, &dense);
+        let total = |t: &NetTrace| -> u64 {
+            t.images[0].layers.iter().flat_map(|l| l.zs.iter().map(|&d| d as u64)).sum()
+        };
+        assert!(total(&td) > total(&ts) * 2);
+    }
+}

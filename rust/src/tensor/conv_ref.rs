@@ -1,0 +1,156 @@
+//! Naive integer reference convolution — the functional oracle.
+//!
+//! Exact int32 accumulation over u8 activations × i8 weights. Used by the
+//! test suite to validate (a) the im2col lowering + crossbar functional
+//! model against direct convolution and (b) the PJRT golden path.
+
+use super::im2col::{im2col_u8, Im2colSpec};
+use super::nd::Tensor;
+
+/// Direct NCHW convolution: `input [Cin,H,W]` × `weights [Cout,Cin,K,K]`
+/// → `i32 [Cout,OH,OW]`.
+pub fn conv2d_i32(
+    input: &Tensor<u8>,
+    weights: &Tensor<i8>,
+    stride: usize,
+    pad: usize,
+) -> Tensor<i32> {
+    let (cin, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+    let (cout, wcin, k, k2) = (
+        weights.shape()[0],
+        weights.shape()[1],
+        weights.shape()[2],
+        weights.shape()[3],
+    );
+    assert_eq!(cin, wcin);
+    assert_eq!(k, k2);
+    let spec = Im2colSpec { in_ch: cin, in_h: h, in_w: w, k, stride, pad };
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let mut out: Tensor<i32> = Tensor::zeros(&[cout, oh, ow]);
+    for oc in 0..cout {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0i32;
+                let iy0 = (oy * stride) as isize - pad as isize;
+                let ix0 = (ox * stride) as isize - pad as isize;
+                for ic in 0..cin {
+                    for ky in 0..k {
+                        let iy = iy0 + ky as isize;
+                        if iy < 0 || iy as usize >= h {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = ix0 + kx as isize;
+                            if ix < 0 || ix as usize >= w {
+                                continue;
+                            }
+                            let a = input.get(&[ic, iy as usize, ix as usize]) as i32;
+                            let wv = weights.get(&[oc, ic, ky, kx]) as i32;
+                            acc += a * wv;
+                        }
+                    }
+                }
+                out.set(&[oc, oy, ox], acc);
+            }
+        }
+    }
+    out
+}
+
+/// Convolution via im2col + matmul. Must agree exactly with
+/// [`conv2d_i32`]; exercised in tests to pin the patch/weight-row order
+/// contract that the crossbar mapping relies on.
+pub fn conv2d_via_im2col(
+    input: &Tensor<u8>,
+    weights: &Tensor<i8>,
+    stride: usize,
+    pad: usize,
+) -> Tensor<i32> {
+    let (cin, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+    let (cout, k) = (weights.shape()[0], weights.shape()[2]);
+    let spec = Im2colSpec { in_ch: cin, in_h: h, in_w: w, k, stride, pad };
+    let patches = im2col_u8(input, &spec);
+    let plen = spec.patch_len();
+    // Weight matrix rows in the same CHW patch order: row = (c, ky, kx).
+    let wm: Vec<i32> = {
+        let mut m = vec![0i32; plen * cout];
+        for oc in 0..cout {
+            let mut r = 0;
+            for ic in 0..cin {
+                for ky in 0..k {
+                    for kx in 0..k {
+                        m[r * cout + oc] = weights.get(&[oc, ic, ky, kx]) as i32;
+                        r += 1;
+                    }
+                }
+            }
+        }
+        m
+    };
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let mut out: Tensor<i32> = Tensor::zeros(&[cout, oh, ow]);
+    for p in 0..spec.positions() {
+        let row = &patches.data()[p * plen..(p + 1) * plen];
+        for oc in 0..cout {
+            let mut acc = 0i32;
+            for (r, &a) in row.iter().enumerate() {
+                acc += a as i32 * wm[r * cout + oc];
+            }
+            out.data_mut()[oc * oh * ow + p] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+    use crate::util::propcheck;
+
+    fn random_case(rng: &mut Prng) -> (Tensor<u8>, Tensor<i8>, usize, usize) {
+        let cin = 1 + rng.index(6);
+        let cout = 1 + rng.index(6);
+        let k = [1, 3, 5][rng.index(3)];
+        let h = k + rng.index(6);
+        let w = k + rng.index(6);
+        let stride = 1 + rng.index(2);
+        let pad = rng.index(2);
+        let input = Tensor::from_fn(&[cin, h, w], |_| rng.next_u32() as u8);
+        let weights = Tensor::from_fn(&[cout, cin, k, k], |_| rng.next_u32() as i8);
+        (input, weights, stride, pad)
+    }
+
+    #[test]
+    fn im2col_path_matches_direct_conv() {
+        propcheck::check("im2col == direct conv", 0xC0FFEE, 40, |rng| {
+            let (input, weights, stride, pad) = random_case(rng);
+            let a = conv2d_i32(&input, &weights, stride, pad);
+            let b = conv2d_via_im2col(&input, &weights, stride, pad);
+            crate::prop_assert!(
+                a == b,
+                "mismatch for in={:?} w={:?} s={stride} p={pad}",
+                input.shape(),
+                weights.shape()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn known_small_case() {
+        // 1x1x2x2 input, 1 filter of all ones, k=2: single output = sum.
+        let input = Tensor::from_vec(&[1, 2, 2], vec![1, 2, 3, 4]);
+        let weights = Tensor::from_vec(&[1, 1, 2, 2], vec![1, 1, 1, 1]);
+        let out = conv2d_i32(&input, &weights, 1, 0);
+        assert_eq!(out.data(), &[10]);
+    }
+
+    #[test]
+    fn negative_weights() {
+        let input = Tensor::from_vec(&[1, 1, 2], vec![10, 20]);
+        let weights = Tensor::from_vec(&[1, 1, 1, 1], vec![-2]);
+        let out = conv2d_i32(&input, &weights, 1, 0);
+        assert_eq!(out.data(), &[-20, -40]);
+    }
+}

@@ -1,0 +1,16 @@
+//! Dense tensors, im2col lowering, and quantization.
+//!
+//! The simulator operates on 8-bit quantized activations (the values the
+//! CIM word lines actually see). This module provides the minimal NCHW
+//! tensor type, the conv→matrix lowering (im2col) used to map layers onto
+//! crossbar grids, the affine quantizer, and a naive reference convolution
+//! used as the oracle in tests.
+
+pub mod nd;
+pub mod im2col;
+pub mod quant;
+pub mod conv_ref;
+
+pub use im2col::{im2col_u8, patch_slice, Im2colSpec};
+pub use nd::Tensor;
+pub use quant::{dequantize, quantize_u8, QuantParams};

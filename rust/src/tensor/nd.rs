@@ -1,0 +1,162 @@
+//! Minimal dense N-dimensional tensor (row-major).
+
+use std::fmt;
+
+/// Dense row-major tensor. Activations use `Tensor<u8>` (quantized),
+/// weights `Tensor<i8>`, accumulators `Tensor<i32>`, and the PJRT bridge
+/// `Tensor<f32>`.
+#[derive(Clone, PartialEq)]
+pub struct Tensor<T> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> Tensor<T> {
+    /// All-default tensor of the given shape.
+    pub fn zeros(shape: &[usize]) -> Tensor<T> {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![T::default(); n] }
+    }
+
+    /// Wrap an existing buffer; `data.len()` must equal the shape product.
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Tensor<T> {
+        let n: usize = shape.iter().product();
+        assert_eq!(data.len(), n, "shape {:?} wants {} elements, got {}", shape, n, data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Build from a generator over the linear index.
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> T) -> Tensor<T> {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: (0..n).map(&mut f).collect() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Linear offset of a multi-index.
+    #[inline]
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (d, &i) in idx.iter().enumerate() {
+            debug_assert!(i < self.shape[d], "index {i} out of bounds for dim {d} ({})", self.shape[d]);
+            off = off * self.shape[d] + i;
+        }
+        off
+    }
+
+    #[inline]
+    pub fn get(&self, idx: &[usize]) -> T {
+        self.data[self.offset(idx)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, idx: &[usize], v: T) {
+        let off = self.offset(idx);
+        self.data[off] = v;
+    }
+
+    /// Reinterpret with a new shape of equal volume.
+    pub fn reshape(self, shape: &[usize]) -> Tensor<T> {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape {:?} -> {:?}", self.shape, shape);
+        Tensor { shape: shape.to_vec(), data: self.data }
+    }
+
+    /// Slice the leading (outermost) dimension at `i`, returning a view copy.
+    pub fn index_outer(&self, i: usize) -> Tensor<T> {
+        assert!(!self.shape.is_empty() && i < self.shape[0]);
+        let inner: usize = self.shape[1..].iter().product();
+        Tensor {
+            shape: self.shape[1..].to_vec(),
+            data: self.data[i * inner..(i + 1) * inner].to_vec(),
+        }
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Tensor<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}(", self.shape)?;
+        let n = self.data.len().min(8);
+        for (i, x) in self.data[..n].iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{x:?}")?;
+        }
+        if self.data.len() > n {
+            write!(f, ", …{} more", self.data.len() - n)?;
+        }
+        write!(f, ")")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_indexing() {
+        let mut t: Tensor<i32> = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        t.set(&[1, 2, 3], 7);
+        assert_eq!(t.get(&[1, 2, 3]), 7);
+        assert_eq!(t.get(&[0, 0, 0]), 0);
+        assert_eq!(t.offset(&[1, 2, 3]), 23);
+    }
+
+    #[test]
+    fn from_fn_linear_order() {
+        let t: Tensor<usize> = Tensor::from_fn(&[2, 2], |i| i);
+        assert_eq!(t.get(&[0, 1]), 1);
+        assert_eq!(t.get(&[1, 0]), 2);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 6], (0..12).collect());
+        let r = t.reshape(&[3, 4]);
+        assert_eq!(r.get(&[2, 3]), 11);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reshape_wrong_volume_panics() {
+        let t: Tensor<u8> = Tensor::zeros(&[2, 2]);
+        let _ = t.reshape(&[5]);
+    }
+
+    #[test]
+    fn index_outer_slices() {
+        let t = Tensor::from_vec(&[2, 3], vec![1, 2, 3, 4, 5, 6]);
+        let row = t.index_outer(1);
+        assert_eq!(row.shape(), &[3]);
+        assert_eq!(row.data(), &[4, 5, 6]);
+    }
+}

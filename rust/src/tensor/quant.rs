@@ -1,0 +1,92 @@
+//! 8-bit affine quantization.
+//!
+//! Activations are quantized to **unsigned** 8-bit (post-ReLU values are
+//! non-negative; the word lines carry magnitude bits) and weights to
+//! **signed** 8-bit, matching the paper's "input data, weights, and
+//! activations are all 8 bits".
+
+/// Affine quantization parameters: `real = scale * (q - zero_point)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+/// Quantize a float slice to u8 with symmetric-positive range `[0, max]`.
+/// Returns the quantized data and the parameters used.
+pub fn quantize_u8(xs: &[f32]) -> (Vec<u8>, QuantParams) {
+    let max = xs.iter().cloned().fold(0.0f32, f32::max);
+    if max <= 0.0 {
+        return (vec![0u8; xs.len()], QuantParams { scale: 1.0, zero_point: 0 });
+    }
+    let scale = max / 255.0;
+    let q = xs
+        .iter()
+        .map(|&x| ((x / scale).round().clamp(0.0, 255.0)) as u8)
+        .collect();
+    (q, QuantParams { scale, zero_point: 0 })
+}
+
+/// Quantize weights to i8 with symmetric range `[-max, max]`.
+pub fn quantize_i8(xs: &[f32]) -> (Vec<i8>, QuantParams) {
+    let max = xs.iter().map(|x| x.abs()).fold(0.0f32, f32::max);
+    if max <= 0.0 {
+        return (vec![0i8; xs.len()], QuantParams { scale: 1.0, zero_point: 0 });
+    }
+    let scale = max / 127.0;
+    let q = xs
+        .iter()
+        .map(|&x| ((x / scale).round().clamp(-127.0, 127.0)) as i8)
+        .collect();
+    (q, QuantParams { scale, zero_point: 0 })
+}
+
+/// Dequantize u8 back to float.
+pub fn dequantize(q: &[u8], params: QuantParams) -> Vec<f32> {
+    q.iter().map(|&x| params.scale * (x as i32 - params.zero_point) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn roundtrip_error_is_bounded() {
+        let mut p = Prng::new(6);
+        let xs: Vec<f32> = (0..1000).map(|_| p.f32() * 4.0).collect();
+        let (q, params) = quantize_u8(&xs);
+        let back = dequantize(&q, params);
+        for (x, y) in xs.iter().zip(&back) {
+            assert!((x - y).abs() <= params.scale * 0.5 + 1e-6, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn all_zero_input() {
+        let (q, params) = quantize_u8(&[0.0; 8]);
+        assert!(q.iter().all(|&x| x == 0));
+        assert_eq!(params.scale, 1.0);
+    }
+
+    #[test]
+    fn max_maps_to_255() {
+        let (q, _) = quantize_u8(&[0.0, 1.0, 2.0]);
+        assert_eq!(q[0], 0);
+        assert!(q[1] == 127 || q[1] == 128, "midpoint rounds to {}", q[1]);
+        assert_eq!(q[2], 255);
+    }
+
+    #[test]
+    fn i8_symmetric() {
+        let (q, _) = quantize_i8(&[-2.0, 0.0, 2.0]);
+        assert_eq!(q, vec![-127, 0, 127]);
+    }
+
+    #[test]
+    fn negative_activations_clamp_to_zero() {
+        let (q, _) = quantize_u8(&[-5.0, 1.0]);
+        assert_eq!(q[0], 0);
+        assert_eq!(q[1], 255);
+    }
+}

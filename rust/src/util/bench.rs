@@ -1,0 +1,138 @@
+//! In-repo benchmark harness.
+//!
+//! `criterion` is not in the offline registry, so the `[[bench]]` targets
+//! use `harness = false` and this module: warmup + timed repetitions with
+//! summary statistics, plus helpers to emit the paper-figure tables that
+//! each bench regenerates. `cargo bench` runs these binaries directly.
+
+use crate::util::stats::{summarize, Summary};
+use std::time::Instant;
+
+/// One timed measurement series.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    /// Seconds per iteration.
+    pub summary: Summary,
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        self.summary.mean * 1e3
+    }
+    pub fn mean_us(&self) -> f64 {
+        self.summary.mean * 1e6
+    }
+}
+
+/// Benchmark runner with fixed warmup/measure counts.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Modest defaults: the figure benches do real simulator work per
+        // iteration, so a handful of repetitions is plenty for stable means.
+        Bencher { warmup_iters: 1, measure_iters: 5, results: vec![] }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, measure: usize) -> Bencher {
+        Bencher { warmup_iters: warmup, measure_iters: measure, results: vec![] }
+    }
+
+    /// Time `f`, keeping its last return value alive so the compiler
+    /// cannot elide the work.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Measurement {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.measure_iters);
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        self.results.push(Measurement {
+            name: name.to_string(),
+            iters: self.measure_iters,
+            summary: summarize(&samples),
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Render all measurements collected so far.
+    pub fn report(&self) -> String {
+        let mut t = crate::util::table::Table::new(["benchmark", "mean", "stddev", "min", "max", "iters"]);
+        for m in &self.results {
+            t.row([
+                m.name.clone(),
+                fmt_duration(m.summary.mean),
+                fmt_duration(m.summary.stddev),
+                fmt_duration(m.summary.min),
+                fmt_duration(m.summary.max),
+                m.iters.to_string(),
+            ]);
+        }
+        t.render()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Human-scale duration formatting (s / ms / µs / ns).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Standard banner printed by every figure bench so `cargo bench` output
+/// is self-describing.
+pub fn banner(fig: &str, description: &str) {
+    println!("{}", "=".repeat(72));
+    println!("cimfab bench — {fig}");
+    println!("{description}");
+    println!("{}", "=".repeat(72));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        let mut b = Bencher::new(0, 3);
+        let m = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(m.summary.mean > 0.0);
+        assert_eq!(m.iters, 3);
+        assert!(b.report().contains("spin"));
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(2.5), "2.500 s");
+        assert_eq!(fmt_duration(0.0025), "2.500 ms");
+        assert_eq!(fmt_duration(2.5e-6), "2.500 µs");
+        assert_eq!(fmt_duration(2.5e-9), "2.5 ns");
+    }
+}

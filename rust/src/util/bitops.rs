@@ -1,0 +1,127 @@
+//! Bit-plane packing and popcount helpers.
+//!
+//! The zero-skipping cycle model (see [`crate::xbar`]) needs, for every
+//! input slice of up to 128 8-bit activations, the number of `1`s in each
+//! of the 8 bit positions. Doing that per-byte is the profiling hot path,
+//! so these helpers pack activation bytes into per-bit-plane `u64` words
+//! and popcount whole words.
+
+/// Number of bit planes in an 8-bit activation.
+pub const BIT_PLANES: usize = 8;
+
+/// Per-bit-plane ones counts for a slice of 8-bit activations.
+///
+/// `counts[b]` = number of elements whose bit `b` is set.
+#[inline]
+pub fn plane_counts(xs: &[u8]) -> [u32; BIT_PLANES] {
+    let mut counts = [0u32; BIT_PLANES];
+    let mut chunks = xs.chunks_exact(8);
+    // Process 8 bytes at a time as a u64 and extract each bit plane with a
+    // mask + horizontal popcount. ~6x faster than the per-byte loop on the
+    // profiling path (see EXPERIMENTS.md §Perf).
+    for c in chunks.by_ref() {
+        let w = u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]);
+        for (b, cnt) in counts.iter_mut().enumerate() {
+            *cnt += ((w >> b) & 0x0101_0101_0101_0101).count_ones();
+        }
+    }
+    for &x in chunks.remainder() {
+        for (b, cnt) in counts.iter_mut().enumerate() {
+            *cnt += ((x >> b) & 1) as u32;
+        }
+    }
+    counts
+}
+
+/// Total ones over all 8 bit planes of the slice (bit density numerator).
+#[inline]
+pub fn total_ones(xs: &[u8]) -> u32 {
+    let mut ones = 0u32;
+    let mut chunks = xs.chunks_exact(8);
+    for c in chunks.by_ref() {
+        let w = u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]);
+        ones += w.count_ones();
+    }
+    for &x in chunks.remainder() {
+        ones += x.count_ones();
+    }
+    ones
+}
+
+/// Fraction of `1`s over all bits of the slice (the paper's "% of 1s").
+pub fn bit_density(xs: &[u8]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    total_ones(xs) as f64 / (xs.len() * BIT_PLANES) as f64
+}
+
+/// Pack one bit plane of a byte slice into `u64` words (LSB-first).
+pub fn pack_plane(xs: &[u8], plane: usize) -> Vec<u64> {
+    assert!(plane < BIT_PLANES);
+    let words = xs.len().div_ceil(64);
+    let mut out = vec![0u64; words];
+    for (i, &x) in xs.iter().enumerate() {
+        if (x >> plane) & 1 == 1 {
+            out[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn plane_counts_naive(xs: &[u8]) -> [u32; 8] {
+        let mut counts = [0u32; 8];
+        for &x in xs {
+            for (b, c) in counts.iter_mut().enumerate() {
+                *c += ((x >> b) & 1) as u32;
+            }
+        }
+        counts
+    }
+
+    #[test]
+    fn plane_counts_matches_naive() {
+        let mut p = Prng::new(1);
+        for len in [0usize, 1, 7, 8, 9, 63, 64, 127, 128, 1000] {
+            let xs: Vec<u8> = (0..len).map(|_| p.next_u32() as u8).collect();
+            assert_eq!(plane_counts(&xs), plane_counts_naive(&xs), "len={len}");
+        }
+    }
+
+    #[test]
+    fn total_ones_matches_sum_of_planes() {
+        let mut p = Prng::new(2);
+        let xs: Vec<u8> = (0..513).map(|_| p.next_u32() as u8).collect();
+        let planes = plane_counts(&xs);
+        assert_eq!(total_ones(&xs), planes.iter().sum::<u32>());
+    }
+
+    #[test]
+    fn density_bounds() {
+        assert_eq!(bit_density(&[]), 0.0);
+        assert_eq!(bit_density(&[0, 0, 0]), 0.0);
+        assert_eq!(bit_density(&[0xFF; 16]), 1.0);
+        let d = bit_density(&[0x0F; 4]);
+        assert!((d - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pack_plane_roundtrip() {
+        let xs: Vec<u8> = (0..200).map(|i| i as u8) .collect();
+        for plane in 0..8 {
+            let packed = pack_plane(&xs, plane);
+            let ones: u32 = packed.iter().map(|w| w.count_ones()).sum();
+            assert_eq!(ones, plane_counts(&xs)[plane]);
+            // each set bit corresponds to the right element
+            for (i, &x) in xs.iter().enumerate() {
+                let bit = (packed[i / 64] >> (i % 64)) & 1;
+                assert_eq!(bit as u8, (x >> plane) & 1);
+            }
+        }
+    }
+}

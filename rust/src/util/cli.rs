@@ -1,0 +1,132 @@
+//! Tiny CLI argument parser (`clap` is unavailable offline).
+//!
+//! Grammar: `prog SUBCOMMAND [--key value]... [--flag]... [positional]...`
+//! Flags must be declared so `--flag value` vs `--flag` is unambiguous.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. `flag_names` lists valueless options.
+    pub fn parse(argv: &[String], flag_names: &[&str]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                if flag_names.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("option --{name} requires a value"))?;
+                    out.options.insert(name.to_string(), v.clone());
+                }
+            } else if out.subcommand.is_none() && out.options.is_empty() && out.flags.is_empty() {
+                out.subcommand = Some(tok.clone());
+            } else {
+                out.positionals.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse directly from the process environment.
+    pub fn from_env(flag_names: &[&str]) -> Result<Args, String> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv, flag_names)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("option --{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("option --{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("option --{name} expects an integer, got '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(
+            &sv(&["simulate", "--pes", "86", "--verbose", "trace.json"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.get("pes"), Some("86"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positionals, sv(&["trace.json"]));
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = Args::parse(&sv(&["run", "--net=vgg11"]), &[]).unwrap();
+        assert_eq!(a.get("net"), Some("vgg11"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["run", "--pes"]), &[]).is_err());
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(&sv(&["x", "--n", "12", "--f", "0.5"]), &[]).unwrap();
+        assert_eq!(a.get_usize("n", 0).unwrap(), 12);
+        assert_eq!(a.get_usize("absent", 7).unwrap(), 7);
+        assert_eq!(a.get_f64("f", 0.0).unwrap(), 0.5);
+        assert!(a.get_usize("f", 0).is_err());
+    }
+}

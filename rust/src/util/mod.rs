@@ -1,0 +1,16 @@
+//! Self-contained utilities.
+//!
+//! The build environment has an offline crate registry containing only the
+//! `xla` crate's dependency closure, so the usual ecosystem crates
+//! (`rand`, `serde_json`, `clap`, `criterion`, `proptest`) are not
+//! available. This module provides the small, deterministic subset of
+//! their functionality the rest of the crate needs.
+
+pub mod prng;
+pub mod bitops;
+pub mod json;
+pub mod cli;
+pub mod table;
+pub mod bench;
+pub mod propcheck;
+pub mod stats;

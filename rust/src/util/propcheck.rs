@@ -1,0 +1,79 @@
+//! Seeded property-based testing helper.
+//!
+//! `proptest` is unavailable offline, so invariant tests use this: run a
+//! property over `iters` randomly generated cases from a base seed; on
+//! failure report the exact per-case seed so the case replays with
+//! `check_one`. Not a full shrinker, but generators are written so small
+//! seeds produce small cases.
+
+use crate::util::prng::Prng;
+
+/// Outcome of a property over one generated case.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `iters` cases derived from `base_seed`. Panics with the
+/// failing case seed + message on the first violation.
+pub fn check<F: FnMut(&mut Prng) -> PropResult>(name: &str, base_seed: u64, iters: usize, mut prop: F) {
+    for i in 0..iters {
+        let case_seed = base_seed.wrapping_mul(0x100000001B3).wrapping_add(i as u64);
+        let mut rng = Prng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {i}/{iters} (seed {case_seed:#x}): {msg}\n\
+                 replay with propcheck::check_one(\"{name}\", {case_seed:#x}, ..)"
+            );
+        }
+    }
+}
+
+/// Replay one specific failing case.
+pub fn check_one<F: FnMut(&mut Prng) -> PropResult>(name: &str, case_seed: u64, mut prop: F) {
+    let mut rng = Prng::new(case_seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property '{name}' failed (seed {case_seed:#x}): {msg}");
+    }
+}
+
+/// Assert helper for properties: produce `Err` with formatted message
+/// instead of panicking, so the harness can report the seed.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_iters() {
+        let mut count = 0;
+        check("count", 1, 50, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 2, 10, |rng| {
+            let x = rng.below(100);
+            prop_assert!(x > 100, "x = {x} can never exceed 100");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn check_one_replays() {
+        check_one("ok", 0xdead, |rng| {
+            let _ = rng.next_u64();
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,82 @@
+//! ADC model: quantization of the bit-line current sum.
+//!
+//! Each ADC sample digitizes the summed current of up to `adc_rows`
+//! active cells on one column. With zero-skipping, at most `adc_rows`
+//! word lines are active per batch, so the ideal sum is in
+//! `[0, adc_rows]` and a `bits`-bit ADC (which the paper treats as
+//! resolving `2^bits` row levels) reads it exactly — this is the paper's
+//! "3-bits is the maximum precision that can be read with no error" at
+//! 128 rows and 5% device variance. Larger batch sizes (prior work's 5-8
+//! bit ADCs over 128 rows) accumulate analog noise; [`super::variance`]
+//! quantifies the resulting bit-error rate.
+
+/// A `bits`-bit ADC reading batches of up to `2^bits` rows.
+#[derive(Debug, Clone, Copy)]
+pub struct Adc {
+    pub bits: usize,
+}
+
+impl Adc {
+    pub fn new(bits: usize) -> Adc {
+        assert!((1..=10).contains(&bits));
+        Adc { bits }
+    }
+
+    /// Max rows per batch this ADC can digitize losslessly.
+    pub fn rows_per_batch(&self) -> usize {
+        1 << self.bits
+    }
+
+    /// Digitize an ideal (noise-free) sum. Values above the full-scale
+    /// range saturate — this models under-provisioned ADCs in the
+    /// ADC-precision ablation.
+    #[inline]
+    pub fn read_ideal(&self, sum: u32) -> u32 {
+        sum.min(self.rows_per_batch() as u32)
+    }
+
+    /// Digitize a noisy analog sum (in units of one cell's on-current):
+    /// round to the nearest code, saturating at full scale.
+    #[inline]
+    pub fn read_analog(&self, current: f64) -> u32 {
+        let code = current.round().max(0.0) as u32;
+        code.min(self.rows_per_batch() as u32)
+    }
+
+    /// Relative area cost vs a 3-bit ADC (paper §III-A: "large (5-8 bit)
+    /// ADCs occupy over 10× the area of eNVM"). Flash-ADC area grows
+    /// ~2^bits; normalized to the 3-bit design point.
+    pub fn relative_area(&self) -> f64 {
+        (1u64 << self.bits) as f64 / (1u64 << 3) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_read_is_exact_within_range() {
+        let adc = Adc::new(3);
+        for s in 0..=8u32 {
+            assert_eq!(adc.read_ideal(s), s);
+        }
+        assert_eq!(adc.read_ideal(9), 8); // saturation
+    }
+
+    #[test]
+    fn analog_read_rounds() {
+        let adc = Adc::new(3);
+        assert_eq!(adc.read_analog(3.4), 3);
+        assert_eq!(adc.read_analog(3.6), 4);
+        assert_eq!(adc.read_analog(-0.3), 0);
+        assert_eq!(adc.read_analog(100.0), 8);
+    }
+
+    #[test]
+    fn area_scaling() {
+        assert_eq!(Adc::new(3).relative_area(), 1.0);
+        assert_eq!(Adc::new(5).relative_area(), 4.0);
+        assert_eq!(Adc::new(8).relative_area(), 32.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Crossbar sub-array model: read scheduling (cycle cost) + functional
+//! bit-serial compute + device-variance error model.
+//!
+//! This is the substrate the whole evaluation stands on: [`scheduler`]
+//! implements the paper's two read disciplines (baseline and
+//! zero-skipping) and their exact cycle costs; [`subarray`] implements the
+//! functional dot product the same hardware produces (checked against the
+//! naive integer convolution and the L1 Pallas kernel); [`variance`]
+//! implements the device-to-device variance argument (§III-A) for why the
+//! paper caps ADCs at 3 bits.
+
+pub mod scheduler;
+pub mod subarray;
+pub mod adc;
+pub mod variance;
+
+pub use scheduler::{baseline_cycles, zs_cycles, zs_cycles_for_slice, ReadMode};
+pub use subarray::SubArray;

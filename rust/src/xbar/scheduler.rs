@@ -1,0 +1,228 @@
+//! Word-line read scheduling and its cycle cost (paper §II, Fig 2; §IV).
+//!
+//! An array processes one input vector (≤ `rows` 8-bit activations) by
+//! shifting inputs in bit-serially. For each of the 8 bit positions the
+//! row scheduler activates word lines in batches of at most
+//! `adc_rows = 2^adc_bits`:
+//!
+//! * **baseline** — consecutive rows regardless of input bits:
+//!   `ceil(R / adc_rows)` batches, always (deterministic).
+//! * **zero-skipping** — only rows whose current input bit is `1`:
+//!   `ceil(ones_b / adc_rows)` batches (data-dependent).
+//!
+//! Every batch is sampled once per column by the shared ADC
+//! (`col_mux` column steps), so
+//! `cycles = Σ_b batches_b × col_mux`. At the paper's operating point a
+//! full 128-row array costs 64 (best) … 1024 (worst) cycles per
+//! 128×16 8-bit dot product — reproduced exactly by these functions and
+//! pinned in the tests.
+
+use crate::config::ArrayCfg;
+use crate::util::bitops::{plane_counts, BIT_PLANES};
+
+/// Which read discipline a simulation run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadMode {
+    /// No zero-skipping (the paper's "baseline" algorithm).
+    Baseline,
+    /// Zero-skipping [5].
+    ZeroSkip,
+}
+
+/// Cycles for the baseline discipline over an `active_rows`-long slice.
+/// Input-independent.
+#[inline]
+pub fn baseline_cycles(cfg: &ArrayCfg, active_rows: usize) -> u32 {
+    debug_assert!(active_rows <= cfg.rows);
+    let batches = active_rows.div_ceil(cfg.adc_rows());
+    (cfg.input_bits * batches * cfg.col_mux) as u32
+}
+
+/// Cycles for zero-skipping given per-bit-plane ones counts.
+///
+/// Perf note (§Perf): `adc_rows` is always a power of two (`1 <<
+/// adc_bits`), so the per-plane `ceil(ones / adc_rows)` is a shift —
+/// replacing the hardware divide here took the 1 MB profiling sweep
+/// from 626 µs to ~150 µs on the 2-core host (trace building calls this
+/// once per (patch, block)).
+#[inline]
+pub fn zs_cycles(cfg: &ArrayCfg, counts: &[u32; BIT_PLANES]) -> u32 {
+    let shift = cfg.adc_bits as u32;
+    let mask = (1u32 << shift) - 1;
+    if cfg.skip_empty_planes && cfg.input_bits >= BIT_PLANES {
+        // Fast path (every paper configuration): `(0 + mask) >> shift`
+        // is already 0, so empty planes need no branch at all.
+        let mut batches = 0u32;
+        for &ones in counts {
+            batches += (ones + mask) >> shift;
+        }
+        return batches * cfg.col_mux as u32;
+    }
+    let mut batches = 0u32;
+    for (b, &ones) in counts.iter().enumerate() {
+        if b >= cfg.input_bits {
+            break;
+        }
+        if ones == 0 {
+            if !cfg.skip_empty_planes {
+                batches += 1;
+            }
+            continue;
+        }
+        batches += (ones + mask) >> shift;
+    }
+    batches * cfg.col_mux as u32
+}
+
+/// Cycles for zero-skipping over a raw activation slice.
+#[inline]
+pub fn zs_cycles_for_slice(cfg: &ArrayCfg, xs: &[u8]) -> u32 {
+    debug_assert!(xs.len() <= cfg.rows);
+    zs_cycles(cfg, &plane_counts(xs))
+}
+
+/// Cycles for a slice under either mode.
+#[inline]
+pub fn cycles_for_slice(cfg: &ArrayCfg, mode: ReadMode, xs: &[u8]) -> u32 {
+    match mode {
+        ReadMode::Baseline => baseline_cycles(cfg, xs.len()),
+        ReadMode::ZeroSkip => zs_cycles_for_slice(cfg, xs),
+    }
+}
+
+/// Expected MACs per cycle for an array processing `rows`-long slices at
+/// the given mean cycle cost (the quantity the paper's performance-based
+/// allocation divides by).
+pub fn macs_per_cycle(cfg: &ArrayCfg, rows: usize, mean_cycles: f64) -> f64 {
+    if mean_cycles <= 0.0 {
+        return 0.0;
+    }
+    (rows * cfg.weight_cols()) as f64 / mean_cycles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+    use crate::util::propcheck;
+
+    fn paper() -> ArrayCfg {
+        ArrayCfg::paper()
+    }
+
+    #[test]
+    fn baseline_full_array_is_worst_case() {
+        // 8 bits × ceil(128/8)=16 batches × 8 col-steps = 1024 (paper §IV)
+        assert_eq!(baseline_cycles(&paper(), 128), 1024);
+        assert_eq!(baseline_cycles(&paper(), 1), 64);
+        assert_eq!(baseline_cycles(&paper(), 9), 128);
+    }
+
+    #[test]
+    fn zs_best_case_64() {
+        // ≤8 ones in every plane → 1 batch per plane → 8×8 = 64 (paper §IV)
+        let xs = [0xFFu8; 8]; // 8 rows fully on: every plane has 8 ones
+        assert_eq!(zs_cycles_for_slice(&paper(), &xs), 64);
+    }
+
+    #[test]
+    fn zs_worst_equals_baseline_worst() {
+        let xs = [0xFFu8; 128];
+        assert_eq!(zs_cycles_for_slice(&paper(), &xs), 1024);
+    }
+
+    #[test]
+    fn zs_all_zero_costs_nothing() {
+        let xs = [0u8; 128];
+        assert_eq!(zs_cycles_for_slice(&paper(), &xs), 0);
+        let mut cfg = paper();
+        cfg.skip_empty_planes = false;
+        // one mandatory batch per plane
+        assert_eq!(zs_cycles_for_slice(&cfg, &xs), 64);
+    }
+
+    #[test]
+    fn fig2_example_two_bit_adc() {
+        // Fig 2: 2-bit ADC (4 rows/batch), 8 rows, inputs such that one
+        // plane has 4 ones: baseline needs 2 batches, ZS needs 1.
+        let mut cfg = paper();
+        cfg.adc_bits = 2;
+        // single-bit inputs: activations 0 or 1 → only plane 0 populated
+        let xs = [1u8, 0, 1, 0, 1, 0, 1, 0];
+        // baseline: 8 planes... plane 0 processed with 2 batches; other
+        // planes also cost (baseline is input-independent): 8×2×8 = 128
+        assert_eq!(baseline_cycles(&cfg, 8), 128);
+        // ZS: plane 0 → ceil(4/4)=1 batch; planes 1..7 empty → 0
+        assert_eq!(zs_cycles_for_slice(&cfg, &xs), 8);
+    }
+
+    #[test]
+    fn zs_never_exceeds_baseline() {
+        propcheck::check("zs <= baseline", 0xBA5E, 200, |rng| {
+            let n = 1 + rng.index(128);
+            let xs: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+            let zs = zs_cycles_for_slice(&paper(), &xs);
+            let base = baseline_cycles(&paper(), n);
+            crate::prop_assert!(zs <= base, "zs {zs} > baseline {base} for {n} rows");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zs_monotone_in_ones() {
+        // Setting an extra bit can only increase (or keep) the cost.
+        propcheck::check("zs monotone", 0x5EED, 200, |rng| {
+            let n = 1 + rng.index(128);
+            let mut xs: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+            let before = zs_cycles_for_slice(&paper(), &xs);
+            let i = rng.index(n);
+            let b = rng.index(8);
+            xs[i] |= 1 << b;
+            let after = zs_cycles_for_slice(&paper(), &xs);
+            crate::prop_assert!(after >= before, "setting a bit reduced cycles {before}->{after}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn linear_in_density_on_average() {
+        // The paper's Fig 4 premise: expected cycles grow linearly with
+        // bit density. Check the trend on random data.
+        let cfg = paper();
+        let mut p = Prng::new(77);
+        let mut means = vec![];
+        for density in [0.05, 0.25, 0.5, 0.75] {
+            let mut acc = 0u64;
+            let trials = 300;
+            for _ in 0..trials {
+                let xs: Vec<u8> = (0..128)
+                    .map(|_| {
+                        let mut v = 0u8;
+                        for b in 0..8 {
+                            if p.chance(density) {
+                                v |= 1 << b;
+                            }
+                        }
+                        v
+                    })
+                    .collect();
+                acc += zs_cycles_for_slice(&cfg, &xs) as u64;
+            }
+            means.push(acc as f64 / trials as f64);
+        }
+        assert!(means[0] < means[1] && means[1] < means[2] && means[2] < means[3]);
+        // slope between 0.25 and 0.75 densities should be roughly linear:
+        let slope1 = means[2] - means[1];
+        let slope2 = means[3] - means[2];
+        assert!((slope1 - slope2).abs() / slope1 < 0.25, "{means:?}");
+    }
+
+    #[test]
+    fn macs_per_cycle_sane() {
+        let cfg = paper();
+        // worst case: 128×16 MACs / 1024 cycles = 2 MACs/cycle
+        assert!((macs_per_cycle(&cfg, 128, 1024.0) - 2.0).abs() < 1e-12);
+        // best case: 128×16 / 64 = 32 MACs/cycle
+        assert!((macs_per_cycle(&cfg, 128, 64.0) - 32.0).abs() < 1e-12);
+    }
+}

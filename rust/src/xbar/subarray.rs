@@ -1,0 +1,213 @@
+//! Functional sub-array: bit-serial, ADC-batched matrix-vector product.
+//!
+//! Implements exactly what the hardware in Fig 1(B) computes: 8-bit
+//! signed weights stored as 8 binary cells along a row (two's
+//! complement, MSB plane carries weight −2⁷), 8-bit unsigned inputs
+//! shifted in LSB-first, each input bit-plane processed in word-line
+//! batches of ≤ `adc_rows`, ADC codes shift-added into 32-bit partial
+//! sums. The result is the *exact* integer dot product (the 3-bit ADC
+//! never saturates under the batching discipline), so the whole
+//! simulator can be validated against plain integer matmul — and against
+//! the L1 Pallas kernel, which implements the same procedure in JAX.
+
+use super::adc::Adc;
+use super::scheduler::{cycles_for_slice, ReadMode};
+use crate::config::ArrayCfg;
+
+/// One programmed sub-array: `rows × weight_cols` 8-bit weights held as
+/// bit-planes, plus the read machinery.
+#[derive(Debug, Clone)]
+pub struct SubArray {
+    cfg: ArrayCfg,
+    /// Cell bit-planes: `planes[b][r * weight_cols + c]` = bit `b` of the
+    /// weight at (row r, 8-bit column c).
+    planes: Vec<Vec<u8>>,
+    /// Active rows (≤ cfg.rows) — the slice of the layer matrix mapped
+    /// onto this array.
+    rows: usize,
+    adc: Adc,
+}
+
+impl SubArray {
+    /// Program the array with `rows × weight_cols` signed 8-bit weights
+    /// (row-major). Rows beyond `weights.len()/weight_cols` stay
+    /// unprogrammed (open word lines).
+    pub fn program(cfg: ArrayCfg, weights: &[i8]) -> SubArray {
+        assert_eq!(
+            cfg.cell_bits, 1,
+            "the functional sub-array models binary cells (multi-level \
+             cells change density/mapping only — see mapping::grid)"
+        );
+        let wcols = cfg.weight_cols();
+        assert!(weights.len() % wcols == 0, "weights not a whole number of rows");
+        let rows = weights.len() / wcols;
+        assert!(rows <= cfg.rows, "{rows} rows exceed array height {}", cfg.rows);
+        let mut planes = vec![vec![0u8; rows * wcols]; cfg.weight_bits];
+        for (i, &w) in weights.iter().enumerate() {
+            let u = w as u8; // two's complement bit pattern
+            for (b, plane) in planes.iter_mut().enumerate() {
+                plane[i] = (u >> b) & 1;
+            }
+        }
+        SubArray { adc: Adc::new(cfg.adc_bits), cfg, planes, rows }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cfg(&self) -> &ArrayCfg {
+        &self.cfg
+    }
+
+    /// Execute one dot product: `x` (len == rows, unsigned 8-bit) against
+    /// all weight columns. Returns `(psums, cycles)` where `psums[c]` is
+    /// the exact i32 partial sum for weight column `c` and `cycles` the
+    /// read cost under `mode`.
+    pub fn matvec(&self, x: &[u8], mode: ReadMode) -> (Vec<i32>, u32) {
+        assert_eq!(x.len(), self.rows, "input length {} != rows {}", x.len(), self.rows);
+        let wcols = self.cfg.weight_cols();
+        let adc_rows = self.cfg.adc_rows();
+        let mut psums = vec![0i64; wcols];
+
+        // For each input bit plane (LSB first)…
+        for ib in 0..self.cfg.input_bits {
+            // …select the active rows for this plane.
+            let active: Vec<usize> = match mode {
+                ReadMode::ZeroSkip => {
+                    (0..self.rows).filter(|&r| (x[r] >> ib) & 1 == 1).collect()
+                }
+                // Baseline drives consecutive row groups; rows whose input
+                // bit is 0 contribute no current.
+                ReadMode::Baseline => (0..self.rows).collect(),
+            };
+            // …and read them in batches of ≤ adc_rows per column.
+            for batch in active.chunks(adc_rows) {
+                for (wb, plane) in self.planes.iter().enumerate() {
+                    // weight-bit significance: two's complement MSB is negative
+                    let sig: i64 = if wb == self.cfg.weight_bits - 1 {
+                        -(1i64 << wb)
+                    } else {
+                        1i64 << wb
+                    };
+                    for (c, psum) in psums.iter_mut().enumerate() {
+                        let mut sum = 0u32;
+                        for &r in batch {
+                            let inp = match mode {
+                                ReadMode::ZeroSkip => 1u32, // active ⇒ bit is 1
+                                ReadMode::Baseline => ((x[r] >> ib) & 1) as u32,
+                            };
+                            sum += inp * plane[r * wcols + c] as u32;
+                        }
+                        let code = self.adc.read_ideal(sum);
+                        *psum += sig * ((code as i64) << ib);
+                    }
+                }
+            }
+        }
+        let psums32 = psums.into_iter().map(|p| p as i32).collect();
+        (psums32, cycles_for_slice(&self.cfg, mode, x))
+    }
+
+    /// Reference dot product via plain integer arithmetic (no ADC
+    /// batching) — what the analog path must equal.
+    pub fn matvec_ref(&self, x: &[u8]) -> Vec<i32> {
+        let wcols = self.cfg.weight_cols();
+        let mut out = vec![0i32; wcols];
+        for r in 0..self.rows {
+            // reconstruct the signed weight from planes
+            for (c, o) in out.iter_mut().enumerate() {
+                let mut u = 0u8;
+                for (b, plane) in self.planes.iter().enumerate() {
+                    u |= plane[r * wcols + c] << b;
+                }
+                *o += (u as i8) as i32 * x[r] as i32;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+    use crate::util::propcheck;
+
+    fn random_weights(rng: &mut Prng, rows: usize, wcols: usize) -> Vec<i8> {
+        (0..rows * wcols).map(|_| rng.next_u32() as i8).collect()
+    }
+
+    #[test]
+    fn zero_skip_matches_reference_exactly() {
+        propcheck::check("ZS matvec == ref", 0xA11A, 60, |rng| {
+            let cfg = ArrayCfg::paper();
+            let rows = 1 + rng.index(cfg.rows);
+            let w = random_weights(rng, rows, cfg.weight_cols());
+            let sa = SubArray::program(cfg, &w);
+            let x: Vec<u8> = (0..rows).map(|_| rng.next_u32() as u8).collect();
+            let (got, _) = sa.matvec(&x, ReadMode::ZeroSkip);
+            let want = sa.matvec_ref(&x);
+            crate::prop_assert!(got == want, "rows={rows}: {got:?} != {want:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn baseline_matches_reference_exactly() {
+        propcheck::check("baseline matvec == ref", 0xB11B, 40, |rng| {
+            let cfg = ArrayCfg::paper();
+            let rows = 1 + rng.index(cfg.rows);
+            let w = random_weights(rng, rows, cfg.weight_cols());
+            let sa = SubArray::program(cfg, &w);
+            let x: Vec<u8> = (0..rows).map(|_| rng.next_u32() as u8).collect();
+            let (got, _) = sa.matvec(&x, ReadMode::Baseline);
+            crate::prop_assert!(got == sa.matvec_ref(&x), "baseline mismatch rows={rows}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cycle_costs_reported() {
+        let cfg = ArrayCfg::paper();
+        let w = vec![1i8; 128 * 16];
+        let sa = SubArray::program(cfg, &w);
+        let (_, c_worst) = sa.matvec(&[0xFF; 128], ReadMode::ZeroSkip);
+        assert_eq!(c_worst, 1024);
+        let (_, c_base) = sa.matvec(&[0u8; 128], ReadMode::Baseline);
+        assert_eq!(c_base, 1024); // baseline pays full cost on zeros
+        let (_, c_zs) = sa.matvec(&[0u8; 128], ReadMode::ZeroSkip);
+        assert_eq!(c_zs, 0);
+    }
+
+    #[test]
+    fn negative_weights_recombine_correctly() {
+        let cfg = ArrayCfg::paper();
+        let mut w = vec![0i8; 128 * 16];
+        w[0] = -128; // row 0, col 0: most negative weight
+        w[1] = -1; // row 0, col 1
+        let sa = SubArray::program(cfg, &w);
+        let mut x = vec![0u8; 128];
+        x[0] = 255;
+        let (got, _) = sa.matvec(&x, ReadMode::ZeroSkip);
+        assert_eq!(got[0], -128 * 255);
+        assert_eq!(got[1], -255);
+    }
+
+    #[test]
+    fn saturating_adc_loses_information() {
+        // With a 1-bit ADC the batch is 2 rows and codes cap at 2; driving
+        // 2 rows with weight-bit 1 works, but an undersized ADC paired
+        // with oversized batches (mis-configured: batching at 8 with a
+        // 1-bit ADC) would clip. We emulate by reading 8-row batches on a
+        // 1-bit ADC via a custom cfg where adc_bits=1 but batching uses
+        // adc_rows=2 — i.e. correctness holds because batch == adc range.
+        let mut cfg = ArrayCfg::paper();
+        cfg.adc_bits = 1;
+        let w = vec![1i8; 16 * 16];
+        let sa = SubArray::program(cfg, &w);
+        let x = vec![1u8; 16];
+        let (got, _) = sa.matvec(&x, ReadMode::ZeroSkip);
+        assert_eq!(got[0], 16); // still exact: batches shrink with the ADC
+    }
+}

@@ -1,0 +1,106 @@
+//! Device-to-device variance model (paper §III-A).
+//!
+//! The paper caps ADC reads at 8 rows because "state of the art devices
+//! have 5% device-to-device variance [4], and thus at most 8 rows (3-bit)
+//! can be read at once". This module quantifies that: each active cell
+//! contributes an on-current of `N(1, sigma)` (off cells contribute 0);
+//! the ADC rounds the summed current to the nearest integer code. A read
+//! errs when the total deviation exceeds ±0.5. With `k` active cells the
+//! deviation is `N(0, sigma·√k)`, so the bit-error rate per read is
+//! `2·Q(0.5 / (sigma·√k))` — negligible at k=8, σ=5%, and unacceptable at
+//! the 64–128 rows prior work assumed.
+
+use crate::util::prng::Prng;
+
+/// Analytic per-read error probability for `k` simultaneously-read active
+/// cells at relative deviation `sigma`.
+pub fn read_error_rate(k: usize, sigma: f64) -> f64 {
+    if k == 0 || sigma <= 0.0 {
+        return 0.0;
+    }
+    let s = sigma * (k as f64).sqrt();
+    2.0 * q_function(0.5 / s)
+}
+
+/// Gaussian tail Q(x) = P(N(0,1) > x), via erfc.
+pub fn q_function(x: f64) -> f64 {
+    0.5 * erfc(x / std::f64::consts::SQRT_2)
+}
+
+/// Complementary error function (Abramowitz–Stegun 7.1.26, |err| ≤ 1.5e-7).
+pub fn erfc(x: f64) -> f64 {
+    if x < 0.0 {
+        return 2.0 - erfc(-x);
+    }
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    poly * (-x * x).exp()
+}
+
+/// Monte-Carlo read error rate: simulate `trials` reads of `k` active
+/// cells with per-cell current `N(1, sigma)` and count rounding errors.
+pub fn simulate_read_error_rate(k: usize, sigma: f64, trials: usize, seed: u64) -> f64 {
+    let mut rng = Prng::new(seed);
+    let mut errors = 0usize;
+    for _ in 0..trials {
+        let mut current = 0.0;
+        for _ in 0..k {
+            current += 1.0 + sigma * rng.normal();
+        }
+        if (current.round() as i64) != k as i64 {
+            errors += 1;
+        }
+    }
+    errors as f64 / trials as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_operating_point_is_error_free() {
+        // 8 rows at 5% variance: σ_total = 0.1414, 0.5/σ = 3.53 SDs
+        let e = read_error_rate(8, 0.05);
+        assert!(e < 1e-3, "8-row read error {e} should be negligible");
+    }
+
+    #[test]
+    fn prior_work_rows_fail() {
+        // 128 rows at 5% (ISAAC/Peng et al. assumption): σ_total = 0.566
+        let e = read_error_rate(128, 0.05);
+        assert!(e > 0.3, "128-row read error {e} should be large (paper §III-A)");
+    }
+
+    #[test]
+    fn analytic_matches_monte_carlo() {
+        for &k in &[8usize, 32, 128] {
+            let a = read_error_rate(k, 0.05);
+            let m = simulate_read_error_rate(k, 0.05, 200_000, 42);
+            assert!(
+                (a - m).abs() < 0.01 + 0.1 * a,
+                "k={k}: analytic {a} vs monte-carlo {m}"
+            );
+        }
+    }
+
+    #[test]
+    fn erfc_reference_values() {
+        assert!((erfc(0.0) - 1.0).abs() < 1e-6);
+        assert!((erfc(1.0) - 0.157299).abs() < 1e-5);
+        assert!((erfc(-1.0) - 1.842701).abs() < 1e-5);
+        assert!(erfc(4.0) < 1e-7);
+    }
+
+    #[test]
+    fn error_rate_monotone_in_rows() {
+        let mut prev = 0.0;
+        for k in [2usize, 8, 32, 64, 128] {
+            let e = read_error_rate(k, 0.05);
+            assert!(e >= prev);
+            prev = e;
+        }
+    }
+}

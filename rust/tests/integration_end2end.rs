@@ -1,0 +1,98 @@
+//! End-to-end smoke over the whole stack + live-dispatch correctness.
+
+use cimfab::config::ArrayCfg;
+use cimfab::coordinator::dispatch::run_conv_blockwise;
+use cimfab::coordinator::{Driver, DriverOpts, StatsSource};
+use cimfab::tensor::Tensor;
+use cimfab::util::prng::Prng;
+
+#[test]
+fn both_networks_full_pipeline_synthetic() {
+    for (net, hw) in [("resnet18", 32usize), ("vgg11", 32)] {
+        let d = Driver::prepare(DriverOpts {
+            net: net.into(),
+            hw,
+            stats: StatsSource::Synthetic,
+            profile_images: 1,
+            sim_images: 4,
+            seed: 3,
+            artifacts_dir: "artifacts".into(),
+        })
+        .unwrap();
+        let results = d.run_all(d.min_pes() * 2).unwrap();
+        assert_eq!(results.len(), 4);
+        for (alg, r) in &results {
+            assert!(
+                r.throughput_ips > 0.0 && r.throughput_ips.is_finite(),
+                "{net}/{}: bad throughput",
+                alg.name()
+            );
+            assert!(r.chip_util > 0.0 && r.chip_util <= 1.0);
+            assert!(
+                r.noc.peak_link_utilization < 1.0,
+                "{net}/{}: NoC saturated ({:.2})",
+                alg.name(),
+                r.noc.peak_link_utilization
+            );
+        }
+    }
+}
+
+#[test]
+fn live_dispatch_verifies_many_shapes() {
+    let mut rng = Prng::new(0xD15);
+    let cases = [
+        (8usize, 4usize, 6usize, 1usize, vec![1usize]),
+        (16, 8, 8, 1, vec![2, 1]),
+        (32, 8, 6, 2, vec![1, 2, 1]),
+    ];
+    for (cin, cout, hw, stride, dups) in cases {
+        let input: Tensor<u8> = Tensor::from_fn(&[cin, hw, hw], |_| (rng.next_u32() as u8) & 0x7F);
+        let weights: Tensor<i8> = Tensor::from_fn(&[cout, cin, 3, 3], |_| rng.next_u32() as i8);
+        let r = run_conv_blockwise(&ArrayCfg::paper(), &input, &weights, stride, 1, &dups)
+            .unwrap();
+        assert!(r.verified, "cin={cin} cout={cout} hw={hw} stride={stride}");
+    }
+}
+
+#[test]
+fn fig_tables_render_from_driver() {
+    let d = Driver::prepare(DriverOpts {
+        net: "resnet18".into(),
+        hw: 32,
+        stats: StatsSource::Synthetic,
+        profile_images: 1,
+        sim_images: 4,
+        seed: 8,
+        artifacts_dir: "artifacts".into(),
+    })
+    .unwrap();
+    let fig4 = cimfab::report::fig4_table(&d.map, &d.profile).render();
+    assert_eq!(fig4.lines().count(), 2 + 20, "one row per conv layer");
+    // fig6 layers exist: 9-block and 18-block layers
+    assert!(d.map.grids.iter().any(|g| g.blocks_per_copy == 9));
+    assert!(d.map.grids.iter().any(|g| g.blocks_per_copy == 18));
+    let results = d.run_all(129).unwrap();
+    let summary = cimfab::report::speedup_summary(&results).render();
+    assert!(summary.contains("block-wise"));
+}
+
+#[test]
+fn cli_binary_help_runs() {
+    // `cimfab` with no args prints help and exits 0 — checks the binary
+    // links and the CLI parser behaves.
+    let exe = env!("CARGO_BIN_EXE_cimfab");
+    let out = std::process::Command::new(exe).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("USAGE"), "unexpected help text: {text}");
+}
+
+#[test]
+fn cli_variance_subcommand() {
+    let exe = env!("CARGO_BIN_EXE_cimfab");
+    let out = std::process::Command::new(exe).arg("variance").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("rows/read"));
+}

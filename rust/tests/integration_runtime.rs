@@ -1,0 +1,111 @@
+//! Integration: the PJRT runtime against the AOT artifacts.
+//!
+//! These tests need `make artifacts` to have run; they are skipped (with
+//! a loud message) when the artifacts are missing so `cargo test` still
+//! works in a fresh checkout.
+
+use cimfab::config::ArrayCfg;
+use cimfab::runtime::{CimKernel, Engine, GoldenModel, Manifest};
+use cimfab::tensor::Tensor;
+use cimfab::util::bitops;
+use cimfab::util::prng::Prng;
+use cimfab::xbar::{ReadMode, SubArray};
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn golden_model_runs_and_shapes_match() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    for net in ["resnet18", "vgg11"] {
+        let model = GoldenModel::load(&engine, &m, net).unwrap();
+        let (acts, logits) = model.run(&GoldenModel::gen_image(model.meta.hw, 1)).unwrap();
+        assert_eq!(acts.len(), model.meta.conv_layers.len());
+        assert_eq!(logits.len(), model.meta.num_classes);
+        assert!(logits.iter().all(|l| l.is_finite()));
+        for (a, c) in acts.iter().zip(&model.meta.conv_layers) {
+            assert_eq!(a.shape()[0], c.in_ch, "{net}/{}", c.name);
+        }
+    }
+}
+
+#[test]
+fn golden_outputs_are_deterministic() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let model = GoldenModel::load(&engine, &m, "vgg11").unwrap();
+    let img = GoldenModel::gen_image(model.meta.hw, 2);
+    let (a1, l1) = model.run(&img).unwrap();
+    let (a2, l2) = model.run(&img).unwrap();
+    assert_eq!(l1, l2);
+    for (x, y) in a1.iter().zip(&a2) {
+        assert_eq!(x.data(), y.data());
+    }
+}
+
+#[test]
+fn pallas_kernel_equals_rust_subarray_bit_exactly() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let kernel = CimKernel::load(&engine, &m).unwrap();
+    let mut rng = Prng::new(0xBEEF);
+    for trial in 0..3 {
+        let xs: Vec<u8> =
+            (0..kernel.patches * kernel.rows).map(|_| rng.next_u32() as u8).collect();
+        let ws: Vec<i8> = (0..kernel.rows * kernel.cols).map(|_| rng.next_u32() as i8).collect();
+        let got = kernel.matmul(&xs, &ws).unwrap();
+        let mut cfg = ArrayCfg::paper();
+        cfg.cols = kernel.cols * cfg.weight_bits;
+        let sa = SubArray::program(cfg, &ws);
+        let mut want = Vec::new();
+        for p in 0..kernel.patches {
+            want.extend(
+                sa.matvec(&xs[p * kernel.rows..(p + 1) * kernel.rows], ReadMode::ZeroSkip).0,
+            );
+        }
+        assert_eq!(got, want, "trial {trial}");
+    }
+}
+
+#[test]
+fn golden_activation_densities_are_plausible() {
+    // The L2 model's statistics must support the paper's premise: the
+    // stem sees dense pixels, deep layers see sparse activations.
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let model = GoldenModel::load(&engine, &m, "resnet18").unwrap();
+    let (acts, _) = model.run(&GoldenModel::gen_image(model.meta.hw, 3)).unwrap();
+    let density = |t: &Tensor<u8>| bitops::bit_density(t.data());
+    let stem = density(&acts[0]);
+    let deep: Vec<f64> = acts[4..].iter().map(density).collect();
+    let deep_mean = deep.iter().sum::<f64>() / deep.len() as f64;
+    assert!(stem > 0.25, "stem density {stem} not pixel-like");
+    assert!(deep_mean < stem, "deep layers ({deep_mean}) must be sparser than stem ({stem})");
+}
+
+#[test]
+fn golden_stats_drive_the_full_driver() {
+    let Some(_) = manifest() else { return };
+    use cimfab::coordinator::{Driver, DriverOpts, StatsSource};
+    let d = Driver::prepare(DriverOpts {
+        net: "vgg11".into(),
+        hw: 32,
+        stats: StatsSource::Golden,
+        profile_images: 1,
+        sim_images: 4,
+        seed: 5,
+        artifacts_dir: "artifacts".into(),
+    })
+    .unwrap();
+    let results = d.run_all(d.min_pes() * 2).unwrap();
+    let bw = results.iter().find(|(a, _)| a.blockwise_dataflow()).unwrap().1.throughput_ips;
+    assert!(bw > 0.0);
+}
