@@ -7,14 +7,15 @@
 //! dataflow — duplicates are not whole-layer copies — so that cell runs
 //! the plan flattened to its per-layer minimum, which is what a
 //! layer-wise machine could actually use.)
+//!
+//! The shared prefix comes from the staged pipeline; the custom
+//! plan × dataflow cells drive the allocator/simulator directly.
 
 use cimfab::alloc::{allocate, Algorithm};
-use cimfab::config::{ArrayCfg, ChipCfg};
-use cimfab::dnn::resnet18;
-use cimfab::mapping::{map_network, place, AllocationPlan};
+use cimfab::config::ChipCfg;
+use cimfab::mapping::{place, AllocationPlan};
+use cimfab::pipeline::{self, PrefixSpec, StatsSource};
 use cimfab::sim::{simulate, Dataflow, SimCfg};
-use cimfab::stats::synth::{synth_activations, SynthCfg};
-use cimfab::stats::{trace_from_activations, NetworkProfile};
 use cimfab::util::bench::{banner, Bencher};
 use cimfab::util::table::Table;
 use cimfab::xbar::ReadMode;
@@ -24,15 +25,23 @@ fn main() {
         "Ablation A — allocation vs dataflow",
         "which part of the 1.29x block-wise gain comes from allocation vs dataflow?",
     );
-    let g = resnet18(64, 1000);
-    let map = map_network(&g, ArrayCfg::paper(), false);
-    let acts = synth_activations(&g, &map, 2, 7, SynthCfg::default());
-    let trace = trace_from_activations(&g, &map, &acts);
-    let prof = NetworkProfile::from_trace(&map, &trace);
+    let prep = pipeline::prepare(
+        &PrefixSpec {
+            net: "resnet18".into(),
+            hw: 64,
+            stats: StatsSource::Synthetic,
+            profile_images: 2,
+            seed: 7,
+            artifacts_dir: "artifacts".into(),
+        },
+        None,
+    )
+    .unwrap();
+    let (map, trace, prof) = (&prep.map, &prep.trace, &prep.profile);
     let chip = ChipCfg::paper(172);
 
-    let perf_plan = allocate(Algorithm::PerfBased, &map, &prof, chip.total_arrays()).unwrap();
-    let block_plan = allocate(Algorithm::BlockWise, &map, &prof, chip.total_arrays()).unwrap();
+    let perf_plan = allocate(Algorithm::PerfBased, map, prof, chip.total_arrays()).unwrap();
+    let block_plan = allocate(Algorithm::BlockWise, map, prof, chip.total_arrays()).unwrap();
     // layer-wise machine running the block-wise plan: flatten to uniform
     // per-layer counts (min over blocks)
     let block_plan_flat = AllocationPlan {
@@ -47,15 +56,15 @@ fn main() {
     let mut b = Bencher::new(0, 2);
     let mut t = Table::new(["plan", "dataflow", "inferences/s"]);
     let mut cell = |name: &str, plan: &AllocationPlan, flow: Dataflow, b: &mut Bencher| -> f64 {
-        let placement = place(&map, plan, &chip).unwrap();
+        let placement = place(map, plan, &chip).unwrap();
         let mut ips = 0.0;
-        b.bench(&format!("{name}"), || {
+        b.bench(name, || {
             let r = simulate(
                 &chip,
-                &map,
+                map,
                 plan,
                 &placement,
-                &trace,
+                trace,
                 SimCfg { mode: ReadMode::ZeroSkip, dataflow: flow, images: 8, warmup: 2 },
             );
             ips = r.throughput_ips;

@@ -7,9 +7,14 @@
 //! DESIGN.md §3); the *shape* — ordering, growth with design size, and a
 //! large baseline/weight-based gap vs a small perf-based gap — is the
 //! reproduction target. EXPERIMENTS.md records paper-vs-measured.
+//!
+//! Runs on the staged pipeline: the prefix (graph → map → stats → trace
+//! → profile) is prepared once, then the 6 sizes × 4 algorithms fan out
+//! over the sweep executor — timed serial and parallel, with the
+//! parallel outcomes checked identical to the serial reference.
 
 use cimfab::alloc::Algorithm;
-use cimfab::coordinator::{Driver, DriverOpts, StatsSource};
+use cimfab::pipeline::{self, run_scenarios_prepared, PrefixSpec, StatsSource, SweepCfg};
 use cimfab::report;
 use cimfab::util::bench::{banner, Bencher};
 
@@ -18,32 +23,55 @@ fn main() {
         "Fig 8 — ResNet18",
         "performance vs #PEs, 4 algorithms; paper: 8.83x/7.47x/1.29x for block-wise",
     );
-    let d = Driver::prepare(DriverOpts {
+    let spec = PrefixSpec {
         net: "resnet18".into(),
         hw: 64,
         stats: StatsSource::Synthetic,
         profile_images: 2,
-        sim_images: 8,
         seed: 7,
         artifacts_dir: "artifacts".into(),
-    })
-    .unwrap();
-    println!("min design size: {} PEs ({} arrays)\n", d.min_pes(), d.map.min_arrays());
-
-    let sizes = d.sweep_sizes(6); // 86, 122, 172, 243, 344, 486
+    };
     let mut b = Bencher::new(0, 1);
-    let mut t = report::fig8_table();
+    let mut prep = None;
+    b.bench("prepare shared prefix (graph->map->stats->trace->profile)", || {
+        prep = Some(pipeline::prepare(&spec, None).unwrap());
+    });
+    let prep = prep.unwrap();
+    println!("min design size: {} PEs ({} arrays)\n", prep.min_pes(), prep.map.min_arrays());
+
+    let sizes = pipeline::sweep_sizes(prep.min_pes(), 6); // 86, 122, 172, 243, 344, 486
+    let scenarios = pipeline::scenarios_for(&spec, &sizes, &Algorithm::all(), 8);
+
+    let mut serial = Vec::new();
+    b.bench("sweep 24 scenarios, serial", || {
+        serial = run_scenarios_prepared(&prep, &scenarios, &SweepCfg::serial()).unwrap();
+    });
+    let threads = pipeline::executor::default_threads();
+    let mut parallel = Vec::new();
+    b.bench(&format!("sweep 24 scenarios, {threads} threads"), || {
+        parallel = run_scenarios_prepared(&prep, &scenarios, &SweepCfg::parallel()).unwrap();
+    });
+    for (s, p) in serial.iter().zip(&parallel) {
+        assert_eq!(
+            s.result.makespan,
+            p.result.makespan,
+            "parallel != serial at {}",
+            s.scenario.id()
+        );
+        assert_eq!(s.result.layer_util, p.result.layer_util);
+    }
+
+    println!("{}", report::fig8_from_outcomes(&serial).render());
+
     let mut ratios = Vec::new();
     for &pes in &sizes {
-        let mut results = Vec::new();
-        b.bench(&format!("simulate 4 algorithms @ {pes} PEs"), || {
-            results = d.run_all(pes).unwrap();
-        });
-        for (alg, r) in &results {
-            t.row(report::fig8_row(*alg, pes, r));
-        }
         let get = |alg: Algorithm| {
-            results.iter().find(|(a, _)| *a == alg).unwrap().1.throughput_ips
+            serial
+                .iter()
+                .find(|o| o.scenario.alg == alg && o.scenario.pes == pes)
+                .unwrap()
+                .result
+                .throughput_ips
         };
         ratios.push((
             pes,
@@ -52,7 +80,6 @@ fn main() {
             get(Algorithm::BlockWise) / get(Algorithm::PerfBased),
         ));
     }
-    println!("{}", t.render());
 
     println!("block-wise speedups by design size (paper: 8.83x / 7.47x / 1.29x):");
     let mut tt = cimfab::util::table::Table::new(["PEs", "vs baseline", "vs weight", "vs perf"]);

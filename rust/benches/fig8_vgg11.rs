@@ -3,36 +3,46 @@
 //! gains than ResNet18 because "it is more difficult to allocate evenly
 //! amongst a deeper network and therefore block-wise allocation yields
 //! better results on deeper networks."
+//!
+//! Both networks run through the staged pipeline sweep executor; the
+//! per-net prefix is prepared once and shared across every scenario.
 
 use cimfab::alloc::Algorithm;
-use cimfab::coordinator::{Driver, DriverOpts, StatsSource};
+use cimfab::pipeline::{self, run_scenarios_prepared, PrefixSpec, StatsSource, SweepCfg};
 use cimfab::report;
 use cimfab::util::bench::{banner, Bencher};
 
 fn run_net(net: &str, hw: usize, steps: usize) -> Vec<(usize, f64)> {
-    let d = Driver::prepare(DriverOpts {
+    let spec = PrefixSpec {
         net: net.into(),
         hw,
         stats: StatsSource::Synthetic,
         profile_images: 2,
-        sim_images: 8,
         seed: 7,
         artifacts_dir: "artifacts".into(),
-    })
-    .unwrap();
+    };
+    let prep = pipeline::prepare(&spec, None).unwrap();
+    let scenarios = pipeline::scenarios_for(
+        &spec,
+        &pipeline::sweep_sizes(prep.min_pes(), steps),
+        &Algorithm::all(),
+        8,
+    );
+    let outcomes = run_scenarios_prepared(&prep, &scenarios, &SweepCfg::parallel()).unwrap();
+    println!("== {net} ==\n{}", report::fig8_from_outcomes(&outcomes).render());
+
     let mut out = Vec::new();
-    let mut t = report::fig8_table();
-    for pes in d.sweep_sizes(steps) {
-        let results = d.run_all(pes).unwrap();
-        for (alg, r) in &results {
-            t.row(report::fig8_row(*alg, pes, r));
-        }
+    for pes in pipeline::sweep_sizes(prep.min_pes(), steps) {
         let get = |alg: Algorithm| {
-            results.iter().find(|(a, _)| *a == alg).unwrap().1.throughput_ips
+            outcomes
+                .iter()
+                .find(|o| o.scenario.alg == alg && o.scenario.pes == pes)
+                .unwrap()
+                .result
+                .throughput_ips
         };
         out.push((pes, get(Algorithm::BlockWise) / get(Algorithm::PerfBased)));
     }
-    println!("== {net} ==\n{}", t.render());
     out
 }
 

@@ -4,9 +4,12 @@
 //! different array level performance given that zero skipping is not
 //! used"). Paper: block-wise sustains the highest utilization across
 //! nearly all layers; weight-based performs very poorly.
+//!
+//! Runs on the staged pipeline: one shared prefix, four scenarios on the
+//! sweep executor.
 
 use cimfab::alloc::Algorithm;
-use cimfab::coordinator::{Driver, DriverOpts, StatsSource};
+use cimfab::pipeline::{self, run_scenarios_prepared, PrefixSpec, StatsSource, SweepCfg};
 use cimfab::report;
 use cimfab::util::bench::{banner, Bencher};
 
@@ -15,30 +18,33 @@ fn main() {
         "Fig 9",
         "array utilization by ResNet18 layer; paper: block-wise highest nearly everywhere",
     );
-    let d = Driver::prepare(DriverOpts {
+    let spec = PrefixSpec {
         net: "resnet18".into(),
         hw: 64,
         stats: StatsSource::Synthetic,
         profile_images: 2,
-        sim_images: 8,
         seed: 7,
         artifacts_dir: "artifacts".into(),
-    })
-    .unwrap();
-    let pes = d.min_pes() * 2;
+    };
+    let prep = pipeline::prepare(&spec, None).unwrap();
+    let pes = prep.min_pes() * 2;
+    let scenarios = pipeline::scenarios_for(&spec, &[pes], &Algorithm::all(), 8);
 
     let mut b = Bencher::new(0, 2);
-    let mut results = Vec::new();
-    b.bench(&format!("simulate 4 algorithms @ {pes} PEs"), || {
-        results = d.run_all(pes).unwrap();
+    let mut outcomes = Vec::new();
+    b.bench(&format!("simulate 4 algorithms @ {pes} PEs (pipeline sweep)"), || {
+        outcomes = run_scenarios_prepared(&prep, &scenarios, &SweepCfg::parallel()).unwrap();
     });
 
-    let zs: Vec<(Algorithm, &cimfab::sim::SimResult)> =
-        results.iter().filter(|(a, _)| a.zero_skip()).map(|(a, r)| (*a, r)).collect();
-    println!("{}", report::fig9_table(&d.map, &zs).render());
+    let zs: Vec<(Algorithm, &cimfab::sim::SimResult)> = outcomes
+        .iter()
+        .filter(|o| o.scenario.alg.zero_skip())
+        .map(|o| (o.scenario.alg, &o.result))
+        .collect();
+    println!("{}", report::fig9_table(&prep.map, &zs).render());
 
     let mean_util = |alg: Algorithm| {
-        let r = &results.iter().find(|(a, _)| *a == alg).unwrap().1;
+        let r = &outcomes.iter().find(|o| o.scenario.alg == alg).unwrap().result;
         r.layer_util.iter().sum::<f64>() / r.layer_util.len() as f64
     };
     let (wb, pb, bw) = (

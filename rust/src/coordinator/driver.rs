@@ -1,34 +1,21 @@
-//! End-to-end driver: profile → allocate → simulate → report.
+//! End-to-end driver: a thin convenience wrapper over the staged
+//! experiment pipeline ([`crate::pipeline`]).
+//!
+//! `Driver::prepare` runs the pipeline's shared prefix stages
+//! (`BuildGraph → Map → Stats → Trace → Profile`) for one [`DriverOpts`];
+//! `Driver::run` executes the scenario stages (`Allocate → Place →
+//! Simulate`) for one algorithm × design size. Sweeps over many
+//! scenarios should use [`crate::pipeline::run_sweep`] directly — it
+//! shares the prepared prefix across scenarios and runs them on a
+//! worker pool.
 
-use crate::alloc::{allocate, Algorithm};
-use crate::config::{ArrayCfg, ChipCfg};
-use crate::dnn::{resnet18, vgg11, Graph};
-use crate::mapping::{map_network, place, AllocationPlan, NetworkMap};
-use crate::runtime::{Engine, GoldenModel, Manifest};
-use crate::sim::{simulate, SimCfg, SimResult};
-use crate::stats::synth::{synth_activations, SynthCfg};
-use crate::stats::{trace_from_activations, NetTrace, NetworkProfile};
+use crate::alloc::Algorithm;
+use crate::mapping::AllocationPlan;
+use crate::pipeline::{self, PrefixSpec, PreparedView, Scenario};
+use crate::sim::SimResult;
 use anyhow::Result;
 
-/// Where activation statistics come from.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum StatsSource {
-    /// Synthetic generator (no artifacts needed; benches use this).
-    Synthetic,
-    /// The AOT-exported quantized model executed over PJRT — real
-    /// activations of the real (randomly-initialized) network.
-    Golden,
-}
-
-impl StatsSource {
-    pub fn parse(s: &str) -> Option<StatsSource> {
-        match s {
-            "synth" | "synthetic" => Some(StatsSource::Synthetic),
-            "golden" | "pjrt" => Some(StatsSource::Golden),
-            _ => None,
-        }
-    }
-}
+pub use crate::pipeline::StatsSource;
 
 /// Driver configuration.
 #[derive(Debug, Clone)]
@@ -59,53 +46,63 @@ impl Default for DriverOpts {
     }
 }
 
+impl DriverOpts {
+    /// The pipeline prefix these options describe.
+    pub fn prefix_spec(&self) -> PrefixSpec {
+        PrefixSpec {
+            net: self.net.clone(),
+            hw: self.hw,
+            stats: self.stats,
+            profile_images: self.profile_images,
+            seed: self.seed,
+            artifacts_dir: self.artifacts_dir.clone(),
+        }
+    }
+}
+
 /// A fully prepared experiment: everything up to (but excluding) the
 /// allocation/simulation choices.
 pub struct Driver {
     pub opts: DriverOpts,
-    pub graph: Graph,
-    pub map: NetworkMap,
-    pub trace: NetTrace,
-    pub profile: NetworkProfile,
+    pub graph: crate::dnn::Graph,
+    pub map: crate::mapping::NetworkMap,
+    pub trace: crate::stats::NetTrace,
+    pub profile: crate::stats::NetworkProfile,
 }
 
 impl Driver {
-    /// Build the graph, gather statistics, derive the profile.
+    /// Run the pipeline prefix stages: build the graph, gather
+    /// statistics, derive the profile.
     pub fn prepare(opts: DriverOpts) -> Result<Driver> {
-        let graph = build_graph(&opts.net, opts.hw)?;
-        graph.validate().map_err(|e| anyhow::anyhow!(e))?;
-        let map = map_network(&graph, ArrayCfg::paper(), false);
-        let acts = match opts.stats {
-            StatsSource::Synthetic => {
-                synth_activations(&graph, &map, opts.profile_images, opts.seed, SynthCfg::default())
-            }
-            StatsSource::Golden => {
-                let manifest = Manifest::load(&opts.artifacts_dir)?;
-                let engine = Engine::cpu()?;
-                let model = GoldenModel::load(&engine, &manifest, &opts.net)?;
-                anyhow::ensure!(
-                    model.meta.hw == opts.hw,
-                    "artifact exported at hw={}, requested {} — re-run `make artifacts` \
-                     with --hw or adjust --hw",
-                    model.meta.hw,
-                    opts.hw
-                );
-                model.profile(opts.profile_images, opts.seed)?
-            }
-        };
-        let trace = trace_from_activations(&graph, &map, &acts);
-        let profile = NetworkProfile::from_trace(&map, &trace);
-        Ok(Driver { opts, graph, map, trace, profile })
+        let prep = pipeline::prepare(&opts.prefix_spec(), None)?;
+        Ok(Driver {
+            opts,
+            graph: prep.graph,
+            map: prep.map,
+            trace: prep.trace,
+            profile: prep.profile,
+        })
+    }
+
+    fn view(&self) -> PreparedView<'_> {
+        PreparedView { map: &self.map, trace: &self.trace, profile: &self.profile }
+    }
+
+    /// The pipeline [`Scenario`] for one algorithm × design size under
+    /// these options.
+    pub fn scenario(&self, alg: Algorithm, pes: usize) -> Scenario {
+        Scenario {
+            prefix: self.opts.prefix_spec(),
+            alg,
+            pes,
+            sim_images: self.opts.sim_images,
+        }
     }
 
     /// Allocate + place + simulate one algorithm on a chip of `pes` PEs.
     pub fn run(&self, alg: Algorithm, pes: usize) -> Result<(AllocationPlan, SimResult)> {
-        let chip = ChipCfg::paper(pes);
-        let plan = allocate(alg, &self.map, &self.profile, chip.total_arrays())?;
-        let placement = place(&self.map, &plan, &chip)?;
-        let cfg = SimCfg::for_algorithm(alg, self.opts.sim_images);
-        let result = simulate(&chip, &self.map, &plan, &placement, &self.trace, cfg);
-        Ok((plan, result))
+        let out = pipeline::run_scenario(&self.view(), &self.scenario(alg, pes), None)?;
+        Ok((out.plan, out.result))
     }
 
     /// Run all four paper algorithms at one design size.
@@ -119,33 +116,32 @@ impl Driver {
     /// Minimum PEs that fit one copy of the network (paper: 86 for
     /// ResNet18).
     pub fn min_pes(&self) -> usize {
-        let per_pe = ChipCfg::paper(1).arrays_per_pe;
-        self.map.min_arrays().div_ceil(per_pe)
+        pipeline::min_pes_of(&self.map)
     }
 
     /// The paper's design-size sweep: half-powers of two from the
     /// minimum (§V: "we begin increasing the design size by ½ powers
     /// of 2").
     pub fn sweep_sizes(&self, steps: usize) -> Vec<usize> {
-        let min = self.min_pes();
-        (0..steps)
-            .map(|i| ((min as f64) * 2f64.powf(i as f64 / 2.0)).round() as usize)
-            .collect()
+        pipeline::sweep_sizes(self.min_pes(), steps)
     }
-}
 
-fn build_graph(net: &str, hw: usize) -> Result<Graph> {
-    match net {
-        "resnet18" => Ok(resnet18(hw, 1000)),
-        "resnet34" => Ok(crate::dnn::resnet34(hw, 1000)),
-        "vgg11" => Ok(vgg11(hw, 10)),
-        other => anyhow::bail!("unknown network '{other}' (resnet18|resnet34|vgg11)"),
+    /// All paper algorithms × sweep sizes as pipeline scenarios, ordered
+    /// size-major (the Fig 8 table order).
+    pub fn sweep_scenarios(&self, steps: usize) -> Vec<Scenario> {
+        pipeline::scenarios_for(
+            &self.opts.prefix_spec(),
+            &self.sweep_sizes(steps),
+            &Algorithm::all(),
+            self.opts.sim_images,
+        )
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ChipCfg;
 
     fn synth_driver(net: &str) -> Driver {
         Driver::prepare(DriverOpts {
@@ -198,5 +194,30 @@ mod tests {
     fn unknown_net_rejected() {
         assert!(Driver::prepare(DriverOpts { net: "alexnet".into(), ..DriverOpts::default() })
             .is_err());
+    }
+
+    #[test]
+    fn driver_run_matches_pipeline_scenario() {
+        let d = synth_driver("resnet18");
+        let (_, via_driver) = d.run(Algorithm::PerfBased, 172).unwrap();
+        let prep = pipeline::prepare(&d.opts.prefix_spec(), None).unwrap();
+        let out = pipeline::run_scenario(
+            &prep.view(),
+            &d.scenario(Algorithm::PerfBased, 172),
+            None,
+        )
+        .unwrap();
+        assert_eq!(via_driver.makespan, out.result.makespan);
+        assert_eq!(via_driver.layer_util, out.result.layer_util);
+    }
+
+    #[test]
+    fn sweep_scenarios_cover_sizes_times_algorithms() {
+        let d = synth_driver("resnet18");
+        let scs = d.sweep_scenarios(3);
+        assert_eq!(scs.len(), 12);
+        assert!(scs.iter().all(|sc| sc.prefix == d.opts.prefix_spec()));
+        assert_eq!(scs[0].pes, 86);
+        assert_eq!(scs[4].pes, d.sweep_sizes(3)[1]);
     }
 }

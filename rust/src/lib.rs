@@ -18,8 +18,12 @@
 //!   artifacts for activation profiling and golden checks.
 //!
 //! Entry points:
-//! * [`coordinator::Driver`] — end-to-end: profile → allocate → simulate
-//!   → report.
+//! * [`pipeline`] — the staged experiment pipeline (`BuildGraph → Map →
+//!   Stats → Trace → Profile → Allocate → Place → Simulate → Report`)
+//!   with per-stage JSON artifact dumps and the multi-threaded sweep
+//!   executor ([`pipeline::run_sweep`]).
+//! * [`coordinator::Driver`] — convenience wrapper over the pipeline for
+//!   one-off runs: profile → allocate → simulate → report.
 //! * [`sim::simulate`] — run one chip configuration on one network trace.
 //! * [`alloc`] — the allocation algorithms (the paper's contribution).
 //!
@@ -36,6 +40,7 @@ pub mod noc;
 pub mod sim;
 pub mod energy;
 pub mod runtime;
+pub mod pipeline;
 pub mod coordinator;
 pub mod config;
 pub mod report;

@@ -4,23 +4,30 @@
 //! cimfab report   --net resnet18 --hw 64             graph + mapping summary
 //! cimfab profile  --net resnet18 --hw 64 [--stats golden]   Figs 4 & 6 tables
 //! cimfab simulate --net resnet18 --pes 172 --alg block-wise one run
-//! cimfab sweep    --net resnet18 --steps 6           Fig 8 table
+//! cimfab sweep    --net resnet18 --steps 6 --threads 4      Fig 8 table (parallel)
 //! cimfab util     --net resnet18 --pes 172           Fig 9 table
 //! cimfab golden   --net vgg11                        PJRT golden cross-check
 //! cimfab dispatch                                    live block-wise dataflow demo
 //! cimfab variance                                    ADC/variance ablation (§III-A)
 //! ```
+//!
+//! `profile`, `simulate`, `sweep` and `util` run on the staged
+//! experiment pipeline ([`cimfab::pipeline`]): all four accept
+//! `--dump-dir DIR` to dump every stage's JSON artifact; `sweep` and
+//! `util` also accept `--threads N` to size the sweep worker pool.
 
 use cimfab::alloc::Algorithm;
 use cimfab::coordinator::{Driver, DriverOpts, StatsSource};
+use cimfab::pipeline::{self, run_scenarios_prepared, Scenario, SweepCfg};
 use cimfab::report;
 use cimfab::tensor::Tensor;
 use cimfab::util::cli::Args;
 use cimfab::util::table::{fmt_f, Table};
 use cimfab::xbar::variance;
+use std::time::Instant;
 
 fn main() {
-    let args = match Args::from_env(&["verbose", "csv"]) {
+    let args = match Args::from_env(&["verbose", "csv", "no-verify"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -50,6 +57,13 @@ fn driver_opts(args: &Args) -> Result<DriverOpts, String> {
     })
 }
 
+fn sweep_cfg(args: &Args) -> Result<SweepCfg, String> {
+    Ok(SweepCfg {
+        threads: args.get_usize("threads", pipeline::executor::default_threads())?,
+        dump_dir: args.get("dump-dir").map(str::to_string),
+    })
+}
+
 fn run(args: &Args) -> cimfab::Result<()> {
     match args.subcommand.as_deref() {
         Some("report") => {
@@ -67,19 +81,20 @@ fn run(args: &Args) -> cimfab::Result<()> {
         }
         Some("profile") => {
             let opts = driver_opts(args).map_err(anyhow::Error::msg)?;
-            let d = Driver::prepare(opts)?;
+            let dumper = sweep_cfg(args).map_err(anyhow::Error::msg)?.dumper()?;
+            let prep = pipeline::prepare(&opts.prefix_spec(), dumper.as_ref())?;
             println!("== Fig 4: layer density vs cycles per array ==");
-            println!("{}", report::fig4_table(&d.map, &d.profile).render());
+            println!("{}", report::fig4_table(&prep.map, &prep.profile).render());
             // Fig 6: the layers with 9 and 18 blocks (10 & 15 in the paper)
-            for (l, g) in d.map.grids.iter().enumerate() {
+            for (l, g) in prep.map.grids.iter().enumerate() {
                 if g.blocks_per_copy == 9 || g.blocks_per_copy == 18 {
                     println!(
                         "== Fig 6: blocks of layer {} ({}), spread {:.1}% ==",
                         l,
                         g.name,
-                        d.profile.layer_block_spread(l) * 100.0
+                        prep.profile.layer_block_spread(l) * 100.0
                     );
-                    println!("{}", report::fig6_table(&d.map, &d.profile, l).render());
+                    println!("{}", report::fig6_table(&prep.map, &prep.profile, l).render());
                 }
             }
             Ok(())
@@ -88,52 +103,121 @@ fn run(args: &Args) -> cimfab::Result<()> {
             let opts = driver_opts(args).map_err(anyhow::Error::msg)?;
             let alg = Algorithm::parse(args.get_or("alg", "block-wise"))
                 .ok_or_else(|| anyhow::anyhow!("bad --alg"))?;
-            let d = Driver::prepare(opts)?;
-            let pes = args.get_usize("pes", d.min_pes() * 2).map_err(anyhow::Error::msg)?;
-            let (plan, result) = d.run(alg, pes)?;
+            let dumper = sweep_cfg(args).map_err(anyhow::Error::msg)?.dumper()?;
+            let prep = pipeline::prepare(&opts.prefix_spec(), dumper.as_ref())?;
+            let pes =
+                args.get_usize("pes", prep.min_pes() * 2).map_err(anyhow::Error::msg)?;
+            let sc = Scenario {
+                prefix: opts.prefix_spec(),
+                alg,
+                pes,
+                sim_images: opts.sim_images,
+            };
+            let out = pipeline::run_scenario(&prep.view(), &sc, dumper.as_ref())?;
             if args.has_flag("verbose") {
-                println!("{}", plan.summary(&d.map));
+                println!("{}", out.plan.summary(&prep.map));
             }
             println!(
                 "{} @ {pes} PEs: {:.2} inferences/s, chip util {:.1}%, makespan {} cycles, \
                  NoC peak link util {:.3}",
                 alg.name(),
-                result.throughput_ips,
-                result.chip_util * 100.0,
-                result.makespan,
-                result.noc.peak_link_utilization
+                out.result.throughput_ips,
+                out.result.chip_util * 100.0,
+                out.result.makespan,
+                out.result.noc.peak_link_utilization
             );
             Ok(())
         }
         Some("sweep") => {
             let opts = driver_opts(args).map_err(anyhow::Error::msg)?;
             let steps = args.get_usize("steps", 5).map_err(anyhow::Error::msg)?;
-            let d = Driver::prepare(opts)?;
-            let mut t = report::fig8_table();
-            for pes in d.sweep_sizes(steps) {
-                for (alg, r) in d.run_all(pes)? {
-                    t.row(report::fig8_row(alg, pes, &r));
+            let cfg = sweep_cfg(args).map_err(anyhow::Error::msg)?;
+            let algs: Vec<Algorithm> = match args.get("alg") {
+                None => Algorithm::all().to_vec(),
+                Some(s) => {
+                    vec![Algorithm::parse(s).ok_or_else(|| anyhow::anyhow!("bad --alg"))?]
                 }
-            }
+            };
+
+            let dumper = cfg.dumper()?;
+            let prep = pipeline::prepare(&opts.prefix_spec(), dumper.as_ref())?;
+            let scenarios = pipeline::scenarios_for(
+                &opts.prefix_spec(),
+                &pipeline::sweep_sizes(prep.min_pes(), steps),
+                &algs,
+                opts.sim_images,
+            );
+
+            let t0 = Instant::now();
+            let outcomes = run_scenarios_prepared(&prep, &scenarios, &cfg)?;
+            let elapsed = t0.elapsed().as_secs_f64();
+            let t = report::fig8_from_outcomes(&outcomes);
             if args.has_flag("csv") {
                 println!("{}", t.to_csv());
             } else {
                 println!("== Fig 8: performance vs design size ==\n{}", t.render());
             }
+            println!(
+                "sweep: {} scenarios ({} sizes x {} algorithms) on {} threads in {:.2}s",
+                scenarios.len(),
+                steps,
+                algs.len(),
+                cfg.threads,
+                elapsed
+            );
+
+            // Pin the parallel schedule against a serial reference run and
+            // report the measured wall-clock speedup. Results are compared
+            // through the canonical (full-precision) simulate artifact, not
+            // the rounded table text.
+            if cfg.threads > 1 && !args.has_flag("no-verify") {
+                // Same config but one thread, so the timing comparison is
+                // symmetric (both runs write the same dumps, if any).
+                let t1 = Instant::now();
+                let serial_cfg = SweepCfg { threads: 1, dump_dir: cfg.dump_dir.clone() };
+                let serial = run_scenarios_prepared(&prep, &scenarios, &serial_cfg)?;
+                let serial_elapsed = t1.elapsed().as_secs_f64();
+                for (p, s) in outcomes.iter().zip(&serial) {
+                    anyhow::ensure!(
+                        pipeline::artifact::sim_result_json(&p.result).compact()
+                            == pipeline::artifact::sim_result_json(&s.result).compact(),
+                        "parallel sweep diverged from the serial reference at {}",
+                        p.scenario.id()
+                    );
+                }
+                println!(
+                    "serial check: bit-identical results; speedup {:.2}x \
+                     ({serial_elapsed:.2}s serial vs {elapsed:.2}s on {} threads) \
+                     [--no-verify skips this]",
+                    serial_elapsed / elapsed.max(1e-9),
+                    cfg.threads
+                );
+            }
             Ok(())
         }
         Some("util") => {
             let opts = driver_opts(args).map_err(anyhow::Error::msg)?;
-            let d = Driver::prepare(opts)?;
-            let pes = args.get_usize("pes", d.min_pes() * 2).map_err(anyhow::Error::msg)?;
-            let results = d.run_all(pes)?;
+            let cfg = sweep_cfg(args).map_err(anyhow::Error::msg)?;
+            let dumper = cfg.dumper()?;
+            let prep = pipeline::prepare(&opts.prefix_spec(), dumper.as_ref())?;
+            let pes =
+                args.get_usize("pes", prep.min_pes() * 2).map_err(anyhow::Error::msg)?;
+            let scenarios = pipeline::scenarios_for(
+                &opts.prefix_spec(),
+                &[pes],
+                &Algorithm::all(),
+                opts.sim_images,
+            );
+            let outcomes = run_scenarios_prepared(&prep, &scenarios, &cfg)?;
+            let results: Vec<(Algorithm, cimfab::sim::SimResult)> =
+                outcomes.iter().map(|o| (o.scenario.alg, o.result.clone())).collect();
             let with_zs: Vec<(Algorithm, &cimfab::sim::SimResult)> = results
                 .iter()
                 .filter(|(a, _)| a.zero_skip())
                 .map(|(a, r)| (*a, r))
                 .collect();
             println!("== Fig 9: array utilization by layer @ {pes} PEs ==");
-            println!("{}", report::fig9_table(&d.map, &with_zs).render());
+            println!("{}", report::fig9_table(&prep.map, &with_zs).render());
             println!("== headline speedups ==\n{}", report::speedup_summary(&results).render());
             Ok(())
         }
@@ -278,4 +362,8 @@ Common options:
   --alg baseline|weight-based|perf-based|block-wise
   --images N               pipelined images per simulation (default 8)
   --steps N                design sizes in a sweep (default 5)
+  --threads N              sweep/util worker threads (default: all cores)
+  --dump-dir DIR           dump per-stage JSON artifacts under DIR
+                           (profile|simulate|sweep|util)
+  --no-verify              skip the sweep's serial cross-check
   --seed N --csv --verbose --artifacts DIR";

@@ -1,0 +1,245 @@
+//! Per-stage JSON artifacts.
+//!
+//! Every stage's output condenses to a deterministic [`Json`] document
+//! (objects are `BTreeMap`-ordered, floats print shortest-roundtrip), so
+//! the same scenario + seed always dumps byte-identical files — the
+//! property the pipeline determinism tests pin down.
+
+use crate::dnn::Graph;
+use crate::mapping::{AllocationPlan, NetworkMap, Placement};
+use crate::sim::SimResult;
+use crate::stats::{NetTrace, NetworkProfile};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+fn num_arr<'a, I: IntoIterator<Item = &'a f64>>(xs: I) -> Json {
+    Json::arr(xs.into_iter().map(|&x| Json::Num(x)))
+}
+
+fn usize_arr<'a, I: IntoIterator<Item = &'a usize>>(xs: I) -> Json {
+    Json::arr(xs.into_iter().map(|&x| Json::num(x as f64)))
+}
+
+/// Stage `BuildGraph`: the validated network graph.
+pub fn graph_json(g: &Graph) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&g.name)),
+        ("input_shape", usize_arr(&g.input_shape)),
+        ("total_macs", Json::num(g.total_macs() as f64)),
+        ("total_weights", Json::num(g.total_weights() as f64)),
+        (
+            "layers",
+            Json::arr(g.layers.iter().map(|l| {
+                Json::obj(vec![
+                    ("name", Json::str(&l.name)),
+                    ("op", Json::str(&format!("{:?}", l.op))),
+                    ("in_shape", usize_arr(&l.in_shape)),
+                    ("out_shape", usize_arr(&l.out_shape)),
+                    ("macs", Json::num(l.macs() as f64)),
+                ])
+            })),
+        ),
+    ])
+}
+
+/// Stage `Map`: the array-grid geometry of every CIM layer.
+pub fn map_json(m: &NetworkMap) -> Json {
+    Json::obj(vec![
+        ("net", Json::str(&m.net_name)),
+        ("include_linear", Json::Bool(m.include_linear)),
+        ("array", m.array.to_json()),
+        ("total_blocks", Json::num(m.total_blocks() as f64)),
+        ("min_arrays", Json::num(m.min_arrays() as f64)),
+        (
+            "grids",
+            Json::arr(m.grids.iter().map(|g| {
+                Json::obj(vec![
+                    ("name", Json::str(&g.name)),
+                    ("graph_idx", Json::num(g.graph_idx as f64)),
+                    ("matrix_rows", Json::num(g.matrix_rows as f64)),
+                    ("matrix_cols", Json::num(g.matrix_cols as f64)),
+                    ("blocks_per_copy", Json::num(g.blocks_per_copy as f64)),
+                    ("arrays_per_block", Json::num(g.arrays_per_block as f64)),
+                    ("positions", Json::num(g.positions as f64)),
+                    ("macs", Json::num(g.macs as f64)),
+                ])
+            })),
+        ),
+    ])
+}
+
+/// Stage `Stats`: summary of the gathered activation tensors (shapes and
+/// nonzero fractions — the raw tensors are too large to dump usefully).
+pub fn stats_json(map: &NetworkMap, acts: &[Vec<Tensor<u8>>]) -> Json {
+    let layers = map.grids.iter().enumerate().map(|(l, g)| {
+        let mut nonzero = 0u64;
+        let mut total = 0u64;
+        for img in acts {
+            nonzero += img[l].data().iter().filter(|&&b| b != 0).count() as u64;
+            total += img[l].len() as u64;
+        }
+        Json::obj(vec![
+            ("name", Json::str(&g.name)),
+            ("shape", usize_arr(acts.first().map(|img| img[l].shape()).unwrap_or(&[]))),
+            (
+                "nonzero_frac",
+                Json::Num(if total == 0 { 0.0 } else { nonzero as f64 / total as f64 }),
+            ),
+        ])
+    });
+    Json::obj(vec![
+        ("images", Json::num(acts.len() as f64)),
+        ("layers", Json::arr(layers)),
+    ])
+}
+
+/// Stage `Trace`: per-layer aggregate of the exact cycle trace (the full
+/// per-patch matrix stays in memory only).
+pub fn trace_json(map: &NetworkMap, t: &NetTrace) -> Json {
+    if t.images.is_empty() {
+        return Json::obj(vec![
+            ("images", Json::num(0.0)),
+            ("layers", Json::Arr(vec![])),
+        ]);
+    }
+    let n_img = t.images.len() as f64;
+    let layers = map.grids.iter().enumerate().map(|(l, g)| {
+        let first = &t.images[0].layers[l];
+        let mean_zs: Vec<f64> = (0..first.blocks)
+            .map(|r| {
+                t.images.iter().map(|img| img.layers[l].block_mean_zs(r)).sum::<f64>() / n_img
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::str(&g.name)),
+            ("positions", Json::num(first.positions as f64)),
+            ("blocks", Json::num(first.blocks as f64)),
+            (
+                "baseline",
+                Json::arr(first.baseline.iter().map(|&c| Json::num(c as f64))),
+            ),
+            ("mean_zs", num_arr(&mean_zs)),
+        ])
+    });
+    Json::obj(vec![
+        ("images", Json::num(t.images.len() as f64)),
+        ("layers", Json::arr(layers)),
+    ])
+}
+
+/// Stage `Profile`: the full aggregate profile the allocators consume.
+pub fn profile_json(p: &NetworkProfile) -> Json {
+    Json::obj(vec![
+        ("block_cycles", Json::arr(p.block_cycles.iter().map(|b| num_arr(b)))),
+        ("block_density", Json::arr(p.block_density.iter().map(|b| num_arr(b)))),
+        ("layer_barrier_cycles", num_arr(&p.layer_barrier_cycles)),
+        ("layer_baseline_cycles", num_arr(&p.layer_baseline_cycles)),
+        ("layer_density", num_arr(&p.layer_density)),
+        ("layer_mean_block_cycles", num_arr(&p.layer_mean_block_cycles)),
+        (
+            "layer_macs",
+            Json::arr(p.layer_macs.iter().map(|&m| Json::num(m as f64))),
+        ),
+    ])
+}
+
+/// Stage `Allocate`: the duplicate counts the algorithm granted.
+pub fn plan_json(plan: &AllocationPlan, map: &NetworkMap) -> Json {
+    Json::obj(vec![
+        ("algorithm", Json::str(&plan.algorithm)),
+        ("arrays_used", Json::num(plan.arrays_used(map) as f64)),
+        (
+            "duplicates",
+            Json::arr(plan.duplicates.iter().map(|d| usize_arr(d))),
+        ),
+    ])
+}
+
+/// Stage `Place`: instance → PE assignment.
+pub fn placement_json(p: &Placement) -> Json {
+    Json::obj(vec![
+        ("pe_used", usize_arr(&p.pe_used)),
+        (
+            "pe_of",
+            Json::arr(p.pe_of.iter().map(|layer| {
+                Json::arr(layer.iter().map(|dups| usize_arr(dups)))
+            })),
+        ),
+    ])
+}
+
+/// Stage `Simulate`: the full simulation result.
+pub fn sim_result_json(r: &SimResult) -> Json {
+    Json::obj(vec![
+        ("makespan", Json::num(r.makespan as f64)),
+        ("images", Json::num(r.images as f64)),
+        ("throughput_ips", Json::Num(r.throughput_ips)),
+        ("chip_util", Json::Num(r.chip_util)),
+        ("stage_cycles", num_arr(&r.stage_cycles)),
+        ("layer_util", num_arr(&r.layer_util)),
+        ("block_util", Json::arr(r.block_util.iter().map(|b| num_arr(b)))),
+        (
+            "noc",
+            Json::obj(vec![
+                ("packets", Json::num(r.noc.packets as f64)),
+                ("byte_hops", Json::num(r.noc.byte_hops as f64)),
+                ("mean_link_utilization", Json::Num(r.noc.mean_link_utilization)),
+                ("peak_link_utilization", Json::Num(r.noc.peak_link_utilization)),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArrayCfg;
+    use crate::dnn::resnet18;
+    use crate::mapping::map_network;
+    use crate::stats::synth::{synth_activations, SynthCfg};
+    use crate::stats::trace_from_activations;
+
+    #[test]
+    fn stage_artifacts_roundtrip_through_the_parser() {
+        let g = resnet18(32, 10);
+        let map = map_network(&g, ArrayCfg::paper(), false);
+        let acts = synth_activations(&g, &map, 1, 3, SynthCfg::default());
+        let trace = trace_from_activations(&g, &map, &acts);
+        let prof = NetworkProfile::from_trace(&map, &trace);
+        let plan = AllocationPlan::minimal(&map);
+        for j in [
+            graph_json(&g),
+            map_json(&map),
+            stats_json(&map, &acts),
+            trace_json(&map, &trace),
+            profile_json(&prof),
+            plan_json(&plan, &map),
+        ] {
+            let text = j.pretty();
+            assert_eq!(Json::parse(&text).unwrap(), j);
+        }
+    }
+
+    #[test]
+    fn map_artifact_carries_paper_counts() {
+        let g = resnet18(224, 1000);
+        let map = map_network(&g, ArrayCfg::paper(), false);
+        let j = map_json(&map);
+        assert_eq!(j.get("total_blocks").as_usize(), Some(247));
+        assert_eq!(j.get("min_arrays").as_usize(), Some(5472));
+        assert_eq!(j.get("grids").as_arr().unwrap().len(), 20);
+    }
+
+    #[test]
+    fn artifact_emission_is_deterministic() {
+        let g = resnet18(32, 10);
+        let map = map_network(&g, ArrayCfg::paper(), false);
+        let acts = synth_activations(&g, &map, 2, 11, SynthCfg::default());
+        let trace = trace_from_activations(&g, &map, &acts);
+        let a = trace_json(&map, &trace).pretty();
+        let acts2 = synth_activations(&g, &map, 2, 11, SynthCfg::default());
+        let trace2 = trace_from_activations(&g, &map, &acts2);
+        let b = trace_json(&map, &trace2).pretty();
+        assert_eq!(a, b);
+    }
+}

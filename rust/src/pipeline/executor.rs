@@ -1,0 +1,218 @@
+//! Multi-threaded sweep executor.
+//!
+//! A sweep is a list of [`Scenario`]s. The executor:
+//!
+//! 1. deduplicates the scenarios' [`PrefixSpec`]s and runs the expensive
+//!    prefix stages once per distinct prefix (in parallel);
+//! 2. fans the scenario stages out over a scoped worker pool
+//!    (`--threads N`), each worker borrowing the shared prepared prefix.
+//!
+//! Every stage is a pure function of its spec, so the parallel schedule
+//! cannot change any result: outcomes are returned in input order and
+//! are bit-identical to a `threads = 1` run (pinned by the
+//! `pipeline_determinism` integration tests).
+
+use super::scenario::{PrefixSpec, Scenario};
+use super::{prepare, run_scenario, Dumper, Prepared, ScenarioOutcome};
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Executor configuration.
+#[derive(Debug, Clone)]
+pub struct SweepCfg {
+    /// Worker threads (1 = serial). Values above the item count are
+    /// clamped.
+    pub threads: usize,
+    /// When set, every stage dumps its JSON artifact under this root.
+    pub dump_dir: Option<String>,
+}
+
+impl SweepCfg {
+    /// Serial, no dumps.
+    pub fn serial() -> SweepCfg {
+        SweepCfg { threads: 1, dump_dir: None }
+    }
+
+    /// One worker per available core, no dumps.
+    pub fn parallel() -> SweepCfg {
+        SweepCfg { threads: default_threads(), dump_dir: None }
+    }
+
+    /// The single construction site for this config's [`Dumper`].
+    pub fn dumper(&self) -> Result<Option<Dumper>> {
+        match &self.dump_dir {
+            Some(d) => Ok(Some(Dumper::new(d)?)),
+            None => Ok(None),
+        }
+    }
+}
+
+/// Worker count used when the caller does not specify `--threads`.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(0..n)` on up to `threads` scoped workers, returning results in
+/// index order. The first error (lowest index) wins.
+fn run_indexed<T, F>(n: usize, threads: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
+    let slots: Vec<Mutex<Option<Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                if failed.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                if r.is_err() {
+                    failed.store(true, Ordering::Relaxed);
+                }
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    let mut out = Vec::with_capacity(n);
+    for (i, slot) in slots.into_iter().enumerate() {
+        match slot.into_inner().unwrap() {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(e)) => return Err(e),
+            None if failed.load(Ordering::Relaxed) => {
+                anyhow::bail!("sweep aborted before item {i} (an earlier item failed)")
+            }
+            None => anyhow::bail!("sweep worker abandoned item {i}"),
+        }
+    }
+    Ok(out)
+}
+
+/// Run scenarios that all share one already-prepared prefix.
+pub fn run_scenarios_prepared(
+    prep: &Prepared,
+    scenarios: &[Scenario],
+    cfg: &SweepCfg,
+) -> Result<Vec<ScenarioOutcome>> {
+    for sc in scenarios {
+        anyhow::ensure!(
+            sc.prefix.id() == prep.spec.id(),
+            "scenario {} has prefix {}, but the prepared prefix is {}",
+            sc.id(),
+            sc.prefix.id(),
+            prep.spec.id()
+        );
+    }
+    let dumper = cfg.dumper()?;
+    run_indexed(scenarios.len(), cfg.threads, |i| {
+        run_scenario(&prep.view(), &scenarios[i], dumper.as_ref())
+    })
+}
+
+/// Run a full sweep: prepare every distinct prefix once, then execute
+/// all scenarios on the worker pool. Outcomes come back in input order.
+pub fn run_sweep(scenarios: &[Scenario], cfg: &SweepCfg) -> Result<Vec<ScenarioOutcome>> {
+    let dumper = cfg.dumper()?;
+
+    // Distinct prefixes in first-appearance order, deduplicated by id()
+    // — the same key that names the dump directory, so two scenarios
+    // never prepare (or dump) one prefix twice. (id() deliberately
+    // ignores fields the preparation doesn't read, e.g. artifacts_dir
+    // under synthetic statistics.)
+    let mut prefixes: Vec<PrefixSpec> = Vec::new();
+    let mut prefix_ids: Vec<String> = Vec::new();
+    let mut prefix_of = Vec::with_capacity(scenarios.len());
+    for sc in scenarios {
+        let id = sc.prefix.id();
+        let idx = match prefix_ids.iter().position(|p| *p == id) {
+            Some(i) => i,
+            None => {
+                prefixes.push(sc.prefix.clone());
+                prefix_ids.push(id);
+                prefixes.len() - 1
+            }
+        };
+        prefix_of.push(idx);
+    }
+
+    let prepared: Vec<Prepared> =
+        run_indexed(prefixes.len(), cfg.threads, |i| prepare(&prefixes[i], dumper.as_ref()))?;
+
+    run_indexed(scenarios.len(), cfg.threads, |i| {
+        run_scenario(&prepared[prefix_of[i]].view(), &scenarios[i], dumper.as_ref())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::Algorithm;
+    use crate::pipeline::StatsSource;
+
+    fn spec() -> PrefixSpec {
+        PrefixSpec {
+            net: "resnet18".into(),
+            hw: 32,
+            stats: StatsSource::Synthetic,
+            profile_images: 1,
+            seed: 5,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    fn scenarios() -> Vec<Scenario> {
+        [Algorithm::Baseline, Algorithm::BlockWise]
+            .into_iter()
+            .map(|alg| Scenario { prefix: spec(), alg, pes: 129, sim_images: 4 })
+            .collect()
+    }
+
+    #[test]
+    fn run_indexed_preserves_order() {
+        let out = run_indexed(8, 4, |i| Ok(i * 10)).unwrap();
+        assert_eq!(out, vec![0, 10, 20, 30, 40, 50, 60, 70]);
+    }
+
+    #[test]
+    fn run_indexed_handles_empty_and_oversubscription() {
+        let out: Vec<usize> = run_indexed(0, 4, |i| Ok(i)).unwrap();
+        assert!(out.is_empty());
+        let out = run_indexed(2, 64, |i| Ok(i)).unwrap();
+        assert_eq!(out, vec![0, 1]);
+    }
+
+    #[test]
+    fn run_indexed_propagates_errors() {
+        let r: Result<Vec<usize>> =
+            run_indexed(4, 2, |i| if i == 2 { anyhow::bail!("boom {i}") } else { Ok(i) });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn sweep_shares_one_prefix_and_keeps_order() {
+        let scs = scenarios();
+        let out = run_sweep(&scs, &SweepCfg { threads: 2, dump_dir: None }).unwrap();
+        assert_eq!(out.len(), scs.len());
+        for (o, sc) in out.iter().zip(&scs) {
+            assert_eq!(&o.scenario, sc);
+        }
+    }
+
+    #[test]
+    fn undersized_scenario_fails_the_sweep() {
+        let mut scs = scenarios();
+        scs[1].pes = 1; // far below the 86-PE minimum
+        assert!(run_sweep(&scs, &SweepCfg::serial()).is_err());
+    }
+}

@@ -1,0 +1,297 @@
+//! Staged experiment pipeline.
+//!
+//! Every end-to-end experiment lowers through the same typed stage
+//! sequence ([`Stage`]):
+//!
+//! ```text
+//! BuildGraph → Map → Stats → Trace → Profile   (shared prefix, per PrefixSpec)
+//!            → Allocate → Place → Simulate → Report   (per Scenario)
+//! ```
+//!
+//! A [`Scenario`] names one experiment point (network × resolution ×
+//! stats source × algorithm × PE budget × seed); its [`PrefixSpec`] part
+//! determines the expensive prepared prefix, which [`executor::run_sweep`]
+//! computes once per distinct prefix and shares across all scenarios —
+//! in parallel worker threads — instead of recomputing it per point.
+//!
+//! Each stage can dump its artifact as deterministic JSON (via
+//! [`crate::util::json`]) into a `--dump-dir` tree:
+//!
+//! ```text
+//! dump-dir/<prefix-id>/00_build_graph.json … 04_profile.json
+//! dump-dir/<prefix-id>/<scenario-id>/05_allocate.json … 08_report.json
+//! ```
+//!
+//! [`crate::coordinator::Driver`] is a thin convenience wrapper over
+//! these stages; the CLI `sweep` subcommand and the figure benches drive
+//! the executor directly.
+
+pub mod artifact;
+pub mod executor;
+pub mod scenario;
+pub mod stage;
+
+pub use executor::{run_scenarios_prepared, run_sweep, SweepCfg};
+pub use scenario::{scenarios_for, sweep_sizes, PrefixSpec, Scenario, StatsSource};
+pub use stage::Stage;
+
+use crate::config::{ArrayCfg, ChipCfg};
+use crate::dnn::{resnet18, vgg11, Graph};
+use crate::mapping::{AllocationPlan, NetworkMap};
+use crate::sim::SimResult;
+use crate::stats::synth::{synth_activations, SynthCfg};
+use crate::stats::{trace_from_activations, NetTrace, NetworkProfile};
+use crate::util::json::Json;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// The shared prefix, fully computed: everything up to (but excluding)
+/// the allocation/simulation choices.
+pub struct Prepared {
+    pub spec: PrefixSpec,
+    pub graph: Graph,
+    pub map: NetworkMap,
+    pub trace: NetTrace,
+    pub profile: NetworkProfile,
+}
+
+impl Prepared {
+    /// Borrowed view for the scenario stages (lets callers that own the
+    /// pieces separately — e.g. [`crate::coordinator::Driver`] — share
+    /// the same stage code).
+    pub fn view(&self) -> PreparedView<'_> {
+        PreparedView { map: &self.map, trace: &self.trace, profile: &self.profile }
+    }
+
+    /// Minimum PEs that fit one copy of the network (paper: 86 for
+    /// ResNet18).
+    pub fn min_pes(&self) -> usize {
+        min_pes_of(&self.map)
+    }
+}
+
+/// What the scenario stages (`Allocate → Place → Simulate → Report`)
+/// actually read from the prefix.
+#[derive(Clone, Copy)]
+pub struct PreparedView<'a> {
+    pub map: &'a NetworkMap,
+    pub trace: &'a NetTrace,
+    pub profile: &'a NetworkProfile,
+}
+
+/// The scenario stages' output.
+#[derive(Debug, Clone)]
+pub struct ScenarioOutcome {
+    pub scenario: Scenario,
+    pub plan: AllocationPlan,
+    pub result: SimResult,
+}
+
+impl ScenarioOutcome {
+    /// Stage `Report` artifact: the scenario plus its headline numbers.
+    pub fn report_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", self.scenario.to_json()),
+            ("throughput_ips", Json::Num(self.result.throughput_ips)),
+            ("chip_util", Json::Num(self.result.chip_util)),
+            ("makespan", Json::num(self.result.makespan as f64)),
+            (
+                "peak_link_utilization",
+                Json::Num(self.result.noc.peak_link_utilization),
+            ),
+        ])
+    }
+}
+
+/// Writes stage artifacts under a root directory.
+pub struct Dumper {
+    root: PathBuf,
+}
+
+impl Dumper {
+    pub fn new(dir: &str) -> Result<Dumper> {
+        let root = PathBuf::from(dir);
+        std::fs::create_dir_all(&root)?;
+        Ok(Dumper { root })
+    }
+
+    /// Write one stage artifact under `sub/` (created on demand).
+    pub fn dump(&self, sub: &str, stage: Stage, json: &Json) -> Result<()> {
+        let dir = self.root.join(sub);
+        std::fs::create_dir_all(&dir)?;
+        let mut text = json.pretty();
+        text.push('\n');
+        std::fs::write(dir.join(stage.dump_file()), text)?;
+        Ok(())
+    }
+}
+
+/// Stage `BuildGraph`: construct + validate the named network.
+pub fn build_graph(net: &str, hw: usize) -> Result<Graph> {
+    let graph = match net {
+        "resnet18" => resnet18(hw, 1000),
+        "resnet34" => crate::dnn::resnet34(hw, 1000),
+        "vgg11" => vgg11(hw, 10),
+        other => anyhow::bail!("unknown network '{other}' (resnet18|resnet34|vgg11)"),
+    };
+    graph.validate().map_err(anyhow::Error::msg)?;
+    Ok(graph)
+}
+
+/// Minimum PEs for one copy of a mapped network.
+pub fn min_pes_of(map: &NetworkMap) -> usize {
+    let per_pe = ChipCfg::paper(1).arrays_per_pe;
+    map.min_arrays().div_ceil(per_pe)
+}
+
+/// `BuildGraph → Map` only — enough to size a sweep without paying for
+/// statistics.
+pub fn min_pes(net: &str, hw: usize) -> Result<usize> {
+    let graph = build_graph(net, hw)?;
+    Ok(min_pes_of(&map_stage(&graph)))
+}
+
+fn map_stage(graph: &Graph) -> NetworkMap {
+    crate::mapping::map_network(graph, ArrayCfg::paper(), false)
+}
+
+/// Run the five prefix stages for one [`PrefixSpec`], dumping each
+/// stage's artifact when a [`Dumper`] is given.
+pub fn prepare(spec: &PrefixSpec, dump: Option<&Dumper>) -> Result<Prepared> {
+    anyhow::ensure!(
+        spec.profile_images >= 1,
+        "prefix {} needs at least one profiling image",
+        spec.id()
+    );
+    let sub = spec.id();
+
+    // BuildGraph
+    let graph = build_graph(&spec.net, spec.hw)?;
+    if let Some(d) = dump {
+        d.dump(&sub, Stage::BuildGraph, &artifact::graph_json(&graph))?;
+    }
+
+    // Map
+    let map = map_stage(&graph);
+    if let Some(d) = dump {
+        d.dump(&sub, Stage::Map, &artifact::map_json(&map))?;
+    }
+
+    // Stats
+    let acts = match spec.stats {
+        StatsSource::Synthetic => {
+            synth_activations(&graph, &map, spec.profile_images, spec.seed, SynthCfg::default())
+        }
+        StatsSource::Golden => golden_activations(spec, &map)?,
+    };
+    if let Some(d) = dump {
+        d.dump(&sub, Stage::Stats, &artifact::stats_json(&map, &acts))?;
+    }
+
+    // Trace
+    let trace = trace_from_activations(&graph, &map, &acts);
+    if let Some(d) = dump {
+        d.dump(&sub, Stage::Trace, &artifact::trace_json(&map, &trace))?;
+    }
+
+    // Profile
+    let profile = NetworkProfile::from_trace(&map, &trace);
+    if let Some(d) = dump {
+        d.dump(&sub, Stage::Profile, &artifact::profile_json(&profile))?;
+    }
+
+    Ok(Prepared { spec: spec.clone(), graph, map, trace, profile })
+}
+
+fn golden_activations(
+    spec: &PrefixSpec,
+    _map: &NetworkMap,
+) -> Result<Vec<Vec<crate::tensor::Tensor<u8>>>> {
+    use crate::runtime::{Engine, GoldenModel, Manifest};
+    let manifest = Manifest::load(&spec.artifacts_dir)?;
+    let engine = Engine::cpu()?;
+    let model = GoldenModel::load(&engine, &manifest, &spec.net)?;
+    anyhow::ensure!(
+        model.meta.hw == spec.hw,
+        "artifact exported at hw={}, requested {} — re-run `make artifacts` \
+         with --hw or adjust --hw",
+        model.meta.hw,
+        spec.hw
+    );
+    model.profile(spec.profile_images, spec.seed)
+}
+
+/// Run the four scenario stages against a prepared prefix.
+pub fn run_scenario(
+    prep: &PreparedView<'_>,
+    sc: &Scenario,
+    dump: Option<&Dumper>,
+) -> Result<ScenarioOutcome> {
+    let sub = format!("{}/{}", sc.prefix.id(), sc.id());
+    let chip = ChipCfg::paper(sc.pes);
+
+    // Allocate
+    let plan = crate::alloc::allocate(sc.alg, prep.map, prep.profile, chip.total_arrays())?;
+    if let Some(d) = dump {
+        d.dump(&sub, Stage::Allocate, &artifact::plan_json(&plan, prep.map))?;
+    }
+
+    // Place
+    let placement = crate::mapping::place(prep.map, &plan, &chip)?;
+    if let Some(d) = dump {
+        d.dump(&sub, Stage::Place, &artifact::placement_json(&placement))?;
+    }
+
+    // Simulate
+    let cfg = crate::sim::SimCfg::for_algorithm(sc.alg, sc.sim_images);
+    let result = crate::sim::simulate(&chip, prep.map, &plan, &placement, prep.trace, cfg);
+    if let Some(d) = dump {
+        d.dump(&sub, Stage::Simulate, &artifact::sim_result_json(&result))?;
+    }
+
+    // Report
+    let outcome = ScenarioOutcome { scenario: sc.clone(), plan, result };
+    if let Some(d) = dump {
+        d.dump(&sub, Stage::Report, &outcome.report_json())?;
+    }
+    Ok(outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::Algorithm;
+
+    fn spec() -> PrefixSpec {
+        PrefixSpec {
+            net: "resnet18".into(),
+            hw: 32,
+            stats: StatsSource::Synthetic,
+            profile_images: 1,
+            seed: 7,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    #[test]
+    fn prepare_then_scenario_matches_driver_semantics() {
+        let prep = prepare(&spec(), None).unwrap();
+        assert_eq!(prep.min_pes(), 86); // §V
+        let sc = Scenario { prefix: spec(), alg: Algorithm::BlockWise, pes: 172, sim_images: 4 };
+        let out = run_scenario(&prep.view(), &sc, None).unwrap();
+        assert!(out.result.throughput_ips > 0.0);
+        assert_eq!(out.plan.algorithm, "block-wise");
+    }
+
+    #[test]
+    fn min_pes_without_stats_matches_full_prepare() {
+        let prep = prepare(&spec(), None).unwrap();
+        assert_eq!(min_pes("resnet18", 32).unwrap(), prep.min_pes());
+    }
+
+    #[test]
+    fn unknown_net_rejected() {
+        assert!(build_graph("alexnet", 32).is_err());
+        assert!(min_pes("alexnet", 32).is_err());
+    }
+}

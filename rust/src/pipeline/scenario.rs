@@ -1,0 +1,233 @@
+//! Scenario specs: what to run, separated into the shared prefix and the
+//! per-scenario tail.
+
+use crate::alloc::Algorithm;
+use crate::util::json::Json;
+
+/// Where activation statistics come from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StatsSource {
+    /// Synthetic generator (no artifacts needed; benches use this).
+    Synthetic,
+    /// The AOT-exported quantized model executed over PJRT — real
+    /// activations of the real (randomly-initialized) network.
+    Golden,
+}
+
+impl StatsSource {
+    pub fn parse(s: &str) -> Option<StatsSource> {
+        match s {
+            "synth" | "synthetic" => Some(StatsSource::Synthetic),
+            "golden" | "pjrt" => Some(StatsSource::Golden),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StatsSource::Synthetic => "synth",
+            StatsSource::Golden => "golden",
+        }
+    }
+}
+
+/// Everything that determines the expensive shared prefix of a run
+/// (`BuildGraph → Map → Stats → Trace → Profile`). Scenarios with equal
+/// prefixes share one prepared prefix inside a sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrefixSpec {
+    pub net: String,
+    /// Input resolution (must match the artifact when `Golden`).
+    pub hw: usize,
+    pub stats: StatsSource,
+    /// Images used for profiling statistics.
+    pub profile_images: usize,
+    pub seed: u64,
+    /// Where the AOT artifacts live (used only with `Golden`).
+    pub artifacts_dir: String,
+}
+
+impl PrefixSpec {
+    /// Stable slug used as the dump sub-directory for prefix stages.
+    /// Golden prefixes fold in the artifacts directory (sanitized), since
+    /// different artifact sets are different statistics sources.
+    pub fn id(&self) -> String {
+        let mut id = format!(
+            "{}_hw{}_{}_p{}_s{}",
+            self.net,
+            self.hw,
+            self.stats.name(),
+            self.profile_images,
+            self.seed
+        );
+        if self.stats == StatsSource::Golden {
+            // Sanitizing alone is not injective ("a_b" and "a.b" both map
+            // to "a-b"), so append a hash of the raw string.
+            let dir: String = self
+                .artifacts_dir
+                .chars()
+                .map(|c| if c.is_ascii_alphanumeric() { c } else { '-' })
+                .collect();
+            id.push_str(&format!("_a{dir}-{:08x}", fnv1a(self.artifacts_dir.as_bytes())));
+        }
+        id
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("net", Json::str(&self.net)),
+            ("hw", Json::num(self.hw as f64)),
+            ("stats", Json::str(self.stats.name())),
+            ("profile_images", Json::num(self.profile_images as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("artifacts_dir", Json::str(&self.artifacts_dir)),
+        ])
+    }
+}
+
+/// One full experiment point: a shared prefix plus the allocation
+/// algorithm, the chip size, and the simulated image count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub prefix: PrefixSpec,
+    pub alg: Algorithm,
+    /// Processing elements on chip ([`crate::config::ChipCfg::paper`]).
+    pub pes: usize,
+    /// Images pushed through the pipelined simulation.
+    pub sim_images: usize,
+}
+
+impl Scenario {
+    /// Slug unique within the prefix (dump sub-directory for scenario
+    /// stages).
+    pub fn id(&self) -> String {
+        format!("{}_pes{}_img{}", self.alg.name(), self.pes, self.sim_images)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("prefix", self.prefix.to_json()),
+            ("alg", Json::str(self.alg.name())),
+            ("pes", Json::num(self.pes as f64)),
+            ("sim_images", Json::num(self.sim_images as f64)),
+        ])
+    }
+}
+
+/// 32-bit FNV-1a — tiny, deterministic, dependency-free.
+fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x01000193);
+    }
+    h
+}
+
+/// The paper's design-size sweep: half-powers of two from the minimum
+/// (§V: "we begin increasing the design size by ½ powers of 2").
+pub fn sweep_sizes(min_pes: usize, steps: usize) -> Vec<usize> {
+    (0..steps)
+        .map(|i| ((min_pes as f64) * 2f64.powf(i as f64 / 2.0)).round() as usize)
+        .collect()
+}
+
+/// The sizes × algorithms scenario cross-product (size-major — the
+/// Fig 8 table order), shared by the CLI, the benches, and the driver.
+pub fn scenarios_for(
+    prefix: &PrefixSpec,
+    sizes: &[usize],
+    algs: &[Algorithm],
+    sim_images: usize,
+) -> Vec<Scenario> {
+    let mut out = Vec::with_capacity(sizes.len() * algs.len());
+    for &pes in sizes {
+        for &alg in algs {
+            out.push(Scenario { prefix: prefix.clone(), alg, pes, sim_images });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> PrefixSpec {
+        PrefixSpec {
+            net: "resnet18".into(),
+            hw: 64,
+            stats: StatsSource::Synthetic,
+            profile_images: 2,
+            seed: 7,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    #[test]
+    fn stats_source_parse_roundtrip() {
+        for s in [StatsSource::Synthetic, StatsSource::Golden] {
+            assert_eq!(StatsSource::parse(s.name()), Some(s));
+        }
+        assert_eq!(StatsSource::parse("pjrt"), Some(StatsSource::Golden));
+        assert_eq!(StatsSource::parse("nope"), None);
+    }
+
+    #[test]
+    fn ids_are_stable_and_distinct() {
+        let p = spec();
+        assert_eq!(p.id(), "resnet18_hw64_synth_p2_s7");
+        let a = Scenario { prefix: p.clone(), alg: Algorithm::BlockWise, pes: 172, sim_images: 8 };
+        let b = Scenario { prefix: p, alg: Algorithm::Baseline, pes: 172, sim_images: 8 };
+        assert_eq!(a.id(), "block-wise_pes172_img8");
+        assert_ne!(a.id(), b.id());
+    }
+
+    #[test]
+    fn sweep_sizes_half_powers() {
+        let sizes = sweep_sizes(86, 5);
+        assert_eq!(sizes[0], 86);
+        assert_eq!(sizes[2], 172);
+        assert_eq!(sizes[4], 344);
+        assert!((sizes[1] as f64 - 86.0 * 2f64.sqrt()).abs() < 1.0);
+    }
+
+    #[test]
+    fn golden_prefix_ids_distinguish_artifact_dirs() {
+        let mut a = spec();
+        a.stats = StatsSource::Golden;
+        let mut b = a.clone();
+        b.artifacts_dir = "artifacts/v2".into();
+        assert_ne!(a.id(), b.id());
+        assert!(!b.id().contains('/'), "{}", b.id());
+        // sanitization collisions are disambiguated by the hash suffix
+        let mut c = a.clone();
+        c.artifacts_dir = "artifacts_v2".into();
+        let mut d = a.clone();
+        d.artifacts_dir = "artifacts.v2".into();
+        assert_ne!(c.id(), d.id());
+        // synthetic prefixes ignore the (unused) artifacts dir
+        let mut c = spec();
+        c.artifacts_dir = "elsewhere".into();
+        assert_eq!(c.id(), spec().id());
+    }
+
+    #[test]
+    fn scenarios_for_is_size_major() {
+        let scs = scenarios_for(&spec(), &[86, 172], &Algorithm::all(), 8);
+        assert_eq!(scs.len(), 8);
+        assert_eq!(scs[0].pes, 86);
+        assert_eq!(scs[3].pes, 86);
+        assert_eq!(scs[4].pes, 172);
+        assert_eq!(scs[1].alg, Algorithm::WeightBased);
+    }
+
+    #[test]
+    fn scenario_json_contains_key_fields() {
+        let sc = Scenario { prefix: spec(), alg: Algorithm::PerfBased, pes: 129, sim_images: 4 };
+        let j = sc.to_json();
+        assert_eq!(j.get("alg").as_str(), Some("perf-based"));
+        assert_eq!(j.get("pes").as_usize(), Some(129));
+        assert_eq!(j.get("prefix").get("net").as_str(), Some("resnet18"));
+    }
+}

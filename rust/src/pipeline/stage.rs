@@ -1,0 +1,105 @@
+//! The typed stage sequence of the experiment pipeline.
+//!
+//! Every end-to-end run lowers through the same nine stages. The first
+//! five (`BuildGraph → Map → Stats → Trace → Profile`) depend only on a
+//! [`super::PrefixSpec`] and are shared across all scenarios of a sweep;
+//! the last four (`Allocate → Place → Simulate → Report`) depend on the
+//! full [`super::Scenario`] (algorithm + design size) and run once per
+//! scenario.
+
+/// One stage of the experiment pipeline, in lowering order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Build + validate the DNN graph for the requested network.
+    BuildGraph,
+    /// Tile every CIM layer onto array grids ([`crate::mapping`]).
+    Map,
+    /// Gather activation statistics (synthetic or PJRT golden).
+    Stats,
+    /// Exact per-(patch, block) zero-skip cycle durations.
+    Trace,
+    /// Aggregate profile the allocators consume.
+    Profile,
+    /// Run the scenario's allocation algorithm against the PE budget.
+    Allocate,
+    /// First-fit physical placement of block instances onto PEs.
+    Place,
+    /// Cycle-accurate pipelined simulation.
+    Simulate,
+    /// Condense the run into the paper-figure report row.
+    Report,
+}
+
+impl Stage {
+    /// All stages in lowering order.
+    pub const ALL: [Stage; 9] = [
+        Stage::BuildGraph,
+        Stage::Map,
+        Stage::Stats,
+        Stage::Trace,
+        Stage::Profile,
+        Stage::Allocate,
+        Stage::Place,
+        Stage::Simulate,
+        Stage::Report,
+    ];
+
+    /// Snake-case stage name (also the dump-file stem).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::BuildGraph => "build_graph",
+            Stage::Map => "map",
+            Stage::Stats => "stats",
+            Stage::Trace => "trace",
+            Stage::Profile => "profile",
+            Stage::Allocate => "allocate",
+            Stage::Place => "place",
+            Stage::Simulate => "simulate",
+            Stage::Report => "report",
+        }
+    }
+
+    /// Position in the lowering order.
+    pub fn index(self) -> usize {
+        Stage::ALL.iter().position(|s| *s == self).unwrap()
+    }
+
+    /// Is this stage computed once per shared prefix (true) or once per
+    /// scenario (false)?
+    pub fn is_prefix(self) -> bool {
+        matches!(
+            self,
+            Stage::BuildGraph | Stage::Map | Stage::Stats | Stage::Trace | Stage::Profile
+        )
+    }
+
+    /// Dump file name, numbered so a directory listing reads in lowering
+    /// order (`00_build_graph.json`, …, `08_report.json`).
+    pub fn dump_file(self) -> String {
+        format!("{:02}_{}.json", self.index(), self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stages_are_ordered_and_named() {
+        assert_eq!(Stage::ALL.len(), 9);
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(s.index(), i);
+        }
+        assert_eq!(Stage::BuildGraph.dump_file(), "00_build_graph.json");
+        assert_eq!(Stage::Report.dump_file(), "08_report.json");
+    }
+
+    #[test]
+    fn prefix_scenario_split_is_contiguous() {
+        // prefix stages first, scenario stages after — no interleaving
+        let split = Stage::ALL.iter().position(|s| !s.is_prefix()).unwrap();
+        assert_eq!(split, 5);
+        assert!(Stage::ALL[..split].iter().all(|s| s.is_prefix()));
+        assert!(Stage::ALL[split..].iter().all(|s| !s.is_prefix()));
+    }
+}

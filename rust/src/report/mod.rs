@@ -51,6 +51,15 @@ pub fn fig8_table() -> Table {
     Table::new(["algorithm", "PEs", "inferences/s", "chip util %"])
 }
 
+/// Fig 8 table assembled from pipeline sweep outcomes, in input order.
+pub fn fig8_from_outcomes(outcomes: &[crate::pipeline::ScenarioOutcome]) -> Table {
+    let mut t = fig8_table();
+    for o in outcomes {
+        t.row(fig8_row(o.scenario.alg, o.scenario.pes, &o.result));
+    }
+    t
+}
+
 /// Fig 9: per-layer utilization for a set of algorithm results.
 pub fn fig9_table(map: &NetworkMap, results: &[(Algorithm, &SimResult)]) -> Table {
     let mut header = vec!["layer".to_string()];

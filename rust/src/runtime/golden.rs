@@ -3,7 +3,6 @@
 use super::artifacts::{Manifest, ModelMeta};
 use super::pjrt::{literal_dims, literal_f32, literal_i32, literal_i8, Engine, Module};
 use crate::tensor::Tensor;
-use crate::util::prng::Prng;
 use anyhow::{Context, Result};
 
 /// The AOT-exported quantized network, executable from Rust.
@@ -57,17 +56,7 @@ impl GoldenModel {
 
     /// Synthetic input image (smoothed uniform pixels, [0,255]).
     pub fn gen_image(hw: usize, seed: u64) -> Tensor<f32> {
-        let mut rng = Prng::new(seed);
-        let mut data = vec![0f32; 3 * hw * hw];
-        for c in 0..3 {
-            let mut prev = rng.f32() * 255.0;
-            for i in 0..hw * hw {
-                let fresh = rng.f32() * 255.0;
-                prev = (prev * 3.0 + fresh) / 4.0;
-                data[c * hw * hw + i] = prev;
-            }
-        }
-        Tensor::from_vec(&[3, hw, hw], data)
+        super::gen_image(hw, seed)
     }
 
     /// Run `n` synthetic images and collect per-image activation sets —

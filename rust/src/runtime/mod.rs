@@ -10,11 +10,50 @@
 //! allocation and (b) serve as the functional golden reference the
 //! simulator is validated against; [`golden::CimKernel`] executes the
 //! Pallas crossbar kernel itself.
+//!
+//! The `xla` crate (and the XLA C++ library behind it) is only present
+//! in environments with the offline registry, so the whole PJRT half is
+//! gated behind the `pjrt` cargo feature. Without it, [`stub`] provides
+//! API-compatible types whose constructors fail at runtime with an
+//! actionable message — the synthetic-statistics paths never notice.
 
-pub mod pjrt;
 pub mod artifacts;
+
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(feature = "pjrt")]
 pub mod golden;
 
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+
 pub use artifacts::Manifest;
+
+use crate::tensor::Tensor;
+use crate::util::prng::Prng;
+
+/// Synthetic input image (smoothed uniform pixels, [0,255]). Lives here
+/// — outside the `pjrt` gate — so the real and stub
+/// `GoldenModel::gen_image` share one implementation and the image
+/// stream is identical with and without the feature.
+pub fn gen_image(hw: usize, seed: u64) -> Tensor<f32> {
+    let mut rng = Prng::new(seed);
+    let mut data = vec![0f32; 3 * hw * hw];
+    for c in 0..3 {
+        let mut prev = rng.f32() * 255.0;
+        for i in 0..hw * hw {
+            let fresh = rng.f32() * 255.0;
+            prev = (prev * 3.0 + fresh) / 4.0;
+            data[c * hw * hw + i] = prev;
+        }
+    }
+    Tensor::from_vec(&[3, hw, hw], data)
+}
+
+#[cfg(feature = "pjrt")]
 pub use golden::{CimKernel, GoldenModel};
+#[cfg(feature = "pjrt")]
 pub use pjrt::{Engine, Module};
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{CimKernel, Engine, GoldenModel, Module};

@@ -1,0 +1,113 @@
+//! API-compatible stand-ins for the PJRT runtime when the crate is built
+//! without the `pjrt` feature (the `xla` crate and its XLA C++ backing
+//! library are not available in every environment).
+//!
+//! Construction entry points ([`Engine::cpu`], [`GoldenModel::load`],
+//! [`CimKernel::load`]) fail at *runtime* with a clear message, so
+//! everything that depends on golden statistics — the CLI `golden`
+//! subcommand, `--stats golden`, the golden examples — still compiles
+//! and degrades gracefully, while the synthetic-statistics paths (the
+//! default everywhere) are unaffected.
+
+use super::artifacts::{Manifest, ModelMeta};
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+fn unavailable(what: &str) -> anyhow::Error {
+    anyhow::anyhow!(
+        "{what} needs the PJRT runtime, but cimfab was built without the `pjrt` \
+         feature — rebuild with `cargo build --features pjrt` (requires the \
+         offline `xla` registry), or use `--stats synth`"
+    )
+}
+
+/// Stand-in for the PJRT client. [`Engine::cpu`] always fails.
+pub struct Engine {
+    _priv: (),
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        Err(unavailable("Engine::cpu()"))
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without `pjrt`)".to_string()
+    }
+}
+
+/// Stand-in for a compiled executable.
+pub struct Module {
+    _priv: (),
+}
+
+impl Module {
+    pub fn path(&self) -> &str {
+        "unavailable"
+    }
+}
+
+/// Stand-in for the AOT-exported quantized network.
+pub struct GoldenModel {
+    pub meta: ModelMeta,
+    pub net: String,
+}
+
+impl GoldenModel {
+    pub fn load(_engine: &Engine, _manifest: &Manifest, net: &str) -> Result<GoldenModel> {
+        Err(unavailable(&format!("GoldenModel::load(\"{net}\")")))
+    }
+
+    pub fn run(&self, _image: &Tensor<f32>) -> Result<(Vec<Tensor<u8>>, Vec<f32>)> {
+        Err(unavailable("GoldenModel::run()"))
+    }
+
+    /// Synthetic input image (smoothed uniform pixels, [0,255]) —
+    /// delegates to the shared ungated implementation, so the image
+    /// stream is identical with and without the `pjrt` feature.
+    pub fn gen_image(hw: usize, seed: u64) -> Tensor<f32> {
+        super::gen_image(hw, seed)
+    }
+
+    pub fn profile(&self, _n: usize, _seed: u64) -> Result<Vec<Vec<Tensor<u8>>>> {
+        Err(unavailable("GoldenModel::profile()"))
+    }
+}
+
+/// Stand-in for the L1 Pallas crossbar kernel.
+pub struct CimKernel {
+    pub patches: usize,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl CimKernel {
+    pub fn load(_engine: &Engine, _manifest: &Manifest) -> Result<CimKernel> {
+        Err(unavailable("CimKernel::load()"))
+    }
+
+    pub fn matmul(&self, _x: &[u8], _w: &[i8]) -> Result<Vec<i32>> {
+        Err(unavailable("CimKernel::matmul()"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_fails_with_actionable_message() {
+        let err = format!("{:#}", Engine::cpu().unwrap_err());
+        assert!(err.contains("pjrt"), "{err}");
+        assert!(err.contains("--stats synth"), "{err}");
+    }
+
+    #[test]
+    fn gen_image_matches_real_shape_and_range() {
+        let img = GoldenModel::gen_image(8, 3);
+        assert_eq!(img.shape(), &[3, 8, 8]);
+        assert!(img.data().iter().all(|&v| (0.0..=255.0).contains(&v)));
+        // deterministic
+        assert_eq!(img.data(), GoldenModel::gen_image(8, 3).data());
+    }
+}

@@ -12,6 +12,10 @@ use cimfab::util::prng::Prng;
 use cimfab::xbar::{ReadMode, SubArray};
 
 fn manifest() -> Option<Manifest> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("SKIP: built without the `pjrt` feature — runtime stubs cannot execute");
+        return None;
+    }
     match Manifest::load("artifacts") {
         Ok(m) => Some(m),
         Err(_) => {

@@ -1,0 +1,193 @@
+//! Pipeline determinism and parallel-equivalence guarantees:
+//!
+//! * the same `Scenario` + seed dumps byte-identical per-stage JSON
+//!   artifacts across runs;
+//! * the multi-threaded sweep executor produces results identical to a
+//!   serial run;
+//! * the pipeline-backed `Driver` matches the raw pipeline stages.
+
+use cimfab::alloc::Algorithm;
+use cimfab::pipeline::artifact;
+use cimfab::pipeline::{run_sweep, PrefixSpec, Scenario, Stage, StatsSource, SweepCfg};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+fn spec(seed: u64) -> PrefixSpec {
+    PrefixSpec {
+        net: "resnet18".into(),
+        hw: 32,
+        stats: StatsSource::Synthetic,
+        profile_images: 1,
+        seed,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+fn scenarios(seed: u64) -> Vec<Scenario> {
+    let mut out = Vec::new();
+    for pes in [129usize, 172] {
+        for alg in Algorithm::all() {
+            out.push(Scenario { prefix: spec(seed), alg, pes, sim_images: 4 });
+        }
+    }
+    out
+}
+
+fn tmp_dir(tag: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("cimfab_dumps_{}_{tag}", std::process::id()));
+    if dir.exists() {
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+    dir.to_str().unwrap().to_string()
+}
+
+/// Collect `relative-path → bytes` for every file under `root`.
+fn read_tree(root: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(root: &Path, dir: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.is_dir() {
+                walk(root, &path, out);
+            } else {
+                let rel = path.strip_prefix(root).unwrap().to_str().unwrap().to_string();
+                out.insert(rel, std::fs::read(&path).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(root, root, &mut out);
+    out
+}
+
+#[test]
+fn stage_dumps_are_byte_identical_across_runs() {
+    let scs = scenarios(13);
+    let (da, db) = (tmp_dir("a"), tmp_dir("b"));
+    run_sweep(&scs, &SweepCfg { threads: 1, dump_dir: Some(da.clone()) }).unwrap();
+    run_sweep(&scs, &SweepCfg { threads: 4, dump_dir: Some(db.clone()) }).unwrap();
+
+    let ta = read_tree(Path::new(&da));
+    let tb = read_tree(Path::new(&db));
+    assert!(!ta.is_empty(), "no dumps written");
+    let keys_a: Vec<&String> = ta.keys().collect();
+    let keys_b: Vec<&String> = tb.keys().collect();
+    assert_eq!(keys_a, keys_b, "dump trees differ in file sets");
+    for (path, bytes) in &ta {
+        assert_eq!(bytes, &tb[path], "dump {path} differs between runs");
+    }
+
+    std::fs::remove_dir_all(&da).unwrap();
+    std::fs::remove_dir_all(&db).unwrap();
+}
+
+#[test]
+fn dump_tree_has_every_stage_exactly_once_per_scope() {
+    let scs = scenarios(29);
+    let dir = tmp_dir("tree");
+    run_sweep(&scs, &SweepCfg { threads: 2, dump_dir: Some(dir.clone()) }).unwrap();
+    let tree = read_tree(Path::new(&dir));
+
+    let prefix_id = spec(29).id();
+    for stage in Stage::ALL {
+        if stage.is_prefix() {
+            let path = format!("{prefix_id}/{}", stage.dump_file());
+            assert!(tree.contains_key(&path), "missing prefix dump {path}");
+        } else {
+            for sc in &scs {
+                let path = format!("{prefix_id}/{}/{}", sc.id(), stage.dump_file());
+                assert!(tree.contains_key(&path), "missing scenario dump {path}");
+            }
+        }
+    }
+    // 5 prefix files + 4 per scenario, nothing else
+    assert_eq!(tree.len(), 5 + 4 * scs.len());
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn parallel_sweep_matches_serial_bit_for_bit() {
+    let scs = scenarios(7);
+    let serial = run_sweep(&scs, &SweepCfg { threads: 1, dump_dir: None }).unwrap();
+    let parallel = run_sweep(&scs, &SweepCfg { threads: 4, dump_dir: None }).unwrap();
+    assert_eq!(serial.len(), parallel.len());
+    for (s, p) in serial.iter().zip(&parallel) {
+        assert_eq!(s.scenario, p.scenario, "outcome order changed");
+        assert_eq!(s.plan, p.plan, "{}: plans differ", s.scenario.id());
+        // full-result comparison through the canonical JSON artifact
+        assert_eq!(
+            artifact::sim_result_json(&s.result).pretty(),
+            artifact::sim_result_json(&p.result).pretty(),
+            "{}: simulation results differ",
+            s.scenario.id()
+        );
+    }
+}
+
+#[test]
+fn sweep_reproduces_the_driver_path() {
+    use cimfab::coordinator::{Driver, DriverOpts};
+    let d = Driver::prepare(DriverOpts {
+        net: "resnet18".into(),
+        hw: 32,
+        stats: StatsSource::Synthetic,
+        profile_images: 1,
+        sim_images: 4,
+        seed: 13,
+        artifacts_dir: "artifacts".into(),
+    })
+    .unwrap();
+    let outcomes = run_sweep(&scenarios(13), &SweepCfg { threads: 3, dump_dir: None }).unwrap();
+    for o in &outcomes {
+        let (_, want) = d.run(o.scenario.alg, o.scenario.pes).unwrap();
+        assert_eq!(o.result.makespan, want.makespan, "{}", o.scenario.id());
+        assert_eq!(o.result.layer_util, want.layer_util, "{}", o.scenario.id());
+    }
+}
+
+#[test]
+fn synthetic_prefixes_differing_only_in_artifacts_dir_share_one_prefix() {
+    // artifacts_dir is irrelevant under synthetic stats, so PrefixSpec::id()
+    // ignores it and the executor must not prepare (or dump) twice.
+    let a = spec(31);
+    let mut b = spec(31);
+    b.artifacts_dir = "elsewhere".into();
+    assert_eq!(a.id(), b.id());
+    let scs = vec![
+        Scenario { prefix: a, alg: Algorithm::WeightBased, pes: 172, sim_images: 4 },
+        Scenario { prefix: b, alg: Algorithm::BlockWise, pes: 172, sim_images: 4 },
+    ];
+    let dir = tmp_dir("shared");
+    let out = run_sweep(&scs, &SweepCfg { threads: 2, dump_dir: Some(dir.clone()) }).unwrap();
+    assert_eq!(out.len(), 2);
+    let tree = read_tree(Path::new(&dir));
+    // one prefix directory (5 stage files) + two scenario dirs (4 each)
+    assert_eq!(tree.len(), 5 + 2 * 4, "{:?}", tree.keys().collect::<Vec<_>>());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn multi_prefix_sweep_prepares_each_prefix_once_and_stays_ordered() {
+    // Two nets in one sweep: outcomes must come back in input order with
+    // the right prefixes attached.
+    let mut scs = Vec::new();
+    for net in ["resnet18", "vgg11"] {
+        let prefix = PrefixSpec {
+            net: net.into(),
+            hw: 32,
+            stats: StatsSource::Synthetic,
+            profile_images: 1,
+            seed: 3,
+            artifacts_dir: "artifacts".into(),
+        };
+        for alg in [Algorithm::WeightBased, Algorithm::BlockWise] {
+            scs.push(Scenario { prefix: prefix.clone(), alg, pes: 200, sim_images: 4 });
+        }
+    }
+    let out = run_sweep(&scs, &SweepCfg { threads: 4, dump_dir: None }).unwrap();
+    assert_eq!(out.len(), 4);
+    for (o, sc) in out.iter().zip(&scs) {
+        assert_eq!(&o.scenario, sc);
+        assert!(o.result.throughput_ips > 0.0, "{}", sc.id());
+    }
+}
