@@ -28,8 +28,8 @@ fn main() -> cimfab::Result<()> {
         })?;
         let mut t = report::fig8_table();
         for pes in d.sweep_sizes(steps) {
-            for (alg, r) in d.run_all(pes)? {
-                t.row(report::fig8_row(alg, pes, &r));
+            for (alloc, r) in d.run_all(pes)? {
+                t.row(report::fig8_row(&alloc, pes, &r));
             }
         }
         if args.has_flag("csv") {

@@ -37,10 +37,9 @@ fn main() -> cimfab::Result<()> {
     println!("{}", report::speedup_summary(&results).render());
 
     let best = results.iter().max_by(|a, b| a.1.throughput_ips.total_cmp(&b.1.throughput_ips));
-    if let Some((alg, r)) = best {
+    if let Some((alloc, r)) = best {
         println!(
-            "winner: {} at {:.0} inferences/s (chip utilization {:.0}%)",
-            alg.name(),
+            "winner: {alloc} at {:.0} inferences/s (chip utilization {:.0}%)",
             r.throughput_ips,
             r.chip_util * 100.0
         );

@@ -18,8 +18,8 @@
 //!
 //! Results land in EXPERIMENTS.md §E2E.
 
-use cimfab::alloc::Algorithm;
 use cimfab::coordinator::{Driver, DriverOpts, StatsSource};
+use cimfab::strategy::StrategyRegistry;
 use cimfab::report;
 use cimfab::runtime::{CimKernel, Engine, GoldenModel, Manifest};
 use cimfab::util::prng::Prng;
@@ -75,15 +75,18 @@ fn main() -> cimfab::Result<()> {
     let sizes = driver.sweep_sizes(4);
     let mut fig8 = report::fig8_table();
     for &pes in &sizes {
-        for (alg, r) in driver.run_all(pes)? {
-            fig8.row(report::fig8_row(alg, pes, &r));
+        for (alloc, r) in driver.run_all(pes)? {
+            fig8.row(report::fig8_row(&alloc, pes, &r));
         }
     }
     println!("[4] Fig 8 (golden stats):\n{}", fig8.render());
 
     let results = driver.run_all(sizes[2])?;
-    let zs: Vec<(Algorithm, &cimfab::sim::SimResult)> =
-        results.iter().filter(|(a, _)| a.zero_skip()).map(|(a, r)| (*a, r)).collect();
+    let zs: Vec<(&str, &cimfab::sim::SimResult)> = results
+        .iter()
+        .filter(|(a, _)| StrategyRegistry::is_zero_skip(a))
+        .map(|(a, r)| (a.as_str(), r))
+        .collect();
     println!("Fig 9 @ {} PEs:\n{}", sizes[2], report::fig9_table(&driver.map, &zs).render());
     println!("headline:\n{}", report::speedup_summary(&results).render());
     Ok(())

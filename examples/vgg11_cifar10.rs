@@ -10,15 +10,14 @@
 //! VGG11] … because VGG11 has roughly half the layers" — we print both
 //! networks' block-wise:perf-based ratios side by side.
 
-use cimfab::alloc::Algorithm;
 use cimfab::coordinator::{Driver, DriverOpts, StatsSource};
 use cimfab::report;
 
-fn ratio(results: &[(Algorithm, cimfab::sim::SimResult)], a: Algorithm, b: Algorithm) -> f64 {
-    let get = |alg| {
+fn ratio(results: &[(String, cimfab::sim::SimResult)], a: &str, b: &str) -> f64 {
+    let get = |alloc: &str| {
         results
             .iter()
-            .find(|(x, _)| *x == alg)
+            .find(|(x, _)| x == alloc)
             .map(|(_, r)| r.throughput_ips)
             .unwrap_or(f64::NAN)
     };
@@ -58,8 +57,8 @@ fn main() -> cimfab::Result<()> {
         artifacts_dir: "artifacts".into(),
     })?;
     let rn_results = rn.run_all(rn.min_pes() * 2)?;
-    let vgg_gain = ratio(&vgg_results, Algorithm::BlockWise, Algorithm::PerfBased);
-    let rn_gain = ratio(&rn_results, Algorithm::BlockWise, Algorithm::PerfBased);
+    let vgg_gain = ratio(&vgg_results, "block-wise", "perf-based");
+    let rn_gain = ratio(&rn_results, "block-wise", "perf-based");
     println!(
         "block-wise over perf-based — resnet18 (20 conv): {rn_gain:.2}x, vgg11 (8 conv): {vgg_gain:.2}x"
     );

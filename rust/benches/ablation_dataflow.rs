@@ -11,11 +11,13 @@
 //! The shared prefix comes from the staged pipeline; the custom
 //! plan × dataflow cells drive the allocator/simulator directly.
 
-use cimfab::alloc::{allocate, Algorithm};
+use cimfab::alloc::Allocator;
 use cimfab::config::ChipCfg;
 use cimfab::mapping::{place, AllocationPlan};
 use cimfab::pipeline::{self, PrefixSpec, StatsSource};
-use cimfab::sim::{simulate, Dataflow, SimCfg};
+use cimfab::sim::dataflow::{BLOCK_WISE, LAYER_WISE};
+use cimfab::sim::{simulate, DataflowModel, SimCfg};
+use cimfab::strategy::StrategyRegistry;
 use cimfab::util::bench::{banner, Bencher};
 use cimfab::util::table::Table;
 use cimfab::xbar::ReadMode;
@@ -40,8 +42,10 @@ fn main() {
     let (map, trace, prof) = (&prep.map, &prep.trace, &prep.profile);
     let chip = ChipCfg::paper(172);
 
-    let perf_plan = allocate(Algorithm::PerfBased, map, prof, chip.total_arrays()).unwrap();
-    let block_plan = allocate(Algorithm::BlockWise, map, prof, chip.total_arrays()).unwrap();
+    let perf = StrategyRegistry::lookup_allocator("perf-based").unwrap();
+    let block = StrategyRegistry::lookup_allocator("block-wise").unwrap();
+    let perf_plan = perf.allocate(map, prof, chip.total_arrays()).unwrap();
+    let block_plan = block.allocate(map, prof, chip.total_arrays()).unwrap();
     // layer-wise machine running the block-wise plan: flatten to uniform
     // per-layer counts (min over blocks)
     let block_plan_flat = AllocationPlan {
@@ -55,7 +59,11 @@ fn main() {
 
     let mut b = Bencher::new(0, 2);
     let mut t = Table::new(["plan", "dataflow", "inferences/s"]);
-    let mut cell = |name: &str, plan: &AllocationPlan, flow: Dataflow, b: &mut Bencher| -> f64 {
+    let mut cell = |name: &str,
+                    plan: &AllocationPlan,
+                    flow: &'static dyn DataflowModel,
+                    b: &mut Bencher|
+     -> f64 {
         let placement = place(map, plan, &chip).unwrap();
         let mut ips = 0.0;
         b.bench(name, || {
@@ -71,16 +79,16 @@ fn main() {
         });
         t.row([
             plan.algorithm.clone(),
-            format!("{flow:?}"),
+            flow.name().to_string(),
             format!("{ips:.1}"),
         ]);
         ips
     };
 
-    let a = cell("perf plan + layer flow", &perf_plan, Dataflow::LayerWise, &mut b);
-    let c = cell("perf plan + block flow", &perf_plan, Dataflow::BlockWise, &mut b);
-    let d = cell("block plan (flattened) + layer flow", &block_plan_flat, Dataflow::LayerWise, &mut b);
-    let e = cell("block plan + block flow", &block_plan, Dataflow::BlockWise, &mut b);
+    let a = cell("perf plan + layer flow", &perf_plan, &LAYER_WISE, &mut b);
+    let c = cell("perf plan + block flow", &perf_plan, &BLOCK_WISE, &mut b);
+    let d = cell("block plan (flattened) + layer flow", &block_plan_flat, &LAYER_WISE, &mut b);
+    let e = cell("block plan + block flow", &block_plan, &BLOCK_WISE, &mut b);
     println!("{}", t.render());
 
     println!("dataflow-only gain (same perf plan):            {:.2}x", c / a);

@@ -13,9 +13,9 @@
 //! over the sweep executor — timed serial and parallel, with the
 //! parallel outcomes checked identical to the serial reference.
 
-use cimfab::alloc::Algorithm;
 use cimfab::pipeline::{self, run_scenarios_prepared, PrefixSpec, StatsSource, SweepCfg};
 use cimfab::report;
+use cimfab::strategy::StrategyRegistry;
 use cimfab::util::bench::{banner, Bencher};
 
 fn main() {
@@ -40,7 +40,8 @@ fn main() {
     println!("min design size: {} PEs ({} arrays)\n", prep.min_pes(), prep.map.min_arrays());
 
     let sizes = pipeline::sweep_sizes(prep.min_pes(), 6); // 86, 122, 172, 243, 344, 486
-    let scenarios = pipeline::scenarios_for(&spec, &sizes, &Algorithm::all(), 8);
+    let algs = StrategyRegistry::paper_allocators();
+    let scenarios = pipeline::scenarios_for(&spec, &sizes, &algs, 8);
 
     let mut serial = Vec::new();
     b.bench("sweep 24 scenarios, serial", || {
@@ -65,19 +66,19 @@ fn main() {
 
     let mut ratios = Vec::new();
     for &pes in &sizes {
-        let get = |alg: Algorithm| {
+        let get = |alloc: &str| {
             serial
                 .iter()
-                .find(|o| o.scenario.alg == alg && o.scenario.pes == pes)
+                .find(|o| o.scenario.alloc == alloc && o.scenario.pes == pes)
                 .unwrap()
                 .result
                 .throughput_ips
         };
         ratios.push((
             pes,
-            get(Algorithm::BlockWise) / get(Algorithm::Baseline),
-            get(Algorithm::BlockWise) / get(Algorithm::WeightBased),
-            get(Algorithm::BlockWise) / get(Algorithm::PerfBased),
+            get("block-wise") / get("baseline"),
+            get("block-wise") / get("weight-based"),
+            get("block-wise") / get("perf-based"),
         ));
     }
 

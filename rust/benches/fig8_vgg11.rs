@@ -7,9 +7,9 @@
 //! Both networks run through the staged pipeline sweep executor; the
 //! per-net prefix is prepared once and shared across every scenario.
 
-use cimfab::alloc::Algorithm;
 use cimfab::pipeline::{self, run_scenarios_prepared, PrefixSpec, StatsSource, SweepCfg};
 use cimfab::report;
+use cimfab::strategy::StrategyRegistry;
 use cimfab::util::bench::{banner, Bencher};
 
 fn run_net(net: &str, hw: usize, steps: usize) -> Vec<(usize, f64)> {
@@ -25,7 +25,7 @@ fn run_net(net: &str, hw: usize, steps: usize) -> Vec<(usize, f64)> {
     let scenarios = pipeline::scenarios_for(
         &spec,
         &pipeline::sweep_sizes(prep.min_pes(), steps),
-        &Algorithm::all(),
+        &StrategyRegistry::paper_allocators(),
         8,
     );
     let outcomes = run_scenarios_prepared(&prep, &scenarios, &SweepCfg::parallel()).unwrap();
@@ -33,15 +33,15 @@ fn run_net(net: &str, hw: usize, steps: usize) -> Vec<(usize, f64)> {
 
     let mut out = Vec::new();
     for pes in pipeline::sweep_sizes(prep.min_pes(), steps) {
-        let get = |alg: Algorithm| {
+        let get = |alloc: &str| {
             outcomes
                 .iter()
-                .find(|o| o.scenario.alg == alg && o.scenario.pes == pes)
+                .find(|o| o.scenario.alloc == alloc && o.scenario.pes == pes)
                 .unwrap()
                 .result
                 .throughput_ips
         };
-        out.push((pes, get(Algorithm::BlockWise) / get(Algorithm::PerfBased)));
+        out.push((pes, get("block-wise") / get("perf-based")));
     }
     out
 }

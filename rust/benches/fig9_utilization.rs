@@ -8,9 +8,9 @@
 //! Runs on the staged pipeline: one shared prefix, four scenarios on the
 //! sweep executor.
 
-use cimfab::alloc::Algorithm;
 use cimfab::pipeline::{self, run_scenarios_prepared, PrefixSpec, StatsSource, SweepCfg};
 use cimfab::report;
+use cimfab::strategy::StrategyRegistry;
 use cimfab::util::bench::{banner, Bencher};
 
 fn main() {
@@ -28,7 +28,8 @@ fn main() {
     };
     let prep = pipeline::prepare(&spec, None).unwrap();
     let pes = prep.min_pes() * 2;
-    let scenarios = pipeline::scenarios_for(&spec, &[pes], &Algorithm::all(), 8);
+    let scenarios =
+        pipeline::scenarios_for(&spec, &[pes], &StrategyRegistry::paper_allocators(), 8);
 
     let mut b = Bencher::new(0, 2);
     let mut outcomes = Vec::new();
@@ -36,22 +37,19 @@ fn main() {
         outcomes = run_scenarios_prepared(&prep, &scenarios, &SweepCfg::parallel()).unwrap();
     });
 
-    let zs: Vec<(Algorithm, &cimfab::sim::SimResult)> = outcomes
+    let zs: Vec<(&str, &cimfab::sim::SimResult)> = outcomes
         .iter()
-        .filter(|o| o.scenario.alg.zero_skip())
-        .map(|o| (o.scenario.alg, &o.result))
+        .filter(|o| StrategyRegistry::is_zero_skip(&o.scenario.alloc))
+        .map(|o| (o.scenario.alloc.as_str(), &o.result))
         .collect();
     println!("{}", report::fig9_table(&prep.map, &zs).render());
 
-    let mean_util = |alg: Algorithm| {
-        let r = &outcomes.iter().find(|o| o.scenario.alg == alg).unwrap().result;
+    let mean_util = |alloc: &str| {
+        let r = &outcomes.iter().find(|o| o.scenario.alloc == alloc).unwrap().result;
         r.layer_util.iter().sum::<f64>() / r.layer_util.len() as f64
     };
-    let (wb, pb, bw) = (
-        mean_util(Algorithm::WeightBased),
-        mean_util(Algorithm::PerfBased),
-        mean_util(Algorithm::BlockWise),
-    );
+    let (wb, pb, bw) =
+        (mean_util("weight-based"), mean_util("perf-based"), mean_util("block-wise"));
     println!(
         "mean utilization — weight-based {:.1}%, perf-based {:.1}%, block-wise {:.1}%",
         wb * 100.0,

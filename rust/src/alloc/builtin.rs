@@ -1,0 +1,177 @@
+//! The paper's four allocation strategies as [`Allocator`] trait
+//! objects (registered under the same names the old `Algorithm` enum
+//! used, so plans and artifact dumps are byte-identical to the
+//! pre-registry enum paths — pinned by `tests/strategy_registry.rs`).
+
+use super::{finish_plan, greedy, Allocator};
+use crate::mapping::{AllocationPlan, NetworkMap};
+use crate::stats::NetworkProfile;
+use crate::xbar::ReadMode;
+
+/// Weight-based allocation without zero-skipping (prior work's
+/// deterministic regime).
+#[derive(Debug, Clone, Copy)]
+pub struct Baseline;
+
+/// Weight-based allocation + zero-skipping (prior work under the
+/// paper's stochastic read regime).
+#[derive(Debug, Clone, Copy)]
+pub struct WeightBased;
+
+/// Performance-based layer-wise allocation + zero-skipping (§III-B).
+#[derive(Debug, Clone, Copy)]
+pub struct PerfBased;
+
+/// Block-wise allocation + block-wise dataflow (§III-C, the
+/// contribution).
+#[derive(Debug, Clone, Copy)]
+pub struct BlockWise;
+
+pub static BASELINE: Baseline = Baseline;
+pub static WEIGHT_BASED: WeightBased = WeightBased;
+pub static PERF_BASED: PerfBased = PerfBased;
+pub static BLOCK_WISE: BlockWise = BlockWise;
+
+impl Allocator for Baseline {
+    fn name(&self) -> &str {
+        "baseline"
+    }
+
+    fn describe(&self) -> &str {
+        "weight-based whole-layer copies, zero-skipping disabled (prior work's \
+         deterministic regime, where weight-based allocation is optimal)"
+    }
+
+    fn read_mode(&self) -> ReadMode {
+        ReadMode::Baseline
+    }
+
+    fn allocate(
+        &self,
+        map: &NetworkMap,
+        profile: &NetworkProfile,
+        budget_arrays: usize,
+    ) -> crate::Result<AllocationPlan> {
+        // Prior work: equalize layer completion times assuming every
+        // array performs uniformly (deterministic reads). The one-copy
+        // deterministic stage time is positions × worst baseline block
+        // cost — proportional to MACs per allocated array, which is what
+        // "allocate arrays based on total MACs per layer" achieves
+        // (§III-A).
+        let plan = greedy::layerwise(map, &profile.layer_baseline_cycles, budget_arrays)?;
+        finish_plan(plan, self.name(), map, budget_arrays)
+    }
+}
+
+impl Allocator for WeightBased {
+    fn name(&self) -> &str {
+        "weight-based"
+    }
+
+    fn describe(&self) -> &str {
+        "whole-layer copies proportional to layer MACs, zero-skipping at run time \
+         (prior work's allocation under the stochastic regime)"
+    }
+
+    fn allocate(
+        &self,
+        map: &NetworkMap,
+        profile: &NetworkProfile,
+        budget_arrays: usize,
+    ) -> crate::Result<AllocationPlan> {
+        let plan = greedy::layerwise(map, &profile.layer_baseline_cycles, budget_arrays)?;
+        finish_plan(plan, self.name(), map, budget_arrays)
+    }
+}
+
+impl Allocator for PerfBased {
+    fn name(&self) -> &str {
+        "perf-based"
+    }
+
+    fn describe(&self) -> &str {
+        "whole-layer copies balanced on profiled zero-skip layer cycles (§III-B)"
+    }
+
+    fn allocate(
+        &self,
+        map: &NetworkMap,
+        profile: &NetworkProfile,
+        budget_arrays: usize,
+    ) -> crate::Result<AllocationPlan> {
+        let plan = greedy::layerwise(map, &profile.layer_barrier_cycles, budget_arrays)?;
+        finish_plan(plan, self.name(), map, budget_arrays)
+    }
+}
+
+impl Allocator for BlockWise {
+    fn name(&self) -> &str {
+        "block-wise"
+    }
+
+    fn describe(&self) -> &str {
+        "per-block duplicates balanced on profiled zero-skip block cycles, paired \
+         with the barrier-free block-wise dataflow (§III-C, the contribution)"
+    }
+
+    fn default_dataflow(&self) -> &str {
+        "block-wise"
+    }
+
+    fn uniform_plans(&self) -> bool {
+        false
+    }
+
+    fn allocate(
+        &self,
+        map: &NetworkMap,
+        profile: &NetworkProfile,
+        budget_arrays: usize,
+    ) -> crate::Result<AllocationPlan> {
+        let plan = greedy::blockwise(map, &profile.block_cycles, budget_arrays)?;
+        finish_plan(plan, self.name(), map, budget_arrays)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArrayCfg;
+    use crate::dnn::resnet18;
+    use crate::mapping::map_network;
+    use crate::stats::synth::{synth_activations, SynthCfg};
+    use crate::stats::trace_from_activations;
+
+    fn setup() -> (NetworkMap, NetworkProfile) {
+        let g = resnet18(32, 10);
+        let map = map_network(&g, ArrayCfg::paper(), false);
+        let acts = synth_activations(&g, &map, 1, 5, SynthCfg::default());
+        let trace = trace_from_activations(&g, &map, &acts);
+        let prof = NetworkProfile::from_trace(&map, &trace);
+        (map, prof)
+    }
+
+    #[test]
+    fn builtin_traits_stamp_their_names() {
+        let (map, prof) = setup();
+        let budget = map.min_arrays() * 2;
+        let strategies: [&dyn Allocator; 4] =
+            [&BASELINE, &WEIGHT_BASED, &PERF_BASED, &BLOCK_WISE];
+        for s in strategies {
+            let plan = s.allocate(&map, &prof, budget).unwrap();
+            assert_eq!(plan.algorithm, s.name());
+            plan.validate(&map, budget).unwrap();
+        }
+    }
+
+    #[test]
+    fn baseline_and_weight_based_share_the_plan_but_not_the_read_mode() {
+        let (map, prof) = setup();
+        let budget = map.min_arrays() * 2;
+        let a = BASELINE.allocate(&map, &prof, budget).unwrap();
+        let b = WEIGHT_BASED.allocate(&map, &prof, budget).unwrap();
+        assert_eq!(a.duplicates, b.duplicates);
+        assert_eq!(BASELINE.read_mode(), ReadMode::Baseline);
+        assert_eq!(WEIGHT_BASED.read_mode(), ReadMode::ZeroSkip);
+    }
+}

@@ -42,6 +42,45 @@ impl Ord for Entry {
     }
 }
 
+/// One grantable unit of the water-filling loop: a whole layer for the
+/// layer-wise allocators, a single block for the block-wise one —
+/// strategies (e.g. [`crate::alloc::hybrid::Hybrid`]) may mix both in
+/// one run.
+#[derive(Debug, Clone, Copy)]
+pub struct Unit {
+    /// Expected one-copy latency of the unit (cycles).
+    pub latency: f64,
+    /// Arrays one extra copy of the unit costs.
+    pub cost: usize,
+}
+
+/// The paper's greedy water-filling core, shared by every built-in
+/// allocator: starting from one copy per unit, repeatedly grant a copy
+/// to the unit with the highest effective latency (`latency / copies`)
+/// until the slowest unit no longer fits in `free` arrays. Returns the
+/// per-unit copy counts (each ≥ 1). Ties break toward the lower unit
+/// index, so the result is deterministic.
+pub fn waterfill(units: &[Unit], mut free: usize) -> Vec<usize> {
+    let mut copies = vec![1usize; units.len()];
+    let mut heap: BinaryHeap<Entry> = units
+        .iter()
+        .enumerate()
+        .map(|(id, u)| Entry { latency: u.latency, cost: u.cost, id })
+        .collect();
+    while let Some(top) = heap.pop() {
+        if top.cost > free {
+            break; // paper: stop when the slowest unit no longer fits
+        }
+        free -= top.cost;
+        copies[top.id] += 1;
+        heap.push(Entry {
+            latency: units[top.id].latency / copies[top.id] as f64,
+            ..top
+        });
+    }
+    copies
+}
+
 /// Layer-wise greedy: grant whole-layer copies to the layer with the
 /// highest `base_latency[l] / copies[l]`.
 pub fn layerwise(
@@ -56,25 +95,13 @@ pub fn layerwise(
         "budget {budget_arrays} arrays < minimum {min} for {}",
         map.net_name
     );
-    let mut copies = vec![1usize; map.grids.len()];
-    let mut free = budget_arrays - min;
-    let mut heap: BinaryHeap<Entry> = map
+    let units: Vec<Unit> = map
         .grids
         .iter()
         .enumerate()
-        .map(|(l, g)| Entry { latency: base_latency[l], cost: g.arrays_per_copy(), id: l })
+        .map(|(l, g)| Unit { latency: base_latency[l], cost: g.arrays_per_copy() })
         .collect();
-    while let Some(top) = heap.pop() {
-        if top.cost > free {
-            break; // paper: stop when the slowest unit no longer fits
-        }
-        free -= top.cost;
-        copies[top.id] += 1;
-        heap.push(Entry {
-            latency: base_latency[top.id] / copies[top.id] as f64,
-            ..top
-        });
-    }
+    let copies = waterfill(&units, budget_arrays - min);
     Ok(AllocationPlan {
         algorithm: "layerwise".into(),
         duplicates: map
@@ -100,32 +127,16 @@ pub fn blockwise(
         "budget {budget_arrays} arrays < minimum {min} for {}",
         map.net_name
     );
-    let mut free = budget_arrays - min;
-
     // dense block enumeration
     let blocks = map.blocks();
-    let mut copies = vec![1usize; blocks.len()];
-    let mut heap: BinaryHeap<Entry> = blocks
+    let units: Vec<Unit> = blocks
         .iter()
-        .enumerate()
-        .map(|(i, b)| Entry {
+        .map(|b| Unit {
             latency: block_latency[b.layer][b.row],
             cost: map.grids[b.layer].arrays_per_block,
-            id: i,
         })
         .collect();
-    while let Some(top) = heap.pop() {
-        if top.cost > free {
-            break;
-        }
-        free -= top.cost;
-        copies[top.id] += 1;
-        heap.push(Entry {
-            latency: block_latency[blocks[top.id].layer][blocks[top.id].row]
-                / copies[top.id] as f64,
-            ..top
-        });
-    }
+    let copies = waterfill(&units, budget_arrays - min);
     let mut duplicates: Vec<Vec<usize>> =
         map.grids.iter().map(|g| vec![1; g.blocks_per_copy]).collect();
     for (i, b) in blocks.iter().enumerate() {

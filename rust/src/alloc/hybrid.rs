@@ -1,0 +1,176 @@
+//! Hybrid layer/block split-point allocation — proof that the open
+//! [`Allocator`] API composes.
+//!
+//! The paper's two layer-wise allocators grant whole-layer copies; the
+//! block-wise allocator grants single blocks. `Hybrid` does both in one
+//! greedy run: layers in front of a split point are granted as whole
+//! layers (on profiled zero-skip layer cycles, like `perf-based`),
+//! layers at or past it as single blocks (on profiled block cycles,
+//! like `block-wise`). One [`greedy::waterfill`] pass over the mixed
+//! unit list balances the two regimes against each other — no custom
+//! budget partitioning.
+//!
+//! Why split there: early layers see dense, pixel-like activations, so
+//! their blocks perform near-uniformly and whole-layer copies lose
+//! little; deep layers are sparse with a wide per-block cycle spread
+//! (paper Fig 6) — exactly where block-granular duplication pays.
+
+use super::{finish_plan, greedy, Allocator};
+use crate::mapping::{AllocationPlan, NetworkMap};
+use crate::stats::NetworkProfile;
+
+/// Hybrid layer/block allocator. `front_frac` is the fraction of layers
+/// (from the front of the network) granted as whole-layer copies; the
+/// rest are granted block-wise.
+#[derive(Debug, Clone, Copy)]
+pub struct Hybrid {
+    /// Fraction of layers in the layer-wise front region, in `[0, 1]`.
+    /// `0.0` degenerates to `block-wise`, `1.0` to `perf-based`.
+    pub front_frac: f64,
+}
+
+/// The registered default: layer-wise front half, block-wise back half.
+pub static HYBRID: Hybrid = Hybrid { front_frac: 0.5 };
+
+impl Hybrid {
+    /// A hybrid with a custom split fraction (clamped to `[0, 1]`).
+    pub fn with_split(front_frac: f64) -> Hybrid {
+        Hybrid { front_frac: front_frac.clamp(0.0, 1.0) }
+    }
+
+    /// First layer index allocated block-wise.
+    pub fn split_layer(&self, layers: usize) -> usize {
+        ((layers as f64) * self.front_frac).round() as usize
+    }
+}
+
+impl Allocator for Hybrid {
+    fn name(&self) -> &str {
+        "hybrid"
+    }
+
+    fn describe(&self) -> &str {
+        "whole-layer copies for the dense front of the network, per-block duplicates \
+         past the split point (default: half the layers) — one greedy pass over mixed \
+         layer/block units"
+    }
+
+    fn default_dataflow(&self) -> &str {
+        // Non-uniform past the split point, so the barrier-free dataflow
+        // is required; its dynamic dispatch also runs uniform front
+        // layers correctly.
+        "block-wise"
+    }
+
+    fn uniform_plans(&self) -> bool {
+        false
+    }
+
+    fn allocate(
+        &self,
+        map: &NetworkMap,
+        profile: &NetworkProfile,
+        budget_arrays: usize,
+    ) -> crate::Result<AllocationPlan> {
+        let min = map.min_arrays();
+        anyhow::ensure!(
+            budget_arrays >= min,
+            "budget {budget_arrays} arrays < minimum {min} for {}",
+            map.net_name
+        );
+        let split = self.split_layer(map.grids.len());
+
+        // Mixed unit list: whole layers in front, single blocks after.
+        // `owners[u]` maps unit u back to (layer, block-or-whole-layer).
+        let mut units: Vec<greedy::Unit> = Vec::new();
+        let mut owners: Vec<(usize, Option<usize>)> = Vec::new();
+        for (l, g) in map.grids.iter().enumerate() {
+            if l < split {
+                units.push(greedy::Unit {
+                    latency: profile.layer_barrier_cycles[l],
+                    cost: g.arrays_per_copy(),
+                });
+                owners.push((l, None));
+            } else {
+                for r in 0..g.blocks_per_copy {
+                    units.push(greedy::Unit {
+                        latency: profile.block_cycles[l][r],
+                        cost: g.arrays_per_block,
+                    });
+                    owners.push((l, Some(r)));
+                }
+            }
+        }
+
+        let copies = greedy::waterfill(&units, budget_arrays - min);
+        let mut duplicates: Vec<Vec<usize>> =
+            map.grids.iter().map(|g| vec![1; g.blocks_per_copy]).collect();
+        for (u, &(l, row)) in owners.iter().enumerate() {
+            match row {
+                None => duplicates[l] = vec![copies[u]; map.grids[l].blocks_per_copy],
+                Some(r) => duplicates[l][r] = copies[u],
+            }
+        }
+        finish_plan(AllocationPlan { algorithm: String::new(), duplicates }, self.name(), map, budget_arrays)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::builtin::{BLOCK_WISE, PERF_BASED};
+    use crate::config::ArrayCfg;
+    use crate::dnn::resnet18;
+    use crate::mapping::map_network;
+    use crate::stats::synth::{synth_activations, SynthCfg};
+    use crate::stats::trace_from_activations;
+
+    fn setup() -> (NetworkMap, NetworkProfile) {
+        let g = resnet18(32, 10);
+        let map = map_network(&g, ArrayCfg::paper(), false);
+        let acts = synth_activations(&g, &map, 1, 5, SynthCfg::default());
+        let trace = trace_from_activations(&g, &map, &acts);
+        let prof = NetworkProfile::from_trace(&map, &trace);
+        (map, prof)
+    }
+
+    #[test]
+    fn hybrid_plan_is_uniform_in_front_and_valid() {
+        let (map, prof) = setup();
+        let budget = map.min_arrays() * 3;
+        let plan = HYBRID.allocate(&map, &prof, budget).unwrap();
+        plan.validate(&map, budget).unwrap();
+        assert_eq!(plan.algorithm, "hybrid");
+        let split = HYBRID.split_layer(map.grids.len());
+        for l in 0..split {
+            let d = &plan.duplicates[l];
+            assert!(d.iter().all(|&x| x == d[0]), "front layer {l} not uniform: {d:?}");
+        }
+    }
+
+    #[test]
+    fn split_extremes_degenerate_to_the_pure_strategies() {
+        let (map, prof) = setup();
+        let budget = map.min_arrays() * 2;
+        let all_blocks = Hybrid::with_split(0.0).allocate(&map, &prof, budget).unwrap();
+        let pure_blocks = BLOCK_WISE.allocate(&map, &prof, budget).unwrap();
+        assert_eq!(all_blocks.duplicates, pure_blocks.duplicates);
+        let all_layers = Hybrid::with_split(1.0).allocate(&map, &prof, budget).unwrap();
+        let pure_layers = PERF_BASED.allocate(&map, &prof, budget).unwrap();
+        assert_eq!(all_layers.duplicates, pure_layers.duplicates);
+    }
+
+    #[test]
+    fn split_layer_rounds_and_clamps() {
+        assert_eq!(HYBRID.split_layer(20), 10);
+        assert_eq!(Hybrid::with_split(2.0).front_frac, 1.0);
+        assert_eq!(Hybrid::with_split(-1.0).front_frac, 0.0);
+        assert_eq!(Hybrid::with_split(0.0).split_layer(20), 0);
+    }
+
+    #[test]
+    fn insufficient_budget_is_error() {
+        let (map, prof) = setup();
+        assert!(HYBRID.allocate(&map, &prof, map.min_arrays() - 1).is_err());
+    }
+}

@@ -1,28 +1,103 @@
-//! Array allocation algorithms (paper §III).
+//! Array allocation strategies (paper §III) behind the open
+//! [`Allocator`] trait.
 //!
-//! All three allocators share the same greedy skeleton the paper
-//! describes: start from one copy of everything, then repeatedly grant a
-//! copy to the unit with the highest *expected remaining latency*
-//! until the budget runs out. They differ in the unit granted and the
-//! latency estimate:
+//! All built-in allocators share the same greedy skeleton the paper
+//! describes ([`greedy::waterfill`]): start from one copy of everything,
+//! then repeatedly grant a copy to the unit with the highest *expected
+//! remaining latency* until the budget runs out. They differ in the unit
+//! granted and the latency estimate:
 //!
-//! | algorithm | unit granted | latency estimate |
+//! | strategy | unit granted | latency estimate |
 //! |---|---|---|
-//! | [`Algorithm::WeightBased`] | whole layer | layer MACs (assumes uniform array speed — prior work) |
-//! | [`Algorithm::PerfBased`]   | whole layer | profiled one-copy layer cycles under zero-skipping |
-//! | [`Algorithm::BlockWise`]   | single block | profiled one-copy block cycles (the contribution) |
+//! | `weight-based` | whole layer | layer MACs (assumes uniform array speed — prior work) |
+//! | `perf-based`   | whole layer | profiled one-copy layer cycles under zero-skipping |
+//! | `block-wise`   | single block | profiled one-copy block cycles (the contribution) |
+//! | `hybrid`       | layer before / block after a split point | mixed ([`hybrid::Hybrid`]) |
 //!
-//! [`Algorithm::Baseline`] is weight-based allocation *without*
-//! zero-skipping at simulation time (prior work's deterministic regime,
-//! where weight-based allocation is in fact optimal).
+//! `baseline` is weight-based allocation *without* zero-skipping at
+//! simulation time (prior work's deterministic regime, where
+//! weight-based allocation is in fact optimal).
+//!
+//! Strategies are string-addressable through
+//! [`crate::strategy::StrategyRegistry`]; adding one means implementing
+//! [`Allocator`] and registering it — no enum to extend, no `match`
+//! arms to chase (see the README's "Adding a new allocation strategy").
+//! The closed [`Algorithm`] enum survives only as a deprecated shim that
+//! delegates into the registry; new code should resolve strategies by
+//! name.
 
+pub mod builtin;
 pub mod greedy;
+pub mod hybrid;
 pub mod oracle;
 
 use crate::mapping::{AllocationPlan, NetworkMap};
 use crate::stats::NetworkProfile;
+use crate::xbar::ReadMode;
+
+/// An array-allocation strategy: turns a mapped network plus its
+/// profiled statistics into per-block duplicate counts under an array
+/// budget.
+///
+/// Implementations must be deterministic (same inputs ⇒ byte-identical
+/// [`AllocationPlan`]) — the pipeline's artifact-dump and
+/// parallel-sweep guarantees depend on it. `allocate` is responsible
+/// for setting [`AllocationPlan::algorithm`] to [`Allocator::name`] and
+/// validating the plan against the budget ([`finish_plan`] does both).
+pub trait Allocator: Send + Sync {
+    /// Registry key and CLI `--alloc` name (kebab-case).
+    fn name(&self) -> &str;
+
+    /// One-line human description for `cimfab list-strategies`.
+    fn describe(&self) -> &str;
+
+    /// Read discipline the strategy assumes at simulation time.
+    fn read_mode(&self) -> ReadMode {
+        ReadMode::ZeroSkip
+    }
+
+    /// Name of the [`crate::sim::DataflowModel`] this strategy's plans
+    /// are built for (resolved through the registry; overridable with
+    /// `--dataflow`).
+    fn default_dataflow(&self) -> &str {
+        "layer-wise"
+    }
+
+    /// Whether every plan this strategy produces is layer-uniform
+    /// (whole-layer copies). Uniform plans can run either dataflow;
+    /// non-uniform plans need one without a per-layer gather barrier.
+    fn uniform_plans(&self) -> bool {
+        true
+    }
+
+    /// Allocate `budget_arrays` arrays across `map`.
+    fn allocate(
+        &self,
+        map: &NetworkMap,
+        profile: &NetworkProfile,
+        budget_arrays: usize,
+    ) -> crate::Result<AllocationPlan>;
+}
+
+/// Shared tail of every [`Allocator::allocate`] implementation: stamp
+/// the strategy name on the plan and validate it against the budget.
+pub fn finish_plan(
+    mut plan: AllocationPlan,
+    name: &str,
+    map: &NetworkMap,
+    budget_arrays: usize,
+) -> crate::Result<AllocationPlan> {
+    plan.algorithm = name.to_string();
+    plan.validate(map, budget_arrays).map_err(|e| anyhow::anyhow!(e))?;
+    Ok(plan)
+}
 
 /// The four algorithms compared in the paper's evaluation (Figs 8 & 9).
+///
+/// **Deprecated shim** — kept for one release so pre-registry callers
+/// keep compiling; every method delegates into
+/// [`crate::strategy::StrategyRegistry`]. New code should look
+/// allocators up by name instead.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Algorithm {
     /// Weight-based allocation, zero-skipping disabled.
@@ -49,14 +124,26 @@ impl Algorithm {
         [Algorithm::Baseline, Algorithm::WeightBased, Algorithm::PerfBased, Algorithm::BlockWise]
     }
 
+    /// The registry entry this enum variant names.
+    pub fn strategy(&self) -> &'static dyn Allocator {
+        crate::strategy::StrategyRegistry::lookup_allocator(self.name())
+            .expect("paper algorithms are always registered")
+    }
+
+    /// The registry dataflow model this variant's strategy defaults to.
+    pub fn dataflow_model(&self) -> &'static dyn crate::sim::DataflowModel {
+        crate::strategy::StrategyRegistry::lookup_dataflow(self.strategy().default_dataflow())
+            .expect("built-in dataflows are always registered")
+    }
+
     /// Does this algorithm run with zero-skipping?
     pub fn zero_skip(&self) -> bool {
-        !matches!(self, Algorithm::Baseline)
+        self.strategy().read_mode() == ReadMode::ZeroSkip
     }
 
     /// Does this algorithm use the block-wise dataflow?
     pub fn blockwise_dataflow(&self) -> bool {
-        matches!(self, Algorithm::BlockWise)
+        self.strategy().default_dataflow() == "block-wise"
     }
 
     pub fn parse(s: &str) -> Option<Algorithm> {
@@ -71,31 +158,17 @@ impl Algorithm {
 }
 
 /// Allocate `budget_arrays` arrays across `map` using `alg`.
+///
+/// **Deprecated shim** — delegates to the registry entry named by the
+/// enum; equivalent to
+/// `StrategyRegistry::lookup_allocator(alg.name())?.allocate(..)`.
 pub fn allocate(
     alg: Algorithm,
     map: &NetworkMap,
     profile: &NetworkProfile,
     budget_arrays: usize,
 ) -> crate::Result<AllocationPlan> {
-    let plan = match alg {
-        Algorithm::Baseline | Algorithm::WeightBased => {
-            // Prior work: equalize layer completion times assuming every
-            // array performs uniformly (deterministic reads). The
-            // one-copy deterministic stage time is positions × worst
-            // baseline block cost — proportional to MACs per allocated
-            // array, which is what "allocate arrays based on total MACs
-            // per layer" achieves (§III-A).
-            greedy::layerwise(map, &profile.layer_baseline_cycles, budget_arrays)?
-        }
-        Algorithm::PerfBased => {
-            greedy::layerwise(map, &profile.layer_barrier_cycles, budget_arrays)?
-        }
-        Algorithm::BlockWise => greedy::blockwise(map, &profile.block_cycles, budget_arrays)?,
-    };
-    let mut plan = plan;
-    plan.algorithm = alg.name().to_string();
-    plan.validate(map, budget_arrays).map_err(|e| anyhow::anyhow!(e))?;
-    Ok(plan)
+    alg.strategy().allocate(map, profile, budget_arrays)
 }
 
 #[cfg(test)]
@@ -104,6 +177,7 @@ mod tests {
     use crate::config::ArrayCfg;
     use crate::dnn::resnet18;
     use crate::mapping::map_network;
+    use crate::sim::DataflowModel;
     use crate::stats::synth::{synth_activations, SynthCfg};
     use crate::stats::trace_from_activations;
 
@@ -134,7 +208,9 @@ mod tests {
         for alg in [Algorithm::Baseline, Algorithm::WeightBased, Algorithm::PerfBased] {
             let plan = allocate(alg, &map, &prof, budget).unwrap();
             assert!(plan.is_layerwise(), "{} plan not layer-uniform", alg.name());
+            assert!(alg.strategy().uniform_plans());
         }
+        assert!(!Algorithm::BlockWise.strategy().uniform_plans());
     }
 
     #[test]
@@ -192,5 +268,17 @@ mod tests {
             assert_eq!(Algorithm::parse(alg.name()), Some(alg));
         }
         assert_eq!(Algorithm::parse("nope"), None);
+    }
+
+    #[test]
+    fn enum_shim_matches_registry_traits() {
+        assert!(!Algorithm::Baseline.zero_skip());
+        assert!(Algorithm::WeightBased.zero_skip());
+        assert!(Algorithm::BlockWise.blockwise_dataflow());
+        assert!(!Algorithm::PerfBased.blockwise_dataflow());
+        for alg in Algorithm::all() {
+            assert_eq!(alg.strategy().name(), alg.name());
+            assert_eq!(alg.dataflow_model().name(), alg.strategy().default_dataflow());
+        }
     }
 }

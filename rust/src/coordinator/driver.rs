@@ -3,16 +3,17 @@
 //!
 //! `Driver::prepare` runs the pipeline's shared prefix stages
 //! (`BuildGraph → Map → Stats → Trace → Profile`) for one [`DriverOpts`];
-//! `Driver::run` executes the scenario stages (`Allocate → Place →
-//! Simulate`) for one algorithm × design size. Sweeps over many
-//! scenarios should use [`crate::pipeline::run_sweep`] directly — it
-//! shares the prepared prefix across scenarios and runs them on a
-//! worker pool.
+//! `Driver::run_strategy` executes the scenario stages (`Allocate →
+//! Place → Simulate`) for one registry strategy × design size. Sweeps
+//! over many scenarios should use [`crate::pipeline::run_sweep`]
+//! directly — it shares the prepared prefix across scenarios and runs
+//! them on a worker pool.
 
 use crate::alloc::Algorithm;
 use crate::mapping::AllocationPlan;
-use crate::pipeline::{self, PrefixSpec, PreparedView, Scenario};
+use crate::pipeline::{self, PrefixSpec, PreparedView, Scenario, ScenarioBuilder};
 use crate::sim::SimResult;
+use crate::strategy::{StrategyRegistry, PAPER_ALGORITHMS};
 use anyhow::Result;
 
 pub use crate::pipeline::StatsSource;
@@ -88,28 +89,36 @@ impl Driver {
         PreparedView { map: &self.map, trace: &self.trace, profile: &self.profile }
     }
 
-    /// The pipeline [`Scenario`] for one algorithm × design size under
-    /// these options.
-    pub fn scenario(&self, alg: Algorithm, pes: usize) -> Scenario {
-        Scenario {
-            prefix: self.opts.prefix_spec(),
-            alg,
-            pes,
-            sim_images: self.opts.sim_images,
-        }
+    /// A [`ScenarioBuilder`] seeded with these options' prefix and
+    /// simulated image count.
+    pub fn builder(&self) -> ScenarioBuilder {
+        ScenarioBuilder::from_prefix(&self.opts.prefix_spec()).sim_images(self.opts.sim_images)
     }
 
-    /// Allocate + place + simulate one algorithm on a chip of `pes` PEs.
-    pub fn run(&self, alg: Algorithm, pes: usize) -> Result<(AllocationPlan, SimResult)> {
-        let out = pipeline::run_scenario(&self.view(), &self.scenario(alg, pes), None)?;
+    /// The pipeline [`Scenario`] for one strategy name × design size
+    /// under these options (the strategy's default dataflow).
+    pub fn scenario(&self, alloc: &str, pes: usize) -> Result<Scenario> {
+        self.builder().alloc(alloc).pes(pes).build()
+    }
+
+    /// Allocate + place + simulate one registry strategy on a chip of
+    /// `pes` PEs.
+    pub fn run_strategy(&self, alloc: &str, pes: usize) -> Result<(AllocationPlan, SimResult)> {
+        let out = pipeline::run_scenario(&self.view(), &self.scenario(alloc, pes)?, None)?;
         Ok((out.plan, out.result))
     }
 
-    /// Run all four paper algorithms at one design size.
-    pub fn run_all(&self, pes: usize) -> Result<Vec<(Algorithm, SimResult)>> {
-        Algorithm::all()
+    /// **Deprecated shim** — enum front end for [`Driver::run_strategy`].
+    pub fn run(&self, alg: Algorithm, pes: usize) -> Result<(AllocationPlan, SimResult)> {
+        self.run_strategy(alg.name(), pes)
+    }
+
+    /// Run all four paper algorithms at one design size; results are
+    /// keyed by strategy name, in the Figs 8/9 series order.
+    pub fn run_all(&self, pes: usize) -> Result<Vec<(String, SimResult)>> {
+        PAPER_ALGORITHMS
             .into_iter()
-            .map(|alg| Ok((alg, self.run(alg, pes)?.1)))
+            .map(|name| Ok((name.to_string(), self.run_strategy(name, pes)?.1)))
             .collect()
     }
 
@@ -132,7 +141,7 @@ impl Driver {
         pipeline::scenarios_for(
             &self.opts.prefix_spec(),
             &self.sweep_sizes(steps),
-            &Algorithm::all(),
+            &StrategyRegistry::paper_allocators(),
             self.opts.sim_images,
         )
     }
@@ -174,19 +183,27 @@ mod tests {
     fn run_all_produces_ordered_speedups() {
         let d = synth_driver("resnet18");
         let results = d.run_all(172).unwrap();
-        let get = |alg: Algorithm| {
-            results.iter().find(|(a, _)| *a == alg).unwrap().1.throughput_ips
+        let get = |name: &str| {
+            results.iter().find(|(a, _)| a == name).unwrap().1.throughput_ips
         };
-        assert!(get(Algorithm::BlockWise) >= get(Algorithm::PerfBased));
-        assert!(get(Algorithm::PerfBased) >= get(Algorithm::WeightBased) * 0.95);
-        assert!(get(Algorithm::WeightBased) > get(Algorithm::Baseline));
+        assert!(get("block-wise") >= get("perf-based"));
+        assert!(get("perf-based") >= get("weight-based") * 0.95);
+        assert!(get("weight-based") > get("baseline"));
     }
 
     #[test]
     fn vgg11_driver_works() {
         let d = synth_driver("vgg11");
-        let (plan, result) = d.run(Algorithm::BlockWise, d.min_pes() * 2).unwrap();
+        let (plan, result) = d.run_strategy("block-wise", d.min_pes() * 2).unwrap();
         plan.validate(&d.map, ChipCfg::paper(d.min_pes() * 2).total_arrays()).unwrap();
+        assert!(result.throughput_ips > 0.0);
+    }
+
+    #[test]
+    fn hybrid_runs_through_the_driver() {
+        let d = synth_driver("resnet18");
+        let (plan, result) = d.run_strategy("hybrid", d.min_pes() * 2).unwrap();
+        assert_eq!(plan.algorithm, "hybrid");
         assert!(result.throughput_ips > 0.0);
     }
 
@@ -197,18 +214,33 @@ mod tests {
     }
 
     #[test]
+    fn unknown_strategy_rejected_with_suggestion() {
+        let d = synth_driver("resnet18");
+        let err = d.run_strategy("blok-wise", 172).unwrap_err().to_string();
+        assert!(err.contains("did you mean 'block-wise'?"), "{err}");
+    }
+
+    #[test]
     fn driver_run_matches_pipeline_scenario() {
         let d = synth_driver("resnet18");
-        let (_, via_driver) = d.run(Algorithm::PerfBased, 172).unwrap();
+        let (_, via_driver) = d.run_strategy("perf-based", 172).unwrap();
         let prep = pipeline::prepare(&d.opts.prefix_spec(), None).unwrap();
         let out = pipeline::run_scenario(
             &prep.view(),
-            &d.scenario(Algorithm::PerfBased, 172),
+            &d.scenario("perf-based", 172).unwrap(),
             None,
         )
         .unwrap();
         assert_eq!(via_driver.makespan, out.result.makespan);
         assert_eq!(via_driver.layer_util, out.result.layer_util);
+    }
+
+    #[test]
+    fn enum_shim_matches_strategy_path() {
+        let d = synth_driver("resnet18");
+        let (_, via_enum) = d.run(Algorithm::BlockWise, 172).unwrap();
+        let (_, via_name) = d.run_strategy("block-wise", 172).unwrap();
+        assert_eq!(via_enum.makespan, via_name.makespan);
     }
 
     #[test]

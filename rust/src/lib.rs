@@ -18,14 +18,18 @@
 //!   artifacts for activation profiling and golden checks.
 //!
 //! Entry points:
+//! * [`strategy::StrategyRegistry`] — string-addressable allocation
+//!   strategies ([`alloc::Allocator`]) and dataflow models
+//!   ([`sim::DataflowModel`]); the open API every policy plugs into.
 //! * [`pipeline`] — the staged experiment pipeline (`BuildGraph → Map →
 //!   Stats → Trace → Profile → Allocate → Place → Simulate → Report`)
-//!   with per-stage JSON artifact dumps and the multi-threaded sweep
-//!   executor ([`pipeline::run_sweep`]).
+//!   with the validating [`pipeline::ScenarioBuilder`], per-stage JSON
+//!   artifact dumps, and the multi-threaded sweep executor
+//!   ([`pipeline::run_sweep`]).
 //! * [`coordinator::Driver`] — convenience wrapper over the pipeline for
 //!   one-off runs: profile → allocate → simulate → report.
 //! * [`sim::simulate`] — run one chip configuration on one network trace.
-//! * [`alloc`] — the allocation algorithms (the paper's contribution).
+//! * [`alloc`] — the allocation strategies (the paper's contribution).
 //!
 //! See `DESIGN.md` for the module inventory and the experiment index.
 
@@ -38,6 +42,7 @@ pub mod alloc;
 pub mod stats;
 pub mod noc;
 pub mod sim;
+pub mod strategy;
 pub mod energy;
 pub mod runtime;
 pub mod pipeline;

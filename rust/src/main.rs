@@ -3,27 +3,33 @@
 //! ```text
 //! cimfab report   --net resnet18 --hw 64             graph + mapping summary
 //! cimfab profile  --net resnet18 --hw 64 [--stats golden]   Figs 4 & 6 tables
-//! cimfab simulate --net resnet18 --pes 172 --alg block-wise one run
+//! cimfab simulate --net resnet18 --pes 172 --alloc block-wise one run
 //! cimfab sweep    --net resnet18 --steps 6 --threads 4      Fig 8 table (parallel)
 //! cimfab util     --net resnet18 --pes 172           Fig 9 table
+//! cimfab list-strategies                             the strategy registry
 //! cimfab golden   --net vgg11                        PJRT golden cross-check
 //! cimfab dispatch                                    live block-wise dataflow demo
 //! cimfab variance                                    ADC/variance ablation (§III-A)
 //! ```
 //!
+//! Allocation strategies and dataflow models are resolved by name
+//! through [`cimfab::strategy::StrategyRegistry`] (`--alloc`,
+//! `--dataflow`); unknown names fail with a did-you-mean suggestion.
 //! `profile`, `simulate`, `sweep` and `util` run on the staged
 //! experiment pipeline ([`cimfab::pipeline`]): all four accept
 //! `--dump-dir DIR` to dump every stage's JSON artifact; `sweep` and
 //! `util` also accept `--threads N` to size the sweep worker pool.
 
-use cimfab::alloc::Algorithm;
+use cimfab::alloc::Allocator;
 use cimfab::coordinator::{Driver, DriverOpts, StatsSource};
-use cimfab::pipeline::{self, run_scenarios_prepared, Scenario, SweepCfg};
+use cimfab::pipeline::{self, run_scenarios_prepared, ScenarioBuilder, SweepCfg};
 use cimfab::report;
+use cimfab::sim::DataflowModel;
+use cimfab::strategy::StrategyRegistry;
 use cimfab::tensor::Tensor;
 use cimfab::util::cli::Args;
 use cimfab::util::table::{fmt_f, Table};
-use cimfab::xbar::variance;
+use cimfab::xbar::{variance, ReadMode};
 use std::time::Instant;
 
 fn main() {
@@ -64,6 +70,17 @@ fn sweep_cfg(args: &Args) -> Result<SweepCfg, String> {
     })
 }
 
+/// `--alloc` (with `--alg` kept as an alias): a registry name, a
+/// comma-separated list of names, `paper` (the four paper algorithms,
+/// the default), or `all` (every registered strategy).
+fn alloc_strategies(args: &Args) -> cimfab::Result<Vec<&'static dyn Allocator>> {
+    match args.get("alloc").or_else(|| args.get("alg")) {
+        None | Some("paper") => Ok(StrategyRegistry::paper_allocators().to_vec()),
+        Some("all") => Ok(StrategyRegistry::snapshot().allocators()),
+        Some(s) => s.split(',').map(StrategyRegistry::lookup_allocator).collect(),
+    }
+}
+
 fn run(args: &Args) -> cimfab::Result<()> {
     match args.subcommand.as_deref() {
         Some("report") => {
@@ -101,26 +118,42 @@ fn run(args: &Args) -> cimfab::Result<()> {
         }
         Some("simulate") => {
             let opts = driver_opts(args).map_err(anyhow::Error::msg)?;
-            let alg = Algorithm::parse(args.get_or("alg", "block-wise"))
-                .ok_or_else(|| anyhow::anyhow!("bad --alg"))?;
+            // resolve strategy names and check the pairing before paying
+            // for the prefix, so typos and incompatible combinations fail
+            // fast with the registry's did-you-mean/compat messages
+            let alloc = args.get("alloc").or_else(|| args.get("alg")).unwrap_or("block-wise");
+            let allocator = StrategyRegistry::lookup_allocator(alloc)?;
+            if let Some(flow) = args.get("dataflow") {
+                let flow = StrategyRegistry::lookup_dataflow(flow)?;
+                anyhow::ensure!(
+                    !flow.requires_uniform_plan() || allocator.uniform_plans(),
+                    "dataflow '{}' requires layer-uniform plans, but allocation strategy \
+                     '{}' produces per-block duplicates — pick a barrier-free dataflow",
+                    flow.name(),
+                    allocator.name()
+                );
+            }
             let dumper = sweep_cfg(args).map_err(anyhow::Error::msg)?.dumper()?;
             let prep = pipeline::prepare(&opts.prefix_spec(), dumper.as_ref())?;
             let pes =
                 args.get_usize("pes", prep.min_pes() * 2).map_err(anyhow::Error::msg)?;
-            let sc = Scenario {
-                prefix: opts.prefix_spec(),
-                alg,
-                pes,
-                sim_images: opts.sim_images,
-            };
+            let mut builder = ScenarioBuilder::from_prefix(&opts.prefix_spec())
+                .alloc(alloc)
+                .pes(pes)
+                .sim_images(opts.sim_images);
+            if let Some(flow) = args.get("dataflow") {
+                builder = builder.dataflow(flow);
+            }
+            let sc = builder.build()?;
             let out = pipeline::run_scenario(&prep.view(), &sc, dumper.as_ref())?;
             if args.has_flag("verbose") {
                 println!("{}", out.plan.summary(&prep.map));
             }
             println!(
-                "{} @ {pes} PEs: {:.2} inferences/s, chip util {:.1}%, makespan {} cycles, \
-                 NoC peak link util {:.3}",
-                alg.name(),
+                "{} ({} dataflow) @ {pes} PEs: {:.2} inferences/s, chip util {:.1}%, \
+                 makespan {} cycles, NoC peak link util {:.3}",
+                sc.alloc,
+                sc.dataflow,
                 out.result.throughput_ips,
                 out.result.chip_util * 100.0,
                 out.result.makespan,
@@ -132,12 +165,7 @@ fn run(args: &Args) -> cimfab::Result<()> {
             let opts = driver_opts(args).map_err(anyhow::Error::msg)?;
             let steps = args.get_usize("steps", 5).map_err(anyhow::Error::msg)?;
             let cfg = sweep_cfg(args).map_err(anyhow::Error::msg)?;
-            let algs: Vec<Algorithm> = match args.get("alg") {
-                None => Algorithm::all().to_vec(),
-                Some(s) => {
-                    vec![Algorithm::parse(s).ok_or_else(|| anyhow::anyhow!("bad --alg"))?]
-                }
-            };
+            let algs = alloc_strategies(args)?;
 
             let dumper = cfg.dumper()?;
             let prep = pipeline::prepare(&opts.prefix_spec(), dumper.as_ref())?;
@@ -202,23 +230,52 @@ fn run(args: &Args) -> cimfab::Result<()> {
             let prep = pipeline::prepare(&opts.prefix_spec(), dumper.as_ref())?;
             let pes =
                 args.get_usize("pes", prep.min_pes() * 2).map_err(anyhow::Error::msg)?;
-            let scenarios = pipeline::scenarios_for(
-                &opts.prefix_spec(),
-                &[pes],
-                &Algorithm::all(),
-                opts.sim_images,
-            );
+            let algs = alloc_strategies(args)?;
+            let scenarios =
+                pipeline::scenarios_for(&opts.prefix_spec(), &[pes], &algs, opts.sim_images);
             let outcomes = run_scenarios_prepared(&prep, &scenarios, &cfg)?;
-            let results: Vec<(Algorithm, cimfab::sim::SimResult)> =
-                outcomes.iter().map(|o| (o.scenario.alg, o.result.clone())).collect();
-            let with_zs: Vec<(Algorithm, &cimfab::sim::SimResult)> = results
+            let results: Vec<(String, cimfab::sim::SimResult)> = outcomes
                 .iter()
-                .filter(|(a, _)| a.zero_skip())
-                .map(|(a, r)| (*a, r))
+                .map(|o| (o.scenario.alloc.clone(), o.result.clone()))
+                .collect();
+            // the paper omits baseline from Fig 9: zero-skipping changes
+            // array-level performance, so only ZS strategies are comparable
+            let with_zs: Vec<(&str, &cimfab::sim::SimResult)> = results
+                .iter()
+                .filter(|(a, _)| StrategyRegistry::is_zero_skip(a))
+                .map(|(a, r)| (a.as_str(), r))
                 .collect();
             println!("== Fig 9: array utilization by layer @ {pes} PEs ==");
             println!("{}", report::fig9_table(&prep.map, &with_zs).render());
             println!("== headline speedups ==\n{}", report::speedup_summary(&results).render());
+            Ok(())
+        }
+        Some("list-strategies") => {
+            let reg = StrategyRegistry::snapshot();
+            println!("== allocation strategies (--alloc) ==");
+            let mut t = Table::new(["name", "dataflow", "reads", "description"]);
+            for a in reg.allocators() {
+                t.row([
+                    a.name().to_string(),
+                    a.default_dataflow().to_string(),
+                    match a.read_mode() {
+                        ReadMode::ZeroSkip => "zero-skip".to_string(),
+                        ReadMode::Baseline => "baseline".to_string(),
+                    },
+                    a.describe().to_string(),
+                ]);
+            }
+            println!("{}", t.render());
+            println!("== dataflow models (--dataflow) ==");
+            let mut t = Table::new(["name", "plans", "description"]);
+            for d in reg.dataflows() {
+                t.row([
+                    d.name().to_string(),
+                    if d.requires_uniform_plan() { "layer-uniform" } else { "any" }.to_string(),
+                    d.describe().to_string(),
+                ]);
+            }
+            println!("{}", t.render());
             Ok(())
         }
         Some("golden") => {
@@ -232,8 +289,8 @@ fn run(args: &Args) -> cimfab::Result<()> {
             let chip = cimfab::config::ChipCfg::paper(pes);
             let macs: u64 = d.map.grids.iter().map(|g| g.macs).sum();
             let mut rows = Vec::new();
-            for alg in Algorithm::all() {
-                let (plan, r) = d.run(alg, pes)?;
+            for a in alloc_strategies(args)? {
+                let (plan, r) = d.run_strategy(a.name(), pes)?;
                 let e = cimfab::energy::estimate(
                     &cimfab::energy::EnergyCfg::default(),
                     &chip,
@@ -242,7 +299,7 @@ fn run(args: &Args) -> cimfab::Result<()> {
                     &d.trace,
                     &r,
                 );
-                rows.push((alg.name().to_string(), e, macs));
+                rows.push((a.name().to_string(), e, macs));
             }
             println!("== energy per inference @ {pes} PEs (extension; paper §V) ==");
             println!("{}", cimfab::energy::energy_table(&rows).render());
@@ -352,14 +409,18 @@ fn dispatch_demo(args: &Args) -> cimfab::Result<()> {
 const HELP: &str = "\
 cimfab — compute-in-memory fabric simulator (Breaking Barriers reproduction)
 
-USAGE: cimfab <report|profile|simulate|sweep|util|energy|golden|dispatch|variance> [options]
+USAGE: cimfab <report|profile|simulate|sweep|util|energy|list-strategies|golden|dispatch|variance> [options]
 
 Common options:
   --net resnet18|resnet34|vgg11   network (default resnet18)
   --hw N                   input resolution (default 64; use 32 for golden)
   --stats synth|golden     activation statistics source (default synth)
   --pes N                  processing elements on chip
-  --alg baseline|weight-based|perf-based|block-wise
+  --alloc NAME             allocation strategy by registry name (see
+                           `cimfab list-strategies`; --alg is an alias);
+                           sweep/util/energy also take NAME,NAME,... or
+                           paper|all
+  --dataflow NAME          dataflow model override (simulate only)
   --images N               pipelined images per simulation (default 8)
   --steps N                design sizes in a sweep (default 5)
   --threads N              sweep/util worker threads (default: all cores)

@@ -1,0 +1,275 @@
+//! Fluent, validating scenario construction — the front door that
+//! replaced positional [`Scenario`] struct literals.
+//!
+//! ```
+//! use cimfab::pipeline::ScenarioBuilder;
+//! let sc = ScenarioBuilder::new()
+//!     .net("resnet18")
+//!     .hw(64)
+//!     .alloc("hybrid")
+//!     .pes(172)
+//!     .sim_images(8)
+//!     .build()
+//!     .unwrap();
+//! assert_eq!(sc.dataflow, "block-wise"); // hybrid's default dataflow
+//! ```
+//!
+//! `build` resolves strategy names through
+//! [`crate::strategy::StrategyRegistry`] (canonicalizing aliases,
+//! failing with a did-you-mean suggestion), rejects empty/unknown nets,
+//! zero budgets, zero image counts, and allocator/dataflow pairings
+//! whose plans the dataflow cannot run.
+
+use super::scenario::{PrefixSpec, Scenario, StatsSource};
+use crate::alloc::Allocator;
+use crate::sim::DataflowModel;
+use crate::strategy::StrategyRegistry;
+use crate::util::cli::unknown_value_msg;
+use anyhow::Result;
+
+/// Networks [`super::build_graph`] can construct.
+pub const KNOWN_NETS: [&str; 3] = ["resnet18", "resnet34", "vgg11"];
+
+/// Builder for one experiment point. Every knob has the CLI's default;
+/// `net` and `pes` must be set explicitly.
+#[derive(Debug, Clone)]
+pub struct ScenarioBuilder {
+    net: Option<String>,
+    hw: usize,
+    stats: StatsSource,
+    profile_images: usize,
+    seed: u64,
+    artifacts_dir: String,
+    alloc: String,
+    dataflow: Option<String>,
+    pes: Option<usize>,
+    sim_images: usize,
+}
+
+impl Default for ScenarioBuilder {
+    fn default() -> Self {
+        ScenarioBuilder {
+            net: None,
+            hw: 64,
+            stats: StatsSource::Synthetic,
+            profile_images: 2,
+            seed: 7,
+            artifacts_dir: "artifacts".into(),
+            alloc: "block-wise".into(),
+            dataflow: None,
+            pes: None,
+            sim_images: 8,
+        }
+    }
+}
+
+impl ScenarioBuilder {
+    pub fn new() -> ScenarioBuilder {
+        ScenarioBuilder::default()
+    }
+
+    /// Seed the prefix half of the builder from an existing spec.
+    pub fn from_prefix(spec: &PrefixSpec) -> ScenarioBuilder {
+        ScenarioBuilder {
+            net: Some(spec.net.clone()),
+            hw: spec.hw,
+            stats: spec.stats,
+            profile_images: spec.profile_images,
+            seed: spec.seed,
+            artifacts_dir: spec.artifacts_dir.clone(),
+            ..ScenarioBuilder::default()
+        }
+    }
+
+    pub fn net(mut self, net: impl Into<String>) -> Self {
+        self.net = Some(net.into());
+        self
+    }
+
+    /// Input resolution (must match the artifact when `Golden`).
+    pub fn hw(mut self, hw: usize) -> Self {
+        self.hw = hw;
+        self
+    }
+
+    pub fn stats(mut self, stats: StatsSource) -> Self {
+        self.stats = stats;
+        self
+    }
+
+    /// Images used for profiling statistics.
+    pub fn profile_images(mut self, n: usize) -> Self {
+        self.profile_images = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Where the AOT artifacts live (used only with `Golden`).
+    pub fn artifacts_dir(mut self, dir: impl Into<String>) -> Self {
+        self.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Allocation strategy name (`--alloc`; registry key or alias).
+    pub fn alloc(mut self, name: impl Into<String>) -> Self {
+        self.alloc = name.into();
+        self
+    }
+
+    /// Dataflow model name (`--dataflow`); defaults to the allocation
+    /// strategy's default dataflow.
+    pub fn dataflow(mut self, name: impl Into<String>) -> Self {
+        self.dataflow = Some(name.into());
+        self
+    }
+
+    /// Processing elements on chip — the array budget. Required.
+    pub fn pes(mut self, pes: usize) -> Self {
+        self.pes = Some(pes);
+        self
+    }
+
+    /// Images pushed through the pipelined simulation.
+    pub fn sim_images(mut self, n: usize) -> Self {
+        self.sim_images = n;
+        self
+    }
+
+    /// Validate the prefix half and produce the [`PrefixSpec`].
+    pub fn prefix(&self) -> Result<PrefixSpec> {
+        let net = match self.net.as_deref() {
+            None | Some("") => anyhow::bail!(
+                "scenario has no network — call .net(\"resnet18\"|\"resnet34\"|\"vgg11\")"
+            ),
+            Some(n) => n.to_string(),
+        };
+        anyhow::ensure!(
+            KNOWN_NETS.contains(&net.as_str()),
+            unknown_value_msg("network", &net, &KNOWN_NETS)
+        );
+        anyhow::ensure!(self.hw >= 1, "input resolution must be at least 1, got {}", self.hw);
+        anyhow::ensure!(
+            self.profile_images >= 1,
+            "profiling needs at least one image, got {}",
+            self.profile_images
+        );
+        Ok(PrefixSpec {
+            net,
+            hw: self.hw,
+            stats: self.stats,
+            profile_images: self.profile_images,
+            seed: self.seed,
+            artifacts_dir: self.artifacts_dir.clone(),
+        })
+    }
+
+    /// Validate everything and produce the [`Scenario`]. Strategy names
+    /// are canonicalized (aliases resolved to registry keys).
+    pub fn build(&self) -> Result<Scenario> {
+        let prefix = self.prefix()?;
+        let allocator = StrategyRegistry::lookup_allocator(&self.alloc)?;
+        let flow_name = self.dataflow.as_deref().unwrap_or_else(|| allocator.default_dataflow());
+        let flow = StrategyRegistry::lookup_dataflow(flow_name)?;
+        anyhow::ensure!(
+            !flow.requires_uniform_plan() || allocator.uniform_plans(),
+            "dataflow '{}' requires layer-uniform plans, but allocation strategy '{}' \
+             produces per-block duplicates — pick a barrier-free dataflow",
+            flow.name(),
+            allocator.name()
+        );
+        let pes = match self.pes {
+            None => anyhow::bail!("scenario has no PE budget — call .pes(n) with n >= 1"),
+            Some(0) => anyhow::bail!("a zero-PE budget cannot fit any copy of the network"),
+            Some(p) => p,
+        };
+        anyhow::ensure!(
+            self.sim_images >= 1,
+            "simulation needs at least one image, got {}",
+            self.sim_images
+        );
+        Ok(Scenario {
+            prefix,
+            alloc: allocator.name().to_string(),
+            dataflow: flow.name().to_string(),
+            pes,
+            sim_images: self.sim_images,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn valid() -> ScenarioBuilder {
+        ScenarioBuilder::new().net("resnet18").pes(172)
+    }
+
+    #[test]
+    fn defaults_build_a_block_wise_scenario() {
+        let sc = valid().build().unwrap();
+        assert_eq!(sc.alloc, "block-wise");
+        assert_eq!(sc.dataflow, "block-wise");
+        assert_eq!(sc.pes, 172);
+        assert_eq!(sc.id(), "block-wise_pes172_img8");
+    }
+
+    #[test]
+    fn aliases_canonicalize() {
+        let sc = valid().alloc("weight").build().unwrap();
+        assert_eq!(sc.alloc, "weight-based");
+        assert_eq!(sc.dataflow, "layer-wise");
+    }
+
+    #[test]
+    fn missing_or_unknown_net_rejected() {
+        assert!(ScenarioBuilder::new().pes(172).build().is_err());
+        assert!(valid().net("").build().is_err());
+        let err = valid().net("resnet19").build().unwrap_err().to_string();
+        assert!(err.contains("did you mean 'resnet18'?"), "{err}");
+    }
+
+    #[test]
+    fn zero_or_missing_budget_rejected() {
+        assert!(ScenarioBuilder::new().net("resnet18").build().is_err());
+        let err = valid().pes(0).build().unwrap_err().to_string();
+        assert!(err.contains("zero-PE"), "{err}");
+    }
+
+    #[test]
+    fn zero_image_counts_rejected() {
+        assert!(valid().sim_images(0).build().is_err());
+        assert!(valid().profile_images(0).build().is_err());
+        assert!(valid().hw(0).build().is_err());
+    }
+
+    #[test]
+    fn unknown_strategies_rejected_with_suggestion() {
+        let err = valid().alloc("blok-wise").build().unwrap_err().to_string();
+        assert!(err.contains("did you mean 'block-wise'?"), "{err}");
+        let err = valid().dataflow("layerwise").build().unwrap_err().to_string();
+        assert!(err.contains("did you mean 'layer-wise'?"), "{err}");
+    }
+
+    #[test]
+    fn incompatible_dataflow_rejected() {
+        let err = valid().alloc("block-wise").dataflow("layer-wise").build();
+        assert!(err.is_err());
+        let err = valid().alloc("hybrid").dataflow("layer-wise").build();
+        assert!(err.is_err());
+        // uniform plans can run either dataflow
+        assert!(valid().alloc("perf-based").dataflow("block-wise").build().is_ok());
+    }
+
+    #[test]
+    fn from_prefix_round_trips() {
+        let spec = valid().seed(42).hw(32).prefix().unwrap();
+        let sc = ScenarioBuilder::from_prefix(&spec).pes(129).build().unwrap();
+        assert_eq!(sc.prefix, spec);
+        assert_eq!(sc.pes, 129);
+    }
+}

@@ -157,8 +157,7 @@ pub fn run_sweep(scenarios: &[Scenario], cfg: &SweepCfg) -> Result<Vec<ScenarioO
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::alloc::Algorithm;
-    use crate::pipeline::StatsSource;
+    use crate::pipeline::{ScenarioBuilder, StatsSource};
 
     fn spec() -> PrefixSpec {
         PrefixSpec {
@@ -172,9 +171,16 @@ mod tests {
     }
 
     fn scenarios() -> Vec<Scenario> {
-        [Algorithm::Baseline, Algorithm::BlockWise]
+        ["baseline", "block-wise"]
             .into_iter()
-            .map(|alg| Scenario { prefix: spec(), alg, pes: 129, sim_images: 4 })
+            .map(|alloc| {
+                ScenarioBuilder::from_prefix(&spec())
+                    .alloc(alloc)
+                    .pes(129)
+                    .sim_images(4)
+                    .build()
+                    .unwrap()
+            })
             .collect()
     }
 

@@ -9,10 +9,13 @@
 //! ```
 //!
 //! A [`Scenario`] names one experiment point (network × resolution ×
-//! stats source × algorithm × PE budget × seed); its [`PrefixSpec`] part
-//! determines the expensive prepared prefix, which [`executor::run_sweep`]
-//! computes once per distinct prefix and shares across all scenarios —
-//! in parallel worker threads — instead of recomputing it per point.
+//! stats source × allocation strategy × dataflow × PE budget × seed);
+//! construct one with the validating [`ScenarioBuilder`]. Strategy
+//! names resolve through [`crate::strategy::StrategyRegistry`] when the
+//! scenario runs. A scenario's [`PrefixSpec`] part determines the
+//! expensive prepared prefix, which [`executor::run_sweep`] computes
+//! once per distinct prefix and shares across all scenarios — in
+//! parallel worker threads — instead of recomputing it per point.
 //!
 //! Each stage can dump its artifact as deterministic JSON (via
 //! [`crate::util::json`]) into a `--dump-dir` tree:
@@ -27,18 +30,21 @@
 //! the executor directly.
 
 pub mod artifact;
+pub mod builder;
 pub mod executor;
 pub mod scenario;
 pub mod stage;
 
+pub use builder::{ScenarioBuilder, KNOWN_NETS};
 pub use executor::{run_scenarios_prepared, run_sweep, SweepCfg};
 pub use scenario::{scenarios_for, sweep_sizes, PrefixSpec, Scenario, StatsSource};
 pub use stage::Stage;
 
+use crate::alloc::Allocator;
 use crate::config::{ArrayCfg, ChipCfg};
 use crate::dnn::{resnet18, vgg11, Graph};
 use crate::mapping::{AllocationPlan, NetworkMap};
-use crate::sim::SimResult;
+use crate::sim::{DataflowModel, SimResult};
 use crate::stats::synth::{synth_activations, SynthCfg};
 use crate::stats::{trace_from_activations, NetTrace, NetworkProfile};
 use crate::util::json::Json;
@@ -126,13 +132,14 @@ impl Dumper {
     }
 }
 
-/// Stage `BuildGraph`: construct + validate the named network.
+/// Stage `BuildGraph`: construct + validate the named network
+/// (see [`KNOWN_NETS`]).
 pub fn build_graph(net: &str, hw: usize) -> Result<Graph> {
     let graph = match net {
         "resnet18" => resnet18(hw, 1000),
         "resnet34" => crate::dnn::resnet34(hw, 1000),
         "vgg11" => vgg11(hw, 10),
-        other => anyhow::bail!("unknown network '{other}' (resnet18|resnet34|vgg11)"),
+        other => anyhow::bail!(crate::util::cli::unknown_value_msg("network", other, &KNOWN_NETS)),
     };
     graph.validate().map_err(anyhow::Error::msg)?;
     Ok(graph)
@@ -221,7 +228,9 @@ fn golden_activations(
     model.profile(spec.profile_images, spec.seed)
 }
 
-/// Run the four scenario stages against a prepared prefix.
+/// Run the four scenario stages against a prepared prefix. The
+/// scenario's strategy names resolve through the global
+/// [`crate::strategy::StrategyRegistry`].
 pub fn run_scenario(
     prep: &PreparedView<'_>,
     sc: &Scenario,
@@ -229,9 +238,17 @@ pub fn run_scenario(
 ) -> Result<ScenarioOutcome> {
     let sub = format!("{}/{}", sc.prefix.id(), sc.id());
     let chip = ChipCfg::paper(sc.pes);
+    let allocator = crate::strategy::StrategyRegistry::lookup_allocator(&sc.alloc)?;
+    let flow = crate::strategy::StrategyRegistry::lookup_dataflow(&sc.dataflow)?;
 
     // Allocate
-    let plan = crate::alloc::allocate(sc.alg, prep.map, prep.profile, chip.total_arrays())?;
+    let plan = allocator.allocate(prep.map, prep.profile, chip.total_arrays())?;
+    anyhow::ensure!(
+        !flow.requires_uniform_plan() || plan.is_layerwise(),
+        "dataflow '{}' requires layer-uniform plans, but '{}' produced a non-uniform one",
+        flow.name(),
+        allocator.name()
+    );
     if let Some(d) = dump {
         d.dump(&sub, Stage::Allocate, &artifact::plan_json(&plan, prep.map))?;
     }
@@ -243,7 +260,7 @@ pub fn run_scenario(
     }
 
     // Simulate
-    let cfg = crate::sim::SimCfg::for_algorithm(sc.alg, sc.sim_images);
+    let cfg = crate::sim::SimCfg::for_strategy(allocator, flow, sc.sim_images);
     let result = crate::sim::simulate(&chip, prep.map, &plan, &placement, prep.trace, cfg);
     if let Some(d) = dump {
         d.dump(&sub, Stage::Simulate, &artifact::sim_result_json(&result))?;
@@ -260,7 +277,6 @@ pub fn run_scenario(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::alloc::Algorithm;
 
     fn spec() -> PrefixSpec {
         PrefixSpec {
@@ -277,10 +293,47 @@ mod tests {
     fn prepare_then_scenario_matches_driver_semantics() {
         let prep = prepare(&spec(), None).unwrap();
         assert_eq!(prep.min_pes(), 86); // §V
-        let sc = Scenario { prefix: spec(), alg: Algorithm::BlockWise, pes: 172, sim_images: 4 };
+        let sc = ScenarioBuilder::from_prefix(&spec())
+            .alloc("block-wise")
+            .pes(172)
+            .sim_images(4)
+            .build()
+            .unwrap();
         let out = run_scenario(&prep.view(), &sc, None).unwrap();
         assert!(out.result.throughput_ips > 0.0);
         assert_eq!(out.plan.algorithm, "block-wise");
+    }
+
+    #[test]
+    fn hybrid_strategy_runs_through_the_pipeline() {
+        let prep = prepare(&spec(), None).unwrap();
+        let sc = ScenarioBuilder::from_prefix(&spec())
+            .alloc("hybrid")
+            .pes(172)
+            .sim_images(4)
+            .build()
+            .unwrap();
+        assert_eq!(sc.dataflow, "block-wise");
+        let out = run_scenario(&prep.view(), &sc, None).unwrap();
+        assert_eq!(out.plan.algorithm, "hybrid");
+        assert!(out.result.throughput_ips > 0.0);
+    }
+
+    #[test]
+    fn uniform_dataflow_override_runs_a_blockwise_free_scenario() {
+        // perf-based plans are uniform, so both dataflows are legal; the
+        // override shows up in the id and the registry resolves it.
+        let prep = prepare(&spec(), None).unwrap();
+        let sc = ScenarioBuilder::from_prefix(&spec())
+            .alloc("perf-based")
+            .dataflow("block-wise")
+            .pes(172)
+            .sim_images(4)
+            .build()
+            .unwrap();
+        assert_eq!(sc.id(), "perf-based+block-wise_pes172_img4");
+        let out = run_scenario(&prep.view(), &sc, None).unwrap();
+        assert!(out.result.throughput_ips > 0.0);
     }
 
     #[test]

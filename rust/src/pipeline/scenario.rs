@@ -1,7 +1,11 @@
 //! Scenario specs: what to run, separated into the shared prefix and the
-//! per-scenario tail.
+//! per-scenario tail. Strategy choices are carried as registry names
+//! (resolved through [`crate::strategy::StrategyRegistry`] when the
+//! scenario runs); prefer [`super::ScenarioBuilder`] over struct
+//! literals — it validates names, budgets, and dataflow compatibility.
 
-use crate::alloc::Algorithm;
+use crate::alloc::Allocator;
+use crate::strategy::StrategyRegistry;
 use crate::util::json::Json;
 
 /// Where activation statistics come from.
@@ -86,11 +90,16 @@ impl PrefixSpec {
 }
 
 /// One full experiment point: a shared prefix plus the allocation
-/// algorithm, the chip size, and the simulated image count.
+/// strategy, the dataflow model, the chip size, and the simulated
+/// image count.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Scenario {
     pub prefix: PrefixSpec,
-    pub alg: Algorithm,
+    /// Allocation strategy name (a [`StrategyRegistry`] key).
+    pub alloc: String,
+    /// Dataflow model name (a [`StrategyRegistry`] key); usually the
+    /// strategy's default dataflow unless overridden.
+    pub dataflow: String,
     /// Processing elements on chip ([`crate::config::ChipCfg::paper`]).
     pub pes: usize,
     /// Images pushed through the pipelined simulation.
@@ -99,15 +108,25 @@ pub struct Scenario {
 
 impl Scenario {
     /// Slug unique within the prefix (dump sub-directory for scenario
-    /// stages).
+    /// stages). The dataflow appears only when it differs from the
+    /// strategy's default, so paper-algorithm ids keep their historical
+    /// form (`block-wise_pes172_img8`).
     pub fn id(&self) -> String {
-        format!("{}_pes{}_img{}", self.alg.name(), self.pes, self.sim_images)
+        let default_flow = StrategyRegistry::lookup_allocator(&self.alloc)
+            .map(|a| a.default_dataflow().to_string())
+            .unwrap_or_default();
+        if self.dataflow == default_flow {
+            format!("{}_pes{}_img{}", self.alloc, self.pes, self.sim_images)
+        } else {
+            format!("{}+{}_pes{}_img{}", self.alloc, self.dataflow, self.pes, self.sim_images)
+        }
     }
 
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("prefix", self.prefix.to_json()),
-            ("alg", Json::str(self.alg.name())),
+            ("alloc", Json::str(&self.alloc)),
+            ("dataflow", Json::str(&self.dataflow)),
             ("pes", Json::num(self.pes as f64)),
             ("sim_images", Json::num(self.sim_images as f64)),
         ])
@@ -132,18 +151,25 @@ pub fn sweep_sizes(min_pes: usize, steps: usize) -> Vec<usize> {
         .collect()
 }
 
-/// The sizes × algorithms scenario cross-product (size-major — the
+/// The sizes × strategies scenario cross-product (size-major — the
 /// Fig 8 table order), shared by the CLI, the benches, and the driver.
+/// Each strategy runs its default dataflow.
 pub fn scenarios_for(
     prefix: &PrefixSpec,
     sizes: &[usize],
-    algs: &[Algorithm],
+    allocs: &[&dyn Allocator],
     sim_images: usize,
 ) -> Vec<Scenario> {
-    let mut out = Vec::with_capacity(sizes.len() * algs.len());
+    let mut out = Vec::with_capacity(sizes.len() * allocs.len());
     for &pes in sizes {
-        for &alg in algs {
-            out.push(Scenario { prefix: prefix.clone(), alg, pes, sim_images });
+        for a in allocs {
+            out.push(Scenario {
+                prefix: prefix.clone(),
+                alloc: a.name().to_string(),
+                dataflow: a.default_dataflow().to_string(),
+                pes,
+                sim_images,
+            });
         }
     }
     out
@@ -173,14 +199,30 @@ mod tests {
         assert_eq!(StatsSource::parse("nope"), None);
     }
 
+    fn scenario(alloc: &str, dataflow: &str) -> Scenario {
+        Scenario {
+            prefix: spec(),
+            alloc: alloc.into(),
+            dataflow: dataflow.into(),
+            pes: 172,
+            sim_images: 8,
+        }
+    }
+
     #[test]
     fn ids_are_stable_and_distinct() {
-        let p = spec();
-        assert_eq!(p.id(), "resnet18_hw64_synth_p2_s7");
-        let a = Scenario { prefix: p.clone(), alg: Algorithm::BlockWise, pes: 172, sim_images: 8 };
-        let b = Scenario { prefix: p, alg: Algorithm::Baseline, pes: 172, sim_images: 8 };
-        assert_eq!(a.id(), "block-wise_pes172_img8");
+        assert_eq!(spec().id(), "resnet18_hw64_synth_p2_s7");
+        let a = scenario("block-wise", "block-wise");
+        let b = scenario("baseline", "layer-wise");
+        assert_eq!(a.id(), "block-wise_pes172_img8"); // historical form
         assert_ne!(a.id(), b.id());
+    }
+
+    #[test]
+    fn non_default_dataflow_shows_up_in_the_id() {
+        let sc = scenario("perf-based", "block-wise");
+        assert_eq!(sc.id(), "perf-based+block-wise_pes172_img8");
+        assert_eq!(scenario("perf-based", "layer-wise").id(), "perf-based_pes172_img8");
     }
 
     #[test]
@@ -214,19 +256,24 @@ mod tests {
 
     #[test]
     fn scenarios_for_is_size_major() {
-        let scs = scenarios_for(&spec(), &[86, 172], &Algorithm::all(), 8);
+        let algs = StrategyRegistry::paper_allocators();
+        let scs = scenarios_for(&spec(), &[86, 172], &algs, 8);
         assert_eq!(scs.len(), 8);
         assert_eq!(scs[0].pes, 86);
         assert_eq!(scs[3].pes, 86);
         assert_eq!(scs[4].pes, 172);
-        assert_eq!(scs[1].alg, Algorithm::WeightBased);
+        assert_eq!(scs[1].alloc, "weight-based");
+        assert_eq!(scs[1].dataflow, "layer-wise");
+        assert_eq!(scs[3].dataflow, "block-wise");
     }
 
     #[test]
     fn scenario_json_contains_key_fields() {
-        let sc = Scenario { prefix: spec(), alg: Algorithm::PerfBased, pes: 129, sim_images: 4 };
+        let mut sc = scenario("perf-based", "layer-wise");
+        sc.pes = 129;
         let j = sc.to_json();
-        assert_eq!(j.get("alg").as_str(), Some("perf-based"));
+        assert_eq!(j.get("alloc").as_str(), Some("perf-based"));
+        assert_eq!(j.get("dataflow").as_str(), Some("layer-wise"));
         assert_eq!(j.get("pes").as_usize(), Some(129));
         assert_eq!(j.get("prefix").get("net").as_str(), Some("resnet18"));
     }

@@ -2,8 +2,11 @@
 //! CLI `report` command. Each function renders one paper artifact from
 //! simulation results (numbers will match the paper in *shape*, not
 //! absolutely — see DESIGN.md §7).
+//!
+//! Results are keyed by allocation-strategy name (the
+//! [`crate::strategy::StrategyRegistry`] keys), so tables render any
+//! registered strategy, not just the paper's four.
 
-use crate::alloc::Algorithm;
 use crate::mapping::NetworkMap;
 use crate::sim::SimResult;
 use crate::stats::NetworkProfile;
@@ -36,10 +39,10 @@ pub fn fig6_table(map: &NetworkMap, prof: &NetworkProfile, layer: usize) -> Tabl
     t
 }
 
-/// One Fig 8 series: performance vs design size for one algorithm.
-pub fn fig8_row(alg: Algorithm, pes: usize, result: &SimResult) -> Vec<String> {
+/// One Fig 8 series: performance vs design size for one strategy.
+pub fn fig8_row(alloc: &str, pes: usize, result: &SimResult) -> Vec<String> {
     vec![
-        alg.name().to_string(),
+        alloc.to_string(),
         pes.to_string(),
         fmt_f(result.throughput_ips, 2),
         fmt_f(result.chip_util * 100.0, 1),
@@ -55,15 +58,15 @@ pub fn fig8_table() -> Table {
 pub fn fig8_from_outcomes(outcomes: &[crate::pipeline::ScenarioOutcome]) -> Table {
     let mut t = fig8_table();
     for o in outcomes {
-        t.row(fig8_row(o.scenario.alg, o.scenario.pes, &o.result));
+        t.row(fig8_row(&o.scenario.alloc, o.scenario.pes, &o.result));
     }
     t
 }
 
-/// Fig 9: per-layer utilization for a set of algorithm results.
-pub fn fig9_table(map: &NetworkMap, results: &[(Algorithm, &SimResult)]) -> Table {
+/// Fig 9: per-layer utilization for a set of strategy results.
+pub fn fig9_table(map: &NetworkMap, results: &[(&str, &SimResult)]) -> Table {
     let mut header = vec!["layer".to_string()];
-    header.extend(results.iter().map(|(a, _)| a.name().to_string()));
+    header.extend(results.iter().map(|(a, _)| a.to_string()));
     let mut t = Table::new(header);
     for (l, g) in map.grids.iter().enumerate() {
         let mut row = vec![g.name.clone()];
@@ -75,11 +78,12 @@ pub fn fig9_table(map: &NetworkMap, results: &[(Algorithm, &SimResult)]) -> Tabl
     t
 }
 
-/// Throughput speedup summary (the paper's headline numbers).
-pub fn speedup_summary(results: &[(Algorithm, SimResult)]) -> Table {
+/// Throughput speedup summary (the paper's headline numbers), relative
+/// to the three reference strategies when present.
+pub fn speedup_summary(results: &[(String, SimResult)]) -> Table {
     let mut t = Table::new(["algorithm", "inferences/s", "vs baseline", "vs weight", "vs perf"]);
-    let find = |alg: Algorithm| results.iter().find(|(a, _)| *a == alg).map(|(_, r)| r);
-    for (alg, r) in results {
+    let find = |name: &str| results.iter().find(|(a, _)| a == name).map(|(_, r)| r);
+    for (alloc, r) in results {
         let rel = |other: Option<&SimResult>| match other {
             Some(o) if o.throughput_ips > 0.0 => {
                 fmt_f(r.throughput_ips / o.throughput_ips, 2)
@@ -87,11 +91,11 @@ pub fn speedup_summary(results: &[(Algorithm, SimResult)]) -> Table {
             _ => "-".to_string(),
         };
         t.row([
-            alg.name().to_string(),
+            alloc.clone(),
             fmt_f(r.throughput_ips, 2),
-            rel(find(Algorithm::Baseline)),
-            rel(find(Algorithm::WeightBased)),
-            rel(find(Algorithm::PerfBased)),
+            rel(find("baseline")),
+            rel(find("weight-based")),
+            rel(find("perf-based")),
         ]);
     }
     t
@@ -123,8 +127,8 @@ mod tests {
     #[test]
     fn speedup_summary_computes_ratios() {
         let results = vec![
-            (Algorithm::Baseline, dummy_result(10.0)),
-            (Algorithm::BlockWise, dummy_result(74.7)),
+            ("baseline".to_string(), dummy_result(10.0)),
+            ("block-wise".to_string(), dummy_result(74.7)),
         ];
         let t = speedup_summary(&results);
         let rendered = t.render();
@@ -132,9 +136,20 @@ mod tests {
     }
 
     #[test]
+    fn speedup_summary_renders_non_paper_strategies() {
+        let results = vec![
+            ("baseline".to_string(), dummy_result(10.0)),
+            ("hybrid".to_string(), dummy_result(60.0)),
+        ];
+        let rendered = speedup_summary(&results).render();
+        assert!(rendered.contains("hybrid"), "{rendered}");
+        assert!(rendered.contains("6.00"), "{rendered}");
+    }
+
+    #[test]
     fn fig8_row_formats() {
         let r = dummy_result(42.0);
-        let row = fig8_row(Algorithm::BlockWise, 86, &r);
+        let row = fig8_row("block-wise", 86, &r);
         assert_eq!(row[0], "block-wise");
         assert_eq!(row[1], "86");
     }

@@ -19,7 +19,7 @@
 //! structure differs — exactly the paper's comparison.
 
 use super::server::ServerPool;
-use super::{Dataflow, SimCfg};
+use super::{DataflowModel, SimCfg, StageCtx};
 use crate::config::ChipCfg;
 use crate::mapping::{AllocationPlan, NetworkMap, Placement};
 use crate::noc::{Mesh, Node};
@@ -35,9 +35,71 @@ fn item_dur(lt: &LayerTrace, mode: ReadMode, p: usize, r: usize) -> u64 {
     }
 }
 
-/// Simulate one layer stage for one image. Returns the stage makespan
-/// (cycles from stage start) and accumulates per-instance busy cycles
-/// into `busy` (flattened row-major over (block row, duplicate)).
+/// The §II dataflow: whole-layer ganged copies with the per-patch
+/// gather barrier.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerWiseFlow;
+
+/// The §III-C dataflow: independent per-block duplicate pools with
+/// dynamic dispatch and no intra-layer barrier.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockWiseFlow;
+
+pub static LAYER_WISE: LayerWiseFlow = LayerWiseFlow;
+pub static BLOCK_WISE: BlockWiseFlow = BlockWiseFlow;
+
+impl DataflowModel for LayerWiseFlow {
+    fn name(&self) -> &str {
+        "layer-wise"
+    }
+
+    fn describe(&self) -> &str {
+        "whole-layer ganged copies; every block of a copy consumes the same patch \
+         stream and synchronizes at the gather, so faster blocks sit idle (§II)"
+    }
+
+    fn requires_uniform_plan(&self) -> bool {
+        true
+    }
+
+    fn simulate_stage(
+        &self,
+        ctx: &mut StageCtx<'_>,
+        lt: &LayerTrace,
+        layer: usize,
+        mode: ReadMode,
+        busy: &mut [u64],
+    ) -> u64 {
+        layerwise(ctx.chip, ctx.map, ctx.plan, ctx.placement, ctx.mesh, lt, layer, mode, busy)
+    }
+}
+
+impl DataflowModel for BlockWiseFlow {
+    fn name(&self) -> &str {
+        "block-wise"
+    }
+
+    fn describe(&self) -> &str {
+        "independent per-block duplicate pools; a memory-controller queue feeds the \
+         next free duplicate and no intra-layer barrier exists (§III-C)"
+    }
+
+    fn simulate_stage(
+        &self,
+        ctx: &mut StageCtx<'_>,
+        lt: &LayerTrace,
+        layer: usize,
+        mode: ReadMode,
+        busy: &mut [u64],
+    ) -> u64 {
+        blockwise(ctx.chip, ctx.map, ctx.plan, ctx.placement, ctx.mesh, lt, layer, mode, busy)
+    }
+}
+
+/// Simulate one layer stage for one image through `cfg`'s dataflow
+/// model. Returns the stage makespan (cycles from stage start) and
+/// accumulates per-instance busy cycles into `busy` (flattened
+/// row-major over (block row, duplicate)).
 #[allow(clippy::too_many_arguments)]
 pub fn simulate_stage(
     chip: &ChipCfg,
@@ -50,10 +112,8 @@ pub fn simulate_stage(
     cfg: SimCfg,
     busy: &mut [u64],
 ) -> u64 {
-    match cfg.dataflow {
-        Dataflow::LayerWise => layerwise(chip, map, plan, placement, mesh, lt, layer, cfg.mode, busy),
-        Dataflow::BlockWise => blockwise(chip, map, plan, placement, mesh, lt, layer, cfg.mode, busy),
-    }
+    let mut ctx = StageCtx { chip, map, plan, placement, mesh };
+    cfg.dataflow.simulate_stage(&mut ctx, lt, layer, cfg.mode, busy)
 }
 
 /// Instance-flattening offset of (row, dup) given per-row duplicate counts.
@@ -210,7 +270,7 @@ mod tests {
         (g, map, trace, chip)
     }
 
-    fn stage_time(dataflow: Dataflow, dups: Vec<usize>) -> (u64, Vec<u64>) {
+    fn stage_time(dataflow: &'static dyn DataflowModel, dups: Vec<usize>) -> (u64, Vec<u64>) {
         let (_, map, trace, chip) = setup();
         let plan = AllocationPlan { algorithm: "test".into(), duplicates: vec![dups] };
         let placement = place(&map, &plan, &chip).unwrap();
@@ -227,8 +287,8 @@ mod tests {
 
     #[test]
     fn blockwise_no_slower_than_layerwise_single_copy() {
-        let (t_lw, _) = stage_time(Dataflow::LayerWise, vec![1; 5]);
-        let (t_bw, _) = stage_time(Dataflow::BlockWise, vec![1; 5]);
+        let (t_lw, _) = stage_time(&LAYER_WISE, vec![1; 5]);
+        let (t_bw, _) = stage_time(&BLOCK_WISE, vec![1; 5]);
         // with one copy each, blockwise removes the per-patch barrier:
         // max_r Σ_p ≤ Σ_p max_r
         assert!(t_bw <= t_lw, "blockwise {t_bw} > layerwise {t_lw}");
@@ -236,8 +296,8 @@ mod tests {
 
     #[test]
     fn duplicates_reduce_stage_time() {
-        let (t1, _) = stage_time(Dataflow::BlockWise, vec![1; 5]);
-        let (t2, _) = stage_time(Dataflow::BlockWise, vec![2; 5]);
+        let (t1, _) = stage_time(&BLOCK_WISE, vec![1; 5]);
+        let (t2, _) = stage_time(&BLOCK_WISE, vec![2; 5]);
         assert!(t2 < t1, "2 copies {t2} !< 1 copy {t1}");
         assert!(t2 * 2 >= t1 * 9 / 10, "superlinear speedup is impossible");
     }
@@ -245,14 +305,14 @@ mod tests {
     #[test]
     fn busy_cycles_conserved_across_dataflows() {
         // Total busy cycles = total work, independent of scheduling.
-        let (_, b_lw) = stage_time(Dataflow::LayerWise, vec![1; 5]);
-        let (_, b_bw) = stage_time(Dataflow::BlockWise, vec![1; 5]);
+        let (_, b_lw) = stage_time(&LAYER_WISE, vec![1; 5]);
+        let (_, b_bw) = stage_time(&BLOCK_WISE, vec![1; 5]);
         assert_eq!(b_lw.iter().sum::<u64>(), b_bw.iter().sum::<u64>());
     }
 
     #[test]
     fn uneven_blockwise_duplicates_supported() {
-        let (t, busy) = stage_time(Dataflow::BlockWise, vec![3, 1, 1, 1, 2]);
+        let (t, busy) = stage_time(&BLOCK_WISE, vec![3, 1, 1, 1, 2]);
         assert!(t > 0);
         assert_eq!(busy.len(), 8);
         // all instances of block 0 should have done some work
@@ -269,14 +329,14 @@ mod tests {
         let t_base = simulate_stage(
             &chip, &map, &plan, &placement, &mut mesh,
             &trace.images[0].layers[0], 0,
-            SimCfg { mode: ReadMode::Baseline, dataflow: Dataflow::LayerWise, images: 1, warmup: 0 },
+            SimCfg { mode: ReadMode::Baseline, dataflow: &LAYER_WISE, images: 1, warmup: 0 },
             &mut busy,
         );
         let mut busy2 = vec![0u64; 5];
         let t_zs = simulate_stage(
             &chip, &map, &plan, &placement, &mut mesh,
             &trace.images[0].layers[0], 0,
-            SimCfg { mode: ReadMode::ZeroSkip, dataflow: Dataflow::LayerWise, images: 1, warmup: 0 },
+            SimCfg { mode: ReadMode::ZeroSkip, dataflow: &LAYER_WISE, images: 1, warmup: 0 },
             &mut busy2,
         );
         assert!(t_base >= t_zs, "baseline {t_base} < zero-skip {t_zs}");

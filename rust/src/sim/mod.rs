@@ -18,13 +18,69 @@ pub mod server;
 pub mod dataflow;
 pub mod pipeline;
 
+use crate::alloc::Allocator;
 use crate::config::ChipCfg;
 use crate::mapping::{AllocationPlan, NetworkMap, Placement};
 use crate::noc::{Mesh, NocStats};
-use crate::stats::NetTrace;
+use crate::stats::{LayerTrace, NetTrace};
 use crate::xbar::ReadMode;
 
+/// Everything a dataflow reads about the machine and the plan while
+/// scheduling one layer stage (the mesh is mutable: dataflows record
+/// their NoC traffic on it).
+pub struct StageCtx<'a> {
+    pub chip: &'a ChipCfg,
+    pub map: &'a NetworkMap,
+    pub plan: &'a AllocationPlan,
+    pub placement: &'a Placement,
+    pub mesh: &'a mut Mesh,
+}
+
+/// An intra-layer dataflow: the dispatch policy + barrier semantics
+/// that schedule a layer's work items onto its physical block
+/// instances.
+///
+/// The two built-ins live in [`dataflow`] ([`dataflow::LAYER_WISE`] with
+/// the per-patch gather barrier, [`dataflow::BLOCK_WISE`] with free
+/// dynamic dispatch over per-block duplicate pools — backed by
+/// [`server::ServerPool`]); both are string-addressable through
+/// [`crate::strategy::StrategyRegistry`] and selectable with
+/// `--dataflow`. Implementations must be deterministic and must charge
+/// identical per-item compute durations — only the synchronization
+/// structure may differ (the paper's comparison).
+pub trait DataflowModel: Send + Sync {
+    /// Registry key and CLI `--dataflow` name (kebab-case).
+    fn name(&self) -> &str;
+
+    /// One-line human description for `cimfab list-strategies`.
+    fn describe(&self) -> &str;
+
+    /// Does this dataflow require layer-uniform plans (whole-layer
+    /// copies)? Barrier-style dataflows gang all blocks of a copy, so
+    /// duplicates beyond the per-layer minimum would be unusable.
+    fn requires_uniform_plan(&self) -> bool {
+        false
+    }
+
+    /// Simulate one layer stage for one image. Returns the stage
+    /// makespan (cycles from stage start) and accumulates per-instance
+    /// busy cycles into `busy` (flattened row-major over (block row,
+    /// duplicate)).
+    fn simulate_stage(
+        &self,
+        ctx: &mut StageCtx<'_>,
+        lt: &LayerTrace,
+        layer: usize,
+        mode: ReadMode,
+        busy: &mut [u64],
+    ) -> u64;
+}
+
 /// Which dataflow schedules work within a layer.
+///
+/// **Deprecated shim** — kept for one release; [`Dataflow::model`]
+/// resolves the variant to its [`DataflowModel`] trait object. New code
+/// should name dataflows through [`crate::strategy::StrategyRegistry`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dataflow {
     /// Whole-layer copies, ganged blocks, per-patch barrier (§II).
@@ -33,26 +89,61 @@ pub enum Dataflow {
     BlockWise,
 }
 
+impl Dataflow {
+    /// The trait object implementing this dataflow.
+    pub fn model(self) -> &'static dyn DataflowModel {
+        match self {
+            Dataflow::LayerWise => &dataflow::LAYER_WISE,
+            Dataflow::BlockWise => &dataflow::BLOCK_WISE,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        self.model().name()
+    }
+}
+
 /// Simulation parameters.
-#[derive(Debug, Clone, Copy)]
+#[derive(Clone, Copy)]
 pub struct SimCfg {
     pub mode: ReadMode,
-    pub dataflow: Dataflow,
+    /// The intra-layer dataflow (built-ins: [`dataflow::LAYER_WISE`],
+    /// [`dataflow::BLOCK_WISE`]; registry strategies may add more).
+    pub dataflow: &'static dyn DataflowModel,
     /// Images pushed through the pipeline.
     pub images: usize,
     /// Leading images excluded from the steady-state throughput estimate.
     pub warmup: usize,
 }
 
+impl std::fmt::Debug for SimCfg {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SimCfg")
+            .field("mode", &self.mode)
+            .field("dataflow", &self.dataflow.name())
+            .field("images", &self.images)
+            .field("warmup", &self.warmup)
+            .finish()
+    }
+}
+
 impl SimCfg {
+    /// Configuration implied by an allocation strategy paired with a
+    /// dataflow model (the strategy decides the read discipline).
+    pub fn for_strategy(
+        alloc: &dyn crate::alloc::Allocator,
+        flow: &'static dyn DataflowModel,
+        images: usize,
+    ) -> SimCfg {
+        SimCfg { mode: alloc.read_mode(), dataflow: flow, images, warmup: (images / 4).min(2) }
+    }
+
     /// Configuration implied by a paper algorithm.
+    ///
+    /// **Deprecated shim** — resolves the enum through the registry;
+    /// use [`SimCfg::for_strategy`] with registry lookups instead.
     pub fn for_algorithm(alg: crate::alloc::Algorithm, images: usize) -> SimCfg {
-        SimCfg {
-            mode: if alg.zero_skip() { ReadMode::ZeroSkip } else { ReadMode::Baseline },
-            dataflow: if alg.blockwise_dataflow() { Dataflow::BlockWise } else { Dataflow::LayerWise },
-            images,
-            warmup: (images / 4).min(2),
-        }
+        SimCfg::for_strategy(alg.strategy(), alg.dataflow_model(), images)
     }
 }
 
@@ -100,23 +191,17 @@ pub fn simulate(
     let inst_count: Vec<usize> = plan.duplicates.iter().map(|d| d.iter().sum()).collect();
     let mut busy: Vec<Vec<u64>> = inst_count.iter().map(|&n| vec![0u64; n]).collect();
 
-    // 1. intra-stage simulation per (image, layer)
+    // 1. intra-stage simulation per (image, layer), dispatched through
+    //    the dataflow trait object
     let mut stage_t = vec![vec![0u64; nl]; cfg.images];
-    for img in 0..cfg.images {
-        let it = &trace.images[img % trace.images.len()];
-        for l in 0..nl {
-            let t = dataflow::simulate_stage(
-                chip,
-                map,
-                plan,
-                placement,
-                &mut mesh,
-                &it.layers[l],
-                l,
-                cfg,
-                &mut busy[l],
-            );
-            stage_t[img][l] = t;
+    {
+        let mut ctx = StageCtx { chip, map, plan, placement, mesh: &mut mesh };
+        for img in 0..cfg.images {
+            let it = &trace.images[img % trace.images.len()];
+            for l in 0..nl {
+                let t = cfg.dataflow.simulate_stage(&mut ctx, &it.layers[l], l, cfg.mode, &mut busy[l]);
+                stage_t[img][l] = t;
+            }
         }
     }
 
@@ -260,8 +345,21 @@ mod tests {
             &plan,
             &placement,
             &trace,
-            SimCfg { mode: ReadMode::ZeroSkip, dataflow: Dataflow::BlockWise, images: 8, warmup: 2 },
+            SimCfg {
+                mode: ReadMode::ZeroSkip,
+                dataflow: &dataflow::BLOCK_WISE,
+                images: 8,
+                warmup: 2,
+            },
         );
         assert!(r.layer_util[0] > 0.5, "util {}", r.layer_util[0]);
+    }
+
+    #[test]
+    fn dataflow_enum_shim_resolves_models() {
+        assert_eq!(Dataflow::LayerWise.name(), "layer-wise");
+        assert_eq!(Dataflow::BlockWise.name(), "block-wise");
+        assert!(Dataflow::LayerWise.model().requires_uniform_plan());
+        assert!(!Dataflow::BlockWise.model().requires_uniform_plan());
     }
 }

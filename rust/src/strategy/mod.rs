@@ -1,0 +1,276 @@
+//! String-addressable strategy registry: the open front door of the
+//! allocation/dataflow API.
+//!
+//! The paper's 7.47× headline comes from swapping the *allocation
+//! policy* and the *dataflow* while holding the fabric fixed — so both
+//! are open, named strategies here rather than closed enums:
+//!
+//! * [`crate::alloc::Allocator`] — how array duplicates are granted;
+//! * [`crate::sim::DataflowModel`] — how a layer's work is dispatched
+//!   onto its physical instances (barrier semantics included).
+//!
+//! [`StrategyRegistry`] maps names (and aliases) to trait objects. The
+//! global registry starts with the built-ins — allocators `baseline`,
+//! `weight-based`, `perf-based`, `block-wise`, `hybrid`; dataflows
+//! `layer-wise`, `block-wise` — and accepts process-wide registration
+//! of new `&'static` strategies ([`StrategyRegistry::register_global`]),
+//! so a downstream crate can plug a policy in and immediately drive it
+//! from the CLI (`--alloc`), the [`crate::pipeline::ScenarioBuilder`],
+//! and the sweep executor. Lookups fail with a did-you-mean suggestion
+//! (edit distance over registry keys) instead of a panic.
+
+use crate::alloc::{builtin, hybrid, Allocator};
+use crate::sim::{dataflow, DataflowModel};
+use crate::util::cli::unknown_value_msg;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::{OnceLock, RwLock};
+
+/// Name → strategy maps for both strategy kinds. Values are `&'static`
+/// trait objects (strategies live for the whole process), so lookups
+/// hand out `Copy` references that outlive the registry lock.
+#[derive(Clone, Default)]
+pub struct StrategyRegistry {
+    allocators: BTreeMap<String, &'static dyn Allocator>,
+    dataflows: BTreeMap<String, &'static dyn DataflowModel>,
+    /// alias → canonical name, per kind ("weight" → "weight-based").
+    alloc_aliases: BTreeMap<String, String>,
+}
+
+/// The paper's four algorithms in the Figs 8/9 series order.
+pub const PAPER_ALGORITHMS: [&str; 4] =
+    ["baseline", "weight-based", "perf-based", "block-wise"];
+
+fn global_cell() -> &'static RwLock<StrategyRegistry> {
+    static CELL: OnceLock<RwLock<StrategyRegistry>> = OnceLock::new();
+    CELL.get_or_init(|| RwLock::new(StrategyRegistry::builtin()))
+}
+
+impl StrategyRegistry {
+    /// A registry holding exactly the built-in strategies.
+    pub fn builtin() -> StrategyRegistry {
+        let mut reg = StrategyRegistry::default();
+        for a in [
+            &builtin::BASELINE as &'static dyn Allocator,
+            &builtin::WEIGHT_BASED,
+            &builtin::PERF_BASED,
+            &builtin::BLOCK_WISE,
+            &hybrid::HYBRID,
+        ] {
+            reg.register_allocator(a).expect("built-in names are distinct");
+        }
+        for (alias, canonical) in
+            [("weight", "weight-based"), ("perf", "perf-based"), ("block", "block-wise")]
+        {
+            reg.alloc_aliases.insert(alias.into(), canonical.into());
+        }
+        for d in [&dataflow::LAYER_WISE as &'static dyn DataflowModel, &dataflow::BLOCK_WISE] {
+            reg.register_dataflow(d).expect("built-in names are distinct");
+        }
+        reg
+    }
+
+    /// Add an allocation strategy. Errors if the name is taken.
+    pub fn register_allocator(&mut self, a: &'static dyn Allocator) -> Result<()> {
+        let name = a.name().to_string();
+        anyhow::ensure!(
+            !self.allocators.contains_key(&name) && !self.alloc_aliases.contains_key(&name),
+            "allocation strategy '{name}' is already registered"
+        );
+        self.allocators.insert(name, a);
+        Ok(())
+    }
+
+    /// Add a dataflow model. Errors if the name is taken.
+    pub fn register_dataflow(&mut self, d: &'static dyn DataflowModel) -> Result<()> {
+        let name = d.name().to_string();
+        anyhow::ensure!(
+            !self.dataflows.contains_key(&name),
+            "dataflow model '{name}' is already registered"
+        );
+        self.dataflows.insert(name, d);
+        Ok(())
+    }
+
+    /// Resolve an allocation strategy by name or alias.
+    pub fn allocator(&self, name: &str) -> Result<&'static dyn Allocator> {
+        let canonical = self.alloc_aliases.get(name).map(String::as_str).unwrap_or(name);
+        self.allocators.get(canonical).copied().ok_or_else(|| {
+            let known: Vec<&str> = self.allocators.keys().map(String::as_str).collect();
+            anyhow::anyhow!(unknown_value_msg("allocation strategy", name, &known))
+        })
+    }
+
+    /// Resolve a dataflow model by name.
+    pub fn dataflow(&self, name: &str) -> Result<&'static dyn DataflowModel> {
+        self.dataflows.get(name).copied().ok_or_else(|| {
+            let known: Vec<&str> = self.dataflows.keys().map(String::as_str).collect();
+            anyhow::anyhow!(unknown_value_msg("dataflow model", name, &known))
+        })
+    }
+
+    /// All allocation strategies, name-ordered.
+    pub fn allocators(&self) -> Vec<&'static dyn Allocator> {
+        self.allocators.values().copied().collect()
+    }
+
+    /// All dataflow models, name-ordered.
+    pub fn dataflows(&self) -> Vec<&'static dyn DataflowModel> {
+        self.dataflows.values().copied().collect()
+    }
+
+    // ---- process-global registry ------------------------------------
+
+    /// Resolve against the global registry.
+    pub fn lookup_allocator(name: &str) -> Result<&'static dyn Allocator> {
+        global_cell().read().unwrap().allocator(name)
+    }
+
+    /// Resolve against the global registry.
+    pub fn lookup_dataflow(name: &str) -> Result<&'static dyn DataflowModel> {
+        global_cell().read().unwrap().dataflow(name)
+    }
+
+    /// A point-in-time copy of the global registry (for listings).
+    pub fn snapshot() -> StrategyRegistry {
+        global_cell().read().unwrap().clone()
+    }
+
+    /// Register a new strategy pair-wide in the global registry (either
+    /// argument may be `None`). Atomic: both names are checked before
+    /// either is inserted, so a rejected call leaves the registry
+    /// untouched. This is how downstream code opens the CLI/pipeline to
+    /// its own policies.
+    pub fn register_global(
+        alloc: Option<&'static dyn Allocator>,
+        flow: Option<&'static dyn DataflowModel>,
+    ) -> Result<()> {
+        let mut reg = global_cell().write().unwrap();
+        if let Some(a) = alloc {
+            let name = a.name();
+            anyhow::ensure!(
+                !reg.allocators.contains_key(name) && !reg.alloc_aliases.contains_key(name),
+                "allocation strategy '{name}' is already registered"
+            );
+        }
+        if let Some(d) = flow {
+            anyhow::ensure!(
+                !reg.dataflows.contains_key(d.name()),
+                "dataflow model '{}' is already registered",
+                d.name()
+            );
+        }
+        if let Some(a) = alloc {
+            reg.register_allocator(a)?;
+        }
+        if let Some(d) = flow {
+            reg.register_dataflow(d)?;
+        }
+        Ok(())
+    }
+
+    /// Does the named allocation strategy simulate with zero-skipping?
+    /// (`false` for unknown names — the Fig 9 tables simply omit them.)
+    pub fn is_zero_skip(name: &str) -> bool {
+        Self::lookup_allocator(name)
+            .map(|a| a.read_mode() == crate::xbar::ReadMode::ZeroSkip)
+            .unwrap_or(false)
+    }
+
+    /// The paper's four algorithms as trait objects, in the Figs 8/9
+    /// series order (not the registry's alphabetical order).
+    pub fn paper_allocators() -> [&'static dyn Allocator; 4] {
+        PAPER_ALGORITHMS
+            .map(|n| Self::lookup_allocator(n).expect("paper algorithms are always registered"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_resolve_by_name_and_alias() {
+        for name in PAPER_ALGORITHMS {
+            assert_eq!(StrategyRegistry::lookup_allocator(name).unwrap().name(), name);
+        }
+        assert_eq!(StrategyRegistry::lookup_allocator("hybrid").unwrap().name(), "hybrid");
+        assert_eq!(StrategyRegistry::lookup_allocator("weight").unwrap().name(), "weight-based");
+        assert_eq!(StrategyRegistry::lookup_allocator("block").unwrap().name(), "block-wise");
+        for name in ["layer-wise", "block-wise"] {
+            assert_eq!(StrategyRegistry::lookup_dataflow(name).unwrap().name(), name);
+        }
+    }
+
+    #[test]
+    fn registry_lists_at_least_five_allocators() {
+        let reg = StrategyRegistry::snapshot();
+        let names: Vec<&str> = reg.allocators().iter().map(|a| a.name()).collect();
+        assert!(names.len() >= 5, "{names:?}");
+        assert!(names.contains(&"hybrid"), "{names:?}");
+        // name-ordered (BTreeMap) — the list-strategies table order
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        assert_eq!(names, sorted);
+    }
+
+    #[test]
+    fn unknown_names_error_with_did_you_mean() {
+        let err = StrategyRegistry::lookup_allocator("blok-wise").unwrap_err().to_string();
+        assert!(err.contains("did you mean 'block-wise'?"), "{err}");
+        assert!(err.contains("hybrid"), "should list known strategies: {err}");
+        let err = StrategyRegistry::lookup_dataflow("layerwise").unwrap_err().to_string();
+        assert!(err.contains("did you mean 'layer-wise'?"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let mut reg = StrategyRegistry::builtin();
+        assert!(reg.register_allocator(&crate::alloc::builtin::BLOCK_WISE).is_err());
+        assert!(reg.register_dataflow(&crate::sim::dataflow::BLOCK_WISE).is_err());
+    }
+
+    #[test]
+    fn register_global_is_atomic() {
+        struct Probe;
+        impl Allocator for Probe {
+            fn name(&self) -> &str {
+                "atomicity-probe"
+            }
+            fn describe(&self) -> &str {
+                "test"
+            }
+            fn allocate(
+                &self,
+                map: &crate::mapping::NetworkMap,
+                _profile: &crate::stats::NetworkProfile,
+                budget: usize,
+            ) -> crate::Result<crate::mapping::AllocationPlan> {
+                crate::alloc::finish_plan(
+                    crate::mapping::AllocationPlan::minimal(map),
+                    self.name(),
+                    map,
+                    budget,
+                )
+            }
+        }
+        // pairing a fresh allocator with a colliding dataflow must not
+        // register the allocator
+        let err = StrategyRegistry::register_global(
+            Some(&Probe),
+            Some(&crate::sim::dataflow::BLOCK_WISE),
+        );
+        assert!(err.is_err());
+        assert!(StrategyRegistry::lookup_allocator("atomicity-probe").is_err());
+        // alone it registers fine
+        StrategyRegistry::register_global(Some(&Probe), None).unwrap();
+        assert!(StrategyRegistry::lookup_allocator("atomicity-probe").is_ok());
+    }
+
+    #[test]
+    fn paper_allocators_keep_series_order() {
+        let names: Vec<&str> =
+            StrategyRegistry::paper_allocators().iter().map(|a| a.name()).collect();
+        assert_eq!(names, PAPER_ALGORITHMS.to_vec());
+    }
+}

@@ -89,6 +89,49 @@ impl Args {
     }
 }
 
+/// Levenshtein edit distance — small inputs only (strategy/net names).
+pub fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// The candidate closest to `input`, if any is close enough to be a
+/// plausible typo (distance ≤ 2, or ≤ a third of the input length).
+pub fn did_you_mean<'a, I>(input: &str, candidates: I) -> Option<&'a str>
+where
+    I: IntoIterator<Item = &'a str>,
+{
+    let cutoff = 2usize.max(input.len() / 3);
+    candidates
+        .into_iter()
+        .map(|c| (edit_distance(&input.to_lowercase(), &c.to_lowercase()), c))
+        .filter(|&(d, _)| d <= cutoff)
+        .min_by_key(|&(d, c)| (d, c.to_string()))
+        .map(|(_, c)| c)
+}
+
+/// Standard "unknown value" message: names the bad input, suggests the
+/// closest known value (edit distance), and lists all known values.
+pub fn unknown_value_msg(kind: &str, got: &str, known: &[&str]) -> String {
+    let mut msg = format!("unknown {kind} '{got}'");
+    if let Some(s) = did_you_mean(got, known.iter().copied()) {
+        msg.push_str(&format!(" — did you mean '{s}'?"));
+    }
+    msg.push_str(&format!(" (known: {})", known.join(", ")));
+    msg
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,5 +171,33 @@ mod tests {
         assert_eq!(a.get_usize("absent", 7).unwrap(), 7);
         assert_eq!(a.get_f64("f", 0.0).unwrap(), 0.5);
         assert!(a.get_usize("f", 0).is_err());
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("", ""), 0);
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("abc", ""), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+        assert_eq!(edit_distance("block-wise", "blok-wise"), 1);
+    }
+
+    #[test]
+    fn did_you_mean_suggests_close_names_only() {
+        let known = ["baseline", "weight-based", "perf-based", "block-wise", "hybrid"];
+        assert_eq!(did_you_mean("blok-wise", known), Some("block-wise"));
+        assert_eq!(did_you_mean("Hybird", known), Some("hybrid"));
+        assert_eq!(did_you_mean("weigth-based", known), Some("weight-based"));
+        assert_eq!(did_you_mean("zzzzzz", known), None);
+    }
+
+    #[test]
+    fn unknown_value_msg_mentions_suggestion_and_known_set() {
+        let m = unknown_value_msg("allocation strategy", "blok-wise", &["baseline", "block-wise"]);
+        assert!(m.contains("unknown allocation strategy 'blok-wise'"), "{m}");
+        assert!(m.contains("did you mean 'block-wise'?"), "{m}");
+        assert!(m.contains("baseline, block-wise"), "{m}");
+        let m = unknown_value_msg("x", "qqqq", &["baseline"]);
+        assert!(!m.contains("did you mean"), "{m}");
     }
 }

@@ -21,17 +21,15 @@ fn both_networks_full_pipeline_synthetic() {
         .unwrap();
         let results = d.run_all(d.min_pes() * 2).unwrap();
         assert_eq!(results.len(), 4);
-        for (alg, r) in &results {
+        for (alloc, r) in &results {
             assert!(
                 r.throughput_ips > 0.0 && r.throughput_ips.is_finite(),
-                "{net}/{}: bad throughput",
-                alg.name()
+                "{net}/{alloc}: bad throughput"
             );
             assert!(r.chip_util > 0.0 && r.chip_util <= 1.0);
             assert!(
                 r.noc.peak_link_utilization < 1.0,
-                "{net}/{}: NoC saturated ({:.2})",
-                alg.name(),
+                "{net}/{alloc}: NoC saturated ({:.2})",
                 r.noc.peak_link_utilization
             );
         }
@@ -86,6 +84,30 @@ fn cli_binary_help_runs() {
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stderr);
     assert!(text.contains("USAGE"), "unexpected help text: {text}");
+}
+
+#[test]
+fn cli_list_strategies_prints_the_registry() {
+    let exe = env!("CARGO_BIN_EXE_cimfab");
+    let out = std::process::Command::new(exe).arg("list-strategies").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for name in ["baseline", "weight-based", "perf-based", "block-wise", "hybrid"] {
+        assert!(text.contains(name), "missing strategy '{name}' in:\n{text}");
+    }
+    assert!(text.contains("layer-wise"), "missing dataflow section:\n{text}");
+}
+
+#[test]
+fn cli_unknown_strategy_suggests_the_closest_name() {
+    let exe = env!("CARGO_BIN_EXE_cimfab");
+    let out = std::process::Command::new(exe)
+        .args(["simulate", "--net", "resnet18", "--hw", "32", "--alloc", "blok-wise"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("did you mean 'block-wise'?"), "unexpected error: {text}");
 }
 
 #[test]

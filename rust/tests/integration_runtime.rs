@@ -110,6 +110,6 @@ fn golden_stats_drive_the_full_driver() {
     })
     .unwrap();
     let results = d.run_all(d.min_pes() * 2).unwrap();
-    let bw = results.iter().find(|(a, _)| a.blockwise_dataflow()).unwrap().1.throughput_ips;
+    let bw = results.iter().find(|(a, _)| a == "block-wise").unwrap().1.throughput_ips;
     assert!(bw > 0.0);
 }

@@ -1,11 +1,13 @@
 //! Integration: allocation × placement × simulation across modules.
 
-use cimfab::alloc::{allocate, Algorithm};
+use cimfab::alloc::Allocator;
 use cimfab::config::{ArrayCfg, ChipCfg};
 use cimfab::coordinator::{Driver, DriverOpts, StatsSource};
 use cimfab::dnn::resnet18;
 use cimfab::mapping::{map_network, place, AllocationPlan};
-use cimfab::sim::{simulate, Dataflow, SimCfg};
+use cimfab::sim::dataflow::{BLOCK_WISE, LAYER_WISE};
+use cimfab::sim::{simulate, SimCfg};
+use cimfab::strategy::{StrategyRegistry, PAPER_ALGORITHMS};
 use cimfab::stats::synth::{synth_activations, SynthCfg};
 use cimfab::stats::{trace_from_activations, NetworkProfile};
 use cimfab::xbar::ReadMode;
@@ -28,19 +30,19 @@ fn paper_ordering_holds_across_design_sizes() {
     let d = driver();
     for pes in [129, 172, 344] {
         let results = d.run_all(pes).unwrap();
-        let get = |alg: Algorithm| {
-            results.iter().find(|(a, _)| *a == alg).unwrap().1.throughput_ips
+        let get = |alloc: &str| {
+            results.iter().find(|(a, _)| a == alloc).unwrap().1.throughput_ips
         };
         assert!(
-            get(Algorithm::BlockWise) >= get(Algorithm::PerfBased) * 0.99,
+            get("block-wise") >= get("perf-based") * 0.99,
             "pes={pes}: block-wise loses to perf-based"
         );
         assert!(
-            get(Algorithm::PerfBased) >= get(Algorithm::WeightBased) * 0.9,
+            get("perf-based") >= get("weight-based") * 0.9,
             "pes={pes}: perf-based loses to weight-based"
         );
         assert!(
-            get(Algorithm::WeightBased) > get(Algorithm::Baseline),
+            get("weight-based") > get("baseline"),
             "pes={pes}: zero-skipping loses to baseline"
         );
     }
@@ -52,11 +54,11 @@ fn min_size_all_zs_algorithms_close() {
     // duplication can be done" (modulo the dataflow's barrier removal).
     let d = driver();
     let results = d.run_all(86).unwrap();
-    let get = |alg: Algorithm| results.iter().find(|(a, _)| *a == alg).unwrap().1.throughput_ips;
-    let wb = get(Algorithm::WeightBased);
-    let pb = get(Algorithm::PerfBased);
+    let get = |alloc: &str| results.iter().find(|(a, _)| a == alloc).unwrap().1.throughput_ips;
+    let wb = get("weight-based");
+    let pb = get("perf-based");
     assert!((wb - pb).abs() / wb < 1e-9, "layer-wise ZS algorithms must coincide at min size");
-    let bw = get(Algorithm::BlockWise);
+    let bw = get("block-wise");
     assert!(bw >= pb, "block-wise dataflow can only help");
     assert!(bw < pb * 2.0, "at min size the gain is dataflow-only, must be modest");
 }
@@ -64,8 +66,8 @@ fn min_size_all_zs_algorithms_close() {
 #[test]
 fn simulation_is_deterministic() {
     let d = driver();
-    let a = d.run(Algorithm::BlockWise, 172).unwrap().1;
-    let b = d.run(Algorithm::BlockWise, 172).unwrap().1;
+    let a = d.run_strategy("block-wise", 172).unwrap().1;
+    let b = d.run_strategy("block-wise", 172).unwrap().1;
     assert_eq!(a.makespan, b.makespan);
     assert_eq!(a.layer_util, b.layer_util);
 }
@@ -81,15 +83,18 @@ fn dataflow_ablation_blockwise_alloc_layerwise_flow() {
     let trace = trace_from_activations(&g, &map, &acts);
     let prof = NetworkProfile::from_trace(&map, &trace);
     let chip = ChipCfg::paper(172);
-    let plan = allocate(Algorithm::PerfBased, &map, &prof, chip.total_arrays()).unwrap();
+    let plan = StrategyRegistry::lookup_allocator("perf-based")
+        .unwrap()
+        .allocate(&map, &prof, chip.total_arrays())
+        .unwrap();
     let placement = place(&map, &plan, &chip).unwrap();
     let lw = simulate(
         &chip, &map, &plan, &placement, &trace,
-        SimCfg { mode: ReadMode::ZeroSkip, dataflow: Dataflow::LayerWise, images: 6, warmup: 1 },
+        SimCfg { mode: ReadMode::ZeroSkip, dataflow: &LAYER_WISE, images: 6, warmup: 1 },
     );
     let bw = simulate(
         &chip, &map, &plan, &placement, &trace,
-        SimCfg { mode: ReadMode::ZeroSkip, dataflow: Dataflow::BlockWise, images: 6, warmup: 1 },
+        SimCfg { mode: ReadMode::ZeroSkip, dataflow: &BLOCK_WISE, images: 6, warmup: 1 },
     );
     assert!(
         bw.throughput_ips >= lw.throughput_ips * 0.999,
@@ -105,8 +110,8 @@ fn busy_cycles_conserved_under_allocation() {
     // capacity must equal the same busy total for every ZS algorithm.
     let d = driver();
     let mut busys = vec![];
-    for alg in [Algorithm::WeightBased, Algorithm::PerfBased, Algorithm::BlockWise] {
-        let (plan, r) = d.run(alg, 200).unwrap();
+    for alloc in ["weight-based", "perf-based", "block-wise", "hybrid"] {
+        let (plan, r) = d.run_strategy(alloc, 200).unwrap();
         let chip = ChipCfg::paper(200);
         // reconstruct total busy array-cycles from chip_util
         let capacity_arrays: usize = plan
@@ -129,12 +134,12 @@ fn busy_cycles_conserved_under_allocation() {
 fn minimal_plan_utilization_profile_is_unbalanced_weight_based() {
     // Fig 9's story: weight-based leaves some layers mostly idle.
     let d = driver();
-    let (_, r) = d.run(Algorithm::WeightBased, 258).unwrap();
+    let (_, r) = d.run_strategy("weight-based", 258).unwrap();
     let max = r.layer_util.iter().cloned().fold(0.0, f64::max);
     let min = r.layer_util.iter().cloned().fold(f64::MAX, f64::min);
     assert!(max > min * 2.0, "weight-based should be visibly unbalanced: {:?}", r.layer_util);
 
-    let (_, rb) = d.run(Algorithm::BlockWise, 258).unwrap();
+    let (_, rb) = d.run_strategy("block-wise", 258).unwrap();
     let mean_bw: f64 = rb.layer_util.iter().sum::<f64>() / rb.layer_util.len() as f64;
     let mean_wb: f64 = r.layer_util.iter().sum::<f64>() / r.layer_util.len() as f64;
     assert!(
@@ -148,8 +153,8 @@ fn plan_validates_and_places_at_every_sweep_size() {
     let d = driver();
     for pes in d.sweep_sizes(6) {
         let chip = ChipCfg::paper(pes);
-        for alg in Algorithm::all() {
-            let (plan, _) = d.run(alg, pes).unwrap();
+        for alloc in PAPER_ALGORITHMS.iter().chain(&["hybrid"]) {
+            let (plan, _) = d.run_strategy(alloc, pes).unwrap();
             plan.validate(&d.map, chip.total_arrays()).unwrap();
         }
     }

@@ -6,9 +6,11 @@
 //!   serial run;
 //! * the pipeline-backed `Driver` matches the raw pipeline stages.
 
-use cimfab::alloc::Algorithm;
 use cimfab::pipeline::artifact;
-use cimfab::pipeline::{run_sweep, PrefixSpec, Scenario, Stage, StatsSource, SweepCfg};
+use cimfab::pipeline::{
+    run_sweep, PrefixSpec, Scenario, ScenarioBuilder, Stage, StatsSource, SweepCfg,
+};
+use cimfab::strategy::PAPER_ALGORITHMS;
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -23,11 +25,15 @@ fn spec(seed: u64) -> PrefixSpec {
     }
 }
 
+fn scenario(seed: u64, alloc: &str, pes: usize) -> Scenario {
+    ScenarioBuilder::from_prefix(&spec(seed)).alloc(alloc).pes(pes).sim_images(4).build().unwrap()
+}
+
 fn scenarios(seed: u64) -> Vec<Scenario> {
     let mut out = Vec::new();
     for pes in [129usize, 172] {
-        for alg in Algorithm::all() {
-            out.push(Scenario { prefix: spec(seed), alg, pes, sim_images: 4 });
+        for alloc in PAPER_ALGORITHMS.iter().chain(&["hybrid"]) {
+            out.push(scenario(seed, alloc, pes));
         }
     }
     out
@@ -101,6 +107,12 @@ fn dump_tree_has_every_stage_exactly_once_per_scope() {
     }
     // 5 prefix files + 4 per scenario, nothing else
     assert_eq!(tree.len(), 5 + 4 * scs.len());
+    // the new hybrid strategy dumps under its own historical-form id
+    assert!(
+        tree.keys().any(|k| k.contains("hybrid_pes129_img4")),
+        "{:?}",
+        tree.keys().collect::<Vec<_>>()
+    );
 
     std::fs::remove_dir_all(&dir).unwrap();
 }
@@ -139,7 +151,7 @@ fn sweep_reproduces_the_driver_path() {
     .unwrap();
     let outcomes = run_sweep(&scenarios(13), &SweepCfg { threads: 3, dump_dir: None }).unwrap();
     for o in &outcomes {
-        let (_, want) = d.run(o.scenario.alg, o.scenario.pes).unwrap();
+        let (_, want) = d.run_strategy(&o.scenario.alloc, o.scenario.pes).unwrap();
         assert_eq!(o.result.makespan, want.makespan, "{}", o.scenario.id());
         assert_eq!(o.result.layer_util, want.layer_util, "{}", o.scenario.id());
     }
@@ -153,10 +165,14 @@ fn synthetic_prefixes_differing_only_in_artifacts_dir_share_one_prefix() {
     let mut b = spec(31);
     b.artifacts_dir = "elsewhere".into();
     assert_eq!(a.id(), b.id());
-    let scs = vec![
-        Scenario { prefix: a, alg: Algorithm::WeightBased, pes: 172, sim_images: 4 },
-        Scenario { prefix: b, alg: Algorithm::BlockWise, pes: 172, sim_images: 4 },
-    ];
+    let mk = |prefix: PrefixSpec, alloc: &str, dataflow: &str| Scenario {
+        prefix,
+        alloc: alloc.into(),
+        dataflow: dataflow.into(),
+        pes: 172,
+        sim_images: 4,
+    };
+    let scs = vec![mk(a, "weight-based", "layer-wise"), mk(b, "block-wise", "block-wise")];
     let dir = tmp_dir("shared");
     let out = run_sweep(&scs, &SweepCfg { threads: 2, dump_dir: Some(dir.clone()) }).unwrap();
     assert_eq!(out.len(), 2);
@@ -180,8 +196,14 @@ fn multi_prefix_sweep_prepares_each_prefix_once_and_stays_ordered() {
             seed: 3,
             artifacts_dir: "artifacts".into(),
         };
-        for alg in [Algorithm::WeightBased, Algorithm::BlockWise] {
-            scs.push(Scenario { prefix: prefix.clone(), alg, pes: 200, sim_images: 4 });
+        for (alloc, dataflow) in [("weight-based", "layer-wise"), ("block-wise", "block-wise")] {
+            scs.push(Scenario {
+                prefix: prefix.clone(),
+                alloc: alloc.into(),
+                dataflow: dataflow.into(),
+                pes: 200,
+                sim_images: 4,
+            });
         }
     }
     let out = run_sweep(&scs, &SweepCfg { threads: 4, dump_dir: None }).unwrap();

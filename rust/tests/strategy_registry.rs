@@ -1,0 +1,195 @@
+//! Registry/API guarantees:
+//!
+//! * **parity** — every built-in `Allocator` produces a byte-identical
+//!   `AllocationPlan` artifact (golden JSON via `pipeline::artifact`)
+//!   to its pre-refactor enum path, reconstructed here verbatim from
+//!   the seed's `match` arms over `alloc::greedy`;
+//! * **builder validation** — propcheck over random knob combinations:
+//!   `ScenarioBuilder` accepts exactly the valid ones and rejects zero
+//!   budgets / missing nets / zero image counts;
+//! * **openness** — a custom strategy registered at runtime is
+//!   immediately drivable through the builder and the pipeline.
+
+use cimfab::alloc::{greedy, Allocator};
+use cimfab::config::ArrayCfg;
+use cimfab::dnn::resnet18;
+use cimfab::mapping::{map_network, AllocationPlan, NetworkMap};
+use cimfab::pipeline::{self, artifact, PrefixSpec, ScenarioBuilder, StatsSource};
+use cimfab::stats::synth::{synth_activations, SynthCfg};
+use cimfab::stats::{trace_from_activations, NetworkProfile};
+use cimfab::strategy::{StrategyRegistry, PAPER_ALGORITHMS};
+use cimfab::util::propcheck;
+
+fn setup() -> (NetworkMap, NetworkProfile) {
+    let g = resnet18(32, 10);
+    let map = map_network(&g, ArrayCfg::paper(), false);
+    let acts = synth_activations(&g, &map, 2, 17, SynthCfg::default());
+    let trace = trace_from_activations(&g, &map, &acts);
+    let prof = NetworkProfile::from_trace(&map, &trace);
+    (map, prof)
+}
+
+#[test]
+fn registry_allocators_match_pre_refactor_enum_paths_byte_for_byte() {
+    let (map, prof) = setup();
+    for budget in [map.min_arrays(), map.min_arrays() * 2, map.min_arrays() * 3 + 7] {
+        // The seed's `alloc::allocate` match arms, reproduced literally.
+        let golden: [(&str, AllocationPlan); 4] = [
+            ("baseline", greedy::layerwise(&map, &prof.layer_baseline_cycles, budget).unwrap()),
+            ("weight-based", greedy::layerwise(&map, &prof.layer_baseline_cycles, budget).unwrap()),
+            ("perf-based", greedy::layerwise(&map, &prof.layer_barrier_cycles, budget).unwrap()),
+            ("block-wise", greedy::blockwise(&map, &prof.block_cycles, budget).unwrap()),
+        ];
+        for (name, mut want) in golden {
+            want.algorithm = name.to_string();
+            let got = StrategyRegistry::lookup_allocator(name)
+                .unwrap()
+                .allocate(&map, &prof, budget)
+                .unwrap();
+            assert_eq!(
+                artifact::plan_json(&got, &map).pretty(),
+                artifact::plan_json(&want, &map).pretty(),
+                "{name} @ budget {budget}: registry plan diverged from the enum path"
+            );
+        }
+    }
+}
+
+#[test]
+fn enum_shim_and_registry_agree() {
+    let (map, prof) = setup();
+    let budget = map.min_arrays() * 2;
+    for alg in cimfab::alloc::Algorithm::all() {
+        let via_enum = cimfab::alloc::allocate(alg, &map, &prof, budget).unwrap();
+        let via_registry = StrategyRegistry::lookup_allocator(alg.name())
+            .unwrap()
+            .allocate(&map, &prof, budget)
+            .unwrap();
+        assert_eq!(via_enum, via_registry, "{}", alg.name());
+    }
+}
+
+#[test]
+fn all_registered_allocators_produce_valid_plans() {
+    let (map, prof) = setup();
+    let budget = map.min_arrays() * 2;
+    let reg = StrategyRegistry::snapshot();
+    let allocators = reg.allocators();
+    assert!(allocators.len() >= 5);
+    for a in allocators {
+        let plan = a.allocate(&map, &prof, budget).unwrap();
+        plan.validate(&map, budget).unwrap();
+        assert_eq!(plan.algorithm, a.name());
+        // the declared uniformity contract holds
+        if a.uniform_plans() {
+            assert!(plan.is_layerwise(), "{} claims uniform plans", a.name());
+        }
+    }
+}
+
+#[test]
+fn builder_validation_propcheck() {
+    propcheck::check("ScenarioBuilder validation", 0xB01D, 80, |rng| {
+        let nets = ["resnet18", "resnet34", "vgg11", "", "alexnet"];
+        let net = nets[rng.index(nets.len())];
+        let pes = rng.index(400); // 0 is invalid
+        let sim_images = rng.index(6); // 0 is invalid
+        let profile_images = rng.index(4); // 0 is invalid
+        let allocs = ["baseline", "weight-based", "perf-based", "block-wise", "hybrid", "bogus"];
+        let alloc = allocs[rng.index(allocs.len())];
+        let built = ScenarioBuilder::new()
+            .net(net)
+            .pes(pes)
+            .sim_images(sim_images)
+            .profile_images(profile_images)
+            .alloc(alloc)
+            .build();
+        let should_be_valid = ["resnet18", "resnet34", "vgg11"].contains(&net)
+            && pes > 0
+            && sim_images > 0
+            && profile_images > 0
+            && alloc != "bogus";
+        cimfab::prop_assert!(
+            built.is_ok() == should_be_valid,
+            "net={net:?} pes={pes} sim={sim_images} prof={profile_images} alloc={alloc}: \
+             expected valid={should_be_valid}, got {built:?}"
+        );
+        Ok(())
+    });
+}
+
+/// A deliberately silly strategy: every block gets exactly one copy
+/// (ignores the extra budget). Registered at runtime to prove the API
+/// is open end-to-end.
+struct MinimalAllocator;
+
+impl Allocator for MinimalAllocator {
+    fn name(&self) -> &str {
+        "minimal-test"
+    }
+
+    fn describe(&self) -> &str {
+        "one copy of everything (test strategy)"
+    }
+
+    fn default_dataflow(&self) -> &str {
+        "block-wise"
+    }
+
+    fn uniform_plans(&self) -> bool {
+        false
+    }
+
+    fn allocate(
+        &self,
+        map: &NetworkMap,
+        _profile: &NetworkProfile,
+        budget_arrays: usize,
+    ) -> cimfab::Result<AllocationPlan> {
+        cimfab::alloc::finish_plan(AllocationPlan::minimal(map), self.name(), map, budget_arrays)
+    }
+}
+
+#[test]
+fn runtime_registered_strategy_drives_the_pipeline() {
+    StrategyRegistry::register_global(Some(&MinimalAllocator), None).unwrap();
+    let spec = PrefixSpec {
+        net: "resnet18".into(),
+        hw: 32,
+        stats: StatsSource::Synthetic,
+        profile_images: 1,
+        seed: 3,
+        artifacts_dir: "artifacts".into(),
+    };
+    let sc = ScenarioBuilder::from_prefix(&spec)
+        .alloc("minimal-test")
+        .pes(172)
+        .sim_images(4)
+        .build()
+        .unwrap();
+    assert_eq!(sc.dataflow, "block-wise");
+    let prep = pipeline::prepare(&spec, None).unwrap();
+    let out = pipeline::run_scenario(&prep.view(), &sc, None).unwrap();
+    assert_eq!(out.plan.algorithm, "minimal-test");
+    assert_eq!(out.plan.arrays_used(&prep.map), prep.map.min_arrays());
+    assert!(out.result.throughput_ips > 0.0);
+    // a second registration under the same name is rejected
+    assert!(StrategyRegistry::register_global(Some(&MinimalAllocator), None).is_err());
+}
+
+#[test]
+fn paper_algorithms_resolve_by_name_with_expected_sim_config() {
+    for name in PAPER_ALGORITHMS {
+        let a = StrategyRegistry::lookup_allocator(name).unwrap();
+        assert_eq!(a.name(), name);
+        StrategyRegistry::lookup_dataflow(a.default_dataflow()).unwrap();
+    }
+    assert_eq!(
+        StrategyRegistry::lookup_allocator("baseline").unwrap().read_mode(),
+        cimfab::xbar::ReadMode::Baseline
+    );
+    assert_eq!(
+        StrategyRegistry::lookup_allocator("block-wise").unwrap().default_dataflow(),
+        "block-wise"
+    );
+}
