@@ -3,7 +3,7 @@
 //! run `resnet18_imagenet` for the golden-stats version).
 //!
 //! ```sh
-//! cargo run --release --example design_sweep [-- --steps 6 --hw 64]
+//! cargo run --release --example design_sweep [-- --steps 6 --res 64 --hw sram-128]
 //! ```
 
 use cimfab::coordinator::{Driver, DriverOpts, StatsSource};
@@ -14,12 +14,14 @@ fn main() -> cimfab::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv, &["csv"]).map_err(anyhow::Error::msg)?;
     let steps = args.get_usize("steps", 5).map_err(anyhow::Error::msg)?;
-    let hw = args.get_usize("hw", 64).map_err(anyhow::Error::msg)?;
+    let res = args.get_usize("res", 64).map_err(anyhow::Error::msg)?;
+    let hw_profile = args.get_or("hw", cimfab::hw::DEFAULT_PROFILE).to_string();
 
     for net in ["resnet18", "vgg11"] {
         let d = Driver::prepare(DriverOpts {
             net: net.into(),
-            hw,
+            hw: res,
+            hw_profile: hw_profile.clone(),
             stats: StatsSource::Synthetic,
             profile_images: 2,
             sim_images: 8,
@@ -35,7 +37,12 @@ fn main() -> cimfab::Result<()> {
         if args.has_flag("csv") {
             println!("# {net}\n{}", t.to_csv());
         } else {
-            println!("== Fig 8 — {net} @ {hw}x{hw} (min {} PEs) ==\n{}", d.min_pes(), t.render());
+            println!(
+                "== Fig 8 — {net} @ {res}x{res}, {} profile (min {} PEs) ==\n{}",
+                d.hw.name,
+                d.min_pes(),
+                t.render()
+            );
         }
     }
     Ok(())

@@ -19,7 +19,7 @@ fn main() -> cimfab::Result<()> {
         profile_images: 2,
         sim_images: 8,
         seed: 7,
-        artifacts_dir: "artifacts".into(),
+        ..DriverOpts::default()
     })?;
 
     println!(

@@ -62,7 +62,7 @@ fn main() -> cimfab::Result<()> {
         profile_images: 2,
         sim_images: 8,
         seed: 42,
-        artifacts_dir: "artifacts".into(),
+        ..DriverOpts::default()
     })?;
     println!(
         "[3] profiled {} layers from golden activations; layer densities {:.1}%..{:.1}%",

@@ -32,7 +32,7 @@ fn main() -> cimfab::Result<()> {
         profile_images: 2,
         sim_images: 8,
         seed: 11,
-        artifacts_dir: "artifacts".into(),
+        ..DriverOpts::default()
     })?;
     println!(
         "vgg11: {} conv layers, {} blocks, min {} PEs",
@@ -54,7 +54,7 @@ fn main() -> cimfab::Result<()> {
         profile_images: 2,
         sim_images: 8,
         seed: 11,
-        artifacts_dir: "artifacts".into(),
+        ..DriverOpts::default()
     })?;
     let rn_results = rn.run_all(rn.min_pes() * 2)?;
     let vgg_gain = ratio(&vgg_results, "block-wise", "perf-based");

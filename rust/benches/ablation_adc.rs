@@ -13,6 +13,7 @@ use cimfab::dnn::resnet18;
 use cimfab::mapping::map_network;
 use cimfab::stats::synth::{synth_activations, SynthCfg};
 use cimfab::stats::trace_from_activations;
+use cimfab::strategy::StrategyRegistry;
 use cimfab::util::bench::{banner, Bencher};
 use cimfab::util::table::{fmt_f, Table};
 use cimfab::xbar::{adc::Adc, variance};
@@ -53,15 +54,10 @@ fn main() {
             c.array = acfg;
             c
         };
+        let block_wise = StrategyRegistry::lookup_allocator("block-wise").unwrap();
         let mut ips = 0.0;
         b.bench(&format!("simulate adc_bits={bits}"), || {
-            let plan = cimfab::alloc::allocate(
-                cimfab::alloc::Algorithm::BlockWise,
-                &map,
-                &prof,
-                chip.total_arrays(),
-            )
-            .unwrap();
+            let plan = block_wise.allocate(&map, &prof, chip.total_arrays()).unwrap();
             let placement = cimfab::mapping::place(&map, &plan, &chip).unwrap();
             let r = cimfab::sim::simulate(
                 &chip,
@@ -69,7 +65,7 @@ fn main() {
                 &plan,
                 &placement,
                 &trace,
-                cimfab::sim::SimCfg::for_algorithm(cimfab::alloc::Algorithm::BlockWise, 6),
+                cimfab::sim::SimCfg::for_strategy_name("block-wise", 6).unwrap(),
             );
             ips = r.throughput_ips;
         });
@@ -97,7 +93,7 @@ fn main() {
         profile_images: 1,
         sim_images: 2,
         seed: 1,
-        artifacts_dir: "artifacts".into(),
+        ..DriverOpts::default()
     })
     .unwrap();
     println!("\n{}", b.report());

@@ -31,6 +31,7 @@ fn main() {
         &PrefixSpec {
             net: "resnet18".into(),
             hw: 64,
+            hw_profile: cimfab::hw::DEFAULT_PROFILE.into(),
             stats: StatsSource::Synthetic,
             profile_images: 2,
             seed: 7,

@@ -2,12 +2,12 @@
 //! array utilization will result in less leakage power and improved
 //! energy efficiency"). Compares energy per inference and TOPS/W across
 //! the four algorithms on ResNet18, with the NeuroSim-style component
-//! model in `energy/`.
+//! model in `energy/` — constants derived from the run's hardware
+//! profile ([`cimfab::energy::EnergyCfg::for_profile`]).
 
-use cimfab::alloc::Algorithm;
-use cimfab::config::ChipCfg;
 use cimfab::coordinator::{Driver, DriverOpts, StatsSource};
 use cimfab::energy::{energy_table, estimate, EnergyCfg};
+use cimfab::strategy::PAPER_ALGORITHMS;
 use cimfab::util::bench::{banner, Bencher};
 
 fn main() {
@@ -22,40 +22,41 @@ fn main() {
         profile_images: 2,
         sim_images: 8,
         seed: 7,
-        artifacts_dir: "artifacts".into(),
+        ..DriverOpts::default()
     })
     .unwrap();
     let pes = d.min_pes() * 2;
-    let chip = ChipCfg::paper(pes);
+    let chip = d.hw.chip_cfg(pes).unwrap();
+    let ecfg = EnergyCfg::for_profile(&d.hw).unwrap();
     let macs: u64 = d.map.grids.iter().map(|g| g.macs).sum();
 
     let mut b = Bencher::new(0, 2);
     let mut rows = Vec::new();
     let mut leak = Vec::new();
-    for alg in Algorithm::all() {
+    for name in PAPER_ALGORITHMS {
         let mut entry = None;
-        b.bench(&format!("simulate+energy {}", alg.name()), || {
-            let (plan, r) = d.run(alg, pes).unwrap();
-            let e = estimate(&EnergyCfg::default(), &chip, &d.map, &plan, &d.trace, &r);
+        b.bench(&format!("simulate+energy {name}"), || {
+            let (plan, r) = d.run_strategy(name, pes).unwrap();
+            let e = estimate(&ecfg, &chip, &d.map, &plan, &d.trace, &r);
             entry = Some(e);
         });
         let e = entry.unwrap();
-        leak.push((alg, e.leakage_uj / e.images as f64));
-        rows.push((alg.name().to_string(), e, macs));
+        leak.push((name, e.leakage_uj / e.images as f64));
+        rows.push((name.to_string(), e, macs));
     }
     println!("{}", energy_table(&rows).render());
 
-    let get = |alg: Algorithm| leak.iter().find(|(a, _)| *a == alg).unwrap().1;
+    let get = |name: &str| leak.iter().find(|(a, _)| *a == name).unwrap().1;
     println!(
         "leakage µJ/inf — weight-based {:.2}, perf-based {:.2}, block-wise {:.2}",
-        get(Algorithm::WeightBased),
-        get(Algorithm::PerfBased),
-        get(Algorithm::BlockWise)
+        get("weight-based"),
+        get("perf-based"),
+        get("block-wise")
     );
     println!(
         "paper §V shape check (higher utilization ⇒ less leakage/inf): {}",
-        if get(Algorithm::BlockWise) < get(Algorithm::WeightBased) { "PASS" } else { "FAIL" }
+        if get("block-wise") < get("weight-based") { "PASS" } else { "FAIL" }
     );
-    assert!(get(Algorithm::BlockWise) < get(Algorithm::WeightBased));
+    assert!(get("block-wise") < get("weight-based"));
     println!("\n{}", b.report());
 }

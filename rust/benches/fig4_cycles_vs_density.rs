@@ -25,7 +25,7 @@ fn main() {
                 profile_images: 2,
                 sim_images: 4,
                 seed: 7,
-                artifacts_dir: "artifacts".into(),
+                ..DriverOpts::default()
             })
             .unwrap(),
         );

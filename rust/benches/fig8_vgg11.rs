@@ -16,6 +16,7 @@ fn run_net(net: &str, hw: usize, steps: usize) -> Vec<(usize, f64)> {
     let spec = PrefixSpec {
         net: net.into(),
         hw,
+        hw_profile: cimfab::hw::DEFAULT_PROFILE.into(),
         stats: StatsSource::Synthetic,
         profile_images: 2,
         seed: 7,

@@ -21,6 +21,7 @@ fn main() {
     let spec = PrefixSpec {
         net: "resnet18".into(),
         hw: 64,
+        hw_profile: cimfab::hw::DEFAULT_PROFILE.into(),
         stats: StatsSource::Synthetic,
         profile_images: 2,
         seed: 7,

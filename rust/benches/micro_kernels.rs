@@ -4,13 +4,13 @@
 //! block-wise allocator, one stage simulation, and the pipeline
 //! recurrence.
 
-use cimfab::alloc::{allocate, Algorithm};
 use cimfab::config::{ArrayCfg, ChipCfg};
 use cimfab::dnn::resnet18;
 use cimfab::mapping::{map_network, place};
 use cimfab::sim::{simulate, SimCfg};
 use cimfab::stats::synth::{synth_activations, SynthCfg};
 use cimfab::stats::{trace_from_activations, NetworkProfile};
+use cimfab::strategy::StrategyRegistry;
 use cimfab::tensor::{im2col_u8, Im2colSpec, Tensor};
 use cimfab::util::bench::{banner, Bencher};
 use cimfab::util::bitops;
@@ -63,12 +63,13 @@ fn main() {
 
     // --- allocator ----------------------------------------------------------
     let chip = ChipCfg::paper(344);
+    let block_wise = StrategyRegistry::lookup_allocator("block-wise").unwrap();
     b.bench("block-wise allocator (247 blocks, 22k arrays)", || {
-        allocate(Algorithm::BlockWise, &map, &prof, chip.total_arrays()).unwrap()
+        block_wise.allocate(&map, &prof, chip.total_arrays()).unwrap()
     });
 
     // --- full simulation -----------------------------------------------------
-    let plan = allocate(Algorithm::BlockWise, &map, &prof, chip.total_arrays()).unwrap();
+    let plan = block_wise.allocate(&map, &prof, chip.total_arrays()).unwrap();
     let placement = place(&map, &plan, &chip).unwrap();
     b.bench("simulate resnet18@64 block-wise, 8 images", || {
         simulate(
@@ -77,7 +78,7 @@ fn main() {
             &plan,
             &placement,
             &trace,
-            SimCfg::for_algorithm(Algorithm::BlockWise, 8),
+            SimCfg::for_strategy_name("block-wise", 8).unwrap(),
         )
     });
     b.bench("simulate resnet18@64 layer-wise, 8 images", || {
@@ -87,7 +88,7 @@ fn main() {
             &plan_layerwise(&map, &prof, &chip),
             &place(&map, &plan_layerwise(&map, &prof, &chip), &chip).unwrap(),
             &trace,
-            SimCfg::for_algorithm(Algorithm::PerfBased, 8),
+            SimCfg::for_strategy_name("perf-based", 8).unwrap(),
         )
     });
 
@@ -99,5 +100,8 @@ fn plan_layerwise(
     prof: &NetworkProfile,
     chip: &ChipCfg,
 ) -> cimfab::mapping::AllocationPlan {
-    allocate(Algorithm::PerfBased, map, prof, chip.total_arrays()).unwrap()
+    StrategyRegistry::lookup_allocator("perf-based")
+        .unwrap()
+        .allocate(map, prof, chip.total_arrays())
+        .unwrap()
 }

@@ -22,9 +22,9 @@
 //! [`crate::strategy::StrategyRegistry`]; adding one means implementing
 //! [`Allocator`] and registering it — no enum to extend, no `match`
 //! arms to chase (see the README's "Adding a new allocation strategy").
-//! The closed [`Algorithm`] enum survives only as a deprecated shim that
-//! delegates into the registry; new code should resolve strategies by
-//! name.
+//! (The closed `Algorithm` enum shim that once mirrored the registry
+//! was removed after its promised one-release lifetime; resolve
+//! strategies by name.)
 
 pub mod builtin;
 pub mod greedy;
@@ -92,94 +92,15 @@ pub fn finish_plan(
     Ok(plan)
 }
 
-/// The four algorithms compared in the paper's evaluation (Figs 8 & 9).
-///
-/// **Deprecated shim** — kept for one release so pre-registry callers
-/// keep compiling; every method delegates into
-/// [`crate::strategy::StrategyRegistry`]. New code should look
-/// allocators up by name instead.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Algorithm {
-    /// Weight-based allocation, zero-skipping disabled.
-    Baseline,
-    /// Weight-based allocation + zero-skipping.
-    WeightBased,
-    /// Performance-based layer-wise allocation + zero-skipping.
-    PerfBased,
-    /// Block-wise allocation + block-wise dataflow (the contribution).
-    BlockWise,
-}
-
-impl Algorithm {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Algorithm::Baseline => "baseline",
-            Algorithm::WeightBased => "weight-based",
-            Algorithm::PerfBased => "perf-based",
-            Algorithm::BlockWise => "block-wise",
-        }
-    }
-
-    pub fn all() -> [Algorithm; 4] {
-        [Algorithm::Baseline, Algorithm::WeightBased, Algorithm::PerfBased, Algorithm::BlockWise]
-    }
-
-    /// The registry entry this enum variant names.
-    pub fn strategy(&self) -> &'static dyn Allocator {
-        crate::strategy::StrategyRegistry::lookup_allocator(self.name())
-            .expect("paper algorithms are always registered")
-    }
-
-    /// The registry dataflow model this variant's strategy defaults to.
-    pub fn dataflow_model(&self) -> &'static dyn crate::sim::DataflowModel {
-        crate::strategy::StrategyRegistry::lookup_dataflow(self.strategy().default_dataflow())
-            .expect("built-in dataflows are always registered")
-    }
-
-    /// Does this algorithm run with zero-skipping?
-    pub fn zero_skip(&self) -> bool {
-        self.strategy().read_mode() == ReadMode::ZeroSkip
-    }
-
-    /// Does this algorithm use the block-wise dataflow?
-    pub fn blockwise_dataflow(&self) -> bool {
-        self.strategy().default_dataflow() == "block-wise"
-    }
-
-    pub fn parse(s: &str) -> Option<Algorithm> {
-        match s {
-            "baseline" => Some(Algorithm::Baseline),
-            "weight-based" | "weight" => Some(Algorithm::WeightBased),
-            "perf-based" | "perf" => Some(Algorithm::PerfBased),
-            "block-wise" | "block" => Some(Algorithm::BlockWise),
-            _ => None,
-        }
-    }
-}
-
-/// Allocate `budget_arrays` arrays across `map` using `alg`.
-///
-/// **Deprecated shim** — delegates to the registry entry named by the
-/// enum; equivalent to
-/// `StrategyRegistry::lookup_allocator(alg.name())?.allocate(..)`.
-pub fn allocate(
-    alg: Algorithm,
-    map: &NetworkMap,
-    profile: &NetworkProfile,
-    budget_arrays: usize,
-) -> crate::Result<AllocationPlan> {
-    alg.strategy().allocate(map, profile, budget_arrays)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::ArrayCfg;
     use crate::dnn::resnet18;
     use crate::mapping::map_network;
-    use crate::sim::DataflowModel;
     use crate::stats::synth::{synth_activations, SynthCfg};
     use crate::stats::trace_from_activations;
+    use crate::strategy::{StrategyRegistry, PAPER_ALGORITHMS};
 
     fn setup() -> (NetworkMap, NetworkProfile) {
         let g = resnet18(32, 10);
@@ -190,14 +111,18 @@ mod tests {
         (map, prof)
     }
 
+    fn allocator(name: &str) -> &'static dyn Allocator {
+        StrategyRegistry::lookup_allocator(name).unwrap()
+    }
+
     #[test]
     fn all_algorithms_produce_valid_plans() {
         let (map, prof) = setup();
         let budget = map.min_arrays() * 2;
-        for alg in Algorithm::all() {
-            let plan = allocate(alg, &map, &prof, budget).unwrap();
+        for name in PAPER_ALGORITHMS {
+            let plan = allocator(name).allocate(&map, &prof, budget).unwrap();
             plan.validate(&map, budget).unwrap();
-            assert_eq!(plan.algorithm, alg.name());
+            assert_eq!(plan.algorithm, name);
         }
     }
 
@@ -205,24 +130,24 @@ mod tests {
     fn layerwise_plans_are_uniform_within_layers() {
         let (map, prof) = setup();
         let budget = map.min_arrays() * 3;
-        for alg in [Algorithm::Baseline, Algorithm::WeightBased, Algorithm::PerfBased] {
-            let plan = allocate(alg, &map, &prof, budget).unwrap();
-            assert!(plan.is_layerwise(), "{} plan not layer-uniform", alg.name());
-            assert!(alg.strategy().uniform_plans());
+        for name in ["baseline", "weight-based", "perf-based"] {
+            let plan = allocator(name).allocate(&map, &prof, budget).unwrap();
+            assert!(plan.is_layerwise(), "{name} plan not layer-uniform");
+            assert!(allocator(name).uniform_plans());
         }
-        assert!(!Algorithm::BlockWise.strategy().uniform_plans());
+        assert!(!allocator("block-wise").uniform_plans());
     }
 
     #[test]
     fn insufficient_budget_is_error() {
         let (map, prof) = setup();
-        assert!(allocate(Algorithm::BlockWise, &map, &prof, map.min_arrays() - 1).is_err());
+        assert!(allocator("block-wise").allocate(&map, &prof, map.min_arrays() - 1).is_err());
     }
 
     #[test]
     fn exact_min_budget_gives_minimal_plan() {
         let (map, prof) = setup();
-        let plan = allocate(Algorithm::BlockWise, &map, &prof, map.min_arrays()).unwrap();
+        let plan = allocator("block-wise").allocate(&map, &prof, map.min_arrays()).unwrap();
         assert_eq!(plan.arrays_used(&map), map.min_arrays());
         for d in &plan.duplicates {
             assert!(d.iter().all(|&x| x == 1));
@@ -233,7 +158,7 @@ mod tests {
     fn blockwise_balances_per_block_latency() {
         let (map, prof) = setup();
         let budget = map.min_arrays() * 4;
-        let plan = allocate(Algorithm::BlockWise, &map, &prof, budget).unwrap();
+        let plan = allocator("block-wise").allocate(&map, &prof, budget).unwrap();
         // effective latency of the slowest block must be within 2x of the
         // fastest *granted* block (greedy water-filling property), taken
         // over blocks with meaningful work.
@@ -254,8 +179,8 @@ mod tests {
     #[test]
     fn more_budget_never_reduces_duplicates_total() {
         let (map, prof) = setup();
-        let a = allocate(Algorithm::BlockWise, &map, &prof, map.min_arrays() * 2).unwrap();
-        let b = allocate(Algorithm::BlockWise, &map, &prof, map.min_arrays() * 3).unwrap();
+        let a = allocator("block-wise").allocate(&map, &prof, map.min_arrays() * 2).unwrap();
+        let b = allocator("block-wise").allocate(&map, &prof, map.min_arrays() * 3).unwrap();
         let total = |p: &crate::mapping::AllocationPlan| -> usize {
             p.duplicates.iter().flat_map(|d| d.iter()).sum()
         };
@@ -263,22 +188,10 @@ mod tests {
     }
 
     #[test]
-    fn algorithm_parse_roundtrip() {
-        for alg in Algorithm::all() {
-            assert_eq!(Algorithm::parse(alg.name()), Some(alg));
-        }
-        assert_eq!(Algorithm::parse("nope"), None);
-    }
-
-    #[test]
-    fn enum_shim_matches_registry_traits() {
-        assert!(!Algorithm::Baseline.zero_skip());
-        assert!(Algorithm::WeightBased.zero_skip());
-        assert!(Algorithm::BlockWise.blockwise_dataflow());
-        assert!(!Algorithm::PerfBased.blockwise_dataflow());
-        for alg in Algorithm::all() {
-            assert_eq!(alg.strategy().name(), alg.name());
-            assert_eq!(alg.dataflow_model().name(), alg.strategy().default_dataflow());
-        }
+    fn registry_traits_expose_the_paper_semantics() {
+        assert_eq!(allocator("baseline").read_mode(), ReadMode::Baseline);
+        assert_eq!(allocator("weight-based").read_mode(), ReadMode::ZeroSkip);
+        assert_eq!(allocator("block-wise").default_dataflow(), "block-wise");
+        assert_eq!(allocator("perf-based").default_dataflow(), "layer-wise");
     }
 }

@@ -1,10 +1,20 @@
-//! Chip / PE / array configuration.
+//! Chip / PE / array configuration — the *lowered* operating point.
 //!
 //! Mirrors the paper's simulator inputs (§V): "the PE-level configuration
 //! includes details like the precision of each ADC and size of the
 //! sub-array. The chip-level configuration contains the number of PEs and
 //! details about array allocation and mapping." Configurations load/save
 //! as JSON via [`crate::util::json`].
+//!
+//! Since the hardware description API landed, these flat structs are the
+//! *derived* form a [`crate::hw::HwProfile`] lowers into: `adc_bits`
+//! comes from the device's variance budget, `cell_bits` from the device
+//! model. Construct them through a profile
+//! ([`crate::hw::HwProfile::array_cfg`] / [`chip_cfg`][hwc]) rather than
+//! by hand; [`ArrayCfg::paper`] / [`ChipCfg::paper`] survive as
+//! deprecated shims resolving the `rram-128` profile.
+//!
+//! [hwc]: crate::hw::HwProfile::chip_cfg
 
 use crate::util::json::Json;
 
@@ -39,17 +49,15 @@ pub struct ArrayCfg {
 
 impl ArrayCfg {
     /// The paper's operating point.
+    ///
+    /// **Deprecated shim** — resolves the `rram-128` profile through
+    /// [`crate::hw::ProfileRegistry`] and lowers it (bit-identical to
+    /// the historical literal constants, pinned by the `hw_profiles`
+    /// parity test). New code should name a profile instead.
     pub fn paper() -> ArrayCfg {
-        ArrayCfg {
-            rows: 128,
-            cols: 128,
-            weight_bits: 8,
-            input_bits: 8,
-            adc_bits: 3,
-            col_mux: 8,
-            skip_empty_planes: true,
-            cell_bits: 1,
-        }
+        crate::hw::ProfileRegistry::lookup(crate::hw::DEFAULT_PROFILE)
+            .and_then(|p| p.array_cfg())
+            .expect("the built-in rram-128 profile is always valid")
     }
 
     /// Rows read per ADC sample.
@@ -57,11 +65,64 @@ impl ArrayCfg {
         1 << self.adc_bits
     }
 
+    /// Checked constructive constraints — what the old `assert!`s
+    /// enforced, as errors. Called on every JSON load and by
+    /// [`crate::hw::ArraySpec::lower`], so invalid geometry surfaces
+    /// through [`crate::pipeline::ScenarioBuilder`] instead of
+    /// panicking mid-run.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.rows >= 1 && self.cols >= 1,
+            "array geometry must be nonzero, got {}x{}",
+            self.rows,
+            self.cols
+        );
+        anyhow::ensure!(
+            (1..=8).contains(&self.input_bits),
+            "input_bits must be in 1..=8 (bit-serial u8 datapath), got {}",
+            self.input_bits
+        );
+        anyhow::ensure!(
+            (1..=10).contains(&self.adc_bits),
+            "adc_bits must be in 1..=10, got {}",
+            self.adc_bits
+        );
+        anyhow::ensure!(
+            self.cell_bits >= 1 && self.weight_bits >= 1,
+            "weight and cell widths must be nonzero"
+        );
+        anyhow::ensure!(
+            self.weight_bits % self.cell_bits == 0,
+            "weight_bits {} not divisible by cell_bits {}",
+            self.weight_bits,
+            self.cell_bits
+        );
+        anyhow::ensure!(
+            self.cols % (self.weight_bits / self.cell_bits) == 0,
+            "cols {} not divisible by the {} cells per weight",
+            self.cols,
+            self.weight_bits / self.cell_bits
+        );
+        anyhow::ensure!(
+            self.col_mux >= 1 && self.cols % self.col_mux == 0,
+            "cols {} not divisible by col_mux {}",
+            self.cols,
+            self.col_mux
+        );
+        Ok(())
+    }
+
     /// Physical cells (columns) per stored weight.
+    ///
+    /// Divisibility is a [`ArrayCfg::validate`] invariant: every
+    /// supported construction path (profile lowering, JSON loads, the
+    /// scenario builder) surfaces the violation as a `Result` long
+    /// before this is called. The assert remains only as a loud
+    /// backstop for hand-built configs that bypassed validation.
     pub fn cells_per_weight(&self) -> usize {
         assert!(
             self.weight_bits % self.cell_bits == 0,
-            "weight_bits {} not divisible by cell_bits {}",
+            "weight_bits {} not divisible by cell_bits {} — validate() was skipped",
             self.weight_bits,
             self.cell_bits
         );
@@ -103,7 +164,7 @@ impl ArrayCfg {
 
     pub fn from_json(j: &Json) -> crate::Result<ArrayCfg> {
         let d = ArrayCfg::paper();
-        Ok(ArrayCfg {
+        let cfg = ArrayCfg {
             rows: j.get("rows").as_usize().unwrap_or(d.rows),
             cols: j.get("cols").as_usize().unwrap_or(d.cols),
             weight_bits: j.get("weight_bits").as_usize().unwrap_or(d.weight_bits),
@@ -112,7 +173,9 @@ impl ArrayCfg {
             col_mux: j.get("col_mux").as_usize().unwrap_or(d.col_mux),
             skip_empty_planes: j.get("skip_empty_planes").as_bool().unwrap_or(true),
             cell_bits: j.get("cell_bits").as_usize().unwrap_or(d.cell_bits),
-        })
+        };
+        cfg.validate()?;
+        Ok(cfg)
     }
 }
 
@@ -139,20 +202,14 @@ pub struct ChipCfg {
 
 impl ChipCfg {
     /// Paper defaults at a given PE count (paper sweeps 86.. for ResNet18).
+    ///
+    /// **Deprecated shim** — resolves the `rram-128` profile through
+    /// [`crate::hw::ProfileRegistry`] and lowers it at `pes` PEs. New
+    /// code should name a profile ([`crate::hw::HwProfile::chip_cfg`]).
     pub fn paper(pes: usize) -> ChipCfg {
-        ChipCfg {
-            pes,
-            arrays_per_pe: 64,
-            clock_hz: 100e6,
-            array: ArrayCfg::paper(),
-            // one 128-row slice of 8-bit features
-            feature_packet_bytes: 128,
-            // 16 32-bit partial sums
-            psum_packet_bytes: 64,
-            link_bytes_per_cycle: 32,
-            router_latency: 1,
-            pipeline_images: 8,
-        }
+        crate::hw::ProfileRegistry::lookup(crate::hw::DEFAULT_PROFILE)
+            .and_then(|p| p.chip_cfg(pes))
+            .expect("the built-in rram-128 profile is always valid (pes >= 1)")
     }
 
     pub fn total_arrays(&self) -> usize {
@@ -257,5 +314,27 @@ mod tests {
     fn missing_pes_is_error() {
         let j = Json::parse("{}").unwrap();
         assert!(ChipCfg::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn invalid_geometry_is_an_error_not_a_panic() {
+        let mut a = ArrayCfg::paper();
+        assert!(a.validate().is_ok());
+        a.cell_bits = 3; // 8 % 3 != 0
+        assert!(a.validate().is_err());
+        assert!(ArrayCfg::from_json(&a.to_json()).is_err());
+        let mut a = ArrayCfg::paper();
+        a.col_mux = 7;
+        assert!(a.validate().is_err());
+        let mut a = ArrayCfg::paper();
+        a.rows = 0;
+        assert!(a.validate().is_err());
+    }
+
+    #[test]
+    fn paper_shims_match_the_rram_128_profile() {
+        let p = crate::hw::ProfileRegistry::lookup("rram-128").unwrap();
+        assert_eq!(ArrayCfg::paper(), p.array_cfg().unwrap());
+        assert_eq!(ChipCfg::paper(86), p.chip_cfg(86).unwrap());
     }
 }

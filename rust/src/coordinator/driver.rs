@@ -9,7 +9,6 @@
 //! directly — it shares the prepared prefix across scenarios and runs
 //! them on a worker pool.
 
-use crate::alloc::Algorithm;
 use crate::mapping::AllocationPlan;
 use crate::pipeline::{self, PrefixSpec, PreparedView, Scenario, ScenarioBuilder};
 use crate::sim::SimResult;
@@ -22,8 +21,12 @@ pub use crate::pipeline::StatsSource;
 #[derive(Debug, Clone)]
 pub struct DriverOpts {
     pub net: String,
-    /// Input resolution (must match the artifact when `Golden`).
+    /// Input resolution — the CLI's `--res` (must match the artifact
+    /// when `Golden`). Not the hardware profile; that is `hw_profile`.
     pub hw: usize,
+    /// Hardware profile name/alias or profile-JSON path
+    /// ([`crate::hw::ProfileRegistry::resolve`]).
+    pub hw_profile: String,
     pub stats: StatsSource,
     /// Images used for profiling statistics.
     pub profile_images: usize,
@@ -38,6 +41,7 @@ impl Default for DriverOpts {
         DriverOpts {
             net: "resnet18".into(),
             hw: 64,
+            hw_profile: crate::hw::DEFAULT_PROFILE.into(),
             stats: StatsSource::Synthetic,
             profile_images: 2,
             sim_images: 8,
@@ -53,6 +57,7 @@ impl DriverOpts {
         PrefixSpec {
             net: self.net.clone(),
             hw: self.hw,
+            hw_profile: self.hw_profile.clone(),
             stats: self.stats,
             profile_images: self.profile_images,
             seed: self.seed,
@@ -65,6 +70,8 @@ impl DriverOpts {
 /// allocation/simulation choices.
 pub struct Driver {
     pub opts: DriverOpts,
+    /// The resolved hardware profile everything below was built with.
+    pub hw: crate::hw::HwProfile,
     pub graph: crate::dnn::Graph,
     pub map: crate::mapping::NetworkMap,
     pub trace: crate::stats::NetTrace,
@@ -78,6 +85,7 @@ impl Driver {
         let prep = pipeline::prepare(&opts.prefix_spec(), None)?;
         Ok(Driver {
             opts,
+            hw: prep.hw,
             graph: prep.graph,
             map: prep.map,
             trace: prep.trace,
@@ -86,7 +94,7 @@ impl Driver {
     }
 
     fn view(&self) -> PreparedView<'_> {
-        PreparedView { map: &self.map, trace: &self.trace, profile: &self.profile }
+        PreparedView { hw: &self.hw, map: &self.map, trace: &self.trace, profile: &self.profile }
     }
 
     /// A [`ScenarioBuilder`] seeded with these options' prefix and
@@ -108,11 +116,6 @@ impl Driver {
         Ok((out.plan, out.result))
     }
 
-    /// **Deprecated shim** — enum front end for [`Driver::run_strategy`].
-    pub fn run(&self, alg: Algorithm, pes: usize) -> Result<(AllocationPlan, SimResult)> {
-        self.run_strategy(alg.name(), pes)
-    }
-
     /// Run all four paper algorithms at one design size; results are
     /// keyed by strategy name, in the Figs 8/9 series order.
     pub fn run_all(&self, pes: usize) -> Result<Vec<(String, SimResult)>> {
@@ -123,9 +126,9 @@ impl Driver {
     }
 
     /// Minimum PEs that fit one copy of the network (paper: 86 for
-    /// ResNet18).
+    /// ResNet18 at the `rram-128` profile).
     pub fn min_pes(&self) -> usize {
-        pipeline::min_pes_of(&self.map)
+        pipeline::min_pes_of(&self.map, self.hw.chip.arrays_per_pe)
     }
 
     /// The paper's design-size sweep: half-powers of two from the
@@ -236,11 +239,20 @@ mod tests {
     }
 
     #[test]
-    fn enum_shim_matches_strategy_path() {
-        let d = synth_driver("resnet18");
-        let (_, via_enum) = d.run(Algorithm::BlockWise, 172).unwrap();
-        let (_, via_name) = d.run_strategy("block-wise", 172).unwrap();
-        assert_eq!(via_enum.makespan, via_name.makespan);
+    fn hardware_profile_threads_through_the_driver() {
+        let d = Driver::prepare(DriverOpts {
+            net: "resnet18".into(),
+            hw: 32,
+            hw_profile: "sram-128".into(),
+            profile_images: 1,
+            sim_images: 4,
+            ..DriverOpts::default()
+        })
+        .unwrap();
+        assert_eq!(d.hw.name, "sram-128");
+        assert_eq!(d.map.array.adc_bits, 6, "SRAM reads 64 rows per sample");
+        let (_, r) = d.run_strategy("block-wise", d.min_pes() * 2).unwrap();
+        assert!(r.throughput_ips > 0.0);
     }
 
     #[test]

@@ -40,6 +40,8 @@ pub struct EnergyCfg {
 }
 
 impl Default for EnergyCfg {
+    /// The `rram-128` constants — identical to
+    /// [`EnergyCfg::for_profile`] at the paper's operating point.
     fn default() -> EnergyCfg {
         EnergyCfg {
             adc_sample_pj: 0.25,
@@ -51,6 +53,28 @@ impl Default for EnergyCfg {
             // 32 nm (NeuroSim-scale); 5,472 arrays ⇒ ~5.5 mW chip leakage.
             array_leak_pw: 1_000_000.0,
         }
+    }
+}
+
+impl EnergyCfg {
+    /// Constants derived from a hardware profile's device model: word-line
+    /// drive energy and leakage come from the
+    /// [`crate::hw::DeviceModel`]; the ADC sample energy scales with the
+    /// derived precision (~2^bits, like its area); the NoC/buffer/vector
+    /// constants are peripheral and technology-shared. At `rram-128`
+    /// this reproduces [`EnergyCfg::default`] exactly.
+    pub fn for_profile(p: &crate::hw::HwProfile) -> crate::Result<EnergyCfg> {
+        let shared = EnergyCfg::default();
+        let adc_bits = p.adc_bits()?;
+        Ok(EnergyCfg {
+            adc_sample_pj: shared.adc_sample_pj * (1u64 << adc_bits) as f64
+                / (1u64 << 3) as f64,
+            row_drive_pj: p.device.read_energy_pj(),
+            noc_byte_hop_pj: shared.noc_byte_hop_pj,
+            sram_byte_pj: shared.sram_byte_pj,
+            vector_acc_pj: shared.vector_acc_pj,
+            array_leak_pw: p.device.leakage_pw(),
+        })
     }
 }
 
@@ -176,7 +200,6 @@ pub fn energy_table(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::alloc::{allocate, Algorithm};
     use crate::config::ArrayCfg;
     use crate::coordinator::{Driver, DriverOpts, StatsSource};
     use crate::dnn::resnet18;
@@ -184,24 +207,28 @@ mod tests {
     use crate::sim::{simulate, SimCfg};
     use crate::stats::synth::{synth_activations, SynthCfg};
     use crate::stats::{trace_from_activations, NetworkProfile};
+    use crate::strategy::StrategyRegistry;
 
-    fn run(alg: Algorithm) -> (EnergyReport, f64) {
+    fn run(alloc: &str) -> (EnergyReport, f64) {
         let g = resnet18(32, 10);
         let map = map_network(&g, ArrayCfg::paper(), false);
         let acts = synth_activations(&g, &map, 1, 3, SynthCfg::default());
         let trace = trace_from_activations(&g, &map, &acts);
         let prof = NetworkProfile::from_trace(&map, &trace);
         let chip = ChipCfg::paper(172);
-        let plan = allocate(alg, &map, &prof, chip.total_arrays()).unwrap();
+        let a = StrategyRegistry::lookup_allocator(alloc).unwrap();
+        let flow = StrategyRegistry::lookup_dataflow(a.default_dataflow()).unwrap();
+        let plan = a.allocate(&map, &prof, chip.total_arrays()).unwrap();
         let placement = place(&map, &plan, &chip).unwrap();
-        let r = simulate(&chip, &map, &plan, &placement, &trace, SimCfg::for_algorithm(alg, 6));
+        let r =
+            simulate(&chip, &map, &plan, &placement, &trace, SimCfg::for_strategy(a, flow, 6));
         let e = estimate(&EnergyCfg::default(), &chip, &map, &plan, &trace, &r);
         (e, r.throughput_ips)
     }
 
     #[test]
     fn all_components_positive() {
-        let (e, _) = run(Algorithm::BlockWise);
+        let (e, _) = run("block-wise");
         assert!(e.adc_uj > 0.0);
         assert!(e.rows_uj > 0.0);
         assert!(e.noc_uj > 0.0);
@@ -217,8 +244,8 @@ mod tests {
         // The paper's §V claim, quantified: block-wise (highest
         // utilization) spends less leakage energy per inference than
         // weight-based (lowest).
-        let (bw, _) = run(Algorithm::BlockWise);
-        let (wb, _) = run(Algorithm::WeightBased);
+        let (bw, _) = run("block-wise");
+        let (wb, _) = run("weight-based");
         let leak_per_inf = |e: &EnergyReport| e.leakage_uj / e.images as f64;
         assert!(
             leak_per_inf(&bw) < leak_per_inf(&wb),
@@ -232,8 +259,8 @@ mod tests {
     fn compute_energy_is_allocation_independent() {
         // ADC + word-line work is a property of the workload, not the
         // allocation (duplicates split patches, they don't re-read them).
-        let (a, _) = run(Algorithm::BlockWise);
-        let (b, _) = run(Algorithm::PerfBased);
+        let (a, _) = run("block-wise");
+        let (b, _) = run("perf-based");
         let compute = |e: &EnergyReport| e.adc_uj + e.rows_uj;
         let rel = (compute(&a) - compute(&b)).abs() / compute(&a);
         assert!(rel < 1e-6, "compute energy diverged {rel}");
@@ -245,7 +272,7 @@ mod tests {
         // the default constants put us there.
         let g = resnet18(32, 10);
         let macs: u64 = g.conv_layers().iter().map(|(_, l)| l.macs()).sum();
-        let (e, _) = run(Algorithm::BlockWise);
+        let (e, _) = run("block-wise");
         let eff = e.tops_per_watt(macs);
         assert!((0.1..1000.0).contains(&eff), "TOPS/W {eff} out of range");
     }
@@ -259,12 +286,29 @@ mod tests {
             profile_images: 1,
             sim_images: 4,
             seed: 5,
-            artifacts_dir: "artifacts".into(),
+            ..DriverOpts::default()
         })
         .unwrap();
-        let (plan, r) = d.run(Algorithm::BlockWise, d.min_pes() * 2).unwrap();
+        let (plan, r) = d.run_strategy("block-wise", d.min_pes() * 2).unwrap();
         let chip = ChipCfg::paper(d.min_pes() * 2);
         let e = estimate(&EnergyCfg::default(), &chip, &d.map, &plan, &d.trace, &r);
         assert!(e.total_uj() > 0.0);
+    }
+
+    #[test]
+    fn profile_constants_track_the_device() {
+        use crate::hw::HwProfile;
+        // the paper point reproduces the historical defaults exactly
+        let rram = EnergyCfg::for_profile(&HwProfile::rram_128()).unwrap();
+        let d = EnergyCfg::default();
+        assert_eq!(rram.adc_sample_pj, d.adc_sample_pj);
+        assert_eq!(rram.row_drive_pj, d.row_drive_pj);
+        assert_eq!(rram.array_leak_pw, d.array_leak_pw);
+        // narrower PCRAM ADCs sample cheaper; wider SRAM ADCs cost more
+        let pcram = EnergyCfg::for_profile(&HwProfile::pcram_128()).unwrap();
+        let sram = EnergyCfg::for_profile(&HwProfile::sram_128()).unwrap();
+        assert!(pcram.adc_sample_pj < rram.adc_sample_pj);
+        assert!(sram.adc_sample_pj > rram.adc_sample_pj);
+        assert!(sram.array_leak_pw > rram.array_leak_pw, "SRAM leaks");
     }
 }

@@ -1,0 +1,207 @@
+//! Cell-technology device models.
+//!
+//! The paper fixes one technology — binary RRAM with "5% device-to-device
+//! variance [4], and thus at most 8 rows (3-bit) can be read at once" —
+//! but §II notes the techniques extend to other eNVM cells, and the
+//! co-design literature (PAPERS.md) surveys how RRAM / PCRAM / SRAM
+//! differ on exactly these axes: bits per cell, device variance, read and
+//! write energy, retention/leakage. [`DeviceModel`] captures those axes
+//! behind a trait so a hardware profile ([`super::HwProfile`]) can
+//! *derive* its operating point (rows per ADC read, energy constants)
+//! from the device instead of hardcoding the paper's numbers.
+//!
+//! Built-ins: [`RRAM`] (the paper's operating point), [`PCRAM`]
+//! (denser multi-level cells, higher variance ⇒ fewer rows per read),
+//! [`SRAM`] (deterministic digital cells ⇒ reads limited only by the ADC
+//! area budget, but leaky and volatile). Downstream crates register
+//! their own via [`super::ProfileRegistry::register_global_device`].
+
+/// A storage-cell technology: everything about the *device* (as opposed
+/// to the array geometry or the chip organization) that the simulator
+/// and the energy model consume.
+///
+/// Implementations must be `'static` (like
+/// [`crate::alloc::Allocator`] strategies) so registry lookups hand out
+/// `Copy` references.
+pub trait DeviceModel: Send + Sync {
+    /// Registry key (kebab-case), e.g. `"rram"`.
+    fn name(&self) -> &str;
+
+    /// One-line human description for `cimfab list-hw`.
+    fn describe(&self) -> &str;
+
+    /// Bits stored per cell. An 8-bit weight spans
+    /// `weight_bits / cell_bits()` physical columns
+    /// ([`crate::config::ArrayCfg::cells_per_weight`]).
+    fn cell_bits(&self) -> usize;
+
+    /// Device-to-device relative deviation of the cell on-current
+    /// (the paper's 5% for state-of-the-art RRAM). Together with the
+    /// profile's bit-error budget this *determines* how many rows one
+    /// ADC sample may cover ([`crate::xbar::variance::derive_adc_bits`]).
+    fn variance(&self) -> f64;
+
+    /// Energy to drive one word line for one read batch (picojoules).
+    fn read_energy_pj(&self) -> f64;
+
+    /// Energy to program one cell (picojoules). Reported by `list-hw`;
+    /// inference-time simulation never writes.
+    fn write_energy_pj(&self) -> f64;
+
+    /// Cell programming latency (nanoseconds). Reported by `list-hw`.
+    fn write_latency_ns(&self) -> f64;
+
+    /// Leakage power per allocated array (picowatts), peripheral logic
+    /// and (for volatile cells) the cells themselves.
+    fn leakage_pw(&self) -> f64;
+
+    /// Does the cell lose state on power-down (SRAM) or retain it
+    /// (eNVM)?
+    fn volatile(&self) -> bool {
+        false
+    }
+}
+
+/// Binary RRAM — the paper's technology (§II–§III-A). 5% variance caps
+/// lossless reads at 8 rows / 3 ADC bits; constants match the NeuroSim-
+/// scale defaults the energy model has always used, so the `rram-128`
+/// profile reproduces the pre-profile pipeline bit-for-bit.
+pub struct Rram;
+
+/// The `rram` built-in.
+pub static RRAM: Rram = Rram;
+
+impl DeviceModel for Rram {
+    fn name(&self) -> &str {
+        "rram"
+    }
+    fn describe(&self) -> &str {
+        "binary RRAM, 5% on-current variance (the paper's cell [4])"
+    }
+    fn cell_bits(&self) -> usize {
+        1
+    }
+    fn variance(&self) -> f64 {
+        0.05
+    }
+    fn read_energy_pj(&self) -> f64 {
+        0.04
+    }
+    fn write_energy_pj(&self) -> f64 {
+        10.0
+    }
+    fn write_latency_ns(&self) -> f64 {
+        100.0
+    }
+    fn leakage_pw(&self) -> f64 {
+        1_000_000.0
+    }
+}
+
+/// Multi-level PCRAM: two bits per cell halve the array count, but the
+/// larger programmed-resistance spread (10%) halves the rows one ADC
+/// sample may cover (2 rows / 1 bit at the default error budget).
+pub struct Pcram;
+
+/// The `pcram` built-in.
+pub static PCRAM: Pcram = Pcram;
+
+impl DeviceModel for Pcram {
+    fn name(&self) -> &str {
+        "pcram"
+    }
+    fn describe(&self) -> &str {
+        "2-bit/cell PCRAM: denser, but 10% variance halves rows per read"
+    }
+    fn cell_bits(&self) -> usize {
+        2
+    }
+    fn variance(&self) -> f64 {
+        0.10
+    }
+    fn read_energy_pj(&self) -> f64 {
+        0.06
+    }
+    fn write_energy_pj(&self) -> f64 {
+        25.0
+    }
+    fn write_latency_ns(&self) -> f64 {
+        150.0
+    }
+    fn leakage_pw(&self) -> f64 {
+        800_000.0
+    }
+}
+
+/// SRAM compute-in-memory: effectively deterministic cells (0.2% current
+/// mismatch), so rows per read are limited only by the profile's ADC
+/// area budget — at the cost of 6T cell area, leakage, and volatility.
+pub struct Sram;
+
+/// The `sram` built-in.
+pub static SRAM: Sram = Sram;
+
+impl DeviceModel for Sram {
+    fn name(&self) -> &str {
+        "sram"
+    }
+    fn describe(&self) -> &str {
+        "6T SRAM CIM: near-deterministic reads, leaky and volatile"
+    }
+    fn cell_bits(&self) -> usize {
+        1
+    }
+    fn variance(&self) -> f64 {
+        0.002
+    }
+    fn read_energy_pj(&self) -> f64 {
+        0.02
+    }
+    fn write_energy_pj(&self) -> f64 {
+        0.05
+    }
+    fn write_latency_ns(&self) -> f64 {
+        1.0
+    }
+    fn leakage_pw(&self) -> f64 {
+        5_000_000.0
+    }
+    fn volatile(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_devices_have_distinct_names_and_sane_constants() {
+        let devices: [&dyn DeviceModel; 3] = [&RRAM, &PCRAM, &SRAM];
+        let mut names: Vec<&str> = devices.iter().map(|d| d.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 3);
+        for d in devices {
+            assert!(d.cell_bits() >= 1);
+            assert!(d.variance() >= 0.0);
+            assert!(d.read_energy_pj() > 0.0);
+            assert!(d.write_energy_pj() > 0.0);
+            assert!(d.leakage_pw() > 0.0);
+        }
+    }
+
+    #[test]
+    fn rram_matches_the_paper_operating_point() {
+        assert_eq!(RRAM.cell_bits(), 1);
+        assert!((RRAM.variance() - 0.05).abs() < 1e-12);
+        assert!(!RRAM.volatile());
+    }
+
+    #[test]
+    fn only_sram_is_volatile() {
+        assert!(SRAM.volatile());
+        assert!(!RRAM.volatile());
+        assert!(!PCRAM.volatile());
+    }
+}

@@ -1,0 +1,38 @@
+//! Hardware description API: device models + named, loadable profiles.
+//!
+//! The paper evaluates one operating point — 128×128 binary-RRAM arrays
+//! whose 5% device variance caps ADC reads at 8 rows (3 bits) — but that
+//! point is a *derived consequence* of the cell technology, not a
+//! constant. This module makes the derivation explicit and the
+//! technology swappable:
+//!
+//! * [`DeviceModel`] (trait) — the cell: bits/cell, variance, read/write
+//!   energy and latency, leakage. Built-ins: [`device::RRAM`] (the
+//!   paper's), [`device::PCRAM`], [`device::SRAM`].
+//! * [`ArraySpec`] / [`ChipSpec`] — designer-facing geometry that
+//!   *derives* rows-per-ADC-read from the device's variance and a
+//!   bit-error budget ([`crate::xbar::variance::derive_adc_bits`])
+//!   instead of taking `adc_bits` on faith, and validates at
+//!   construction (divisibility, nonzero geometry, ADC-vs-variance)
+//!   returning `Result` instead of asserting.
+//! * [`HwProfile`] — the composed, named description. JSON-loadable from
+//!   a file path, so custom silicon needs no recompile.
+//! * [`ProfileRegistry`] — global name/alias-addressable registry
+//!   mirroring [`crate::strategy::StrategyRegistry`]: did-you-mean
+//!   lookups, process-wide registration, and [`ProfileRegistry::resolve`]
+//!   for `--hw <name-or-path>`.
+//!
+//! The profile named by [`DEFAULT_PROFILE`] (`rram-128`) lowers
+//! bit-identically to the historical `ArrayCfg::paper()` /
+//! `ChipCfg::paper(pes)` constants — pinned by the `hw_profiles`
+//! integration test — so every pre-profile result is reproduced exactly.
+
+pub mod device;
+pub mod profile;
+pub mod registry;
+pub mod spec;
+
+pub use device::DeviceModel;
+pub use profile::HwProfile;
+pub use registry::{ProfileRegistry, DEFAULT_PROFILE};
+pub use spec::{ArraySpec, ChipSpec};

@@ -1,0 +1,278 @@
+//! A named, loadable hardware profile: device + array spec + chip spec.
+//!
+//! [`HwProfile`] is the unit the rest of the system consumes: the
+//! pipeline resolves one per [`crate::pipeline::PrefixSpec`], lowers it
+//! to the [`ArrayCfg`] the mapping/kernels read and the [`ChipCfg`] the
+//! simulator reads, and derives the [`crate::energy::EnergyCfg`]
+//! constants from its device model. Profiles are name-addressable
+//! through [`super::ProfileRegistry`] and JSON-loadable from a file path
+//! (`--hw path/to/profile.json`), so custom silicon needs no recompile:
+//!
+//! ```json
+//! {
+//!   "name": "my-rram-64",
+//!   "description": "small arrays",
+//!   "device": "rram",
+//!   "array": { "rows": 64, "cols": 64, "col_mux": 8 },
+//!   "chip": { "arrays_per_pe": 128 }
+//! }
+//! ```
+//!
+//! Absent `array`/`chip` fields fall back to the paper defaults; the
+//! profile is validated at construction (geometry, divisibility, the
+//! variance-vs-ADC budget) and every accessor returns `Result`.
+
+use super::device::DeviceModel;
+use super::spec::{ArraySpec, ChipSpec};
+use crate::config::{ArrayCfg, ChipCfg};
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// One complete hardware description.
+#[derive(Clone)]
+pub struct HwProfile {
+    /// Registry key / `--hw` name (kebab-case).
+    pub name: String,
+    /// One-line human description for `cimfab list-hw`.
+    pub description: String,
+    /// Cell technology (resolved through the device registry when
+    /// loading from JSON).
+    pub device: &'static dyn DeviceModel,
+    pub array: ArraySpec,
+    pub chip: ChipSpec,
+}
+
+impl std::fmt::Debug for HwProfile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HwProfile")
+            .field("name", &self.name)
+            .field("device", &self.device.name())
+            .field("array", &self.array)
+            .field("chip", &self.chip)
+            .finish()
+    }
+}
+
+impl PartialEq for HwProfile {
+    fn eq(&self, other: &Self) -> bool {
+        self.name == other.name
+            && self.description == other.description
+            && self.device.name() == other.device.name()
+            && self.array == other.array
+            && self.chip == other.chip
+    }
+}
+
+impl HwProfile {
+    /// Construct and validate in one step.
+    pub fn new(
+        name: impl Into<String>,
+        description: impl Into<String>,
+        device: &'static dyn DeviceModel,
+        array: ArraySpec,
+        chip: ChipSpec,
+    ) -> Result<HwProfile> {
+        let p =
+            HwProfile { name: name.into(), description: description.into(), device, array, chip };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Check every constructive constraint: nonzero geometry,
+    /// divisibility of weights over cells and columns over muxes, and
+    /// the device-variance-vs-ADC budget.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.name.is_empty(), "a hardware profile needs a name");
+        self.array
+            .lower(self.device)
+            .map_err(|e| e.context(format!("hardware profile '{}'", self.name)))?;
+        self.chip
+            .validate()
+            .map_err(|e| e.context(format!("hardware profile '{}'", self.name)))?;
+        Ok(())
+    }
+
+    /// The flat array operating point (ADC bits derived from the
+    /// device's variance) that [`crate::mapping::map_network`] and the
+    /// [`crate::xbar`] kernels consume.
+    pub fn array_cfg(&self) -> Result<ArrayCfg> {
+        self.array.lower(self.device)
+    }
+
+    /// The chip configuration at `pes` PEs that the simulator consumes.
+    pub fn chip_cfg(&self, pes: usize) -> Result<ChipCfg> {
+        self.chip.lower(pes, self.array_cfg()?)
+    }
+
+    /// Derived ADC precision in bits (the §III-A trade-off applied to
+    /// this device).
+    pub fn adc_bits(&self) -> Result<usize> {
+        self.array.adc_bits(self.device)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("description", Json::str(&self.description)),
+            ("device", Json::str(self.device.name())),
+            ("array", self.array.to_json()),
+            ("chip", self.chip.to_json()),
+        ])
+    }
+
+    /// Parse + validate. The `device` field resolves through the global
+    /// device registry, so runtime-registered technologies load too.
+    pub fn from_json(j: &Json) -> Result<HwProfile> {
+        let name = j
+            .get("name")
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("hardware profile needs a string 'name'"))?;
+        let device_name = j
+            .get("device")
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("hardware profile '{name}' needs a string 'device'"))?;
+        let device = super::ProfileRegistry::lookup_device(device_name)?;
+        HwProfile::new(
+            name,
+            j.get("description").as_str().unwrap_or(""),
+            device,
+            ArraySpec::from_json(j.get("array"))?,
+            ChipSpec::from_json(j.get("chip"))?,
+        )
+    }
+
+    /// Load + validate a profile from a JSON file.
+    pub fn load(path: &str) -> Result<HwProfile> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read hardware profile '{path}': {e}"))?;
+        HwProfile::from_json(&Json::parse(&text)?)
+            .map_err(|e| e.context(format!("loading hardware profile '{path}'")))
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        let mut text = self.to_json().pretty();
+        text.push('\n');
+        std::fs::write(path, text)?;
+        Ok(())
+    }
+
+    // ---- built-in profiles -------------------------------------------
+
+    /// The paper's operating point: 128×128 binary RRAM, 3-bit ADCs
+    /// (derived), 64 arrays/PE at 100 MHz. Lowers bit-identically to the
+    /// historical `ArrayCfg::paper()` / `ChipCfg::paper(pes)` values.
+    pub fn rram_128() -> HwProfile {
+        HwProfile {
+            name: "rram-128".into(),
+            description: "paper operating point: 128x128 binary RRAM, derived 3-bit ADCs".into(),
+            device: &super::device::RRAM,
+            array: ArraySpec::default(),
+            chip: ChipSpec::default(),
+        }
+    }
+
+    /// Taller 256-row RRAM arrays: half the blocks per layer, same 8-row
+    /// reads (variance-capped), so each array takes up to 2× the cycles.
+    pub fn rram_256() -> HwProfile {
+        HwProfile {
+            name: "rram-256".into(),
+            description: "256-row RRAM variant: fewer blocks, same variance-capped reads".into(),
+            device: &super::device::RRAM,
+            array: ArraySpec { rows: 256, ..ArraySpec::default() },
+            chip: ChipSpec::default(),
+        }
+    }
+
+    /// 2-bit/cell PCRAM: half the arrays per network, quarter-width
+    /// ADC reads (10% variance ⇒ 2 rows/read).
+    pub fn pcram_128() -> HwProfile {
+        HwProfile {
+            name: "pcram-128".into(),
+            description: "128x128 2-bit PCRAM: denser arrays, 2-row variance-capped reads".into(),
+            device: &super::device::PCRAM,
+            array: ArraySpec::default(),
+            chip: ChipSpec::default(),
+        }
+    }
+
+    /// SRAM CIM: deterministic cells read 64 rows per sample (ADC area
+    /// cap), trading leakage and volatility for speed.
+    pub fn sram_128() -> HwProfile {
+        HwProfile {
+            name: "sram-128".into(),
+            description: "128x128 SRAM CIM: 64-row reads (area-capped), leaky but fast".into(),
+            device: &super::device::SRAM,
+            array: ArraySpec::default(),
+            chip: ChipSpec::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_profiles_validate() {
+        for p in [
+            HwProfile::rram_128(),
+            HwProfile::rram_256(),
+            HwProfile::pcram_128(),
+            HwProfile::sram_128(),
+        ] {
+            p.validate().unwrap_or_else(|e| panic!("{}: {e:#}", p.name));
+            assert!(p.array_cfg().is_ok());
+            assert!(p.chip_cfg(86).is_ok());
+        }
+    }
+
+    #[test]
+    fn rram_128_lowers_to_the_paper_constants() {
+        let p = HwProfile::rram_128();
+        let a = p.array_cfg().unwrap();
+        assert_eq!(
+            (a.rows, a.cols, a.weight_bits, a.input_bits, a.adc_bits, a.col_mux, a.cell_bits),
+            (128, 128, 8, 8, 3, 8, 1)
+        );
+        assert!(a.skip_empty_planes);
+        let c = p.chip_cfg(86).unwrap();
+        assert_eq!(c.total_arrays(), 5504);
+        assert_eq!(c.clock_hz, 100e6);
+    }
+
+    #[test]
+    fn profile_json_roundtrip_preserves_everything() {
+        for p in [HwProfile::rram_256(), HwProfile::pcram_128()] {
+            let back = HwProfile::from_json(&p.to_json()).unwrap();
+            assert_eq!(back, p);
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_missing_or_unknown_pieces() {
+        assert!(HwProfile::from_json(&Json::parse(r#"{}"#).unwrap()).is_err());
+        assert!(HwProfile::from_json(
+            &Json::parse(r#"{"name": "x", "device": "memristor-9000"}"#).unwrap()
+        )
+        .is_err());
+        // defaulted array/chip sections are fine
+        let p = HwProfile::from_json(
+            &Json::parse(r#"{"name": "tiny", "device": "rram", "array": {"rows": 64}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(p.array.rows, 64);
+        assert_eq!(p.array.cols, 128);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("cimfab_hw_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("custom.json");
+        let p = HwProfile::rram_256();
+        p.save(path.to_str().unwrap()).unwrap();
+        let back = HwProfile::load(path.to_str().unwrap()).unwrap();
+        assert_eq!(back, p);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

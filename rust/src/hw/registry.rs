@@ -1,0 +1,239 @@
+//! Name-addressable hardware registry — the hardware twin of
+//! [`crate::strategy::StrategyRegistry`].
+//!
+//! [`ProfileRegistry`] maps names (and aliases) to validated
+//! [`HwProfile`]s and device names to [`DeviceModel`] trait objects. The
+//! global registry starts with the built-ins — devices `rram`, `pcram`,
+//! `sram`; profiles `rram-128` (the paper point, aliases `paper` and
+//! `rram`), `rram-256`, `pcram-128` (alias `pcram`), `sram-128` (alias
+//! `sram`) — and accepts process-wide registration of custom silicon
+//! ([`ProfileRegistry::register_global`]), so downstream code can plug a
+//! profile in and immediately drive it from `--hw`, the
+//! [`crate::pipeline::ScenarioBuilder`], and the sweep executor. Lookups
+//! fail with a did-you-mean suggestion; [`ProfileRegistry::resolve`]
+//! additionally accepts a filesystem path to a profile JSON.
+
+use super::device::{DeviceModel, PCRAM, RRAM, SRAM};
+use super::profile::HwProfile;
+use crate::util::cli::unknown_value_msg;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::{OnceLock, RwLock};
+
+/// The profile every run uses unless `--hw` says otherwise — the
+/// paper's operating point.
+pub const DEFAULT_PROFILE: &str = "rram-128";
+
+/// Name → profile / device maps. Profiles are owned data (cloned out on
+/// lookup); devices are `&'static` trait objects like strategies.
+#[derive(Clone, Default)]
+pub struct ProfileRegistry {
+    profiles: BTreeMap<String, HwProfile>,
+    /// alias → canonical profile name ("paper" → "rram-128").
+    aliases: BTreeMap<String, String>,
+    devices: BTreeMap<String, &'static dyn DeviceModel>,
+}
+
+fn global_cell() -> &'static RwLock<ProfileRegistry> {
+    static CELL: OnceLock<RwLock<ProfileRegistry>> = OnceLock::new();
+    CELL.get_or_init(|| RwLock::new(ProfileRegistry::builtin()))
+}
+
+impl ProfileRegistry {
+    /// A registry holding exactly the built-in devices and profiles.
+    pub fn builtin() -> ProfileRegistry {
+        let mut reg = ProfileRegistry::default();
+        for d in [&RRAM as &'static dyn DeviceModel, &PCRAM, &SRAM] {
+            reg.register_device(d).expect("built-in device names are distinct");
+        }
+        for p in [
+            HwProfile::rram_128(),
+            HwProfile::rram_256(),
+            HwProfile::pcram_128(),
+            HwProfile::sram_128(),
+        ] {
+            reg.register_profile(p).expect("built-in profiles are valid and distinct");
+        }
+        for (alias, canonical) in [
+            ("paper", "rram-128"),
+            ("rram", "rram-128"),
+            ("pcram", "pcram-128"),
+            ("sram", "sram-128"),
+        ] {
+            reg.aliases.insert(alias.into(), canonical.into());
+        }
+        reg
+    }
+
+    /// Add a device model. Errors if the name is taken.
+    pub fn register_device(&mut self, d: &'static dyn DeviceModel) -> Result<()> {
+        let name = d.name().to_string();
+        anyhow::ensure!(
+            !self.devices.contains_key(&name),
+            "device model '{name}' is already registered"
+        );
+        self.devices.insert(name, d);
+        Ok(())
+    }
+
+    /// Add a hardware profile. Validates it first; errors if the name is
+    /// taken (by a profile or an alias).
+    pub fn register_profile(&mut self, p: HwProfile) -> Result<()> {
+        p.validate()?;
+        anyhow::ensure!(
+            !self.profiles.contains_key(&p.name) && !self.aliases.contains_key(&p.name),
+            "hardware profile '{}' is already registered",
+            p.name
+        );
+        self.profiles.insert(p.name.clone(), p);
+        Ok(())
+    }
+
+    /// Resolve a profile by name or alias.
+    pub fn profile(&self, name: &str) -> Result<HwProfile> {
+        let canonical = self.aliases.get(name).map(String::as_str).unwrap_or(name);
+        self.profiles.get(canonical).cloned().ok_or_else(|| {
+            let known: Vec<&str> = self.profiles.keys().map(String::as_str).collect();
+            anyhow::anyhow!(unknown_value_msg("hardware profile", name, &known))
+        })
+    }
+
+    /// Resolve a device model by name.
+    pub fn device(&self, name: &str) -> Result<&'static dyn DeviceModel> {
+        self.devices.get(name).copied().ok_or_else(|| {
+            let known: Vec<&str> = self.devices.keys().map(String::as_str).collect();
+            anyhow::anyhow!(unknown_value_msg("device model", name, &known))
+        })
+    }
+
+    /// All profiles, name-ordered.
+    pub fn profiles(&self) -> Vec<HwProfile> {
+        self.profiles.values().cloned().collect()
+    }
+
+    /// All device models, name-ordered.
+    pub fn devices(&self) -> Vec<&'static dyn DeviceModel> {
+        self.devices.values().copied().collect()
+    }
+
+    // ---- process-global registry ------------------------------------
+
+    /// Resolve a profile name against the global registry.
+    pub fn lookup(name: &str) -> Result<HwProfile> {
+        global_cell().read().unwrap().profile(name)
+    }
+
+    /// Resolve a device name against the global registry.
+    pub fn lookup_device(name: &str) -> Result<&'static dyn DeviceModel> {
+        global_cell().read().unwrap().device(name)
+    }
+
+    /// A point-in-time copy of the global registry (for listings).
+    pub fn snapshot() -> ProfileRegistry {
+        global_cell().read().unwrap().clone()
+    }
+
+    /// Register a profile process-wide. This is how downstream code
+    /// opens `--hw` / the pipeline to its own silicon without a file.
+    pub fn register_global(p: HwProfile) -> Result<()> {
+        global_cell().write().unwrap().register_profile(p)
+    }
+
+    /// Register a device model process-wide (so JSON profiles can name
+    /// it in their `device` field).
+    pub fn register_global_device(d: &'static dyn DeviceModel) -> Result<()> {
+        global_cell().write().unwrap().register_device(d)
+    }
+
+    /// Resolve `--hw`'s name-or-path grammar: anything that looks like a
+    /// filesystem path (contains a separator or ends in `.json`) loads
+    /// as a profile JSON; everything else is a registry name/alias
+    /// lookup — with a bare-filename fallback, so `--hw myprofile.json`
+    /// and `--hw ./myprofile` both work, but a local file can never
+    /// shadow a registered name.
+    pub fn resolve(spec: &str) -> Result<HwProfile> {
+        let looks_like_path =
+            spec.contains('/') || spec.contains('\\') || spec.ends_with(".json");
+        if looks_like_path {
+            return HwProfile::load(spec);
+        }
+        match Self::lookup(spec) {
+            Ok(p) => Ok(p),
+            Err(_) if std::path::Path::new(spec).is_file() => HwProfile::load(spec),
+            Err(e) => Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_resolve_by_name_and_alias() {
+        for name in ["rram-128", "rram-256", "pcram-128", "sram-128"] {
+            assert_eq!(ProfileRegistry::lookup(name).unwrap().name, name);
+        }
+        assert_eq!(ProfileRegistry::lookup("paper").unwrap().name, "rram-128");
+        assert_eq!(ProfileRegistry::lookup("rram").unwrap().name, "rram-128");
+        assert_eq!(ProfileRegistry::lookup("pcram").unwrap().name, "pcram-128");
+        assert_eq!(ProfileRegistry::lookup("sram").unwrap().name, "sram-128");
+        for d in ["rram", "pcram", "sram"] {
+            assert_eq!(ProfileRegistry::lookup_device(d).unwrap().name(), d);
+        }
+    }
+
+    #[test]
+    fn registry_lists_at_least_three_technologies() {
+        let reg = ProfileRegistry::snapshot();
+        assert!(reg.devices().len() >= 3);
+        assert!(reg.profiles().len() >= 4);
+        // name-ordered (BTreeMap) — the list-hw table order
+        let names: Vec<String> = reg.profiles().iter().map(|p| p.name.clone()).collect();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        assert_eq!(names, sorted);
+    }
+
+    #[test]
+    fn unknown_names_error_with_did_you_mean() {
+        let err = ProfileRegistry::lookup("sram-129").unwrap_err().to_string();
+        assert!(err.contains("did you mean 'sram-128'?"), "{err}");
+        assert!(err.contains("rram-128"), "should list known profiles: {err}");
+        let err = ProfileRegistry::lookup_device("pcm").unwrap_err().to_string();
+        assert!(err.contains("did you mean 'pcram'?"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let mut reg = ProfileRegistry::builtin();
+        assert!(reg.register_profile(HwProfile::rram_128()).is_err());
+        assert!(reg.register_device(&RRAM).is_err());
+        // an alias name is taken too
+        let mut p = HwProfile::rram_256();
+        p.name = "paper".into();
+        assert!(reg.register_profile(p).is_err());
+    }
+
+    #[test]
+    fn invalid_profiles_cannot_be_registered() {
+        let mut reg = ProfileRegistry::builtin();
+        let mut p = HwProfile::rram_128();
+        p.name = "broken".into();
+        p.array.cols = 100; // not divisible by 8 cells/weight
+        assert!(reg.register_profile(p).is_err());
+    }
+
+    #[test]
+    fn resolve_accepts_paths_and_names() {
+        assert_eq!(ProfileRegistry::resolve("pcram").unwrap().name, "pcram-128");
+        let dir = std::env::temp_dir().join(format!("cimfab_hwreg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mine.json");
+        HwProfile::rram_256().save(path.to_str().unwrap()).unwrap();
+        let p = ProfileRegistry::resolve(path.to_str().unwrap()).unwrap();
+        assert_eq!(p.name, "rram-256");
+        assert!(ProfileRegistry::resolve("no/such/file.json").is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,327 @@
+//! Array and chip geometry specs — the *inputs* a hardware profile is
+//! written in.
+//!
+//! Unlike the flat [`ArrayCfg`] (which carries `adc_bits` as a given),
+//! an [`ArraySpec`] carries the quantities a designer actually chooses —
+//! geometry, read discipline, a bit-error budget, an ADC area cap — and
+//! *derives* the ADC precision from the device's variance
+//! ([`crate::xbar::variance::derive_adc_bits`], the §III-A argument).
+//! Lowering a spec against a [`DeviceModel`] validates every constraint
+//! (nonzero geometry, divisibility, the variance-vs-ADC budget) and
+//! returns `Result` instead of asserting.
+
+use super::device::DeviceModel;
+use crate::config::{ArrayCfg, ChipCfg};
+use crate::util::json::Json;
+use crate::xbar::variance;
+use anyhow::Result;
+
+/// Sub-array geometry + read-discipline knobs. Everything device-neutral;
+/// pair with a [`DeviceModel`] to lower into an [`ArrayCfg`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArraySpec {
+    /// Word lines per array (paper: 128).
+    pub rows: usize,
+    /// Bit lines (physical cells) per array row (paper: 128).
+    pub cols: usize,
+    /// Bits per stored weight (paper: 8).
+    pub weight_bits: usize,
+    /// Bits per input, shifted in serially (paper: 8; max 8 — the
+    /// bit-serial datapath is `u8`).
+    pub input_bits: usize,
+    /// Columns sharing one ADC through a mux (paper: 8).
+    pub col_mux: usize,
+    /// Zero-skipping capable read scheduler (true for all paper configs).
+    pub skip_empty_planes: bool,
+    /// Max tolerable per-read bit-error rate. With the device's variance
+    /// this determines rows per ADC read (paper: ~1e-3 keeps 8 rows at
+    /// 5% variance "error free").
+    pub ber_budget: f64,
+    /// ADC area budget as a precision cap in bits (§III-A: "large (5-8
+    /// bit) ADCs occupy over 10× the area of eNVM"). Binds only when the
+    /// device variance would allow more.
+    pub adc_bits_cap: usize,
+}
+
+impl Default for ArraySpec {
+    /// The paper's array knobs (device left open).
+    fn default() -> ArraySpec {
+        ArraySpec {
+            rows: 128,
+            cols: 128,
+            weight_bits: 8,
+            input_bits: 8,
+            col_mux: 8,
+            skip_empty_planes: true,
+            ber_budget: 1e-3,
+            adc_bits_cap: 6,
+        }
+    }
+}
+
+impl ArraySpec {
+    /// ADC precision this spec supports on `device`: the §III-A
+    /// derivation, `Err` when the device variance overflows even a 1-bit
+    /// ADC within the error budget.
+    pub fn adc_bits(&self, device: &dyn DeviceModel) -> Result<usize> {
+        variance::derive_adc_bits(device.variance(), self.ber_budget, self.rows, self.adc_bits_cap)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "device '{}' variance {:.1}% overflows the ADC: even a 2-row read \
+                     errs above the {:.1e} bit-error budget",
+                    device.name(),
+                    device.variance() * 100.0,
+                    self.ber_budget
+                )
+            })
+    }
+
+    /// Validate the spec against `device` and lower it to the flat
+    /// operating point the kernels ([`crate::xbar`]) consume.
+    pub fn lower(&self, device: &dyn DeviceModel) -> Result<ArrayCfg> {
+        anyhow::ensure!(
+            self.rows >= 1 && self.cols >= 1,
+            "array geometry must be nonzero, got {}x{}",
+            self.rows,
+            self.cols
+        );
+        // (input_bits range and col_mux divisibility are delegated to the
+        // final ArrayCfg::validate call — one source of truth; only the
+        // checks that need device context or guard the derivation below
+        // live here.)
+        anyhow::ensure!(self.weight_bits >= 1, "weights need at least one bit");
+        anyhow::ensure!(self.adc_bits_cap >= 1, "ADC cap must allow at least 1 bit");
+        anyhow::ensure!(
+            self.ber_budget > 0.0 && self.ber_budget < 1.0,
+            "bit-error budget must be in (0, 1), got {}",
+            self.ber_budget
+        );
+        let cell_bits = device.cell_bits();
+        anyhow::ensure!(
+            cell_bits >= 1 && self.weight_bits % cell_bits == 0,
+            "weight_bits {} not divisible by device '{}' cell_bits {}",
+            self.weight_bits,
+            device.name(),
+            cell_bits
+        );
+        let cells_per_weight = self.weight_bits / cell_bits;
+        anyhow::ensure!(
+            self.cols % cells_per_weight == 0,
+            "cols {} not divisible by the {} cells per weight ({} bits / {}-bit '{}' cells)",
+            self.cols,
+            cells_per_weight,
+            self.weight_bits,
+            cell_bits,
+            device.name()
+        );
+        let cfg = ArrayCfg {
+            rows: self.rows,
+            cols: self.cols,
+            weight_bits: self.weight_bits,
+            input_bits: self.input_bits,
+            adc_bits: self.adc_bits(device)?,
+            col_mux: self.col_mux,
+            skip_empty_planes: self.skip_empty_planes,
+            cell_bits,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rows", Json::num(self.rows as f64)),
+            ("cols", Json::num(self.cols as f64)),
+            ("weight_bits", Json::num(self.weight_bits as f64)),
+            ("input_bits", Json::num(self.input_bits as f64)),
+            ("col_mux", Json::num(self.col_mux as f64)),
+            ("skip_empty_planes", Json::Bool(self.skip_empty_planes)),
+            ("ber_budget", Json::Num(self.ber_budget)),
+            ("adc_bits_cap", Json::num(self.adc_bits_cap as f64)),
+        ])
+    }
+
+    /// Parse, filling absent fields with the paper defaults.
+    pub fn from_json(j: &Json) -> Result<ArraySpec> {
+        let d = ArraySpec::default();
+        Ok(ArraySpec {
+            rows: j.get("rows").as_usize().unwrap_or(d.rows),
+            cols: j.get("cols").as_usize().unwrap_or(d.cols),
+            weight_bits: j.get("weight_bits").as_usize().unwrap_or(d.weight_bits),
+            input_bits: j.get("input_bits").as_usize().unwrap_or(d.input_bits),
+            col_mux: j.get("col_mux").as_usize().unwrap_or(d.col_mux),
+            skip_empty_planes: j.get("skip_empty_planes").as_bool().unwrap_or(d.skip_empty_planes),
+            ber_budget: j.get("ber_budget").as_f64().unwrap_or(d.ber_budget),
+            adc_bits_cap: j.get("adc_bits_cap").as_usize().unwrap_or(d.adc_bits_cap),
+        })
+    }
+}
+
+/// Chip-level organization: PE structure, clock, NoC parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChipSpec {
+    /// Arrays per PE (paper: 64).
+    pub arrays_per_pe: usize,
+    /// Clock (paper: 100 MHz).
+    pub clock_hz: f64,
+    /// Feature/psum packet sizes in bytes (for the NoC model).
+    pub feature_packet_bytes: usize,
+    pub psum_packet_bytes: usize,
+    /// NoC link payload bytes moved per cycle per link.
+    pub link_bytes_per_cycle: usize,
+    /// Per-hop router latency in cycles.
+    pub router_latency: usize,
+    /// Images in flight for pipelined simulation.
+    pub pipeline_images: usize,
+}
+
+impl Default for ChipSpec {
+    /// The paper's chip organization.
+    fn default() -> ChipSpec {
+        ChipSpec {
+            arrays_per_pe: 64,
+            clock_hz: 100e6,
+            feature_packet_bytes: 128,
+            psum_packet_bytes: 64,
+            link_bytes_per_cycle: 32,
+            router_latency: 1,
+            pipeline_images: 8,
+        }
+    }
+}
+
+impl ChipSpec {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.arrays_per_pe >= 1, "a PE must hold at least one array");
+        anyhow::ensure!(self.clock_hz > 0.0, "clock must be positive, got {}", self.clock_hz);
+        anyhow::ensure!(
+            self.feature_packet_bytes >= 1 && self.psum_packet_bytes >= 1,
+            "NoC packets must be at least one byte"
+        );
+        anyhow::ensure!(self.link_bytes_per_cycle >= 1, "NoC links must move at least one byte");
+        anyhow::ensure!(self.pipeline_images >= 1, "the pipeline needs at least one image slot");
+        Ok(())
+    }
+
+    /// Lower to a [`ChipCfg`] at `pes` PEs around an already-lowered
+    /// array operating point.
+    pub fn lower(&self, pes: usize, array: ArrayCfg) -> Result<ChipCfg> {
+        self.validate()?;
+        anyhow::ensure!(pes >= 1, "a chip needs at least one PE");
+        Ok(ChipCfg {
+            pes,
+            arrays_per_pe: self.arrays_per_pe,
+            clock_hz: self.clock_hz,
+            array,
+            feature_packet_bytes: self.feature_packet_bytes,
+            psum_packet_bytes: self.psum_packet_bytes,
+            link_bytes_per_cycle: self.link_bytes_per_cycle,
+            router_latency: self.router_latency,
+            pipeline_images: self.pipeline_images,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arrays_per_pe", Json::num(self.arrays_per_pe as f64)),
+            ("clock_hz", Json::Num(self.clock_hz)),
+            ("feature_packet_bytes", Json::num(self.feature_packet_bytes as f64)),
+            ("psum_packet_bytes", Json::num(self.psum_packet_bytes as f64)),
+            ("link_bytes_per_cycle", Json::num(self.link_bytes_per_cycle as f64)),
+            ("router_latency", Json::num(self.router_latency as f64)),
+            ("pipeline_images", Json::num(self.pipeline_images as f64)),
+        ])
+    }
+
+    /// Parse, filling absent fields with the paper defaults.
+    pub fn from_json(j: &Json) -> Result<ChipSpec> {
+        let d = ChipSpec::default();
+        Ok(ChipSpec {
+            arrays_per_pe: j.get("arrays_per_pe").as_usize().unwrap_or(d.arrays_per_pe),
+            clock_hz: j.get("clock_hz").as_f64().unwrap_or(d.clock_hz),
+            feature_packet_bytes: j
+                .get("feature_packet_bytes")
+                .as_usize()
+                .unwrap_or(d.feature_packet_bytes),
+            psum_packet_bytes: j.get("psum_packet_bytes").as_usize().unwrap_or(d.psum_packet_bytes),
+            link_bytes_per_cycle: j
+                .get("link_bytes_per_cycle")
+                .as_usize()
+                .unwrap_or(d.link_bytes_per_cycle),
+            router_latency: j.get("router_latency").as_usize().unwrap_or(d.router_latency),
+            pipeline_images: j.get("pipeline_images").as_usize().unwrap_or(d.pipeline_images),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::device::{PCRAM, RRAM, SRAM};
+
+    #[test]
+    fn default_spec_on_rram_lowers_to_the_paper_point() {
+        let cfg = ArraySpec::default().lower(&RRAM).unwrap();
+        assert_eq!(cfg.adc_bits, 3);
+        assert_eq!(cfg.adc_rows(), 8);
+        assert_eq!(cfg.cell_bits, 1);
+        assert_eq!(cfg.worst_case_cycles(), 1024);
+        assert_eq!(cfg.best_case_cycles(), 64);
+    }
+
+    #[test]
+    fn pcram_derives_narrow_reads_and_dense_cells() {
+        let cfg = ArraySpec::default().lower(&PCRAM).unwrap();
+        assert_eq!(cfg.adc_bits, 1, "10% variance caps reads at 2 rows");
+        assert_eq!(cfg.cell_bits, 2);
+        assert_eq!(cfg.weight_cols(), 32, "4 cells per weight double the density");
+    }
+
+    #[test]
+    fn sram_is_limited_only_by_the_adc_area_cap() {
+        let cfg = ArraySpec::default().lower(&SRAM).unwrap();
+        assert_eq!(cfg.adc_bits, 6);
+        assert_eq!(cfg.adc_rows(), 64);
+        assert_eq!(cfg.worst_case_cycles(), 128);
+    }
+
+    #[test]
+    fn invalid_geometry_is_an_error_not_a_panic() {
+        let mut s = ArraySpec { rows: 0, ..ArraySpec::default() };
+        assert!(s.lower(&RRAM).is_err());
+        s.rows = 128;
+        s.cols = 100; // not divisible by 8 cells/weight
+        let err = s.lower(&RRAM).unwrap_err().to_string();
+        assert!(err.contains("not divisible"), "{err}");
+        s.cols = 128;
+        s.col_mux = 7;
+        assert!(s.lower(&RRAM).is_err());
+        s.col_mux = 8;
+        s.input_bits = 9;
+        assert!(s.lower(&RRAM).is_err());
+    }
+
+    #[test]
+    fn variance_overflow_is_reported_against_the_budget() {
+        let s = ArraySpec { ber_budget: 1e-9, ..ArraySpec::default() };
+        let err = s.lower(&PCRAM).unwrap_err().to_string();
+        assert!(err.contains("overflows the ADC"), "{err}");
+    }
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let s = ArraySpec { rows: 256, ber_budget: 5e-4, ..ArraySpec::default() };
+        assert_eq!(ArraySpec::from_json(&s.to_json()).unwrap(), s);
+        let c = ChipSpec { arrays_per_pe: 32, ..ChipSpec::default() };
+        assert_eq!(ChipSpec::from_json(&c.to_json()).unwrap(), c);
+    }
+
+    #[test]
+    fn chip_spec_validates() {
+        assert!(ChipSpec::default().validate().is_ok());
+        assert!(ChipSpec { arrays_per_pe: 0, ..ChipSpec::default() }.validate().is_err());
+        assert!(ChipSpec { clock_hz: 0.0, ..ChipSpec::default() }.validate().is_err());
+        let array = ArraySpec::default().lower(&RRAM).unwrap();
+        assert!(ChipSpec::default().lower(0, array).is_err());
+    }
+}

@@ -21,6 +21,11 @@
 //! * [`strategy::StrategyRegistry`] — string-addressable allocation
 //!   strategies ([`alloc::Allocator`]) and dataflow models
 //!   ([`sim::DataflowModel`]); the open API every policy plugs into.
+//! * [`hw::ProfileRegistry`] — name-addressable hardware profiles
+//!   ([`hw::HwProfile`]: device model + array/chip specs, with
+//!   rows-per-ADC-read *derived* from the device's variance budget);
+//!   JSON-loadable from a path, so `--hw` sweeps RRAM/PCRAM/SRAM and
+//!   custom silicon without recompiling.
 //! * [`pipeline`] — the staged experiment pipeline (`BuildGraph → Map →
 //!   Stats → Trace → Profile → Allocate → Place → Simulate → Report`)
 //!   with the validating [`pipeline::ScenarioBuilder`], per-stage JSON
@@ -34,6 +39,7 @@
 //! See `DESIGN.md` for the module inventory and the experiment index.
 
 pub mod util;
+pub mod hw;
 pub mod tensor;
 pub mod dnn;
 pub mod xbar;

@@ -1,12 +1,13 @@
 //! `cimfab` CLI — the leader entrypoint.
 //!
 //! ```text
-//! cimfab report   --net resnet18 --hw 64             graph + mapping summary
-//! cimfab profile  --net resnet18 --hw 64 [--stats golden]   Figs 4 & 6 tables
+//! cimfab report   --net resnet18 --res 64            graph + mapping summary
+//! cimfab profile  --net resnet18 --res 64 [--stats golden]  Figs 4 & 6 tables
 //! cimfab simulate --net resnet18 --pes 172 --alloc block-wise one run
 //! cimfab sweep    --net resnet18 --steps 6 --threads 4      Fig 8 table (parallel)
 //! cimfab util     --net resnet18 --pes 172           Fig 9 table
 //! cimfab list-strategies                             the strategy registry
+//! cimfab list-hw                                     the hardware registry
 //! cimfab golden   --net vgg11                        PJRT golden cross-check
 //! cimfab dispatch                                    live block-wise dataflow demo
 //! cimfab variance                                    ADC/variance ablation (§III-A)
@@ -14,11 +15,15 @@
 //!
 //! Allocation strategies and dataflow models are resolved by name
 //! through [`cimfab::strategy::StrategyRegistry`] (`--alloc`,
-//! `--dataflow`); unknown names fail with a did-you-mean suggestion.
-//! `profile`, `simulate`, `sweep` and `util` run on the staged
-//! experiment pipeline ([`cimfab::pipeline`]): all four accept
-//! `--dump-dir DIR` to dump every stage's JSON artifact; `sweep` and
-//! `util` also accept `--threads N` to size the sweep worker pool.
+//! `--dataflow`); hardware profiles through
+//! [`cimfab::hw::ProfileRegistry`] (`--hw NAME|PATH.json`, default
+//! `rram-128`); unknown names fail with a did-you-mean suggestion.
+//! (`--hw N` with a bare integer is the legacy spelling of `--res N`,
+//! the input resolution, and still works.) `profile`, `simulate`,
+//! `sweep` and `util` run on the staged experiment pipeline
+//! ([`cimfab::pipeline`]): all four accept `--dump-dir DIR` to dump
+//! every stage's JSON artifact; `sweep` and `util` also accept
+//! `--threads N` to size the sweep worker pool.
 
 use cimfab::alloc::Allocator;
 use cimfab::coordinator::{Driver, DriverOpts, StatsSource};
@@ -51,9 +56,27 @@ fn main() {
 }
 
 fn driver_opts(args: &Args) -> Result<DriverOpts, String> {
+    // `--hw` takes a hardware-profile name or JSON path; a bare integer
+    // is the legacy spelling of `--res` (input resolution) and is still
+    // honored when `--res` is absent.
+    let mut res = args.get_usize("res", 64)?;
+    let mut hw_profile = cimfab::hw::DEFAULT_PROFILE.to_string();
+    if let Some(v) = args.get("hw") {
+        match v.parse::<usize>() {
+            Ok(n) if args.get("res").is_none() => res = n,
+            Ok(n) => {
+                return Err(format!(
+                    "--hw {n} conflicts with --res {res}; use --hw for hardware profiles \
+                     and --res for the input resolution"
+                ))
+            }
+            Err(_) => hw_profile = v.to_string(),
+        }
+    }
     Ok(DriverOpts {
         net: args.get_or("net", "resnet18").to_string(),
-        hw: args.get_usize("hw", 64)?,
+        hw: res,
+        hw_profile,
         stats: StatsSource::parse(args.get_or("stats", "synth"))
             .ok_or_else(|| "bad --stats (synth|golden)".to_string())?,
         profile_images: args.get_usize("profile-images", 2)?,
@@ -278,6 +301,62 @@ fn run(args: &Args) -> cimfab::Result<()> {
             println!("{}", t.render());
             Ok(())
         }
+        Some("list-hw") => {
+            let reg = cimfab::hw::ProfileRegistry::snapshot();
+            println!("== hardware profiles (--hw) ==");
+            let mut t = Table::new([
+                "name",
+                "device",
+                "array",
+                "ADC bits",
+                "rows/read",
+                "cycles (best..worst)",
+                "description",
+            ]);
+            for p in reg.profiles() {
+                let cfg = p.array_cfg()?;
+                let (best, worst) = cimfab::xbar::profile_cycle_bounds(&p)?;
+                t.row([
+                    p.name.clone(),
+                    p.device.name().to_string(),
+                    format!("{}x{}", cfg.rows, cfg.cols),
+                    cfg.adc_bits.to_string(),
+                    cfg.adc_rows().to_string(),
+                    format!("{best}..{worst}"),
+                    p.description.clone(),
+                ]);
+            }
+            println!("{}", t.render());
+            println!("== device models (a profile JSON's \"device\" field) ==");
+            let mut t = Table::new([
+                "name",
+                "bits/cell",
+                "variance",
+                "read pJ",
+                "write pJ/ns",
+                "leak pW",
+                "volatile",
+                "description",
+            ]);
+            for d in reg.devices() {
+                t.row([
+                    d.name().to_string(),
+                    d.cell_bits().to_string(),
+                    format!("{:.1}%", d.variance() * 100.0),
+                    fmt_f(d.read_energy_pj(), 2),
+                    format!("{}/{}", fmt_f(d.write_energy_pj(), 2), fmt_f(d.write_latency_ns(), 0)),
+                    fmt_f(d.leakage_pw(), 0),
+                    if d.volatile() { "yes" } else { "no" }.to_string(),
+                    d.describe().to_string(),
+                ]);
+            }
+            println!("{}", t.render());
+            println!(
+                "custom silicon: `--hw path/to/profile.json` (see the README's \
+                 \"Hardware profiles\" section for the schema)"
+            );
+            Ok(())
+        }
         Some("golden") => {
             let opts = driver_opts(args).map_err(anyhow::Error::msg)?;
             golden_check(&opts)
@@ -286,22 +365,19 @@ fn run(args: &Args) -> cimfab::Result<()> {
             let opts = driver_opts(args).map_err(anyhow::Error::msg)?;
             let d = Driver::prepare(opts)?;
             let pes = args.get_usize("pes", d.min_pes() * 2).map_err(anyhow::Error::msg)?;
-            let chip = cimfab::config::ChipCfg::paper(pes);
+            let chip = d.hw.chip_cfg(pes)?;
+            let ecfg = cimfab::energy::EnergyCfg::for_profile(&d.hw)?;
             let macs: u64 = d.map.grids.iter().map(|g| g.macs).sum();
             let mut rows = Vec::new();
             for a in alloc_strategies(args)? {
                 let (plan, r) = d.run_strategy(a.name(), pes)?;
-                let e = cimfab::energy::estimate(
-                    &cimfab::energy::EnergyCfg::default(),
-                    &chip,
-                    &d.map,
-                    &plan,
-                    &d.trace,
-                    &r,
-                );
+                let e = cimfab::energy::estimate(&ecfg, &chip, &d.map, &plan, &d.trace, &r);
                 rows.push((a.name().to_string(), e, macs));
             }
-            println!("== energy per inference @ {pes} PEs (extension; paper §V) ==");
+            println!(
+                "== energy per inference @ {pes} PEs, {} profile (extension; paper §V) ==",
+                d.hw.name
+            );
             println!("{}", cimfab::energy::energy_table(&rows).render());
             Ok(())
         }
@@ -315,6 +391,20 @@ fn run(args: &Args) -> cimfab::Result<()> {
                     bits.to_string(),
                     format!("{:.2e}", variance::read_error_rate(rows, 0.05)),
                     fmt_f(cimfab::xbar::adc::Adc::new(bits).relative_area(), 1),
+                ]);
+            }
+            println!("{}", t.render());
+            println!("== derived operating points per device (1e-3 error budget, 128 rows) ==");
+            let mut t = Table::new(["device", "variance", "max rows", "ADC bits", "err @derived"]);
+            for d in cimfab::hw::ProfileRegistry::snapshot().devices() {
+                let bits = variance::derive_adc_bits(d.variance(), 1e-3, 128, 6);
+                t.row([
+                    d.name().to_string(),
+                    format!("{:.1}%", d.variance() * 100.0),
+                    variance::max_rows_per_read(d.variance(), 1e-3, 128).to_string(),
+                    bits.map(|b| b.to_string()).unwrap_or_else(|| "-".into()),
+                    bits.map(|b| format!("{:.2e}", variance::read_error_rate(1 << b, d.variance())))
+                        .unwrap_or_else(|| "-".into()),
                 ]);
             }
             println!("{}", t.render());
@@ -409,11 +499,16 @@ fn dispatch_demo(args: &Args) -> cimfab::Result<()> {
 const HELP: &str = "\
 cimfab — compute-in-memory fabric simulator (Breaking Barriers reproduction)
 
-USAGE: cimfab <report|profile|simulate|sweep|util|energy|list-strategies|golden|dispatch|variance> [options]
+USAGE: cimfab <report|profile|simulate|sweep|util|energy|list-strategies|list-hw|\\
+               golden|dispatch|variance> [options]
 
 Common options:
   --net resnet18|resnet34|vgg11   network (default resnet18)
-  --hw N                   input resolution (default 64; use 32 for golden)
+  --res N                  input resolution (default 64; use 32 for golden)
+  --hw NAME|PATH.json      hardware profile by registry name/alias (see
+                           `cimfab list-hw`; default rram-128) or a
+                           custom profile JSON path; a bare integer is
+                           the legacy spelling of --res
   --stats synth|golden     activation statistics source (default synth)
   --pes N                  processing elements on chip
   --alloc NAME             allocation strategy by registry name (see

@@ -15,13 +15,17 @@
 //! ```
 //!
 //! `build` resolves strategy names through
-//! [`crate::strategy::StrategyRegistry`] (canonicalizing aliases,
-//! failing with a did-you-mean suggestion), rejects empty/unknown nets,
-//! zero budgets, zero image counts, and allocator/dataflow pairings
-//! whose plans the dataflow cannot run.
+//! [`crate::strategy::StrategyRegistry`] and hardware profiles through
+//! [`crate::hw::ProfileRegistry`] (canonicalizing aliases, failing with
+//! a did-you-mean suggestion), rejects empty/unknown nets, zero
+//! budgets, zero image counts, invalid hardware (bad geometry,
+//! non-divisible cell bits, variance budgets that overflow the ADC —
+//! the checks [`crate::hw::HwProfile::validate`] runs), and
+//! allocator/dataflow pairings whose plans the dataflow cannot run.
 
 use super::scenario::{PrefixSpec, Scenario, StatsSource};
 use crate::alloc::Allocator;
+use crate::hw::ProfileRegistry;
 use crate::sim::DataflowModel;
 use crate::strategy::StrategyRegistry;
 use crate::util::cli::unknown_value_msg;
@@ -36,6 +40,7 @@ pub const KNOWN_NETS: [&str; 3] = ["resnet18", "resnet34", "vgg11"];
 pub struct ScenarioBuilder {
     net: Option<String>,
     hw: usize,
+    hw_profile: String,
     stats: StatsSource,
     profile_images: usize,
     seed: u64,
@@ -51,6 +56,7 @@ impl Default for ScenarioBuilder {
         ScenarioBuilder {
             net: None,
             hw: 64,
+            hw_profile: crate::hw::DEFAULT_PROFILE.into(),
             stats: StatsSource::Synthetic,
             profile_images: 2,
             seed: 7,
@@ -73,6 +79,7 @@ impl ScenarioBuilder {
         ScenarioBuilder {
             net: Some(spec.net.clone()),
             hw: spec.hw,
+            hw_profile: spec.hw_profile.clone(),
             stats: spec.stats,
             profile_images: spec.profile_images,
             seed: spec.seed,
@@ -89,6 +96,14 @@ impl ScenarioBuilder {
     /// Input resolution (must match the artifact when `Golden`).
     pub fn hw(mut self, hw: usize) -> Self {
         self.hw = hw;
+        self
+    }
+
+    /// Hardware profile (`--hw`): a [`crate::hw::ProfileRegistry`] name
+    /// or alias, or a path to a profile JSON. Defaults to the paper's
+    /// `rram-128`.
+    pub fn hw_profile(mut self, name_or_path: impl Into<String>) -> Self {
+        self.hw_profile = name_or_path.into();
         self
     }
 
@@ -157,9 +172,21 @@ impl ScenarioBuilder {
             "profiling needs at least one image, got {}",
             self.profile_images
         );
+        // Resolve + validate the hardware up front (invalid geometry,
+        // non-divisible cell bits, ADC-vs-variance overflow all surface
+        // here), canonicalizing registry aliases so scenario ids are
+        // stable. Path-form profiles keep the path, and `prepare`
+        // re-resolves it at run time — PrefixSpec stays plain data, at
+        // the cost that a profile file edited between build() and the
+        // run is re-validated (and used) in its new form.
+        ProfileRegistry::resolve(&self.hw_profile)?;
+        let hw_profile = ProfileRegistry::lookup(&self.hw_profile)
+            .map(|p| p.name)
+            .unwrap_or_else(|_| self.hw_profile.clone());
         Ok(PrefixSpec {
             net,
             hw: self.hw,
+            hw_profile,
             stats: self.stats,
             profile_images: self.profile_images,
             seed: self.seed,
@@ -271,5 +298,38 @@ mod tests {
         let sc = ScenarioBuilder::from_prefix(&spec).pes(129).build().unwrap();
         assert_eq!(sc.prefix, spec);
         assert_eq!(sc.pes, 129);
+    }
+
+    #[test]
+    fn hardware_profiles_canonicalize_and_validate() {
+        // default is the paper point
+        assert_eq!(valid().build().unwrap().prefix.hw_profile, "rram-128");
+        // aliases canonicalize like strategy aliases do
+        let sc = valid().hw_profile("paper").build().unwrap();
+        assert_eq!(sc.prefix.hw_profile, "rram-128");
+        let sc = valid().hw_profile("sram").build().unwrap();
+        assert_eq!(sc.prefix.hw_profile, "sram-128");
+        // unknown names fail fast with a suggestion
+        let err = valid().hw_profile("rram-127").build().unwrap_err().to_string();
+        assert!(err.contains("did you mean 'rram-128'?"), "{err}");
+        // missing profile files fail fast too
+        assert!(valid().hw_profile("no/such/profile.json").build().is_err());
+    }
+
+    #[test]
+    fn invalid_custom_hardware_surfaces_through_the_builder() {
+        // a JSON profile whose geometry breaks the divisibility rules is
+        // rejected at build() time, not deep inside a pipeline stage
+        let dir = std::env::temp_dir().join(format!("cimfab_builder_hw_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("broken.json");
+        std::fs::write(
+            &path,
+            r#"{"name": "broken", "device": "rram", "array": {"cols": 100}}"#,
+        )
+        .unwrap();
+        let err = format!("{:#}", valid().hw_profile(path.to_str().unwrap()).build().unwrap_err());
+        assert!(err.contains("not divisible"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

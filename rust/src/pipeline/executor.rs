@@ -163,6 +163,7 @@ mod tests {
         PrefixSpec {
             net: "resnet18".into(),
             hw: 32,
+            hw_profile: crate::hw::DEFAULT_PROFILE.into(),
             stats: StatsSource::Synthetic,
             profile_images: 1,
             seed: 5,

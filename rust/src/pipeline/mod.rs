@@ -9,9 +9,11 @@
 //! ```
 //!
 //! A [`Scenario`] names one experiment point (network × resolution ×
-//! stats source × allocation strategy × dataflow × PE budget × seed);
-//! construct one with the validating [`ScenarioBuilder`]. Strategy
-//! names resolve through [`crate::strategy::StrategyRegistry`] when the
+//! hardware profile × stats source × allocation strategy × dataflow ×
+//! PE budget × seed); construct one with the validating
+//! [`ScenarioBuilder`]. Strategy names resolve through
+//! [`crate::strategy::StrategyRegistry`] and hardware profiles through
+//! [`crate::hw::ProfileRegistry`] (name, alias, or JSON path) when the
 //! scenario runs. A scenario's [`PrefixSpec`] part determines the
 //! expensive prepared prefix, which [`executor::run_sweep`] computes
 //! once per distinct prefix and shares across all scenarios — in
@@ -41,8 +43,9 @@ pub use scenario::{scenarios_for, sweep_sizes, PrefixSpec, Scenario, StatsSource
 pub use stage::Stage;
 
 use crate::alloc::Allocator;
-use crate::config::{ArrayCfg, ChipCfg};
+use crate::config::ArrayCfg;
 use crate::dnn::{resnet18, vgg11, Graph};
+use crate::hw::{HwProfile, ProfileRegistry};
 use crate::mapping::{AllocationPlan, NetworkMap};
 use crate::sim::{DataflowModel, SimResult};
 use crate::stats::synth::{synth_activations, SynthCfg};
@@ -55,6 +58,9 @@ use std::path::PathBuf;
 /// the allocation/simulation choices.
 pub struct Prepared {
     pub spec: PrefixSpec,
+    /// The resolved hardware profile the map (and every scenario chip)
+    /// was built with.
+    pub hw: HwProfile,
     pub graph: Graph,
     pub map: NetworkMap,
     pub trace: NetTrace,
@@ -66,13 +72,13 @@ impl Prepared {
     /// pieces separately — e.g. [`crate::coordinator::Driver`] — share
     /// the same stage code).
     pub fn view(&self) -> PreparedView<'_> {
-        PreparedView { map: &self.map, trace: &self.trace, profile: &self.profile }
+        PreparedView { hw: &self.hw, map: &self.map, trace: &self.trace, profile: &self.profile }
     }
 
     /// Minimum PEs that fit one copy of the network (paper: 86 for
-    /// ResNet18).
+    /// ResNet18 at the `rram-128` profile).
     pub fn min_pes(&self) -> usize {
-        min_pes_of(&self.map)
+        min_pes_of(&self.map, self.hw.chip.arrays_per_pe)
     }
 }
 
@@ -80,6 +86,7 @@ impl Prepared {
 /// actually read from the prefix.
 #[derive(Clone, Copy)]
 pub struct PreparedView<'a> {
+    pub hw: &'a HwProfile,
     pub map: &'a NetworkMap,
     pub trace: &'a NetTrace,
     pub profile: &'a NetworkProfile,
@@ -145,31 +152,36 @@ pub fn build_graph(net: &str, hw: usize) -> Result<Graph> {
     Ok(graph)
 }
 
-/// Minimum PEs for one copy of a mapped network.
-pub fn min_pes_of(map: &NetworkMap) -> usize {
-    let per_pe = ChipCfg::paper(1).arrays_per_pe;
-    map.min_arrays().div_ceil(per_pe)
+/// Minimum PEs for one copy of a mapped network at `arrays_per_pe`
+/// arrays per PE (a [`crate::hw::ChipSpec`] property).
+pub fn min_pes_of(map: &NetworkMap, arrays_per_pe: usize) -> usize {
+    map.min_arrays().div_ceil(arrays_per_pe.max(1))
 }
 
-/// `BuildGraph → Map` only — enough to size a sweep without paying for
-/// statistics.
+/// `BuildGraph → Map` only at the default `rram-128` profile — enough
+/// to size a sweep without paying for statistics.
 pub fn min_pes(net: &str, hw: usize) -> Result<usize> {
+    let profile = ProfileRegistry::lookup(crate::hw::DEFAULT_PROFILE)?;
     let graph = build_graph(net, hw)?;
-    Ok(min_pes_of(&map_stage(&graph)))
+    Ok(min_pes_of(&map_stage(&graph, profile.array_cfg()?), profile.chip.arrays_per_pe))
 }
 
-fn map_stage(graph: &Graph) -> NetworkMap {
-    crate::mapping::map_network(graph, ArrayCfg::paper(), false)
+fn map_stage(graph: &Graph, array: ArrayCfg) -> NetworkMap {
+    crate::mapping::map_network(graph, array, false)
 }
 
 /// Run the five prefix stages for one [`PrefixSpec`], dumping each
-/// stage's artifact when a [`Dumper`] is given.
+/// stage's artifact when a [`Dumper`] is given. The spec's hardware
+/// profile resolves first ([`ProfileRegistry::resolve`] — registry name
+/// or JSON path), so bad hardware fails before any stage runs.
 pub fn prepare(spec: &PrefixSpec, dump: Option<&Dumper>) -> Result<Prepared> {
     anyhow::ensure!(
         spec.profile_images >= 1,
         "prefix {} needs at least one profiling image",
         spec.id()
     );
+    let hw = ProfileRegistry::resolve(&spec.hw_profile)?;
+    let array = hw.array_cfg()?;
     let sub = spec.id();
 
     // BuildGraph
@@ -179,7 +191,7 @@ pub fn prepare(spec: &PrefixSpec, dump: Option<&Dumper>) -> Result<Prepared> {
     }
 
     // Map
-    let map = map_stage(&graph);
+    let map = map_stage(&graph, array);
     if let Some(d) = dump {
         d.dump(&sub, Stage::Map, &artifact::map_json(&map))?;
     }
@@ -207,7 +219,7 @@ pub fn prepare(spec: &PrefixSpec, dump: Option<&Dumper>) -> Result<Prepared> {
         d.dump(&sub, Stage::Profile, &artifact::profile_json(&profile))?;
     }
 
-    Ok(Prepared { spec: spec.clone(), graph, map, trace, profile })
+    Ok(Prepared { spec: spec.clone(), hw, graph, map, trace, profile })
 }
 
 fn golden_activations(
@@ -237,7 +249,7 @@ pub fn run_scenario(
     dump: Option<&Dumper>,
 ) -> Result<ScenarioOutcome> {
     let sub = format!("{}/{}", sc.prefix.id(), sc.id());
-    let chip = ChipCfg::paper(sc.pes);
+    let chip = prep.hw.chip_cfg(sc.pes)?;
     let allocator = crate::strategy::StrategyRegistry::lookup_allocator(&sc.alloc)?;
     let flow = crate::strategy::StrategyRegistry::lookup_dataflow(&sc.dataflow)?;
 
@@ -282,6 +294,7 @@ mod tests {
         PrefixSpec {
             net: "resnet18".into(),
             hw: 32,
+            hw_profile: crate::hw::DEFAULT_PROFILE.into(),
             stats: StatsSource::Synthetic,
             profile_images: 1,
             seed: 7,
@@ -346,5 +359,34 @@ mod tests {
     fn unknown_net_rejected() {
         assert!(build_graph("alexnet", 32).is_err());
         assert!(min_pes("alexnet", 32).is_err());
+    }
+
+    #[test]
+    fn non_default_hardware_profile_reshapes_the_prefix() {
+        let mut pcram = spec();
+        pcram.hw_profile = "pcram-128".into();
+        let prep = prepare(&pcram, None).unwrap();
+        assert_eq!(prep.hw.name, "pcram-128");
+        assert_eq!(prep.map.array.cell_bits, 2);
+        // 2-bit cells halve the arrays per copy vs the paper point
+        let paper = prepare(&spec(), None).unwrap();
+        assert!(prep.map.min_arrays() < paper.map.min_arrays());
+        // and the scenario stages run end-to-end on the derived chip
+        let sc = ScenarioBuilder::from_prefix(&pcram)
+            .alloc("block-wise")
+            .pes(prep.min_pes() * 2)
+            .sim_images(4)
+            .build()
+            .unwrap();
+        let out = run_scenario(&prep.view(), &sc, None).unwrap();
+        assert!(out.result.throughput_ips > 0.0);
+    }
+
+    #[test]
+    fn unknown_hardware_profile_fails_before_any_stage() {
+        let mut s = spec();
+        s.hw_profile = "rram-129".into();
+        let err = prepare(&s, None).unwrap_err().to_string();
+        assert!(err.contains("did you mean 'rram-128'?"), "{err}");
     }
 }

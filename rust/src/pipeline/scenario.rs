@@ -38,11 +38,20 @@ impl StatsSource {
 /// Everything that determines the expensive shared prefix of a run
 /// (`BuildGraph → Map → Stats → Trace → Profile`). Scenarios with equal
 /// prefixes share one prepared prefix inside a sweep.
+///
+/// The hardware profile lives here (not in the scenario tail) because
+/// the array geometry shapes the mapping, the trace, and the profile —
+/// everything downstream of `Map`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PrefixSpec {
     pub net: String,
-    /// Input resolution (must match the artifact when `Golden`).
+    /// Input resolution — the CLI's `--res` (must match the artifact
+    /// when `Golden`). Not the hardware profile; that is `hw_profile`.
     pub hw: usize,
+    /// Hardware profile: a [`crate::hw::ProfileRegistry`] name/alias or
+    /// a path to a profile JSON (resolved by
+    /// [`crate::hw::ProfileRegistry::resolve`] when the prefix runs).
+    pub hw_profile: String,
     pub stats: StatsSource,
     /// Images used for profiling statistics.
     pub profile_images: usize,
@@ -54,7 +63,9 @@ pub struct PrefixSpec {
 impl PrefixSpec {
     /// Stable slug used as the dump sub-directory for prefix stages.
     /// Golden prefixes fold in the artifacts directory (sanitized), since
-    /// different artifact sets are different statistics sources.
+    /// different artifact sets are different statistics sources; a
+    /// non-default hardware profile folds in the same way, so paper-point
+    /// ids keep their historical form.
     pub fn id(&self) -> String {
         let mut id = format!(
             "{}_hw{}_{}_p{}_s{}",
@@ -64,9 +75,14 @@ impl PrefixSpec {
             self.profile_images,
             self.seed
         );
+        if self.hw_profile != crate::hw::DEFAULT_PROFILE {
+            id.push('_');
+            id.push_str(&sanitized_tag(&self.hw_profile));
+        }
         if self.stats == StatsSource::Golden {
-            // Sanitizing alone is not injective ("a_b" and "a.b" both map
-            // to "a-b"), so append a hash of the raw string.
+            // Unlike [`sanitized_tag`] this always appends the hash:
+            // artifact dirs are routinely path-like, and the historical
+            // golden-id format predates the helper.
             let dir: String = self
                 .artifacts_dir
                 .chars()
@@ -81,11 +97,27 @@ impl PrefixSpec {
         Json::obj(vec![
             ("net", Json::str(&self.net)),
             ("hw", Json::num(self.hw as f64)),
+            ("hw_profile", Json::str(&self.hw_profile)),
             ("stats", Json::str(self.stats.name())),
             ("profile_images", Json::num(self.profile_images as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("artifacts_dir", Json::str(&self.artifacts_dir)),
         ])
+    }
+}
+
+/// Path-safe tag for a name-or-path string: registry names pass through
+/// untouched; anything with path-ish characters is sanitized and (since
+/// sanitizing is not injective) hash-suffixed.
+fn sanitized_tag(raw: &str) -> String {
+    let clean: String = raw
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' { c } else { '-' })
+        .collect();
+    if clean == raw {
+        clean
+    } else {
+        format!("{clean}-{:08x}", fnv1a(raw.as_bytes()))
     }
 }
 
@@ -100,7 +132,8 @@ pub struct Scenario {
     /// Dataflow model name (a [`StrategyRegistry`] key); usually the
     /// strategy's default dataflow unless overridden.
     pub dataflow: String,
-    /// Processing elements on chip ([`crate::config::ChipCfg::paper`]).
+    /// Processing elements on chip (the chip is built by the prefix's
+    /// hardware profile, [`crate::hw::HwProfile::chip_cfg`]).
     pub pes: usize,
     /// Images pushed through the pipelined simulation.
     pub sim_images: usize,
@@ -183,6 +216,7 @@ mod tests {
         PrefixSpec {
             net: "resnet18".into(),
             hw: 64,
+            hw_profile: crate::hw::DEFAULT_PROFILE.into(),
             stats: StatsSource::Synthetic,
             profile_images: 2,
             seed: 7,
@@ -223,6 +257,23 @@ mod tests {
         let sc = scenario("perf-based", "block-wise");
         assert_eq!(sc.id(), "perf-based+block-wise_pes172_img8");
         assert_eq!(scenario("perf-based", "layer-wise").id(), "perf-based_pes172_img8");
+    }
+
+    #[test]
+    fn non_default_hw_profile_shows_up_in_the_prefix_id() {
+        // the default profile keeps the historical id form
+        assert_eq!(spec().id(), "resnet18_hw64_synth_p2_s7");
+        let mut s = spec();
+        s.hw_profile = "pcram-128".into();
+        assert_eq!(s.id(), "resnet18_hw64_synth_p2_s7_pcram-128");
+        // path-form profiles sanitize + hash so ids stay path-safe and
+        // distinct
+        let mut a = spec();
+        a.hw_profile = "profiles/custom.json".into();
+        let mut b = spec();
+        b.hw_profile = "profiles_custom.json".into();
+        assert!(!a.id().contains('/'), "{}", a.id());
+        assert_ne!(a.id(), b.id());
     }
 
     #[test]

@@ -76,33 +76,6 @@ pub trait DataflowModel: Send + Sync {
     ) -> u64;
 }
 
-/// Which dataflow schedules work within a layer.
-///
-/// **Deprecated shim** — kept for one release; [`Dataflow::model`]
-/// resolves the variant to its [`DataflowModel`] trait object. New code
-/// should name dataflows through [`crate::strategy::StrategyRegistry`].
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Dataflow {
-    /// Whole-layer copies, ganged blocks, per-patch barrier (§II).
-    LayerWise,
-    /// Independent per-block duplicate pools, dynamic dispatch (§III-C).
-    BlockWise,
-}
-
-impl Dataflow {
-    /// The trait object implementing this dataflow.
-    pub fn model(self) -> &'static dyn DataflowModel {
-        match self {
-            Dataflow::LayerWise => &dataflow::LAYER_WISE,
-            Dataflow::BlockWise => &dataflow::BLOCK_WISE,
-        }
-    }
-
-    pub fn name(self) -> &'static str {
-        self.model().name()
-    }
-}
-
 /// Simulation parameters.
 #[derive(Clone, Copy)]
 pub struct SimCfg {
@@ -131,19 +104,20 @@ impl SimCfg {
     /// Configuration implied by an allocation strategy paired with a
     /// dataflow model (the strategy decides the read discipline).
     pub fn for_strategy(
-        alloc: &dyn crate::alloc::Allocator,
+        alloc: &dyn Allocator,
         flow: &'static dyn DataflowModel,
         images: usize,
     ) -> SimCfg {
         SimCfg { mode: alloc.read_mode(), dataflow: flow, images, warmup: (images / 4).min(2) }
     }
 
-    /// Configuration implied by a paper algorithm.
-    ///
-    /// **Deprecated shim** — resolves the enum through the registry;
-    /// use [`SimCfg::for_strategy`] with registry lookups instead.
-    pub fn for_algorithm(alg: crate::alloc::Algorithm, images: usize) -> SimCfg {
-        SimCfg::for_strategy(alg.strategy(), alg.dataflow_model(), images)
+    /// Configuration implied by a registry strategy name paired with its
+    /// default dataflow (the common case; `--dataflow` overrides go
+    /// through [`SimCfg::for_strategy`] directly).
+    pub fn for_strategy_name(alloc: &str, images: usize) -> crate::Result<SimCfg> {
+        let a = crate::strategy::StrategyRegistry::lookup_allocator(alloc)?;
+        let flow = crate::strategy::StrategyRegistry::lookup_dataflow(a.default_dataflow())?;
+        Ok(SimCfg::for_strategy(a, flow, images))
     }
 }
 
@@ -255,29 +229,30 @@ pub fn simulate(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::alloc::{allocate, Algorithm};
     use crate::config::ArrayCfg;
     use crate::dnn::{resnet18, Graph, Op};
     use crate::mapping::{map_network, place};
     use crate::stats::synth::{synth_activations, SynthCfg};
     use crate::stats::{trace_from_activations, NetworkProfile};
+    use crate::strategy::StrategyRegistry;
 
-    fn run(alg: Algorithm, pes: usize) -> (SimResult, NetworkMap) {
+    fn run(alloc: &str, pes: usize) -> (SimResult, NetworkMap) {
         let g = resnet18(32, 10);
         let map = map_network(&g, ArrayCfg::paper(), false);
         let acts = synth_activations(&g, &map, 2, 17, SynthCfg::default());
         let trace = trace_from_activations(&g, &map, &acts);
         let prof = NetworkProfile::from_trace(&map, &trace);
         let chip = ChipCfg::paper(pes);
-        let plan = allocate(alg, &map, &prof, chip.total_arrays()).unwrap();
+        let a = StrategyRegistry::lookup_allocator(alloc).unwrap();
+        let plan = a.allocate(&map, &prof, chip.total_arrays()).unwrap();
         let placement = place(&map, &plan, &chip).unwrap();
-        let cfg = SimCfg::for_algorithm(alg, 6);
+        let cfg = SimCfg::for_strategy_name(alloc, 6).unwrap();
         (simulate(&chip, &map, &plan, &placement, &trace, cfg), map)
     }
 
     #[test]
     fn utilization_bounded() {
-        let (r, _) = run(Algorithm::BlockWise, 172);
+        let (r, _) = run("block-wise", 172);
         for &u in &r.layer_util {
             assert!((0.0..=1.0 + 1e-9).contains(&u), "util {u}");
         }
@@ -287,8 +262,8 @@ mod tests {
     #[test]
     fn blockwise_beats_weight_based() {
         // The paper's headline direction at 2x the minimum arrays.
-        let (bw, _) = run(Algorithm::BlockWise, 172);
-        let (wb, _) = run(Algorithm::WeightBased, 172);
+        let (bw, _) = run("block-wise", 172);
+        let (wb, _) = run("weight-based", 172);
         assert!(
             bw.throughput_ips > wb.throughput_ips,
             "block-wise {} <= weight-based {}",
@@ -299,15 +274,15 @@ mod tests {
 
     #[test]
     fn zero_skipping_beats_baseline() {
-        let (wb, _) = run(Algorithm::WeightBased, 172);
-        let (bl, _) = run(Algorithm::Baseline, 172);
+        let (wb, _) = run("weight-based", 172);
+        let (bl, _) = run("baseline", 172);
         assert!(wb.throughput_ips > bl.throughput_ips);
     }
 
     #[test]
     fn throughput_scales_with_pes() {
-        let (small, _) = run(Algorithm::BlockWise, 86);
-        let (large, _) = run(Algorithm::BlockWise, 344);
+        let (small, _) = run("block-wise", 86);
+        let (large, _) = run("block-wise", 344);
         assert!(
             large.throughput_ips > small.throughput_ips * 1.5,
             "small {} vs large {}",
@@ -318,7 +293,7 @@ mod tests {
 
     #[test]
     fn noc_not_saturated_at_paper_operating_point() {
-        let (r, _) = run(Algorithm::BlockWise, 172);
+        let (r, _) = run("block-wise", 172);
         assert!(
             r.noc.peak_link_utilization < 1.0,
             "peak link utilization {} — NoC assumption violated",
@@ -337,7 +312,10 @@ mod tests {
         let trace = trace_from_activations(&g, &map, &acts);
         let prof = NetworkProfile::from_trace(&map, &trace);
         let chip = ChipCfg::paper(1);
-        let plan = allocate(Algorithm::BlockWise, &map, &prof, chip.total_arrays()).unwrap();
+        let plan = StrategyRegistry::lookup_allocator("block-wise")
+            .unwrap()
+            .allocate(&map, &prof, chip.total_arrays())
+            .unwrap();
         let placement = place(&map, &plan, &chip).unwrap();
         let r = simulate(
             &chip,
@@ -356,10 +334,16 @@ mod tests {
     }
 
     #[test]
-    fn dataflow_enum_shim_resolves_models() {
-        assert_eq!(Dataflow::LayerWise.name(), "layer-wise");
-        assert_eq!(Dataflow::BlockWise.name(), "block-wise");
-        assert!(Dataflow::LayerWise.model().requires_uniform_plan());
-        assert!(!Dataflow::BlockWise.model().requires_uniform_plan());
+    fn registry_dataflows_declare_their_plan_contracts() {
+        let lw = StrategyRegistry::lookup_dataflow("layer-wise").unwrap();
+        let bw = StrategyRegistry::lookup_dataflow("block-wise").unwrap();
+        assert!(lw.requires_uniform_plan());
+        assert!(!bw.requires_uniform_plan());
+        // the strategy-name convenience pairs each allocator with its
+        // default dataflow and read mode
+        let cfg = SimCfg::for_strategy_name("baseline", 4).unwrap();
+        assert_eq!(cfg.mode, ReadMode::Baseline);
+        assert_eq!(cfg.dataflow.name(), "layer-wise");
+        assert!(SimCfg::for_strategy_name("bogus", 4).is_err());
     }
 }

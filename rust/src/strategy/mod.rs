@@ -18,6 +18,10 @@
 //! from the CLI (`--alloc`), the [`crate::pipeline::ScenarioBuilder`],
 //! and the sweep executor. Lookups fail with a did-you-mean suggestion
 //! (edit distance over registry keys) instead of a panic.
+//!
+//! The *hardware* half of the experiment space has the same open shape:
+//! [`crate::hw::ProfileRegistry`] maps names to device-model-backed
+//! hardware profiles the way this registry maps names to policies.
 
 use crate::alloc::{builtin, hybrid, Allocator};
 use crate::sim::{dataflow, DataflowModel};

@@ -22,6 +22,14 @@ impl Adc {
         Adc { bits }
     }
 
+    /// The ADC a hardware profile implies: precision derived from the
+    /// profile's device variance and bit-error budget
+    /// ([`super::variance::derive_adc_bits`]), `Err` when the variance
+    /// overflows even a 1-bit ADC.
+    pub fn for_profile(p: &crate::hw::HwProfile) -> crate::Result<Adc> {
+        Ok(Adc { bits: p.adc_bits()? })
+    }
+
     /// Max rows per batch this ADC can digitize losslessly.
     pub fn rows_per_batch(&self) -> usize {
         1 << self.bits
@@ -78,5 +86,13 @@ mod tests {
         assert_eq!(Adc::new(3).relative_area(), 1.0);
         assert_eq!(Adc::new(5).relative_area(), 4.0);
         assert_eq!(Adc::new(8).relative_area(), 32.0);
+    }
+
+    #[test]
+    fn profile_derived_adcs() {
+        use crate::hw::HwProfile;
+        assert_eq!(Adc::for_profile(&HwProfile::rram_128()).unwrap().bits, 3);
+        assert_eq!(Adc::for_profile(&HwProfile::pcram_128()).unwrap().bits, 1);
+        assert_eq!(Adc::for_profile(&HwProfile::sram_128()).unwrap().bits, 6);
     }
 }

@@ -8,11 +8,20 @@
 //! naive integer convolution and the L1 Pallas kernel); [`variance`]
 //! implements the device-to-device variance argument (§III-A) for why the
 //! paper caps ADCs at 3 bits.
+//!
+//! All of it is parameterized by the *lowered* operating point
+//! ([`crate::config::ArrayCfg`]) a hardware profile derives: the
+//! device's variance budget sets rows-per-ADC-read
+//! ([`variance::derive_adc_bits`]), which sets every cycle cost here.
+//! Profile-aware entry points: [`subarray::SubArray::for_profile`],
+//! [`adc::Adc::for_profile`], [`scheduler::profile_cycle_bounds`].
 
 pub mod scheduler;
 pub mod subarray;
 pub mod adc;
 pub mod variance;
 
-pub use scheduler::{baseline_cycles, zs_cycles, zs_cycles_for_slice, ReadMode};
+pub use scheduler::{
+    baseline_cycles, profile_cycle_bounds, zs_cycles, zs_cycles_for_slice, ReadMode,
+};
 pub use subarray::SubArray;

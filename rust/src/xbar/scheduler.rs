@@ -90,6 +90,16 @@ pub fn cycles_for_slice(cfg: &ArrayCfg, mode: ReadMode, xs: &[u8]) -> u32 {
     }
 }
 
+/// Best/worst-case cycles for a full-array dot product at a hardware
+/// profile's derived operating point (paper §IV: 64–1024 for `rram-128`).
+/// The spread is what `cimfab list-hw` reports per technology: the
+/// device's variance budget sets rows-per-read, which sets the batch
+/// count, which sets the bounds.
+pub fn profile_cycle_bounds(p: &crate::hw::HwProfile) -> crate::Result<(u64, u64)> {
+    let cfg = p.array_cfg()?;
+    Ok((cfg.best_case_cycles(), cfg.worst_case_cycles()))
+}
+
 /// Expected MACs per cycle for an array processing `rows`-long slices at
 /// the given mean cycle cost (the quantity the paper's performance-based
 /// allocation divides by).
@@ -215,6 +225,16 @@ mod tests {
         let slope1 = means[2] - means[1];
         let slope2 = means[3] - means[2];
         assert!((slope1 - slope2).abs() / slope1 < 0.25, "{means:?}");
+    }
+
+    #[test]
+    fn profile_bounds_track_the_derived_read_width() {
+        use crate::hw::HwProfile;
+        assert_eq!(profile_cycle_bounds(&HwProfile::rram_128()).unwrap(), (64, 1024));
+        // 2-row PCRAM reads quadruple the worst case; 64-row SRAM reads
+        // collapse it to two batches per plane
+        assert_eq!(profile_cycle_bounds(&HwProfile::pcram_128()).unwrap(), (64, 4096));
+        assert_eq!(profile_cycle_bounds(&HwProfile::sram_128()).unwrap(), (64, 128));
     }
 
     #[test]

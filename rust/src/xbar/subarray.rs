@@ -52,6 +52,31 @@ impl SubArray {
         SubArray { adc: Adc::new(cfg.adc_bits), cfg, planes, rows }
     }
 
+    /// Program an array at a hardware profile's derived operating point.
+    /// Errors (instead of panicking) when the profile is invalid or its
+    /// device stores multiple bits per cell — the functional model is
+    /// binary-cell only (multi-level cells change density/mapping, see
+    /// [`crate::mapping::grid`]).
+    pub fn for_profile(p: &crate::hw::HwProfile, weights: &[i8]) -> crate::Result<SubArray> {
+        let cfg = p.array_cfg()?;
+        anyhow::ensure!(
+            cfg.cell_bits == 1,
+            "profile '{}' stores {} bits per '{}' cell; the functional sub-array \
+             models binary cells only",
+            p.name,
+            cfg.cell_bits,
+            p.device.name()
+        );
+        anyhow::ensure!(
+            weights.len() % cfg.weight_cols() == 0 && weights.len() / cfg.weight_cols() <= cfg.rows,
+            "{} weights do not fill whole rows of a {}x{} array",
+            weights.len(),
+            cfg.rows,
+            cfg.weight_cols()
+        );
+        Ok(SubArray::program(cfg, weights))
+    }
+
     pub fn rows(&self) -> usize {
         self.rows
     }
@@ -192,6 +217,19 @@ mod tests {
         let (got, _) = sa.matvec(&x, ReadMode::ZeroSkip);
         assert_eq!(got[0], -128 * 255);
         assert_eq!(got[1], -255);
+    }
+
+    #[test]
+    fn profile_programming_checks_the_device() {
+        use crate::hw::HwProfile;
+        let w = vec![1i8; 16 * 16];
+        let sa = SubArray::for_profile(&HwProfile::rram_128(), &w).unwrap();
+        let (got, _) = sa.matvec(&vec![1u8; 16], ReadMode::ZeroSkip);
+        assert_eq!(got[0], 16);
+        // multi-level PCRAM cells are a mapping-level concern, not a
+        // functional-model panic
+        let err = SubArray::for_profile(&HwProfile::pcram_128(), &w).unwrap_err().to_string();
+        assert!(err.contains("binary cells"), "{err}");
     }
 
     #[test]

@@ -39,6 +39,39 @@ pub fn erfc(x: f64) -> f64 {
     poly * (-x * x).exp()
 }
 
+/// Largest number of simultaneously-read active cells whose per-read
+/// error rate stays within `ber_budget` at deviation `sigma`, capped at
+/// `max_rows` (the array height — beyond it the question is moot).
+///
+/// This is the §III-A argument run in reverse: instead of asserting
+/// "8 rows at 5%", a [`crate::hw::DeviceModel`]'s variance plus an error
+/// budget *derive* the read width for any technology.
+pub fn max_rows_per_read(sigma: f64, ber_budget: f64, max_rows: usize) -> usize {
+    let mut k = 0usize;
+    while k < max_rows && read_error_rate(k + 1, sigma) <= ber_budget {
+        k += 1;
+    }
+    k
+}
+
+/// ADC precision (bits) derived from a device's variance: the largest
+/// `b ≤ cap_bits` with `2^b ≤ rows` whose `2^b`-row read error rate
+/// stays within `ber_budget`. `None` when even a 2-row (1-bit) read
+/// overflows the budget — the variance is unusable for analog CIM.
+///
+/// At the paper's point (σ=5%, budget 1e-3, 128 rows) this yields 3 —
+/// "the maximum precision that can be read with no error".
+pub fn derive_adc_bits(
+    sigma: f64,
+    ber_budget: f64,
+    rows: usize,
+    cap_bits: usize,
+) -> Option<usize> {
+    (1..=cap_bits)
+        .rev()
+        .find(|&b| (1usize << b) <= rows && read_error_rate(1 << b, sigma) <= ber_budget)
+}
+
 /// Monte-Carlo read error rate: simulate `trials` reads of `k` active
 /// cells with per-cell current `N(1, sigma)` and count rounding errors.
 pub fn simulate_read_error_rate(k: usize, sigma: f64, trials: usize, seed: u64) -> f64 {
@@ -92,6 +125,28 @@ mod tests {
         assert!((erfc(1.0) - 0.157299).abs() < 1e-5);
         assert!((erfc(-1.0) - 1.842701).abs() < 1e-5);
         assert!(erfc(4.0) < 1e-7);
+    }
+
+    #[test]
+    fn derived_adc_bits_reproduce_the_paper_choice() {
+        // σ=5%, 1e-3 budget, 128-row array ⇒ 3 bits / 8 rows (§III-A)
+        assert_eq!(derive_adc_bits(0.05, 1e-3, 128, 6), Some(3));
+        // 10% variance (PCRAM-class) halves the read width twice ⇒ 1 bit
+        assert_eq!(derive_adc_bits(0.10, 1e-3, 128, 6), Some(1));
+        // near-deterministic cells are limited only by the area cap
+        assert_eq!(derive_adc_bits(0.002, 1e-3, 128, 6), Some(6));
+        // the cap never exceeds the array height
+        assert_eq!(derive_adc_bits(0.0, 1e-3, 4, 6), Some(2));
+        // an impossible budget overflows even a 2-row read
+        assert_eq!(derive_adc_bits(0.5, 1e-6, 128, 6), None);
+    }
+
+    #[test]
+    fn max_rows_consistent_with_derived_bits() {
+        let k = max_rows_per_read(0.05, 1e-3, 128);
+        assert!((8..16).contains(&k), "5% variance supports 8..16 rows, got {k}");
+        assert_eq!(max_rows_per_read(0.5, 1e-6, 128), 0);
+        assert_eq!(max_rows_per_read(0.0, 1e-3, 128), 128);
     }
 
     #[test]

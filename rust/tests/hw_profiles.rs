@@ -1,0 +1,325 @@
+//! Hardware-profile API guarantees:
+//!
+//! * **golden parity** — the `rram-128` profile drives the pipeline to
+//!   byte-identical stage artifacts vs the pre-refactor
+//!   `ArrayCfg::paper()` path, reconstructed here verbatim from the
+//!   seed's literal constants;
+//! * **validation** — propcheck over random spec knobs: `HwProfile`
+//!   accepts exactly the valid combinations and rejects zero geometry,
+//!   non-divisible cell bits, and variance budgets that overflow the
+//!   ADC — as `Result`s, never panics;
+//! * **serde round-trip** — every registered profile survives
+//!   JSON → parse → JSON byte-for-byte;
+//! * **openness** — a custom profile JSON on disk and a
+//!   runtime-registered device/profile are immediately drivable through
+//!   `--hw` semantics ([`ProfileRegistry::resolve`]) and the pipeline.
+
+use cimfab::config::{ArrayCfg, ChipCfg};
+use cimfab::hw::{ArraySpec, ChipSpec, DeviceModel, HwProfile, ProfileRegistry};
+use cimfab::mapping::map_network;
+use cimfab::pipeline::{self, artifact, ScenarioBuilder};
+use cimfab::sim::{simulate, SimCfg};
+use cimfab::stats::synth::{synth_activations, SynthCfg};
+use cimfab::stats::{trace_from_activations, NetworkProfile};
+use cimfab::strategy::StrategyRegistry;
+use cimfab::util::propcheck;
+use cimfab::xbar::variance;
+
+/// The seed's `ArrayCfg::paper()` literal, reproduced verbatim.
+fn pre_refactor_array() -> ArrayCfg {
+    ArrayCfg {
+        rows: 128,
+        cols: 128,
+        weight_bits: 8,
+        input_bits: 8,
+        adc_bits: 3,
+        col_mux: 8,
+        skip_empty_planes: true,
+        cell_bits: 1,
+    }
+}
+
+/// The seed's `ChipCfg::paper(pes)` literal, reproduced verbatim.
+fn pre_refactor_chip(pes: usize) -> ChipCfg {
+    ChipCfg {
+        pes,
+        arrays_per_pe: 64,
+        clock_hz: 100e6,
+        array: pre_refactor_array(),
+        feature_packet_bytes: 128,
+        psum_packet_bytes: 64,
+        link_bytes_per_cycle: 32,
+        router_latency: 1,
+        pipeline_images: 8,
+    }
+}
+
+#[test]
+fn rram_128_lowering_matches_the_pre_refactor_literals() {
+    let p = ProfileRegistry::lookup("rram-128").unwrap();
+    assert_eq!(p.array_cfg().unwrap(), pre_refactor_array());
+    assert_eq!(p.chip_cfg(172).unwrap(), pre_refactor_chip(172));
+    // and the shims resolve through the profile
+    assert_eq!(ArrayCfg::paper(), pre_refactor_array());
+    assert_eq!(ChipCfg::paper(86), pre_refactor_chip(86));
+}
+
+#[test]
+fn rram_128_pipeline_reproduces_pre_refactor_stage_artifacts_byte_for_byte() {
+    // New path: the profile-threaded pipeline at the default profile.
+    let spec = ScenarioBuilder::new()
+        .net("resnet18")
+        .hw(32)
+        .profile_images(1)
+        .seed(7)
+        .prefix()
+        .unwrap();
+    assert_eq!(spec.hw_profile, "rram-128");
+    let prep = pipeline::prepare(&spec, None).unwrap();
+    let sc = ScenarioBuilder::from_prefix(&spec)
+        .alloc("block-wise")
+        .pes(172)
+        .sim_images(4)
+        .build()
+        .unwrap();
+    let out = pipeline::run_scenario(&prep.view(), &sc, None).unwrap();
+
+    // Old path: the seed's stage sequence with literal configs.
+    let graph = pipeline::build_graph("resnet18", 32).unwrap();
+    let map = map_network(&graph, pre_refactor_array(), false);
+    let acts = synth_activations(&graph, &map, 1, 7, SynthCfg::default());
+    let trace = trace_from_activations(&graph, &map, &acts);
+    let profile = NetworkProfile::from_trace(&map, &trace);
+    let chip = pre_refactor_chip(172);
+    let allocator = StrategyRegistry::lookup_allocator("block-wise").unwrap();
+    let flow = StrategyRegistry::lookup_dataflow("block-wise").unwrap();
+    let plan = allocator.allocate(&map, &profile, chip.total_arrays()).unwrap();
+    let placement = cimfab::mapping::place(&map, &plan, &chip).unwrap();
+    let result =
+        simulate(&chip, &map, &plan, &placement, &trace, SimCfg::for_strategy(allocator, flow, 4));
+
+    // Byte-identical artifacts at every shared stage.
+    assert_eq!(
+        artifact::map_json(&prep.map).pretty(),
+        artifact::map_json(&map).pretty(),
+        "Map artifact diverged"
+    );
+    assert_eq!(
+        artifact::trace_json(&prep.map, &prep.trace).pretty(),
+        artifact::trace_json(&map, &trace).pretty(),
+        "Trace artifact diverged"
+    );
+    assert_eq!(
+        artifact::profile_json(&prep.profile).pretty(),
+        artifact::profile_json(&profile).pretty(),
+        "Profile artifact diverged"
+    );
+    assert_eq!(
+        artifact::plan_json(&out.plan, &prep.map).pretty(),
+        artifact::plan_json(&plan, &map).pretty(),
+        "Allocate artifact diverged"
+    );
+    assert_eq!(
+        artifact::sim_result_json(&out.result).pretty(),
+        artifact::sim_result_json(&result).pretty(),
+        "Simulate artifact diverged"
+    );
+}
+
+#[test]
+fn profile_validation_propcheck() {
+    let devices: [&'static dyn DeviceModel; 3] = [
+        ProfileRegistry::lookup_device("rram").unwrap(),
+        ProfileRegistry::lookup_device("pcram").unwrap(),
+        ProfileRegistry::lookup_device("sram").unwrap(),
+    ];
+    propcheck::check("HwProfile validation", 0x55AA, 150, |rng| {
+        let rows = [0usize, 64, 100, 128, 256][rng.index(5)];
+        let cols = [0usize, 64, 100, 128][rng.index(4)];
+        let col_mux = [1usize, 7, 8, 16][rng.index(4)];
+        let adc_bits_cap = [0usize, 3, 6][rng.index(3)];
+        let ber_budget = [1e-3, 1e-30][rng.index(2)];
+        let device = devices[rng.index(3)];
+        let spec =
+            ArraySpec { rows, cols, col_mux, adc_bits_cap, ber_budget, ..ArraySpec::default() };
+
+        let cells_per_weight = 8 / device.cell_bits();
+        let should_be_valid = rows >= 1
+            && cols >= 1
+            && cols % cells_per_weight == 0
+            && cols % col_mux == 0
+            && adc_bits_cap >= 1
+            && variance::derive_adc_bits(device.variance(), ber_budget, rows, adc_bits_cap)
+                .is_some();
+
+        let built = HwProfile::new("prop", "propcheck case", device, spec, ChipSpec::default());
+        cimfab::prop_assert!(
+            built.is_ok() == should_be_valid,
+            "rows={rows} cols={cols} mux={col_mux} cap={adc_bits_cap} ber={ber_budget:.0e} \
+             dev={}: expected valid={should_be_valid}, got {built:?}",
+            device.name()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn every_registered_profile_roundtrips_through_json() {
+    let profiles = ProfileRegistry::snapshot().profiles();
+    assert!(profiles.len() >= 4, "expected the four built-ins at least");
+    for p in profiles {
+        let text = p.to_json().pretty();
+        let back = HwProfile::from_json(&cimfab::util::json::Json::parse(&text).unwrap())
+            .unwrap_or_else(|e| panic!("{}: {e:#}", p.name));
+        assert_eq!(back, p, "{} changed across the JSON round-trip", p.name);
+        assert_eq!(back.to_json().pretty(), text, "{} re-emits differently", p.name);
+        assert_eq!(back.array_cfg().unwrap(), p.array_cfg().unwrap());
+    }
+}
+
+#[test]
+fn registry_covers_at_least_three_device_technologies() {
+    let reg = ProfileRegistry::snapshot();
+    let mut techs: Vec<&str> = reg.devices().iter().map(|d| d.name()).collect();
+    techs.sort_unstable();
+    techs.dedup();
+    assert!(techs.len() >= 3, "list-hw must report >= 3 technologies, got {techs:?}");
+    // and the profiles actually span them
+    let mut used: Vec<String> =
+        reg.profiles().iter().map(|p| p.device.name().to_string()).collect();
+    used.sort_unstable();
+    used.dedup();
+    assert!(used.len() >= 3, "built-in profiles span {used:?}");
+}
+
+#[test]
+fn custom_json_profile_drives_the_pipeline_end_to_end() {
+    let dir = std::env::temp_dir().join(format!("cimfab_hw_e2e_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("skinny-rram.json");
+    std::fs::write(
+        &path,
+        r#"{
+  "name": "skinny-rram",
+  "description": "64-column RRAM variant defined in userland JSON",
+  "device": "rram",
+  "array": { "cols": 64, "col_mux": 8 },
+  "chip": { "arrays_per_pe": 128 }
+}
+"#,
+    )
+    .unwrap();
+    let path_str = path.to_str().unwrap().to_string();
+
+    // resolve() accepts the path directly (the --hw grammar)
+    let p = ProfileRegistry::resolve(&path_str).unwrap();
+    assert_eq!(p.name, "skinny-rram");
+    assert_eq!(p.array_cfg().unwrap().cols, 64);
+    assert_eq!(p.array_cfg().unwrap().adc_bits, 3, "derivation is device-, not file-, driven");
+
+    // and the whole pipeline runs on it
+    let spec = ScenarioBuilder::new()
+        .net("resnet18")
+        .hw(32)
+        .hw_profile(path_str.clone())
+        .profile_images(1)
+        .seed(5)
+        .prefix()
+        .unwrap();
+    assert_eq!(spec.hw_profile, path_str, "paths are not canonicalized away");
+    assert_ne!(spec.id(), spec.id().replace("skinny-rram", ""), "profile tags the prefix id");
+    let prep = pipeline::prepare(&spec, None).unwrap();
+    assert_eq!(prep.hw.name, "skinny-rram");
+    // 64-wide arrays halve the weight columns per array => more arrays
+    assert!(prep.map.min_arrays() > 5472 / 2, "skinny arrays need more tiles");
+    let sc = ScenarioBuilder::from_prefix(&spec)
+        .alloc("block-wise")
+        .pes(prep.min_pes() * 2)
+        .sim_images(4)
+        .build()
+        .unwrap();
+    let out = pipeline::run_scenario(&prep.view(), &sc, None).unwrap();
+    assert!(out.result.throughput_ips > 0.0);
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn prefix_specs_differing_only_in_hardware_do_not_share_a_prefix() {
+    let base = ScenarioBuilder::new()
+        .net("resnet18")
+        .hw(32)
+        .profile_images(1)
+        .seed(9)
+        .prefix()
+        .unwrap();
+    let mut sram = base.clone();
+    sram.hw_profile = "sram-128".into();
+    assert_ne!(base.id(), sram.id(), "hardware must split the sweep's prefix cache");
+    assert!(sram.id().contains("sram-128"), "{}", sram.id());
+}
+
+/// A userland device registered at runtime: ferroelectric-ish, 4 bits
+/// per cell, modest variance.
+struct FeFet;
+
+impl DeviceModel for FeFet {
+    fn name(&self) -> &str {
+        "fefet-test"
+    }
+    fn describe(&self) -> &str {
+        "4-bit/cell test device"
+    }
+    fn cell_bits(&self) -> usize {
+        4
+    }
+    fn variance(&self) -> f64 {
+        0.03
+    }
+    fn read_energy_pj(&self) -> f64 {
+        0.05
+    }
+    fn write_energy_pj(&self) -> f64 {
+        5.0
+    }
+    fn write_latency_ns(&self) -> f64 {
+        50.0
+    }
+    fn leakage_pw(&self) -> f64 {
+        900_000.0
+    }
+}
+
+#[test]
+fn runtime_registered_device_and_profile_drive_the_pipeline() {
+    ProfileRegistry::register_global_device(&FeFet).unwrap();
+    // 4-bit cells: 2 cells per weight; 3% variance sustains 16-row reads
+    let profile = HwProfile::new(
+        "fefet-128",
+        "runtime-registered test profile",
+        &FeFet,
+        ArraySpec::default(),
+        ChipSpec::default(),
+    )
+    .unwrap();
+    assert_eq!(profile.array_cfg().unwrap().adc_bits, 4, "3% variance sustains 16-row reads");
+    ProfileRegistry::register_global(profile).unwrap();
+    // duplicate registration is rejected
+    assert!(ProfileRegistry::register_global_device(&FeFet).is_err());
+
+    let sc = ScenarioBuilder::new()
+        .net("resnet18")
+        .hw(32)
+        .hw_profile("fefet-128")
+        .profile_images(1)
+        .alloc("hybrid")
+        .pes(120)
+        .sim_images(4)
+        .build()
+        .unwrap();
+    let prep = pipeline::prepare(&sc.prefix, None).unwrap();
+    assert_eq!(prep.map.array.cell_bits, 4);
+    let out = pipeline::run_scenario(&prep.view(), &sc, None).unwrap();
+    assert_eq!(out.plan.algorithm, "hybrid");
+    assert!(out.result.throughput_ips > 0.0);
+}

@@ -16,7 +16,7 @@ fn both_networks_full_pipeline_synthetic() {
             profile_images: 1,
             sim_images: 4,
             seed: 3,
-            artifacts_dir: "artifacts".into(),
+            ..DriverOpts::default()
         })
         .unwrap();
         let results = d.run_all(d.min_pes() * 2).unwrap();
@@ -62,7 +62,7 @@ fn fig_tables_render_from_driver() {
         profile_images: 1,
         sim_images: 4,
         seed: 8,
-        artifacts_dir: "artifacts".into(),
+        ..DriverOpts::default()
     })
     .unwrap();
     let fig4 = cimfab::report::fig4_table(&d.map, &d.profile).render();

@@ -106,7 +106,7 @@ fn golden_stats_drive_the_full_driver() {
         profile_images: 1,
         sim_images: 4,
         seed: 5,
-        artifacts_dir: "artifacts".into(),
+        ..DriverOpts::default()
     })
     .unwrap();
     let results = d.run_all(d.min_pes() * 2).unwrap();

@@ -20,7 +20,7 @@ fn driver() -> Driver {
         profile_images: 2,
         sim_images: 6,
         seed: 99,
-        artifacts_dir: "artifacts".into(),
+        ..DriverOpts::default()
     })
     .unwrap()
 }

@@ -18,6 +18,7 @@ fn spec(seed: u64) -> PrefixSpec {
     PrefixSpec {
         net: "resnet18".into(),
         hw: 32,
+        hw_profile: cimfab::hw::DEFAULT_PROFILE.into(),
         stats: StatsSource::Synthetic,
         profile_images: 1,
         seed,
@@ -146,7 +147,7 @@ fn sweep_reproduces_the_driver_path() {
         profile_images: 1,
         sim_images: 4,
         seed: 13,
-        artifacts_dir: "artifacts".into(),
+        ..DriverOpts::default()
     })
     .unwrap();
     let outcomes = run_sweep(&scenarios(13), &SweepCfg { threads: 3, dump_dir: None }).unwrap();
@@ -191,6 +192,7 @@ fn multi_prefix_sweep_prepares_each_prefix_once_and_stays_ordered() {
         let prefix = PrefixSpec {
             net: net.into(),
             hw: 32,
+            hw_profile: cimfab::hw::DEFAULT_PROFILE.into(),
             stats: StatsSource::Synthetic,
             profile_images: 1,
             seed: 3,

@@ -56,20 +56,6 @@ fn registry_allocators_match_pre_refactor_enum_paths_byte_for_byte() {
 }
 
 #[test]
-fn enum_shim_and_registry_agree() {
-    let (map, prof) = setup();
-    let budget = map.min_arrays() * 2;
-    for alg in cimfab::alloc::Algorithm::all() {
-        let via_enum = cimfab::alloc::allocate(alg, &map, &prof, budget).unwrap();
-        let via_registry = StrategyRegistry::lookup_allocator(alg.name())
-            .unwrap()
-            .allocate(&map, &prof, budget)
-            .unwrap();
-        assert_eq!(via_enum, via_registry, "{}", alg.name());
-    }
-}
-
-#[test]
 fn all_registered_allocators_produce_valid_plans() {
     let (map, prof) = setup();
     let budget = map.min_arrays() * 2;
@@ -156,6 +142,7 @@ fn runtime_registered_strategy_drives_the_pipeline() {
     let spec = PrefixSpec {
         net: "resnet18".into(),
         hw: 32,
+        hw_profile: cimfab::hw::DEFAULT_PROFILE.into(),
         stats: StatsSource::Synthetic,
         profile_images: 1,
         seed: 3,
