@@ -74,7 +74,13 @@ fn main() {
                 plan,
                 &placement,
                 trace,
-                SimCfg { mode: ReadMode::ZeroSkip, dataflow: flow, images: 8, warmup: 2 },
+                SimCfg {
+                    mode: ReadMode::ZeroSkip,
+                    dataflow: flow,
+                    engine: &cimfab::sim::engine::EVENT,
+                    images: 8,
+                    warmup: 2,
+                },
             );
             ips = r.throughput_ips;
         });

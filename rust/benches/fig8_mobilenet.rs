@@ -1,0 +1,91 @@
+//! Fig 8-style sweep on MobileNetV1 (extension workload): performance vs
+//! design size for the four paper algorithms on a depthwise-separable
+//! network.
+//!
+//! MobileNet stresses the allocators differently from ResNet/VGG: the
+//! depthwise layers are weight-tiny but slow per copy (block-diagonal
+//! mapping, few channels per array), while the pointwise layers carry
+//! the MACs on wide, short matrices — a much larger per-layer latency
+//! spread than either paper workload. The paper's qualitative shape
+//! (block-wise ≥ perf-based ≥ weight-based > baseline, growing with
+//! design size) is the reproduction target.
+
+use cimfab::pipeline::{self, run_scenarios_prepared, PrefixSpec, StatsSource, SweepCfg};
+use cimfab::report;
+use cimfab::strategy::StrategyRegistry;
+use cimfab::util::bench::{banner, Bencher};
+
+fn main() {
+    banner(
+        "Fig 8 — MobileNetV1",
+        "performance vs #PEs on the depthwise-separable extension workload",
+    );
+    let spec = PrefixSpec {
+        net: "mobilenet".into(),
+        hw: 64,
+        hw_profile: cimfab::hw::DEFAULT_PROFILE.into(),
+        stats: StatsSource::Synthetic,
+        profile_images: 2,
+        seed: 7,
+        artifacts_dir: "artifacts".into(),
+    };
+    let mut b = Bencher::new(0, 1);
+    let mut prep = None;
+    b.bench("prepare mobilenet prefix", || {
+        prep = Some(pipeline::prepare(&spec, None).unwrap());
+    });
+    let prep = prep.unwrap();
+    println!(
+        "min design size: {} PEs ({} arrays, {} conv layers of which {} depthwise)\n",
+        prep.min_pes(),
+        prep.map.min_arrays(),
+        prep.map.grids.len(),
+        prep.map.grids.iter().filter(|g| g.diagonal).count()
+    );
+
+    let sizes = pipeline::sweep_sizes(prep.min_pes(), 5);
+    let scenarios =
+        pipeline::scenarios_for(&spec, &sizes, &StrategyRegistry::paper_allocators(), 8);
+    let mut outcomes = Vec::new();
+    b.bench(&format!("sweep {} scenarios", scenarios.len()), || {
+        outcomes = run_scenarios_prepared(&prep, &scenarios, &SweepCfg::parallel()).unwrap();
+    });
+    println!("{}", report::fig8_from_outcomes(&outcomes).render());
+
+    let mut tt = cimfab::util::table::Table::new(["PEs", "vs baseline", "vs weight", "vs perf"]);
+    let mut ratios = Vec::new();
+    for &pes in &sizes {
+        let get = |alloc: &str| {
+            outcomes
+                .iter()
+                .find(|o| o.scenario.alloc == alloc && o.scenario.pes == pes)
+                .unwrap()
+                .result
+                .throughput_ips
+        };
+        let r = (
+            pes,
+            get("block-wise") / get("baseline"),
+            get("block-wise") / get("weight-based"),
+            get("block-wise") / get("perf-based"),
+        );
+        tt.row([
+            pes.to_string(),
+            format!("{:.2}x", r.1),
+            format!("{:.2}x", r.2),
+            format!("{:.2}x", r.3),
+        ]);
+        ratios.push(r);
+    }
+    println!("block-wise speedups by design size:\n{}", tt.render());
+
+    // qualitative shape: above the minimum size, block-wise beats
+    // baseline and must not lose to the other zero-skip strategies
+    for (pes, vs_base, vs_w, vs_p) in &ratios[1..] {
+        assert!(*vs_base > 1.0, "block-wise loses to baseline at {pes} PEs");
+        assert!(*vs_w >= 0.99, "block-wise loses to weight-based at {pes} PEs");
+        assert!(*vs_p >= 0.99, "block-wise loses to perf-based at {pes} PEs");
+    }
+    println!("paper shape check: PASS");
+    println!("\n{}", b.report());
+}

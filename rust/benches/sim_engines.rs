@@ -1,0 +1,100 @@
+//! Engine bench: event-driven vs cycle-stepped on the Fig 8 sweep path.
+//!
+//! Runs the same ResNet18 scenario batch (sizes × the four paper
+//! algorithms) under both [`cimfab::sim::engine`] implementations,
+//! cross-checks the results **bit-identical** through the canonical
+//! simulate artifact, measures the wall-clock gap, and emits
+//! `BENCH_sim_engines.json` (archived by CI) with the measured speedup.
+//! Acceptance target: the event engine is ≥5× faster on the sweep path
+//! — in practice the gap is orders of magnitude, since the stepped
+//! engine's cost scales with simulated *cycles* while the event engine's
+//! scales with work *items*.
+
+use cimfab::pipeline::{self, run_scenarios_prepared, PrefixSpec, StatsSource, SweepCfg};
+use cimfab::util::bench::{banner, fmt_duration, Bencher};
+use cimfab::util::json::Json;
+
+fn main() {
+    banner(
+        "Simulation engines",
+        "event-driven (next-event-time) vs cycle-stepped reference on the Fig 8 sweep path",
+    );
+    let spec = PrefixSpec {
+        net: "resnet18".into(),
+        hw: 32,
+        hw_profile: cimfab::hw::DEFAULT_PROFILE.into(),
+        stats: StatsSource::Synthetic,
+        profile_images: 1,
+        seed: 7,
+        artifacts_dir: "artifacts".into(),
+    };
+    let prep = pipeline::prepare(&spec, None).unwrap();
+    let sizes = pipeline::sweep_sizes(prep.min_pes(), 3); // 86, 122, 172
+    let event_scenarios = pipeline::scenarios_for(
+        &spec,
+        &sizes,
+        &cimfab::strategy::StrategyRegistry::paper_allocators(),
+        4,
+    );
+    let stepped_scenarios: Vec<_> = event_scenarios
+        .iter()
+        .cloned()
+        .map(|mut sc| {
+            sc.engine = "stepped".into();
+            sc
+        })
+        .collect();
+    let n = event_scenarios.len();
+
+    let mut b = Bencher::new(1, 3);
+    let mut event_out = Vec::new();
+    let m_event = b
+        .bench(&format!("{n} scenarios, event engine"), || {
+            event_out =
+                run_scenarios_prepared(&prep, &event_scenarios, &SweepCfg::serial()).unwrap();
+        })
+        .summary
+        .mean;
+    let mut stepped_out = Vec::new();
+    let mut b2 = Bencher::new(0, 1); // the stepped engine is far too slow to repeat
+    let m_stepped = b2
+        .bench(&format!("{n} scenarios, stepped engine"), || {
+            stepped_out =
+                run_scenarios_prepared(&prep, &stepped_scenarios, &SweepCfg::serial()).unwrap();
+        })
+        .summary
+        .mean;
+
+    // bit-identical results, checked through the canonical artifact
+    for (e, s) in event_out.iter().zip(&stepped_out) {
+        assert_eq!(
+            pipeline::artifact::sim_result_json(&e.result).compact(),
+            pipeline::artifact::sim_result_json(&s.result).compact(),
+            "engines diverged at {}",
+            e.scenario.id()
+        );
+    }
+    println!("parity: event == stepped on all {n} scenarios (full artifact compare)");
+
+    let speedup = m_stepped / m_event.max(1e-12);
+    println!(
+        "event {} vs stepped {} → speedup {speedup:.1}x (target >= 5x)",
+        fmt_duration(m_event),
+        fmt_duration(m_stepped)
+    );
+    assert!(speedup >= 5.0, "event engine only {speedup:.1}x faster than stepped");
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("sim_engines")),
+        ("net", Json::str("resnet18")),
+        ("scenarios", Json::num(n as f64)),
+        ("event_mean_s", Json::Num(m_event)),
+        ("stepped_mean_s", Json::Num(m_stepped)),
+        ("speedup", Json::Num(speedup)),
+    ]);
+    let mut text = doc.pretty();
+    text.push('\n');
+    std::fs::write("BENCH_sim_engines.json", text).unwrap();
+    println!("wrote BENCH_sim_engines.json");
+    println!("\n{}\n{}", b.report(), b2.report());
+}

@@ -27,9 +27,13 @@ pub struct PerfBased;
 #[derive(Debug, Clone, Copy)]
 pub struct BlockWise;
 
+/// The registered `baseline` strategy.
 pub static BASELINE: Baseline = Baseline;
+/// The registered `weight-based` strategy.
 pub static WEIGHT_BASED: WeightBased = WeightBased;
+/// The registered `perf-based` strategy.
 pub static PERF_BASED: PerfBased = PerfBased;
+/// The registered `block-wise` strategy.
 pub static BLOCK_WISE: BlockWise = BlockWise;
 
 impl Allocator for Baseline {

@@ -44,6 +44,37 @@ use crate::xbar::ReadMode;
 /// parallel-sweep guarantees depend on it. `allocate` is responsible
 /// for setting [`AllocationPlan::algorithm`] to [`Allocator::name`] and
 /// validating the plan against the budget ([`finish_plan`] does both).
+///
+/// A minimal strategy, run end to end against a real mapped network:
+///
+/// ```
+/// use cimfab::alloc::{finish_plan, Allocator};
+/// use cimfab::mapping::{AllocationPlan, NetworkMap};
+/// use cimfab::stats::NetworkProfile;
+///
+/// struct MinimalEverywhere;
+/// impl Allocator for MinimalEverywhere {
+///     fn name(&self) -> &str { "minimal-everywhere" }
+///     fn describe(&self) -> &str { "one copy of every block" }
+///     fn allocate(&self, map: &NetworkMap, _profile: &NetworkProfile,
+///                 budget: usize) -> cimfab::Result<AllocationPlan> {
+///         finish_plan(AllocationPlan::minimal(map), self.name(), map, budget)
+///     }
+/// }
+///
+/// let g = cimfab::dnn::vgg11(32, 10);
+/// let map = cimfab::mapping::map_network(&g, cimfab::config::ArrayCfg::paper(), false);
+/// let acts = cimfab::stats::synth::synth_activations(&g, &map, 1, 7, Default::default());
+/// let trace = cimfab::stats::trace_from_activations(&g, &map, &acts);
+/// let prof = NetworkProfile::from_trace(&map, &trace);
+/// let plan = MinimalEverywhere.allocate(&map, &prof, map.min_arrays()).unwrap();
+/// assert_eq!(plan.arrays_used(&map), map.min_arrays());
+/// ```
+///
+/// Register it with
+/// [`crate::strategy::StrategyRegistry::register_global`] and it is
+/// immediately drivable from `--alloc`, the scenario builder, and the
+/// sweep executor.
 pub trait Allocator: Send + Sync {
     /// Registry key and CLI `--alloc` name (kebab-case).
     fn name(&self) -> &str;

@@ -149,6 +149,7 @@ impl ArrayCfg {
         (self.input_bits * self.col_mux) as u64
     }
 
+    /// Deterministic JSON form.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("rows", Json::num(self.rows as f64)),
@@ -162,6 +163,8 @@ impl ArrayCfg {
         ])
     }
 
+    /// Parse from JSON, filling absent fields with paper defaults;
+    /// validates the result.
     pub fn from_json(j: &Json) -> crate::Result<ArrayCfg> {
         let d = ArrayCfg::paper();
         let cfg = ArrayCfg {
@@ -188,9 +191,11 @@ pub struct ChipCfg {
     pub arrays_per_pe: usize,
     /// Clock (paper: 100 MHz).
     pub clock_hz: f64,
+    /// Sub-array geometry + read discipline.
     pub array: ArrayCfg,
     /// Feature/psum packet sizes in bytes (for the NoC model).
     pub feature_packet_bytes: usize,
+    /// Partial-sum packet size in bytes.
     pub psum_packet_bytes: usize,
     /// NoC link payload bytes moved per cycle per link.
     pub link_bytes_per_cycle: usize,
@@ -212,6 +217,7 @@ impl ChipCfg {
             .expect("the built-in rram-128 profile is always valid (pes >= 1)")
     }
 
+    /// Total arrays on chip.
     pub fn total_arrays(&self) -> usize {
         self.pes * self.arrays_per_pe
     }
@@ -221,6 +227,7 @@ impl ChipCfg {
         (self.pes as f64).sqrt().ceil() as usize
     }
 
+    /// Deterministic JSON form.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("pes", Json::num(self.pes as f64)),
@@ -235,6 +242,8 @@ impl ChipCfg {
         ])
     }
 
+    /// Parse from JSON; `pes` is required, everything else defaults to
+    /// the paper point at that size.
     pub fn from_json(j: &Json) -> crate::Result<ChipCfg> {
         let pes = j
             .get("pes")
@@ -260,11 +269,13 @@ impl ChipCfg {
         })
     }
 
+    /// Load a chip-config JSON from `path`.
     pub fn load(path: &str) -> crate::Result<ChipCfg> {
         let text = std::fs::read_to_string(path)?;
         ChipCfg::from_json(&Json::parse(&text)?)
     }
 
+    /// Write the config JSON to `path`.
     pub fn save(&self, path: &str) -> crate::Result<()> {
         std::fs::write(path, self.to_json().pretty())?;
         Ok(())

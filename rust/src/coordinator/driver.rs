@@ -20,6 +20,7 @@ pub use crate::pipeline::StatsSource;
 /// Driver configuration.
 #[derive(Debug, Clone)]
 pub struct DriverOpts {
+    /// Network name (one of [`crate::pipeline::KNOWN_NETS`]).
     pub net: String,
     /// Input resolution — the CLI's `--res` (must match the artifact
     /// when `Golden`). Not the hardware profile; that is `hw_profile`.
@@ -27,12 +28,15 @@ pub struct DriverOpts {
     /// Hardware profile name/alias or profile-JSON path
     /// ([`crate::hw::ProfileRegistry::resolve`]).
     pub hw_profile: String,
+    /// Where activation statistics come from.
     pub stats: StatsSource,
     /// Images used for profiling statistics.
     pub profile_images: usize,
     /// Images pushed through the pipelined simulation.
     pub sim_images: usize,
+    /// Deterministic seed for synthetic statistics.
     pub seed: u64,
+    /// Where the AOT artifacts live (used only with `Golden`).
     pub artifacts_dir: String,
 }
 
@@ -69,12 +73,17 @@ impl DriverOpts {
 /// A fully prepared experiment: everything up to (but excluding) the
 /// allocation/simulation choices.
 pub struct Driver {
+    /// The options this driver was prepared with.
     pub opts: DriverOpts,
     /// The resolved hardware profile everything below was built with.
     pub hw: crate::hw::HwProfile,
+    /// The validated network graph.
     pub graph: crate::dnn::Graph,
+    /// The mapped network.
     pub map: crate::mapping::NetworkMap,
+    /// The exact cycle trace.
     pub trace: crate::stats::NetTrace,
+    /// The aggregate profile the allocators consume.
     pub profile: crate::stats::NetworkProfile,
 }
 

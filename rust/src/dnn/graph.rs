@@ -6,12 +6,16 @@ use super::layer::{Layer, Op};
 /// `Op::Add { from }` references an earlier layer's output (residual).
 #[derive(Debug, Clone)]
 pub struct Graph {
+    /// Network name.
     pub name: String,
+    /// Input shape `[C, H, W]`.
     pub input_shape: [usize; 3],
+    /// Layers in execution order.
     pub layers: Vec<Layer>,
 }
 
 impl Graph {
+    /// An empty graph with the given input shape.
     pub fn new(name: &str, input_shape: [usize; 3]) -> Graph {
         Graph { name: name.to_string(), input_shape, layers: vec![] }
     }
@@ -58,19 +62,18 @@ impl Graph {
         self.layers.iter().enumerate().filter(|(_, l)| l.is_cim()).collect()
     }
 
-    /// Conv layers only (the paper's figures cover the conv stack).
+    /// Conv layers only — dense and depthwise (the paper's figures cover
+    /// the conv stack).
     pub fn conv_layers(&self) -> Vec<(usize, &Layer)> {
-        self.layers
-            .iter()
-            .enumerate()
-            .filter(|(_, l)| matches!(l.op, Op::Conv { .. }))
-            .collect()
+        self.layers.iter().enumerate().filter(|(_, l)| l.is_conv()).collect()
     }
 
+    /// MACs per inference over all layers.
     pub fn total_macs(&self) -> u64 {
         self.layers.iter().map(|l| l.macs()).sum()
     }
 
+    /// Stored weights over all layers.
     pub fn total_weights(&self) -> u64 {
         self.layers.iter().map(|l| l.weight_count()).sum()
     }

@@ -7,6 +7,11 @@
 pub enum Op {
     /// 2-D convolution, square kernel, same in/out dtype (8-bit quantized).
     Conv { in_ch: usize, out_ch: usize, k: usize, stride: usize, pad: usize },
+    /// Depthwise 2-D convolution (one `k×k` filter per channel, no
+    /// cross-channel mixing — the MobileNet building block). Maps to CIM
+    /// arrays as a *block-diagonal* weight matrix packed channel-diagonal
+    /// per array (see [`crate::mapping::map_network`]).
+    DwConv { ch: usize, k: usize, stride: usize, pad: usize },
     /// Fully connected.
     Linear { in_features: usize, out_features: usize },
     /// Max pooling (vector unit).
@@ -24,9 +29,13 @@ pub enum Op {
 /// layers use `[F, 1, 1]`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Layer {
+    /// Layer name (unique within its graph by convention).
     pub name: String,
+    /// Operator kind.
     pub op: Op,
+    /// Input shape `[C, H, W]`.
     pub in_shape: [usize; 3],
+    /// Output shape `[C, H, W]`.
     pub out_shape: [usize; 3],
     /// Input edge: `None` = previous layer's output (sequential);
     /// `Some(i)` = layer `i`'s output (branch input, e.g. a ResNet
@@ -37,7 +46,14 @@ pub struct Layer {
 impl Layer {
     /// Does this layer occupy CIM arrays?
     pub fn is_cim(&self) -> bool {
-        matches!(self.op, Op::Conv { .. } | Op::Linear { .. })
+        matches!(self.op, Op::Conv { .. } | Op::DwConv { .. } | Op::Linear { .. })
+    }
+
+    /// Is this layer a (dense or depthwise) convolution? The paper's
+    /// figures cover the conv stack only, so mapping defaults to these
+    /// plus-nothing-else (see [`crate::mapping::NetworkMap`]).
+    pub fn is_conv(&self) -> bool {
+        matches!(self.op, Op::Conv { .. } | Op::DwConv { .. })
     }
 
     /// Multiply-accumulate count for one inference.
@@ -46,6 +62,11 @@ impl Layer {
             Op::Conv { in_ch, out_ch, k, .. } => {
                 let positions = (self.out_shape[1] * self.out_shape[2]) as u64;
                 positions * (k * k * in_ch) as u64 * out_ch as u64
+            }
+            Op::DwConv { ch, k, .. } => {
+                // one k×k dot product per (position, channel)
+                let positions = (self.out_shape[1] * self.out_shape[2]) as u64;
+                positions * (k * k) as u64 * ch as u64
             }
             Op::Linear { in_features, out_features } => (in_features * out_features) as u64,
             _ => 0,
@@ -56,6 +77,7 @@ impl Layer {
     pub fn weight_count(&self) -> u64 {
         match self.op {
             Op::Conv { in_ch, out_ch, k, .. } => (k * k * in_ch * out_ch) as u64,
+            Op::DwConv { ch, k, .. } => (k * k * ch) as u64,
             Op::Linear { in_features, out_features } => (in_features * out_features) as u64,
             _ => 0,
         }
@@ -63,10 +85,14 @@ impl Layer {
 
     /// CIM matrix dimensions `(rows, cols)` = (patch length, output
     /// channels). `None` for non-CIM layers. Rows map to word lines,
-    /// cols to 8-bit weight columns (8 cells each).
+    /// cols to 8-bit weight columns (8 cells each). A depthwise conv is
+    /// the block-diagonal `(k²·C, C)` matrix — each output channel reads
+    /// only its own `k²` input rows; the mapping layer packs those
+    /// diagonal blocks densely ([`crate::mapping::map_network`]).
     pub fn matrix_dims(&self) -> Option<(usize, usize)> {
         match self.op {
             Op::Conv { in_ch, out_ch, k, .. } => Some((k * k * in_ch, out_ch)),
+            Op::DwConv { ch, k, .. } => Some((k * k * ch, ch)),
             Op::Linear { in_features, out_features } => Some((in_features, out_features)),
             _ => None,
         }
@@ -76,7 +102,7 @@ impl Layer {
     /// through the layer's arrays (1 for Linear).
     pub fn positions(&self) -> usize {
         match self.op {
-            Op::Conv { .. } => self.out_shape[1] * self.out_shape[2],
+            Op::Conv { .. } | Op::DwConv { .. } => self.out_shape[1] * self.out_shape[2],
             Op::Linear { .. } => 1,
             _ => 0,
         }
@@ -91,6 +117,12 @@ impl Layer {
                 let oh = (h + 2 * pad - k) / stride + 1;
                 let ow = (w + 2 * pad - k) / stride + 1;
                 [out_ch, oh, ow]
+            }
+            Op::DwConv { ch, k, stride, pad } => {
+                assert_eq!(c, ch, "dwconv channel mismatch: graph has {c}, op wants {ch}");
+                let oh = (h + 2 * pad - k) / stride + 1;
+                let ow = (w + 2 * pad - k) / stride + 1;
+                [ch, oh, ow]
             }
             Op::Linear { in_features, out_features } => {
                 assert_eq!(c * h * w, in_features, "linear in_features mismatch");
@@ -128,6 +160,27 @@ mod tests {
         assert_eq!(l.weight_count(), 576 * 128);
         assert_eq!(l.matrix_dims(), Some((576, 128)));
         assert_eq!(l.positions(), 784);
+    }
+
+    #[test]
+    fn dwconv_shapes_and_accounting() {
+        let op = Op::DwConv { ch: 64, k: 3, stride: 2, pad: 1 };
+        let out = Layer::infer_out_shape(&op, [64, 56, 56]);
+        assert_eq!(out, [64, 28, 28]);
+        let l = Layer { name: "dw".into(), op, in_shape: [64, 56, 56], out_shape: out, from: None };
+        assert!(l.is_cim() && l.is_conv());
+        // per position: one 3x3 dot product per channel
+        assert_eq!(l.macs(), 28 * 28 * 9 * 64);
+        assert_eq!(l.weight_count(), 9 * 64);
+        // block-diagonal matrix: im2col patch length x channels
+        assert_eq!(l.matrix_dims(), Some((576, 64)));
+        assert_eq!(l.positions(), 784);
+    }
+
+    #[test]
+    #[should_panic(expected = "dwconv channel mismatch")]
+    fn dwconv_channel_mismatch_panics() {
+        Layer::infer_out_shape(&Op::DwConv { ch: 8, k: 3, stride: 1, pad: 1 }, [4, 8, 8]);
     }
 
     #[test]

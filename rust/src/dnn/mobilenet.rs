@@ -1,0 +1,105 @@
+//! MobileNetV1 builder (Howard et al.) — the depthwise-separable
+//! extension workload.
+//!
+//! Every block is a depthwise 3×3 conv ([`Op::DwConv`]) followed by a
+//! pointwise 1×1 conv, which stresses the allocator/dataflow machinery
+//! very differently from ResNet/VGG: depthwise layers are *tiny* in
+//! weights but their block-diagonal CIM mapping packs only
+//! `⌊rows/k²⌋` channels per array (see [`crate::mapping::map_network`]),
+//! while the pointwise layers carry almost all the MACs on wide,
+//! short matrices. The resulting per-layer latency spread is exactly the
+//! imbalance the paper's block-wise allocation exists to absorb.
+
+use super::graph::Graph;
+use super::layer::Op;
+
+/// Depthwise-separable stage ladder of MobileNetV1 at width 1.0:
+/// `(dw stride, pw output channels)` per block.
+const BLOCKS: [(usize, usize); 13] = [
+    (1, 64),
+    (2, 128),
+    (1, 128),
+    (2, 256),
+    (1, 256),
+    (2, 512),
+    (1, 512),
+    (1, 512),
+    (1, 512),
+    (1, 512),
+    (1, 512),
+    (2, 1024),
+    (1, 1024),
+];
+
+/// Build MobileNetV1 for `input_hw`-square inputs: a stride-2 3×3 stem
+/// to 32 channels, 13 depthwise-separable blocks (dw 3×3 + pw 1×1), then
+/// GAP + FC. 27 CIM-mapped conv layers (1 stem + 13 dw + 13 pw).
+pub fn mobilenet(input_hw: usize, num_classes: usize) -> Graph {
+    assert!(input_hw >= 32, "mobilenet needs input >= 32, got {input_hw}");
+    let mut g = Graph::new("mobilenet", [3, input_hw, input_hw]);
+    g.push("conv1", Op::Conv { in_ch: 3, out_ch: 32, k: 3, stride: 2, pad: 1 });
+    g.push("relu1", Op::Relu);
+    let mut in_ch = 32usize;
+    for (i, &(stride, out_ch)) in BLOCKS.iter().enumerate() {
+        let n = i + 1;
+        g.push(&format!("dw{n}"), Op::DwConv { ch: in_ch, k: 3, stride, pad: 1 });
+        g.push(&format!("dw{n}.relu"), Op::Relu);
+        g.push(&format!("pw{n}"), Op::Conv { in_ch, out_ch, k: 1, stride: 1, pad: 0 });
+        g.push(&format!("pw{n}.relu"), Op::Relu);
+        in_ch = out_ch;
+    }
+    g.push("gap", Op::GlobalAvgPool);
+    g.push("fc", Op::Linear { in_features: 1024, out_features: num_classes });
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_27_conv_layers() {
+        let g = mobilenet(32, 1000);
+        assert_eq!(g.conv_layers().len(), 27, "1 stem + 13 dw + 13 pw");
+        assert_eq!(g.cim_layers().len(), 28);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn imagenet_shapes() {
+        let g = mobilenet(224, 1000);
+        // stem 224 → 112; strided dw blocks: 112 → 56 → 28 → 14 → 7
+        let last_pw = g.layers.iter().find(|l| l.name == "pw13").unwrap();
+        assert_eq!(last_pw.out_shape, [1024, 7, 7]);
+        assert_eq!(g.layers.last().unwrap().out_shape, [1000, 1, 1]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn macs_at_224_match_published_scale() {
+        // Published MobileNetV1 @224 ≈ 0.57 GMACs.
+        let g = mobilenet(224, 1000);
+        let gmacs = g.total_macs() as f64 / 1e9;
+        assert!((0.4..0.7).contains(&gmacs), "got {gmacs} GMACs");
+    }
+
+    #[test]
+    fn depthwise_layers_are_weight_light_mac_heavy() {
+        let g = mobilenet(224, 1000);
+        let dw9 = g.layers.iter().find(|l| l.name == "dw9").unwrap();
+        assert_eq!(dw9.weight_count(), 9 * 512);
+        assert_eq!(dw9.matrix_dims(), Some((9 * 512, 512)));
+        // the paired pointwise layer dominates on weights
+        let pw9 = g.layers.iter().find(|l| l.name == "pw9").unwrap();
+        assert!(pw9.weight_count() > dw9.weight_count() * 50);
+    }
+
+    #[test]
+    fn small_resolution_still_validates() {
+        let g = mobilenet(32, 10);
+        g.validate().unwrap();
+        // 5 stride-2 layers: 32 → 16 → 8 → 4 → 2 → 1
+        let pw13 = g.layers.iter().find(|l| l.name == "pw13").unwrap();
+        assert_eq!(pw13.out_shape, [1024, 1, 1]);
+    }
+}

@@ -1,17 +1,20 @@
-//! DNN graph IR and the two paper workloads (ResNet18, VGG11).
+//! DNN graph IR and the built-in workload zoo (ResNet18/34, VGG11,
+//! MobileNetV1).
 //!
 //! The IR is deliberately small: the simulator cares about the sequence of
-//! CIM-mapped layers (conv / linear) — their matrix dimensions, output
-//! positions and MAC counts — plus enough pooling/residual structure to
-//! run a functional forward pass for golden checks and to derive the
-//! activation shapes each crossbar sees.
+//! CIM-mapped layers (conv / depthwise conv / linear) — their matrix
+//! dimensions, output positions and MAC counts — plus enough
+//! pooling/residual structure to run a functional forward pass for golden
+//! checks and to derive the activation shapes each crossbar sees.
 
 pub mod layer;
 pub mod graph;
 pub mod resnet;
 pub mod vgg;
+pub mod mobilenet;
 
 pub use graph::Graph;
 pub use layer::{Layer, Op};
+pub use mobilenet::mobilenet;
 pub use resnet::{resnet18, resnet34};
 pub use vgg::vgg11;

@@ -81,20 +81,29 @@ impl EnergyCfg {
 /// Energy breakdown for a simulated run.
 #[derive(Debug, Clone)]
 pub struct EnergyReport {
+    /// ADC sampling energy (µJ).
     pub adc_uj: f64,
+    /// Word-line / cell read energy (µJ).
     pub rows_uj: f64,
+    /// NoC transfer energy (µJ).
     pub noc_uj: f64,
+    /// Buffer SRAM energy (µJ).
     pub sram_uj: f64,
+    /// Vector-unit energy (µJ).
     pub vector_uj: f64,
+    /// Leakage over the makespan (µJ).
     pub leakage_uj: f64,
+    /// Images the estimate covers.
     pub images: usize,
 }
 
 impl EnergyReport {
+    /// Dynamic (non-leakage) energy (µJ).
     pub fn dynamic_uj(&self) -> f64 {
         self.adc_uj + self.rows_uj + self.noc_uj + self.sram_uj + self.vector_uj
     }
 
+    /// Total energy (µJ).
     pub fn total_uj(&self) -> f64 {
         self.dynamic_uj() + self.leakage_uj
     }
@@ -112,6 +121,7 @@ impl EnergyReport {
         ops / (self.total_uj() * 1e-6) / 1e12
     }
 
+    /// Leakage share of the total.
     pub fn leakage_fraction(&self) -> f64 {
         self.leakage_uj / self.total_uj().max(f64::MIN_POSITIVE)
     }

@@ -23,6 +23,17 @@
 /// Implementations must be `'static` (like
 /// [`crate::alloc::Allocator`] strategies) so registry lookups hand out
 /// `Copy` references.
+///
+/// ```
+/// use cimfab::hw::ProfileRegistry;
+///
+/// let rram = ProfileRegistry::lookup_device("rram").unwrap();
+/// assert_eq!(rram.cell_bits(), 1);
+/// assert!(rram.variance() > 0.0 && !rram.volatile());
+/// // the device's variance is what derives rows-per-ADC-read:
+/// let rows = cimfab::xbar::variance::max_rows_per_read(rram.variance(), 1e-3, 128);
+/// assert_eq!(rows, 8); // the paper's 3-bit ADC operating point
+/// ```
 pub trait DeviceModel: Send + Sync {
     /// Registry key (kebab-case), e.g. `"rram"`.
     fn name(&self) -> &str;

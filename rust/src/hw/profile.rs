@@ -38,7 +38,9 @@ pub struct HwProfile {
     /// Cell technology (resolved through the device registry when
     /// loading from JSON).
     pub device: &'static dyn DeviceModel,
+    /// Designer-facing array spec.
     pub array: ArraySpec,
+    /// Designer-facing chip spec.
     pub chip: ChipSpec,
 }
 
@@ -110,6 +112,7 @@ impl HwProfile {
         self.array.adc_bits(self.device)
     }
 
+    /// Deterministic JSON form (the schema `HwProfile::load` reads).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::str(&self.name)),
@@ -149,6 +152,7 @@ impl HwProfile {
             .map_err(|e| e.context(format!("loading hardware profile '{path}'")))
     }
 
+    /// Write the profile JSON to `path`.
     pub fn save(&self, path: &str) -> Result<()> {
         let mut text = self.to_json().pretty();
         text.push('\n');

@@ -128,6 +128,7 @@ impl ArraySpec {
         Ok(cfg)
     }
 
+    /// Deterministic JSON form.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("rows", Json::num(self.rows as f64)),
@@ -166,6 +167,7 @@ pub struct ChipSpec {
     pub clock_hz: f64,
     /// Feature/psum packet sizes in bytes (for the NoC model).
     pub feature_packet_bytes: usize,
+    /// Partial-sum packet size in bytes (NoC model).
     pub psum_packet_bytes: usize,
     /// NoC link payload bytes moved per cycle per link.
     pub link_bytes_per_cycle: usize,
@@ -191,6 +193,7 @@ impl Default for ChipSpec {
 }
 
 impl ChipSpec {
+    /// Checked constructive constraints (geometry, divisibility).
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(self.arrays_per_pe >= 1, "a PE must hold at least one array");
         anyhow::ensure!(self.clock_hz > 0.0, "clock must be positive, got {}", self.clock_hz);
@@ -221,6 +224,7 @@ impl ChipSpec {
         })
     }
 
+    /// Deterministic JSON form.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("arrays_per_pe", Json::num(self.arrays_per_pe as f64)),

@@ -26,6 +26,11 @@
 //!   rows-per-ADC-read *derived* from the device's variance budget);
 //!   JSON-loadable from a path, so `--hw` sweeps RRAM/PCRAM/SRAM and
 //!   custom silicon without recompiling.
+//! * [`sim::engine`] — the simulation engines behind `--engine`:
+//!   [`sim::engine::EVENT`] (next-event-time over a binary heap of
+//!   array-completion times, the fast default) and
+//!   [`sim::engine::STEPPED`] (the cycle-stepped reference both are
+//!   pinned bit-identical against).
 //! * [`pipeline`] — the staged experiment pipeline (`BuildGraph → Map →
 //!   Stats → Trace → Profile → Allocate → Place → Simulate → Report`)
 //!   with the validating [`pipeline::ScenarioBuilder`], per-stage JSON
@@ -35,8 +40,13 @@
 //!   one-off runs: profile → allocate → simulate → report.
 //! * [`sim::simulate`] — run one chip configuration on one network trace.
 //! * [`alloc`] — the allocation strategies (the paper's contribution).
+//! * [`dnn`] — the workload zoo: [`dnn::resnet18`] / [`dnn::resnet34`],
+//!   [`dnn::vgg11`], and the depthwise-separable [`dnn::mobilenet`].
 //!
-//! See `DESIGN.md` for the module inventory and the experiment index.
+//! See `docs/architecture.md` for the guided tour and `DESIGN.md` for
+//! the module inventory and the experiment index.
+
+#![warn(missing_docs)]
 
 pub mod util;
 pub mod hw;

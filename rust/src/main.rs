@@ -17,7 +17,9 @@
 //! through [`cimfab::strategy::StrategyRegistry`] (`--alloc`,
 //! `--dataflow`); hardware profiles through
 //! [`cimfab::hw::ProfileRegistry`] (`--hw NAME|PATH.json`, default
-//! `rram-128`); unknown names fail with a did-you-mean suggestion.
+//! `rram-128`); simulation engines through
+//! [`cimfab::sim::engine::lookup`] (`--engine event|stepped`, default
+//! `event`); unknown names fail with a did-you-mean suggestion.
 //! (`--hw N` with a bare integer is the legacy spelling of `--res N`,
 //! the input resolution, and still works.) `profile`, `simulate`,
 //! `sweep` and `util` run on the staged experiment pipeline
@@ -104,6 +106,18 @@ fn alloc_strategies(args: &Args) -> cimfab::Result<Vec<&'static dyn Allocator>> 
     }
 }
 
+/// Apply `--engine` to a batch of scenarios (sweep/util), validating
+/// the name once up front.
+fn set_engine(scenarios: &mut [pipeline::Scenario], args: &Args) -> cimfab::Result<()> {
+    if let Some(name) = args.get("engine") {
+        let engine = cimfab::sim::engine::lookup(name)?;
+        for sc in scenarios {
+            sc.engine = engine.name().to_string();
+        }
+    }
+    Ok(())
+}
+
 fn run(args: &Args) -> cimfab::Result<()> {
     match args.subcommand.as_deref() {
         Some("report") => {
@@ -141,9 +155,9 @@ fn run(args: &Args) -> cimfab::Result<()> {
         }
         Some("simulate") => {
             let opts = driver_opts(args).map_err(anyhow::Error::msg)?;
-            // resolve strategy names and check the pairing before paying
-            // for the prefix, so typos and incompatible combinations fail
-            // fast with the registry's did-you-mean/compat messages
+            // resolve strategy/engine names and check the pairing before
+            // paying for the prefix, so typos and incompatible
+            // combinations fail fast with did-you-mean/compat messages
             let alloc = args.get("alloc").or_else(|| args.get("alg")).unwrap_or("block-wise");
             let allocator = StrategyRegistry::lookup_allocator(alloc)?;
             if let Some(flow) = args.get("dataflow") {
@@ -156,6 +170,9 @@ fn run(args: &Args) -> cimfab::Result<()> {
                     allocator.name()
                 );
             }
+            if let Some(engine) = args.get("engine") {
+                cimfab::sim::engine::lookup(engine)?;
+            }
             let dumper = sweep_cfg(args).map_err(anyhow::Error::msg)?.dumper()?;
             let prep = pipeline::prepare(&opts.prefix_spec(), dumper.as_ref())?;
             let pes =
@@ -167,16 +184,20 @@ fn run(args: &Args) -> cimfab::Result<()> {
             if let Some(flow) = args.get("dataflow") {
                 builder = builder.dataflow(flow);
             }
+            if let Some(engine) = args.get("engine") {
+                builder = builder.engine(engine);
+            }
             let sc = builder.build()?;
             let out = pipeline::run_scenario(&prep.view(), &sc, dumper.as_ref())?;
             if args.has_flag("verbose") {
                 println!("{}", out.plan.summary(&prep.map));
             }
             println!(
-                "{} ({} dataflow) @ {pes} PEs: {:.2} inferences/s, chip util {:.1}%, \
-                 makespan {} cycles, NoC peak link util {:.3}",
+                "{} ({} dataflow, {} engine) @ {pes} PEs: {:.2} inferences/s, \
+                 chip util {:.1}%, makespan {} cycles, NoC peak link util {:.3}",
                 sc.alloc,
                 sc.dataflow,
+                sc.engine,
                 out.result.throughput_ips,
                 out.result.chip_util * 100.0,
                 out.result.makespan,
@@ -192,12 +213,13 @@ fn run(args: &Args) -> cimfab::Result<()> {
 
             let dumper = cfg.dumper()?;
             let prep = pipeline::prepare(&opts.prefix_spec(), dumper.as_ref())?;
-            let scenarios = pipeline::scenarios_for(
+            let mut scenarios = pipeline::scenarios_for(
                 &opts.prefix_spec(),
                 &pipeline::sweep_sizes(prep.min_pes(), steps),
                 &algs,
                 opts.sim_images,
             );
+            set_engine(&mut scenarios, args)?;
 
             let t0 = Instant::now();
             let outcomes = run_scenarios_prepared(&prep, &scenarios, &cfg)?;
@@ -254,8 +276,9 @@ fn run(args: &Args) -> cimfab::Result<()> {
             let pes =
                 args.get_usize("pes", prep.min_pes() * 2).map_err(anyhow::Error::msg)?;
             let algs = alloc_strategies(args)?;
-            let scenarios =
+            let mut scenarios =
                 pipeline::scenarios_for(&opts.prefix_spec(), &[pes], &algs, opts.sim_images);
+            set_engine(&mut scenarios, args)?;
             let outcomes = run_scenarios_prepared(&prep, &scenarios, &cfg)?;
             let results: Vec<(String, cimfab::sim::SimResult)> = outcomes
                 .iter()
@@ -277,7 +300,11 @@ fn run(args: &Args) -> cimfab::Result<()> {
             let reg = StrategyRegistry::snapshot();
             println!("== allocation strategies (--alloc) ==");
             let mut t = Table::new(["name", "dataflow", "reads", "description"]);
-            for a in reg.allocators() {
+            // sort by name so the listing (and CI smoke diffs) are stable
+            // even if a registry implementation stops being name-ordered
+            let mut allocators = reg.allocators();
+            allocators.sort_by_key(|a| a.name().to_string());
+            for a in allocators {
                 t.row([
                     a.name().to_string(),
                     a.default_dataflow().to_string(),
@@ -291,12 +318,20 @@ fn run(args: &Args) -> cimfab::Result<()> {
             println!("{}", t.render());
             println!("== dataflow models (--dataflow) ==");
             let mut t = Table::new(["name", "plans", "description"]);
-            for d in reg.dataflows() {
+            let mut dataflows = reg.dataflows();
+            dataflows.sort_by_key(|d| d.name().to_string());
+            for d in dataflows {
                 t.row([
                     d.name().to_string(),
                     if d.requires_uniform_plan() { "layer-uniform" } else { "any" }.to_string(),
                     d.describe().to_string(),
                 ]);
+            }
+            println!("{}", t.render());
+            println!("== simulation engines (--engine) ==");
+            let mut t = Table::new(["name", "description"]);
+            for e in cimfab::sim::engine::engines() {
+                t.row([e.name().to_string(), e.describe().to_string()]);
             }
             println!("{}", t.render());
             Ok(())
@@ -313,7 +348,11 @@ fn run(args: &Args) -> cimfab::Result<()> {
                 "cycles (best..worst)",
                 "description",
             ]);
-            for p in reg.profiles() {
+            // sort by name so the listing (and CI smoke diffs) are stable
+            // even if a registry implementation stops being name-ordered
+            let mut profiles = reg.profiles();
+            profiles.sort_by(|a, b| a.name.cmp(&b.name));
+            for p in profiles {
                 let cfg = p.array_cfg()?;
                 let (best, worst) = cimfab::xbar::profile_cycle_bounds(&p)?;
                 t.row([
@@ -338,7 +377,9 @@ fn run(args: &Args) -> cimfab::Result<()> {
                 "volatile",
                 "description",
             ]);
-            for d in reg.devices() {
+            let mut devices = reg.devices();
+            devices.sort_by_key(|d| d.name().to_string());
+            for d in devices {
                 t.row([
                     d.name().to_string(),
                     d.cell_bits().to_string(),
@@ -503,7 +544,7 @@ USAGE: cimfab <report|profile|simulate|sweep|util|energy|list-strategies|list-hw
                golden|dispatch|variance> [options]
 
 Common options:
-  --net resnet18|resnet34|vgg11   network (default resnet18)
+  --net resnet18|resnet34|vgg11|mobilenet   network (default resnet18)
   --res N                  input resolution (default 64; use 32 for golden)
   --hw NAME|PATH.json      hardware profile by registry name/alias (see
                            `cimfab list-hw`; default rram-128) or a
@@ -516,6 +557,9 @@ Common options:
                            sweep/util/energy also take NAME,NAME,... or
                            paper|all
   --dataflow NAME          dataflow model override (simulate only)
+  --engine event|stepped   simulation engine (default event; stepped is
+                           the bit-identical cycle-walking reference —
+                           simulate/sweep/util)
   --images N               pipelined images per simulation (default 8)
   --steps N                design sizes in a sweep (default 5)
   --threads N              sweep/util worker threads (default: all cores)

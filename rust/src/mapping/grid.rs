@@ -7,7 +7,9 @@ use crate::dnn::Graph;
 /// (`layer_idx` indexes [`NetworkMap::grids`], not the raw graph.)
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct BlockId {
+    /// CIM-layer index into [`NetworkMap::grids`].
     pub layer: usize,
+    /// Grid row within the layer.
     pub row: usize,
 }
 
@@ -16,15 +18,26 @@ pub struct BlockId {
 pub struct LayerGrid {
     /// Index of the source layer in the graph.
     pub graph_idx: usize,
+    /// Source layer name (for reports).
     pub name: String,
     /// Weight-matrix rows (patch length).
     pub matrix_rows: usize,
     /// Weight-matrix cols in 8-bit weights (output channels).
     pub matrix_cols: usize,
+    /// Matrix rows hosted per block. Dense layers split at array-row
+    /// boundaries (`array.rows`); block-diagonal (depthwise) layers pack
+    /// whole `k²`-row channel filters per block, so this is
+    /// `⌊array.rows / k²⌋ · k²` — the largest filter-aligned slice an
+    /// array holds.
+    pub rows_per_block: usize,
     /// Grid height: blocks per copy of this layer.
     pub blocks_per_copy: usize,
     /// Grid width: arrays per block.
     pub arrays_per_block: usize,
+    /// Is the weight matrix block-diagonal (depthwise conv)? Diagonal
+    /// blocks carry only their own channels' columns, so one matrix row
+    /// feeds exactly one MAC per patch.
+    pub diagonal: bool,
     /// Patch vectors per inference.
     pub positions: usize,
     /// MACs per inference.
@@ -41,21 +54,30 @@ impl LayerGrid {
     /// partial).
     pub fn rows_in_block(&self, row: usize, cfg: &ArrayCfg) -> usize {
         assert!(row < self.blocks_per_copy);
-        let start = row * cfg.rows;
-        (self.matrix_rows - start).min(cfg.rows)
+        debug_assert!(self.rows_per_block <= cfg.rows);
+        let start = row * self.rows_per_block;
+        (self.matrix_rows - start).min(self.rows_per_block)
     }
 
     /// MACs performed by one block for one patch.
     pub fn macs_per_block_patch(&self, row: usize, cfg: &ArrayCfg) -> u64 {
-        (self.rows_in_block(row, cfg) * self.matrix_cols) as u64
+        if self.diagonal {
+            // block-diagonal: each hosted row feeds exactly one MAC
+            self.rows_in_block(row, cfg) as u64
+        } else {
+            (self.rows_in_block(row, cfg) * self.matrix_cols) as u64
+        }
     }
 }
 
 /// A whole network mapped to array grids.
 #[derive(Debug, Clone)]
 pub struct NetworkMap {
+    /// Source network name.
     pub net_name: String,
+    /// Array geometry the mapping used.
     pub array: ArrayCfg,
+    /// One grid per mapped CIM layer, in layer order.
     pub grids: Vec<LayerGrid>,
     /// Map conv layers only (paper counts; see `dnn::resnet`) or all CIM
     /// layers including Linear.
@@ -100,20 +122,47 @@ impl NetworkMap {
 }
 
 /// Map every CIM layer of `graph` onto grids.
+///
+/// Dense conv / linear layers tile the weight matrix at array-row
+/// boundaries, with every block carrying all `matrix_cols` output
+/// columns. Depthwise convs are block-diagonal: each array hosts
+/// `⌊rows/k²⌋` whole per-channel filters packed down its diagonal, so a
+/// block's columns are only the channels it hosts — one array per block
+/// in every practical geometry, instead of the grossly zero-padded dense
+/// tiling a naive mapping would produce.
 pub fn map_network(graph: &Graph, array: ArrayCfg, include_linear: bool) -> NetworkMap {
     let mut grids = Vec::new();
     for (graph_idx, layer) in &graph.cim_layers() {
-        if !include_linear && !matches!(layer.op, crate::dnn::Op::Conv { .. }) {
+        if !include_linear && !layer.is_conv() {
             continue;
         }
         let (rows, cols) = layer.matrix_dims().expect("cim layer has matrix dims");
+        let (rows_per_block, block_cols, diagonal) = match layer.op {
+            crate::dnn::Op::DwConv { k, .. } => {
+                let kk = k * k;
+                if kk >= array.rows {
+                    // one filter spans multiple arrays; unless filters
+                    // align to the array height, a block can straddle the
+                    // tail of one channel and the head of the next, so it
+                    // needs up to two weight columns
+                    let straddle = if kk % array.rows == 0 { 1 } else { 2 };
+                    (array.rows, straddle.min(cols), true)
+                } else {
+                    let ch_per_block = array.rows / kk;
+                    (ch_per_block * kk, ch_per_block.min(cols), true)
+                }
+            }
+            _ => (array.rows, cols, false),
+        };
         grids.push(LayerGrid {
             graph_idx: *graph_idx,
             name: layer.name.clone(),
             matrix_rows: rows,
             matrix_cols: cols,
-            blocks_per_copy: rows.div_ceil(array.rows),
-            arrays_per_block: (cols * array.cells_per_weight()).div_ceil(array.cols),
+            rows_per_block,
+            blocks_per_copy: rows.div_ceil(rows_per_block),
+            arrays_per_block: (block_cols * array.cells_per_weight()).div_ceil(array.cols).max(1),
+            diagonal,
             positions: layer.positions(),
             macs: layer.macs(),
         });
@@ -224,6 +273,64 @@ mod tests {
         };
         let map4 = map_network(&resnet18(224, 1000), mlc4, false);
         assert!(map4.min_arrays() < map2.min_arrays());
+    }
+
+    #[test]
+    fn depthwise_layers_pack_channel_diagonal() {
+        use crate::dnn::mobilenet;
+        let map = map_network(&mobilenet(32, 10), ArrayCfg::paper(), false);
+        assert_eq!(map.grids.len(), 27);
+        // dw9: 512 channels of 3x3 filters → 14 channels per 128-row
+        // array (126 rows used) → ceil(512/14) = 37 one-array blocks
+        let dw = map.grids.iter().find(|g| g.name == "dw9").unwrap();
+        assert!(dw.diagonal);
+        assert_eq!(dw.rows_per_block, 126);
+        assert_eq!(dw.matrix_rows, 9 * 512);
+        assert_eq!(dw.blocks_per_copy, 37);
+        assert_eq!(dw.arrays_per_block, 1);
+        // last block hosts the remainder: 4608 - 36*126 = 72 rows
+        assert_eq!(dw.rows_in_block(36, &map.array), 72);
+        // block-diagonal MACs: one per hosted row per patch
+        assert_eq!(dw.macs_per_block_patch(0, &map.array), 126);
+        // dense layers keep the historical geometry
+        let pw = map.grids.iter().find(|g| g.name == "pw9").unwrap();
+        assert!(!pw.diagonal);
+        assert_eq!(pw.rows_per_block, 128);
+        assert_eq!(pw.arrays_per_block, 32); // 512 cols x 8 cells / 128
+    }
+
+    #[test]
+    fn oversized_depthwise_filters_budget_the_straddled_channel() {
+        // k² > array rows: a 128-row block can hold the tail of one
+        // channel's 144-row filter plus the head of the next, so it
+        // needs two weight columns — visible on a one-column array.
+        use crate::dnn::{Graph, Op};
+        let mut g = Graph::new("bigdw", [2, 12, 12]);
+        g.push("dw", Op::DwConv { ch: 2, k: 12, stride: 1, pad: 0 });
+        let mut narrow = ArrayCfg::paper();
+        narrow.cols = 8; // exactly one 8-cell weight column
+        narrow.validate().unwrap();
+        let map = map_network(&g, narrow, false);
+        let grid = &map.grids[0];
+        assert!(grid.diagonal);
+        assert_eq!(grid.rows_per_block, 128);
+        assert_eq!(grid.blocks_per_copy, 3); // 288 rows / 128
+        assert_eq!(grid.arrays_per_block, 2, "straddled blocks need two columns");
+    }
+
+    #[test]
+    fn mobilenet_fits_pe_capacity_and_is_dw_cheap() {
+        use crate::dnn::mobilenet;
+        let map = map_network(&mobilenet(32, 1000), ArrayCfg::paper(), false);
+        for g in &map.grids {
+            assert!(g.arrays_per_block <= 64, "{} block too wide", g.name);
+        }
+        // the 13 depthwise layers together cost far fewer arrays than
+        // one large pointwise layer — the point of diagonal packing
+        let dw_arrays: usize =
+            map.grids.iter().filter(|g| g.diagonal).map(|g| g.arrays_per_copy()).sum();
+        let pw13 = map.grids.iter().find(|g| g.name == "pw13").unwrap();
+        assert!(dw_arrays < pw13.arrays_per_copy(), "{dw_arrays} vs {}", pw13.arrays_per_copy());
     }
 
     #[test]

@@ -10,6 +10,7 @@ use super::grid::NetworkMap;
 /// physical instances.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct AllocationPlan {
+    /// Name of the strategy that produced the plan.
     pub algorithm: String,
     /// `duplicates[layer][row]` ≥ 1.
     pub duplicates: Vec<Vec<usize>>,

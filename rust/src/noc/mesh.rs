@@ -16,8 +16,11 @@ pub enum Node {
 /// The mesh: geometry + cumulative traffic counters.
 #[derive(Debug, Clone)]
 pub struct Mesh {
+    /// Mesh side length (`N` for an N×N mesh).
     pub side: usize,
+    /// Per-hop router latency in cycles.
     pub router_latency: usize,
+    /// Link payload bytes moved per cycle.
     pub link_bytes_per_cycle: usize,
     /// Total byte·hops injected (for utilization accounting).
     byte_hops: u64,
@@ -29,6 +32,7 @@ pub struct Mesh {
 }
 
 impl Mesh {
+    /// A mesh sized for the chip.
     pub fn new(chip: &ChipCfg) -> Mesh {
         let side = chip.mesh_side();
         Mesh {
@@ -105,9 +109,13 @@ impl Mesh {
 /// NoC summary for a simulation run.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NocStats {
+    /// Total packets injected.
     pub packets: u64,
+    /// Total byte·hops moved.
     pub byte_hops: u64,
+    /// Mean link utilization over the run.
     pub mean_link_utilization: f64,
+    /// Peak (busiest-cut) link utilization.
     pub peak_link_utilization: f64,
 }
 

@@ -30,9 +30,13 @@ pub enum PacketKind {
 /// A routed packet.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Packet {
+    /// Payload kind.
     pub kind: PacketKind,
+    /// Source node.
     pub src: Node,
+    /// Destination node.
     pub dst: Node,
+    /// Payload size in bytes.
     pub bytes: usize,
     /// Destination-accumulator id carried in the header (§III-C): which
     /// vector unit slot accumulates this patch's partial sums.
@@ -40,6 +44,7 @@ pub struct Packet {
 }
 
 impl Packet {
+    /// An input-feature packet from the global buffer.
     pub fn input(layer: usize, patch: usize, block_row: usize, dst: Node, bytes: usize, accumulator: usize) -> Packet {
         Packet {
             kind: PacketKind::InputFeature { layer, patch, block_row },
@@ -50,6 +55,7 @@ impl Packet {
         }
     }
 
+    /// A partial-sum packet toward its destination accumulator.
     pub fn psum(layer: usize, patch: usize, block_row: usize, src: Node, accumulator: usize, bytes: usize) -> Packet {
         Packet {
             kind: PacketKind::PartialSum { layer, patch, block_row },

@@ -58,8 +58,10 @@ pub fn map_json(m: &NetworkMap) -> Json {
                     ("graph_idx", Json::num(g.graph_idx as f64)),
                     ("matrix_rows", Json::num(g.matrix_rows as f64)),
                     ("matrix_cols", Json::num(g.matrix_cols as f64)),
+                    ("rows_per_block", Json::num(g.rows_per_block as f64)),
                     ("blocks_per_copy", Json::num(g.blocks_per_copy as f64)),
                     ("arrays_per_block", Json::num(g.arrays_per_block as f64)),
+                    ("diagonal", Json::Bool(g.diagonal)),
                     ("positions", Json::num(g.positions as f64)),
                     ("macs", Json::num(g.macs as f64)),
                 ])

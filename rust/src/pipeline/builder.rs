@@ -32,7 +32,7 @@ use crate::util::cli::unknown_value_msg;
 use anyhow::Result;
 
 /// Networks [`super::build_graph`] can construct.
-pub const KNOWN_NETS: [&str; 3] = ["resnet18", "resnet34", "vgg11"];
+pub const KNOWN_NETS: [&str; 4] = ["resnet18", "resnet34", "vgg11", "mobilenet"];
 
 /// Builder for one experiment point. Every knob has the CLI's default;
 /// `net` and `pes` must be set explicitly.
@@ -47,6 +47,7 @@ pub struct ScenarioBuilder {
     artifacts_dir: String,
     alloc: String,
     dataflow: Option<String>,
+    engine: String,
     pes: Option<usize>,
     sim_images: usize,
 }
@@ -63,6 +64,7 @@ impl Default for ScenarioBuilder {
             artifacts_dir: "artifacts".into(),
             alloc: "block-wise".into(),
             dataflow: None,
+            engine: crate::sim::engine::DEFAULT_ENGINE.into(),
             pes: None,
             sim_images: 8,
         }
@@ -70,6 +72,7 @@ impl Default for ScenarioBuilder {
 }
 
 impl ScenarioBuilder {
+    /// A builder with every knob at the CLI default.
     pub fn new() -> ScenarioBuilder {
         ScenarioBuilder::default()
     }
@@ -88,6 +91,7 @@ impl ScenarioBuilder {
         }
     }
 
+    /// Network name (see [`KNOWN_NETS`]). Required.
     pub fn net(mut self, net: impl Into<String>) -> Self {
         self.net = Some(net.into());
         self
@@ -107,6 +111,7 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Activation statistics source.
     pub fn stats(mut self, stats: StatsSource) -> Self {
         self.stats = stats;
         self
@@ -118,6 +123,7 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Deterministic seed for synthetic statistics.
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
@@ -142,6 +148,14 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Simulation engine name (`--engine`): `event` (next-event-time,
+    /// the default) or `stepped` (the cycle-stepped reference engine —
+    /// bit-identical results, orders of magnitude slower).
+    pub fn engine(mut self, name: impl Into<String>) -> Self {
+        self.engine = name.into();
+        self
+    }
+
     /// Processing elements on chip — the array budget. Required.
     pub fn pes(mut self, pes: usize) -> Self {
         self.pes = Some(pes);
@@ -158,7 +172,8 @@ impl ScenarioBuilder {
     pub fn prefix(&self) -> Result<PrefixSpec> {
         let net = match self.net.as_deref() {
             None | Some("") => anyhow::bail!(
-                "scenario has no network — call .net(\"resnet18\"|\"resnet34\"|\"vgg11\")"
+                "scenario has no network — call .net(\"resnet18\"|\"resnet34\"|\"vgg11\"|\
+                 \"mobilenet\")"
             ),
             Some(n) => n.to_string(),
         };
@@ -218,10 +233,12 @@ impl ScenarioBuilder {
             "simulation needs at least one image, got {}",
             self.sim_images
         );
+        let engine = crate::sim::engine::lookup(&self.engine)?;
         Ok(Scenario {
             prefix,
             alloc: allocator.name().to_string(),
             dataflow: flow.name().to_string(),
+            engine: engine.name().to_string(),
             pes,
             sim_images: self.sim_images,
         })
@@ -280,6 +297,25 @@ mod tests {
         assert!(err.contains("did you mean 'block-wise'?"), "{err}");
         let err = valid().dataflow("layerwise").build().unwrap_err().to_string();
         assert!(err.contains("did you mean 'layer-wise'?"), "{err}");
+    }
+
+    #[test]
+    fn engines_resolve_and_default_to_event() {
+        let sc = valid().build().unwrap();
+        assert_eq!(sc.engine, "event");
+        let sc = valid().engine("stepped").build().unwrap();
+        assert_eq!(sc.engine, "stepped");
+        assert_eq!(sc.id(), "block-wise_pes172_img8_stepped");
+        let err = valid().engine("evnt").build().unwrap_err().to_string();
+        assert!(err.contains("did you mean 'event'?"), "{err}");
+    }
+
+    #[test]
+    fn mobilenet_is_a_known_net() {
+        let sc = ScenarioBuilder::new().net("mobilenet").pes(100).build().unwrap();
+        assert_eq!(sc.prefix.net, "mobilenet");
+        let err = valid().net("mobilnet").build().unwrap_err().to_string();
+        assert!(err.contains("did you mean 'mobilenet'?"), "{err}");
     }
 
     #[test]

@@ -10,11 +10,12 @@
 //!
 //! A [`Scenario`] names one experiment point (network × resolution ×
 //! hardware profile × stats source × allocation strategy × dataflow ×
-//! PE budget × seed); construct one with the validating
-//! [`ScenarioBuilder`]. Strategy names resolve through
-//! [`crate::strategy::StrategyRegistry`] and hardware profiles through
-//! [`crate::hw::ProfileRegistry`] (name, alias, or JSON path) when the
-//! scenario runs. A scenario's [`PrefixSpec`] part determines the
+//! simulation engine × PE budget × seed); construct one with the
+//! validating [`ScenarioBuilder`]. Strategy names resolve through
+//! [`crate::strategy::StrategyRegistry`], hardware profiles through
+//! [`crate::hw::ProfileRegistry`] (name, alias, or JSON path), and
+//! engines through [`crate::sim::engine::lookup`] when the scenario
+//! runs. A scenario's [`PrefixSpec`] part determines the
 //! expensive prepared prefix, which [`executor::run_sweep`] computes
 //! once per distinct prefix and shares across all scenarios — in
 //! parallel worker threads — instead of recomputing it per point.
@@ -57,13 +58,18 @@ use std::path::PathBuf;
 /// The shared prefix, fully computed: everything up to (but excluding)
 /// the allocation/simulation choices.
 pub struct Prepared {
+    /// The spec this prefix was prepared from.
     pub spec: PrefixSpec,
     /// The resolved hardware profile the map (and every scenario chip)
     /// was built with.
     pub hw: HwProfile,
+    /// Stage `BuildGraph` output.
     pub graph: Graph,
+    /// Stage `Map` output.
     pub map: NetworkMap,
+    /// Stage `Trace` output.
     pub trace: NetTrace,
+    /// Stage `Profile` output.
     pub profile: NetworkProfile,
 }
 
@@ -86,17 +92,24 @@ impl Prepared {
 /// actually read from the prefix.
 #[derive(Clone, Copy)]
 pub struct PreparedView<'a> {
+    /// The resolved hardware profile.
     pub hw: &'a HwProfile,
+    /// The mapped network.
     pub map: &'a NetworkMap,
+    /// The exact cycle trace.
     pub trace: &'a NetTrace,
+    /// The aggregate profile the allocators consume.
     pub profile: &'a NetworkProfile,
 }
 
 /// The scenario stages' output.
 #[derive(Debug, Clone)]
 pub struct ScenarioOutcome {
+    /// The scenario that ran.
     pub scenario: Scenario,
+    /// Stage `Allocate` output.
     pub plan: AllocationPlan,
+    /// Stage `Simulate` output.
     pub result: SimResult,
 }
 
@@ -122,6 +135,7 @@ pub struct Dumper {
 }
 
 impl Dumper {
+    /// A dumper rooted at `dir` (created if missing).
     pub fn new(dir: &str) -> Result<Dumper> {
         let root = PathBuf::from(dir);
         std::fs::create_dir_all(&root)?;
@@ -146,6 +160,7 @@ pub fn build_graph(net: &str, hw: usize) -> Result<Graph> {
         "resnet18" => resnet18(hw, 1000),
         "resnet34" => crate::dnn::resnet34(hw, 1000),
         "vgg11" => vgg11(hw, 10),
+        "mobilenet" => crate::dnn::mobilenet(hw, 1000),
         other => anyhow::bail!(crate::util::cli::unknown_value_msg("network", other, &KNOWN_NETS)),
     };
     graph.validate().map_err(anyhow::Error::msg)?;
@@ -252,6 +267,7 @@ pub fn run_scenario(
     let chip = prep.hw.chip_cfg(sc.pes)?;
     let allocator = crate::strategy::StrategyRegistry::lookup_allocator(&sc.alloc)?;
     let flow = crate::strategy::StrategyRegistry::lookup_dataflow(&sc.dataflow)?;
+    let engine = crate::sim::engine::lookup(&sc.engine)?;
 
     // Allocate
     let plan = allocator.allocate(prep.map, prep.profile, chip.total_arrays())?;
@@ -272,7 +288,8 @@ pub fn run_scenario(
     }
 
     // Simulate
-    let cfg = crate::sim::SimCfg::for_strategy(allocator, flow, sc.sim_images);
+    let cfg =
+        crate::sim::SimCfg::for_strategy(allocator, flow, sc.sim_images).with_engine(engine);
     let result = crate::sim::simulate(&chip, prep.map, &plan, &placement, prep.trace, cfg);
     if let Some(d) = dump {
         d.dump(&sub, Stage::Simulate, &artifact::sim_result_json(&result))?;
@@ -353,6 +370,39 @@ mod tests {
     fn min_pes_without_stats_matches_full_prepare() {
         let prep = prepare(&spec(), None).unwrap();
         assert_eq!(min_pes("resnet18", 32).unwrap(), prep.min_pes());
+    }
+
+    #[test]
+    fn mobilenet_runs_through_the_pipeline() {
+        let mut s = spec();
+        s.net = "mobilenet".into();
+        let prep = prepare(&s, None).unwrap();
+        assert_eq!(prep.map.grids.len(), 27, "1 stem + 13 dw + 13 pw conv layers");
+        assert!(prep.map.grids.iter().any(|g| g.diagonal), "depthwise grids present");
+        let sc = ScenarioBuilder::from_prefix(&s)
+            .alloc("block-wise")
+            .pes(prep.min_pes() * 2)
+            .sim_images(4)
+            .build()
+            .unwrap();
+        let out = run_scenario(&prep.view(), &sc, None).unwrap();
+        assert!(out.result.throughput_ips > 0.0);
+        assert!(out.result.chip_util > 0.0);
+    }
+
+    #[test]
+    fn stepped_engine_scenario_matches_the_event_default() {
+        let prep = prepare(&spec(), None).unwrap();
+        let base = ScenarioBuilder::from_prefix(&spec()).alloc("block-wise").pes(129).sim_images(2);
+        let ev = run_scenario(&prep.view(), &base.clone().build().unwrap(), None).unwrap();
+        let st =
+            run_scenario(&prep.view(), &base.engine("stepped").build().unwrap(), None).unwrap();
+        assert_eq!(ev.result.makespan, st.result.makespan);
+        assert_eq!(ev.result.layer_util, st.result.layer_util);
+        assert_eq!(
+            artifact::sim_result_json(&ev.result).compact(),
+            artifact::sim_result_json(&st.result).compact()
+        );
     }
 
     #[test]

@@ -19,6 +19,7 @@ pub enum StatsSource {
 }
 
 impl StatsSource {
+    /// Parse a CLI spelling (`synth`/`synthetic`, `golden`/`pjrt`).
     pub fn parse(s: &str) -> Option<StatsSource> {
         match s {
             "synth" | "synthetic" => Some(StatsSource::Synthetic),
@@ -27,6 +28,7 @@ impl StatsSource {
         }
     }
 
+    /// Canonical CLI spelling.
     pub fn name(&self) -> &'static str {
         match self {
             StatsSource::Synthetic => "synth",
@@ -44,6 +46,7 @@ impl StatsSource {
 /// everything downstream of `Map`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PrefixSpec {
+    /// Network name (one of [`crate::pipeline::KNOWN_NETS`]).
     pub net: String,
     /// Input resolution — the CLI's `--res` (must match the artifact
     /// when `Golden`). Not the hardware profile; that is `hw_profile`.
@@ -52,9 +55,11 @@ pub struct PrefixSpec {
     /// a path to a profile JSON (resolved by
     /// [`crate::hw::ProfileRegistry::resolve`] when the prefix runs).
     pub hw_profile: String,
+    /// Where activation statistics come from.
     pub stats: StatsSource,
     /// Images used for profiling statistics.
     pub profile_images: usize,
+    /// Deterministic seed for synthetic statistics.
     pub seed: u64,
     /// Where the AOT artifacts live (used only with `Golden`).
     pub artifacts_dir: String,
@@ -93,6 +98,7 @@ impl PrefixSpec {
         id
     }
 
+    /// Deterministic JSON form (part of every stage artifact).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("net", Json::str(&self.net)),
@@ -122,16 +128,20 @@ fn sanitized_tag(raw: &str) -> String {
 }
 
 /// One full experiment point: a shared prefix plus the allocation
-/// strategy, the dataflow model, the chip size, and the simulated
-/// image count.
+/// strategy, the dataflow model, the simulation engine, the chip size,
+/// and the simulated image count.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Scenario {
+    /// The shared-prefix half (network, resolution, hardware, stats).
     pub prefix: PrefixSpec,
     /// Allocation strategy name (a [`StrategyRegistry`] key).
     pub alloc: String,
     /// Dataflow model name (a [`StrategyRegistry`] key); usually the
     /// strategy's default dataflow unless overridden.
     pub dataflow: String,
+    /// Simulation engine name ([`crate::sim::engine::lookup`]): `event`
+    /// (the default) or `stepped` (the cycle-accurate reference).
+    pub engine: String,
     /// Processing elements on chip (the chip is built by the prefix's
     /// hardware profile, [`crate::hw::HwProfile::chip_cfg`]).
     pub pes: usize,
@@ -142,24 +152,32 @@ pub struct Scenario {
 impl Scenario {
     /// Slug unique within the prefix (dump sub-directory for scenario
     /// stages). The dataflow appears only when it differs from the
-    /// strategy's default, so paper-algorithm ids keep their historical
+    /// strategy's default, and the engine only when it is not the
+    /// default `event`, so paper-algorithm ids keep their historical
     /// form (`block-wise_pes172_img8`).
     pub fn id(&self) -> String {
         let default_flow = StrategyRegistry::lookup_allocator(&self.alloc)
             .map(|a| a.default_dataflow().to_string())
             .unwrap_or_default();
-        if self.dataflow == default_flow {
+        let mut id = if self.dataflow == default_flow {
             format!("{}_pes{}_img{}", self.alloc, self.pes, self.sim_images)
         } else {
             format!("{}+{}_pes{}_img{}", self.alloc, self.dataflow, self.pes, self.sim_images)
+        };
+        if self.engine != crate::sim::engine::DEFAULT_ENGINE {
+            id.push('_');
+            id.push_str(&self.engine);
         }
+        id
     }
 
+    /// Deterministic JSON form (part of every scenario-stage artifact).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("prefix", self.prefix.to_json()),
             ("alloc", Json::str(&self.alloc)),
             ("dataflow", Json::str(&self.dataflow)),
+            ("engine", Json::str(&self.engine)),
             ("pes", Json::num(self.pes as f64)),
             ("sim_images", Json::num(self.sim_images as f64)),
         ])
@@ -200,6 +218,7 @@ pub fn scenarios_for(
                 prefix: prefix.clone(),
                 alloc: a.name().to_string(),
                 dataflow: a.default_dataflow().to_string(),
+                engine: crate::sim::engine::DEFAULT_ENGINE.to_string(),
                 pes,
                 sim_images,
             });
@@ -238,6 +257,7 @@ mod tests {
             prefix: spec(),
             alloc: alloc.into(),
             dataflow: dataflow.into(),
+            engine: crate::sim::engine::DEFAULT_ENGINE.into(),
             pes: 172,
             sim_images: 8,
         }
@@ -257,6 +277,15 @@ mod tests {
         let sc = scenario("perf-based", "block-wise");
         assert_eq!(sc.id(), "perf-based+block-wise_pes172_img8");
         assert_eq!(scenario("perf-based", "layer-wise").id(), "perf-based_pes172_img8");
+    }
+
+    #[test]
+    fn non_default_engine_shows_up_in_the_id() {
+        let mut sc = scenario("block-wise", "block-wise");
+        assert_eq!(sc.id(), "block-wise_pes172_img8"); // event keeps historical form
+        sc.engine = "stepped".into();
+        assert_eq!(sc.id(), "block-wise_pes172_img8_stepped");
+        assert_eq!(sc.to_json().get("engine").as_str(), Some("stepped"));
     }
 
     #[test]

@@ -7,49 +7,73 @@ use std::collections::BTreeMap;
 /// One conv layer as exported by the L2 model.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ConvMeta {
+    /// Layer name.
     pub name: String,
+    /// Input channels.
     pub in_ch: usize,
+    /// Output channels.
     pub out_ch: usize,
+    /// Square kernel size.
     pub k: usize,
+    /// Stride.
     pub stride: usize,
+    /// Zero padding.
     pub pad: usize,
 }
 
 /// One weight tensor's slot in the flat buffer.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WeightSlot {
+    /// Parameter name.
     pub name: String,
+    /// Byte offset into the weight blob.
     pub offset: usize,
+    /// Tensor shape.
     pub shape: Vec<usize>,
 }
 
 /// One exported model.
 #[derive(Debug, Clone)]
 pub struct ModelMeta {
+    /// HLO text file name.
     pub hlo: String,
+    /// Weight blob file name.
     pub weights: String,
+    /// Total weight bytes.
     pub weight_bytes: usize,
+    /// Input resolution the model was exported at.
     pub hw: usize,
+    /// Export seed.
     pub seed: usize,
+    /// Classifier width.
     pub num_classes: usize,
+    /// Exported conv-layer metadata, in order.
     pub conv_layers: Vec<ConvMeta>,
+    /// Weight-blob layout.
     pub weight_layout: Vec<WeightSlot>,
 }
 
 /// One exported kernel.
 #[derive(Debug, Clone)]
 pub struct KernelMeta {
+    /// HLO text file name.
     pub hlo: String,
+    /// Patches per invocation.
     pub patches: usize,
+    /// Array rows.
     pub rows: usize,
+    /// Weight columns.
     pub cols: usize,
 }
 
 /// The whole manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Artifacts directory.
     pub dir: String,
+    /// Models by name.
     pub models: BTreeMap<String, ModelMeta>,
+    /// Kernels by name.
     pub kernels: BTreeMap<String, KernelMeta>,
 }
 
@@ -88,18 +112,21 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_string(), models, kernels })
     }
 
+    /// Metadata of a named model.
     pub fn model(&self, net: &str) -> Result<&ModelMeta> {
         self.models
             .get(net)
             .ok_or_else(|| anyhow::anyhow!("model '{net}' not in manifest ({:?})", self.models.keys()))
     }
 
+    /// Metadata of a named kernel.
     pub fn kernel(&self, name: &str) -> Result<&KernelMeta> {
         self.kernels
             .get(name)
             .ok_or_else(|| anyhow::anyhow!("kernel '{name}' not in manifest"))
     }
 
+    /// Path of a manifest file inside the artifacts directory.
     pub fn path_of(&self, file: &str) -> String {
         format!("{}/{}", self.dir, file)
     }

@@ -12,11 +12,14 @@ use anyhow::{Context, Result};
 pub struct GoldenModel {
     module: Module,
     weights: Vec<i8>,
+    /// Exported model metadata.
     pub meta: ModelMeta,
+    /// Network name.
     pub net: String,
 }
 
 impl GoldenModel {
+    /// Load a golden model from the manifest.
     pub fn load(engine: &Engine, manifest: &Manifest, net: &str) -> Result<GoldenModel> {
         let meta = manifest.model(net)?.clone();
         let module = engine.load_hlo_text(&manifest.path_of(&meta.hlo))?;
@@ -72,12 +75,16 @@ impl GoldenModel {
 /// the manifest (one 128×16 sub-array, 16-patch tile by default).
 pub struct CimKernel {
     module: Module,
+    /// Patches per invocation.
     pub patches: usize,
+    /// Array rows.
     pub rows: usize,
+    /// Weight columns.
     pub cols: usize,
 }
 
 impl CimKernel {
+    /// Load the CIM kernel from the manifest.
     pub fn load(engine: &Engine, manifest: &Manifest) -> Result<CimKernel> {
         let meta = manifest.kernel("cim_matmul")?;
         let module = engine.load_hlo_text(&manifest.path_of(&meta.hlo))?;

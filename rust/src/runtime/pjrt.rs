@@ -22,6 +22,7 @@ impl Engine {
         Ok(Engine { client })
     }
 
+    /// PJRT platform name.
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -58,6 +59,7 @@ impl Module {
         Ok(result.to_tuple()?)
     }
 
+    /// Path of the loaded module.
     pub fn path(&self) -> &str {
         &self.path
     }

@@ -27,10 +27,12 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Stub counterpart of the PJRT engine constructor (see module docs).
     pub fn cpu() -> Result<Engine> {
         Err(unavailable("Engine::cpu()"))
     }
 
+    /// Stub platform name.
     pub fn platform(&self) -> String {
         "unavailable (built without `pjrt`)".to_string()
     }
@@ -42,6 +44,7 @@ pub struct Module {
 }
 
 impl Module {
+    /// Path of the (never-loaded) module.
     pub fn path(&self) -> &str {
         "unavailable"
     }
@@ -49,15 +52,19 @@ impl Module {
 
 /// Stand-in for the AOT-exported quantized network.
 pub struct GoldenModel {
+    /// Exported model metadata.
     pub meta: ModelMeta,
+    /// Network name.
     pub net: String,
 }
 
 impl GoldenModel {
+    /// Stub loader: always fails with the build-without-`pjrt` message.
     pub fn load(_engine: &Engine, _manifest: &Manifest, net: &str) -> Result<GoldenModel> {
         Err(unavailable(&format!("GoldenModel::load(\"{net}\")")))
     }
 
+    /// Stub forward pass (unreachable: loading already failed).
     pub fn run(&self, _image: &Tensor<f32>) -> Result<(Vec<Tensor<u8>>, Vec<f32>)> {
         Err(unavailable("GoldenModel::run()"))
     }
@@ -69,6 +76,7 @@ impl GoldenModel {
         super::gen_image(hw, seed)
     }
 
+    /// Stub profiling (unreachable: loading already failed).
     pub fn profile(&self, _n: usize, _seed: u64) -> Result<Vec<Vec<Tensor<u8>>>> {
         Err(unavailable("GoldenModel::profile()"))
     }
@@ -76,16 +84,21 @@ impl GoldenModel {
 
 /// Stand-in for the L1 Pallas crossbar kernel.
 pub struct CimKernel {
+    /// Patches per invocation.
     pub patches: usize,
+    /// Array rows.
     pub rows: usize,
+    /// Weight columns.
     pub cols: usize,
 }
 
 impl CimKernel {
+    /// Stub loader: always fails with the build-without-`pjrt` message.
     pub fn load(_engine: &Engine, _manifest: &Manifest) -> Result<CimKernel> {
         Err(unavailable("CimKernel::load()"))
     }
 
+    /// Stub kernel call (unreachable: loading already failed).
     pub fn matmul(&self, _x: &[u8], _w: &[i8]) -> Result<Vec<i32>> {
         Err(unavailable("CimKernel::matmul()"))
     }

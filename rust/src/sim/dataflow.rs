@@ -1,4 +1,5 @@
-//! Intra-layer stage simulation under the two dataflows.
+//! The two built-in dataflows, expressed as [`StageProgram`]s over the
+//! unified engine kernels ([`super::engine`]).
 //!
 //! * **Layer-wise** (§II, prior work): the layer exists as `D` ganged
 //!   whole-layer copies. Patches are pre-split contiguously among copies
@@ -7,33 +8,28 @@
 //!   shared input port and synchronize at the gather/accumulate — so each
 //!   patch costs the copy `max_r dur(p, r)` and faster blocks *sit idle*
 //!   (§III-A). Stage latency = slowest copy.
+//!   ([`StageProgram::GangedCopies`].)
 //!
 //! * **Block-wise** (§III-C, the contribution): every block row `r` is an
 //!   independent pool of `D_r` duplicates; a memory-controller queue
 //!   feeds the next free duplicate, partial sums carry destination-
 //!   accumulator ids, and no intra-layer barrier exists. Stage latency =
-//!   slowest block pool.
+//!   slowest block pool. ([`StageProgram::BlockPools`].)
 //!
-//! Both paths charge identical per-item compute durations (from the
+//! Both programs charge identical per-item compute durations (from the
 //! trace) and record the same NoC packets; only the synchronization
-//! structure differs — exactly the paper's comparison.
+//! structure differs — exactly the paper's comparison. Because the
+//! structure is declared (not hand-coded per dataflow), both the
+//! event-driven and the cycle-stepped engine run either dataflow from
+//! the same two kernels.
 
-use super::server::ServerPool;
+use super::engine::{self, StageProgram};
 use super::{DataflowModel, SimCfg, StageCtx};
 use crate::config::ChipCfg;
 use crate::mapping::{AllocationPlan, NetworkMap, Placement};
-use crate::noc::{Mesh, Node};
+use crate::noc::Mesh;
 use crate::stats::LayerTrace;
 use crate::xbar::ReadMode;
-
-/// Duration of work item (patch `p`, block `r`) under the run mode.
-#[inline]
-fn item_dur(lt: &LayerTrace, mode: ReadMode, p: usize, r: usize) -> u64 {
-    match mode {
-        ReadMode::ZeroSkip => lt.zs_at(p, r) as u64,
-        ReadMode::Baseline => lt.baseline[r] as u64,
-    }
-}
 
 /// The §II dataflow: whole-layer ganged copies with the per-patch
 /// gather barrier.
@@ -45,7 +41,9 @@ pub struct LayerWiseFlow;
 #[derive(Debug, Clone, Copy)]
 pub struct BlockWiseFlow;
 
+/// The registered `layer-wise` dataflow instance.
 pub static LAYER_WISE: LayerWiseFlow = LayerWiseFlow;
+/// The registered `block-wise` dataflow instance.
 pub static BLOCK_WISE: BlockWiseFlow = BlockWiseFlow;
 
 impl DataflowModel for LayerWiseFlow {
@@ -62,6 +60,10 @@ impl DataflowModel for LayerWiseFlow {
         true
     }
 
+    fn stage_program(&self) -> Option<StageProgram> {
+        Some(StageProgram::GangedCopies)
+    }
+
     fn simulate_stage(
         &self,
         ctx: &mut StageCtx<'_>,
@@ -70,7 +72,7 @@ impl DataflowModel for LayerWiseFlow {
         mode: ReadMode,
         busy: &mut [u64],
     ) -> u64 {
-        layerwise(ctx.chip, ctx.map, ctx.plan, ctx.placement, ctx.mesh, lt, layer, mode, busy)
+        engine::event_ganged(ctx, lt, layer, mode, busy)
     }
 }
 
@@ -84,6 +86,10 @@ impl DataflowModel for BlockWiseFlow {
          next free duplicate and no intra-layer barrier exists (§III-C)"
     }
 
+    fn stage_program(&self) -> Option<StageProgram> {
+        Some(StageProgram::BlockPools)
+    }
+
     fn simulate_stage(
         &self,
         ctx: &mut StageCtx<'_>,
@@ -92,13 +98,13 @@ impl DataflowModel for BlockWiseFlow {
         mode: ReadMode,
         busy: &mut [u64],
     ) -> u64 {
-        blockwise(ctx.chip, ctx.map, ctx.plan, ctx.placement, ctx.mesh, lt, layer, mode, busy)
+        engine::event_pools(ctx, lt, layer, mode, busy)
     }
 }
 
-/// Simulate one layer stage for one image through `cfg`'s dataflow
-/// model. Returns the stage makespan (cycles from stage start) and
-/// accumulates per-instance busy cycles into `busy` (flattened
+/// Simulate one layer stage for one image through `cfg`'s engine and
+/// dataflow model. Returns the stage makespan (cycles from stage start)
+/// and accumulates per-instance busy cycles into `busy` (flattened
 /// row-major over (block row, duplicate)).
 #[allow(clippy::too_many_arguments)]
 pub fn simulate_stage(
@@ -113,142 +119,7 @@ pub fn simulate_stage(
     busy: &mut [u64],
 ) -> u64 {
     let mut ctx = StageCtx { chip, map, plan, placement, mesh };
-    cfg.dataflow.simulate_stage(&mut ctx, lt, layer, cfg.mode, busy)
-}
-
-/// Instance-flattening offset of (row, dup) given per-row duplicate counts.
-fn inst_offsets(dups: &[usize]) -> Vec<usize> {
-    let mut off = Vec::with_capacity(dups.len() + 1);
-    let mut acc = 0;
-    for &d in dups {
-        off.push(acc);
-        acc += d;
-    }
-    off.push(acc);
-    off
-}
-
-#[allow(clippy::too_many_arguments)]
-fn layerwise(
-    chip: &ChipCfg,
-    map: &NetworkMap,
-    plan: &AllocationPlan,
-    placement: &Placement,
-    mesh: &mut Mesh,
-    lt: &LayerTrace,
-    layer: usize,
-    mode: ReadMode,
-    busy: &mut [u64],
-) -> u64 {
-    let dups = &plan.duplicates[layer];
-    let d = *dups.iter().min().expect("layer has blocks");
-    debug_assert!(plan.duplicates[layer].iter().all(|&x| x == d), "layer-wise plan must be uniform");
-    let offsets = inst_offsets(dups);
-    let blocks = lt.blocks;
-    let p_total = lt.positions;
-    let n_vu = mesh.side.max(1);
-
-    // closed-form count of p in [lo, hi) with p % n_vu == v
-    let vu_count = |lo: usize, hi: usize, v: usize| -> u64 {
-        let f = |n: usize| (n + n_vu - 1 - v) / n_vu; // #p < n with p%n_vu==v
-        (f(hi) - f(lo)) as u64
-    };
-
-    let mut worst_copy = 0u64;
-    let mut fill = 0u64;
-    for c in 0..d {
-        // contiguous patch share for copy c
-        let lo = p_total * c / d;
-        let hi = p_total * (c + 1) / d;
-        let mut copy_cycles = 0u64;
-        for p in lo..hi {
-            let mut mx = 0u64;
-            for r in 0..blocks {
-                let dur = item_dur(lt, mode, p, r);
-                mx = mx.max(dur);
-                busy[offsets[r] + c] += dur;
-            }
-            copy_cycles += mx;
-        }
-        // NoC accounting, aggregated per (block instance, destination)
-        // (§Perf: identical totals to per-patch recording).
-        for r in 0..blocks {
-            let pe = Node::Pe(placement.pe_of[layer][r][c]);
-            mesh.record_many(Node::GlobalBuffer, pe, chip.feature_packet_bytes, (hi - lo) as u64);
-            for v in 0..n_vu {
-                let n = vu_count(lo, hi, v);
-                if n > 0 {
-                    mesh.record_many(pe, Node::VectorUnit(v), chip.psum_packet_bytes, n);
-                }
-            }
-        }
-        worst_copy = worst_copy.max(copy_cycles);
-        // pipeline fill: first input in + last psum out for this copy
-        for r in 0..blocks {
-            let pe = Node::Pe(placement.pe_of[layer][r][c]);
-            let in_lat = mesh.latency(Node::GlobalBuffer, pe, chip.feature_packet_bytes);
-            let out_lat = mesh.latency(pe, Node::VectorUnit(0), chip.psum_packet_bytes);
-            fill = fill.max(in_lat + out_lat);
-        }
-    }
-    let _ = map;
-    worst_copy + fill
-}
-
-#[allow(clippy::too_many_arguments)]
-fn blockwise(
-    chip: &ChipCfg,
-    map: &NetworkMap,
-    plan: &AllocationPlan,
-    placement: &Placement,
-    mesh: &mut Mesh,
-    lt: &LayerTrace,
-    layer: usize,
-    mode: ReadMode,
-    busy: &mut [u64],
-) -> u64 {
-    let dups = &plan.duplicates[layer];
-    let offsets = inst_offsets(dups);
-    let p_total = lt.positions;
-    let n_vu = mesh.side.max(1);
-
-    let mut stage = 0u64;
-    let mut fill = 0u64;
-    // per-(instance, vector-unit) packet tallies, recorded in bulk after
-    // the scheduling loop (§Perf: keeps the mesh walk out of the
-    // per-item path; totals identical to per-item recording)
-    let mut tally: Vec<u64> = Vec::new();
-    for r in 0..lt.blocks {
-        let d = dups[r];
-        let mut pool = ServerPool::new(d, 0);
-        tally.clear();
-        tally.resize(d * n_vu, 0);
-        for p in 0..p_total {
-            let dur = item_dur(lt, mode, p, r);
-            let (inst, _, _) = pool.assign(0, dur);
-            busy[offsets[r] + inst] += dur;
-            tally[inst * n_vu + p % n_vu] += 1;
-        }
-        stage = stage.max(pool.makespan());
-        for inst in 0..d {
-            let pe = Node::Pe(placement.pe_of[layer][r][inst]);
-            let items: u64 = tally[inst * n_vu..(inst + 1) * n_vu].iter().sum();
-            if items > 0 {
-                mesh.record_many(Node::GlobalBuffer, pe, chip.feature_packet_bytes, items);
-            }
-            for v in 0..n_vu {
-                let n = tally[inst * n_vu + v];
-                if n > 0 {
-                    mesh.record_many(pe, Node::VectorUnit(v), chip.psum_packet_bytes, n);
-                }
-            }
-            let in_lat = mesh.latency(Node::GlobalBuffer, pe, chip.feature_packet_bytes);
-            let out_lat = mesh.latency(pe, Node::VectorUnit(0), chip.psum_packet_bytes);
-            fill = fill.max(in_lat + out_lat);
-        }
-    }
-    let _ = map;
-    stage + fill
+    cfg.engine.simulate_stage(cfg.dataflow, &mut ctx, lt, layer, cfg.mode, busy)
 }
 
 #[cfg(test)]
@@ -257,8 +128,8 @@ mod tests {
     use crate::config::ArrayCfg;
     use crate::dnn::{Graph, Op};
     use crate::mapping::{map_network, place, AllocationPlan};
-    use crate::stats::trace_from_activations;
     use crate::stats::synth::{synth_activations, SynthCfg};
+    use crate::stats::trace_from_activations;
 
     fn setup() -> (Graph, NetworkMap, crate::stats::NetTrace, ChipCfg) {
         let mut g = Graph::new("t", [64, 8, 8]);
@@ -277,7 +148,13 @@ mod tests {
         let mut mesh = Mesh::new(&chip);
         let n: usize = plan.duplicates[0].iter().sum();
         let mut busy = vec![0u64; n];
-        let cfg = SimCfg { mode: ReadMode::ZeroSkip, dataflow, images: 1, warmup: 0 };
+        let cfg = SimCfg {
+            mode: ReadMode::ZeroSkip,
+            dataflow,
+            engine: &crate::sim::engine::EVENT,
+            images: 1,
+            warmup: 0,
+        };
         let t = simulate_stage(
             &chip, &map, &plan, &placement, &mut mesh, &trace.images[0].layers[0], 0, cfg,
             &mut busy,
@@ -320,6 +197,13 @@ mod tests {
     }
 
     #[test]
+    fn builtin_flows_declare_their_programs() {
+        use crate::sim::engine::StageProgram;
+        assert_eq!(LAYER_WISE.stage_program(), Some(StageProgram::GangedCopies));
+        assert_eq!(BLOCK_WISE.stage_program(), Some(StageProgram::BlockPools));
+    }
+
+    #[test]
     fn baseline_mode_is_deterministic_and_slower() {
         let (_, map, trace, chip) = setup();
         let plan = AllocationPlan { algorithm: "t".into(), duplicates: vec![vec![1; 5]] };
@@ -329,14 +213,26 @@ mod tests {
         let t_base = simulate_stage(
             &chip, &map, &plan, &placement, &mut mesh,
             &trace.images[0].layers[0], 0,
-            SimCfg { mode: ReadMode::Baseline, dataflow: &LAYER_WISE, images: 1, warmup: 0 },
+            SimCfg {
+                mode: ReadMode::Baseline,
+                dataflow: &LAYER_WISE,
+                engine: &crate::sim::engine::EVENT,
+                images: 1,
+                warmup: 0,
+            },
             &mut busy,
         );
         let mut busy2 = vec![0u64; 5];
         let t_zs = simulate_stage(
             &chip, &map, &plan, &placement, &mut mesh,
             &trace.images[0].layers[0], 0,
-            SimCfg { mode: ReadMode::ZeroSkip, dataflow: &LAYER_WISE, images: 1, warmup: 0 },
+            SimCfg {
+                mode: ReadMode::ZeroSkip,
+                dataflow: &LAYER_WISE,
+                engine: &crate::sim::engine::EVENT,
+                images: 1,
+                warmup: 0,
+            },
             &mut busy2,
         );
         assert!(t_base >= t_zs, "baseline {t_base} < zero-skip {t_zs}");

@@ -1,0 +1,610 @@
+//! Simulation engines: event-driven (default) vs cycle-stepped (reference).
+//!
+//! Both engines execute the *same* stage semantics — a layer's work items
+//! dispatched onto its physical block instances under the scenario's
+//! [`DataflowModel`] — and differ only in how simulated time advances:
+//!
+//! * [`EventEngine`] (`--engine event`, the default) advances time
+//!   **next-event style**: a binary heap keyed on array-completion times
+//!   ([`super::server::ServerPool`]) jumps straight from one completion
+//!   to the next, so wall-clock cost scales with the number of *work
+//!   items*, not the number of simulated cycles. This is what makes
+//!   large design sweeps cheap (see `benches/sim_engines.rs`).
+//! * [`SteppedEngine`] (`--engine stepped`) walks every array through
+//!   every cycle, decrementing per-instance remaining-cycle counters one
+//!   tick at a time. It is deliberately naive — the reference
+//!   implementation the event engine is pinned against, bit-identical on
+//!   cycle counts and utilization (`tests/engine_parity.rs`).
+//!
+//! The barrier semantics come from the dataflow, not the engine: a
+//! [`DataflowModel`] exposes its synchronization structure as a
+//! [`StageProgram`] ([`DataflowModel::stage_program`]), and one kernel
+//! per engine interprets it — ganged copies with a per-patch gather
+//! barrier (layer-wise, §II) and free per-block duplicate pools
+//! (block-wise, §III-C) fall out of the same two kernels, as does any
+//! allocation strategy built on them (e.g. `hybrid`). Dataflows that
+//! return `None` keep their bespoke [`DataflowModel::simulate_stage`]
+//! path under both engines (trivially parity-safe).
+//!
+//! Engines are name-addressable like strategies and hardware profiles:
+//!
+//! ```
+//! use cimfab::sim::engine;
+//! assert_eq!(engine::lookup("event").unwrap().name(), "event");
+//! assert_eq!(engine::lookup("stepped").unwrap().name(), "stepped");
+//! assert!(engine::lookup("evnt").unwrap_err().to_string().contains("did you mean 'event'?"));
+//! ```
+
+use super::server::ServerPool;
+use super::{DataflowModel, StageCtx};
+use crate::config::ChipCfg;
+use crate::mapping::Placement;
+use crate::noc::{Mesh, Node};
+use crate::stats::LayerTrace;
+use crate::util::cli::unknown_value_msg;
+use crate::xbar::ReadMode;
+
+/// The engine used when a scenario does not name one (`--engine`).
+pub const DEFAULT_ENGINE: &str = "event";
+
+/// A dataflow's synchronization structure, as interpreted by the engine
+/// kernels. See [`DataflowModel::stage_program`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageProgram {
+    /// Whole-layer ganged copies with a per-patch gather barrier (§II):
+    /// patches are pre-split contiguously among copies, every block of a
+    /// copy consumes the same patch stream, and each patch costs the
+    /// copy `max_r dur(p, r)`.
+    GangedCopies,
+    /// Independent per-block duplicate pools with dynamic dispatch and
+    /// no intra-layer barrier (§III-C): a queue feeds each patch to the
+    /// earliest-free duplicate of each block row.
+    BlockPools,
+}
+
+/// A simulation engine: the time-advance discipline under which one
+/// layer stage is executed. Selected per scenario (`--engine`,
+/// [`crate::pipeline::ScenarioBuilder::engine`]); both built-ins are
+/// pinned bit-identical on every [`super::SimResult`] field by the
+/// golden parity suite.
+///
+/// ```
+/// use cimfab::sim::engine;
+///
+/// let fast = engine::lookup("event").unwrap();
+/// let reference = engine::lookup("stepped").unwrap();
+/// assert_eq!(fast.name(), engine::DEFAULT_ENGINE);
+/// assert_ne!(fast.describe(), reference.describe());
+/// ```
+pub trait Engine: Send + Sync {
+    /// Registry key and CLI `--engine` name (kebab-case).
+    fn name(&self) -> &str;
+
+    /// One-line human description for docs and error messages.
+    fn describe(&self) -> &str;
+
+    /// Simulate one layer stage for one image under `flow`'s
+    /// synchronization structure. Same contract as
+    /// [`DataflowModel::simulate_stage`]: returns the stage makespan and
+    /// accumulates per-instance busy cycles into `busy`.
+    fn simulate_stage(
+        &self,
+        flow: &dyn DataflowModel,
+        ctx: &mut StageCtx<'_>,
+        lt: &LayerTrace,
+        layer: usize,
+        mode: ReadMode,
+        busy: &mut [u64],
+    ) -> u64;
+}
+
+/// The next-event-time engine (the default).
+#[derive(Debug, Clone, Copy)]
+pub struct EventEngine;
+
+/// The cycle-stepped reference engine.
+#[derive(Debug, Clone, Copy)]
+pub struct SteppedEngine;
+
+/// The default event-driven engine instance.
+pub static EVENT: EventEngine = EventEngine;
+/// The cycle-stepped reference engine instance.
+pub static STEPPED: SteppedEngine = SteppedEngine;
+
+/// The built-in engine names, in listing order.
+pub const ENGINE_NAMES: [&str; 2] = ["event", "stepped"];
+
+/// Resolve an engine by name, failing with a did-you-mean suggestion
+/// over [`ENGINE_NAMES`].
+pub fn lookup(name: &str) -> crate::Result<&'static dyn Engine> {
+    match name {
+        "event" => Ok(&EVENT),
+        "stepped" => Ok(&STEPPED),
+        other => Err(anyhow::anyhow!(unknown_value_msg("simulation engine", other, &ENGINE_NAMES))),
+    }
+}
+
+/// All built-in engines, in [`ENGINE_NAMES`] order.
+pub fn engines() -> [&'static dyn Engine; 2] {
+    [&EVENT, &STEPPED]
+}
+
+impl Engine for EventEngine {
+    fn name(&self) -> &str {
+        "event"
+    }
+
+    fn describe(&self) -> &str {
+        "next-event-time engine: a binary heap over array-completion times skips \
+         idle cycles entirely (the fast default)"
+    }
+
+    fn simulate_stage(
+        &self,
+        flow: &dyn DataflowModel,
+        ctx: &mut StageCtx<'_>,
+        lt: &LayerTrace,
+        layer: usize,
+        mode: ReadMode,
+        busy: &mut [u64],
+    ) -> u64 {
+        match flow.stage_program() {
+            Some(StageProgram::GangedCopies) => event_ganged(ctx, lt, layer, mode, busy),
+            Some(StageProgram::BlockPools) => event_pools(ctx, lt, layer, mode, busy),
+            None => flow.simulate_stage(ctx, lt, layer, mode, busy),
+        }
+    }
+}
+
+impl Engine for SteppedEngine {
+    fn name(&self) -> &str {
+        "stepped"
+    }
+
+    fn describe(&self) -> &str {
+        "cycle-stepped reference engine: walks every array instance through every \
+         cycle (slow; pins the event engine bit-identical)"
+    }
+
+    fn simulate_stage(
+        &self,
+        flow: &dyn DataflowModel,
+        ctx: &mut StageCtx<'_>,
+        lt: &LayerTrace,
+        layer: usize,
+        mode: ReadMode,
+        busy: &mut [u64],
+    ) -> u64 {
+        match flow.stage_program() {
+            Some(StageProgram::GangedCopies) => stepped_ganged(ctx, lt, layer, mode, busy),
+            Some(StageProgram::BlockPools) => stepped_pools(ctx, lt, layer, mode, busy),
+            // No program → the dataflow's own (event-style) path is the
+            // only implementation; using it keeps third-party dataflows
+            // runnable — and trivially parity-safe — under either engine.
+            None => flow.simulate_stage(ctx, lt, layer, mode, busy),
+        }
+    }
+}
+
+/// Duration of work item (patch `p`, block `r`) under the read mode.
+#[inline]
+pub(super) fn item_dur(lt: &LayerTrace, mode: ReadMode, p: usize, r: usize) -> u64 {
+    match mode {
+        ReadMode::ZeroSkip => lt.zs_at(p, r) as u64,
+        ReadMode::Baseline => lt.baseline[r] as u64,
+    }
+}
+
+/// Instance-flattening offsets of (row, dup) given per-row duplicate
+/// counts (`offsets[r] + dup` indexes the flattened busy array).
+pub(super) fn inst_offsets(dups: &[usize]) -> Vec<usize> {
+    let mut off = Vec::with_capacity(dups.len() + 1);
+    let mut acc = 0;
+    for &d in dups {
+        off.push(acc);
+        acc += d;
+    }
+    off.push(acc);
+    off
+}
+
+/// NoC accounting for one ganged copy `c` covering patches `[lo, hi)`,
+/// aggregated per (block instance, destination) — identical totals to
+/// per-patch recording. Returns the copy's pipeline-fill latency (first
+/// input in + last psum out over its blocks).
+#[allow(clippy::too_many_arguments)]
+fn ganged_copy_traffic(
+    chip: &ChipCfg,
+    placement: &Placement,
+    mesh: &mut Mesh,
+    layer: usize,
+    c: usize,
+    blocks: usize,
+    lo: usize,
+    hi: usize,
+) -> u64 {
+    let n_vu = mesh.side.max(1);
+    // closed-form count of p in [lo, hi) with p % n_vu == v
+    let vu_count = |lo: usize, hi: usize, v: usize| -> u64 {
+        let f = |n: usize| (n + n_vu - 1 - v) / n_vu; // #p < n with p%n_vu==v
+        (f(hi) - f(lo)) as u64
+    };
+    let mut fill = 0u64;
+    for r in 0..blocks {
+        let pe = Node::Pe(placement.pe_of[layer][r][c]);
+        mesh.record_many(Node::GlobalBuffer, pe, chip.feature_packet_bytes, (hi - lo) as u64);
+        for v in 0..n_vu {
+            let n = vu_count(lo, hi, v);
+            if n > 0 {
+                mesh.record_many(pe, Node::VectorUnit(v), chip.psum_packet_bytes, n);
+            }
+        }
+        let in_lat = mesh.latency(Node::GlobalBuffer, pe, chip.feature_packet_bytes);
+        let out_lat = mesh.latency(pe, Node::VectorUnit(0), chip.psum_packet_bytes);
+        fill = fill.max(in_lat + out_lat);
+    }
+    fill
+}
+
+/// NoC accounting for one block row's duplicate pool, given the
+/// per-(instance, vector-unit) patch tally the dispatch loop built.
+/// Returns the pool's pipeline-fill latency.
+#[allow(clippy::too_many_arguments)]
+fn pool_traffic(
+    chip: &ChipCfg,
+    placement: &Placement,
+    mesh: &mut Mesh,
+    layer: usize,
+    r: usize,
+    d: usize,
+    tally: &[u64],
+) -> u64 {
+    let n_vu = mesh.side.max(1);
+    let mut fill = 0u64;
+    for inst in 0..d {
+        let pe = Node::Pe(placement.pe_of[layer][r][inst]);
+        let items: u64 = tally[inst * n_vu..(inst + 1) * n_vu].iter().sum();
+        if items > 0 {
+            mesh.record_many(Node::GlobalBuffer, pe, chip.feature_packet_bytes, items);
+        }
+        for v in 0..n_vu {
+            let n = tally[inst * n_vu + v];
+            if n > 0 {
+                mesh.record_many(pe, Node::VectorUnit(v), chip.psum_packet_bytes, n);
+            }
+        }
+        let in_lat = mesh.latency(Node::GlobalBuffer, pe, chip.feature_packet_bytes);
+        let out_lat = mesh.latency(pe, Node::VectorUnit(0), chip.psum_packet_bytes);
+        fill = fill.max(in_lat + out_lat);
+    }
+    fill
+}
+
+/// Contiguous patch share `[lo, hi)` of copy `c` out of `d`.
+#[inline]
+fn copy_share(p_total: usize, c: usize, d: usize) -> (usize, usize) {
+    (p_total * c / d, p_total * (c + 1) / d)
+}
+
+// ---- event kernels (next-event time) --------------------------------
+
+/// Event kernel for [`StageProgram::GangedCopies`]: within a copy the
+/// barrier serializes patches, so each patch *is* one event — the copy
+/// clock jumps by `max_r dur(p, r)` per patch.
+pub(super) fn event_ganged(
+    ctx: &mut StageCtx<'_>,
+    lt: &LayerTrace,
+    layer: usize,
+    mode: ReadMode,
+    busy: &mut [u64],
+) -> u64 {
+    let dups = &ctx.plan.duplicates[layer];
+    let d = *dups.iter().min().expect("layer has blocks");
+    debug_assert!(dups.iter().all(|&x| x == d), "ganged-copies plan must be uniform");
+    let offsets = inst_offsets(dups);
+    let blocks = lt.blocks;
+
+    let mut worst_copy = 0u64;
+    let mut fill = 0u64;
+    for c in 0..d {
+        let (lo, hi) = copy_share(lt.positions, c, d);
+        let mut copy_cycles = 0u64;
+        for p in lo..hi {
+            let mut mx = 0u64;
+            for r in 0..blocks {
+                let dur = item_dur(lt, mode, p, r);
+                mx = mx.max(dur);
+                busy[offsets[r] + c] += dur;
+            }
+            copy_cycles += mx;
+        }
+        worst_copy = worst_copy.max(copy_cycles);
+        fill = fill.max(ganged_copy_traffic(
+            ctx.chip, ctx.placement, ctx.mesh, layer, c, blocks, lo, hi,
+        ));
+    }
+    worst_copy + fill
+}
+
+/// Event kernel for [`StageProgram::BlockPools`]: a min-heap over
+/// instance free-times ([`ServerPool`]) assigns each patch to the
+/// earliest-free duplicate in O(log D), jumping straight between
+/// completion events.
+pub(super) fn event_pools(
+    ctx: &mut StageCtx<'_>,
+    lt: &LayerTrace,
+    layer: usize,
+    mode: ReadMode,
+    busy: &mut [u64],
+) -> u64 {
+    let dups = &ctx.plan.duplicates[layer];
+    let offsets = inst_offsets(dups);
+    let p_total = lt.positions;
+    let n_vu = ctx.mesh.side.max(1);
+
+    let mut stage = 0u64;
+    let mut fill = 0u64;
+    // per-(instance, vector-unit) packet tallies, recorded in bulk after
+    // the scheduling loop (§Perf: keeps the mesh walk out of the
+    // per-item path; totals identical to per-item recording)
+    let mut tally: Vec<u64> = Vec::new();
+    for r in 0..lt.blocks {
+        let d = dups[r];
+        let mut pool = ServerPool::new(d, 0);
+        tally.clear();
+        tally.resize(d * n_vu, 0);
+        for p in 0..p_total {
+            let dur = item_dur(lt, mode, p, r);
+            let (inst, _, _) = pool.assign(0, dur);
+            busy[offsets[r] + inst] += dur;
+            tally[inst * n_vu + p % n_vu] += 1;
+        }
+        stage = stage.max(pool.makespan());
+        fill = fill.max(pool_traffic(ctx.chip, ctx.placement, ctx.mesh, layer, r, d, &tally));
+    }
+    stage + fill
+}
+
+// ---- stepped kernels (cycle-at-a-time reference) --------------------
+
+/// Stepped kernel for [`StageProgram::GangedCopies`]: every block of the
+/// copy decrements its remaining cycles for the current patch one tick
+/// at a time; the copy advances to the next patch only when all blocks
+/// hit zero (the gather barrier).
+fn stepped_ganged(
+    ctx: &mut StageCtx<'_>,
+    lt: &LayerTrace,
+    layer: usize,
+    mode: ReadMode,
+    busy: &mut [u64],
+) -> u64 {
+    let dups = &ctx.plan.duplicates[layer];
+    let d = *dups.iter().min().expect("layer has blocks");
+    debug_assert!(dups.iter().all(|&x| x == d), "ganged-copies plan must be uniform");
+    let offsets = inst_offsets(dups);
+    let blocks = lt.blocks;
+
+    let mut worst_copy = 0u64;
+    let mut fill = 0u64;
+    let mut remaining = vec![0u64; blocks];
+    for c in 0..d {
+        let (lo, hi) = copy_share(lt.positions, c, d);
+        let mut t = 0u64;
+        for p in lo..hi {
+            let mut pending = 0usize;
+            for r in 0..blocks {
+                remaining[r] = item_dur(lt, mode, p, r);
+                if remaining[r] > 0 {
+                    pending += 1;
+                }
+            }
+            while pending > 0 {
+                t += 1;
+                for r in 0..blocks {
+                    if remaining[r] > 0 {
+                        remaining[r] -= 1;
+                        busy[offsets[r] + c] += 1;
+                        if remaining[r] == 0 {
+                            pending -= 1;
+                        }
+                    }
+                }
+            }
+        }
+        worst_copy = worst_copy.max(t);
+        fill = fill.max(ganged_copy_traffic(
+            ctx.chip, ctx.placement, ctx.mesh, layer, c, blocks, lo, hi,
+        ));
+    }
+    worst_copy + fill
+}
+
+/// Stepped kernel for [`StageProgram::BlockPools`]: per cycle, idle
+/// duplicates pull the next queued patch — picking the instance that has
+/// been free longest (ties by index), exactly the order the event
+/// engine's min-heap pops — then every busy instance decrements one
+/// remaining cycle.
+fn stepped_pools(
+    ctx: &mut StageCtx<'_>,
+    lt: &LayerTrace,
+    layer: usize,
+    mode: ReadMode,
+    busy: &mut [u64],
+) -> u64 {
+    let dups = &ctx.plan.duplicates[layer];
+    let offsets = inst_offsets(dups);
+    let p_total = lt.positions;
+    let n_vu = ctx.mesh.side.max(1);
+
+    let mut stage = 0u64;
+    let mut fill = 0u64;
+    let mut tally: Vec<u64> = Vec::new();
+    for r in 0..lt.blocks {
+        let d = dups[r];
+        tally.clear();
+        tally.resize(d * n_vu, 0);
+        let mut remaining = vec![0u64; d];
+        let mut free_at = vec![0u64; d];
+        let mut busy_count = 0usize;
+        let mut next = 0usize;
+        let mut t = 0u64;
+        loop {
+            // dispatch every patch an idle instance can take at time t
+            while next < p_total {
+                let mut pick: Option<usize> = None;
+                for i in 0..d {
+                    if remaining[i] == 0 {
+                        match pick {
+                            Some(j) if (free_at[i], i) >= (free_at[j], j) => {}
+                            _ => pick = Some(i),
+                        }
+                    }
+                }
+                let Some(i) = pick else { break };
+                let dur = item_dur(lt, mode, next, r);
+                tally[i * n_vu + next % n_vu] += 1;
+                if dur > 0 {
+                    remaining[i] = dur;
+                    busy_count += 1;
+                }
+                next += 1;
+            }
+            if next >= p_total && busy_count == 0 {
+                break;
+            }
+            // advance one cycle
+            t += 1;
+            for i in 0..d {
+                if remaining[i] > 0 {
+                    remaining[i] -= 1;
+                    busy[offsets[r] + i] += 1;
+                    if remaining[i] == 0 {
+                        free_at[i] = t;
+                        busy_count -= 1;
+                    }
+                }
+            }
+        }
+        stage = stage.max(t);
+        fill = fill.max(pool_traffic(ctx.chip, ctx.placement, ctx.mesh, layer, r, d, &tally));
+    }
+    stage + fill
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dataflow::{BLOCK_WISE, LAYER_WISE};
+    use super::*;
+    use crate::config::ArrayCfg;
+    use crate::dnn::{Graph, Op};
+    use crate::mapping::{map_network, place, AllocationPlan};
+    use crate::stats::synth::{synth_activations, SynthCfg};
+    use crate::stats::trace_from_activations;
+
+    fn setup() -> (crate::mapping::NetworkMap, crate::stats::NetTrace, ChipCfg) {
+        let mut g = Graph::new("t", [64, 8, 8]);
+        g.push("c1", Op::Conv { in_ch: 64, out_ch: 64, k: 3, stride: 1, pad: 1 }); // 5 blocks
+        let map = map_network(&g, ArrayCfg::paper(), false);
+        let acts = synth_activations(&g, &map, 1, 21, SynthCfg::default());
+        let trace = trace_from_activations(&g, &map, &acts);
+        let chip = ChipCfg::paper(4);
+        (map, trace, chip)
+    }
+
+    fn run_stage(
+        engine: &dyn Engine,
+        flow: &'static dyn DataflowModel,
+        dups: Vec<usize>,
+        mode: ReadMode,
+    ) -> (u64, Vec<u64>, crate::noc::NocStats) {
+        let (map, trace, chip) = setup();
+        let plan = AllocationPlan { algorithm: "test".into(), duplicates: vec![dups] };
+        let placement = place(&map, &plan, &chip).unwrap();
+        let mut mesh = Mesh::new(&chip);
+        let n: usize = plan.duplicates[0].iter().sum();
+        let mut busy = vec![0u64; n];
+        let t = {
+            let mut ctx = StageCtx {
+                chip: &chip,
+                map: &map,
+                plan: &plan,
+                placement: &placement,
+                mesh: &mut mesh,
+            };
+            engine.simulate_stage(flow, &mut ctx, &trace.images[0].layers[0], 0, mode, &mut busy)
+        };
+        (t, busy, mesh.stats(t.max(1)))
+    }
+
+    #[test]
+    fn lookup_resolves_and_suggests() {
+        assert_eq!(lookup("event").unwrap().name(), "event");
+        assert_eq!(lookup("stepped").unwrap().name(), "stepped");
+        let err = lookup("evnt").unwrap_err().to_string();
+        assert!(err.contains("did you mean 'event'?"), "{err}");
+        assert_eq!(engines().map(|e| e.name().to_string()), ENGINE_NAMES.map(str::to_string));
+    }
+
+    #[test]
+    fn stepped_matches_event_ganged_copies() {
+        for dups in [vec![1; 5], vec![2; 5], vec![3; 5]] {
+            for mode in [ReadMode::ZeroSkip, ReadMode::Baseline] {
+                let (te, be, ne) = run_stage(&EVENT, &LAYER_WISE, dups.clone(), mode);
+                let (ts, bs, ns) = run_stage(&STEPPED, &LAYER_WISE, dups.clone(), mode);
+                assert_eq!(te, ts, "makespan diverged for {dups:?} {mode:?}");
+                assert_eq!(be, bs, "busy diverged for {dups:?} {mode:?}");
+                assert_eq!(ne.packets, ns.packets);
+                assert_eq!(ne.byte_hops, ns.byte_hops);
+            }
+        }
+    }
+
+    #[test]
+    fn stepped_matches_event_block_pools() {
+        for dups in [vec![1; 5], vec![2; 5], vec![3, 1, 1, 1, 2]] {
+            for mode in [ReadMode::ZeroSkip, ReadMode::Baseline] {
+                let (te, be, ne) = run_stage(&EVENT, &BLOCK_WISE, dups.clone(), mode);
+                let (ts, bs, ns) = run_stage(&STEPPED, &BLOCK_WISE, dups.clone(), mode);
+                assert_eq!(te, ts, "makespan diverged for {dups:?} {mode:?}");
+                assert_eq!(be, bs, "busy diverged for {dups:?} {mode:?}");
+                assert_eq!(ne.packets, ns.packets);
+                assert_eq!(ne.byte_hops, ns.byte_hops);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_work_stage_costs_only_fill() {
+        // an all-zero trace (zero-skip skips everything) completes at the
+        // NoC fill latency under both engines
+        let mut g = Graph::new("z", [4, 4, 4]);
+        g.push("c", Op::Conv { in_ch: 4, out_ch: 8, k: 3, stride: 1, pad: 1 });
+        let map = map_network(&g, ArrayCfg::paper(), false);
+        let acts = vec![vec![crate::tensor::Tensor::zeros(&[4, 4, 4])]];
+        let trace = trace_from_activations(&g, &map, &acts);
+        let chip = ChipCfg::paper(2);
+        let plan = AllocationPlan { algorithm: "t".into(), duplicates: vec![vec![2]] };
+        let placement = place(&map, &plan, &chip).unwrap();
+        for engine in engines() {
+            let mut mesh = Mesh::new(&chip);
+            let mut busy = vec![0u64; 2];
+            let mut ctx = StageCtx {
+                chip: &chip,
+                map: &map,
+                plan: &plan,
+                placement: &placement,
+                mesh: &mut mesh,
+            };
+            let t = engine.simulate_stage(
+                &BLOCK_WISE,
+                &mut ctx,
+                &trace.images[0].layers[0],
+                0,
+                ReadMode::ZeroSkip,
+                &mut busy,
+            );
+            assert!(busy.iter().all(|&b| b == 0), "{}: zero trace did work", engine.name());
+            assert!(t > 0, "{}: fill latency should be nonzero", engine.name());
+        }
+    }
+}

@@ -1,13 +1,17 @@
-//! Cycle-accurate simulator: dataflows, layer pipelining, utilization.
+//! Cycle-accurate simulator: engines, dataflows, layer pipelining,
+//! utilization.
 //!
 //! The simulator consumes exact per-(patch, block) cycle durations from a
 //! [`crate::stats::NetTrace`] and schedules them onto the physical block
 //! instances of an [`crate::mapping::AllocationPlan`]:
 //!
-//! 1. [`dataflow`] simulates each layer stage for each image —
-//!    event-driven over block-instance server pools, with the per-patch
-//!    gather barrier (layer-wise) or free dynamic dispatch (block-wise),
-//!    recording per-instance busy cycles and NoC packets.
+//! 1. [`engine`] executes each layer stage for each image under the
+//!    scenario's simulation engine — [`engine::EVENT`] (next-event-time
+//!    over a binary heap of array-completion times, the default) or
+//!    [`engine::STEPPED`] (cycle-at-a-time reference) — with the
+//!    synchronization structure declared by the [`dataflow`] model: the
+//!    per-patch gather barrier (layer-wise) or free dynamic dispatch
+//!    (block-wise), recording per-instance busy cycles and NoC packets.
 //! 2. [`pipeline`] composes stages with the paper's layer-pipelining
 //!    discipline (each layer works on a different image, single
 //!    inter-stage buffering → upstream backpressure).
@@ -15,8 +19,11 @@
 //!    utilization (Fig 9), and NoC statistics.
 
 pub mod server;
+pub mod engine;
 pub mod dataflow;
 pub mod pipeline;
+
+pub use engine::Engine;
 
 use crate::alloc::Allocator;
 use crate::config::ChipCfg;
@@ -29,10 +36,15 @@ use crate::xbar::ReadMode;
 /// scheduling one layer stage (the mesh is mutable: dataflows record
 /// their NoC traffic on it).
 pub struct StageCtx<'a> {
+    /// Chip configuration.
     pub chip: &'a ChipCfg,
+    /// The mapped network.
     pub map: &'a NetworkMap,
+    /// The allocation plan being simulated.
     pub plan: &'a AllocationPlan,
+    /// Physical placement of every block instance.
     pub placement: &'a Placement,
+    /// The NoC (mutable: stage kernels record their traffic on it).
     pub mesh: &'a mut Mesh,
 }
 
@@ -48,6 +60,21 @@ pub struct StageCtx<'a> {
 /// `--dataflow`. Implementations must be deterministic and must charge
 /// identical per-item compute durations — only the synchronization
 /// structure may differ (the paper's comparison).
+///
+/// ```
+/// use cimfab::sim::engine::StageProgram;
+/// use cimfab::strategy::StrategyRegistry;
+///
+/// let lw = StrategyRegistry::lookup_dataflow("layer-wise").unwrap();
+/// let bw = StrategyRegistry::lookup_dataflow("block-wise").unwrap();
+/// // the barrier dataflow needs whole-layer copies; block pools don't
+/// assert!(lw.requires_uniform_plan());
+/// assert!(!bw.requires_uniform_plan());
+/// // both declare their synchronization structure, so either engine
+/// // (event or stepped) runs them from one kernel pair
+/// assert_eq!(lw.stage_program(), Some(StageProgram::GangedCopies));
+/// assert_eq!(bw.stage_program(), Some(StageProgram::BlockPools));
+/// ```
 pub trait DataflowModel: Send + Sync {
     /// Registry key and CLI `--dataflow` name (kebab-case).
     fn name(&self) -> &str;
@@ -60,6 +87,19 @@ pub trait DataflowModel: Send + Sync {
     /// duplicates beyond the per-layer minimum would be unusable.
     fn requires_uniform_plan(&self) -> bool {
         false
+    }
+
+    /// The dataflow's synchronization structure, when it is one of the
+    /// shapes the unified engine kernels understand
+    /// ([`engine::StageProgram`]). Built-ins declare theirs (layer-wise
+    /// → ganged copies, block-wise → block pools), which is what lets
+    /// every engine run every built-in dataflow — and any allocation
+    /// strategy built on them — from one kernel pair. Return `None`
+    /// (the default) to keep a bespoke [`Self::simulate_stage`] as the
+    /// only implementation; such dataflows run identically under both
+    /// engines.
+    fn stage_program(&self) -> Option<engine::StageProgram> {
+        None
     }
 
     /// Simulate one layer stage for one image. Returns the stage
@@ -79,10 +119,15 @@ pub trait DataflowModel: Send + Sync {
 /// Simulation parameters.
 #[derive(Clone, Copy)]
 pub struct SimCfg {
+    /// Read discipline (baseline vs zero-skipping).
     pub mode: ReadMode,
     /// The intra-layer dataflow (built-ins: [`dataflow::LAYER_WISE`],
     /// [`dataflow::BLOCK_WISE`]; registry strategies may add more).
     pub dataflow: &'static dyn DataflowModel,
+    /// The simulation engine (built-ins: [`engine::EVENT`] — the
+    /// next-event-time default — and [`engine::STEPPED`], the
+    /// cycle-stepped reference; `--engine` on the CLI).
+    pub engine: &'static dyn Engine,
     /// Images pushed through the pipeline.
     pub images: usize,
     /// Leading images excluded from the steady-state throughput estimate.
@@ -94,6 +139,7 @@ impl std::fmt::Debug for SimCfg {
         f.debug_struct("SimCfg")
             .field("mode", &self.mode)
             .field("dataflow", &self.dataflow.name())
+            .field("engine", &self.engine.name())
             .field("images", &self.images)
             .field("warmup", &self.warmup)
             .finish()
@@ -102,13 +148,21 @@ impl std::fmt::Debug for SimCfg {
 
 impl SimCfg {
     /// Configuration implied by an allocation strategy paired with a
-    /// dataflow model (the strategy decides the read discipline).
+    /// dataflow model (the strategy decides the read discipline). Uses
+    /// the default [`engine::EVENT`]; override with
+    /// [`SimCfg::with_engine`].
     pub fn for_strategy(
         alloc: &dyn Allocator,
         flow: &'static dyn DataflowModel,
         images: usize,
     ) -> SimCfg {
-        SimCfg { mode: alloc.read_mode(), dataflow: flow, images, warmup: (images / 4).min(2) }
+        SimCfg {
+            mode: alloc.read_mode(),
+            dataflow: flow,
+            engine: &engine::EVENT,
+            images,
+            warmup: (images / 4).min(2),
+        }
     }
 
     /// Configuration implied by a registry strategy name paired with its
@@ -119,6 +173,12 @@ impl SimCfg {
         let flow = crate::strategy::StrategyRegistry::lookup_dataflow(a.default_dataflow())?;
         Ok(SimCfg::for_strategy(a, flow, images))
     }
+
+    /// The same configuration under a different simulation engine.
+    pub fn with_engine(mut self, engine: &'static dyn Engine) -> SimCfg {
+        self.engine = engine;
+        self
+    }
 }
 
 /// Everything a simulation run produces.
@@ -126,6 +186,7 @@ impl SimCfg {
 pub struct SimResult {
     /// Total cycles from first input to last output.
     pub makespan: u64,
+    /// Images simulated.
     pub images: usize,
     /// Steady-state inferences per second at `chip.clock_hz`.
     pub throughput_ips: f64,
@@ -137,6 +198,7 @@ pub struct SimResult {
     pub block_util: Vec<Vec<f64>>,
     /// Whole-chip array utilization (allocated arrays only).
     pub chip_util: f64,
+    /// NoC statistics over the run.
     pub noc: NocStats,
 }
 
@@ -166,14 +228,21 @@ pub fn simulate(
     let mut busy: Vec<Vec<u64>> = inst_count.iter().map(|&n| vec![0u64; n]).collect();
 
     // 1. intra-stage simulation per (image, layer), dispatched through
-    //    the dataflow trait object
+    //    the engine (which interprets the dataflow's stage program)
     let mut stage_t = vec![vec![0u64; nl]; cfg.images];
     {
         let mut ctx = StageCtx { chip, map, plan, placement, mesh: &mut mesh };
         for img in 0..cfg.images {
             let it = &trace.images[img % trace.images.len()];
             for l in 0..nl {
-                let t = cfg.dataflow.simulate_stage(&mut ctx, &it.layers[l], l, cfg.mode, &mut busy[l]);
+                let t = cfg.engine.simulate_stage(
+                    cfg.dataflow,
+                    &mut ctx,
+                    &it.layers[l],
+                    l,
+                    cfg.mode,
+                    &mut busy[l],
+                );
                 stage_t[img][l] = t;
             }
         }
@@ -326,6 +395,7 @@ mod tests {
             SimCfg {
                 mode: ReadMode::ZeroSkip,
                 dataflow: &dataflow::BLOCK_WISE,
+                engine: &engine::EVENT,
                 images: 8,
                 warmup: 2,
             },

@@ -14,7 +14,9 @@
 pub struct Schedule {
     /// `begin[i][l]`, `end[i][l]` in cycles.
     pub begin: Vec<Vec<u64>>,
+    /// Completion cycle of (image `i`, layer `l`).
     pub end: Vec<Vec<u64>>,
+    /// Total cycles from first input to last output.
     pub makespan: u64,
 }
 

@@ -23,10 +23,12 @@ impl ServerPool {
         ServerPool { heap: (0..d).map(|i| Reverse((t0, i))).collect(), n: d }
     }
 
+    /// Number of servers.
     pub fn len(&self) -> usize {
         self.n
     }
 
+    /// Is the pool empty? (Never true — pools hold at least one server.)
     pub fn is_empty(&self) -> bool {
         self.n == 0
     }

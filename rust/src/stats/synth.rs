@@ -22,6 +22,7 @@ pub struct SynthCfg {
     /// the fraction of the u8 range a typical activation reaches; higher
     /// intensity ⇒ more significant bits set ⇒ higher '% of 1s'.
     pub intensity_lo: f64,
+    /// Upper bound of the per-layer base intensity.
     pub intensity_hi: f64,
     /// σ of the per-channel lognormal scale (drives intra-layer spread).
     pub channel_sigma: f64,
@@ -29,6 +30,7 @@ pub struct SynthCfg {
     /// (models sparsity from preceding quantization/pooling; this is the
     /// dominant lever on '% of 1s', giving the Fig 4 layer spread).
     pub zero_frac_lo: f64,
+    /// Upper bound of the per-layer extra-zero fraction.
     pub zero_frac_hi: f64,
 }
 

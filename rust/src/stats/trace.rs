@@ -10,7 +10,9 @@ use crate::xbar::scheduler::{baseline_cycles, zs_cycles};
 /// One CIM layer's workload for one image.
 #[derive(Debug, Clone)]
 pub struct LayerTrace {
+    /// Patch vectors per inference.
     pub positions: usize,
+    /// Blocks per copy of the layer.
     pub blocks: usize,
     /// Zero-skip duration of (patch p, block r): `zs[p * blocks + r]`.
     pub zs: Vec<u32>,
@@ -18,11 +20,13 @@ pub struct LayerTrace {
     pub baseline: Vec<u32>,
     /// Ones / total-bits per block (densities for Figs 4 & 6).
     pub block_ones: Vec<u64>,
+    /// Total bits seen per block (density denominator).
     pub block_bits: Vec<u64>,
 }
 
 impl LayerTrace {
     #[inline]
+    /// Zero-skip duration of (patch, block).
     pub fn zs_at(&self, patch: usize, block: usize) -> u32 {
         self.zs[patch * self.blocks + block]
     }
@@ -59,13 +63,16 @@ impl LayerTrace {
 /// All CIM layers for one image.
 #[derive(Debug, Clone)]
 pub struct ImageTrace {
+    /// One trace per CIM layer, in grid order.
     pub layers: Vec<LayerTrace>,
 }
 
 /// The full workload: one [`ImageTrace`] per profiled image.
 #[derive(Debug, Clone)]
 pub struct NetTrace {
+    /// CIM layer count (grid order).
     pub layers_meta: usize,
+    /// One trace per profiled image.
     pub images: Vec<ImageTrace>,
 }
 
@@ -100,7 +107,11 @@ fn layer_trace(
     let cfg = &map.array;
     let layer = &graph.layers[g.graph_idx];
     let patches: Tensor<u8> = match layer.op {
-        Op::Conv { in_ch, k, stride, pad, .. } => {
+        // A depthwise conv sees the same channel-major im2col patch as a
+        // dense conv over all its channels — only the weight layout
+        // (block-diagonal) differs, and zero-skip timing depends on
+        // input bits alone.
+        Op::Conv { in_ch, k, stride, pad, .. } | Op::DwConv { ch: in_ch, k, stride, pad } => {
             assert_eq!(
                 act.shape(),
                 &layer.in_shape,
@@ -144,8 +155,11 @@ pub fn trace_from_patches(
     for p in 0..positions {
         let row = &patches.data()[p * plen..(p + 1) * plen];
         for b in 0..blocks {
-            let start = b * cfg.rows;
-            let end = (start + cfg.rows).min(plen);
+            // blocks split at the grid's per-block row stride (the full
+            // array height for dense layers; filter-aligned for
+            // block-diagonal depthwise layers)
+            let start = b * g.rows_per_block;
+            let end = (start + g.rows_per_block).min(plen);
             let slice = &row[start..end];
             let counts = plane_counts(slice);
             zs[p * blocks + b] = zs_cycles(cfg, &counts);
@@ -217,6 +231,27 @@ mod tests {
         assert_eq!(lt.layer_density(), 0.0);
         assert!(lt.zs.iter().all(|&d| d == 0));
         assert!(lt.baseline.iter().all(|&b| b > 0));
+    }
+
+    #[test]
+    fn depthwise_trace_uses_filter_aligned_blocks() {
+        let mut g = Graph::new("dw", [32, 6, 6]);
+        g.push("dw", Op::DwConv { ch: 32, k: 3, stride: 1, pad: 1 });
+        let map = map_network(&g, ArrayCfg::paper(), false);
+        // 32 channels x 9 rows = 288 matrix rows at 126 rows/block → 3 blocks
+        assert_eq!(map.grids[0].rows_per_block, 126);
+        assert_eq!(map.grids[0].blocks_per_copy, 3);
+        let mut rng = Prng::new(9);
+        let acts = vec![vec![Tensor::from_fn(&[32, 6, 6], |_| (rng.next_u32() as u8) & 0x3F)]];
+        let trace = trace_from_activations(&g, &map, &acts);
+        let lt = &trace.images[0].layers[0];
+        assert_eq!(lt.blocks, 3);
+        assert_eq!(lt.positions, 36);
+        // last block holds 288 - 2*126 = 36 rows → cheaper baseline
+        assert!(lt.baseline[2] < lt.baseline[0]);
+        for (i, &d) in lt.zs.iter().enumerate() {
+            assert!(d <= lt.baseline[i % lt.blocks], "zs exceeds baseline");
+        }
     }
 
     #[test]

@@ -14,18 +14,26 @@ use super::nd::Tensor;
 /// Geometry of one im2col lowering.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Im2colSpec {
+    /// Input channels.
     pub in_ch: usize,
+    /// Input height.
     pub in_h: usize,
+    /// Input width.
     pub in_w: usize,
+    /// Square kernel size.
     pub k: usize,
+    /// Stride.
     pub stride: usize,
+    /// Zero padding.
     pub pad: usize,
 }
 
 impl Im2colSpec {
+    /// Output height.
     pub fn out_h(&self) -> usize {
         (self.in_h + 2 * self.pad - self.k) / self.stride + 1
     }
+    /// Output width.
     pub fn out_w(&self) -> usize {
         (self.in_w + 2 * self.pad - self.k) / self.stride + 1
     }

@@ -31,30 +31,37 @@ impl<T: Copy + Default> Tensor<T> {
         Tensor { shape: shape.to_vec(), data: (0..n).map(&mut f).collect() }
     }
 
+    /// The shape.
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Number of dimensions.
     pub fn ndim(&self) -> usize {
         self.shape.len()
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Does the tensor hold no elements?
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Flat element slice (row-major).
     pub fn data(&self) -> &[T] {
         &self.data
     }
 
+    /// Mutable flat element slice (row-major).
     pub fn data_mut(&mut self) -> &mut [T] {
         &mut self.data
     }
 
+    /// Consume into the flat element vector.
     pub fn into_data(self) -> Vec<T> {
         self.data
     }
@@ -72,11 +79,13 @@ impl<T: Copy + Default> Tensor<T> {
     }
 
     #[inline]
+    /// Element at a multi-index.
     pub fn get(&self, idx: &[usize]) -> T {
         self.data[self.offset(idx)]
     }
 
     #[inline]
+    /// Set the element at a multi-index.
     pub fn set(&mut self, idx: &[usize], v: T) {
         let off = self.offset(idx);
         self.data[off] = v;

@@ -8,7 +8,9 @@
 /// Affine quantization parameters: `real = scale * (q - zero_point)`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct QuantParams {
+    /// Dequantization scale.
     pub scale: f32,
+    /// Quantized zero point.
     pub zero_point: i32,
 }
 

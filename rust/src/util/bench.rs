@@ -11,16 +11,20 @@ use std::time::Instant;
 /// One timed measurement series.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Benchmark label.
     pub name: String,
+    /// Measured iterations.
     pub iters: usize,
     /// Seconds per iteration.
     pub summary: Summary,
 }
 
 impl Measurement {
+    /// Mean seconds-per-iteration in milliseconds.
     pub fn mean_ms(&self) -> f64 {
         self.summary.mean * 1e3
     }
+    /// Mean seconds-per-iteration in microseconds.
     pub fn mean_us(&self) -> f64 {
         self.summary.mean * 1e6
     }
@@ -28,7 +32,9 @@ impl Measurement {
 
 /// Benchmark runner with fixed warmup/measure counts.
 pub struct Bencher {
+    /// Untimed warmup iterations before measuring.
     pub warmup_iters: usize,
+    /// Timed iterations per measurement.
     pub measure_iters: usize,
     results: Vec<Measurement>,
 }
@@ -42,6 +48,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// A bencher with explicit warmup/measure counts.
     pub fn new(warmup: usize, measure: usize) -> Bencher {
         Bencher { warmup_iters: warmup, measure_iters: measure, results: vec![] }
     }
@@ -82,6 +89,7 @@ impl Bencher {
         t.render()
     }
 
+    /// All measurements collected so far.
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }

@@ -8,9 +8,13 @@ use std::collections::BTreeMap;
 /// Parsed command line.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// First positional token (the subcommand), if any.
     pub subcommand: Option<String>,
+    /// `--key value` options.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
     pub flags: Vec<String>,
+    /// Remaining positional arguments.
     pub positionals: Vec<String>,
 }
 
@@ -49,18 +53,22 @@ impl Args {
         Args::parse(&argv, flag_names)
     }
 
+    /// Was `--name` passed as a bare flag?
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Value of `--name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Value of `--name`, or `default` when absent.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Parse `--name` as `usize` (`default` when absent).
     pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
         match self.get(name) {
             None => Ok(default),
@@ -70,6 +78,7 @@ impl Args {
         }
     }
 
+    /// Parse `--name` as `f64` (`default` when absent).
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
         match self.get(name) {
             None => Ok(default),
@@ -79,6 +88,7 @@ impl Args {
         }
     }
 
+    /// Parse `--name` as `u64` (`default` when absent).
     pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
         match self.get(name) {
             None => Ok(default),

@@ -11,10 +11,15 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (stored as `f64`).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Json>),
     /// BTreeMap so emitted JSON is deterministically ordered.
     Obj(BTreeMap<String, Json>),
@@ -24,7 +29,9 @@ pub enum Json {
 #[derive(Debug, thiserror::Error)]
 #[error("json parse error at byte {offset}: {msg}")]
 pub struct JsonError {
+    /// Byte offset the parse failed at.
     pub offset: usize,
+    /// Human-readable description.
     pub msg: String,
 }
 
@@ -43,6 +50,7 @@ impl Json {
 
     // ---- typed accessors -------------------------------------------------
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -50,10 +58,12 @@ impl Json {
         }
     }
 
+    /// Non-negative integer value, if exactly representable.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().filter(|x| *x >= 0.0 && x.fract() == 0.0).map(|x| x as usize)
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -61,6 +71,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -68,6 +79,7 @@ impl Json {
         }
     }
 
+    /// Array elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -75,6 +87,7 @@ impl Json {
         }
     }
 
+    /// Key → value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -96,18 +109,22 @@ impl Json {
 
     // ---- constructors ----------------------------------------------------
 
+    /// Build an object from key/value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build an array.
     pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
         Json::Arr(items.into_iter().collect())
     }
 
+    /// Build a number.
     pub fn num<N: Into<f64>>(n: N) -> Json {
         Json::Num(n.into())
     }
 
+    /// Build a string.
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
     }

@@ -4,12 +4,19 @@
 /// Summary statistics over a sample.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Sample standard deviation.
     pub stddev: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Median sample.
     pub median: f64,
+    /// 95th-percentile sample.
     pub p95: f64,
 }
 

@@ -8,10 +8,12 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given header.
     pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(header: I) -> Table {
         Table { header: header.into_iter().map(Into::into).collect(), rows: vec![] }
     }
 
+    /// Append one row.
     pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) -> &mut Self {
         let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
         assert_eq!(
@@ -25,10 +27,12 @@ impl Table {
         self
     }
 
+    /// Does the table have no rows?
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }
 
+    /// Render as aligned plain text.
     pub fn render(&self) -> String {
         let ncols = self.header.len();
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();

@@ -13,10 +13,12 @@
 /// A `bits`-bit ADC reading batches of up to `2^bits` rows.
 #[derive(Debug, Clone, Copy)]
 pub struct Adc {
+    /// ADC precision in bits.
     pub bits: usize,
 }
 
 impl Adc {
+    /// An ADC of the given precision.
     pub fn new(bits: usize) -> Adc {
         assert!((1..=10).contains(&bits));
         Adc { bits }

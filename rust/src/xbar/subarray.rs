@@ -77,10 +77,12 @@ impl SubArray {
         Ok(SubArray::program(cfg, weights))
     }
 
+    /// Word lines programmed.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// The array configuration.
     pub fn cfg(&self) -> &ArrayCfg {
         &self.cfg
     }

@@ -1,0 +1,116 @@
+//! Golden engine-parity suite: the event-driven engine must be
+//! **bit-identical** to the cycle-stepped reference on cycle counts,
+//! utilization, and NoC statistics, for every built-in allocation
+//! strategy × every dataflow it can legally run, on the Fig 8 ResNet18
+//! scenario.
+//!
+//! The comparison goes through the canonical simulate-stage JSON
+//! artifact (`pipeline::artifact::sim_result_json`), the same encoding
+//! the pipeline-determinism suite pins, so any drift in makespan,
+//! per-layer stage cycles, utilization, throughput, or NoC counters
+//! fails loudly with the diverging scenario's id.
+
+use cimfab::pipeline::{self, artifact, PrefixSpec, ScenarioBuilder, StatsSource};
+use cimfab::strategy::StrategyRegistry;
+
+fn spec() -> PrefixSpec {
+    PrefixSpec {
+        net: "resnet18".into(),
+        hw: 32,
+        hw_profile: cimfab::hw::DEFAULT_PROFILE.into(),
+        stats: StatsSource::Synthetic,
+        profile_images: 1,
+        seed: 7,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+/// Every (strategy, dataflow) pairing the builder accepts: uniform-plan
+/// strategies run both dataflows; block-granular plans only the
+/// barrier-free one.
+fn legal_pairings() -> Vec<(String, String)> {
+    let reg = StrategyRegistry::snapshot();
+    let mut out = Vec::new();
+    for a in reg.allocators() {
+        for d in reg.dataflows() {
+            if !d.requires_uniform_plan() || a.uniform_plans() {
+                out.push((a.name().to_string(), d.name().to_string()));
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn event_engine_matches_stepped_reference_on_fig8_resnet18() {
+    let prep = pipeline::prepare(&spec(), None).unwrap();
+    let pes = prep.min_pes() * 2; // the paper's 172-PE Fig 8/9 point
+    let pairings = legal_pairings();
+    assert!(pairings.len() >= 8, "expected all built-in pairings, got {pairings:?}");
+    for (alloc, dataflow) in pairings {
+        let base = ScenarioBuilder::from_prefix(&spec())
+            .alloc(&alloc)
+            .dataflow(&dataflow)
+            .pes(pes)
+            .sim_images(2);
+        let ev = base.clone().engine("event").build().unwrap();
+        let st = base.clone().engine("stepped").build().unwrap();
+        assert_ne!(ev.id(), st.id(), "engine must be part of the scenario id");
+        let ev_out = pipeline::run_scenario(&prep.view(), &ev, None).unwrap();
+        let st_out = pipeline::run_scenario(&prep.view(), &st, None).unwrap();
+        assert_eq!(
+            ev_out.plan, st_out.plan,
+            "{alloc}+{dataflow}: allocation must not depend on the engine"
+        );
+        assert_eq!(
+            artifact::sim_result_json(&ev_out.result).pretty(),
+            artifact::sim_result_json(&st_out.result).pretty(),
+            "{alloc}+{dataflow}: event engine diverged from the stepped reference"
+        );
+    }
+}
+
+#[test]
+fn parity_holds_on_the_depthwise_workload() {
+    // MobileNet exercises the block-diagonal grids; parity must hold
+    // there too (one strategy per dataflow family keeps this fast).
+    let mut s = spec();
+    s.net = "mobilenet".into();
+    let prep = pipeline::prepare(&s, None).unwrap();
+    let pes = prep.min_pes() * 2;
+    for (alloc, dataflow) in [("perf-based", "layer-wise"), ("block-wise", "block-wise")] {
+        let base =
+            ScenarioBuilder::from_prefix(&s).alloc(alloc).dataflow(dataflow).pes(pes).sim_images(2);
+        let ev = pipeline::run_scenario(&prep.view(), &base.clone().build().unwrap(), None)
+            .unwrap();
+        let st = pipeline::run_scenario(
+            &prep.view(),
+            &base.clone().engine("stepped").build().unwrap(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(
+            artifact::sim_result_json(&ev.result).pretty(),
+            artifact::sim_result_json(&st.result).pretty(),
+            "{alloc}+{dataflow} on mobilenet: engines diverged"
+        );
+    }
+}
+
+#[test]
+fn stepped_engine_is_selectable_end_to_end() {
+    // the full outcome (report stage included) works under --engine
+    // stepped, and the scenario id records the non-default engine
+    let prep = pipeline::prepare(&spec(), None).unwrap();
+    let sc = ScenarioBuilder::from_prefix(&spec())
+        .alloc("block-wise")
+        .engine("stepped")
+        .pes(prep.min_pes())
+        .sim_images(2)
+        .build()
+        .unwrap();
+    assert!(sc.id().ends_with("_stepped"), "{}", sc.id());
+    let out = pipeline::run_scenario(&prep.view(), &sc, None).unwrap();
+    assert!(out.result.throughput_ips > 0.0);
+    assert_eq!(out.scenario.engine, "stepped");
+}

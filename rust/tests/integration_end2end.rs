@@ -8,7 +8,7 @@ use cimfab::util::prng::Prng;
 
 #[test]
 fn both_networks_full_pipeline_synthetic() {
-    for (net, hw) in [("resnet18", 32usize), ("vgg11", 32)] {
+    for (net, hw) in [("resnet18", 32usize), ("vgg11", 32), ("mobilenet", 32)] {
         let d = Driver::prepare(DriverOpts {
             net: net.into(),
             hw,
@@ -96,6 +96,37 @@ fn cli_list_strategies_prints_the_registry() {
         assert!(text.contains(name), "missing strategy '{name}' in:\n{text}");
     }
     assert!(text.contains("layer-wise"), "missing dataflow section:\n{text}");
+    for engine in ["event", "stepped"] {
+        assert!(text.contains(engine), "missing engine '{engine}' in:\n{text}");
+    }
+}
+
+#[test]
+fn cli_unknown_engine_suggests_the_closest_name() {
+    let exe = env!("CARGO_BIN_EXE_cimfab");
+    let out = std::process::Command::new(exe)
+        .args(["simulate", "--net", "resnet18", "--res", "32", "--engine", "evnt"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("did you mean 'event'?"), "unexpected error: {text}");
+}
+
+#[test]
+fn cli_simulate_mobilenet_with_explicit_engine() {
+    let exe = env!("CARGO_BIN_EXE_cimfab");
+    let out = std::process::Command::new(exe)
+        .args([
+            "simulate", "--net", "mobilenet", "--res", "32", "--engine", "event", "--alloc",
+            "block-wise", "--images", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("event engine"), "engine missing from report line:\n{text}");
+    assert!(text.contains("inferences/s"), "{text}");
 }
 
 #[test]

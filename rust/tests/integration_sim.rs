@@ -90,11 +90,23 @@ fn dataflow_ablation_blockwise_alloc_layerwise_flow() {
     let placement = place(&map, &plan, &chip).unwrap();
     let lw = simulate(
         &chip, &map, &plan, &placement, &trace,
-        SimCfg { mode: ReadMode::ZeroSkip, dataflow: &LAYER_WISE, images: 6, warmup: 1 },
+        SimCfg {
+            mode: ReadMode::ZeroSkip,
+            dataflow: &LAYER_WISE,
+            engine: &cimfab::sim::engine::EVENT,
+            images: 6,
+            warmup: 1,
+        },
     );
     let bw = simulate(
         &chip, &map, &plan, &placement, &trace,
-        SimCfg { mode: ReadMode::ZeroSkip, dataflow: &BLOCK_WISE, images: 6, warmup: 1 },
+        SimCfg {
+            mode: ReadMode::ZeroSkip,
+            dataflow: &BLOCK_WISE,
+            engine: &cimfab::sim::engine::EVENT,
+            images: 6,
+            warmup: 1,
+        },
     );
     assert!(
         bw.throughput_ips >= lw.throughput_ips * 0.999,

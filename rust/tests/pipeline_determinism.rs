@@ -170,6 +170,7 @@ fn synthetic_prefixes_differing_only_in_artifacts_dir_share_one_prefix() {
         prefix,
         alloc: alloc.into(),
         dataflow: dataflow.into(),
+        engine: "event".into(),
         pes: 172,
         sim_images: 4,
     };
@@ -203,6 +204,7 @@ fn multi_prefix_sweep_prepares_each_prefix_once_and_stays_ordered() {
                 prefix: prefix.clone(),
                 alloc: alloc.into(),
                 dataflow: dataflow.into(),
+                engine: "event".into(),
                 pes: 200,
                 sim_images: 4,
             });

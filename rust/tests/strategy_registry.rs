@@ -76,7 +76,7 @@ fn all_registered_allocators_produce_valid_plans() {
 #[test]
 fn builder_validation_propcheck() {
     propcheck::check("ScenarioBuilder validation", 0xB01D, 80, |rng| {
-        let nets = ["resnet18", "resnet34", "vgg11", "", "alexnet"];
+        let nets = ["resnet18", "resnet34", "vgg11", "mobilenet", "", "alexnet"];
         let net = nets[rng.index(nets.len())];
         let pes = rng.index(400); // 0 is invalid
         let sim_images = rng.index(6); // 0 is invalid
@@ -90,7 +90,7 @@ fn builder_validation_propcheck() {
             .profile_images(profile_images)
             .alloc(alloc)
             .build();
-        let should_be_valid = ["resnet18", "resnet34", "vgg11"].contains(&net)
+        let should_be_valid = ["resnet18", "resnet34", "vgg11", "mobilenet"].contains(&net)
             && pes > 0
             && sim_images > 0
             && profile_images > 0

@@ -1,0 +1,76 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the docs site and README.
+
+Checks every markdown file passed on the command line (or, with no
+arguments, README.md plus docs/**/*.md) for:
+
+  * relative links whose target file does not exist;
+  * intra-document anchor links (#heading) with no matching heading.
+
+External (http/https/mailto) links are not fetched — CI must stay
+offline-deterministic. Exits non-zero listing every broken link.
+"""
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop punctuation, dash spaces."""
+    text = re.sub(r"[`*_]", "", heading.strip()).lower()
+    text = re.sub(r"[^\w\s-]", "", text, flags=re.UNICODE)
+    return re.sub(r"\s+", "-", text)
+
+
+def check_file(path: str) -> list[str]:
+    with open(path, encoding="utf-8") as fh:
+        raw = fh.read()
+    text = CODE_FENCE_RE.sub("", raw)  # links inside code fences are examples
+    anchors = {slugify(h) for h in HEADING_RE.findall(text)}
+    errors = []
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        file_part, _, anchor = target.partition("#")
+        if file_part:
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), file_part)
+            )
+            if not os.path.exists(resolved):
+                errors.append(f"{path}: broken link -> {target}")
+                continue
+            if anchor and resolved.endswith(".md"):
+                with open(resolved, encoding="utf-8") as fh:
+                    t_anchors = {
+                        slugify(h)
+                        for h in HEADING_RE.findall(CODE_FENCE_RE.sub("", fh.read()))
+                    }
+                if anchor not in t_anchors:
+                    errors.append(f"{path}: broken anchor -> {target}")
+        elif anchor and anchor not in anchors:
+            errors.append(f"{path}: broken anchor -> #{anchor}")
+    return errors
+
+
+def main() -> int:
+    files = sys.argv[1:]
+    if not files:
+        files = ["README.md"]
+        for root, _, names in os.walk("docs"):
+            files += [os.path.join(root, n) for n in names if n.endswith(".md")]
+    all_errors = []
+    for f in files:
+        all_errors += check_file(f)
+    for e in all_errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} files, {len(all_errors)} broken links")
+    return 1 if all_errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
