@@ -4,14 +4,15 @@
 //! algorithms) under both [`cimfab::sim::engine`] implementations,
 //! cross-checks the results **bit-identical** through the canonical
 //! simulate artifact, measures the wall-clock gap, and emits
-//! `BENCH_sim_engines.json` (archived by CI) with the measured speedup.
+//! `BENCH_sim_engines.json` (repo root, archived by CI) in the shared
+//! `{name, baseline_ms, optimized_ms, speedup}` schema.
 //! Acceptance target: the event engine is ≥5× faster on the sweep path
 //! — in practice the gap is orders of magnitude, since the stepped
 //! engine's cost scales with simulated *cycles* while the event engine's
 //! scales with work *items*.
 
 use cimfab::pipeline::{self, run_scenarios_prepared, PrefixSpec, StatsSource, SweepCfg};
-use cimfab::util::bench::{banner, fmt_duration, Bencher};
+use cimfab::util::bench::{banner, fmt_duration, write_bench_json, Bencher};
 use cimfab::util::json::Json;
 
 fn main() {
@@ -84,17 +85,16 @@ fn main() {
     );
     assert!(speedup >= 5.0, "event engine only {speedup:.1}x faster than stepped");
 
-    let doc = Json::obj(vec![
-        ("bench", Json::str("sim_engines")),
-        ("net", Json::str("resnet18")),
-        ("scenarios", Json::num(n as f64)),
-        ("event_mean_s", Json::Num(m_event)),
-        ("stepped_mean_s", Json::Num(m_stepped)),
-        ("speedup", Json::Num(speedup)),
-    ]);
-    let mut text = doc.pretty();
-    text.push('\n');
-    std::fs::write("BENCH_sim_engines.json", text).unwrap();
-    println!("wrote BENCH_sim_engines.json");
+    // shared cross-PR schema: baseline = stepped reference, optimized =
+    // event engine, both in wall-clock ms over the same scenario batch
+    write_bench_json(
+        "sim_engines",
+        m_stepped * 1e3,
+        m_event * 1e3,
+        vec![
+            ("net", Json::str("resnet18")),
+            ("scenarios", Json::num(n as f64)),
+        ],
+    );
     println!("\n{}\n{}", b.report(), b2.report());
 }

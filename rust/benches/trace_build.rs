@@ -1,0 +1,106 @@
+//! Trace-build bench: packed bit-plane fast path vs the retained
+//! reference implementation on the ResNet18 Fig 8 prefix.
+//!
+//! The reference path (`stats::trace::reference`) materializes every
+//! layer's im2col patch matrix and re-popcounts each (patch, block)
+//! slice, serially; the shipping path spreads bit planes into lane
+//! words, window/prefix-sums them once per channel, and fans layers ×
+//! images out over the scoped worker pool. Both must be
+//! **bit-identical**; the fast path must be ≥4× faster. Also times a
+//! cold-vs-warm pass through the content-addressed prefix cache and
+//! emits `BENCH_trace_build.json` (repo root, archived by CI) in the
+//! shared `{name, baseline_ms, optimized_ms, speedup}` schema.
+
+use cimfab::pipeline::{self, CacheStatus, PrefixCache, PrefixSpec, StatsSource};
+use cimfab::stats::synth::{synth_activations, SynthCfg};
+use cimfab::stats::trace::reference::trace_from_activations_reference;
+use cimfab::stats::trace_from_activations;
+use cimfab::util::bench::{banner, fmt_duration, write_bench_json, Bencher};
+use cimfab::util::json::Json;
+
+fn main() {
+    banner(
+        "Trace build",
+        "packed bit-plane + parallel trace construction vs the seed reference path",
+    );
+    let spec = PrefixSpec {
+        net: "resnet18".into(),
+        hw: 32,
+        hw_profile: cimfab::hw::DEFAULT_PROFILE.into(),
+        stats: StatsSource::Synthetic,
+        profile_images: 2,
+        seed: 7,
+        artifacts_dir: "artifacts".into(),
+    };
+    let graph = pipeline::build_graph(&spec.net, spec.hw).unwrap();
+    let hw = cimfab::hw::ProfileRegistry::lookup(cimfab::hw::DEFAULT_PROFILE).unwrap();
+    let map = cimfab::mapping::map_network(&graph, hw.array_cfg().unwrap(), false);
+    let acts = synth_activations(&graph, &map, spec.profile_images, spec.seed, SynthCfg::default());
+
+    let mut b = Bencher::new(1, 3);
+    let mut reference = None;
+    let m_ref = b
+        .bench("reference: im2col + per-patch popcounts (serial)", || {
+            reference = Some(trace_from_activations_reference(&graph, &map, &acts));
+        })
+        .summary
+        .mean;
+    let mut fast = None;
+    let m_fast = b
+        .bench("packed bit planes + parallel layers (shipping path)", || {
+            fast = Some(trace_from_activations(&graph, &map, &acts));
+        })
+        .summary
+        .mean;
+    let (reference, fast) = (reference.unwrap(), fast.unwrap());
+    assert_eq!(fast, reference, "fast path diverged from the reference trace");
+    println!("parity: packed path == reference, every (image, layer, patch, block) duration");
+
+    let speedup = m_ref / m_fast.max(1e-12);
+    println!(
+        "reference {} vs packed {} → speedup {speedup:.1}x (target >= 4x)",
+        fmt_duration(m_ref),
+        fmt_duration(m_fast)
+    );
+    assert!(speedup >= 4.0, "trace fast path only {speedup:.1}x faster than the reference");
+
+    // Cold-vs-warm pass through the content-addressed prefix cache.
+    let dir = std::env::temp_dir().join(format!("cimfab_trace_build_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = PrefixCache::new(dir.to_str().unwrap()).unwrap();
+    let t0 = std::time::Instant::now();
+    let (cold, st) = pipeline::prepare_cached(&spec, None, Some(&cache)).unwrap();
+    let cache_cold = t0.elapsed().as_secs_f64();
+    assert_eq!(st, CacheStatus::Miss, "first prepare must be a cache miss");
+    let t1 = std::time::Instant::now();
+    let (warm, st) = pipeline::prepare_cached(&spec, None, Some(&cache)).unwrap();
+    let cache_warm = t1.elapsed().as_secs_f64();
+    assert_eq!(st, CacheStatus::Hit, "second prepare must be a cache hit");
+    assert_eq!(cold.trace, warm.trace, "cached trace diverged");
+    assert_eq!(
+        pipeline::artifact::profile_json(&cold.profile).compact(),
+        pipeline::artifact::profile_json(&warm.profile).compact(),
+        "cached profile artifact diverged"
+    );
+    assert_eq!(cold.trace, fast, "prepared trace diverged from the measured one");
+    println!(
+        "prefix cache: cold {} → warm {} (bit-identical artifacts)",
+        fmt_duration(cache_cold),
+        fmt_duration(cache_warm)
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+
+    write_bench_json(
+        "trace_build",
+        m_ref * 1e3,
+        m_fast * 1e3,
+        vec![
+            ("net", Json::str("resnet18")),
+            ("profile_images", Json::num(spec.profile_images as f64)),
+            ("threads", Json::num(cimfab::util::par::default_threads() as f64)),
+            ("cache_cold_ms", Json::Num(cache_cold * 1e3)),
+            ("cache_warm_ms", Json::Num(cache_warm * 1e3)),
+        ],
+    );
+    println!("\n{}", b.report());
+}

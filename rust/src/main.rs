@@ -24,8 +24,9 @@
 //! the input resolution, and still works.) `profile`, `simulate`,
 //! `sweep` and `util` run on the staged experiment pipeline
 //! ([`cimfab::pipeline`]): all four accept `--dump-dir DIR` to dump
-//! every stage's JSON artifact; `sweep` and `util` also accept
-//! `--threads N` to size the sweep worker pool.
+//! every stage's JSON artifact and `--cache-dir DIR` to reuse prepared
+//! prefixes across runs (`--no-cache` forces a cold run); `sweep` and
+//! `util` also accept `--threads N` to size the sweep worker pool.
 
 use cimfab::alloc::Allocator;
 use cimfab::coordinator::{Driver, DriverOpts, StatsSource};
@@ -40,7 +41,7 @@ use cimfab::xbar::{variance, ReadMode};
 use std::time::Instant;
 
 fn main() {
-    let args = match Args::from_env(&["verbose", "csv", "no-verify"]) {
+    let args = match Args::from_env(&["verbose", "csv", "no-verify", "no-cache"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -92,7 +93,22 @@ fn sweep_cfg(args: &Args) -> Result<SweepCfg, String> {
     Ok(SweepCfg {
         threads: args.get_usize("threads", pipeline::executor::default_threads())?,
         dump_dir: args.get("dump-dir").map(str::to_string),
+        // `--no-cache` wins over `--cache-dir`, so scripts can force a
+        // cold run without editing their cache flag
+        cache_dir: if args.has_flag("no-cache") {
+            None
+        } else {
+            args.get("cache-dir").map(str::to_string)
+        },
     })
+}
+
+/// One-line prefix-cache report (only when a cache is configured, so
+/// historical output stays unchanged without `--cache-dir`).
+fn report_cache_status(cfg: &SweepCfg, spec_id: &str, status: pipeline::CacheStatus) {
+    if let Some(dir) = &cfg.cache_dir {
+        println!("prefix cache {status}: {spec_id} (dir {dir})");
+    }
 }
 
 /// `--alloc` (with `--alg` kept as an alias): a registry name, a
@@ -135,8 +151,16 @@ fn run(args: &Args) -> cimfab::Result<()> {
         }
         Some("profile") => {
             let opts = driver_opts(args).map_err(anyhow::Error::msg)?;
-            let dumper = sweep_cfg(args).map_err(anyhow::Error::msg)?.dumper()?;
-            let prep = pipeline::prepare(&opts.prefix_spec(), dumper.as_ref())?;
+            let cfg = sweep_cfg(args).map_err(anyhow::Error::msg)?;
+            let dumper = cfg.dumper()?;
+            let cache = cfg.cache()?;
+            let (prep, status) = pipeline::prepare_cached_threads(
+                &opts.prefix_spec(),
+                dumper.as_ref(),
+                cache.as_ref(),
+                cfg.threads,
+            )?;
+            report_cache_status(&cfg, &opts.prefix_spec().id(), status);
             println!("== Fig 4: layer density vs cycles per array ==");
             println!("{}", report::fig4_table(&prep.map, &prep.profile).render());
             // Fig 6: the layers with 9 and 18 blocks (10 & 15 in the paper)
@@ -173,8 +197,16 @@ fn run(args: &Args) -> cimfab::Result<()> {
             if let Some(engine) = args.get("engine") {
                 cimfab::sim::engine::lookup(engine)?;
             }
-            let dumper = sweep_cfg(args).map_err(anyhow::Error::msg)?.dumper()?;
-            let prep = pipeline::prepare(&opts.prefix_spec(), dumper.as_ref())?;
+            let cfg = sweep_cfg(args).map_err(anyhow::Error::msg)?;
+            let dumper = cfg.dumper()?;
+            let cache = cfg.cache()?;
+            let (prep, status) = pipeline::prepare_cached_threads(
+                &opts.prefix_spec(),
+                dumper.as_ref(),
+                cache.as_ref(),
+                cfg.threads,
+            )?;
+            report_cache_status(&cfg, &opts.prefix_spec().id(), status);
             let pes =
                 args.get_usize("pes", prep.min_pes() * 2).map_err(anyhow::Error::msg)?;
             let mut builder = ScenarioBuilder::from_prefix(&opts.prefix_spec())
@@ -212,7 +244,14 @@ fn run(args: &Args) -> cimfab::Result<()> {
             let algs = alloc_strategies(args)?;
 
             let dumper = cfg.dumper()?;
-            let prep = pipeline::prepare(&opts.prefix_spec(), dumper.as_ref())?;
+            let cache = cfg.cache()?;
+            let (prep, status) = pipeline::prepare_cached_threads(
+                &opts.prefix_spec(),
+                dumper.as_ref(),
+                cache.as_ref(),
+                cfg.threads,
+            )?;
+            report_cache_status(&cfg, &opts.prefix_spec().id(), status);
             let mut scenarios = pipeline::scenarios_for(
                 &opts.prefix_spec(),
                 &pipeline::sweep_sizes(prep.min_pes(), steps),
@@ -247,7 +286,11 @@ fn run(args: &Args) -> cimfab::Result<()> {
                 // Same config but one thread, so the timing comparison is
                 // symmetric (both runs write the same dumps, if any).
                 let t1 = Instant::now();
-                let serial_cfg = SweepCfg { threads: 1, dump_dir: cfg.dump_dir.clone() };
+                let serial_cfg = SweepCfg {
+                    threads: 1,
+                    dump_dir: cfg.dump_dir.clone(),
+                    cache_dir: cfg.cache_dir.clone(),
+                };
                 let serial = run_scenarios_prepared(&prep, &scenarios, &serial_cfg)?;
                 let serial_elapsed = t1.elapsed().as_secs_f64();
                 for (p, s) in outcomes.iter().zip(&serial) {
@@ -272,7 +315,14 @@ fn run(args: &Args) -> cimfab::Result<()> {
             let opts = driver_opts(args).map_err(anyhow::Error::msg)?;
             let cfg = sweep_cfg(args).map_err(anyhow::Error::msg)?;
             let dumper = cfg.dumper()?;
-            let prep = pipeline::prepare(&opts.prefix_spec(), dumper.as_ref())?;
+            let cache = cfg.cache()?;
+            let (prep, status) = pipeline::prepare_cached_threads(
+                &opts.prefix_spec(),
+                dumper.as_ref(),
+                cache.as_ref(),
+                cfg.threads,
+            )?;
+            report_cache_status(&cfg, &opts.prefix_spec().id(), status);
             let pes =
                 args.get_usize("pes", prep.min_pes() * 2).map_err(anyhow::Error::msg)?;
             let algs = alloc_strategies(args)?;
@@ -562,8 +612,16 @@ Common options:
                            simulate/sweep/util)
   --images N               pipelined images per simulation (default 8)
   --steps N                design sizes in a sweep (default 5)
-  --threads N              sweep/util worker threads (default: all cores)
+  --threads N              worker threads for sweep scenarios and prefix
+                           preparation — --threads 1 runs fully serial
+                           (default: all cores)
   --dump-dir DIR           dump per-stage JSON artifacts under DIR
                            (profile|simulate|sweep|util)
+  --cache-dir DIR          reuse prepared prefixes (graph/map/stats/
+                           trace/profile) across runs via a
+                           content-addressed cache under DIR
+                           (profile|simulate|sweep|util); prints
+                           'prefix cache hit|miss' per prefix
+  --no-cache               ignore --cache-dir and recompute the prefix
   --no-verify              skip the sweep's serial cross-check
   --seed N --csv --verbose --artifacts DIR";

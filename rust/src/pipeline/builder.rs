@@ -50,6 +50,7 @@ pub struct ScenarioBuilder {
     engine: String,
     pes: Option<usize>,
     sim_images: usize,
+    cache_dir: Option<String>,
 }
 
 impl Default for ScenarioBuilder {
@@ -67,6 +68,7 @@ impl Default for ScenarioBuilder {
             engine: crate::sim::engine::DEFAULT_ENGINE.into(),
             pes: None,
             sim_images: 8,
+            cache_dir: None,
         }
     }
 }
@@ -166,6 +168,32 @@ impl ScenarioBuilder {
     pub fn sim_images(mut self, n: usize) -> Self {
         self.sim_images = n;
         self
+    }
+
+    /// Cache prepared prefixes content-addressed under this directory
+    /// (`--cache-dir`); [`Self::prepare`] then reuses entries across
+    /// runs. Off by default.
+    pub fn cache_dir(mut self, dir: impl Into<String>) -> Self {
+        self.cache_dir = Some(dir.into());
+        self
+    }
+
+    /// Drop any configured prefix cache (`--no-cache`).
+    pub fn no_cache(mut self) -> Self {
+        self.cache_dir = None;
+        self
+    }
+
+    /// Validate the prefix half and run (or, with [`Self::cache_dir`]
+    /// set, replay) the prefix stages — the builder-level spelling of
+    /// [`super::prepare_cached`].
+    pub fn prepare(&self) -> Result<super::Prepared> {
+        let spec = self.prefix()?;
+        let cache = match &self.cache_dir {
+            Some(d) => Some(super::PrefixCache::new(d)?),
+            None => None,
+        };
+        Ok(super::prepare_cached(&spec, None, cache.as_ref())?.0)
     }
 
     /// Validate the prefix half and produce the [`PrefixSpec`].
@@ -350,6 +378,26 @@ mod tests {
         assert!(err.contains("did you mean 'rram-128'?"), "{err}");
         // missing profile files fail fast too
         assert!(valid().hw_profile("no/such/profile.json").build().is_err());
+    }
+
+    #[test]
+    fn builder_prepare_round_trips_through_the_prefix_cache() {
+        let dir =
+            std::env::temp_dir().join(format!("cimfab_builder_cache_{}", std::process::id()));
+        let b = ScenarioBuilder::new()
+            .net("resnet18")
+            .hw(32)
+            .profile_images(1)
+            .pes(172)
+            .cache_dir(dir.to_str().unwrap());
+        let cold = b.prepare().unwrap();
+        assert!(std::fs::read_dir(&dir).unwrap().next().is_some(), "no cache entry stored");
+        let warm = b.prepare().unwrap();
+        assert_eq!(cold.trace, warm.trace);
+        assert_eq!(cold.min_pes(), warm.min_pes());
+        // --no-cache drops the configured directory again
+        assert!(b.clone().no_cache().prepare().is_ok());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -1,0 +1,290 @@
+//! Content-addressed prefix artifact cache.
+//!
+//! The prefix stages (`BuildGraph → Map → Stats → Trace → Profile`) are
+//! pure functions of their [`PrefixSpec`] — the same spec always
+//! produces byte-identical stage artifacts — yet every bench, CLI run,
+//! and sweep recomputed them from scratch. This cache keys a prepared
+//! prefix by a **content hash** of everything the stages read:
+//!
+//! * a stage-code version ([`CODE_VERSION`] — bump it whenever a prefix
+//!   stage's observable output changes),
+//! * the spec id (network, resolution, stats source, profiling images,
+//!   seed — see [`PrefixSpec::id`]),
+//! * the **resolved** hardware-profile JSON, so editing a custom
+//!   profile file on disk invalidates entries keyed through its path.
+//!
+//! The cached value is the stages' existing deterministic JSON
+//! artifacts (re-dumped verbatim on a hit, so `--dump-dir` trees from
+//! warm runs are byte-identical to cold ones) plus the full-fidelity
+//! trace needed to reconstruct a [`Prepared`] prefix; the graph, map,
+//! and profile are cheap and rebuilt/recomputed on load. Entries that
+//! fail to parse or validate are treated as misses and overwritten.
+//! Golden (PJRT) prefixes read artifact files whose content the key
+//! cannot see, so they are never cached
+//! ([`super::CacheStatus::Uncacheable`]).
+
+use super::scenario::PrefixSpec;
+use super::stage::Stage;
+use super::{artifact, Prepared};
+use crate::stats::{ImageTrace, LayerTrace, NetTrace};
+use crate::util::json::Json;
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+/// Bump when any prefix stage's observable output changes, so stale
+/// cache entries from older code can never be replayed.
+pub const CODE_VERSION: u64 = 1;
+
+/// A directory of cached prepared prefixes.
+pub struct PrefixCache {
+    dir: PathBuf,
+}
+
+/// A cache hit: the reconstructed prefix plus the stored stage
+/// artifacts (in stage order, for verbatim re-dumping).
+pub(crate) struct CachedPrefix {
+    /// The reconstructed prepared prefix.
+    pub prepared: Prepared,
+    /// The five prefix-stage artifacts exactly as first computed.
+    pub artifacts: Vec<(Stage, Json)>,
+}
+
+impl PrefixCache {
+    /// Open (creating if missing) a cache rooted at `dir`.
+    pub fn new(dir: &str) -> Result<PrefixCache> {
+        let dir = PathBuf::from(dir);
+        std::fs::create_dir_all(&dir)?;
+        Ok(PrefixCache { dir })
+    }
+
+    /// The cache root.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The entry file a spec+key pair lives at (the spec id keeps the
+    /// directory human-readable; the key carries the content hash).
+    pub fn entry_path(&self, spec: &PrefixSpec, key: &str) -> PathBuf {
+        self.dir.join(format!("{}-{key}.json", spec.id()))
+    }
+
+    /// Load and validate an entry; any mismatch or corruption is a miss.
+    pub(crate) fn load(&self, spec: &PrefixSpec, key: &str) -> Option<CachedPrefix> {
+        let text = std::fs::read_to_string(self.entry_path(spec, key)).ok()?;
+        let doc = Json::parse(&text).ok()?;
+        if doc.get("version").as_f64() != Some(CODE_VERSION as f64)
+            || doc.get("key").as_str() != Some(key)
+            || doc.get("prefix") != &canonical_prefix_json(spec)
+        {
+            return None;
+        }
+        // Rebuild the cheap prefix pieces from the spec; reconstruct the
+        // expensive trace from the stored full-fidelity payload.
+        let hw = crate::hw::ProfileRegistry::resolve(&spec.hw_profile).ok()?;
+        let array = hw.array_cfg().ok()?;
+        let graph = super::build_graph(&spec.net, spec.hw).ok()?;
+        let map = crate::mapping::map_network(&graph, array, false);
+        let trace = net_trace_from_json(doc.get("net_trace"), &map)?;
+        if trace.images.len() != spec.profile_images {
+            return None;
+        }
+        let profile = crate::stats::NetworkProfile::from_trace(&map, &trace);
+        let stored = doc.get("artifacts");
+        let mut artifacts = Vec::with_capacity(5);
+        for stage in [Stage::BuildGraph, Stage::Map, Stage::Stats, Stage::Trace, Stage::Profile] {
+            let a = stored.get(stage.name());
+            if a == &Json::Null {
+                return None;
+            }
+            artifacts.push((stage, a.clone()));
+        }
+        let prepared = Prepared { spec: spec.clone(), hw, graph, map, trace, profile };
+        Some(CachedPrefix { prepared, artifacts })
+    }
+
+    /// Store a freshly prepared prefix (atomically: a uniquely-named
+    /// temp file + rename, so concurrent writers — even of the same
+    /// entry — can never leave a torn entry or race on one temp path).
+    /// Callers treat failure as non-fatal: the cache is best-effort and
+    /// a full disk or lost race must not fail a computed prefix.
+    pub(crate) fn store(&self, prep: &Prepared, stats_artifact: &Json, key: &str) -> Result<()> {
+        let doc = Json::obj(vec![
+            ("version", Json::num(CODE_VERSION as f64)),
+            ("key", Json::str(key)),
+            ("prefix", canonical_prefix_json(&prep.spec)),
+            (
+                "artifacts",
+                Json::obj(vec![
+                    (Stage::BuildGraph.name(), artifact::graph_json(&prep.graph)),
+                    (Stage::Map.name(), artifact::map_json(&prep.map)),
+                    (Stage::Stats.name(), stats_artifact.clone()),
+                    (Stage::Trace.name(), artifact::trace_json(&prep.map, &prep.trace)),
+                    (Stage::Profile.name(), artifact::profile_json(&prep.profile)),
+                ]),
+            ),
+            ("net_trace", net_trace_to_json(&prep.trace)),
+        ]);
+        let mut text = doc.pretty();
+        text.push('\n');
+        let path = self.entry_path(&prep.spec, key);
+        static WRITER: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let unique = WRITER.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let tmp = path.with_extension(format!("tmp.{}.{unique}", std::process::id()));
+        std::fs::write(&tmp, text)?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(())
+    }
+}
+
+/// The spec JSON stored in (and compared against) cache entries.
+/// `artifacts_dir` is irrelevant to synthetic statistics — the only
+/// cacheable kind — so it is normalized out, mirroring
+/// [`PrefixSpec::id`], which names the entry file. Without this, two
+/// specs differing only in their (unused) artifacts dir would map to
+/// the same entry yet permanently miss and overwrite each other.
+fn canonical_prefix_json(spec: &PrefixSpec) -> Json {
+    let mut s = spec.clone();
+    s.artifacts_dir = String::new();
+    s.to_json()
+}
+
+/// Content key for a spec: FNV-1a over the stage-code version, the spec
+/// id, and the resolved hardware-profile JSON. Fails when the hardware
+/// profile cannot be resolved (same failure `prepare` would hit).
+pub fn key(spec: &PrefixSpec) -> Result<String> {
+    let hw = crate::hw::ProfileRegistry::resolve(&spec.hw_profile)?;
+    let payload =
+        format!("cimfab-prefix-v{CODE_VERSION}|{}|{}", spec.id(), hw.to_json().compact());
+    Ok(format!("{:016x}", fnv1a64(payload.as_bytes())))
+}
+
+/// 64-bit FNV-1a — deterministic, dependency-free.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Full-fidelity trace serialization (cache-internal: unlike the trace
+/// *stage artifact*, this keeps every per-(patch, block) duration).
+fn net_trace_to_json(t: &NetTrace) -> Json {
+    let u32_arr = |xs: &[u32]| Json::arr(xs.iter().map(|&x| Json::num(x as f64)));
+    let u64_arr = |xs: &[u64]| Json::arr(xs.iter().map(|&x| Json::num(x as f64)));
+    Json::obj(vec![
+        ("layers_meta", Json::num(t.layers_meta as f64)),
+        (
+            "images",
+            Json::arr(t.images.iter().map(|img| {
+                Json::arr(img.layers.iter().map(|lt| {
+                    Json::obj(vec![
+                        ("positions", Json::num(lt.positions as f64)),
+                        ("blocks", Json::num(lt.blocks as f64)),
+                        ("zs", u32_arr(&lt.zs)),
+                        ("baseline", u32_arr(&lt.baseline)),
+                        ("block_ones", u64_arr(&lt.block_ones)),
+                        ("block_bits", u64_arr(&lt.block_bits)),
+                    ])
+                }))
+            })),
+        ),
+    ])
+}
+
+/// Parse + validate a stored trace against the freshly rebuilt map;
+/// `None` on any inconsistency (treated as a cache miss).
+fn net_trace_from_json(j: &Json, map: &crate::mapping::NetworkMap) -> Option<NetTrace> {
+    let layers_meta = j.get("layers_meta").as_usize()?;
+    if layers_meta != map.grids.len() {
+        return None;
+    }
+    let mut images = Vec::new();
+    for img in j.get("images").as_arr()? {
+        let layers_json = img.as_arr()?;
+        if layers_json.len() != map.grids.len() {
+            return None;
+        }
+        let mut layers = Vec::with_capacity(layers_json.len());
+        for (lj, g) in layers_json.iter().zip(&map.grids) {
+            let positions = lj.get("positions").as_usize()?;
+            let blocks = lj.get("blocks").as_usize()?;
+            if positions != g.positions || blocks != g.blocks_per_copy {
+                return None;
+            }
+            let zs = u32_vec(lj.get("zs"))?;
+            let baseline = u32_vec(lj.get("baseline"))?;
+            let block_ones = u64_vec(lj.get("block_ones"))?;
+            let block_bits = u64_vec(lj.get("block_bits"))?;
+            if zs.len() != positions * blocks
+                || baseline.len() != blocks
+                || block_ones.len() != blocks
+                || block_bits.len() != blocks
+            {
+                return None;
+            }
+            layers.push(LayerTrace { positions, blocks, zs, baseline, block_ones, block_bits });
+        }
+        images.push(ImageTrace { layers });
+    }
+    Some(NetTrace { layers_meta, images })
+}
+
+fn u32_vec(j: &Json) -> Option<Vec<u32>> {
+    j.as_arr()?
+        .iter()
+        .map(|x| x.as_usize().and_then(|v| u32::try_from(v).ok()))
+        .collect()
+}
+
+fn u64_vec(j: &Json) -> Option<Vec<u64>> {
+    j.as_arr()?.iter().map(|x| x.as_usize().map(|v| v as u64)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{self, StatsSource};
+
+    fn spec(seed: u64) -> PrefixSpec {
+        PrefixSpec {
+            net: "resnet18".into(),
+            hw: 32,
+            hw_profile: crate::hw::DEFAULT_PROFILE.into(),
+            stats: StatsSource::Synthetic,
+            profile_images: 1,
+            seed,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    #[test]
+    fn key_is_stable_and_sensitive() {
+        let a = key(&spec(1)).unwrap();
+        assert_eq!(a, key(&spec(1)).unwrap());
+        assert_ne!(a, key(&spec(2)).unwrap());
+        let mut other_hw = spec(1);
+        other_hw.hw_profile = "pcram-128".into();
+        assert_ne!(a, key(&other_hw).unwrap());
+        assert_eq!(a.len(), 16);
+    }
+
+    #[test]
+    fn trace_roundtrips_through_the_cache_encoding() {
+        let prep = pipeline::prepare(&spec(3), None).unwrap();
+        let j = net_trace_to_json(&prep.trace);
+        let back = net_trace_from_json(&j, &prep.map).unwrap();
+        assert_eq!(back, prep.trace);
+    }
+
+    #[test]
+    fn mismatched_map_rejects_a_stored_trace() {
+        let prep = pipeline::prepare(&spec(4), None).unwrap();
+        let j = net_trace_to_json(&prep.trace);
+        // a different network's map cannot validate this trace
+        let g = crate::dnn::vgg11(32, 10);
+        let other = crate::mapping::map_network(&g, prep.map.array, false);
+        assert!(net_trace_from_json(&j, &other).is_none());
+    }
+}

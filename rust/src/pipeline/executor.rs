@@ -3,9 +3,12 @@
 //! A sweep is a list of [`Scenario`]s. The executor:
 //!
 //! 1. deduplicates the scenarios' [`PrefixSpec`]s and runs the expensive
-//!    prefix stages once per distinct prefix (in parallel);
-//! 2. fans the scenario stages out over a scoped worker pool
-//!    (`--threads N`), each worker borrowing the shared prepared prefix.
+//!    prefix stages once per distinct prefix (each internally parallel
+//!    across layers × images, consulting the content-addressed prefix
+//!    cache when `cache_dir` is set);
+//! 2. fans the scenario stages out over the shared scoped worker pool
+//!    ([`crate::util::par::run_indexed`], `--threads N`), each worker
+//!    borrowing the shared prepared prefix.
 //!
 //! Every stage is a pure function of its spec, so the parallel schedule
 //! cannot change any result: outcomes are returned in input order and
@@ -13,10 +16,9 @@
 //! `pipeline_determinism` integration tests).
 
 use super::scenario::{PrefixSpec, Scenario};
-use super::{prepare, run_scenario, Dumper, Prepared, ScenarioOutcome};
+use super::{prepare_cached_threads, run_scenario, Dumper, Prepared, PrefixCache, ScenarioOutcome};
+use crate::util::par::run_indexed;
 use anyhow::Result;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 /// Executor configuration.
 #[derive(Debug, Clone)]
@@ -26,17 +28,20 @@ pub struct SweepCfg {
     pub threads: usize,
     /// When set, every stage dumps its JSON artifact under this root.
     pub dump_dir: Option<String>,
+    /// When set, prepared prefixes are cached content-addressed under
+    /// this root ([`super::cache`]) and reused across runs.
+    pub cache_dir: Option<String>,
 }
 
 impl SweepCfg {
-    /// Serial, no dumps.
+    /// Serial, no dumps, no cache.
     pub fn serial() -> SweepCfg {
-        SweepCfg { threads: 1, dump_dir: None }
+        SweepCfg { threads: 1, dump_dir: None, cache_dir: None }
     }
 
-    /// One worker per available core, no dumps.
+    /// One worker per available core, no dumps, no cache.
     pub fn parallel() -> SweepCfg {
-        SweepCfg { threads: default_threads(), dump_dir: None }
+        SweepCfg { threads: default_threads(), dump_dir: None, cache_dir: None }
     }
 
     /// The single construction site for this config's [`Dumper`].
@@ -46,57 +51,20 @@ impl SweepCfg {
             None => Ok(None),
         }
     }
+
+    /// The single construction site for this config's [`PrefixCache`].
+    pub fn cache(&self) -> Result<Option<PrefixCache>> {
+        match &self.cache_dir {
+            Some(d) => Ok(Some(PrefixCache::new(d)?)),
+            None => Ok(None),
+        }
+    }
 }
 
-/// Worker count used when the caller does not specify `--threads`.
+/// Worker count used when the caller does not specify `--threads`
+/// (re-exported from [`crate::util::par`], where the scoped pool lives).
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-}
-
-/// Run `f(0..n)` on up to `threads` scoped workers, returning results in
-/// index order. The first error (lowest index) wins.
-fn run_indexed<T, F>(n: usize, threads: usize, f: F) -> Result<Vec<T>>
-where
-    T: Send,
-    F: Fn(usize) -> Result<T> + Sync,
-{
-    let threads = threads.max(1).min(n.max(1));
-    if threads <= 1 {
-        return (0..n).map(f).collect();
-    }
-    let next = AtomicUsize::new(0);
-    let failed = AtomicBool::new(false);
-    let slots: Vec<Mutex<Option<Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                if failed.load(Ordering::Relaxed) {
-                    break;
-                }
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = f(i);
-                if r.is_err() {
-                    failed.store(true, Ordering::Relaxed);
-                }
-                *slots[i].lock().unwrap() = Some(r);
-            });
-        }
-    });
-    let mut out = Vec::with_capacity(n);
-    for (i, slot) in slots.into_iter().enumerate() {
-        match slot.into_inner().unwrap() {
-            Some(Ok(v)) => out.push(v),
-            Some(Err(e)) => return Err(e),
-            None if failed.load(Ordering::Relaxed) => {
-                anyhow::bail!("sweep aborted before item {i} (an earlier item failed)")
-            }
-            None => anyhow::bail!("sweep worker abandoned item {i}"),
-        }
-    }
-    Ok(out)
+    crate::util::par::default_threads()
 }
 
 /// Run scenarios that all share one already-prepared prefix.
@@ -146,8 +114,15 @@ pub fn run_sweep(scenarios: &[Scenario], cfg: &SweepCfg) -> Result<Vec<ScenarioO
         prefix_of.push(idx);
     }
 
-    let prepared: Vec<Prepared> =
-        run_indexed(prefixes.len(), cfg.threads, |i| prepare(&prefixes[i], dumper.as_ref()))?;
+    let cache = cfg.cache()?;
+    // Prefixes prepare sequentially: trace construction already fans out
+    // over images × layers with the full thread budget, so nesting a
+    // second pool here would oversubscribe ~threads² CPU-bound workers.
+    let mut prepared: Vec<Prepared> = Vec::with_capacity(prefixes.len());
+    for spec in &prefixes {
+        prepared
+            .push(prepare_cached_threads(spec, dumper.as_ref(), cache.as_ref(), cfg.threads)?.0);
+    }
 
     run_indexed(scenarios.len(), cfg.threads, |i| {
         run_scenario(&prepared[prefix_of[i]].view(), &scenarios[i], dumper.as_ref())
@@ -186,30 +161,10 @@ mod tests {
     }
 
     #[test]
-    fn run_indexed_preserves_order() {
-        let out = run_indexed(8, 4, |i| Ok(i * 10)).unwrap();
-        assert_eq!(out, vec![0, 10, 20, 30, 40, 50, 60, 70]);
-    }
-
-    #[test]
-    fn run_indexed_handles_empty_and_oversubscription() {
-        let out: Vec<usize> = run_indexed(0, 4, |i| Ok(i)).unwrap();
-        assert!(out.is_empty());
-        let out = run_indexed(2, 64, |i| Ok(i)).unwrap();
-        assert_eq!(out, vec![0, 1]);
-    }
-
-    #[test]
-    fn run_indexed_propagates_errors() {
-        let r: Result<Vec<usize>> =
-            run_indexed(4, 2, |i| if i == 2 { anyhow::bail!("boom {i}") } else { Ok(i) });
-        assert!(r.is_err());
-    }
-
-    #[test]
     fn sweep_shares_one_prefix_and_keeps_order() {
         let scs = scenarios();
-        let out = run_sweep(&scs, &SweepCfg { threads: 2, dump_dir: None }).unwrap();
+        let out =
+            run_sweep(&scs, &SweepCfg { threads: 2, dump_dir: None, cache_dir: None }).unwrap();
         assert_eq!(out.len(), scs.len());
         for (o, sc) in out.iter().zip(&scs) {
             assert_eq!(&o.scenario, sc);

@@ -28,17 +28,25 @@
 //! dump-dir/<prefix-id>/<scenario-id>/05_allocate.json … 08_report.json
 //! ```
 //!
+//! Because the prefix stages are pure functions of their spec, prepared
+//! prefixes are also cacheable *across* runs: [`prepare_cached`] keys a
+//! content-addressed on-disk [`PrefixCache`] (`--cache-dir`; see
+//! [`cache`]) and replays the stored stage artifacts byte-identically
+//! on a hit.
+//!
 //! [`crate::coordinator::Driver`] is a thin convenience wrapper over
 //! these stages; the CLI `sweep` subcommand and the figure benches drive
 //! the executor directly.
 
 pub mod artifact;
 pub mod builder;
+pub mod cache;
 pub mod executor;
 pub mod scenario;
 pub mod stage;
 
 pub use builder::{ScenarioBuilder, KNOWN_NETS};
+pub use cache::PrefixCache;
 pub use executor::{run_scenarios_prepared, run_sweep, SweepCfg};
 pub use scenario::{scenarios_for, sweep_sizes, PrefixSpec, Scenario, StatsSource};
 pub use stage::Stage;
@@ -50,7 +58,7 @@ use crate::hw::{HwProfile, ProfileRegistry};
 use crate::mapping::{AllocationPlan, NetworkMap};
 use crate::sim::{DataflowModel, SimResult};
 use crate::stats::synth::{synth_activations, SynthCfg};
-use crate::stats::{trace_from_activations, NetTrace, NetworkProfile};
+use crate::stats::{NetTrace, NetworkProfile};
 use crate::util::json::Json;
 use anyhow::Result;
 use std::path::PathBuf;
@@ -190,6 +198,91 @@ fn map_stage(graph: &Graph, array: ArrayCfg) -> NetworkMap {
 /// profile resolves first ([`ProfileRegistry::resolve`] — registry name
 /// or JSON path), so bad hardware fails before any stage runs.
 pub fn prepare(spec: &PrefixSpec, dump: Option<&Dumper>) -> Result<Prepared> {
+    Ok(prepare_full(spec, dump, false, crate::util::par::default_threads())?.0)
+}
+
+/// How [`prepare_cached`] satisfied a prefix request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheStatus {
+    /// No cache was configured; the prefix was computed.
+    Disabled,
+    /// The prefix cannot be cached (golden statistics read artifact
+    /// files whose content the cache key does not cover); computed.
+    Uncacheable,
+    /// Not in the cache; computed and stored.
+    Miss,
+    /// Reconstructed from the cache — no stage ran.
+    Hit,
+}
+
+impl std::fmt::Display for CacheStatus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            CacheStatus::Disabled => "disabled",
+            CacheStatus::Uncacheable => "uncacheable (golden statistics)",
+            CacheStatus::Miss => "miss (stored)",
+            CacheStatus::Hit => "hit",
+        })
+    }
+}
+
+/// [`prepare`] through a content-addressed [`PrefixCache`]: a hit
+/// reconstructs the prefix from disk (re-dumping the stored stage
+/// artifacts verbatim when a [`Dumper`] is given, so warm `--dump-dir`
+/// trees stay byte-identical to cold ones); a miss computes the prefix
+/// and stores it.
+pub fn prepare_cached(
+    spec: &PrefixSpec,
+    dump: Option<&Dumper>,
+    cache: Option<&PrefixCache>,
+) -> Result<(Prepared, CacheStatus)> {
+    prepare_cached_threads(spec, dump, cache, crate::util::par::default_threads())
+}
+
+/// [`prepare_cached`] with an explicit worker bound for the parallel
+/// stages (trace construction) — `--threads 1` must mean a fully serial
+/// run, so the sweep executor and CLI pass their configured count
+/// through instead of letting the trace stage size its own pool.
+pub fn prepare_cached_threads(
+    spec: &PrefixSpec,
+    dump: Option<&Dumper>,
+    cache: Option<&PrefixCache>,
+    threads: usize,
+) -> Result<(Prepared, CacheStatus)> {
+    let Some(cache) = cache else {
+        return Ok((prepare_full(spec, dump, false, threads)?.0, CacheStatus::Disabled));
+    };
+    if spec.stats == StatsSource::Golden {
+        return Ok((prepare_full(spec, dump, false, threads)?.0, CacheStatus::Uncacheable));
+    }
+    let key = cache::key(spec)?;
+    if let Some(hit) = cache.load(spec, &key) {
+        if let Some(d) = dump {
+            let sub = spec.id();
+            for (stage, json) in &hit.artifacts {
+                d.dump(&sub, *stage, json)?;
+            }
+        }
+        return Ok((hit.prepared, CacheStatus::Hit));
+    }
+    let (prep, stats_artifact) = prepare_full(spec, dump, true, threads)?;
+    // best-effort store: a full disk or lost write race must not turn a
+    // successfully computed prefix into an error — the next run simply
+    // misses again
+    let _ = cache.store(&prep, &stats_artifact.expect("stats artifact kept on miss"), &key);
+    Ok((prep, CacheStatus::Miss))
+}
+
+/// The prefix stages proper. `keep_stats` additionally returns the
+/// Stats stage artifact (the one artifact that needs the raw activation
+/// tensors, which are not retained in [`Prepared`]) so the cache can
+/// store it; `threads` bounds the trace stage's worker pool.
+fn prepare_full(
+    spec: &PrefixSpec,
+    dump: Option<&Dumper>,
+    keep_stats: bool,
+    threads: usize,
+) -> Result<(Prepared, Option<Json>)> {
     anyhow::ensure!(
         spec.profile_images >= 1,
         "prefix {} needs at least one profiling image",
@@ -218,12 +311,17 @@ pub fn prepare(spec: &PrefixSpec, dump: Option<&Dumper>) -> Result<Prepared> {
         }
         StatsSource::Golden => golden_activations(spec, &map)?,
     };
+    let stats_artifact = if dump.is_some() || keep_stats {
+        Some(artifact::stats_json(&map, &acts))
+    } else {
+        None
+    };
     if let Some(d) = dump {
-        d.dump(&sub, Stage::Stats, &artifact::stats_json(&map, &acts))?;
+        d.dump(&sub, Stage::Stats, stats_artifact.as_ref().expect("computed when dumping"))?;
     }
 
     // Trace
-    let trace = trace_from_activations(&graph, &map, &acts);
+    let trace = crate::stats::trace_from_activations_threads(&graph, &map, &acts, threads);
     if let Some(d) = dump {
         d.dump(&sub, Stage::Trace, &artifact::trace_json(&map, &trace))?;
     }
@@ -234,7 +332,7 @@ pub fn prepare(spec: &PrefixSpec, dump: Option<&Dumper>) -> Result<Prepared> {
         d.dump(&sub, Stage::Profile, &artifact::profile_json(&profile))?;
     }
 
-    Ok(Prepared { spec: spec.clone(), hw, graph, map, trace, profile })
+    Ok((Prepared { spec: spec.clone(), hw, graph, map, trace, profile }, stats_artifact))
 }
 
 fn golden_activations(

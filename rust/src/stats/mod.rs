@@ -13,10 +13,20 @@
 //! Activations come either from the PJRT golden model
 //! ([`crate::runtime::golden`]) or from [`synth`] (synthetic data with
 //! realistic post-ReLU bit-density spread; see DESIGN.md §3).
+//!
+//! Trace construction runs on the packed bit-plane fast path (the
+//! crate-private `packed` module; see `docs/architecture.md`
+//! §"Statistics and the trace fast path"): per-plane lane words +
+//! window/prefix sums instead of re-popcounting overlapping im2col
+//! patches, parallel over layers × images, bit-identical to the
+//! retained [`trace::reference`] path.
 
 pub mod trace;
+pub(crate) mod packed;
 pub mod profile;
 pub mod synth;
 
 pub use profile::NetworkProfile;
-pub use trace::{trace_from_activations, ImageTrace, LayerTrace, NetTrace};
+pub use trace::{
+    trace_from_activations, trace_from_activations_threads, ImageTrace, LayerTrace, NetTrace,
+};

@@ -1,0 +1,403 @@
+//! Packed bit-plane fast path for trace construction.
+//!
+//! The reference trace path (retained in
+//! [`super::trace::reference`]) materializes each conv layer's im2col
+//! patch matrix and re-popcounts every `(patch, block)` byte slice —
+//! so for a stride-`s` `k×k` conv every activation byte is scanned
+//! `⌈k/s⌉²` times, once per overlapping patch. This module counts the
+//! same bits from the layer input directly:
+//!
+//! 1. **Spread** every activation byte's 8 bit planes into the byte
+//!    lanes of one `u64` ([`crate::util::bitops::lane_spread`]), so all
+//!    8 per-plane counts ride in a single word.
+//! 2. **Prefix-sum** the lane words along each input row; a `k`-wide
+//!    horizontal window count is then one lane-wise subtraction, and a
+//!    whole-channel `k×k` window count is a `k`-tall sum of those —
+//!    computed once per (channel, output position), not once per
+//!    overlapping patch.
+//! 3. **Scatter** each channel's window counts into the blocks its
+//!    patch rows land on: a block fully covering the channel takes the
+//!    precomputed `k×k` count with one lane add per position; a block
+//!    boundary that cuts mid-channel falls back to per-kernel-row
+//!    window counts plus a few directly-spread bytes for the ragged
+//!    fragment (at most `2(k-1)` bytes per boundary per position).
+//!
+//! Lane accumulators flush into plain `u32` per-plane counters before
+//! any byte lane can exceed 255, so every count is exact and the
+//! resulting [`LayerTrace`] is **bit-identical** to the reference path
+//! (pinned by `rust/tests/trace_parity.rs` and the unit tests below).
+//!
+//! Linear layers use the other packed representation:
+//! [`crate::util::bitops::pack_plane`] bitmaps per plane, with each
+//! block's count taken as an `O(rows/64)` masked word popcount
+//! ([`crate::util::bitops::count_ones_range`]).
+
+use super::trace::LayerTrace;
+use crate::config::ArrayCfg;
+use crate::mapping::LayerGrid;
+use crate::tensor::{Im2colSpec, Tensor};
+use crate::util::bitops::{count_ones_range, lane_counts, lane_spread, pack_plane, BIT_PLANES};
+use crate::xbar::scheduler::{baseline_cycles, zs_cycles};
+
+/// Byte lanes hold per-plane partial counts; flush before any lane can
+/// pass this bound.
+const LANE_CAP: u32 = 255;
+
+/// Can [`conv_trace`] handle this geometry? The lane-packed tables need
+/// every intermediate count to fit a byte lane: row-prefix counts are
+/// bounded by the input width and window counts by `k²`. Exotic
+/// geometries fall back to the reference lowering.
+pub(crate) fn conv_supported(spec: &Im2colSpec) -> bool {
+    spec.in_w <= LANE_CAP as usize && spec.k >= 1 && spec.k <= 15
+}
+
+/// Trace one conv (dense or depthwise) layer for one image without
+/// materializing the im2col patch matrix. Bit-identical to
+/// `trace_from_patches(cfg, g, &im2col_u8(act, spec))`.
+pub(crate) fn conv_trace(
+    cfg: &ArrayCfg,
+    g: &LayerGrid,
+    act: &Tensor<u8>,
+    spec: &Im2colSpec,
+) -> LayerTrace {
+    debug_assert!(conv_supported(spec));
+    let (c_n, h, w) = (spec.in_ch, spec.in_h, spec.in_w);
+    let (k, stride, pad) = (spec.k, spec.stride, spec.pad);
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let positions = oh * ow;
+    let plen = spec.patch_len();
+    let kk = k * k;
+    assert_eq!(plen, g.matrix_rows, "patch length != matrix rows");
+    assert_eq!(
+        positions, g.positions,
+        "im2col yields {positions} positions, but the grid expects {} (layer '{}')",
+        g.positions, g.name
+    );
+    let blocks = g.blocks_per_copy;
+    let rpb = g.rows_per_block;
+
+    // Per-(patch, block, plane) ones counts: exact u32 totals plus the
+    // in-flight byte-lane partial sums they flush from.
+    let mut acc = vec![0u32; positions * blocks * BIT_PLANES];
+    let mut lanes = vec![0u64; positions * blocks];
+    let mut lane_rows = vec![0u32; blocks];
+
+    // Per-channel scratch, reused across channels.
+    let mut xpre = vec![0u64; w + 1];
+    let mut rowwin = vec![0u64; h * ow];
+    let mut win = vec![0u64; positions];
+
+    let data = act.data();
+    for c in 0..c_n {
+        let ch = &data[c * h * w..(c + 1) * h * w];
+
+        // Lane prefix sums along x, then k-wide window counts per input
+        // row. Lane-wise subtraction of monotone prefixes never borrows
+        // across lanes, so each lane is the exact per-plane range count.
+        for y in 0..h {
+            let row = &ch[y * w..(y + 1) * w];
+            let mut run = 0u64;
+            for (x, &v) in row.iter().enumerate() {
+                run += lane_spread(v);
+                xpre[x + 1] = run;
+            }
+            for ox in 0..ow {
+                let ix0 = (ox * stride) as isize - pad as isize;
+                let lo = ix0.clamp(0, w as isize) as usize;
+                let hi = (ix0 + k as isize).clamp(0, w as isize) as usize;
+                rowwin[y * ow + ox] = xpre[hi] - xpre[lo];
+            }
+        }
+
+        // k-tall sums: the whole-channel k x k window count per patch.
+        // Out-of-bounds rows are zero padding and contribute nothing.
+        for oy in 0..oh {
+            let iy0 = (oy * stride) as isize - pad as isize;
+            let wrow = &mut win[oy * ow..(oy + 1) * ow];
+            wrow.fill(0);
+            for ky in 0..k {
+                let iy = iy0 + ky as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                let rw = &rowwin[iy as usize * ow..(iy as usize + 1) * ow];
+                for (ws, &r) in wrow.iter_mut().zip(rw) {
+                    *ws += r;
+                }
+            }
+        }
+
+        // Scatter into every block this channel's patch rows land on.
+        let c0 = c * kk;
+        let b_first = c0 / rpb;
+        let b_last = (c0 + kk - 1) / rpb;
+        for b in b_first..=b_last {
+            let r0 = b * rpb;
+            let r1 = (r0 + rpb).min(plen);
+            let lo = c0.max(r0) - c0;
+            let hi = (c0 + kk).min(r1) - c0;
+            debug_assert!(lo < hi && hi <= kk);
+            if lane_rows[b] + (hi - lo) as u32 > LANE_CAP {
+                flush_block(&mut lanes, &mut acc, b, blocks, positions);
+                lane_rows[b] = 0;
+            }
+            lane_rows[b] += (hi - lo) as u32;
+            if lo == 0 && hi == kk {
+                for (p, &wv) in win.iter().enumerate() {
+                    lanes[p * blocks + b] += wv;
+                }
+            } else {
+                add_partial_rows(&mut lanes, b, blocks, ch, spec, &rowwin, lo, hi);
+            }
+        }
+    }
+    for b in 0..blocks {
+        flush_block(&mut lanes, &mut acc, b, blocks, positions);
+    }
+
+    finish_trace(cfg, g, positions, plen, &acc)
+}
+
+/// Add the counts of channel rows `[lo, hi)` (a block boundary cutting
+/// mid-channel) for every patch position. Whole kernel rows reuse the
+/// per-row window counts; ragged fragments spread their few bytes
+/// directly.
+#[allow(clippy::too_many_arguments)]
+fn add_partial_rows(
+    lanes: &mut [u64],
+    b: usize,
+    blocks: usize,
+    ch: &[u8],
+    spec: &Im2colSpec,
+    rowwin: &[u64],
+    lo: usize,
+    hi: usize,
+) {
+    let (h, w, k) = (spec.in_h, spec.in_w, spec.k);
+    let (stride, pad) = (spec.stride, spec.pad);
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let mut r = lo;
+    while r < hi {
+        let ky = r / k;
+        let row_end = ((ky + 1) * k).min(hi);
+        let kx0 = r % k;
+        let kx1 = kx0 + (row_end - r);
+        if kx0 == 0 && kx1 == k {
+            for oy in 0..oh {
+                let iy = (oy * stride + ky) as isize - pad as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                let rw = &rowwin[iy as usize * ow..(iy as usize + 1) * ow];
+                for (ox, &rv) in rw.iter().enumerate() {
+                    lanes[(oy * ow + ox) * blocks + b] += rv;
+                }
+            }
+        } else {
+            for oy in 0..oh {
+                let iy = (oy * stride + ky) as isize - pad as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                let row = &ch[iy as usize * w..(iy as usize + 1) * w];
+                for ox in 0..ow {
+                    let ix0 = (ox * stride) as isize - pad as isize;
+                    let mut s = 0u64;
+                    for kx in kx0..kx1 {
+                        let ix = ix0 + kx as isize;
+                        if ix >= 0 && ix < w as isize {
+                            s += lane_spread(row[ix as usize]);
+                        }
+                    }
+                    lanes[(oy * ow + ox) * blocks + b] += s;
+                }
+            }
+        }
+        r = row_end;
+    }
+}
+
+/// Drain one block's byte-lane partial sums into the exact counters.
+fn flush_block(lanes: &mut [u64], acc: &mut [u32], b: usize, blocks: usize, positions: usize) {
+    for p in 0..positions {
+        let l = &mut lanes[p * blocks + b];
+        if *l == 0 {
+            continue;
+        }
+        let base = (p * blocks + b) * BIT_PLANES;
+        for (bit, c) in lane_counts(*l).into_iter().enumerate() {
+            acc[base + bit] += c;
+        }
+        *l = 0;
+    }
+}
+
+/// Trace one linear layer from the packed per-plane bitmaps: each
+/// block's plane count is a masked word-popcount over its row range.
+pub(crate) fn linear_trace(cfg: &ArrayCfg, g: &LayerGrid, data: &[u8]) -> LayerTrace {
+    let plen = data.len();
+    assert_eq!(plen, g.matrix_rows, "patch length != matrix rows");
+    assert_eq!(g.positions, 1, "linear layers have one patch position (layer '{}')", g.name);
+    let blocks = g.blocks_per_copy;
+    let planes: Vec<Vec<u64>> = (0..BIT_PLANES).map(|b| pack_plane(data, b)).collect();
+    let mut acc = vec![0u32; blocks * BIT_PLANES];
+    for b in 0..blocks {
+        let start = b * g.rows_per_block;
+        let end = (start + g.rows_per_block).min(plen);
+        for (bit, plane) in planes.iter().enumerate() {
+            acc[b * BIT_PLANES + bit] = count_ones_range(plane, start, end);
+        }
+    }
+    finish_trace(cfg, g, 1, plen, &acc)
+}
+
+/// Shared tail: exact per-(patch, block, plane) counts → the
+/// [`LayerTrace`] the scheduler model and Figs 4 & 6 consume. Field for
+/// field the same arithmetic as the reference path.
+fn finish_trace(
+    cfg: &ArrayCfg,
+    g: &LayerGrid,
+    positions: usize,
+    plen: usize,
+    acc: &[u32],
+) -> LayerTrace {
+    let blocks = g.blocks_per_copy;
+    let rpb = g.rows_per_block;
+    let mut zs = vec![0u32; positions * blocks];
+    let mut block_ones = vec![0u64; blocks];
+    let mut block_bits = vec![0u64; blocks];
+    for b in 0..blocks {
+        let start = b * rpb;
+        let end = (start + rpb).min(plen);
+        let slice_bits = ((end - start) * BIT_PLANES) as u64;
+        for p in 0..positions {
+            let base = (p * blocks + b) * BIT_PLANES;
+            let counts: [u32; BIT_PLANES] = acc[base..base + BIT_PLANES].try_into().unwrap();
+            zs[p * blocks + b] = zs_cycles(cfg, &counts);
+            block_ones[b] += counts.iter().map(|&c| c as u64).sum::<u64>();
+            block_bits[b] += slice_bits;
+        }
+    }
+    let baseline = (0..blocks).map(|b| baseline_cycles(cfg, g.rows_in_block(b, cfg))).collect();
+    LayerTrace { positions, blocks, zs, baseline, block_ones, block_bits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArrayCfg;
+    use crate::dnn::{Graph, Op};
+    use crate::mapping::map_network;
+    use crate::stats::trace::trace_from_patches;
+    use crate::tensor::im2col_u8;
+    use crate::util::prng::Prng;
+
+    fn random_act(rng: &mut Prng, shape: &[usize]) -> Tensor<u8> {
+        Tensor::from_fn(shape, |_| rng.next_u32() as u8)
+    }
+
+    fn check_conv_parity(
+        cfg: &ArrayCfg,
+        g: &crate::mapping::LayerGrid,
+        spec: &Im2colSpec,
+        seed: u64,
+    ) {
+        let mut rng = Prng::new(seed);
+        let act = random_act(&mut rng, &[spec.in_ch, spec.in_h, spec.in_w]);
+        let fast = conv_trace(cfg, g, &act, spec);
+        let reference = trace_from_patches(cfg, g, &im2col_u8(&act, spec));
+        assert_eq!(fast, reference, "k={} s={} p={}", spec.k, spec.stride, spec.pad);
+    }
+
+    #[test]
+    fn conv_parity_across_kernel_stride_pad() {
+        for (k, stride, pad) in
+            [(1, 1, 0), (1, 2, 0), (3, 1, 1), (3, 2, 1), (3, 1, 0), (5, 2, 2), (7, 2, 3), (2, 2, 0)]
+        {
+            let mut g = Graph::new("t", [12, 10, 10]);
+            g.push("c", Op::Conv { in_ch: 12, out_ch: 16, k, stride, pad });
+            let map = map_network(&g, ArrayCfg::paper(), false);
+            let spec = Im2colSpec { in_ch: 12, in_h: 10, in_w: 10, k, stride, pad };
+            check_conv_parity(&map.array, &map.grids[0], &spec, 11 + k as u64);
+        }
+    }
+
+    #[test]
+    fn conv_parity_with_partial_last_block() {
+        // 147 rows over 128-row blocks: block 1 holds 19 rows and both
+        // boundaries cut mid-channel
+        let mut g = Graph::new("stem", [3, 16, 16]);
+        g.push("c", Op::Conv { in_ch: 3, out_ch: 8, k: 7, stride: 2, pad: 3 });
+        let map = map_network(&g, ArrayCfg::paper(), false);
+        assert_eq!(map.grids[0].blocks_per_copy, 2);
+        let spec = Im2colSpec { in_ch: 3, in_h: 16, in_w: 16, k: 7, stride: 2, pad: 3 };
+        check_conv_parity(&map.array, &map.grids[0], &spec, 5);
+    }
+
+    #[test]
+    fn depthwise_parity_uses_channel_aligned_blocks() {
+        let mut g = Graph::new("dw", [32, 6, 6]);
+        g.push("dw", Op::DwConv { ch: 32, k: 3, stride: 1, pad: 1 });
+        let map = map_network(&g, ArrayCfg::paper(), false);
+        assert_eq!(map.grids[0].rows_per_block, 126);
+        let spec = Im2colSpec { in_ch: 32, in_h: 6, in_w: 6, k: 3, stride: 1, pad: 1 };
+        check_conv_parity(&map.array, &map.grids[0], &spec, 9);
+    }
+
+    #[test]
+    fn oversized_depthwise_filters_straddle_blocks() {
+        // k² > array rows: rows_per_block is the array height, so block
+        // boundaries cut through a channel's kernel rows
+        let mut g = Graph::new("bigdw", [2, 12, 12]);
+        g.push("dw", Op::DwConv { ch: 2, k: 12, stride: 1, pad: 0 });
+        let map = map_network(&g, ArrayCfg::paper(), false);
+        assert_eq!(map.grids[0].rows_per_block, 128);
+        let spec = Im2colSpec { in_ch: 2, in_h: 12, in_w: 12, k: 12, stride: 1, pad: 0 };
+        check_conv_parity(&map.array, &map.grids[0], &spec, 3);
+    }
+
+    #[test]
+    fn lane_flush_path_stays_exact_on_tall_blocks() {
+        // 512-row arrays: one block accumulates 512 rows per position,
+        // forcing the 255-per-lane flush mid-block
+        let mut tall = ArrayCfg::paper();
+        tall.rows = 512;
+        let mut g = Graph::new("tall", [64, 6, 6]);
+        g.push("c", Op::Conv { in_ch: 64, out_ch: 8, k: 3, stride: 1, pad: 1 });
+        let map = map_network(&g, tall, false);
+        assert_eq!(map.grids[0].rows_per_block, 512);
+        assert_eq!(map.grids[0].blocks_per_copy, 2); // 576 rows
+        let spec = Im2colSpec { in_ch: 64, in_h: 6, in_w: 6, k: 3, stride: 1, pad: 1 };
+        // all-0xFF input maximizes every lane, the worst case for overflow
+        let act = Tensor::from_vec(&[64, 6, 6], vec![0xFF; 64 * 36]);
+        let fast = conv_trace(&map.array, &map.grids[0], &act, &spec);
+        let reference = trace_from_patches(&map.array, &map.grids[0], &im2col_u8(&act, &spec));
+        assert_eq!(fast, reference);
+        check_conv_parity(&map.array, &map.grids[0], &spec, 17);
+    }
+
+    #[test]
+    fn linear_parity_with_block_split() {
+        let mut g = Graph::new("fc", [300, 1, 1]);
+        g.push("fc", Op::Linear { in_features: 300, out_features: 40 });
+        let map = map_network(&g, ArrayCfg::paper(), true);
+        assert_eq!(map.grids[0].blocks_per_copy, 3);
+        let mut rng = Prng::new(21);
+        let data: Vec<u8> = (0..300).map(|_| rng.next_u32() as u8).collect();
+        let fast = linear_trace(&map.array, &map.grids[0], &data);
+        let patches = Tensor::from_vec(&[1, 300], data);
+        let reference = trace_from_patches(&map.array, &map.grids[0], &patches);
+        assert_eq!(fast, reference);
+    }
+
+    #[test]
+    fn wide_inputs_fall_back_to_the_reference_lowering() {
+        // in_w > 255 would overflow the row-prefix byte lanes
+        let spec = Im2colSpec { in_ch: 1, in_h: 1, in_w: 300, k: 3, stride: 1, pad: 1 };
+        assert!(!conv_supported(&spec));
+        let ok = Im2colSpec { in_ch: 1, in_h: 1, in_w: 255, k: 3, stride: 1, pad: 1 };
+        assert!(conv_supported(&ok));
+        let big_k = Im2colSpec { in_ch: 1, in_h: 20, in_w: 20, k: 16, stride: 1, pad: 0 };
+        assert!(!conv_supported(&big_k));
+    }
+}

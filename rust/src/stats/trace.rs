@@ -1,4 +1,16 @@
 //! Workload traces: exact per-patch, per-block cycle durations.
+//!
+//! Trace construction sits in front of every experiment (the allocators
+//! run on *measured statistics*, paper §III-B), so it is built on the
+//! packed bit-plane fast path (the crate-private `super::packed`
+//! module): each layer's input is
+//! spread into per-plane lane words and window/prefix sums once, instead
+//! of re-popcounting the same bytes for every overlapping im2col patch,
+//! and layers × images fan out over the shared scoped worker pool
+//! ([`crate::util::par`]). Results are **bit-identical** to the seed
+//! implementation, which is retained in [`reference`] and pinned against
+//! the fast path by `rust/tests/trace_parity.rs` and
+//! `benches/trace_build.rs`.
 
 use crate::config::ArrayCfg;
 use crate::dnn::{Graph, Op};
@@ -8,7 +20,7 @@ use crate::util::bitops::{plane_counts, BIT_PLANES};
 use crate::xbar::scheduler::{baseline_cycles, zs_cycles};
 
 /// One CIM layer's workload for one image.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LayerTrace {
     /// Patch vectors per inference.
     pub positions: usize,
@@ -61,14 +73,14 @@ impl LayerTrace {
 }
 
 /// All CIM layers for one image.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ImageTrace {
     /// One trace per CIM layer, in grid order.
     pub layers: Vec<LayerTrace>,
 }
 
 /// The full workload: one [`ImageTrace`] per profiled image.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct NetTrace {
     /// CIM layer count (grid order).
     pub layers_meta: usize,
@@ -81,23 +93,47 @@ pub struct NetTrace {
 /// `acts[i][l]` is the quantized input tensor of CIM layer `l` (same
 /// order as `map.grids`) for image `i`: `[C, H, W]` for conv layers,
 /// `[F, 1, 1]` for linear.
+///
+/// Each (image, layer) pair is traced independently on the shared
+/// scoped worker pool; results come back in deterministic order, so the
+/// trace is bit-identical to a serial run (and to [`reference`]).
 pub fn trace_from_activations(
     graph: &Graph,
     map: &NetworkMap,
     acts: &[Vec<Tensor<u8>>],
 ) -> NetTrace {
-    let mut images = Vec::with_capacity(acts.len());
-    for img in acts {
-        assert_eq!(img.len(), map.grids.len(), "one activation tensor per CIM layer");
-        let mut layers = Vec::with_capacity(map.grids.len());
-        for (g, act) in map.grids.iter().zip(img) {
-            layers.push(layer_trace(graph, map, g, act));
-        }
-        images.push(ImageTrace { layers });
-    }
-    NetTrace { layers_meta: map.grids.len(), images }
+    trace_from_activations_threads(graph, map, acts, crate::util::par::default_threads())
 }
 
+/// [`trace_from_activations`] with an explicit worker count
+/// (`threads = 1` runs serially; results are identical either way).
+pub fn trace_from_activations_threads(
+    graph: &Graph,
+    map: &NetworkMap,
+    acts: &[Vec<Tensor<u8>>],
+    threads: usize,
+) -> NetTrace {
+    for img in acts {
+        assert_eq!(img.len(), map.grids.len(), "one activation tensor per CIM layer");
+    }
+    let nl = map.grids.len();
+    let n = acts.len() * nl;
+    let mut flat = crate::util::par::run_indexed(n, threads, |i| {
+        Ok(layer_trace(graph, map, &map.grids[i % nl], &acts[i / nl][i % nl]))
+    })
+    .expect("trace construction is infallible");
+    let mut images = Vec::with_capacity(acts.len());
+    for _ in 0..acts.len() {
+        let rest = flat.split_off(nl);
+        images.push(ImageTrace { layers: flat });
+        flat = rest;
+    }
+    NetTrace { layers_meta: nl, images }
+}
+
+/// Trace one layer for one image on the packed fast path, falling back
+/// to the reference lowering for geometries the packed tables cannot
+/// represent (see [`super::packed::conv_supported`]).
 fn layer_trace(
     graph: &Graph,
     map: &NetworkMap,
@@ -106,7 +142,7 @@ fn layer_trace(
 ) -> LayerTrace {
     let cfg = &map.array;
     let layer = &graph.layers[g.graph_idx];
-    let patches: Tensor<u8> = match layer.op {
+    match layer.op {
         // A depthwise conv sees the same channel-major im2col patch as a
         // dense conv over all its channels — only the weight layout
         // (block-diagonal) differs, and zero-skip timing depends on
@@ -126,19 +162,23 @@ fn layer_trace(
                 stride,
                 pad,
             };
-            im2col_u8(act, &spec)
+            if super::packed::conv_supported(&spec) {
+                super::packed::conv_trace(cfg, g, act, &spec)
+            } else {
+                trace_from_patches(cfg, g, &im2col_u8(act, &spec))
+            }
         }
         Op::Linear { in_features, .. } => {
             assert_eq!(act.len(), in_features, "linear input length mismatch");
-            Tensor::from_vec(&[1, in_features], act.data().to_vec())
+            super::packed::linear_trace(cfg, g, act.data())
         }
         _ => unreachable!("non-CIM layer in grid"),
-    };
-    trace_from_patches(cfg, g, &patches)
+    }
 }
 
-/// Trace a pre-lowered patch matrix (also used by tests and the synthetic
-/// path).
+/// Trace a pre-lowered patch matrix by scanning every (patch, block)
+/// byte slice — the reference-path kernel (also used by tests, the
+/// synthetic path, and geometries the packed fast path cannot handle).
 pub fn trace_from_patches(
     cfg: &ArrayCfg,
     g: &crate::mapping::LayerGrid,
@@ -147,7 +187,11 @@ pub fn trace_from_patches(
     let positions = patches.shape()[0];
     let plen = patches.shape()[1];
     assert_eq!(plen, g.matrix_rows, "patch length != matrix rows");
-    assert_eq!(positions, g.positions.max(positions.min(g.positions)),);
+    assert_eq!(
+        positions, g.positions,
+        "patch matrix has {positions} positions, but the grid expects {} (layer '{}')",
+        g.positions, g.name
+    );
     let blocks = g.blocks_per_copy;
     let mut zs = vec![0u32; positions * blocks];
     let mut block_ones = vec![0u64; blocks];
@@ -170,6 +214,71 @@ pub fn trace_from_patches(
     let baseline =
         (0..blocks).map(|b| baseline_cycles(cfg, g.rows_in_block(b, cfg))).collect();
     LayerTrace { positions, blocks, zs, baseline, block_ones, block_bits }
+}
+
+pub mod reference {
+    //! The seed trace implementation, retained verbatim as the golden
+    //! reference: serial, materializing each conv layer's im2col patch
+    //! matrix and re-popcounting every (patch, block) slice. The packed
+    //! fast path must stay **bit-identical** to this module
+    //! (`rust/tests/trace_parity.rs`); `benches/trace_build.rs` measures
+    //! the gap and records it to `BENCH_trace_build.json`.
+
+    use super::*;
+
+    /// Lower one layer's activation to its patch matrix exactly as the
+    /// seed path did.
+    pub fn lower_patches(
+        graph: &Graph,
+        g: &crate::mapping::LayerGrid,
+        act: &Tensor<u8>,
+    ) -> Tensor<u8> {
+        let layer = &graph.layers[g.graph_idx];
+        match layer.op {
+            Op::Conv { in_ch, k, stride, pad, .. }
+            | Op::DwConv { ch: in_ch, k, stride, pad } => {
+                assert_eq!(
+                    act.shape(),
+                    &layer.in_shape,
+                    "activation shape mismatch for layer '{}'",
+                    layer.name
+                );
+                let spec = Im2colSpec {
+                    in_ch,
+                    in_h: layer.in_shape[1],
+                    in_w: layer.in_shape[2],
+                    k,
+                    stride,
+                    pad,
+                };
+                im2col_u8(act, &spec)
+            }
+            Op::Linear { in_features, .. } => {
+                assert_eq!(act.len(), in_features, "linear input length mismatch");
+                Tensor::from_vec(&[1, in_features], act.data().to_vec())
+            }
+            _ => unreachable!("non-CIM layer in grid"),
+        }
+    }
+
+    /// Serial reference trace construction (the seed implementation).
+    pub fn trace_from_activations_reference(
+        graph: &Graph,
+        map: &NetworkMap,
+        acts: &[Vec<Tensor<u8>>],
+    ) -> NetTrace {
+        let mut images = Vec::with_capacity(acts.len());
+        for img in acts {
+            assert_eq!(img.len(), map.grids.len(), "one activation tensor per CIM layer");
+            let mut layers = Vec::with_capacity(map.grids.len());
+            for (g, act) in map.grids.iter().zip(img) {
+                let patches = lower_patches(graph, g, act);
+                layers.push(trace_from_patches(&map.array, g, &patches));
+            }
+            images.push(ImageTrace { layers });
+        }
+        NetTrace { layers_meta: map.grids.len(), images }
+    }
 }
 
 #[cfg(test)]
@@ -294,5 +403,37 @@ mod tests {
             t.images[0].layers.iter().flat_map(|l| l.zs.iter().map(|&d| d as u64)).sum()
         };
         assert!(total(&td) > total(&ts) * 2);
+    }
+
+    #[test]
+    fn fast_path_matches_reference_on_tiny_net() {
+        let (g, map, acts) = tiny_graph_and_acts(6);
+        let fast = trace_from_activations(&g, &map, &acts);
+        let reference = reference::trace_from_activations_reference(&g, &map, &acts);
+        assert_eq!(fast, reference);
+    }
+
+    #[test]
+    fn thread_count_never_changes_the_trace() {
+        let (g, map, acts) = tiny_graph_and_acts(7);
+        let serial = trace_from_activations_threads(&g, &map, &acts, 1);
+        let parallel = trace_from_activations_threads(&g, &map, &acts, 4);
+        assert_eq!(serial, parallel);
+        assert_eq!(serial, trace_from_activations(&g, &map, &acts));
+    }
+
+    #[test]
+    #[should_panic(expected = "patch matrix has 30 positions, but the grid expects 36")]
+    fn patch_count_mismatch_is_rejected() {
+        // regression: the seed assertion was a tautology
+        // (`positions == g.positions.max(positions.min(g.positions))`)
+        // that accepted any patch count
+        let (g, map, acts) = tiny_graph_and_acts(8);
+        let patches = reference::lower_patches(&g, &map.grids[0], &acts[0][0]);
+        let truncated = Tensor::from_vec(
+            &[30, patches.shape()[1]],
+            patches.data()[..30 * patches.shape()[1]].to_vec(),
+        );
+        let _ = trace_from_patches(&map.array, &map.grids[0], &truncated);
     }
 }

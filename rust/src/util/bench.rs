@@ -5,7 +5,9 @@
 //! summary statistics, plus helpers to emit the paper-figure tables that
 //! each bench regenerates. `cargo bench` runs these binaries directly.
 
+use crate::util::json::Json;
 use crate::util::stats::{summarize, Summary};
+use std::path::PathBuf;
 use std::time::Instant;
 
 /// One timed measurement series.
@@ -117,6 +119,43 @@ pub fn banner(fig: &str, description: &str) {
     println!("{}", "=".repeat(72));
 }
 
+/// Repo-root path of a `BENCH_<name>.json` artifact. Cargo runs bench
+/// binaries with cwd = the package root (`rust/`), so every bench
+/// resolves the workspace root explicitly — one stable location per
+/// artifact lets CI archive the trajectory across PRs.
+pub fn bench_json_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join(format!("BENCH_{name}.json"))
+}
+
+/// Write the cross-PR bench artifact with the shared schema
+/// `{name, baseline_ms, optimized_ms, speedup, ...extra}` to the repo
+/// root and return the speedup (`baseline_ms / optimized_ms`).
+///
+/// `baseline` is the reference implementation/configuration and
+/// `optimized` the one the bench defends; extra keys carry per-bench
+/// detail without breaking trajectory tooling that reads the envelope.
+pub fn write_bench_json(
+    name: &str,
+    baseline_ms: f64,
+    optimized_ms: f64,
+    extra: Vec<(&str, Json)>,
+) -> f64 {
+    let speedup = baseline_ms / optimized_ms.max(1e-12);
+    let mut pairs = vec![
+        ("name", Json::str(name)),
+        ("baseline_ms", Json::Num(baseline_ms)),
+        ("optimized_ms", Json::Num(optimized_ms)),
+        ("speedup", Json::Num(speedup)),
+    ];
+    pairs.extend(extra);
+    let mut text = Json::obj(pairs).pretty();
+    text.push('\n');
+    let path = bench_json_path(name);
+    std::fs::write(&path, text).expect("write bench artifact");
+    println!("wrote {}", path.display());
+    speedup
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,6 +173,14 @@ mod tests {
         assert!(m.summary.mean > 0.0);
         assert_eq!(m.iters, 3);
         assert!(b.report().contains("spin"));
+    }
+
+    #[test]
+    fn bench_json_path_targets_the_repo_root() {
+        let p = bench_json_path("trace_build");
+        assert_eq!(p.file_name().unwrap(), "BENCH_trace_build.json");
+        // one level above the crate manifest, i.e. the workspace root
+        assert!(p.parent().unwrap().ends_with(".."));
     }
 
     #[test]

@@ -57,14 +57,95 @@ pub fn bit_density(xs: &[u8]) -> f64 {
 }
 
 /// Pack one bit plane of a byte slice into `u64` words (LSB-first).
+///
+/// Processes 8 bytes per step like [`plane_counts`]: the plane's bits of
+/// a whole `u64`-worth of activations are isolated with one mask and
+/// compacted into a byte with one multiply (the partial products of
+/// `0x0102_0408_1020_4080` land on distinct bit positions, so no carry
+/// can corrupt the gathered byte).
 pub fn pack_plane(xs: &[u8], plane: usize) -> Vec<u64> {
-    assert!(plane < BIT_PLANES);
+    assert!(plane < BIT_PLANES, "plane {plane} out of range");
     let words = xs.len().div_ceil(64);
     let mut out = vec![0u64; words];
-    for (i, &x) in xs.iter().enumerate() {
+    let mut chunks = xs.chunks_exact(8);
+    let mut i = 0usize;
+    for c in chunks.by_ref() {
+        let w = u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]);
+        let byte = ((w >> plane) & 0x0101_0101_0101_0101)
+            .wrapping_mul(0x0102_0408_1020_4080)
+            >> 56;
+        out[i / 64] |= byte << (i % 64);
+        i += 8;
+    }
+    for &x in chunks.remainder() {
         if (x >> plane) & 1 == 1 {
             out[i / 64] |= 1u64 << (i % 64);
         }
+        i += 1;
+    }
+    out
+}
+
+/// Ones in bit range `[start, end)` of a [`pack_plane`]-packed bitmap.
+///
+/// `O(range / 64)` word popcounts with edge masks — the per-block plane
+/// count the trace fast path uses for linear layers.
+pub fn count_ones_range(words: &[u64], start: usize, end: usize) -> u32 {
+    debug_assert!(start <= end && end <= words.len() * 64, "range out of bounds");
+    if start >= end {
+        return 0;
+    }
+    let (ws, we) = (start / 64, (end - 1) / 64);
+    let lo_mask = !0u64 << (start % 64);
+    let hi_bits = end - we * 64; // 1..=64
+    let hi_mask = if hi_bits == 64 { !0u64 } else { (1u64 << hi_bits) - 1 };
+    if ws == we {
+        return (words[ws] & lo_mask & hi_mask).count_ones();
+    }
+    let mut ones = (words[ws] & lo_mask).count_ones();
+    for &w in &words[ws + 1..we] {
+        ones += w.count_ones();
+    }
+    ones + (words[we] & hi_mask).count_ones()
+}
+
+const fn build_lane_spread() -> [u64; 256] {
+    let mut t = [0u64; 256];
+    let mut v = 0usize;
+    while v < 256 {
+        let mut b = 0;
+        let mut w = 0u64;
+        while b < 8 {
+            w |= (((v >> b) & 1) as u64) << (8 * b);
+            b += 1;
+        }
+        t[v] = w;
+        v += 1;
+    }
+    t
+}
+
+/// `lane_spread(v)` byte lane `b` = bit `b` of `v`.
+static LANE_SPREAD: [u64; 256] = build_lane_spread();
+
+/// Spread an activation byte's 8 bit planes into the 8 byte lanes of a
+/// `u64` (lane `b` = bit `b` of `v`, either 0 or 1).
+///
+/// Lane-form counts let the trace fast path accumulate all 8 per-plane
+/// ones counts with single `u64` adds, as long as every lane stays
+/// `<= 255` (the accumulators flush before that can happen).
+#[inline]
+pub fn lane_spread(v: u8) -> u64 {
+    LANE_SPREAD[v as usize]
+}
+
+/// Unpack a byte-lane accumulator word into per-plane counts
+/// (the inverse view of sums of [`lane_spread`] words).
+#[inline]
+pub fn lane_counts(lanes: u64) -> [u32; BIT_PLANES] {
+    let mut out = [0u32; BIT_PLANES];
+    for (b, o) in out.iter_mut().enumerate() {
+        *o = ((lanes >> (8 * b)) & 0xFF) as u32;
     }
     out
 }
@@ -123,5 +204,79 @@ mod tests {
                 assert_eq!(bit as u8, (x >> plane) & 1);
             }
         }
+    }
+
+    fn pack_plane_naive(xs: &[u8], plane: usize) -> Vec<u64> {
+        let mut out = vec![0u64; xs.len().div_ceil(64)];
+        for (i, &x) in xs.iter().enumerate() {
+            if (x >> plane) & 1 == 1 {
+                out[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn pack_plane_matches_naive_on_all_planes_and_ragged_lengths() {
+        // the word-at-a-time path must agree with the per-byte reference
+        // for every plane and for lengths that are not multiples of 64
+        // (or even of 8, exercising the remainder loop)
+        crate::util::propcheck::check("pack_plane == naive", 0xB17, 64, |rng| {
+            let len = rng.below(513) as usize;
+            let xs: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+            for plane in 0..BIT_PLANES {
+                let fast = pack_plane(&xs, plane);
+                let naive = pack_plane_naive(&xs, plane);
+                crate::prop_assert!(
+                    fast == naive,
+                    "plane {plane}, len {len}: fast {fast:?} != naive {naive:?}"
+                );
+            }
+            Ok(())
+        });
+        for len in [0usize, 1, 7, 8, 9, 63, 64, 65, 127, 128, 200, 511] {
+            let xs: Vec<u8> = (0..len).map(|i| (i * 37) as u8).collect();
+            for plane in 0..BIT_PLANES {
+                assert_eq!(pack_plane(&xs, plane), pack_plane_naive(&xs, plane), "len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn count_ones_range_matches_slice_popcount() {
+        crate::util::propcheck::check("count_ones_range == plane_counts", 0xC0DE, 64, |rng| {
+            let len = 1 + rng.below(400) as usize;
+            let xs: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+            let a = rng.below(len as u64 + 1) as usize;
+            let b = rng.below(len as u64 + 1) as usize;
+            let (lo, hi) = (a.min(b), a.max(b));
+            for plane in 0..BIT_PLANES {
+                let packed = pack_plane(&xs, plane);
+                let got = count_ones_range(&packed, lo, hi);
+                let want = plane_counts(&xs[lo..hi])[plane];
+                crate::prop_assert!(
+                    got == want,
+                    "plane {plane}, [{lo}, {hi}) of {len}: {got} != {want}"
+                );
+            }
+            Ok(())
+        });
+        assert_eq!(count_ones_range(&[!0u64], 0, 64), 64);
+        assert_eq!(count_ones_range(&[!0u64, !0u64], 63, 65), 2);
+        assert_eq!(count_ones_range(&[!0u64], 5, 5), 0);
+    }
+
+    #[test]
+    fn lane_spread_and_counts_roundtrip() {
+        for v in 0..=255u8 {
+            let lanes = lane_spread(v);
+            let counts = lane_counts(lanes);
+            for (b, &c) in counts.iter().enumerate() {
+                assert_eq!(c, ((v >> b) & 1) as u32, "v={v:#x} plane {b}");
+            }
+        }
+        // lane sums stay exact while every lane is <= 255
+        let sum = lane_spread(0xFF).wrapping_mul(200);
+        assert_eq!(lane_counts(sum), [200; BIT_PLANES]);
     }
 }

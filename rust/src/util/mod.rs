@@ -10,6 +10,7 @@ pub mod prng;
 pub mod bitops;
 pub mod json;
 pub mod cli;
+pub mod par;
 pub mod table;
 pub mod bench;
 pub mod propcheck;

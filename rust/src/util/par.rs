@@ -1,0 +1,95 @@
+//! Scoped-thread fan-out over an indexed work list.
+//!
+//! Extracted from the sweep executor so every embarrassingly-parallel
+//! stage (sweep scenarios, prefix preparation, per-layer trace
+//! construction) shares one deterministic worker-pool implementation:
+//! results always come back in index order, so a parallel run is
+//! bit-identical to a serial one whenever `f` is a pure function of its
+//! index.
+
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker count used when the caller does not specify `--threads`.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(0..n)` on up to `threads` scoped workers, returning results in
+/// index order. The first error (lowest index) wins; a panic in any
+/// worker propagates to the caller when the scope joins.
+pub fn run_indexed<T, F>(n: usize, threads: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
+    let slots: Vec<Mutex<Option<Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                if failed.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                if r.is_err() {
+                    failed.store(true, Ordering::Relaxed);
+                }
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    let mut out = Vec::with_capacity(n);
+    for (i, slot) in slots.into_iter().enumerate() {
+        match slot.into_inner().unwrap() {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(e)) => return Err(e),
+            None if failed.load(Ordering::Relaxed) => {
+                anyhow::bail!("fan-out aborted before item {i} (an earlier item failed)")
+            }
+            None => anyhow::bail!("fan-out worker abandoned item {i}"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_indexed_preserves_order() {
+        let out = run_indexed(8, 4, |i| Ok(i * 10)).unwrap();
+        assert_eq!(out, vec![0, 10, 20, 30, 40, 50, 60, 70]);
+    }
+
+    #[test]
+    fn run_indexed_handles_empty_and_oversubscription() {
+        let out: Vec<usize> = run_indexed(0, 4, Ok).unwrap();
+        assert!(out.is_empty());
+        let out = run_indexed(2, 64, Ok).unwrap();
+        assert_eq!(out, vec![0, 1]);
+    }
+
+    #[test]
+    fn run_indexed_propagates_errors() {
+        let r: Result<Vec<usize>> =
+            run_indexed(4, 2, |i| if i == 2 { anyhow::bail!("boom {i}") } else { Ok(i) });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -70,8 +70,8 @@ fn read_tree(root: &Path) -> BTreeMap<String, Vec<u8>> {
 fn stage_dumps_are_byte_identical_across_runs() {
     let scs = scenarios(13);
     let (da, db) = (tmp_dir("a"), tmp_dir("b"));
-    run_sweep(&scs, &SweepCfg { threads: 1, dump_dir: Some(da.clone()) }).unwrap();
-    run_sweep(&scs, &SweepCfg { threads: 4, dump_dir: Some(db.clone()) }).unwrap();
+    run_sweep(&scs, &SweepCfg { threads: 1, dump_dir: Some(da.clone()), cache_dir: None }).unwrap();
+    run_sweep(&scs, &SweepCfg { threads: 4, dump_dir: Some(db.clone()), cache_dir: None }).unwrap();
 
     let ta = read_tree(Path::new(&da));
     let tb = read_tree(Path::new(&db));
@@ -91,7 +91,8 @@ fn stage_dumps_are_byte_identical_across_runs() {
 fn dump_tree_has_every_stage_exactly_once_per_scope() {
     let scs = scenarios(29);
     let dir = tmp_dir("tree");
-    run_sweep(&scs, &SweepCfg { threads: 2, dump_dir: Some(dir.clone()) }).unwrap();
+    let cfg = SweepCfg { threads: 2, dump_dir: Some(dir.clone()), cache_dir: None };
+    run_sweep(&scs, &cfg).unwrap();
     let tree = read_tree(Path::new(&dir));
 
     let prefix_id = spec(29).id();
@@ -121,8 +122,10 @@ fn dump_tree_has_every_stage_exactly_once_per_scope() {
 #[test]
 fn parallel_sweep_matches_serial_bit_for_bit() {
     let scs = scenarios(7);
-    let serial = run_sweep(&scs, &SweepCfg { threads: 1, dump_dir: None }).unwrap();
-    let parallel = run_sweep(&scs, &SweepCfg { threads: 4, dump_dir: None }).unwrap();
+    let serial =
+        run_sweep(&scs, &SweepCfg { threads: 1, dump_dir: None, cache_dir: None }).unwrap();
+    let parallel =
+        run_sweep(&scs, &SweepCfg { threads: 4, dump_dir: None, cache_dir: None }).unwrap();
     assert_eq!(serial.len(), parallel.len());
     for (s, p) in serial.iter().zip(&parallel) {
         assert_eq!(s.scenario, p.scenario, "outcome order changed");
@@ -150,7 +153,8 @@ fn sweep_reproduces_the_driver_path() {
         ..DriverOpts::default()
     })
     .unwrap();
-    let outcomes = run_sweep(&scenarios(13), &SweepCfg { threads: 3, dump_dir: None }).unwrap();
+    let cfg = SweepCfg { threads: 3, dump_dir: None, cache_dir: None };
+    let outcomes = run_sweep(&scenarios(13), &cfg).unwrap();
     for o in &outcomes {
         let (_, want) = d.run_strategy(&o.scenario.alloc, o.scenario.pes).unwrap();
         assert_eq!(o.result.makespan, want.makespan, "{}", o.scenario.id());
@@ -176,7 +180,8 @@ fn synthetic_prefixes_differing_only_in_artifacts_dir_share_one_prefix() {
     };
     let scs = vec![mk(a, "weight-based", "layer-wise"), mk(b, "block-wise", "block-wise")];
     let dir = tmp_dir("shared");
-    let out = run_sweep(&scs, &SweepCfg { threads: 2, dump_dir: Some(dir.clone()) }).unwrap();
+    let cfg = SweepCfg { threads: 2, dump_dir: Some(dir.clone()), cache_dir: None };
+    let out = run_sweep(&scs, &cfg).unwrap();
     assert_eq!(out.len(), 2);
     let tree = read_tree(Path::new(&dir));
     // one prefix directory (5 stage files) + two scenario dirs (4 each)
@@ -210,7 +215,7 @@ fn multi_prefix_sweep_prepares_each_prefix_once_and_stays_ordered() {
             });
         }
     }
-    let out = run_sweep(&scs, &SweepCfg { threads: 4, dump_dir: None }).unwrap();
+    let out = run_sweep(&scs, &SweepCfg { threads: 4, dump_dir: None, cache_dir: None }).unwrap();
     assert_eq!(out.len(), 4);
     for (o, sc) in out.iter().zip(&scs) {
         assert_eq!(&o.scenario, sc);

@@ -1,0 +1,192 @@
+//! Content-addressed prefix cache: miss → store → hit reconstruction
+//! must be bit-identical to a cold run — same trace, same stage
+//! artifacts, same downstream simulation — and every corruption or
+//! mismatch must degrade to a miss, never a wrong answer.
+
+use cimfab::pipeline::{
+    self, artifact, prepare_cached, run_sweep, CacheStatus, Dumper, PrefixCache, PrefixSpec,
+    ScenarioBuilder, StatsSource, SweepCfg,
+};
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("cimfab_prefix_cache_{name}_{}", std::process::id()))
+}
+
+fn spec(seed: u64) -> PrefixSpec {
+    PrefixSpec {
+        net: "resnet18".into(),
+        hw: 32,
+        hw_profile: cimfab::hw::DEFAULT_PROFILE.into(),
+        stats: StatsSource::Synthetic,
+        profile_images: 1,
+        seed,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+#[test]
+fn miss_then_hit_reconstructs_an_identical_prefix() {
+    let dir = tmp("hit");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = PrefixCache::new(dir.to_str().unwrap()).unwrap();
+    let (cold, s0) = prepare_cached(&spec(7), None, Some(&cache)).unwrap();
+    assert_eq!(s0, CacheStatus::Miss);
+    let (warm, s1) = prepare_cached(&spec(7), None, Some(&cache)).unwrap();
+    assert_eq!(s1, CacheStatus::Hit);
+    assert_eq!(cold.trace, warm.trace);
+    assert_eq!(cold.min_pes(), warm.min_pes());
+    assert_eq!(
+        artifact::trace_json(&cold.map, &cold.trace).compact(),
+        artifact::trace_json(&warm.map, &warm.trace).compact()
+    );
+    assert_eq!(
+        artifact::profile_json(&cold.profile).compact(),
+        artifact::profile_json(&warm.profile).compact()
+    );
+    // the warm prefix drives the scenario stages to the same result
+    let sc = ScenarioBuilder::from_prefix(&spec(7))
+        .alloc("block-wise")
+        .pes(172)
+        .sim_images(2)
+        .build()
+        .unwrap();
+    let a = pipeline::run_scenario(&cold.view(), &sc, None).unwrap();
+    let b = pipeline::run_scenario(&warm.view(), &sc, None).unwrap();
+    assert_eq!(
+        artifact::sim_result_json(&a.result).compact(),
+        artifact::sim_result_json(&b.result).compact()
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn warm_dump_trees_are_byte_identical_to_cold_ones() {
+    let (cache_dir, da, db) = (tmp("dump_cache"), tmp("dump_a"), tmp("dump_b"));
+    for d in [&cache_dir, &da, &db] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+    let cache = PrefixCache::new(cache_dir.to_str().unwrap()).unwrap();
+    let s = spec(9);
+    let (_, s0) = prepare_cached(&s, Some(&Dumper::new(da.to_str().unwrap()).unwrap()),
+        Some(&cache)).unwrap();
+    assert_eq!(s0, CacheStatus::Miss);
+    let (_, s1) = prepare_cached(&s, Some(&Dumper::new(db.to_str().unwrap()).unwrap()),
+        Some(&cache)).unwrap();
+    assert_eq!(s1, CacheStatus::Hit);
+    let sub = s.id();
+    let mut checked = 0;
+    for entry in std::fs::read_dir(da.join(&sub)).unwrap() {
+        let name = entry.unwrap().file_name();
+        let a = std::fs::read(da.join(&sub).join(&name)).unwrap();
+        let b = std::fs::read(db.join(&sub).join(&name)).unwrap();
+        assert_eq!(a, b, "stage dump {name:?} differs between cold and warm runs");
+        checked += 1;
+    }
+    assert_eq!(checked, 5, "expected the five prefix stage artifacts");
+    for d in [&cache_dir, &da, &db] {
+        std::fs::remove_dir_all(d).unwrap();
+    }
+}
+
+#[test]
+fn corrupt_entries_degrade_to_a_miss_and_are_repaired() {
+    let dir = tmp("corrupt");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = PrefixCache::new(dir.to_str().unwrap()).unwrap();
+    let (cold, s0) = prepare_cached(&spec(11), None, Some(&cache)).unwrap();
+    assert_eq!(s0, CacheStatus::Miss);
+    let entry = std::fs::read_dir(&dir).unwrap().next().unwrap().unwrap().path();
+    std::fs::write(&entry, "{not json").unwrap();
+    let (again, s1) = prepare_cached(&spec(11), None, Some(&cache)).unwrap();
+    assert_eq!(s1, CacheStatus::Miss, "corrupt entry must not be replayed");
+    assert_eq!(cold.trace, again.trace);
+    let (_, s2) = prepare_cached(&spec(11), None, Some(&cache)).unwrap();
+    assert_eq!(s2, CacheStatus::Hit, "the repaired entry hits again");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn golden_prefixes_never_write_cache_entries() {
+    let dir = tmp("golden");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = PrefixCache::new(dir.to_str().unwrap()).unwrap();
+    let mut s = spec(7);
+    s.stats = StatsSource::Golden;
+    s.artifacts_dir = dir.join("no_such_artifacts").to_str().unwrap().to_string();
+    // golden statistics read artifact files the key cannot see, so the
+    // cache must stay out of the way entirely (here: the failure to load
+    // the artifacts surfaces, and no entry is written)
+    assert!(prepare_cached(&s, None, Some(&cache)).is_err());
+    assert!(
+        std::fs::read_dir(&dir).unwrap().next().is_none(),
+        "golden prefix must not create cache entries"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn synthetic_specs_differing_only_in_artifacts_dir_share_an_entry() {
+    // artifacts_dir is unused under synthetic statistics (PrefixSpec::id
+    // ignores it, pinned by the determinism suite), so it must not
+    // defeat the cache either
+    let dir = tmp("artdir");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = PrefixCache::new(dir.to_str().unwrap()).unwrap();
+    let (_, s0) = prepare_cached(&spec(13), None, Some(&cache)).unwrap();
+    assert_eq!(s0, CacheStatus::Miss);
+    let mut other = spec(13);
+    other.artifacts_dir = "elsewhere".into();
+    let (warm, s1) = prepare_cached(&other, None, Some(&cache)).unwrap();
+    assert_eq!(s1, CacheStatus::Hit, "unused artifacts_dir must not force a miss");
+    // the reconstructed prefix carries the requesting spec verbatim
+    assert_eq!(warm.spec.artifacts_dir, "elsewhere");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn distinct_specs_get_distinct_entries() {
+    let dir = tmp("distinct");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = PrefixCache::new(dir.to_str().unwrap()).unwrap();
+    prepare_cached(&spec(1), None, Some(&cache)).unwrap();
+    prepare_cached(&spec(2), None, Some(&cache)).unwrap();
+    let entries = std::fs::read_dir(&dir).unwrap().count();
+    assert_eq!(entries, 2, "different seeds must be keyed apart");
+    // both hit afterwards
+    assert_eq!(prepare_cached(&spec(1), None, Some(&cache)).unwrap().1, CacheStatus::Hit);
+    assert_eq!(prepare_cached(&spec(2), None, Some(&cache)).unwrap().1, CacheStatus::Hit);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn cached_sweeps_reproduce_uncached_results() {
+    let dir = tmp("sweep");
+    let _ = std::fs::remove_dir_all(&dir);
+    let scenarios: Vec<_> = ["baseline", "block-wise"]
+        .into_iter()
+        .map(|alloc| {
+            ScenarioBuilder::from_prefix(&spec(5))
+                .alloc(alloc)
+                .pes(129)
+                .sim_images(2)
+                .build()
+                .unwrap()
+        })
+        .collect();
+    let cached_cfg = SweepCfg {
+        threads: 2,
+        dump_dir: None,
+        cache_dir: Some(dir.to_str().unwrap().to_string()),
+    };
+    let cold = run_sweep(&scenarios, &cached_cfg).unwrap();
+    assert!(std::fs::read_dir(&dir).unwrap().next().is_some(), "sweep must populate the cache");
+    let warm = run_sweep(&scenarios, &cached_cfg).unwrap();
+    let plain = run_sweep(&scenarios, &SweepCfg::serial()).unwrap();
+    for ((c, w), p) in cold.iter().zip(&warm).zip(&plain) {
+        let json = |o: &pipeline::ScenarioOutcome| artifact::sim_result_json(&o.result).compact();
+        assert_eq!(json(c), json(w), "warm sweep diverged at {}", c.scenario.id());
+        assert_eq!(json(c), json(p), "cached sweep diverged from uncached at {}", c.scenario.id());
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}

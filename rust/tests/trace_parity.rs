@@ -1,0 +1,120 @@
+//! Golden parity: the packed bit-plane trace fast path must be
+//! **bit-identical** to the retained seed implementation
+//! (`stats::trace::reference`) — every per-(image, layer, patch, block)
+//! duration, every density numerator/denominator — across random
+//! geometries (dense conv, depthwise block-diagonal, linear) and the
+//! real paper workloads.
+
+use cimfab::config::ArrayCfg;
+use cimfab::dnn::{mobilenet, resnet18, Graph, Op};
+use cimfab::mapping::map_network;
+use cimfab::pipeline::artifact;
+use cimfab::stats::synth::{synth_activations, SynthCfg};
+use cimfab::stats::trace::reference::trace_from_activations_reference;
+use cimfab::stats::{trace_from_activations, trace_from_activations_threads, NetworkProfile};
+use cimfab::tensor::Tensor;
+use cimfab::util::prng::Prng;
+use cimfab::util::propcheck;
+
+#[test]
+fn packed_trace_matches_reference_on_random_geometries() {
+    propcheck::check("packed trace == reference", 0x7ACE, 48, |rng| {
+        let kind = rng.below(4);
+        let (graph, include_linear) = if kind == 3 {
+            let f = 1 + rng.below(500) as usize;
+            let mut g = Graph::new("lin", [f, 1, 1]);
+            g.push("fc", Op::Linear { in_features: f, out_features: 1 + rng.below(64) as usize });
+            (g, true)
+        } else {
+            let k = [1usize, 2, 3, 3, 5, 7][rng.below(6) as usize];
+            let stride = 1 + rng.below(3) as usize;
+            let pad = rng.below(k as u64 + 1) as usize;
+            // keep h + 2*pad >= k so the im2col output is non-empty
+            let h = k.saturating_sub(2 * pad).max(1) + rng.below(10) as usize;
+            let w = k.saturating_sub(2 * pad).max(1) + rng.below(10) as usize;
+            let c = 1 + rng.below(24) as usize;
+            let mut g = Graph::new("conv", [c, h, w]);
+            if kind == 2 {
+                g.push("dw", Op::DwConv { ch: c, k, stride, pad });
+            } else {
+                let out_ch = 1 + rng.below(32) as usize;
+                g.push("c", Op::Conv { in_ch: c, out_ch, k, stride, pad });
+            }
+            (g, false)
+        };
+        let map = map_network(&graph, ArrayCfg::paper(), include_linear);
+        let mut data_rng = Prng::new(rng.next_u64());
+        let images = 1 + rng.below(2) as usize;
+        let acts: Vec<Vec<Tensor<u8>>> = (0..images)
+            .map(|_| {
+                map.grids
+                    .iter()
+                    .map(|gr| {
+                        let shape = graph.layers[gr.graph_idx].in_shape;
+                        Tensor::from_fn(&shape.to_vec(), |_| data_rng.next_u32() as u8)
+                    })
+                    .collect()
+            })
+            .collect();
+        let threads = 1 + rng.below(4) as usize;
+        let fast = trace_from_activations_threads(&graph, &map, &acts, threads);
+        let reference = trace_from_activations_reference(&graph, &map, &acts);
+        cimfab::prop_assert!(
+            fast == reference,
+            "trace diverged (kind {kind}, {} grids, {images} images, {threads} threads)",
+            map.grids.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn fig4_fig6_densities_unchanged_on_resnet18() {
+    // the Figs 4 & 6 inputs are block_ones / block_bits and the profile
+    // aggregates — all must be exactly what the seed path produced
+    let graph = resnet18(32, 10);
+    let map = map_network(&graph, ArrayCfg::paper(), false);
+    let acts = synth_activations(&graph, &map, 2, 7, SynthCfg::default());
+    let fast = trace_from_activations(&graph, &map, &acts);
+    let reference = trace_from_activations_reference(&graph, &map, &acts);
+    assert_eq!(fast, reference);
+    for img in 0..acts.len() {
+        for (lf, lr) in fast.images[img].layers.iter().zip(&reference.images[img].layers) {
+            assert_eq!(lf.block_ones, lr.block_ones);
+            assert_eq!(lf.block_bits, lr.block_bits);
+        }
+    }
+    let pf = NetworkProfile::from_trace(&map, &fast);
+    let pr = NetworkProfile::from_trace(&map, &reference);
+    assert_eq!(
+        artifact::profile_json(&pf).compact(),
+        artifact::profile_json(&pr).compact(),
+        "profile artifact (Figs 4 & 6 source) diverged"
+    );
+    assert_eq!(
+        artifact::trace_json(&map, &fast).compact(),
+        artifact::trace_json(&map, &reference).compact(),
+        "trace artifact diverged"
+    );
+}
+
+#[test]
+fn mobilenet_depthwise_blocks_stay_bit_identical() {
+    let graph = mobilenet(32, 10);
+    let map = map_network(&graph, ArrayCfg::paper(), false);
+    assert!(map.grids.iter().any(|g| g.diagonal), "expected depthwise grids");
+    let acts = synth_activations(&graph, &map, 1, 11, SynthCfg::default());
+    let fast = trace_from_activations(&graph, &map, &acts);
+    let reference = trace_from_activations_reference(&graph, &map, &acts);
+    assert_eq!(fast, reference);
+}
+
+#[test]
+fn synthetic_activation_traces_match_across_thread_counts() {
+    let graph = resnet18(32, 10);
+    let map = map_network(&graph, ArrayCfg::paper(), false);
+    let acts = synth_activations(&graph, &map, 2, 3, SynthCfg::default());
+    let one = trace_from_activations_threads(&graph, &map, &acts, 1);
+    let many = trace_from_activations_threads(&graph, &map, &acts, 8);
+    assert_eq!(one, many);
+}
