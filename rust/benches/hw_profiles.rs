@@ -96,17 +96,17 @@ fn main() {
         profile_reports.push(Json::obj(vec![
             ("profile", Json::str(name)),
             ("device", Json::str(prep.hw.device.name())),
-            ("adc_bits", Json::num(prep.hw.adc_bits().unwrap() as f64)),
-            ("min_pes", Json::num(prep.min_pes() as f64)),
-            ("pes", Json::num(pes as f64)),
+            ("adc_bits", Json::num(prep.hw.adc_bits().unwrap())),
+            ("min_pes", Json::num(prep.min_pes())),
+            ("pes", Json::num(pes)),
             (
                 "scenarios",
                 Json::arr(outcomes.iter().map(|o| {
                     Json::obj(vec![
                         ("alloc", Json::str(&o.scenario.alloc)),
-                        ("makespan", Json::num(o.result.makespan as f64)),
-                        ("throughput_ips", Json::Num(o.result.throughput_ips)),
-                        ("chip_util", Json::Num(o.result.chip_util)),
+                        ("makespan", Json::num(o.result.makespan)),
+                        ("throughput_ips", Json::num(o.result.throughput_ips)),
+                        ("chip_util", Json::num(o.result.chip_util)),
                     ])
                 })),
             ),

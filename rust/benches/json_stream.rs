@@ -1,0 +1,148 @@
+//! Streaming-JSON bench: cache-hit replay and hardware-profile load
+//! through the pull-based reader ([`cimfab::util::json_stream`]) vs the
+//! retained DOM paths, on the exact same bytes.
+//!
+//! The baseline reproduces the pre-streaming hit path verbatim: read
+//! the entry file, `Json::parse` it into a tree, walk the tree to
+//! validate version/key, decode the full-fidelity trace through
+//! `net_trace_from_json`, pull the five stored artifact strings, and
+//! rebuild the cheap prefix pieces. The optimized path is the shipping
+//! `PrefixCache::load`, which streams events off the same file without
+//! ever materializing a tree. Both must reconstruct identical prefixes;
+//! the streaming replay must be ≥2× faster. Also times a DOM vs
+//! streaming hardware-profile load and emits `BENCH_json_stream.json`
+//! (repo root, archived by CI) in the shared
+//! `{name, baseline_ms, optimized_ms, speedup}` schema.
+
+use cimfab::hw::HwProfile;
+use cimfab::pipeline::{self, cache, CacheStatus, PrefixCache, PrefixSpec, Stage, StatsSource};
+use cimfab::stats::NetworkProfile;
+use cimfab::util::bench::{banner, fmt_duration, write_bench_json, Bencher};
+use cimfab::util::json::Json;
+
+fn main() {
+    banner(
+        "JSON streaming",
+        "cache-hit replay + hw-profile load: pull-based event reader vs DOM tree parse",
+    );
+    // Enough profiling images that the entry's trace payload dominates
+    // the replay, as it does for real profile-heavy sweeps.
+    let spec = PrefixSpec {
+        net: "resnet18".into(),
+        hw: 32,
+        hw_profile: cimfab::hw::DEFAULT_PROFILE.into(),
+        stats: StatsSource::Synthetic,
+        profile_images: 4,
+        seed: 7,
+        artifacts_dir: "artifacts".into(),
+    };
+    let dir = std::env::temp_dir().join(format!("cimfab_json_stream_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = PrefixCache::new(dir.to_str().unwrap()).unwrap();
+    let (cold, st) = pipeline::prepare_cached(&spec, None, Some(&store)).unwrap();
+    assert_eq!(st, CacheStatus::Miss, "first prepare must be a cache miss");
+    let key = cache::key(&spec).unwrap();
+    let entry = store.entry_path(&spec, &key);
+    let entry_bytes = std::fs::metadata(&entry).unwrap().len();
+    println!("entry: {} ({entry_bytes} bytes)", entry.display());
+
+    let stages = [Stage::BuildGraph, Stage::Map, Stage::Stats, Stage::Trace, Stage::Profile];
+    let mut b = Bencher::new(1, 5);
+
+    // Baseline: the pre-streaming hit path — whole-document DOM parse.
+    let mut dom = None;
+    let m_dom = b
+        .bench("cache-hit replay: DOM parse + tree walk", || {
+            let text = std::fs::read_to_string(&entry).unwrap();
+            let doc = Json::parse(&text).unwrap();
+            assert_eq!(doc.get("version").as_u64(), Some(cache::CODE_VERSION));
+            assert_eq!(doc.get("key").as_str(), Some(key.as_str()));
+            let hw = cimfab::hw::ProfileRegistry::resolve(&spec.hw_profile).unwrap();
+            let graph = pipeline::build_graph(&spec.net, spec.hw).unwrap();
+            let map = cimfab::mapping::map_network(&graph, hw.array_cfg().unwrap(), false);
+            let trace = cache::net_trace_from_json(doc.get("net_trace"), &map).unwrap();
+            let artifacts: Vec<(Stage, String)> = stages
+                .iter()
+                .map(|&s| {
+                    (s, doc.get("artifacts").get(s.name()).as_str().unwrap().to_string())
+                })
+                .collect();
+            let profile = NetworkProfile::from_trace(&map, &trace);
+            dom = Some((trace, profile, artifacts));
+        })
+        .summary
+        .mean;
+
+    // Optimized: the shipping streaming replay.
+    let mut streamed = None;
+    let m_stream = b
+        .bench("cache-hit replay: streaming event reader", || {
+            streamed = Some(store.load(&spec, &key, true).expect("entry must hit"));
+        })
+        .summary
+        .mean;
+
+    // Parity: both replays reconstruct the cold-computed prefix exactly.
+    let (dom_trace, dom_profile, dom_artifacts) = dom.unwrap();
+    let hit = streamed.unwrap();
+    assert_eq!(dom_trace, cold.trace, "DOM replay diverged from the cold trace");
+    assert_eq!(hit.prepared.trace, cold.trace, "streamed replay diverged from the cold trace");
+    assert_eq!(hit.artifacts, dom_artifacts, "stored artifacts diverged between the replays");
+    assert_eq!(
+        pipeline::artifact::profile_json(&hit.prepared.profile).compact(),
+        pipeline::artifact::profile_json(&dom_profile).compact(),
+        "profiles diverged between the replays"
+    );
+    println!("parity: streamed replay == DOM replay == cold prefix");
+
+    let speedup = m_dom / m_stream.max(1e-12);
+    println!(
+        "DOM {} vs streaming {} → speedup {speedup:.1}x (target >= 2x)",
+        fmt_duration(m_dom),
+        fmt_duration(m_stream)
+    );
+    assert!(speedup >= 2.0, "streaming replay only {speedup:.1}x faster than the DOM path");
+
+    // Secondary: hardware-profile load, DOM parse vs one-pass streaming.
+    let profile_path = dir.join("bench-profile.json");
+    HwProfile::rram_256().save(profile_path.to_str().unwrap()).unwrap();
+    let m_prof_dom = b
+        .bench("hw profile load: DOM parse", || {
+            let text = std::fs::read_to_string(&profile_path).unwrap();
+            HwProfile::from_json(&Json::parse(&text).unwrap()).unwrap()
+        })
+        .summary
+        .mean;
+    let m_prof_stream = b
+        .bench("hw profile load: streaming parse", || {
+            HwProfile::load(profile_path.to_str().unwrap()).unwrap()
+        })
+        .summary
+        .mean;
+    assert_eq!(
+        HwProfile::load(profile_path.to_str().unwrap()).unwrap(),
+        HwProfile::rram_256(),
+        "streamed profile load diverged"
+    );
+    println!(
+        "profile load: DOM {} vs streaming {}",
+        fmt_duration(m_prof_dom),
+        fmt_duration(m_prof_stream)
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+
+    write_bench_json(
+        "json_stream",
+        m_dom * 1e3,
+        m_stream * 1e3,
+        vec![
+            ("net", Json::str("resnet18")),
+            ("profile_images", Json::num(spec.profile_images)),
+            ("entry_bytes", Json::num(entry_bytes)),
+            ("profile_load_dom_ms", Json::num(m_prof_dom * 1e3)),
+            ("profile_load_stream_ms", Json::num(m_prof_stream * 1e3)),
+        ],
+    );
+    println!("\n{}", b.report());
+}

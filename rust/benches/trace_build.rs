@@ -96,10 +96,10 @@ fn main() {
         m_fast * 1e3,
         vec![
             ("net", Json::str("resnet18")),
-            ("profile_images", Json::num(spec.profile_images as f64)),
-            ("threads", Json::num(cimfab::util::par::default_threads() as f64)),
-            ("cache_cold_ms", Json::Num(cache_cold * 1e3)),
-            ("cache_warm_ms", Json::Num(cache_warm * 1e3)),
+            ("profile_images", Json::num(spec.profile_images)),
+            ("threads", Json::num(cimfab::util::par::default_threads())),
+            ("cache_cold_ms", Json::num(cache_cold * 1e3)),
+            ("cache_warm_ms", Json::num(cache_warm * 1e3)),
         ],
     );
     println!("\n{}", b.report());

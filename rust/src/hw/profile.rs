@@ -26,6 +26,7 @@ use super::device::DeviceModel;
 use super::spec::{ArraySpec, ChipSpec};
 use crate::config::{ArrayCfg, ChipCfg};
 use crate::util::json::Json;
+use crate::util::json_stream::{Event, EventSource, JsonReader};
 use anyhow::Result;
 
 /// One complete hardware description.
@@ -144,11 +145,58 @@ impl HwProfile {
         )
     }
 
-    /// Load + validate a profile from a JSON file.
+    /// Parse + validate a profile document in one streaming pass — the
+    /// fast path behind [`HwProfile::load`]. Accepts the same schema as
+    /// [`HwProfile::from_json`] (top-level keys in any order, unknown
+    /// keys skipped, absent or non-object `array`/`chip` sections
+    /// defaulted) without materializing the document tree.
+    pub fn from_slice(bytes: &[u8]) -> Result<HwProfile> {
+        let mut r = JsonReader::new(bytes);
+        match r.next()? {
+            Some(Event::BeginObject) => {}
+            _ => anyhow::bail!("hardware profile must be a JSON object"),
+        }
+        let mut name: Option<String> = None;
+        let mut description = String::new();
+        let mut device_name: Option<String> = None;
+        let mut array = ArraySpec::default();
+        let mut chip = ChipSpec::default();
+        loop {
+            match r.next()? {
+                Some(Event::Key(k)) => match k.as_ref() {
+                    "name" => name = r.read_value()?.as_str().map(str::to_string),
+                    "description" => {
+                        description = r.read_value()?.as_str().unwrap_or("").to_string();
+                    }
+                    "device" => device_name = r.read_value()?.as_str().map(str::to_string),
+                    // tiny fixed-field sections: materialize just the
+                    // subtree so the field/default semantics stay those
+                    // of the DOM `from_json` (one source of truth)
+                    "array" => array = ArraySpec::from_json(&r.read_value()?)?,
+                    "chip" => chip = ChipSpec::from_json(&r.read_value()?)?,
+                    _ => r.skip_value()?,
+                },
+                Some(Event::EndObject) => break,
+                // the reader's state machine only yields keys or the
+                // closing brace inside an object body
+                _ => unreachable!("object body yields keys or end"),
+            }
+        }
+        r.next()?; // None at a clean end, error on trailing characters
+        let name =
+            name.ok_or_else(|| anyhow::anyhow!("hardware profile needs a string 'name'"))?;
+        let device_name = device_name.ok_or_else(|| {
+            anyhow::anyhow!("hardware profile '{name}' needs a string 'device'")
+        })?;
+        let device = super::ProfileRegistry::lookup_device(&device_name)?;
+        HwProfile::new(name, description, device, array, chip)
+    }
+
+    /// Load + validate a profile from a JSON file (streaming, one pass).
     pub fn load(path: &str) -> Result<HwProfile> {
-        let text = std::fs::read_to_string(path)
+        let bytes = std::fs::read(path)
             .map_err(|e| anyhow::anyhow!("cannot read hardware profile '{path}': {e}"))?;
-        HwProfile::from_json(&Json::parse(&text)?)
+        HwProfile::from_slice(&bytes)
             .map_err(|e| e.context(format!("loading hardware profile '{path}'")))
     }
 
@@ -266,6 +314,53 @@ mod tests {
         .unwrap();
         assert_eq!(p.array.rows, 64);
         assert_eq!(p.array.cols, 128);
+    }
+
+    #[test]
+    fn from_slice_matches_from_json() {
+        // same acceptance and same result as the DOM path, over key
+        // reordering, unknown keys, and type-mismatched fields
+        let docs = [
+            r#"{"name": "x", "device": "rram"}"#,
+            r#"{"device": "rram", "name": "x"}"#, // any key order
+            r#"{"name": "x", "device": "rram", "future_knob": [1, {"a": 2}]}"#,
+            r#"{"name": "x", "device": "rram", "array": {"rows": 64, "unknown": true}}"#,
+            r#"{"name": "x", "device": "rram", "array": 7, "chip": null}"#,
+            r#"{"name": "x", "device": "rram", "description": 3}"#,
+            r#"{"name": "x", "device": "pcram", "chip": {"arrays_per_pe": 32}}"#,
+            r#"{}"#,
+            r#"{"name": 5, "device": "rram"}"#,
+            r#"{"name": "x", "device": "memristor-9000"}"#,
+            r#"{"name": "x"}"#,
+            r#"[1, 2]"#,
+            r#"{"name": "x", "device": "rram"} trailing"#,
+        ];
+        for doc in docs {
+            let dom = Json::parse(doc).map_err(anyhow::Error::from).and_then(|j| {
+                HwProfile::from_json(&j)
+            });
+            let streamed = HwProfile::from_slice(doc.as_bytes());
+            match (dom, streamed) {
+                (Ok(a), Ok(b)) => assert_eq!(a, b, "diverged on {doc}"),
+                (Err(_), Err(_)) => {}
+                (a, b) => panic!("acceptance diverged on {doc}: dom={a:?} streamed={b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn from_slice_parses_every_builtin_emission() {
+        for p in [
+            HwProfile::rram_128(),
+            HwProfile::rram_256(),
+            HwProfile::pcram_128(),
+            HwProfile::sram_128(),
+        ] {
+            let text = p.to_json().pretty();
+            let back = HwProfile::from_slice(text.as_bytes())
+                .unwrap_or_else(|e| panic!("{}: {e:#}", p.name));
+            assert_eq!(back, p);
+        }
     }
 
     #[test]

@@ -131,14 +131,14 @@ impl ArraySpec {
     /// Deterministic JSON form.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
-            ("rows", Json::num(self.rows as f64)),
-            ("cols", Json::num(self.cols as f64)),
-            ("weight_bits", Json::num(self.weight_bits as f64)),
-            ("input_bits", Json::num(self.input_bits as f64)),
-            ("col_mux", Json::num(self.col_mux as f64)),
+            ("rows", Json::num(self.rows)),
+            ("cols", Json::num(self.cols)),
+            ("weight_bits", Json::num(self.weight_bits)),
+            ("input_bits", Json::num(self.input_bits)),
+            ("col_mux", Json::num(self.col_mux)),
             ("skip_empty_planes", Json::Bool(self.skip_empty_planes)),
-            ("ber_budget", Json::Num(self.ber_budget)),
-            ("adc_bits_cap", Json::num(self.adc_bits_cap as f64)),
+            ("ber_budget", Json::num(self.ber_budget)),
+            ("adc_bits_cap", Json::num(self.adc_bits_cap)),
         ])
     }
 
@@ -227,13 +227,13 @@ impl ChipSpec {
     /// Deterministic JSON form.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
-            ("arrays_per_pe", Json::num(self.arrays_per_pe as f64)),
-            ("clock_hz", Json::Num(self.clock_hz)),
-            ("feature_packet_bytes", Json::num(self.feature_packet_bytes as f64)),
-            ("psum_packet_bytes", Json::num(self.psum_packet_bytes as f64)),
-            ("link_bytes_per_cycle", Json::num(self.link_bytes_per_cycle as f64)),
-            ("router_latency", Json::num(self.router_latency as f64)),
-            ("pipeline_images", Json::num(self.pipeline_images as f64)),
+            ("arrays_per_pe", Json::num(self.arrays_per_pe)),
+            ("clock_hz", Json::num(self.clock_hz)),
+            ("feature_packet_bytes", Json::num(self.feature_packet_bytes)),
+            ("psum_packet_bytes", Json::num(self.psum_packet_bytes)),
+            ("link_bytes_per_cycle", Json::num(self.link_bytes_per_cycle)),
+            ("router_latency", Json::num(self.router_latency)),
+            ("pipeline_images", Json::num(self.pipeline_images)),
         ])
     }
 

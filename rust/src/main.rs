@@ -162,7 +162,7 @@ fn run(args: &Args) -> cimfab::Result<()> {
             )?;
             report_cache_status(&cfg, &opts.prefix_spec().id(), status);
             println!("== Fig 4: layer density vs cycles per array ==");
-            println!("{}", report::fig4_table(&prep.map, &prep.profile).render());
+            report::print_table(&report::fig4_table(&prep.map, &prep.profile))?;
             // Fig 6: the layers with 9 and 18 blocks (10 & 15 in the paper)
             for (l, g) in prep.map.grids.iter().enumerate() {
                 if g.blocks_per_copy == 9 || g.blocks_per_copy == 18 {
@@ -172,7 +172,7 @@ fn run(args: &Args) -> cimfab::Result<()> {
                         g.name,
                         prep.profile.layer_block_spread(l) * 100.0
                     );
-                    println!("{}", report::fig6_table(&prep.map, &prep.profile, l).render());
+                    report::print_table(&report::fig6_table(&prep.map, &prep.profile, l))?;
                 }
             }
             Ok(())
@@ -265,9 +265,10 @@ fn run(args: &Args) -> cimfab::Result<()> {
             let elapsed = t0.elapsed().as_secs_f64();
             let t = report::fig8_from_outcomes(&outcomes);
             if args.has_flag("csv") {
-                println!("{}", t.to_csv());
+                report::print_csv(&t)?;
             } else {
-                println!("== Fig 8: performance vs design size ==\n{}", t.render());
+                println!("== Fig 8: performance vs design size ==");
+                report::print_table(&t)?;
             }
             println!(
                 "sweep: {} scenarios ({} sizes x {} algorithms) on {} threads in {:.2}s",
@@ -342,8 +343,9 @@ fn run(args: &Args) -> cimfab::Result<()> {
                 .map(|(a, r)| (a.as_str(), r))
                 .collect();
             println!("== Fig 9: array utilization by layer @ {pes} PEs ==");
-            println!("{}", report::fig9_table(&prep.map, &with_zs).render());
-            println!("== headline speedups ==\n{}", report::speedup_summary(&results).render());
+            report::print_table(&report::fig9_table(&prep.map, &with_zs))?;
+            println!("== headline speedups ==");
+            report::print_table(&report::speedup_summary(&results))?;
             Ok(())
         }
         Some("list-strategies") => {
@@ -365,7 +367,7 @@ fn run(args: &Args) -> cimfab::Result<()> {
                     a.describe().to_string(),
                 ]);
             }
-            println!("{}", t.render());
+            report::print_table(&t)?;
             println!("== dataflow models (--dataflow) ==");
             let mut t = Table::new(["name", "plans", "description"]);
             let mut dataflows = reg.dataflows();
@@ -377,13 +379,13 @@ fn run(args: &Args) -> cimfab::Result<()> {
                     d.describe().to_string(),
                 ]);
             }
-            println!("{}", t.render());
+            report::print_table(&t)?;
             println!("== simulation engines (--engine) ==");
             let mut t = Table::new(["name", "description"]);
             for e in cimfab::sim::engine::engines() {
                 t.row([e.name().to_string(), e.describe().to_string()]);
             }
-            println!("{}", t.render());
+            report::print_table(&t)?;
             Ok(())
         }
         Some("list-hw") => {
@@ -415,7 +417,7 @@ fn run(args: &Args) -> cimfab::Result<()> {
                     p.description.clone(),
                 ]);
             }
-            println!("{}", t.render());
+            report::print_table(&t)?;
             println!("== device models (a profile JSON's \"device\" field) ==");
             let mut t = Table::new([
                 "name",
@@ -441,7 +443,7 @@ fn run(args: &Args) -> cimfab::Result<()> {
                     d.describe().to_string(),
                 ]);
             }
-            println!("{}", t.render());
+            report::print_table(&t)?;
             println!(
                 "custom silicon: `--hw path/to/profile.json` (see the README's \
                  \"Hardware profiles\" section for the schema)"
@@ -469,7 +471,7 @@ fn run(args: &Args) -> cimfab::Result<()> {
                 "== energy per inference @ {pes} PEs, {} profile (extension; paper §V) ==",
                 d.hw.name
             );
-            println!("{}", cimfab::energy::energy_table(&rows).render());
+            report::print_table(&cimfab::energy::energy_table(&rows))?;
             Ok(())
         }
         Some("dispatch") => dispatch_demo(args),
@@ -484,7 +486,7 @@ fn run(args: &Args) -> cimfab::Result<()> {
                     fmt_f(cimfab::xbar::adc::Adc::new(bits).relative_area(), 1),
                 ]);
             }
-            println!("{}", t.render());
+            report::print_table(&t)?;
             println!("== derived operating points per device (1e-3 error budget, 128 rows) ==");
             let mut t = Table::new(["device", "variance", "max rows", "ADC bits", "err @derived"]);
             for d in cimfab::hw::ProfileRegistry::snapshot().devices() {
@@ -498,7 +500,7 @@ fn run(args: &Args) -> cimfab::Result<()> {
                         .unwrap_or_else(|| "-".into()),
                 ]);
             }
-            println!("{}", t.render());
+            report::print_table(&t)?;
             Ok(())
         }
         _ => {
@@ -582,7 +584,7 @@ fn dispatch_demo(args: &Args) -> cimfab::Result<()> {
     for (i, (&n, &b)) in r.per_worker.iter().zip(&r.busy_cycles).enumerate() {
         t.row([i.to_string(), n.to_string(), b.to_string()]);
     }
-    println!("{}", t.render());
+    report::print_table(&t)?;
     anyhow::ensure!(r.verified, "dispatch output failed verification");
     Ok(())
 }

@@ -1,9 +1,10 @@
 //! Per-stage JSON artifacts.
 //!
 //! Every stage's output condenses to a deterministic [`Json`] document
-//! (objects are `BTreeMap`-ordered, floats print shortest-roundtrip), so
-//! the same scenario + seed always dumps byte-identical files — the
-//! property the pipeline determinism tests pin down.
+//! (objects are `BTreeMap`-ordered, integers are exact across the full
+//! 64-bit range, floats print shortest-roundtrip), so the same scenario
+//! + seed always dumps byte-identical files — the property the pipeline
+//! determinism tests pin down.
 
 use crate::dnn::Graph;
 use crate::mapping::{AllocationPlan, NetworkMap, Placement};
@@ -13,11 +14,11 @@ use crate::tensor::Tensor;
 use crate::util::json::Json;
 
 fn num_arr<'a, I: IntoIterator<Item = &'a f64>>(xs: I) -> Json {
-    Json::arr(xs.into_iter().map(|&x| Json::Num(x)))
+    Json::arr(xs.into_iter().map(|&x| Json::num(x)))
 }
 
 fn usize_arr<'a, I: IntoIterator<Item = &'a usize>>(xs: I) -> Json {
-    Json::arr(xs.into_iter().map(|&x| Json::num(x as f64)))
+    Json::arr(xs.into_iter().map(|&x| Json::num(x)))
 }
 
 /// Stage `BuildGraph`: the validated network graph.
@@ -25,8 +26,8 @@ pub fn graph_json(g: &Graph) -> Json {
     Json::obj(vec![
         ("name", Json::str(&g.name)),
         ("input_shape", usize_arr(&g.input_shape)),
-        ("total_macs", Json::num(g.total_macs() as f64)),
-        ("total_weights", Json::num(g.total_weights() as f64)),
+        ("total_macs", Json::num(g.total_macs())),
+        ("total_weights", Json::num(g.total_weights())),
         (
             "layers",
             Json::arr(g.layers.iter().map(|l| {
@@ -35,7 +36,7 @@ pub fn graph_json(g: &Graph) -> Json {
                     ("op", Json::str(&format!("{:?}", l.op))),
                     ("in_shape", usize_arr(&l.in_shape)),
                     ("out_shape", usize_arr(&l.out_shape)),
-                    ("macs", Json::num(l.macs() as f64)),
+                    ("macs", Json::num(l.macs())),
                 ])
             })),
         ),
@@ -48,22 +49,22 @@ pub fn map_json(m: &NetworkMap) -> Json {
         ("net", Json::str(&m.net_name)),
         ("include_linear", Json::Bool(m.include_linear)),
         ("array", m.array.to_json()),
-        ("total_blocks", Json::num(m.total_blocks() as f64)),
-        ("min_arrays", Json::num(m.min_arrays() as f64)),
+        ("total_blocks", Json::num(m.total_blocks())),
+        ("min_arrays", Json::num(m.min_arrays())),
         (
             "grids",
             Json::arr(m.grids.iter().map(|g| {
                 Json::obj(vec![
                     ("name", Json::str(&g.name)),
-                    ("graph_idx", Json::num(g.graph_idx as f64)),
-                    ("matrix_rows", Json::num(g.matrix_rows as f64)),
-                    ("matrix_cols", Json::num(g.matrix_cols as f64)),
-                    ("rows_per_block", Json::num(g.rows_per_block as f64)),
-                    ("blocks_per_copy", Json::num(g.blocks_per_copy as f64)),
-                    ("arrays_per_block", Json::num(g.arrays_per_block as f64)),
+                    ("graph_idx", Json::num(g.graph_idx)),
+                    ("matrix_rows", Json::num(g.matrix_rows)),
+                    ("matrix_cols", Json::num(g.matrix_cols)),
+                    ("rows_per_block", Json::num(g.rows_per_block)),
+                    ("blocks_per_copy", Json::num(g.blocks_per_copy)),
+                    ("arrays_per_block", Json::num(g.arrays_per_block)),
                     ("diagonal", Json::Bool(g.diagonal)),
-                    ("positions", Json::num(g.positions as f64)),
-                    ("macs", Json::num(g.macs as f64)),
+                    ("positions", Json::num(g.positions)),
+                    ("macs", Json::num(g.macs)),
                 ])
             })),
         ),
@@ -85,12 +86,12 @@ pub fn stats_json(map: &NetworkMap, acts: &[Vec<Tensor<u8>>]) -> Json {
             ("shape", usize_arr(acts.first().map(|img| img[l].shape()).unwrap_or(&[]))),
             (
                 "nonzero_frac",
-                Json::Num(if total == 0 { 0.0 } else { nonzero as f64 / total as f64 }),
+                Json::num(if total == 0 { 0.0 } else { nonzero as f64 / total as f64 }),
             ),
         ])
     });
     Json::obj(vec![
-        ("images", Json::num(acts.len() as f64)),
+        ("images", Json::num(acts.len())),
         ("layers", Json::arr(layers)),
     ])
 }
@@ -100,7 +101,7 @@ pub fn stats_json(map: &NetworkMap, acts: &[Vec<Tensor<u8>>]) -> Json {
 pub fn trace_json(map: &NetworkMap, t: &NetTrace) -> Json {
     if t.images.is_empty() {
         return Json::obj(vec![
-            ("images", Json::num(0.0)),
+            ("images", Json::num(0)),
             ("layers", Json::Arr(vec![])),
         ]);
     }
@@ -114,17 +115,17 @@ pub fn trace_json(map: &NetworkMap, t: &NetTrace) -> Json {
             .collect();
         Json::obj(vec![
             ("name", Json::str(&g.name)),
-            ("positions", Json::num(first.positions as f64)),
-            ("blocks", Json::num(first.blocks as f64)),
+            ("positions", Json::num(first.positions)),
+            ("blocks", Json::num(first.blocks)),
             (
                 "baseline",
-                Json::arr(first.baseline.iter().map(|&c| Json::num(c as f64))),
+                Json::arr(first.baseline.iter().map(|&c| Json::num(c))),
             ),
             ("mean_zs", num_arr(&mean_zs)),
         ])
     });
     Json::obj(vec![
-        ("images", Json::num(t.images.len() as f64)),
+        ("images", Json::num(t.images.len())),
         ("layers", Json::arr(layers)),
     ])
 }
@@ -140,7 +141,7 @@ pub fn profile_json(p: &NetworkProfile) -> Json {
         ("layer_mean_block_cycles", num_arr(&p.layer_mean_block_cycles)),
         (
             "layer_macs",
-            Json::arr(p.layer_macs.iter().map(|&m| Json::num(m as f64))),
+            Json::arr(p.layer_macs.iter().map(|&m| Json::num(m))),
         ),
     ])
 }
@@ -149,7 +150,7 @@ pub fn profile_json(p: &NetworkProfile) -> Json {
 pub fn plan_json(plan: &AllocationPlan, map: &NetworkMap) -> Json {
     Json::obj(vec![
         ("algorithm", Json::str(&plan.algorithm)),
-        ("arrays_used", Json::num(plan.arrays_used(map) as f64)),
+        ("arrays_used", Json::num(plan.arrays_used(map))),
         (
             "duplicates",
             Json::arr(plan.duplicates.iter().map(|d| usize_arr(d))),
@@ -173,20 +174,20 @@ pub fn placement_json(p: &Placement) -> Json {
 /// Stage `Simulate`: the full simulation result.
 pub fn sim_result_json(r: &SimResult) -> Json {
     Json::obj(vec![
-        ("makespan", Json::num(r.makespan as f64)),
-        ("images", Json::num(r.images as f64)),
-        ("throughput_ips", Json::Num(r.throughput_ips)),
-        ("chip_util", Json::Num(r.chip_util)),
+        ("makespan", Json::num(r.makespan)),
+        ("images", Json::num(r.images)),
+        ("throughput_ips", Json::num(r.throughput_ips)),
+        ("chip_util", Json::num(r.chip_util)),
         ("stage_cycles", num_arr(&r.stage_cycles)),
         ("layer_util", num_arr(&r.layer_util)),
         ("block_util", Json::arr(r.block_util.iter().map(|b| num_arr(b)))),
         (
             "noc",
             Json::obj(vec![
-                ("packets", Json::num(r.noc.packets as f64)),
-                ("byte_hops", Json::num(r.noc.byte_hops as f64)),
-                ("mean_link_utilization", Json::Num(r.noc.mean_link_utilization)),
-                ("peak_link_utilization", Json::Num(r.noc.peak_link_utilization)),
+                ("packets", Json::num(r.noc.packets)),
+                ("byte_hops", Json::num(r.noc.byte_hops)),
+                ("mean_link_utilization", Json::num(r.noc.mean_link_utilization)),
+                ("peak_link_utilization", Json::num(r.noc.peak_link_utilization)),
             ]),
         ),
     ])

@@ -7,46 +7,57 @@
 //! prefix by a **content hash** of everything the stages read:
 //!
 //! * a stage-code version ([`CODE_VERSION`] — bump it whenever a prefix
-//!   stage's observable output changes),
+//!   stage's observable output or the entry format changes),
 //! * the spec id (network, resolution, stats source, profiling images,
 //!   seed — see [`PrefixSpec::id`]),
 //! * the **resolved** hardware-profile JSON, so editing a custom
 //!   profile file on disk invalidates entries keyed through its path.
 //!
-//! The cached value is the stages' existing deterministic JSON
-//! artifacts (re-dumped verbatim on a hit, so `--dump-dir` trees from
-//! warm runs are byte-identical to cold ones) plus the full-fidelity
-//! trace needed to reconstruct a [`Prepared`] prefix; the graph, map,
-//! and profile are cheap and rebuilt/recomputed on load. Entries that
-//! fail to parse or validate are treated as misses and overwritten.
-//! Golden (PJRT) prefixes read artifact files whose content the key
-//! cannot see, so they are never cached
-//! ([`super::CacheStatus::Uncacheable`]).
+//! An entry is a single compact JSON file, read and written through the
+//! streaming layer ([`crate::util::json_stream`]) so a hit never
+//! materializes a DOM tree. Fields appear in validation order —
+//! `version`, `key`, `prefix`, `net_trace`, `artifacts` — so a stale or
+//! foreign entry is rejected before the expensive trace payload is even
+//! scanned. The five prefix-stage dump files are embedded verbatim as
+//! JSON strings (exact bytes, trailing newline included), so a hit
+//! copies them straight back to a `--dump-dir` tree, byte-identical to
+//! a cold run, without re-rendering. The trace is stored full-fidelity
+//! and decoded directly into [`NetTrace`] vectors; the graph, map, and
+//! profile are cheap and rebuilt/recomputed on load. Entries that fail
+//! to parse or validate — including truncation at any byte offset — are
+//! treated as misses and overwritten. Golden (PJRT) prefixes read
+//! artifact files whose content the key cannot see, so they are never
+//! cached ([`super::CacheStatus::Uncacheable`]).
 
 use super::scenario::PrefixSpec;
 use super::stage::Stage;
 use super::{artifact, Prepared};
 use crate::stats::{ImageTrace, LayerTrace, NetTrace};
 use crate::util::json::Json;
+use crate::util::json_stream::{Event, JsonReader, JsonWriter};
 use anyhow::Result;
+use std::io::Write;
 use std::path::{Path, PathBuf};
 
-/// Bump when any prefix stage's observable output changes, so stale
-/// cache entries from older code can never be replayed.
-pub const CODE_VERSION: u64 = 1;
+/// Bump when any prefix stage's observable output — or the cache entry
+/// format itself — changes, so stale entries from older code can never
+/// be replayed. v2: streaming entry layout (artifacts as verbatim dump
+/// strings, validation-ordered fields).
+pub const CODE_VERSION: u64 = 2;
 
 /// A directory of cached prepared prefixes.
 pub struct PrefixCache {
     dir: PathBuf,
 }
 
-/// A cache hit: the reconstructed prefix plus the stored stage
-/// artifacts (in stage order, for verbatim re-dumping).
-pub(crate) struct CachedPrefix {
+/// A cache hit: the reconstructed prefix plus the stored stage dump
+/// files (in stage order, exact bytes, for verbatim re-dumping).
+pub struct CachedPrefix {
     /// The reconstructed prepared prefix.
     pub prepared: Prepared,
-    /// The five prefix-stage artifacts exactly as first computed.
-    pub artifacts: Vec<(Stage, Json)>,
+    /// The five prefix-stage dump files exactly as first written
+    /// (empty unless the load asked for them).
+    pub artifacts: Vec<(Stage, String)>,
 }
 
 impl PrefixCache {
@@ -68,36 +79,61 @@ impl PrefixCache {
         self.dir.join(format!("{}-{key}.json", spec.id()))
     }
 
-    /// Load and validate an entry; any mismatch or corruption is a miss.
-    pub(crate) fn load(&self, spec: &PrefixSpec, key: &str) -> Option<CachedPrefix> {
-        let text = std::fs::read_to_string(self.entry_path(spec, key)).ok()?;
-        let doc = Json::parse(&text).ok()?;
-        if doc.get("version").as_f64() != Some(CODE_VERSION as f64)
-            || doc.get("key").as_str() != Some(key)
-            || doc.get("prefix") != &canonical_prefix_json(spec)
-        {
+    /// Load and validate an entry in one streaming pass; any mismatch,
+    /// corruption, or truncation is a miss. `with_artifacts` asks for
+    /// the stored stage dump texts (skip them when nothing will be
+    /// re-dumped).
+    pub fn load(&self, spec: &PrefixSpec, key: &str, with_artifacts: bool) -> Option<CachedPrefix> {
+        let bytes = std::fs::read(self.entry_path(spec, key)).ok()?;
+        let mut r = JsonReader::new(&bytes);
+        begin_obj(&mut r)?;
+        expect_key(&mut r, "version")?;
+        if num_u64(&mut r)? != CODE_VERSION {
+            return None;
+        }
+        expect_key(&mut r, "key")?;
+        match next_ev(&mut r)? {
+            Event::Str(s) if s == key => {}
+            _ => return None,
+        }
+        expect_key(&mut r, "prefix")?;
+        if r.raw_value().ok()? != canonical_prefix_json(spec).compact().as_bytes() {
             return None;
         }
         // Rebuild the cheap prefix pieces from the spec; reconstruct the
-        // expensive trace from the stored full-fidelity payload.
+        // expensive trace by streaming the stored full-fidelity payload.
         let hw = crate::hw::ProfileRegistry::resolve(&spec.hw_profile).ok()?;
         let array = hw.array_cfg().ok()?;
         let graph = super::build_graph(&spec.net, spec.hw).ok()?;
         let map = crate::mapping::map_network(&graph, array, false);
-        let trace = net_trace_from_json(doc.get("net_trace"), &map)?;
+        expect_key(&mut r, "net_trace")?;
+        let trace = read_net_trace(&mut r, &map)?;
         if trace.images.len() != spec.profile_images {
             return None;
         }
-        let profile = crate::stats::NetworkProfile::from_trace(&map, &trace);
-        let stored = doc.get("artifacts");
-        let mut artifacts = Vec::with_capacity(5);
+        expect_key(&mut r, "artifacts")?;
+        begin_obj(&mut r)?;
+        let mut artifacts = Vec::with_capacity(if with_artifacts { 5 } else { 0 });
         for stage in [Stage::BuildGraph, Stage::Map, Stage::Stats, Stage::Trace, Stage::Profile] {
-            let a = stored.get(stage.name());
-            if a == &Json::Null {
-                return None;
+            match next_ev(&mut r)? {
+                Event::Key(k) if k == stage.name() => {}
+                _ => return None,
             }
-            artifacts.push((stage, a.clone()));
+            match next_ev(&mut r)? {
+                Event::Str(text) => {
+                    if with_artifacts {
+                        artifacts.push((stage, text.into_owned()));
+                    }
+                }
+                _ => return None,
+            }
         }
+        end_obj(&mut r)?;
+        end_obj(&mut r)?;
+        if r.next().ok()?.is_some() {
+            return None;
+        }
+        let profile = crate::stats::NetworkProfile::from_trace(&map, &trace);
         let prepared = Prepared { spec: spec.clone(), hw, graph, map, trace, profile };
         Some(CachedPrefix { prepared, artifacts })
     }
@@ -105,35 +141,121 @@ impl PrefixCache {
     /// Store a freshly prepared prefix (atomically: a uniquely-named
     /// temp file + rename, so concurrent writers — even of the same
     /// entry — can never leave a torn entry or race on one temp path).
-    /// Callers treat failure as non-fatal: the cache is best-effort and
-    /// a full disk or lost race must not fail a computed prefix.
+    /// The entry streams to disk; no intermediate document string is
+    /// built. Callers treat failure as non-fatal: the cache is
+    /// best-effort and a full disk or lost race must not fail a
+    /// computed prefix.
     pub(crate) fn store(&self, prep: &Prepared, stats_artifact: &Json, key: &str) -> Result<()> {
-        let doc = Json::obj(vec![
-            ("version", Json::num(CODE_VERSION as f64)),
-            ("key", Json::str(key)),
-            ("prefix", canonical_prefix_json(&prep.spec)),
-            (
-                "artifacts",
-                Json::obj(vec![
-                    (Stage::BuildGraph.name(), artifact::graph_json(&prep.graph)),
-                    (Stage::Map.name(), artifact::map_json(&prep.map)),
-                    (Stage::Stats.name(), stats_artifact.clone()),
-                    (Stage::Trace.name(), artifact::trace_json(&prep.map, &prep.trace)),
-                    (Stage::Profile.name(), artifact::profile_json(&prep.profile)),
-                ]),
-            ),
-            ("net_trace", net_trace_to_json(&prep.trace)),
-        ]);
-        let mut text = doc.pretty();
-        text.push('\n');
         let path = self.entry_path(&prep.spec, key);
         static WRITER: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
         let unique = WRITER.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let tmp = path.with_extension(format!("tmp.{}.{unique}", std::process::id()));
-        std::fs::write(&tmp, text)?;
+        {
+            let file = std::fs::File::create(&tmp)?;
+            let mut w = JsonWriter::compact(std::io::BufWriter::new(file));
+            w.begin_obj()?;
+            w.key("version")?;
+            w.num_value(CODE_VERSION)?;
+            w.key("key")?;
+            w.str_value(key)?;
+            w.key("prefix")?;
+            w.value(&canonical_prefix_json(&prep.spec))?;
+            w.key("net_trace")?;
+            write_net_trace(&mut w, &prep.trace)?;
+            w.key("artifacts")?;
+            w.begin_obj()?;
+            let graph_j = artifact::graph_json(&prep.graph);
+            let map_j = artifact::map_json(&prep.map);
+            let trace_j = artifact::trace_json(&prep.map, &prep.trace);
+            let profile_j = artifact::profile_json(&prep.profile);
+            for (stage, j) in [
+                (Stage::BuildGraph, &graph_j),
+                (Stage::Map, &map_j),
+                (Stage::Stats, stats_artifact),
+                (Stage::Trace, &trace_j),
+                (Stage::Profile, &profile_j),
+            ] {
+                w.key(stage.name())?;
+                // the exact dump file bytes, trailing newline included
+                let mut text = j.pretty();
+                text.push('\n');
+                w.str_value(&text)?;
+            }
+            w.end_obj()?;
+            w.end_obj()?;
+            let mut out = w.finish()?;
+            out.write_all(b"\n")?;
+            out.flush()?;
+        }
         std::fs::rename(&tmp, &path)?;
         Ok(())
     }
+}
+
+// ---- streaming entry helpers ----------------------------------------------
+// All return Option: any structural surprise in an entry is a miss.
+
+fn next_ev<'a>(r: &mut JsonReader<'a>) -> Option<Event<'a>> {
+    r.next().ok()?
+}
+
+fn begin_obj(r: &mut JsonReader<'_>) -> Option<()> {
+    matches!(next_ev(r)?, Event::BeginObject).then_some(())
+}
+
+fn end_obj(r: &mut JsonReader<'_>) -> Option<()> {
+    matches!(next_ev(r)?, Event::EndObject).then_some(())
+}
+
+fn begin_arr(r: &mut JsonReader<'_>) -> Option<()> {
+    matches!(next_ev(r)?, Event::BeginArray).then_some(())
+}
+
+fn expect_key(r: &mut JsonReader<'_>, name: &str) -> Option<()> {
+    match next_ev(r)? {
+        Event::Key(k) if k == name => Some(()),
+        _ => None,
+    }
+}
+
+fn num_u64(r: &mut JsonReader<'_>) -> Option<u64> {
+    match next_ev(r)? {
+        Event::Num(n) => n.as_u64(),
+        _ => None,
+    }
+}
+
+fn num_usize(r: &mut JsonReader<'_>) -> Option<usize> {
+    match next_ev(r)? {
+        Event::Num(n) => n.as_usize(),
+        _ => None,
+    }
+}
+
+fn read_u32_arr(r: &mut JsonReader<'_>, want_len: usize) -> Option<Vec<u32>> {
+    begin_arr(r)?;
+    let mut out = Vec::with_capacity(want_len);
+    loop {
+        match next_ev(r)? {
+            Event::EndArray => break,
+            Event::Num(n) => out.push(u32::try_from(n.as_u64()?).ok()?),
+            _ => return None,
+        }
+    }
+    (out.len() == want_len).then_some(out)
+}
+
+fn read_u64_arr(r: &mut JsonReader<'_>, want_len: usize) -> Option<Vec<u64>> {
+    begin_arr(r)?;
+    let mut out = Vec::with_capacity(want_len);
+    loop {
+        match next_ev(r)? {
+            Event::EndArray => break,
+            Event::Num(n) => out.push(n.as_u64()?),
+            _ => return None,
+        }
+    }
+    (out.len() == want_len).then_some(out)
 }
 
 /// The spec JSON stored in (and compared against) cache entries.
@@ -168,20 +290,124 @@ fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
-/// Full-fidelity trace serialization (cache-internal: unlike the trace
-/// *stage artifact*, this keeps every per-(patch, block) duration).
-fn net_trace_to_json(t: &NetTrace) -> Json {
-    let u32_arr = |xs: &[u32]| Json::arr(xs.iter().map(|&x| Json::num(x as f64)));
-    let u64_arr = |xs: &[u64]| Json::arr(xs.iter().map(|&x| Json::num(x as f64)));
+/// Stream the full-fidelity trace into an open entry (cache-internal:
+/// unlike the trace *stage artifact*, this keeps every per-(patch,
+/// block) duration). Keys are emitted in the DOM's sorted order, so the
+/// output is byte-identical to `net_trace_to_json(t).compact()` (pinned
+/// by a test below); [`read_net_trace`] expects exactly this layout.
+fn write_net_trace<W: Write>(w: &mut JsonWriter<W>, t: &NetTrace) -> std::io::Result<()> {
+    w.begin_obj()?;
+    w.key("images")?;
+    w.begin_arr()?;
+    for img in &t.images {
+        w.begin_arr()?;
+        for lt in &img.layers {
+            w.begin_obj()?;
+            w.key("baseline")?;
+            w.begin_arr()?;
+            for &x in &lt.baseline {
+                w.num_value(x)?;
+            }
+            w.end_arr()?;
+            w.key("block_bits")?;
+            w.begin_arr()?;
+            for &x in &lt.block_bits {
+                w.num_value(x)?;
+            }
+            w.end_arr()?;
+            w.key("block_ones")?;
+            w.begin_arr()?;
+            for &x in &lt.block_ones {
+                w.num_value(x)?;
+            }
+            w.end_arr()?;
+            w.key("blocks")?;
+            w.num_value(lt.blocks)?;
+            w.key("positions")?;
+            w.num_value(lt.positions)?;
+            w.key("zs")?;
+            w.begin_arr()?;
+            for &x in &lt.zs {
+                w.num_value(x)?;
+            }
+            w.end_arr()?;
+            w.end_obj()?;
+        }
+        w.end_arr()?;
+    }
+    w.end_arr()?;
+    w.key("layers_meta")?;
+    w.num_value(t.layers_meta)?;
+    w.end_obj()
+}
+
+/// Stream-decode + validate a stored trace against the freshly rebuilt
+/// map; `None` on any inconsistency (treated as a cache miss). Applies
+/// the same checks as [`net_trace_from_json`] — every expected length
+/// comes from the map, so validation happens as the arrays decode —
+/// without ever building a `Json` tree.
+fn read_net_trace(r: &mut JsonReader<'_>, map: &crate::mapping::NetworkMap) -> Option<NetTrace> {
+    begin_obj(r)?;
+    expect_key(r, "images")?;
+    begin_arr(r)?;
+    let mut images = Vec::new();
+    loop {
+        match next_ev(r)? {
+            Event::EndArray => break,
+            Event::BeginArray => {}
+            _ => return None,
+        }
+        let mut layers = Vec::with_capacity(map.grids.len());
+        for g in &map.grids {
+            let blocks = g.blocks_per_copy;
+            begin_obj(r)?;
+            expect_key(r, "baseline")?;
+            let baseline = read_u32_arr(r, blocks)?;
+            expect_key(r, "block_bits")?;
+            let block_bits = read_u64_arr(r, blocks)?;
+            expect_key(r, "block_ones")?;
+            let block_ones = read_u64_arr(r, blocks)?;
+            expect_key(r, "blocks")?;
+            if num_usize(r)? != blocks {
+                return None;
+            }
+            expect_key(r, "positions")?;
+            let positions = num_usize(r)?;
+            if positions != g.positions {
+                return None;
+            }
+            expect_key(r, "zs")?;
+            let zs = read_u32_arr(r, positions * blocks)?;
+            end_obj(r)?;
+            layers.push(LayerTrace { positions, blocks, zs, baseline, block_ones, block_bits });
+        }
+        // each image must carry exactly one entry per mapped layer
+        matches!(next_ev(r)?, Event::EndArray).then_some(())?;
+        images.push(ImageTrace { layers });
+    }
+    expect_key(r, "layers_meta")?;
+    if num_usize(r)? != map.grids.len() {
+        return None;
+    }
+    end_obj(r)?;
+    Some(NetTrace { layers_meta: map.grids.len(), images })
+}
+
+/// Full-fidelity trace serialization through the DOM (kept as the
+/// reference implementation and the bench baseline for the streaming
+/// fast path; [`write_net_trace`] is the byte-compatible hot path).
+pub fn net_trace_to_json(t: &NetTrace) -> Json {
+    let u32_arr = |xs: &[u32]| Json::arr(xs.iter().map(|&x| Json::num(x)));
+    let u64_arr = |xs: &[u64]| Json::arr(xs.iter().map(|&x| Json::num(x)));
     Json::obj(vec![
-        ("layers_meta", Json::num(t.layers_meta as f64)),
+        ("layers_meta", Json::num(t.layers_meta)),
         (
             "images",
             Json::arr(t.images.iter().map(|img| {
                 Json::arr(img.layers.iter().map(|lt| {
                     Json::obj(vec![
-                        ("positions", Json::num(lt.positions as f64)),
-                        ("blocks", Json::num(lt.blocks as f64)),
+                        ("positions", Json::num(lt.positions)),
+                        ("blocks", Json::num(lt.blocks)),
                         ("zs", u32_arr(&lt.zs)),
                         ("baseline", u32_arr(&lt.baseline)),
                         ("block_ones", u64_arr(&lt.block_ones)),
@@ -193,9 +419,10 @@ fn net_trace_to_json(t: &NetTrace) -> Json {
     ])
 }
 
-/// Parse + validate a stored trace against the freshly rebuilt map;
-/// `None` on any inconsistency (treated as a cache miss).
-fn net_trace_from_json(j: &Json, map: &crate::mapping::NetworkMap) -> Option<NetTrace> {
+/// Parse + validate a DOM-form trace against the freshly rebuilt map;
+/// `None` on any inconsistency. Reference twin of [`read_net_trace`]
+/// (and the DOM baseline in `benches/json_stream.rs`).
+pub fn net_trace_from_json(j: &Json, map: &crate::mapping::NetworkMap) -> Option<NetTrace> {
     let layers_meta = j.get("layers_meta").as_usize()?;
     if layers_meta != map.grids.len() {
         return None;
@@ -239,7 +466,7 @@ fn u32_vec(j: &Json) -> Option<Vec<u32>> {
 }
 
 fn u64_vec(j: &Json) -> Option<Vec<u64>> {
-    j.as_arr()?.iter().map(|x| x.as_usize().map(|v| v as u64)).collect()
+    j.as_arr()?.iter().map(|x| x.as_u64()).collect()
 }
 
 #[cfg(test)]
@@ -279,6 +506,23 @@ mod tests {
     }
 
     #[test]
+    fn streamed_trace_matches_the_dom_encoding() {
+        let prep = pipeline::prepare(&spec(3), None).unwrap();
+        // the streamed compact bytes are exactly the DOM compact bytes
+        let mut w = JsonWriter::compact(Vec::new());
+        write_net_trace(&mut w, &prep.trace).unwrap();
+        let bytes = w.finish().unwrap();
+        assert_eq!(
+            String::from_utf8(bytes.clone()).unwrap(),
+            net_trace_to_json(&prep.trace).compact()
+        );
+        // and the streaming decoder reconstructs the identical trace
+        let mut r = JsonReader::new(&bytes);
+        let back = read_net_trace(&mut r, &prep.map).unwrap();
+        assert_eq!(back, prep.trace);
+    }
+
+    #[test]
     fn mismatched_map_rejects_a_stored_trace() {
         let prep = pipeline::prepare(&spec(4), None).unwrap();
         let j = net_trace_to_json(&prep.trace);
@@ -286,5 +530,10 @@ mod tests {
         let g = crate::dnn::vgg11(32, 10);
         let other = crate::mapping::map_network(&g, prep.map.array, false);
         assert!(net_trace_from_json(&j, &other).is_none());
+        let mut w = JsonWriter::compact(Vec::new());
+        write_net_trace(&mut w, &prep.trace).unwrap();
+        let bytes = w.finish().unwrap();
+        let mut r = JsonReader::new(&bytes);
+        assert!(read_net_trace(&mut r, &other).is_none());
     }
 }

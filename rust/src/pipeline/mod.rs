@@ -20,8 +20,9 @@
 //! once per distinct prefix and shares across all scenarios — in
 //! parallel worker threads — instead of recomputing it per point.
 //!
-//! Each stage can dump its artifact as deterministic JSON (via
-//! [`crate::util::json`]) into a `--dump-dir` tree:
+//! Each stage can dump its artifact as deterministic JSON (trees built
+//! with [`crate::util::json`], streamed to disk through
+//! [`crate::util::json_stream`]) into a `--dump-dir` tree:
 //!
 //! ```text
 //! dump-dir/<prefix-id>/00_build_graph.json … 04_profile.json
@@ -126,12 +127,12 @@ impl ScenarioOutcome {
     pub fn report_json(&self) -> Json {
         Json::obj(vec![
             ("scenario", self.scenario.to_json()),
-            ("throughput_ips", Json::Num(self.result.throughput_ips)),
-            ("chip_util", Json::Num(self.result.chip_util)),
-            ("makespan", Json::num(self.result.makespan as f64)),
+            ("throughput_ips", Json::num(self.result.throughput_ips)),
+            ("chip_util", Json::num(self.result.chip_util)),
+            ("makespan", Json::num(self.result.makespan)),
             (
                 "peak_link_utilization",
-                Json::Num(self.result.noc.peak_link_utilization),
+                Json::num(self.result.noc.peak_link_utilization),
             ),
         ])
     }
@@ -150,12 +151,23 @@ impl Dumper {
         Ok(Dumper { root })
     }
 
-    /// Write one stage artifact under `sub/` (created on demand).
+    /// Write one stage artifact under `sub/` (created on demand). The
+    /// JSON streams to the file incrementally (see
+    /// [`crate::util::json_stream::write_json_file`]); the bytes are
+    /// identical to the old `pretty()`-then-write path.
     pub fn dump(&self, sub: &str, stage: Stage, json: &Json) -> Result<()> {
         let dir = self.root.join(sub);
         std::fs::create_dir_all(&dir)?;
-        let mut text = json.pretty();
-        text.push('\n');
+        crate::util::json_stream::write_json_file(&dir.join(stage.dump_file()), json)?;
+        Ok(())
+    }
+
+    /// Write one stage artifact from its exact file bytes (cache-hit
+    /// replay: the cache stores dump files verbatim, so a hit copies
+    /// them back without re-rendering any JSON).
+    pub fn dump_text(&self, sub: &str, stage: Stage, text: &str) -> Result<()> {
+        let dir = self.root.join(sub);
+        std::fs::create_dir_all(&dir)?;
         std::fs::write(dir.join(stage.dump_file()), text)?;
         Ok(())
     }
@@ -256,11 +268,11 @@ pub fn prepare_cached_threads(
         return Ok((prepare_full(spec, dump, false, threads)?.0, CacheStatus::Uncacheable));
     }
     let key = cache::key(spec)?;
-    if let Some(hit) = cache.load(spec, &key) {
+    if let Some(hit) = cache.load(spec, &key, dump.is_some()) {
         if let Some(d) = dump {
             let sub = spec.id();
-            for (stage, json) in &hit.artifacts {
-                d.dump(&sub, *stage, json)?;
+            for (stage, text) in &hit.artifacts {
+                d.dump_text(&sub, *stage, text)?;
             }
         }
         return Ok((hit.prepared, CacheStatus::Hit));

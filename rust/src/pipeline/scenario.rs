@@ -102,11 +102,11 @@ impl PrefixSpec {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("net", Json::str(&self.net)),
-            ("hw", Json::num(self.hw as f64)),
+            ("hw", Json::num(self.hw)),
             ("hw_profile", Json::str(&self.hw_profile)),
             ("stats", Json::str(self.stats.name())),
-            ("profile_images", Json::num(self.profile_images as f64)),
-            ("seed", Json::num(self.seed as f64)),
+            ("profile_images", Json::num(self.profile_images)),
+            ("seed", Json::num(self.seed)),
             ("artifacts_dir", Json::str(&self.artifacts_dir)),
         ])
     }
@@ -178,8 +178,8 @@ impl Scenario {
             ("alloc", Json::str(&self.alloc)),
             ("dataflow", Json::str(&self.dataflow)),
             ("engine", Json::str(&self.engine)),
-            ("pes", Json::num(self.pes as f64)),
-            ("sim_images", Json::num(self.sim_images as f64)),
+            ("pes", Json::num(self.pes)),
+            ("sim_images", Json::num(self.sim_images)),
         ])
     }
 }

@@ -11,6 +11,26 @@ use crate::mapping::NetworkMap;
 use crate::sim::SimResult;
 use crate::stats::NetworkProfile;
 use crate::util::table::{fmt_f, Table};
+use std::io::{self, Write};
+
+/// Stream a table to stdout row by row (locked once), followed by the
+/// blank separator line the historical `println!("{}", t.render())`
+/// emitted — same bytes, no whole-table string.
+pub fn print_table(t: &Table) -> io::Result<()> {
+    let stdout = io::stdout();
+    let mut out = stdout.lock();
+    t.write_to(&mut out)?;
+    out.write_all(b"\n")
+}
+
+/// Stream a table's CSV form to stdout (same bytes as the historical
+/// `println!("{}", t.to_csv())`).
+pub fn print_csv(t: &Table) -> io::Result<()> {
+    let stdout = io::stdout();
+    let mut out = stdout.lock();
+    t.write_csv_to(&mut out)?;
+    out.write_all(b"\n")
+}
 
 /// Fig 4: per-layer mean '% of 1s' vs mean cycles per array.
 pub fn fig4_table(map: &NetworkMap, prof: &NetworkProfile) -> Table {

@@ -143,15 +143,16 @@ pub fn write_bench_json(
     let speedup = baseline_ms / optimized_ms.max(1e-12);
     let mut pairs = vec![
         ("name", Json::str(name)),
-        ("baseline_ms", Json::Num(baseline_ms)),
-        ("optimized_ms", Json::Num(optimized_ms)),
-        ("speedup", Json::Num(speedup)),
+        ("baseline_ms", Json::num(baseline_ms)),
+        ("optimized_ms", Json::num(optimized_ms)),
+        ("speedup", Json::num(speedup)),
     ];
     pairs.extend(extra);
-    let mut text = Json::obj(pairs).pretty();
-    text.push('\n');
     let path = bench_json_path(name);
-    std::fs::write(&path, text).expect("write bench artifact");
+    // stream straight to the file; byte-identical to the old
+    // `fs::write(path, obj.pretty() + "\n")`
+    crate::util::json_stream::write_json_file(&path, &Json::obj(pairs))
+        .expect("write bench artifact");
     println!("wrote {}", path.display());
     speedup
 }

@@ -2,11 +2,179 @@
 //!
 //! Supports the full JSON grammar needed by the artifact manifest, chip
 //! configuration files, and report emission: objects, arrays, strings
-//! with escapes, numbers, booleans, null. Numbers are stored as `f64`
-//! (adequate: nothing in the configs exceeds 2^53).
+//! with escapes, numbers, booleans, null. Numbers are stored as a
+//! [`Number`] that preserves integers exactly across the full `u64`/
+//! `i64` range (cache keys and MAC counters exceed 2^53, where `f64`
+//! starts dropping bits), falling back to `f64` for fractional or
+//! out-of-range values.
+//!
+//! This is the DOM half of the JSON layer: convenient tree construction
+//! for cold paths and tests. The hot artifact/cache paths use the
+//! event-based [`crate::util::json_stream`] reader/writer, which is
+//! pinned byte-identical to [`Json::pretty`]/[`Json::compact`] output.
 
 use std::collections::BTreeMap;
 use std::fmt;
+
+/// A JSON number, integer-preserving.
+///
+/// Construction normalizes so that equal numeric values compare equal
+/// and print identically regardless of how they were built: integral
+/// `f64`s below 2^53 become `U`/`I`, non-negative integers become `U`,
+/// negative ones `I`. `F` is reserved for fractional values and
+/// integers too large for exact `i64`/`u64`-from-`f64` conversion.
+#[derive(Clone, Copy, Debug)]
+pub enum Number {
+    /// Non-negative integer, exact.
+    U(u64),
+    /// Negative integer, exact.
+    I(i64),
+    /// Everything else (fractional, huge, or non-finite).
+    F(f64),
+}
+
+impl Number {
+    /// Parse a scanned number token (shared by the DOM parser and the
+    /// streaming reader so both have identical acceptance and value
+    /// semantics). Integer-syntax tokens (no `.`/`e`/`E`) round-trip
+    /// exactly through `u64`/`i64`; everything else goes through `f64`.
+    pub fn from_token(text: &str) -> Option<Number> {
+        let int_syntax = !text.bytes().any(|b| matches!(b, b'.' | b'e' | b'E'));
+        if int_syntax {
+            if text.starts_with('-') {
+                if let Ok(i) = text.parse::<i64>() {
+                    return Some(Number::from(i));
+                }
+            } else if let Ok(u) = text.parse::<u64>() {
+                return Some(Number::U(u));
+            }
+        }
+        // Fractional/exponent syntax, or an integer beyond 64 bits:
+        // same acceptance as f64 (which is what the parser always did).
+        text.parse::<f64>().ok().map(Number::from)
+    }
+
+    /// Lossy numeric view (exact below 2^53).
+    pub fn as_f64(&self) -> f64 {
+        match self {
+            Number::U(u) => *u as f64,
+            Number::I(i) => *i as f64,
+            Number::F(x) => *x,
+        }
+    }
+
+    /// Exact non-negative integer value, if representable.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Number::U(u) => Some(*u),
+            Number::I(_) => None,
+            Number::F(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as u64),
+            Number::F(_) => None,
+        }
+    }
+
+    /// Exact signed integer value, if representable.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Number::U(u) => i64::try_from(*u).ok(),
+            Number::I(i) => Some(*i),
+            Number::F(x) if x.fract() == 0.0 && x.abs() < 9e18 => Some(*x as i64),
+            Number::F(_) => None,
+        }
+    }
+
+    /// Non-negative machine-word value, if representable.
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Number::U(u) => usize::try_from(*u).ok(),
+            Number::I(_) => None,
+            // preserves the historical f64 semantics (saturating cast)
+            Number::F(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as usize),
+            Number::F(_) => None,
+        }
+    }
+}
+
+impl PartialEq for Number {
+    fn eq(&self, other: &Number) -> bool {
+        use Number::*;
+        match (self, other) {
+            (U(a), U(b)) => a == b,
+            (I(a), I(b)) => a == b,
+            (F(a), F(b)) => a == b,
+            (U(a), I(b)) | (I(b), U(a)) => i64::try_from(*a) == Ok(*b),
+            (U(a), F(b)) | (F(b), U(a)) => *a as f64 == *b,
+            (I(a), F(b)) | (F(b), I(a)) => *a as f64 == *b,
+        }
+    }
+}
+
+impl fmt::Display for Number {
+    /// The serialized token. Kept bit-for-bit compatible with the
+    /// pre-`Number` writer for every value `f64` could represent
+    /// exactly; exact integers above 2^53 now print all their digits.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Number::U(u) => write!(f, "{u}"),
+            Number::I(i) => write!(f, "{i}"),
+            Number::F(x) => {
+                if x.fract() == 0.0 && x.abs() < 9e15 {
+                    write!(f, "{}", *x as i64)
+                } else {
+                    write!(f, "{x}")
+                }
+            }
+        }
+    }
+}
+
+impl From<f64> for Number {
+    fn from(x: f64) -> Number {
+        if x.fract() == 0.0 && x.abs() < 9e15 {
+            if x >= 0.0 {
+                Number::U(x as u64)
+            } else {
+                Number::I(x as i64)
+            }
+        } else {
+            Number::F(x)
+        }
+    }
+}
+
+impl From<f32> for Number {
+    fn from(x: f32) -> Number {
+        Number::from(x as f64)
+    }
+}
+
+impl From<i64> for Number {
+    fn from(i: i64) -> Number {
+        if i >= 0 {
+            Number::U(i as u64)
+        } else {
+            Number::I(i)
+        }
+    }
+}
+
+impl From<u64> for Number {
+    fn from(u: u64) -> Number {
+        Number::U(u)
+    }
+}
+
+macro_rules! number_from_int {
+    ($($t:ty => $via:ty),*) => {
+        $(impl From<$t> for Number {
+            fn from(x: $t) -> Number {
+                Number::from(x as $via)
+            }
+        })*
+    };
+}
+number_from_int!(u8 => u64, u16 => u64, u32 => u64, usize => u64,
+                 i8 => i64, i16 => i64, i32 => i64, isize => i64);
 
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
@@ -15,8 +183,8 @@ pub enum Json {
     Null,
     /// JSON boolean.
     Bool(bool),
-    /// JSON number (stored as `f64`).
-    Num(f64),
+    /// JSON number (integer-preserving, see [`Number`]).
+    Num(Number),
     /// JSON string.
     Str(String),
     /// JSON array.
@@ -50,17 +218,36 @@ impl Json {
 
     // ---- typed accessors -------------------------------------------------
 
-    /// Numeric value, if this is a number.
+    /// Numeric value, if this is a number (lossy above 2^53).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
-            Json::Num(x) => Some(*x),
+            Json::Num(n) => Some(n.as_f64()),
+            _ => None,
+        }
+    }
+
+    /// Exact non-negative 64-bit integer value, if representable.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) => n.as_u64(),
+            _ => None,
+        }
+    }
+
+    /// Exact signed 64-bit integer value, if representable.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Num(n) => n.as_i64(),
             _ => None,
         }
     }
 
     /// Non-negative integer value, if exactly representable.
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().filter(|x| *x >= 0.0 && x.fract() == 0.0).map(|x| x as usize)
+        match self {
+            Json::Num(n) => n.as_usize(),
+            _ => None,
+        }
     }
 
     /// String value, if this is a string.
@@ -119,8 +306,8 @@ impl Json {
         Json::Arr(items.into_iter().collect())
     }
 
-    /// Build a number.
-    pub fn num<N: Into<f64>>(n: N) -> Json {
+    /// Build a number. Integer arguments are preserved exactly.
+    pub fn num<N: Into<Number>>(n: N) -> Json {
         Json::Num(n.into())
     }
 
@@ -147,12 +334,9 @@ impl Json {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 9e15 {
-                    out.push_str(&(*x as i64).to_string());
-                } else {
-                    out.push_str(&x.to_string());
-                }
+            Json::Num(n) => {
+                use fmt::Write;
+                let _ = write!(out, "{n}");
             }
             Json::Str(s) => write_escaped(out, s),
             Json::Arr(items) => {
@@ -402,9 +586,7 @@ impl<'a> Parser<'a> {
             }
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
-        text.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| self.err("invalid number"))
+        Number::from_token(text).map(Json::Num).ok_or_else(|| self.err("invalid number"))
     }
 }
 
@@ -416,7 +598,7 @@ mod tests {
     fn parse_scalars() {
         assert_eq!(Json::parse("null").unwrap(), Json::Null);
         assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
-        assert_eq!(Json::parse("-3.5e2").unwrap(), Json::Num(-350.0));
+        assert_eq!(Json::parse("-3.5e2").unwrap(), Json::num(-350.0));
         assert_eq!(Json::parse("\"a\\nb\"").unwrap(), Json::Str("a\nb".into()));
     }
 
@@ -456,5 +638,51 @@ mod tests {
     fn integer_formatting_is_integral() {
         assert_eq!(Json::num(64).compact(), "64");
         assert_eq!(Json::num(0.5).compact(), "0.5");
+    }
+
+    #[test]
+    fn big_integers_round_trip_exactly() {
+        // u64::MAX-adjacent values lose bits through f64 (2^53 ceiling);
+        // the Number representation must carry them exactly.
+        for u in [u64::MAX, u64::MAX - 1, u64::MAX - 2, (1u64 << 53) + 1, 1u64 << 63] {
+            let j = Json::num(u);
+            assert_eq!(j.compact(), u.to_string());
+            let back = Json::parse(&j.compact()).unwrap();
+            assert_eq!(back.as_u64(), Some(u), "u64 {u} did not round-trip");
+            assert_eq!(back, j);
+        }
+        for i in [i64::MIN, i64::MIN + 1, -(1i64 << 53) - 1] {
+            let j = Json::num(i);
+            assert_eq!(j.compact(), i.to_string());
+            let back = Json::parse(&j.compact()).unwrap();
+            assert_eq!(back.as_i64(), Some(i), "i64 {i} did not round-trip");
+            assert_eq!(back, j);
+        }
+    }
+
+    #[test]
+    fn number_normalization_and_equality() {
+        // integral f64s normalize to exact integers
+        assert_eq!(Json::num(64.0), Json::num(64u64));
+        assert_eq!(Json::num(-3.0), Json::num(-3i64));
+        assert_eq!(Number::from(0.0), Number::U(0));
+        assert_eq!(Number::from(-0.0), Number::U(0));
+        // cross-representation comparisons agree with numeric value
+        assert_eq!(Number::U(5), Number::F(5.0));
+        assert_ne!(Number::U(5), Number::F(5.5));
+        assert_ne!(Number::U(u64::MAX), Number::U(u64::MAX - 1));
+        // formatting matches the old f64 writer where f64 was exact
+        assert_eq!(Json::num(1e16).compact(), "10000000000000000");
+        assert_eq!(Json::num(100e6).compact(), "100000000");
+        assert_eq!(Json::num(1e-3).compact(), "0.001");
+    }
+
+    #[test]
+    fn integer_accessors() {
+        assert_eq!(Json::parse("18446744073709551615").unwrap().as_u64(), Some(u64::MAX));
+        assert_eq!(Json::parse("-1").unwrap().as_i64(), Some(-1));
+        assert_eq!(Json::parse("-1").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("1.5").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("3").unwrap().as_usize(), Some(3));
     }
 }

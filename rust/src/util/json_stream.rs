@@ -1,0 +1,932 @@
+//! Streaming JSON: a pull-based event reader and an incremental writer.
+//!
+//! The DOM in [`crate::util::json`] materializes a full `BTreeMap`/`Vec`
+//! tree for every document, which puts tree construction and teardown on
+//! the critical path of cache-hit replay, profile loading, and stage
+//! dumps. This module provides the zero-copy alternative:
+//!
+//! * [`JsonReader`] pulls [`Event`]s off a `&[u8]` document without
+//!   building a tree — strings borrow from the input when they contain
+//!   no escapes, numbers decode straight to [`Number`];
+//! * [`IoJsonReader`] is the same reader over any `impl Read`;
+//! * [`JsonWriter`] emits JSON incrementally to any `impl Write`, with
+//!   output pinned **byte-identical** to [`Json::pretty`] /
+//!   [`Json::compact`] (the determinism suites and the writer-parity
+//!   propcheck rely on this).
+//!
+//! The reader accepts exactly the documents [`Json::parse`] accepts: it
+//! shares the number-token logic ([`Number::from_token`]) and the escape
+//! / UTF-8 rules with the DOM parser, and the reader-parity propcheck in
+//! `tests/json_stream.rs` pins value and acceptance equivalence.
+
+use crate::util::json::{Json, JsonError, Number};
+use std::borrow::Cow;
+use std::collections::BTreeMap;
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+/// One parse event. String-carrying events borrow from the document
+/// when possible (`Cow::Borrowed` unless the raw text contains escapes).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event<'a> {
+    /// `{`
+    BeginObject,
+    /// `}`
+    EndObject,
+    /// `[`
+    BeginArray,
+    /// `]`
+    EndArray,
+    /// An object key (the following event(s) form its value).
+    Key(Cow<'a, str>),
+    /// A string value.
+    Str(Cow<'a, str>),
+    /// A number value.
+    Num(Number),
+    /// A boolean value.
+    Bool(bool),
+    /// A `null` value.
+    Null,
+}
+
+impl Event<'_> {
+    /// Detach the event from the document buffer.
+    pub fn into_owned(self) -> Event<'static> {
+        match self {
+            Event::BeginObject => Event::BeginObject,
+            Event::EndObject => Event::EndObject,
+            Event::BeginArray => Event::BeginArray,
+            Event::EndArray => Event::EndArray,
+            Event::Key(k) => Event::Key(Cow::Owned(k.into_owned())),
+            Event::Str(s) => Event::Str(Cow::Owned(s.into_owned())),
+            Event::Num(n) => Event::Num(n),
+            Event::Bool(b) => Event::Bool(b),
+            Event::Null => Event::Null,
+        }
+    }
+}
+
+/// Anything that yields a stream of JSON [`Event`]s.
+///
+/// The provided combinators ([`skip_value`](EventSource::skip_value),
+/// [`read_value`](EventSource::read_value)) let consumers mix
+/// event-level and tree-level reading, e.g. skim keys and only
+/// materialize the subtree they care about.
+pub trait EventSource {
+    /// Pull the next event; `Ok(None)` exactly once, at a clean end of
+    /// document.
+    fn next_event(&mut self) -> Result<Option<Event<'_>>, JsonError>;
+
+    /// Byte position of the read head (for error reporting).
+    fn position(&self) -> usize;
+
+    /// Consume one complete value (scalar or whole container). The
+    /// reader must be positioned at the start of a value.
+    fn skip_value(&mut self) -> Result<(), JsonError> {
+        let mut depth = 0usize;
+        loop {
+            let at = self.position();
+            match self.next_event()? {
+                None => {
+                    return Err(JsonError { offset: at, msg: "expected a value".into() });
+                }
+                Some(Event::BeginObject | Event::BeginArray) => depth += 1,
+                Some(Event::EndObject | Event::EndArray) => depth -= 1,
+                Some(_) => {}
+            }
+            if depth == 0 {
+                return Ok(());
+            }
+        }
+    }
+
+    /// Materialize the next value as a [`Json`] tree (bridge for cold
+    /// paths that still want DOM ergonomics).
+    fn read_value(&mut self) -> Result<Json, JsonError> {
+        let at = self.position();
+        match self.next_event()? {
+            None => Err(JsonError { offset: at, msg: "expected a value".into() }),
+            Some(ev) => value_from(self, ev.into_owned()),
+        }
+    }
+}
+
+fn value_from<S: EventSource + ?Sized>(src: &mut S, ev: Event<'static>) -> Result<Json, JsonError> {
+    match ev {
+        Event::Null => Ok(Json::Null),
+        Event::Bool(b) => Ok(Json::Bool(b)),
+        Event::Num(n) => Ok(Json::Num(n)),
+        Event::Str(s) => Ok(Json::Str(s.into_owned())),
+        Event::BeginArray => {
+            let mut items = Vec::new();
+            loop {
+                let at = src.position();
+                match src.next_event()? {
+                    None => {
+                        return Err(JsonError { offset: at, msg: "unterminated array".into() })
+                    }
+                    Some(Event::EndArray) => return Ok(Json::Arr(items)),
+                    Some(ev) => {
+                        let ev = ev.into_owned();
+                        items.push(value_from(src, ev)?);
+                    }
+                }
+            }
+        }
+        Event::BeginObject => {
+            let mut map = BTreeMap::new();
+            loop {
+                let at = src.position();
+                match src.next_event()? {
+                    None => {
+                        return Err(JsonError { offset: at, msg: "unterminated object".into() })
+                    }
+                    Some(Event::EndObject) => return Ok(Json::Obj(map)),
+                    Some(Event::Key(k)) => {
+                        let k = k.into_owned();
+                        let v = src.read_value()?;
+                        map.insert(k, v);
+                    }
+                    // the state machine only yields Key/EndObject here
+                    Some(_) => unreachable!("object body yields keys or end"),
+                }
+            }
+        }
+        Event::EndObject | Event::EndArray | Event::Key(_) => {
+            Err(JsonError { offset: 0, msg: "expected a value".into() })
+        }
+    }
+}
+
+// ---- reader ---------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq)]
+enum Frame {
+    Obj,
+    Arr,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Expect {
+    /// A value is required here.
+    Value,
+    /// Just after `[`: a value or `]`.
+    FirstItem,
+    /// Just after `{`: a key or `}`.
+    FirstKey,
+    /// Just after `,` inside an object: a key is required.
+    Key,
+    /// After a completed value inside a container: `,` or the closer.
+    PostValue,
+    /// The root value is complete; only whitespace may remain.
+    End,
+}
+
+/// The document-independent reader core: byte cursor + container stack.
+/// [`JsonReader`] and [`IoJsonReader`] wrap it around their buffers.
+struct RawReader {
+    pos: usize,
+    stack: Vec<Frame>,
+    expect: Expect,
+}
+
+impl RawReader {
+    fn new() -> RawReader {
+        RawReader { pos: 0, stack: Vec::new(), expect: Expect::Value }
+    }
+
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError { offset: self.pos, msg: msg.to_string() }
+    }
+
+    fn skip_ws(&mut self, bytes: &[u8]) {
+        while matches!(bytes.get(self.pos), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    /// State after a value (or container close) finishes.
+    fn after_value(&self) -> Expect {
+        if self.stack.is_empty() {
+            Expect::End
+        } else {
+            Expect::PostValue
+        }
+    }
+
+    fn next<'b>(&mut self, bytes: &'b [u8]) -> Result<Option<Event<'b>>, JsonError> {
+        loop {
+            self.skip_ws(bytes);
+            match self.expect {
+                Expect::End => {
+                    return if self.pos == bytes.len() {
+                        Ok(None)
+                    } else {
+                        Err(self.err("trailing characters"))
+                    };
+                }
+                Expect::Value | Expect::FirstItem => {
+                    if self.expect == Expect::FirstItem && bytes.get(self.pos) == Some(&b']') {
+                        self.pos += 1;
+                        self.stack.pop();
+                        self.expect = self.after_value();
+                        return Ok(Some(Event::EndArray));
+                    }
+                    return self.value(bytes).map(Some);
+                }
+                Expect::FirstKey => {
+                    if bytes.get(self.pos) == Some(&b'}') {
+                        self.pos += 1;
+                        self.stack.pop();
+                        self.expect = self.after_value();
+                        return Ok(Some(Event::EndObject));
+                    }
+                    return self.key(bytes).map(Some);
+                }
+                Expect::Key => return self.key(bytes).map(Some),
+                Expect::PostValue => match (self.stack.last(), bytes.get(self.pos)) {
+                    (Some(Frame::Obj), Some(b',')) => {
+                        self.pos += 1;
+                        self.expect = Expect::Key;
+                        // loop: the next event is the following key
+                    }
+                    (Some(Frame::Obj), Some(b'}')) => {
+                        self.pos += 1;
+                        self.stack.pop();
+                        self.expect = self.after_value();
+                        return Ok(Some(Event::EndObject));
+                    }
+                    (Some(Frame::Obj), _) => return Err(self.err("expected ',' or '}'")),
+                    (Some(Frame::Arr), Some(b',')) => {
+                        self.pos += 1;
+                        self.expect = Expect::Value;
+                        // loop: the next event is the following item
+                    }
+                    (Some(Frame::Arr), Some(b']')) => {
+                        self.pos += 1;
+                        self.stack.pop();
+                        self.expect = self.after_value();
+                        return Ok(Some(Event::EndArray));
+                    }
+                    (Some(Frame::Arr), _) => return Err(self.err("expected ',' or ']'")),
+                    (None, _) => unreachable!("PostValue with an empty stack"),
+                },
+            }
+        }
+    }
+
+    fn value<'b>(&mut self, bytes: &'b [u8]) -> Result<Event<'b>, JsonError> {
+        match bytes.get(self.pos) {
+            Some(b'{') => {
+                self.pos += 1;
+                self.stack.push(Frame::Obj);
+                self.expect = Expect::FirstKey;
+                Ok(Event::BeginObject)
+            }
+            Some(b'[') => {
+                self.pos += 1;
+                self.stack.push(Frame::Arr);
+                self.expect = Expect::FirstItem;
+                Ok(Event::BeginArray)
+            }
+            Some(b'"') => {
+                let s = self.string(bytes)?;
+                self.expect = self.after_value();
+                Ok(Event::Str(s))
+            }
+            Some(b't') => self.literal(bytes, "true", Event::Bool(true)),
+            Some(b'f') => self.literal(bytes, "false", Event::Bool(false)),
+            Some(b'n') => self.literal(bytes, "null", Event::Null),
+            Some(c) if *c == b'-' || c.is_ascii_digit() => {
+                let n = self.number(bytes)?;
+                self.expect = self.after_value();
+                Ok(Event::Num(n))
+            }
+            _ => Err(self.err("expected a value")),
+        }
+    }
+
+    fn literal<'b>(
+        &mut self,
+        bytes: &[u8],
+        lit: &str,
+        ev: Event<'b>,
+    ) -> Result<Event<'b>, JsonError> {
+        if bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            self.expect = self.after_value();
+            Ok(ev)
+        } else {
+            Err(self.err(&format!("expected '{lit}'")))
+        }
+    }
+
+    fn key<'b>(&mut self, bytes: &'b [u8]) -> Result<Event<'b>, JsonError> {
+        let k = self.string(bytes)?;
+        self.skip_ws(bytes);
+        if bytes.get(self.pos) != Some(&b':') {
+            return Err(self.err("expected ':'"));
+        }
+        self.pos += 1;
+        self.expect = Expect::Value;
+        Ok(Event::Key(k))
+    }
+
+    /// Scan a string. Borrows from `bytes` unless it contains escapes.
+    fn string<'b>(&mut self, bytes: &'b [u8]) -> Result<Cow<'b, str>, JsonError> {
+        if bytes.get(self.pos) != Some(&b'"') {
+            return Err(self.err("expected '\"'"));
+        }
+        self.pos += 1;
+        let start = self.pos;
+        let mut has_escape = false;
+        loop {
+            match bytes.get(self.pos) {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => break,
+                Some(b'\\') => {
+                    has_escape = true;
+                    self.pos += 1;
+                    if bytes.get(self.pos).is_none() {
+                        return Err(self.err("unterminated string"));
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => self.pos += 1,
+            }
+        }
+        let raw = &bytes[start..self.pos];
+        self.pos += 1; // closing quote
+        if !has_escape {
+            return std::str::from_utf8(raw)
+                .map(Cow::Borrowed)
+                .map_err(|_| JsonError { offset: start, msg: "invalid utf-8".into() });
+        }
+        unescape(raw, start).map(Cow::Owned)
+    }
+
+    /// Scan a number token; shares value semantics with the DOM parser
+    /// through [`Number::from_token`].
+    fn number(&mut self, bytes: &[u8]) -> Result<Number, JsonError> {
+        let start = self.pos;
+        if bytes.get(self.pos) == Some(&b'-') {
+            self.pos += 1;
+        }
+        while matches!(bytes.get(self.pos), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if bytes.get(self.pos) == Some(&b'.') {
+            self.pos += 1;
+            while matches!(bytes.get(self.pos), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(bytes.get(self.pos), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(bytes.get(self.pos), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(bytes.get(self.pos), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&bytes[start..self.pos]).unwrap();
+        Number::from_token(text).ok_or_else(|| self.err("invalid number"))
+    }
+}
+
+fn err_at(offset: usize, msg: &str) -> JsonError {
+    JsonError { offset, msg: msg.to_string() }
+}
+
+/// Decode the escaped body of a string (same escape set, `\u` handling,
+/// and UTF-8 rules as the DOM parser; `base` is the body's byte offset
+/// in the document, for error reporting).
+fn unescape(raw: &[u8], base: usize) -> Result<String, JsonError> {
+    let mut s = String::with_capacity(raw.len());
+    let mut i = 0;
+    while i < raw.len() {
+        if raw[i] == b'\\' {
+            i += 1;
+            match raw.get(i) {
+                Some(b'"') => s.push('"'),
+                Some(b'\\') => s.push('\\'),
+                Some(b'/') => s.push('/'),
+                Some(b'n') => s.push('\n'),
+                Some(b't') => s.push('\t'),
+                Some(b'r') => s.push('\r'),
+                Some(b'b') => s.push('\u{8}'),
+                Some(b'f') => s.push('\u{c}'),
+                Some(b'u') => {
+                    let hex = raw
+                        .get(i + 1..i + 5)
+                        .ok_or_else(|| err_at(base + i, "truncated \\u escape"))?;
+                    let hex = std::str::from_utf8(hex)
+                        .map_err(|_| err_at(base + i, "bad \\u escape"))?;
+                    let code = u32::from_str_radix(hex, 16)
+                        .map_err(|_| err_at(base + i, "bad \\u escape"))?;
+                    s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                    i += 4;
+                }
+                _ => return Err(err_at(base + i, "bad escape")),
+            }
+            i += 1;
+        } else {
+            let text = std::str::from_utf8(&raw[i..])
+                .map_err(|_| err_at(base + i, "invalid utf-8"))?;
+            let c = text.chars().next().unwrap();
+            s.push(c);
+            i += c.len_utf8();
+        }
+    }
+    Ok(s)
+}
+
+/// Pull-based reader over an in-memory document.
+pub struct JsonReader<'a> {
+    bytes: &'a [u8],
+    raw: RawReader,
+}
+
+impl<'a> JsonReader<'a> {
+    /// Start reading `bytes` as one JSON document.
+    pub fn new(bytes: &'a [u8]) -> JsonReader<'a> {
+        JsonReader { bytes, raw: RawReader::new() }
+    }
+
+    /// Pull the next event (zero-copy: borrows from the document).
+    #[allow(clippy::should_implement_trait)] // fallible, not an Iterator
+    pub fn next(&mut self) -> Result<Option<Event<'a>>, JsonError> {
+        self.raw.next(self.bytes)
+    }
+
+    /// The exact byte slice of the next value (leading whitespace
+    /// excluded), consuming it. Lets callers compare or copy a subtree
+    /// verbatim without decoding it.
+    pub fn raw_value(&mut self) -> Result<&'a [u8], JsonError> {
+        self.raw.skip_ws(self.bytes);
+        let start = self.raw.pos;
+        EventSource::skip_value(self)?;
+        Ok(&self.bytes[start..self.raw.pos])
+    }
+
+    /// Parse a complete document to a [`Json`] tree. Accepts exactly
+    /// what [`Json::parse`] accepts (pinned by the parity propcheck).
+    pub fn parse_document(bytes: &[u8]) -> Result<Json, JsonError> {
+        let mut r = JsonReader::new(bytes);
+        let v = EventSource::read_value(&mut r)?;
+        r.next()?; // None at a clean end, error on trailing characters
+        Ok(v)
+    }
+}
+
+impl EventSource for JsonReader<'_> {
+    fn next_event(&mut self) -> Result<Option<Event<'_>>, JsonError> {
+        self.raw.next(self.bytes)
+    }
+
+    fn position(&self) -> usize {
+        self.raw.pos
+    }
+}
+
+/// Pull-based reader over any byte source. The source is drained once
+/// at construction (JSON needs lookahead and the documents here are
+/// file-sized); events then borrow from the internal buffer.
+pub struct IoJsonReader {
+    buf: Vec<u8>,
+    raw: RawReader,
+}
+
+impl IoJsonReader {
+    /// Read the whole source, then stream events over it.
+    pub fn new<R: Read>(mut src: R) -> io::Result<IoJsonReader> {
+        let mut buf = Vec::new();
+        src.read_to_end(&mut buf)?;
+        Ok(IoJsonReader { buf, raw: RawReader::new() })
+    }
+
+    /// Pull the next event (borrows from the internal buffer).
+    #[allow(clippy::should_implement_trait)] // fallible, not an Iterator
+    pub fn next(&mut self) -> Result<Option<Event<'_>>, JsonError> {
+        self.raw.next(&self.buf)
+    }
+}
+
+impl EventSource for IoJsonReader {
+    fn next_event(&mut self) -> Result<Option<Event<'_>>, JsonError> {
+        self.raw.next(&self.buf)
+    }
+
+    fn position(&self) -> usize {
+        self.raw.pos
+    }
+}
+
+// ---- writer ---------------------------------------------------------------
+
+/// Incremental JSON writer. Output is byte-identical to
+/// [`Json::pretty`] (via [`JsonWriter::pretty`]) or [`Json::compact`]
+/// (via [`JsonWriter::compact`]) for the same value structure, so
+/// streamed dumps stay interchangeable with DOM-built ones.
+pub struct JsonWriter<W: Write> {
+    out: W,
+    indent: bool,
+    /// One entry per open container: `(frame, items written so far)`.
+    stack: Vec<(Frame, usize)>,
+    /// Set between a `key()` and its value: suppresses the separator.
+    pending_key: bool,
+}
+
+impl<W: Write> JsonWriter<W> {
+    /// Writer with 2-space indentation (matches [`Json::pretty`]).
+    pub fn pretty(out: W) -> JsonWriter<W> {
+        JsonWriter { out, indent: true, stack: Vec::new(), pending_key: false }
+    }
+
+    /// Compact writer (matches [`Json::compact`]).
+    pub fn compact(out: W) -> JsonWriter<W> {
+        JsonWriter { out, indent: false, stack: Vec::new(), pending_key: false }
+    }
+
+    fn newline_indent(&mut self, depth: usize) -> io::Result<()> {
+        if self.indent {
+            self.out.write_all(b"\n")?;
+            for _ in 0..depth {
+                self.out.write_all(b"  ")?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Separator + indentation before a value in the current context.
+    fn before_value(&mut self) -> io::Result<()> {
+        if self.pending_key {
+            self.pending_key = false;
+            return Ok(());
+        }
+        if let Some(top) = self.stack.last_mut() {
+            debug_assert!(top.0 == Frame::Arr, "object members need a key() first");
+            if top.1 > 0 {
+                self.out.write_all(b",")?;
+            }
+            top.1 += 1;
+            let depth = self.stack.len();
+            self.newline_indent(depth)?;
+        }
+        Ok(())
+    }
+
+    /// Open an object.
+    pub fn begin_obj(&mut self) -> io::Result<()> {
+        self.before_value()?;
+        self.out.write_all(b"{")?;
+        self.stack.push((Frame::Obj, 0));
+        Ok(())
+    }
+
+    /// Close the current object.
+    pub fn end_obj(&mut self) -> io::Result<()> {
+        let (frame, count) = self.stack.pop().expect("end_obj with no open object");
+        debug_assert!(frame == Frame::Obj);
+        if count > 0 {
+            let depth = self.stack.len();
+            self.newline_indent(depth)?;
+        }
+        self.out.write_all(b"}")
+    }
+
+    /// Open an array.
+    pub fn begin_arr(&mut self) -> io::Result<()> {
+        self.before_value()?;
+        self.out.write_all(b"[")?;
+        self.stack.push((Frame::Arr, 0));
+        Ok(())
+    }
+
+    /// Close the current array.
+    pub fn end_arr(&mut self) -> io::Result<()> {
+        let (frame, count) = self.stack.pop().expect("end_arr with no open array");
+        debug_assert!(frame == Frame::Arr);
+        if count > 0 {
+            let depth = self.stack.len();
+            self.newline_indent(depth)?;
+        }
+        self.out.write_all(b"]")
+    }
+
+    /// Write the next member's key; its value must follow.
+    pub fn key(&mut self, k: &str) -> io::Result<()> {
+        debug_assert!(!self.pending_key, "key() twice without a value");
+        let top = self.stack.last_mut().expect("key() with no open object");
+        debug_assert!(top.0 == Frame::Obj, "key() inside an array");
+        if top.1 > 0 {
+            self.out.write_all(b",")?;
+        }
+        top.1 += 1;
+        let depth = self.stack.len();
+        self.newline_indent(depth)?;
+        write_escaped_io(&mut self.out, k)?;
+        self.out.write_all(b":")?;
+        if self.indent {
+            self.out.write_all(b" ")?;
+        }
+        self.pending_key = true;
+        Ok(())
+    }
+
+    /// Write a string value.
+    pub fn str_value(&mut self, s: &str) -> io::Result<()> {
+        self.before_value()?;
+        write_escaped_io(&mut self.out, s)
+    }
+
+    /// Write a number value.
+    pub fn num_value<N: Into<Number>>(&mut self, n: N) -> io::Result<()> {
+        self.before_value()?;
+        write!(self.out, "{}", n.into())
+    }
+
+    /// Write a boolean value.
+    pub fn bool_value(&mut self, b: bool) -> io::Result<()> {
+        self.before_value()?;
+        self.out.write_all(if b { b"true" } else { b"false" })
+    }
+
+    /// Write a `null` value.
+    pub fn null_value(&mut self) -> io::Result<()> {
+        self.before_value()?;
+        self.out.write_all(b"null")
+    }
+
+    /// Splice pre-serialized JSON in value position, verbatim. The
+    /// caller guarantees `bytes` is one well-formed value whose
+    /// formatting matches this writer's mode.
+    pub fn raw_value(&mut self, bytes: &[u8]) -> io::Result<()> {
+        self.before_value()?;
+        self.out.write_all(bytes)
+    }
+
+    /// Write a [`Json`] tree in value position (DOM bridge; the output
+    /// is byte-identical to the tree's own `pretty`/`compact`).
+    pub fn value(&mut self, j: &Json) -> io::Result<()> {
+        match j {
+            Json::Null => self.null_value(),
+            Json::Bool(b) => self.bool_value(*b),
+            Json::Num(n) => self.num_value(*n),
+            Json::Str(s) => self.str_value(s),
+            Json::Arr(items) => {
+                self.begin_arr()?;
+                for item in items {
+                    self.value(item)?;
+                }
+                self.end_arr()
+            }
+            Json::Obj(map) => {
+                self.begin_obj()?;
+                for (k, v) in map {
+                    self.key(k)?;
+                    self.value(v)?;
+                }
+                self.end_obj()
+            }
+        }
+    }
+
+    /// Finish writing: asserts every container is closed and returns
+    /// the underlying sink (unflushed).
+    pub fn finish(self) -> io::Result<W> {
+        assert!(self.stack.is_empty(), "finish() with unclosed containers");
+        assert!(!self.pending_key, "finish() with a dangling key");
+        Ok(self.out)
+    }
+}
+
+/// Same escape policy as the DOM writer, to an `io::Write`.
+fn write_escaped_io<W: Write>(out: &mut W, s: &str) -> io::Result<()> {
+    out.write_all(b"\"")?;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        let esc: Option<&[u8]> = match c {
+            '"' => Some(b"\\\""),
+            '\\' => Some(b"\\\\"),
+            '\n' => Some(b"\\n"),
+            '\r' => Some(b"\\r"),
+            '\t' => Some(b"\\t"),
+            c if (c as u32) < 0x20 => None, // \u escape, handled below
+            _ => continue,
+        };
+        out.write_all(s[start..i].as_bytes())?;
+        match esc {
+            Some(e) => out.write_all(e)?,
+            None => write!(out, "\\u{:04x}", c as u32)?,
+        }
+        start = i + c.len_utf8();
+    }
+    out.write_all(s[start..].as_bytes())?;
+    out.write_all(b"\"")
+}
+
+/// Stream a [`Json`] tree to `path` in the dump format shared by every
+/// artifact file: pretty-printed plus a trailing newline, byte-identical
+/// to the old `fs::write(path, json.pretty() + "\n")`.
+pub fn write_json_file(path: &Path, j: &Json) -> io::Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = JsonWriter::pretty(io::BufWriter::new(file));
+    w.value(j)?;
+    let mut out = w.finish()?;
+    out.write_all(b"\n")?;
+    out.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn events(doc: &str) -> Vec<Event<'_>> {
+        let mut r = JsonReader::new(doc.as_bytes());
+        let mut out = Vec::new();
+        while let Some(ev) = r.next().unwrap() {
+            out.push(ev);
+        }
+        out
+    }
+
+    #[test]
+    fn scalar_documents() {
+        assert_eq!(events("null"), vec![Event::Null]);
+        assert_eq!(events(" true "), vec![Event::Bool(true)]);
+        assert_eq!(events("-3.5e2"), vec![Event::Num(Number::from(-350.0))]);
+        assert_eq!(events(r#""a\nb""#), vec![Event::Str(Cow::Owned("a\nb".into()))]);
+    }
+
+    #[test]
+    fn nested_event_stream() {
+        use Event::*;
+        let got = events(r#"{"a": [1, {"b": false}], "c": "x"}"#);
+        assert_eq!(
+            got,
+            vec![
+                BeginObject,
+                Key(Cow::Borrowed("a")),
+                BeginArray,
+                Num(Number::U(1)),
+                BeginObject,
+                Key(Cow::Borrowed("b")),
+                Bool(false),
+                EndObject,
+                EndArray,
+                Key(Cow::Borrowed("c")),
+                Str(Cow::Borrowed("x")),
+                EndObject,
+            ]
+        );
+    }
+
+    #[test]
+    fn strings_borrow_when_escape_free() {
+        let doc = r#"["plain", "esc\\aped"]"#;
+        let evs = events(doc);
+        assert!(matches!(&evs[1], Event::Str(Cow::Borrowed("plain"))));
+        assert!(matches!(&evs[2], Event::Str(Cow::Owned(s)) if s == "esc\\aped"));
+    }
+
+    #[test]
+    fn empty_containers() {
+        use Event::*;
+        assert_eq!(events("[]"), vec![BeginArray, EndArray]);
+        assert_eq!(events("{}"), vec![BeginObject, EndObject]);
+        assert_eq!(
+            events(r#"{"a": []}"#),
+            vec![BeginObject, Key(Cow::Borrowed("a")), BeginArray, EndArray, EndObject]
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for doc in ["{", "[1,]", "12 34", "'single'", "{\"a\" 1}", "[1 2]", "{\"a\":}", ""] {
+            let mut r = JsonReader::new(doc.as_bytes());
+            let mut failed = false;
+            for _ in 0..64 {
+                match r.next() {
+                    Err(_) => {
+                        failed = true;
+                        break;
+                    }
+                    Ok(None) => break,
+                    Ok(Some(_)) => {}
+                }
+            }
+            assert!(failed, "reader accepted malformed {doc:?}");
+        }
+    }
+
+    #[test]
+    fn raw_value_returns_exact_slices() {
+        let doc = r#"{ "a" : [1, 2] , "b" : {"c": 3} , "d" : 7 }"#;
+        let mut r = JsonReader::new(doc.as_bytes());
+        assert_eq!(r.next().unwrap(), Some(Event::BeginObject));
+        assert_eq!(r.next().unwrap(), Some(Event::Key(Cow::Borrowed("a"))));
+        assert_eq!(r.raw_value().unwrap(), b"[1, 2]");
+        assert_eq!(r.next().unwrap(), Some(Event::Key(Cow::Borrowed("b"))));
+        assert_eq!(r.raw_value().unwrap(), br#"{"c": 3}"#);
+        assert_eq!(r.next().unwrap(), Some(Event::Key(Cow::Borrowed("d"))));
+        assert_eq!(r.raw_value().unwrap(), b"7");
+        assert_eq!(r.next().unwrap(), Some(Event::EndObject));
+        assert_eq!(r.next().unwrap(), None);
+    }
+
+    #[test]
+    fn skip_value_consumes_whole_subtrees() {
+        let doc = r#"{"skip": {"deep": [[1], {"x": null}]}, "keep": 42}"#;
+        let mut r = JsonReader::new(doc.as_bytes());
+        assert_eq!(r.next().unwrap(), Some(Event::BeginObject));
+        assert_eq!(r.next().unwrap(), Some(Event::Key(Cow::Borrowed("skip"))));
+        EventSource::skip_value(&mut r).unwrap();
+        assert_eq!(r.next().unwrap(), Some(Event::Key(Cow::Borrowed("keep"))));
+        assert_eq!(r.next().unwrap(), Some(Event::Num(Number::U(42))));
+        assert_eq!(r.next().unwrap(), Some(Event::EndObject));
+        assert_eq!(r.next().unwrap(), None);
+    }
+
+    #[test]
+    fn parse_document_matches_dom() {
+        let doc = r#"{"arrays": 5472, "nets": ["resnet18", "vgg11"], "zs": true, "f": 0.25}"#;
+        assert_eq!(JsonReader::parse_document(doc.as_bytes()).unwrap(), Json::parse(doc).unwrap());
+    }
+
+    #[test]
+    fn io_reader_streams_the_same_events() {
+        let doc = r#"{"a": [1, 2], "b": "x"}"#;
+        let mut io_r = IoJsonReader::new(doc.as_bytes()).unwrap();
+        let mut owned = Vec::new();
+        while let Some(ev) = io_r.next().unwrap() {
+            owned.push(ev.into_owned());
+        }
+        let direct: Vec<Event<'static>> =
+            events(doc).into_iter().map(Event::into_owned).collect();
+        assert_eq!(owned, direct);
+    }
+
+    fn stream_pretty(j: &Json) -> String {
+        let mut w = JsonWriter::pretty(Vec::new());
+        w.value(j).unwrap();
+        String::from_utf8(w.finish().unwrap()).unwrap()
+    }
+
+    fn stream_compact(j: &Json) -> String {
+        let mut w = JsonWriter::compact(Vec::new());
+        w.value(j).unwrap();
+        String::from_utf8(w.finish().unwrap()).unwrap()
+    }
+
+    #[test]
+    fn writer_matches_dom_output() {
+        let doc = concat!(
+            r#"{"empty_arr": [], "empty_obj": {}, "#,
+            r#""nested": {"a": [1, -2.5, true, null], "s": "q\"\\\né"}, "#,
+            r#""big": 18446744073709551615}"#,
+        );
+        let v = Json::parse(doc).unwrap();
+        assert_eq!(stream_pretty(&v), v.pretty());
+        assert_eq!(stream_compact(&v), v.compact());
+    }
+
+    #[test]
+    fn writer_event_api_matches_dom() {
+        let v = Json::parse(r#"{"a": [1, 2], "b": {}, "c": "x"}"#).unwrap();
+        let build = |pretty: bool| -> String {
+            let mut w = if pretty {
+                JsonWriter::pretty(Vec::new())
+            } else {
+                JsonWriter::compact(Vec::new())
+            };
+            w.begin_obj().unwrap();
+            w.key("a").unwrap();
+            w.begin_arr().unwrap();
+            w.num_value(1).unwrap();
+            w.num_value(2).unwrap();
+            w.end_arr().unwrap();
+            w.key("b").unwrap();
+            w.begin_obj().unwrap();
+            w.end_obj().unwrap();
+            w.key("c").unwrap();
+            w.str_value("x").unwrap();
+            w.end_obj().unwrap();
+            String::from_utf8(w.finish().unwrap()).unwrap()
+        };
+        assert_eq!(build(true), v.pretty());
+        assert_eq!(build(false), v.compact());
+    }
+
+    #[test]
+    fn raw_value_splices_verbatim() {
+        let mut w = JsonWriter::compact(Vec::new());
+        w.begin_arr().unwrap();
+        w.num_value(1).unwrap();
+        w.raw_value(br#"{"pre":"built"}"#).unwrap();
+        w.end_arr().unwrap();
+        let out = String::from_utf8(w.finish().unwrap()).unwrap();
+        assert_eq!(out, r#"[1,{"pre":"built"}]"#);
+    }
+}

@@ -9,6 +9,7 @@
 pub mod prng;
 pub mod bitops;
 pub mod json;
+pub mod json_stream;
 pub mod cli;
 pub mod par;
 pub mod table;

@@ -1,5 +1,7 @@
 //! Aligned plain-text table printer for figure/table reproduction output.
 
+use std::io::{self, Write};
+
 /// A simple column-aligned table.
 #[derive(Debug, Default)]
 pub struct Table {
@@ -32,8 +34,8 @@ impl Table {
         self.rows.is_empty()
     }
 
-    /// Render as aligned plain text.
-    pub fn render(&self) -> String {
+    /// Column widths: each column fits its widest cell (or header).
+    fn widths(&self) -> Vec<usize> {
         let ncols = self.header.len();
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -41,51 +43,94 @@ impl Table {
                 widths[c] = widths[c].max(row[c].len());
             }
         }
-        let mut out = String::new();
-        let line = |cells: &[String], out: &mut String| {
-            for (c, cell) in cells.iter().enumerate() {
-                if c > 0 {
-                    out.push_str("  ");
-                }
-                out.push_str(cell);
-                for _ in cell.len()..widths[c] {
-                    out.push(' ');
-                }
-            }
-            // trim trailing pad
-            while out.ends_with(' ') {
-                out.pop();
-            }
-            out.push('\n');
-        };
-        line(&self.header, &mut out);
-        let total: usize = widths.iter().sum::<usize>() + 2 * (ncols - 1);
-        out.push_str(&"-".repeat(total));
-        out.push('\n');
+        widths
+    }
+
+    /// Stream the aligned rendering to `out`, one row at a time — the
+    /// bytes are exactly [`Table::render`]'s without accumulating the
+    /// whole table (report emitters write straight to stdout/files).
+    pub fn write_to<W: Write>(&self, out: &mut W) -> io::Result<()> {
+        let widths = self.widths();
+        let mut buf = String::new();
+        write_aligned_row(&self.header, &widths, &mut buf, out)?;
+        let total: usize = widths.iter().sum::<usize>() + 2 * (self.header.len() - 1);
+        out.write_all("-".repeat(total).as_bytes())?;
+        out.write_all(b"\n")?;
         for row in &self.rows {
-            line(row, &mut out);
+            write_aligned_row(row, &widths, &mut buf, out)?;
         }
-        out
+        Ok(())
+    }
+
+    /// Render as aligned plain text.
+    pub fn render(&self) -> String {
+        let mut out = Vec::new();
+        self.write_to(&mut out).expect("table render to memory");
+        String::from_utf8(out).expect("table rows are UTF-8")
+    }
+
+    /// Stream the CSV rendering to `out`, one row at a time (same bytes
+    /// as [`Table::to_csv`]).
+    pub fn write_csv_to<W: Write>(&self, out: &mut W) -> io::Result<()> {
+        let mut buf = String::new();
+        write_csv_row(&self.header, &mut buf, out)?;
+        for row in &self.rows {
+            write_csv_row(row, &mut buf, out)?;
+        }
+        Ok(())
     }
 
     /// Render as CSV (for plotting scripts).
     pub fn to_csv(&self) -> String {
-        let esc = |s: &str| {
-            if s.contains(',') || s.contains('"') {
-                format!("\"{}\"", s.replace('"', "\"\""))
-            } else {
-                s.to_string()
-            }
-        };
-        let mut out = String::new();
-        out.push_str(&self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
-        out.push('\n');
-        for row in &self.rows {
-            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
-            out.push('\n');
-        }
-        out
+        let mut out = Vec::new();
+        self.write_csv_to(&mut out).expect("table csv to memory");
+        String::from_utf8(out).expect("table rows are UTF-8")
     }
+}
+
+/// One aligned line: two-space separators, cells padded to the column
+/// width, trailing padding trimmed. `buf` is a scratch line buffer.
+fn write_aligned_row<W: Write>(
+    cells: &[String],
+    widths: &[usize],
+    buf: &mut String,
+    out: &mut W,
+) -> io::Result<()> {
+    buf.clear();
+    for (c, cell) in cells.iter().enumerate() {
+        if c > 0 {
+            buf.push_str("  ");
+        }
+        buf.push_str(cell);
+        for _ in cell.len()..widths[c] {
+            buf.push(' ');
+        }
+    }
+    // trim trailing pad
+    while buf.ends_with(' ') {
+        buf.pop();
+    }
+    buf.push('\n');
+    out.write_all(buf.as_bytes())
+}
+
+/// One CSV line, quoting cells that contain commas or quotes.
+fn write_csv_row<W: Write>(cells: &[String], buf: &mut String, out: &mut W) -> io::Result<()> {
+    buf.clear();
+    for (c, cell) in cells.iter().enumerate() {
+        if c > 0 {
+            buf.push(',');
+        }
+        if cell.contains(',') || cell.contains('"') {
+            buf.push('"');
+            buf.push_str(&cell.replace('"', "\"\""));
+            buf.push('"');
+        } else {
+            buf.push_str(cell);
+        }
+    }
+    buf.push('\n');
+    out.write_all(buf.as_bytes())
 }
 
 /// Format a float with `digits` significant-looking decimals.

@@ -1,0 +1,300 @@
+//! Streaming JSON layer vs the retained DOM: the pull-based reader must
+//! accept exactly the documents `Json::parse` accepts (and produce the
+//! same values), the incremental writer must emit the exact bytes of
+//! `Json::pretty`/`Json::compact`, and a damaged prefix-cache entry —
+//! truncated at any byte, corrupted mid-stream, or trailed by garbage —
+//! must degrade to a clean miss, never a panic or a wrong answer.
+
+use cimfab::pipeline::{
+    self, cache, prepare_cached, CacheStatus, PrefixCache, PrefixSpec, StatsSource,
+};
+use cimfab::util::json::Json;
+use cimfab::util::json_stream::{JsonReader, JsonWriter};
+use cimfab::util::prng::Prng;
+use cimfab::util::propcheck;
+
+// ---------------------------------------------------------------------------
+// random document generator
+// ---------------------------------------------------------------------------
+
+/// Characters that stress the escape paths: quotes, backslashes, the
+/// named control escapes, `\u`-only control bytes, and multi-byte UTF-8
+/// up to an astral-plane code point.
+const STRING_POOL: &[char] = &[
+    'a', 'Z', '0', ' ', '_', '"', '\\', '/', '\n', '\t', '\r', '\u{8}', '\u{c}', '\u{1}',
+    '\u{1f}', 'é', 'π', '日', '\u{2028}', '𝄞',
+];
+
+fn gen_string(rng: &mut Prng) -> String {
+    let len = rng.index(10);
+    (0..len).map(|_| STRING_POOL[rng.index(STRING_POOL.len())]).collect()
+}
+
+/// Numbers spanning every representation branch: exact u64/i64 edges,
+/// values past 2^53 where f64 loses integers, and assorted floats.
+fn gen_number(rng: &mut Prng) -> Json {
+    match rng.index(10) {
+        0 => Json::num(u64::MAX),
+        1 => Json::num(u64::MAX - 1),
+        2 => Json::num(i64::MIN),
+        3 => Json::num((1u64 << 53) + 1),
+        4 => Json::num(rng.next_u64()),
+        5 => Json::num(rng.next_u64() as i64),
+        6 => Json::num(0u64),
+        7 => Json::num(rng.f64() * 1e6 - 5e5),
+        8 => Json::num(rng.normal()),
+        _ => Json::num(rng.f64()),
+    }
+}
+
+fn gen_scalar(rng: &mut Prng) -> Json {
+    match rng.index(5) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.chance(0.5)),
+        2 => Json::str(&gen_string(rng)),
+        _ => gen_number(rng),
+    }
+}
+
+fn gen_value(rng: &mut Prng, depth: usize) -> Json {
+    if depth == 0 || rng.chance(0.5) {
+        return gen_scalar(rng);
+    }
+    if rng.chance(0.5) {
+        Json::arr((0..rng.index(5)).map(|_| gen_value(rng, depth - 1)))
+    } else {
+        let pairs: Vec<(String, Json)> =
+            (0..rng.index(5)).map(|_| (gen_string(rng), gen_value(rng, depth - 1))).collect();
+        Json::obj(pairs.iter().map(|(k, v)| (k.as_str(), v.clone())).collect())
+    }
+}
+
+/// ASCII-only variant (printable chars plus escapes) whose serialized
+/// bytes can be mutated at any offset and stay valid UTF-8.
+fn gen_ascii_value(rng: &mut Prng, depth: usize) -> Json {
+    const ASCII: &[char] = &['a', 'B', '7', ' ', '"', '\\', ',', ':', '[', '}', '\n'];
+    let gen_str = |rng: &mut Prng| -> String {
+        (0..rng.index(8)).map(|_| ASCII[rng.index(ASCII.len())]).collect()
+    };
+    if depth == 0 || rng.chance(0.5) {
+        return match rng.index(4) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::str(&gen_str(rng)),
+            _ => Json::num(rng.next_u64() as i64),
+        };
+    }
+    if rng.chance(0.5) {
+        Json::arr((0..rng.index(4)).map(|_| gen_ascii_value(rng, depth - 1)))
+    } else {
+        let pairs: Vec<(String, Json)> =
+            (0..rng.index(4)).map(|_| (gen_str(rng), gen_ascii_value(rng, depth - 1))).collect();
+        Json::obj(pairs.iter().map(|(k, v)| (k.as_str(), v.clone())).collect())
+    }
+}
+
+/// A raw number token with randomized shape: optional sign, 1–20 digits
+/// (overflowing u64 on purpose), optional ragged fraction (possibly no
+/// digits after the dot), optional exponent (possibly empty).
+fn gen_number_token(rng: &mut Prng) -> String {
+    let mut tok = String::new();
+    if rng.chance(0.3) {
+        tok.push('-');
+    }
+    let int_digits = 1 + rng.index(20);
+    for _ in 0..int_digits {
+        tok.push(char::from(b'0' + rng.index(10) as u8));
+    }
+    if rng.chance(0.4) {
+        tok.push('.');
+        for _ in 0..rng.index(3) {
+            tok.push(char::from(b'0' + rng.index(10) as u8));
+        }
+    }
+    if rng.chance(0.3) {
+        tok.push(if rng.chance(0.5) { 'e' } else { 'E' });
+        if rng.chance(0.5) {
+            tok.push(if rng.chance(0.5) { '+' } else { '-' });
+        }
+        for _ in 0..rng.index(3) {
+            tok.push(char::from(b'0' + rng.index(10) as u8));
+        }
+    }
+    tok
+}
+
+/// Both parsers on the same text: same acceptance, same value.
+fn assert_parity(text: &str) -> Result<(), String> {
+    let dom = Json::parse(text);
+    let streamed = JsonReader::parse_document(text.as_bytes());
+    match (dom, streamed) {
+        (Ok(d), Ok(s)) => {
+            cimfab::prop_assert!(d == s, "values diverged on {text:?}: dom={d:?} streamed={s:?}");
+        }
+        (Err(_), Err(_)) => {}
+        (d, s) => {
+            cimfab::prop_assert!(false, "acceptance diverged on {text:?}: {d:?} vs {s:?}");
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// reader / writer parity properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reader_matches_dom_on_random_documents() {
+    propcheck::check("streaming reader == Json::parse", 0x5EED_1, 300, |rng| {
+        let v = gen_value(rng, 3);
+        assert_parity(&v.pretty())?;
+        assert_parity(&v.compact())?;
+        // leading/trailing whitespace tolerance must match too
+        assert_parity(&format!("  \n\t{} \n", v.compact()))
+    });
+}
+
+#[test]
+fn reader_matches_dom_on_ragged_number_tokens() {
+    propcheck::check("ragged number tokens", 0x5EED_2, 500, |rng| {
+        let doc = format!("[{},{}]", gen_number_token(rng), gen_number_token(rng));
+        assert_parity(&doc)
+    });
+}
+
+#[test]
+fn reader_matches_dom_on_mutated_documents() {
+    propcheck::check("mutated documents", 0x5EED_3, 400, |rng| {
+        let v = gen_ascii_value(rng, 3);
+        let text = if rng.chance(0.5) { v.pretty() } else { v.compact() };
+        let mut bytes = text.into_bytes();
+        match rng.index(3) {
+            // truncate at a random offset
+            0 => bytes.truncate(rng.index(bytes.len() + 1)),
+            // overwrite one byte with a structural character
+            1 => {
+                if !bytes.is_empty() {
+                    let structural = [b',', b'}', b']', b'"', b'x', b'{', b':', b'0'];
+                    let i = rng.index(bytes.len());
+                    bytes[i] = structural[rng.index(structural.len())];
+                }
+            }
+            // insert a stray comma
+            _ => {
+                let i = rng.index(bytes.len() + 1);
+                bytes.insert(i, b',');
+            }
+        }
+        let text = String::from_utf8(bytes).expect("ascii mutations stay utf-8");
+        assert_parity(&text)
+    });
+}
+
+#[test]
+fn writer_matches_dom_rendering_on_random_values() {
+    propcheck::check("streaming writer == pretty/compact", 0x5EED_4, 300, |rng| {
+        let v = gen_value(rng, 3);
+        let mut w = JsonWriter::pretty(Vec::new());
+        w.value(&v).unwrap();
+        let streamed = String::from_utf8(w.finish().unwrap()).unwrap();
+        cimfab::prop_assert!(
+            streamed == v.pretty(),
+            "pretty bytes diverged:\nstreamed: {streamed}\ndom:      {}",
+            v.pretty()
+        );
+        let mut w = JsonWriter::compact(Vec::new());
+        w.value(&v).unwrap();
+        let streamed = String::from_utf8(w.finish().unwrap()).unwrap();
+        cimfab::prop_assert!(
+            streamed == v.compact(),
+            "compact bytes diverged:\nstreamed: {streamed}\ndom:      {}",
+            v.compact()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn u64_edge_integers_round_trip_through_the_stream() {
+    for n in [u64::MAX, u64::MAX - 1, (1u64 << 53) + 1, 1u64 << 63] {
+        let doc = Json::obj(vec![("n", Json::num(n))]);
+        let mut w = JsonWriter::compact(Vec::new());
+        w.value(&doc).unwrap();
+        let bytes = w.finish().unwrap();
+        assert_eq!(bytes, doc.compact().into_bytes());
+        let back = JsonReader::parse_document(&bytes).unwrap();
+        assert_eq!(back.get("n").as_u64(), Some(n), "u64 fidelity lost at {n}");
+    }
+    let doc = Json::obj(vec![("n", Json::num(i64::MIN))]);
+    let back = JsonReader::parse_document(doc.compact().as_bytes()).unwrap();
+    assert_eq!(back.get("n").as_i64(), Some(i64::MIN));
+}
+
+// ---------------------------------------------------------------------------
+// damaged cache entries degrade to misses
+// ---------------------------------------------------------------------------
+
+#[test]
+fn damaged_cache_entries_degrade_to_misses() {
+    let dir = std::env::temp_dir()
+        .join(format!("cimfab_json_stream_test_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = PrefixCache::new(dir.to_str().unwrap()).unwrap();
+    let spec = PrefixSpec {
+        net: "resnet18".into(),
+        hw: 32,
+        hw_profile: cimfab::hw::DEFAULT_PROFILE.into(),
+        stats: StatsSource::Synthetic,
+        profile_images: 1,
+        seed: 11,
+        artifacts_dir: "artifacts".into(),
+    };
+    let (cold, st) = prepare_cached(&spec, None, Some(&store)).unwrap();
+    assert_eq!(st, CacheStatus::Miss);
+    let key = cache::key(&spec).unwrap();
+    let entry = store.entry_path(&spec, &key);
+    let full = std::fs::read(&entry).unwrap();
+    assert!(store.load(&spec, &key, true).is_some(), "pristine entry must hit");
+
+    // truncation at assorted offsets: empty file, inside the version
+    // header, inside the trace payload, one byte short of complete
+    let n = full.len();
+    for cut in [0, 1, 7, n / 5, n / 3, n / 2, 3 * n / 4, n - 2, n - 1] {
+        std::fs::write(&entry, &full[..cut]).unwrap();
+        assert!(
+            store.load(&spec, &key, true).is_none(),
+            "entry truncated at byte {cut}/{n} must read as a miss"
+        );
+    }
+
+    // mid-stream corruption inside the net_trace section: the document
+    // stays structurally plausible for a while, then a key mismatches
+    let pos = full
+        .windows(11)
+        .position(|w| w == b"\"net_trace\"")
+        .expect("entry stores a net_trace section");
+    let mut corrupt = full.clone();
+    corrupt[pos + 15] = b'x';
+    std::fs::write(&entry, &corrupt).unwrap();
+    assert!(store.load(&spec, &key, true).is_none(), "corrupted trace key must miss");
+
+    // trailing garbage after a complete document is rejected
+    let mut trailing = full.clone();
+    trailing.extend_from_slice(b"{}");
+    std::fs::write(&entry, &trailing).unwrap();
+    assert!(store.load(&spec, &key, true).is_none(), "trailing garbage must miss");
+
+    // the pipeline recomputes through the damage and repairs the entry
+    std::fs::write(&entry, &full[..n / 2]).unwrap();
+    let (re, st) = prepare_cached(&spec, None, Some(&store)).unwrap();
+    assert_eq!(st, CacheStatus::Miss, "truncated entry must degrade to a miss");
+    assert_eq!(re.trace, cold.trace, "recompute after damage must match the cold run");
+    let (warm, st) = prepare_cached(&spec, None, Some(&store)).unwrap();
+    assert_eq!(st, CacheStatus::Hit, "the recompute must have repaired the entry");
+    assert_eq!(warm.trace, cold.trace);
+    assert_eq!(
+        pipeline::artifact::profile_json(&warm.profile).compact(),
+        pipeline::artifact::profile_json(&cold.profile).compact()
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
