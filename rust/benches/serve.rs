@@ -1,0 +1,107 @@
+//! Serve-path bench: cold job submission (the daemon must prepare the
+//! shared prefix) vs pooled re-submission (the [`cimfab::server`]
+//! `PrefixPool` already holds the prepared prefix).
+//!
+//! One daemon serves the whole bench over a loopback TCP socket; each
+//! sample times a full wire round-trip — submit line in, `result` +
+//! `done` lines out. Cold samples force a fresh prefix by bumping the
+//! seed per iteration; pooled samples re-submit one fixed prefix.
+//! Emits `BENCH_serve.json` (`{name, baseline_ms, optimized_ms,
+//! speedup}`; baseline = cold, optimized = pooled).
+
+use cimfab::server::{Bind, ServeCfg, Server};
+use cimfab::util::bench::{banner, write_bench_json, Bencher};
+use cimfab::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+fn submit_line(id: u64, seed: u64) -> String {
+    format!(
+        r#"{{"op":"submit","id":"bench-{id}","net":"resnet18","res":32,"seed":{seed},"profile_images":1,"scenarios":[{{"alloc":"block-wise","pes":129,"images":2}}]}}"#
+    )
+}
+
+/// Submit one job and block until its `done` line; panics on any
+/// `error` line so a misconfigured bench fails loudly instead of
+/// timing garbage.
+fn roundtrip(w: &mut TcpStream, r: &mut BufReader<TcpStream>, id: u64, seed: u64) {
+    w.write_all(submit_line(id, seed).as_bytes()).unwrap();
+    w.write_all(b"\n").unwrap();
+    w.flush().unwrap();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        assert!(r.read_line(&mut line).unwrap() > 0, "server hung up");
+        let j = Json::parse(line.trim()).unwrap();
+        match j.get("type").as_str() {
+            Some("done") => {
+                assert_eq!(j.get("ok").as_u64(), Some(1), "job failed: {line}");
+                return;
+            }
+            Some("error") => panic!("server error: {line}"),
+            _ => {}
+        }
+    }
+}
+
+fn main() {
+    banner(
+        "serve",
+        "cold submit (prefix prepared on demand) vs pooled re-submit \
+         (PrefixPool hit) — full wire round-trips against one daemon",
+    );
+
+    let mut cfg = ServeCfg::new(Bind::Tcp("127.0.0.1:0".into()));
+    cfg.workers = 1; // one worker: samples time the job, not the scheduler
+    let server = Server::bind(cfg).unwrap();
+    let addr = server.tcp_addr().unwrap();
+    let handle = std::thread::spawn(move || server.run());
+
+    let mut w = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(w.try_clone().unwrap());
+    let mut next_id = 0u64;
+
+    // every cold sample uses a never-seen seed, so the pool misses and
+    // the daemon runs the full prefix pipeline
+    let mut b = Bencher::new(0, 3);
+    let mut cold_seed = 1_000u64;
+    let cold = b
+        .bench("serve cold submit (pool miss)", || {
+            next_id += 1;
+            cold_seed += 1;
+            roundtrip(&mut w, &mut r, next_id, cold_seed);
+        })
+        .mean_ms();
+
+    // one fixed prefix: the warmup populates the pool, the measured
+    // iterations ride the Ready entry
+    let mut b2 = Bencher::new(1, 5);
+    let pooled = b2
+        .bench("serve pooled re-submit (pool hit)", || {
+            next_id += 1;
+            roundtrip(&mut w, &mut r, next_id, 555);
+        })
+        .mean_ms();
+
+    println!("{}", b.report());
+    println!("{}", b2.report());
+
+    let speedup = write_bench_json(
+        "serve",
+        cold,
+        pooled,
+        vec![
+            ("net", Json::str("resnet18")),
+            ("res", Json::num(32u64)),
+            ("cold_samples", Json::num(3u64)),
+            ("pooled_samples", Json::num(5u64)),
+        ],
+    );
+    println!("pooled re-submit speedup over cold: {speedup:.2}x");
+
+    // clean shutdown so the bench binary exits 0 without leaking the
+    // daemon thread
+    w.write_all(b"{\"op\":\"shutdown\"}\n").unwrap();
+    w.flush().unwrap();
+    handle.join().unwrap().unwrap();
+}

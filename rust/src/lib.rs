@@ -36,6 +36,10 @@
 //!   with the validating [`pipeline::ScenarioBuilder`], per-stage JSON
 //!   artifact dumps, and the multi-threaded sweep executor
 //!   ([`pipeline::run_sweep`]).
+//! * [`server`] — sweep-as-a-service: the resident daemon behind
+//!   `cimfab serve` (JSON-lines wire protocol, fair priority queue with
+//!   cancellation, cross-job [`server::PrefixPool`]), observable
+//!   through [`util::telemetry`].
 //! * [`coordinator::Driver`] — convenience wrapper over the pipeline for
 //!   one-off runs: profile → allocate → simulate → report.
 //! * [`sim::simulate`] — run one chip configuration on one network trace.
@@ -65,6 +69,7 @@ pub mod pipeline;
 pub mod coordinator;
 pub mod config;
 pub mod report;
+pub mod server;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

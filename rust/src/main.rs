@@ -11,6 +11,7 @@
 //! cimfab golden   --net vgg11                        PJRT golden cross-check
 //! cimfab dispatch                                    live block-wise dataflow demo
 //! cimfab variance                                    ADC/variance ablation (§III-A)
+//! cimfab serve    --socket /tmp/cimfab.sock          resident sweep daemon
 //! ```
 //!
 //! Allocation strategies and dataflow models are resolved by name
@@ -26,7 +27,12 @@
 //! ([`cimfab::pipeline`]): all four accept `--dump-dir DIR` to dump
 //! every stage's JSON artifact and `--cache-dir DIR` to reuse prepared
 //! prefixes across runs (`--no-cache` forces a cold run); `sweep` and
-//! `util` also accept `--threads N` to size the sweep worker pool.
+//! `util` also accept `--threads N` to size the sweep worker pool
+//! (default: all cores, overridable via `CIMFAB_THREADS`). `serve`
+//! ([`cimfab::server`]) keeps profiles and prepared prefixes resident
+//! and accepts jobs over a Unix or TCP socket as JSON lines; any
+//! subcommand takes `--telemetry-dump` to print the
+//! [`cimfab::util::telemetry`] counters and stage timers on success.
 
 use cimfab::alloc::Allocator;
 use cimfab::coordinator::{Driver, DriverOpts, StatsSource};
@@ -41,7 +47,8 @@ use cimfab::xbar::{variance, ReadMode};
 use std::time::Instant;
 
 fn main() {
-    let args = match Args::from_env(&["verbose", "csv", "no-verify", "no-cache"]) {
+    let args = match Args::from_env(&["verbose", "csv", "no-verify", "no-cache", "telemetry-dump"])
+    {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -90,8 +97,15 @@ fn driver_opts(args: &Args) -> Result<DriverOpts, String> {
 }
 
 fn sweep_cfg(args: &Args) -> Result<SweepCfg, String> {
+    // the default (all cores, or CIMFAB_THREADS) is always >= 1, so a
+    // zero here can only come from an explicit `--threads 0` — reject it
+    // up front instead of hanging an empty worker pool
+    let threads = args.get_usize("threads", pipeline::executor::default_threads())?;
+    if threads == 0 {
+        return Err("--threads 0 is invalid; use --threads 1 for a serial run".to_string());
+    }
     Ok(SweepCfg {
-        threads: args.get_usize("threads", pipeline::executor::default_threads())?,
+        threads,
         dump_dir: args.get("dump-dir").map(str::to_string),
         // `--no-cache` wins over `--cache-dir`, so scripts can force a
         // cold run without editing their cache flag
@@ -101,6 +115,38 @@ fn sweep_cfg(args: &Args) -> Result<SweepCfg, String> {
             args.get("cache-dir").map(str::to_string)
         },
     })
+}
+
+/// `serve` flags → [`ServeCfg`]: `--socket PATH` (Unix) or
+/// `--listen ADDR` (TCP), exactly one of them, plus worker/queue sizing.
+fn serve_cfg(args: &Args) -> Result<cimfab::server::ServeCfg, String> {
+    use cimfab::server::{Bind, ServeCfg};
+    let bind = match (args.get("socket"), args.get("listen")) {
+        (Some(_), Some(_)) => {
+            return Err("--socket and --listen are mutually exclusive".to_string())
+        }
+        (Some(path), None) => Bind::Unix(path.into()),
+        (None, Some(addr)) => Bind::Tcp(addr.to_string()),
+        (None, None) => {
+            return Err("serve needs --socket PATH (unix) or --listen HOST:PORT (tcp)".to_string())
+        }
+    };
+    let mut cfg = ServeCfg::new(bind);
+    cfg.workers = args.get_usize("workers", cfg.workers)?;
+    if cfg.workers == 0 {
+        return Err("--workers 0 is invalid; serve needs at least one worker".to_string());
+    }
+    cfg.threads = args.get_usize("threads", cfg.threads)?;
+    if cfg.threads == 0 {
+        return Err("--threads 0 is invalid; use --threads 1 for serial prepares".to_string());
+    }
+    cfg.queue_cap = args.get_usize("queue-cap", cfg.queue_cap)?;
+    if cfg.queue_cap == 0 {
+        return Err("--queue-cap 0 is invalid; the queue must admit at least one job".to_string());
+    }
+    cfg.cache_dir =
+        if args.has_flag("no-cache") { None } else { args.get("cache-dir").map(str::to_string) };
+    Ok(cfg)
 }
 
 /// One-line prefix-cache report (only when a cache is configured, so
@@ -135,6 +181,19 @@ fn set_engine(scenarios: &mut [pipeline::Scenario], args: &Args) -> cimfab::Resu
 }
 
 fn run(args: &Args) -> cimfab::Result<()> {
+    let out = run_cmd(args);
+    // after a successful run, dump whatever the stages recorded — stage
+    // timers, cache/pool counters, queue gauges (empty sections render
+    // as an empty table, which is fine)
+    if out.is_ok() && args.has_flag("telemetry-dump") {
+        let snap = cimfab::util::telemetry::global().snapshot();
+        println!("== telemetry ==");
+        report::print_table(&report::telemetry_table(&snap))?;
+    }
+    out
+}
+
+fn run_cmd(args: &Args) -> cimfab::Result<()> {
     match args.subcommand.as_deref() {
         Some("report") => {
             let opts = driver_opts(args).map_err(anyhow::Error::msg)?;
@@ -474,6 +533,19 @@ fn run(args: &Args) -> cimfab::Result<()> {
             report::print_table(&cimfab::energy::energy_table(&rows))?;
             Ok(())
         }
+        Some("serve") => {
+            let cfg = serve_cfg(args).map_err(anyhow::Error::msg)?;
+            let server = cimfab::server::Server::bind(cfg)?;
+            match server.tcp_addr() {
+                Some(addr) => println!("cimfab serve: listening on tcp://{addr}"),
+                None => {
+                    if let Some(path) = args.get("socket") {
+                        println!("cimfab serve: listening on unix socket {path}");
+                    }
+                }
+            }
+            server.run()
+        }
         Some("dispatch") => dispatch_demo(args),
         Some("variance") => {
             println!("== §III-A: ADC read error vs rows-per-read (5% device variance) ==");
@@ -593,7 +665,7 @@ const HELP: &str = "\
 cimfab — compute-in-memory fabric simulator (Breaking Barriers reproduction)
 
 USAGE: cimfab <report|profile|simulate|sweep|util|energy|list-strategies|list-hw|\\
-               golden|dispatch|variance> [options]
+               golden|dispatch|variance|serve> [options]
 
 Common options:
   --net resnet18|resnet34|vgg11|mobilenet   network (default resnet18)
@@ -616,7 +688,7 @@ Common options:
   --steps N                design sizes in a sweep (default 5)
   --threads N              worker threads for sweep scenarios and prefix
                            preparation — --threads 1 runs fully serial
-                           (default: all cores)
+                           (default: all cores, or CIMFAB_THREADS)
   --dump-dir DIR           dump per-stage JSON artifacts under DIR
                            (profile|simulate|sweep|util)
   --cache-dir DIR          reuse prepared prefixes (graph/map/stats/
@@ -626,4 +698,15 @@ Common options:
                            'prefix cache hit|miss' per prefix
   --no-cache               ignore --cache-dir and recompute the prefix
   --no-verify              skip the sweep's serial cross-check
-  --seed N --csv --verbose --artifacts DIR";
+  --telemetry-dump         print telemetry counters/gauges/stage timers
+                           after a successful run
+  --seed N --csv --verbose --artifacts DIR
+
+serve options (see docs/architecture.md \"Serving layer\" for the wire
+protocol — JSON lines: submit/cancel/stats/shutdown):
+  --socket PATH            listen on a Unix-domain socket at PATH
+  --listen HOST:PORT       listen on TCP instead (port 0 picks a free one)
+  --workers N              concurrent job workers (default 2)
+  --queue-cap N            max live (queued) jobs before submits are
+                           rejected (default 256)
+  --threads / --cache-dir / --no-cache as above, applied to every job";

@@ -83,6 +83,8 @@ pub fn run_scenarios_prepared(
         );
     }
     let dumper = cfg.dumper()?;
+    let timer = crate::util::telemetry::global().timer("executor.fanout");
+    let _span = timer.start();
     run_indexed(scenarios.len(), cfg.threads, |i| {
         run_scenario(&prep.view(), &scenarios[i], dumper.as_ref())
     })
@@ -91,6 +93,10 @@ pub fn run_scenarios_prepared(
 /// Run a full sweep: prepare every distinct prefix once, then execute
 /// all scenarios on the worker pool. Outcomes come back in input order.
 pub fn run_sweep(scenarios: &[Scenario], cfg: &SweepCfg) -> Result<Vec<ScenarioOutcome>> {
+    let reg = crate::util::telemetry::global();
+    reg.counter("executor.sweeps").incr();
+    let sweep_timer = reg.timer("executor.sweep");
+    let _sweep_span = sweep_timer.start();
     let dumper = cfg.dumper()?;
 
     // Distinct prefixes in first-appearance order, deduplicated by id()

@@ -261,6 +261,26 @@ pub fn prepare_cached_threads(
     cache: Option<&PrefixCache>,
     threads: usize,
 ) -> Result<(Prepared, CacheStatus)> {
+    let reg = crate::util::telemetry::global();
+    let timer = reg.timer("stage.prepare");
+    let _span = timer.start();
+    let out = prepare_cached_inner(spec, dump, cache, threads)?;
+    reg.counter(match out.1 {
+        CacheStatus::Disabled => "prefix_cache.disabled",
+        CacheStatus::Uncacheable => "prefix_cache.uncacheable",
+        CacheStatus::Miss => "prefix_cache.miss",
+        CacheStatus::Hit => "prefix_cache.hit",
+    })
+    .incr();
+    Ok(out)
+}
+
+fn prepare_cached_inner(
+    spec: &PrefixSpec,
+    dump: Option<&Dumper>,
+    cache: Option<&PrefixCache>,
+    threads: usize,
+) -> Result<(Prepared, CacheStatus)> {
     let Some(cache) = cache else {
         return Ok((prepare_full(spec, dump, false, threads)?.0, CacheStatus::Disabled));
     };
@@ -367,12 +387,15 @@ fn golden_activations(
 
 /// Run the four scenario stages against a prepared prefix. The
 /// scenario's strategy names resolve through the global
-/// [`crate::strategy::StrategyRegistry`].
+/// [`crate::strategy::StrategyRegistry`]. Each stage's latency is
+/// recorded in [`crate::util::telemetry`] under `stage.allocate` /
+/// `stage.place` / `stage.simulate` / `stage.report`.
 pub fn run_scenario(
     prep: &PreparedView<'_>,
     sc: &Scenario,
     dump: Option<&Dumper>,
 ) -> Result<ScenarioOutcome> {
+    let reg = crate::util::telemetry::global();
     let sub = format!("{}/{}", sc.prefix.id(), sc.id());
     let chip = prep.hw.chip_cfg(sc.pes)?;
     let allocator = crate::strategy::StrategyRegistry::lookup_allocator(&sc.alloc)?;
@@ -380,7 +403,9 @@ pub fn run_scenario(
     let engine = crate::sim::engine::lookup(&sc.engine)?;
 
     // Allocate
-    let plan = allocator.allocate(prep.map, prep.profile, chip.total_arrays())?;
+    let plan = reg
+        .timer("stage.allocate")
+        .time(|| allocator.allocate(prep.map, prep.profile, chip.total_arrays()))?;
     anyhow::ensure!(
         !flow.requires_uniform_plan() || plan.is_layerwise(),
         "dataflow '{}' requires layer-uniform plans, but '{}' produced a non-uniform one",
@@ -392,7 +417,8 @@ pub fn run_scenario(
     }
 
     // Place
-    let placement = crate::mapping::place(prep.map, &plan, &chip)?;
+    let placement =
+        reg.timer("stage.place").time(|| crate::mapping::place(prep.map, &plan, &chip))?;
     if let Some(d) = dump {
         d.dump(&sub, Stage::Place, &artifact::placement_json(&placement))?;
     }
@@ -400,16 +426,22 @@ pub fn run_scenario(
     // Simulate
     let cfg =
         crate::sim::SimCfg::for_strategy(allocator, flow, sc.sim_images).with_engine(engine);
-    let result = crate::sim::simulate(&chip, prep.map, &plan, &placement, prep.trace, cfg);
+    let result = reg
+        .timer("stage.simulate")
+        .time(|| crate::sim::simulate(&chip, prep.map, &plan, &placement, prep.trace, cfg));
     if let Some(d) = dump {
         d.dump(&sub, Stage::Simulate, &artifact::sim_result_json(&result))?;
     }
 
     // Report
+    let report_timer = reg.timer("stage.report");
+    let report_span = report_timer.start();
     let outcome = ScenarioOutcome { scenario: sc.clone(), plan, result };
     if let Some(d) = dump {
         d.dump(&sub, Stage::Report, &outcome.report_json())?;
     }
+    drop(report_span);
+    reg.counter("pipeline.scenarios").incr();
     Ok(outcome)
 }
 

@@ -98,6 +98,40 @@ pub fn fig9_table(map: &NetworkMap, results: &[(&str, &SimResult)]) -> Table {
     t
 }
 
+/// Render a [`crate::util::telemetry::Registry::snapshot`] as one flat
+/// table — counters, gauges, then timers, each alphabetical (the
+/// snapshot's `BTreeMap` order), so `--telemetry-dump` output diffs
+/// cleanly across runs.
+pub fn telemetry_table(snap: &crate::util::json::Json) -> Table {
+    use crate::util::json::Json;
+    let mut t = Table::new(["metric", "kind", "count", "total_ms", "mean_ms", "max_ms"]);
+    let entries = |j: &Json| -> Vec<(String, Json)> {
+        match j {
+            Json::Obj(m) => m.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
+            _ => Vec::new(),
+        }
+    };
+    for (name, v) in entries(snap.get("counters")) {
+        let n = v.as_u64().unwrap_or(0);
+        t.row([name, "counter".into(), n.to_string(), "-".into(), "-".into(), "-".into()]);
+    }
+    for (name, v) in entries(snap.get("gauges")) {
+        let n = v.as_i64().unwrap_or(0);
+        t.row([name, "gauge".into(), n.to_string(), "-".into(), "-".into(), "-".into()]);
+    }
+    for (name, v) in entries(snap.get("timers")) {
+        t.row([
+            name,
+            "timer".into(),
+            v.get("count").as_u64().unwrap_or(0).to_string(),
+            fmt_f(v.get("total_ms").as_f64().unwrap_or(0.0), 3),
+            fmt_f(v.get("mean_ms").as_f64().unwrap_or(0.0), 3),
+            fmt_f(v.get("max_ms").as_f64().unwrap_or(0.0), 3),
+        ]);
+    }
+    t
+}
+
 /// Throughput speedup summary (the paper's headline numbers), relative
 /// to the three reference strategies when present.
 pub fn speedup_summary(results: &[(String, SimResult)]) -> Table {
@@ -164,6 +198,33 @@ mod tests {
         let rendered = speedup_summary(&results).render();
         assert!(rendered.contains("hybrid"), "{rendered}");
         assert!(rendered.contains("6.00"), "{rendered}");
+    }
+
+    #[test]
+    fn telemetry_table_renders_all_kinds() {
+        use crate::util::json::Json;
+        let snap = Json::obj(vec![
+            ("counters", Json::obj(vec![("serve.jobs.accepted", Json::num(4u64))])),
+            ("gauges", Json::obj(vec![("serve.queue.depth", Json::num(-1i64))])),
+            (
+                "timers",
+                Json::obj(vec![(
+                    "stage.simulate",
+                    Json::obj(vec![
+                        ("count", Json::num(2u64)),
+                        ("total_ms", Json::num(3.5)),
+                        ("mean_ms", Json::num(1.75)),
+                        ("max_ms", Json::num(2.0)),
+                    ]),
+                )]),
+            ),
+        ]);
+        let rendered = telemetry_table(&snap).render();
+        assert!(rendered.contains("serve.jobs.accepted"), "{rendered}");
+        assert!(rendered.contains("counter"), "{rendered}");
+        assert!(rendered.contains("-1"), "{rendered}");
+        assert!(rendered.contains("stage.simulate"), "{rendered}");
+        assert!(rendered.contains("1.750"), "{rendered}");
     }
 
     #[test]

@@ -1,0 +1,553 @@
+//! The resident daemon: socket listener, connection threads, worker
+//! pool, and graceful shutdown.
+//!
+//! One thread accepts connections (non-blocking, polling the shutdown
+//! flag). Each connection gets a reader thread that parses one request
+//! per line and answers on a per-connection writer shared (behind a
+//! mutex) with the workers, so result lines from concurrent jobs
+//! interleave at line granularity only. `workers` threads pop jobs from
+//! the [`JobQueue`] and run them: shared prefix through the
+//! [`PrefixPool`], then each scenario through
+//! [`crate::pipeline::run_scenario`], streaming a `result` line as each
+//! one completes. A job's scenarios run serially (parallelism comes
+//! from running jobs on different workers); `threads` bounds the
+//! intra-prepare fan-out instead.
+//!
+//! Shutdown is graceful from either trigger — a `shutdown` wire request
+//! or `SIGTERM`/`SIGINT`: stop accepting, drop queued-but-unstarted
+//! jobs, let in-flight jobs finish, join the workers, remove the Unix
+//! socket file, and return `Ok` so the process exits 0.
+
+use std::collections::HashMap;
+use std::io::{BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::pool::PrefixPool;
+use super::protocol::{self, Request};
+use super::queue::{Cancellable, JobHandle, JobQueue, JobState, PushError};
+use crate::pipeline::{run_scenario, PrefixCache, PrefixSpec, Scenario};
+use crate::util::json::Json;
+use crate::util::telemetry;
+use anyhow::Result;
+
+/// Where the daemon listens.
+#[derive(Debug, Clone)]
+pub enum Bind {
+    /// A Unix-domain socket at this path (must not already exist).
+    Unix(PathBuf),
+    /// A TCP address, e.g. `127.0.0.1:7171` (port 0 picks a free one;
+    /// see [`Server::tcp_addr`]).
+    Tcp(String),
+}
+
+/// Daemon configuration; construct with [`ServeCfg::new`] and override
+/// fields as needed.
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    /// Listen address.
+    pub bind: Bind,
+    /// Concurrent job workers (>= 1).
+    pub workers: usize,
+    /// Worker-pool bound inside each prefix prepare.
+    pub threads: usize,
+    /// Admission queue capacity (live jobs).
+    pub queue_cap: usize,
+    /// On-disk prefix cache directory (`None` = in-memory pool only).
+    pub cache_dir: Option<String>,
+}
+
+impl ServeCfg {
+    /// Defaults: 2 workers, [`crate::util::par::default_threads`]
+    /// prepare threads, a 256-job queue, no on-disk cache.
+    pub fn new(bind: Bind) -> ServeCfg {
+        ServeCfg {
+            bind,
+            workers: 2,
+            threads: crate::util::par::default_threads(),
+            queue_cap: 256,
+            cache_dir: None,
+        }
+    }
+}
+
+type SharedWriter = Arc<Mutex<Box<dyn Write + Send>>>;
+
+/// One admitted job, queued for a worker.
+struct Job {
+    handle: Arc<JobHandle>,
+    prefix: PrefixSpec,
+    scenarios: Vec<Scenario>,
+    out: SharedWriter,
+}
+
+impl Cancellable for Job {
+    fn is_cancelled(&self) -> bool {
+        self.handle.is_cancelled()
+    }
+}
+
+/// Per-server counters (instance-local, unlike the global telemetry
+/// registry, so several servers in one process stay distinguishable).
+#[derive(Default)]
+struct ServeStats {
+    accepted: AtomicU64,
+    completed: AtomicU64,
+    cancelled: AtomicU64,
+    failed: AtomicU64,
+    rejected: AtomicU64,
+    in_flight: AtomicI64,
+}
+
+struct Shared {
+    queue: JobQueue<Job>,
+    pool: PrefixPool,
+    cache: Option<PrefixCache>,
+    threads: usize,
+    jobs: Mutex<HashMap<String, Arc<JobHandle>>>,
+    next_job: AtomicU64,
+    shutdown: AtomicBool,
+    stats: ServeStats,
+}
+
+impl Shared {
+    fn unregister(&self, id: &str) {
+        self.jobs.lock().unwrap().remove(id);
+    }
+
+    fn stats_json(&self) -> Json {
+        Json::obj(vec![
+            ("accepted", Json::num(self.stats.accepted.load(Ordering::Relaxed))),
+            ("completed", Json::num(self.stats.completed.load(Ordering::Relaxed))),
+            ("cancelled", Json::num(self.stats.cancelled.load(Ordering::Relaxed))),
+            ("failed", Json::num(self.stats.failed.load(Ordering::Relaxed))),
+            ("rejected", Json::num(self.stats.rejected.load(Ordering::Relaxed))),
+            ("in_flight", Json::num(self.stats.in_flight.load(Ordering::Relaxed))),
+            ("queue_depth", Json::num(self.queue.live_len() as u64)),
+            ("pool", self.pool.stats().to_json(self.pool.ready_len())),
+        ])
+    }
+}
+
+enum Listener {
+    #[cfg(unix)]
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+enum Stream {
+    #[cfg(unix)]
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Listener {
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(nb),
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+        }
+    }
+
+    fn accept(&self) -> std::io::Result<Stream> {
+        match self {
+            #[cfg(unix)]
+            Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+        }
+    }
+}
+
+impl Stream {
+    /// Split into a read half and a boxed write half (`try_clone`
+    /// duplicates the underlying socket).
+    fn split(self) -> std::io::Result<(Box<dyn Read + Send>, Box<dyn Write + Send>)> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => {
+                s.set_nonblocking(false)?;
+                let r = s.try_clone()?;
+                Ok((Box::new(r), Box::new(s)))
+            }
+            Stream::Tcp(s) => {
+                s.set_nonblocking(false)?;
+                let r = s.try_clone()?;
+                Ok((Box::new(r), Box::new(s)))
+            }
+        }
+    }
+}
+
+// ---- signal handling ------------------------------------------------------
+
+static TERMINATE: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_signal_handler() {
+    use std::sync::OnceLock;
+    static INSTALLED: OnceLock<()> = OnceLock::new();
+    INSTALLED.get_or_init(|| {
+        extern "C" fn on_signal(_sig: i32) {
+            TERMINATE.store(true, Ordering::SeqCst);
+        }
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            let _ = signal(SIGTERM, on_signal);
+            let _ = signal(SIGINT, on_signal);
+        }
+    });
+}
+
+#[cfg(not(unix))]
+fn install_signal_handler() {}
+
+// ---- the server -----------------------------------------------------------
+
+/// A bound (but not yet running) daemon. [`Server::bind`] reserves the
+/// socket; [`Server::run`] serves until shutdown.
+pub struct Server {
+    cfg: ServeCfg,
+    listener: Listener,
+    shared: Arc<Shared>,
+}
+
+impl Server {
+    /// Bind the configured address and build the shared state. Fails
+    /// fast on a bad address, an existing Unix socket path, a zero
+    /// worker count, or an unusable cache directory.
+    pub fn bind(cfg: ServeCfg) -> Result<Server> {
+        anyhow::ensure!(cfg.workers >= 1, "serve needs at least one worker");
+        anyhow::ensure!(cfg.threads >= 1, "serve needs at least one prepare thread");
+        let listener = match &cfg.bind {
+            Bind::Unix(path) => {
+                #[cfg(unix)]
+                {
+                    anyhow::ensure!(
+                        !path.exists(),
+                        "socket path {} already exists — is another daemon running? \
+                         (remove the file if not)",
+                        path.display()
+                    );
+                    Listener::Unix(UnixListener::bind(path)?)
+                }
+                #[cfg(not(unix))]
+                {
+                    let _ = path;
+                    anyhow::bail!("unix sockets are not available on this platform — use --listen")
+                }
+            }
+            Bind::Tcp(addr) => Listener::Tcp(TcpListener::bind(addr)?),
+        };
+        let cache = match &cfg.cache_dir {
+            Some(dir) => Some(PrefixCache::new(dir)?),
+            None => None,
+        };
+        let shared = Arc::new(Shared {
+            queue: JobQueue::new(cfg.queue_cap),
+            pool: PrefixPool::new(),
+            cache,
+            threads: cfg.threads,
+            jobs: Mutex::new(HashMap::new()),
+            next_job: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+            stats: ServeStats::default(),
+        });
+        Ok(Server { cfg, listener, shared })
+    }
+
+    /// The actual TCP address when bound with [`Bind::Tcp`] (useful
+    /// with port 0); `None` for Unix sockets.
+    pub fn tcp_addr(&self) -> Option<SocketAddr> {
+        match &self.listener {
+            Listener::Tcp(l) => l.local_addr().ok(),
+            #[cfg(unix)]
+            Listener::Unix(_) => None,
+        }
+    }
+
+    /// Serve until a `shutdown` request or `SIGTERM`/`SIGINT` arrives,
+    /// then shut down gracefully (finish in-flight jobs, join the
+    /// workers, remove the Unix socket file) and return `Ok`.
+    pub fn run(self) -> Result<()> {
+        install_signal_handler();
+        self.listener.set_nonblocking(true)?;
+
+        let mut workers = Vec::with_capacity(self.cfg.workers);
+        for i in 0..self.cfg.workers {
+            let shared = self.shared.clone();
+            let t = std::thread::Builder::new()
+                .name(format!("serve-worker-{i}"))
+                .spawn(move || worker_loop(&shared))?;
+            workers.push(t);
+        }
+
+        loop {
+            if TERMINATE.load(Ordering::SeqCst) || self.shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match self.listener.accept() {
+                Ok(stream) => {
+                    let shared = self.shared.clone();
+                    // detached: a connection thread blocked on an idle
+                    // client must not delay shutdown
+                    let _ = std::thread::Builder::new()
+                        .name("serve-conn".into())
+                        .spawn(move || connection_loop(&shared, stream));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Err(e) => {
+                    self.shared.shutdown.store(true, Ordering::SeqCst);
+                    self.shared.queue.close();
+                    for t in workers {
+                        let _ = t.join();
+                    }
+                    self.cleanup_socket();
+                    return Err(e.into());
+                }
+            }
+        }
+
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.queue.close();
+        for t in workers {
+            let _ = t.join();
+        }
+        self.cleanup_socket();
+        Ok(())
+    }
+
+    fn cleanup_socket(&self) {
+        if let Bind::Unix(path) = &self.cfg.bind {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+fn write_line(out: &SharedWriter, bytes: &[u8]) {
+    // a vanished client must not take the worker down with it; its
+    // job keeps running and later writes keep failing silently
+    let mut w = out.lock().unwrap();
+    let _ = w.write_all(bytes);
+    let _ = w.flush();
+}
+
+fn trim_line(buf: &[u8]) -> &[u8] {
+    let mut s = buf;
+    while matches!(s.first(), Some(b' ' | b'\t' | b'\r' | b'\n')) {
+        s = &s[1..];
+    }
+    while matches!(s.last(), Some(b' ' | b'\t' | b'\r' | b'\n')) {
+        s = &s[..s.len() - 1];
+    }
+    s
+}
+
+// ---- connection side ------------------------------------------------------
+
+fn connection_loop(shared: &Arc<Shared>, stream: Stream) {
+    let Ok((read_half, write_half)) = stream.split() else { return };
+    let out: SharedWriter = Arc::new(Mutex::new(write_half));
+    let mut reader = BufReader::new(read_half);
+    let mut buf = Vec::new();
+    loop {
+        buf.clear();
+        match std::io::BufRead::read_until(&mut reader, b'\n', &mut buf) {
+            Ok(0) | Err(_) => return, // EOF or dead socket
+            Ok(_) => {}
+        }
+        let line = trim_line(&buf);
+        if line.is_empty() {
+            continue;
+        }
+        let closing = match protocol::parse_request(line) {
+            Ok(req) => handle_request(shared, &out, req),
+            Err(e) => {
+                write_line(&out, &protocol::error_line(None, &e.to_string()));
+                false
+            }
+        };
+        if closing || shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+    }
+}
+
+/// Dispatch one parsed request; `true` means close the connection.
+fn handle_request(shared: &Arc<Shared>, out: &SharedWriter, req: Request) -> bool {
+    match req {
+        Request::Submit(spec) => {
+            submit(shared, out, spec);
+            false
+        }
+        Request::Cancel { job } => {
+            let handle = shared.jobs.lock().unwrap().get(&job).cloned();
+            let found = match handle {
+                Some(h) => {
+                    h.cancel();
+                    true
+                }
+                None => false,
+            };
+            write_line(out, &protocol::cancelled_line(&job, found));
+            false
+        }
+        Request::Stats => {
+            write_line(
+                out,
+                &protocol::stats_line(&shared.stats_json(), &telemetry::global().snapshot()),
+            );
+            false
+        }
+        Request::Shutdown => {
+            write_line(out, &protocol::shutting_down_line());
+            shared.shutdown.store(true, Ordering::SeqCst);
+            shared.queue.close();
+            true
+        }
+    }
+}
+
+fn submit(shared: &Arc<Shared>, out: &SharedWriter, spec: protocol::JobSpec) {
+    let id = spec
+        .id
+        .clone()
+        .unwrap_or_else(|| format!("job-{}", shared.next_job.fetch_add(1, Ordering::Relaxed) + 1));
+    let (prefix, scenarios) = match spec.build() {
+        Ok(v) => v,
+        Err(e) => {
+            shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            write_line(out, &protocol::error_line(Some(&id), &format!("{e:#}")));
+            return;
+        }
+    };
+    let handle = JobHandle::new(id.clone());
+    {
+        let mut jobs = shared.jobs.lock().unwrap();
+        if jobs.contains_key(&id) {
+            drop(jobs);
+            shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            write_line(
+                out,
+                &protocol::error_line(Some(&id), &format!("a job named '{id}' is still live")),
+            );
+            return;
+        }
+        jobs.insert(id.clone(), handle.clone());
+    }
+    let n = scenarios.len();
+    let job = Job { handle, prefix, scenarios, out: out.clone() };
+    match shared.queue.push(spec.priority, job) {
+        Ok(depth) => {
+            shared.stats.accepted.fetch_add(1, Ordering::Relaxed);
+            telemetry::global().counter("serve.jobs.accepted").incr();
+            telemetry::global().gauge("serve.queue.depth").set(depth as i64);
+            write_line(out, &protocol::accepted_line(&id, n, depth));
+        }
+        Err(PushError::Full(_)) => {
+            shared.unregister(&id);
+            shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            telemetry::global().counter("serve.jobs.rejected").incr();
+            write_line(
+                out,
+                &protocol::error_line(
+                    Some(&id),
+                    &format!("queue full ({} live jobs) — retry later", shared.queue.capacity()),
+                ),
+            );
+        }
+        Err(PushError::Closed(_)) => {
+            shared.unregister(&id);
+            write_line(out, &protocol::error_line(Some(&id), "server is shutting down"));
+        }
+    }
+}
+
+// ---- worker side ----------------------------------------------------------
+
+fn worker_loop(shared: &Arc<Shared>) {
+    while let Some(job) = shared.queue.pop() {
+        telemetry::global().gauge("serve.queue.depth").set(shared.queue.live_len() as i64);
+        if job.handle.is_cancelled() {
+            job.handle.set_state(JobState::Cancelled);
+            shared.stats.cancelled.fetch_add(1, Ordering::Relaxed);
+            telemetry::global().counter("serve.jobs.cancelled").incr();
+            write_line(&job.out, &protocol::done_line(job.handle.id(), 0, 0, true));
+            shared.unregister(job.handle.id());
+            continue;
+        }
+        job.handle.set_state(JobState::Running);
+        shared.stats.in_flight.fetch_add(1, Ordering::Relaxed);
+        telemetry::global().gauge("serve.jobs.in_flight").add(1);
+        run_job(shared, &job);
+        shared.stats.in_flight.fetch_sub(1, Ordering::Relaxed);
+        telemetry::global().gauge("serve.jobs.in_flight").sub(1);
+        shared.unregister(job.handle.id());
+    }
+}
+
+fn run_job(shared: &Arc<Shared>, job: &Job) {
+    let timer = telemetry::global().timer("serve.job");
+    let _span = timer.start();
+    let id = job.handle.id();
+    let (prep, status) =
+        match shared.pool.get_or_prepare(&job.prefix, shared.cache.as_ref(), shared.threads) {
+            Ok(v) => v,
+            Err(e) => {
+                job.handle.set_state(JobState::Failed);
+                shared.stats.failed.fetch_add(1, Ordering::Relaxed);
+                telemetry::global().counter("serve.jobs.failed").incr();
+                write_line(&job.out, &protocol::error_line(Some(id), &format!("{e:#}")));
+                write_line(&job.out, &protocol::done_line(id, 0, job.scenarios.len(), false));
+                return;
+            }
+        };
+    let (mut ok, mut failed, mut cancelled) = (0usize, 0usize, false);
+    for (i, sc) in job.scenarios.iter().enumerate() {
+        if job.handle.is_cancelled() {
+            cancelled = true;
+            break;
+        }
+        match run_scenario(&prep.view(), sc, None) {
+            Ok(outcome) => {
+                ok += 1;
+                write_line(&job.out, &protocol::result_line(id, i, status.name(), &outcome));
+            }
+            Err(e) => {
+                failed += 1;
+                write_line(
+                    &job.out,
+                    &protocol::error_line(Some(id), &format!("scenario {}: {e:#}", sc.id())),
+                );
+            }
+        }
+    }
+    write_line(&job.out, &protocol::done_line(id, ok, failed, cancelled));
+    let (state, counter) = if cancelled {
+        (JobState::Cancelled, &shared.stats.cancelled)
+    } else if failed > 0 {
+        (JobState::Failed, &shared.stats.failed)
+    } else {
+        (JobState::Done, &shared.stats.completed)
+    };
+    job.handle.set_state(state);
+    counter.fetch_add(1, Ordering::Relaxed);
+    telemetry::global()
+        .counter(match state {
+            JobState::Cancelled => "serve.jobs.cancelled",
+            JobState::Failed => "serve.jobs.failed",
+            _ => "serve.jobs.completed",
+        })
+        .incr();
+}

@@ -1,0 +1,122 @@
+//! Sweep-as-a-service: the resident daemon behind `cimfab serve`.
+//!
+//! Every batch invocation re-resolves hardware profiles and re-warms
+//! the prefix cache from disk; the daemon keeps both resident and
+//! shares them across jobs, which is exactly the reuse the paper's
+//! shared-prefix structure makes possible. The subsystem is four
+//! layers, each usable on its own:
+//!
+//! ```text
+//! client ── JSON line ──▶ connection thread          (protocol)
+//!                            │ validate (ScenarioBuilder), admit
+//!                            ▼
+//!                         JobQueue                   (queue)
+//!                            │ priority + FIFO, bounded, cancellable
+//!                            ▼ pop
+//!                         worker thread              (daemon)
+//!                            │ get_or_prepare
+//!                            ▼
+//!                         PrefixPool ──▶ pipeline::cache ──▶ prepare
+//!                            │ one in-flight prepare per key
+//!                            ▼
+//!                         run_scenario × N ── JSON lines ──▶ client
+//! ```
+//!
+//! - [`protocol`] — the JSON-lines wire format: streaming request
+//!   parsing (no DOM on the ingest path) and compact response lines.
+//! - [`queue`] — bounded fair priority admission with per-job
+//!   cancellation ([`JobHandle`]).
+//! - [`pool`] — the in-memory [`PrefixPool`] deduplicating shared
+//!   prefixes across concurrent jobs, in front of the on-disk
+//!   [`crate::pipeline::PrefixCache`].
+//! - [`daemon`] — the socket listener, connection threads, and worker
+//!   pool tying it together ([`Server`], [`ServeCfg`]).
+//!
+//! Metrics flow into [`crate::util::telemetry`] (see the label table in
+//! `docs/architecture.md`) and are exposed over the wire via the
+//! `stats` request.
+
+pub mod daemon;
+pub mod pool;
+pub mod protocol;
+pub mod queue;
+
+pub use daemon::{Bind, ServeCfg, Server};
+pub use pool::{PoolStats, PoolStatus, PrefixPool};
+pub use protocol::{JobSpec, Request, ScenarioReq};
+pub use queue::{Cancellable, JobHandle, JobQueue, JobState, PushError};
+
+use crate::util::json::JsonError;
+
+/// Request-level failures in the serving layer.
+///
+/// Implements [`std::error::Error`] (with `source` for the wrapped
+/// variants), so callers can `?` a `ServerError` straight into an
+/// `anyhow::Result` instead of stringifying. Job-semantic failures
+/// (unknown net, zero budget, …) are *not* this type — they surface as
+/// `anyhow` errors from [`crate::pipeline::ScenarioBuilder`] and are
+/// reported per job over the wire.
+#[derive(Debug)]
+pub enum ServerError {
+    /// The request line is not valid JSON.
+    Json(JsonError),
+    /// The socket failed while reading or writing.
+    Io(std::io::Error),
+    /// Structurally valid JSON that is not a valid request (unknown
+    /// op/field, missing required field, wrong type).
+    Protocol(String),
+}
+
+impl std::fmt::Display for ServerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServerError::Json(e) => write!(f, "invalid request JSON: {e}"),
+            ServerError::Io(e) => write!(f, "socket i/o error: {e}"),
+            ServerError::Protocol(msg) => write!(f, "protocol error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServerError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ServerError::Json(e) => Some(e),
+            ServerError::Io(e) => Some(e),
+            ServerError::Protocol(_) => None,
+        }
+    }
+}
+
+impl From<JsonError> for ServerError {
+    fn from(e: JsonError) -> ServerError {
+        ServerError::Json(e)
+    }
+}
+
+impl From<std::io::Error> for ServerError {
+    fn from(e: std::io::Error) -> ServerError {
+        ServerError::Io(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_error_displays_and_chains() {
+        let e = ServerError::Protocol("no such op".into());
+        assert_eq!(e.to_string(), "protocol error: no such op");
+        assert!(std::error::Error::source(&e).is_none());
+
+        let e = ServerError::from(JsonError { offset: 3, msg: "expected a value".into() });
+        assert!(e.to_string().contains("byte 3"));
+        assert!(std::error::Error::source(&e).is_some());
+
+        // `?` through anyhow works because ServerError: Error + Send + Sync
+        fn through() -> anyhow::Result<()> {
+            Err(ServerError::Protocol("boom".into()))?
+        }
+        assert!(through().is_err());
+    }
+}

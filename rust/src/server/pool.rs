@@ -1,0 +1,319 @@
+//! In-memory prefix pool: cross-job deduplication of shared prefixes.
+//!
+//! The batch executor already dedups prefixes *within* one sweep; the
+//! pool extends that guarantee across *concurrent* jobs in the daemon.
+//! It sits in front of the on-disk [`PrefixCache`]: a request for a
+//! prefix that is already resident returns the shared [`Prepared`]
+//! immediately; a request for a prefix another worker is currently
+//! preparing blocks until that one `prepare` finishes and then shares
+//! its result; only a request for a genuinely new prefix pays for a
+//! `prepare` (which itself may be satisfied by the on-disk cache).
+//! There is never more than one in-flight `prepare` per key.
+//!
+//! Failure is not sticky: a failed prepare wakes its waiters with the
+//! error, but the failed slot is treated as absent by the next fresh
+//! arrival, which retries from scratch. A cancelled or failed job can
+//! therefore never poison the pool for later jobs.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::pipeline::{prepare_cached_threads, PrefixCache, PrefixSpec, Prepared};
+use crate::util::json::Json;
+use crate::util::telemetry;
+use anyhow::Result;
+
+enum Slot {
+    /// One worker is preparing this prefix; wait on the condvar.
+    InFlight,
+    /// Prepared and resident; share it.
+    Ready(Arc<Prepared>),
+    /// The last prepare failed. Waiters see the message; the next
+    /// fresh arrival clears the slot and retries.
+    Failed(String),
+}
+
+/// How [`PrefixPool::get_or_prepare`] satisfied a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolStatus {
+    /// The prefix was already resident.
+    Hit,
+    /// This call ran the prepare (possibly replayed from the on-disk
+    /// cache) and populated the pool.
+    Prepared,
+    /// Another worker was already preparing it; this call waited and
+    /// shares that result.
+    Joined,
+}
+
+impl PoolStatus {
+    /// Short wire-protocol name (`"pool-hit"`, `"prepared"`, `"joined"`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PoolStatus::Hit => "pool-hit",
+            PoolStatus::Prepared => "prepared",
+            PoolStatus::Joined => "joined",
+        }
+    }
+}
+
+/// Point-in-time counters for one pool instance (unlike the global
+/// telemetry registry, these are private to the pool, so tests and the
+/// `stats` wire request can make exact assertions even when several
+/// pools live in one process).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Requests satisfied by a resident prefix.
+    pub hits: u64,
+    /// Requests that ran the prepare themselves.
+    pub misses: u64,
+    /// Requests that waited for another worker's in-flight prepare.
+    pub joins: u64,
+    /// Prepares that failed (each also counts as a miss).
+    pub failures: u64,
+}
+
+impl PoolStats {
+    /// Render as a JSON object for the `stats` wire response.
+    pub fn to_json(&self, ready: usize) -> Json {
+        Json::obj(vec![
+            ("hits", Json::num(self.hits)),
+            ("misses", Json::num(self.misses)),
+            ("joins", Json::num(self.joins)),
+            ("failures", Json::num(self.failures)),
+            ("ready", Json::num(ready as u64)),
+        ])
+    }
+}
+
+/// The pool proper. All methods take `&self`; one instance is shared by
+/// every daemon worker behind an `Arc`.
+#[derive(Default)]
+pub struct PrefixPool {
+    slots: Mutex<HashMap<String, Slot>>,
+    done: Condvar,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    joins: AtomicU64,
+    failures: AtomicU64,
+}
+
+/// Marks the in-flight slot `Failed` if the preparing thread unwinds
+/// without reaching a normal outcome, so waiters are never stranded on
+/// a slot whose preparer died.
+struct InFlightGuard<'a> {
+    pool: &'a PrefixPool,
+    key: &'a str,
+    armed: bool,
+}
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            let mut slots = self.pool.slots.lock().unwrap();
+            slots.insert(self.key.to_string(), Slot::Failed("preparer panicked".into()));
+            self.pool.done.notify_all();
+        }
+    }
+}
+
+impl PrefixPool {
+    /// An empty pool.
+    pub fn new() -> PrefixPool {
+        PrefixPool::default()
+    }
+
+    /// Return the shared [`Prepared`] for `spec`, preparing it (through
+    /// the on-disk `cache`, when one is given) if no other caller has
+    /// yet. Concurrent callers with the same spec run exactly one
+    /// prepare between them; `threads` bounds that prepare's worker
+    /// pool. The key is [`PrefixSpec::id`] — the same identity the
+    /// batch executor dedups on.
+    pub fn get_or_prepare(
+        &self,
+        spec: &PrefixSpec,
+        cache: Option<&PrefixCache>,
+        threads: usize,
+    ) -> Result<(Arc<Prepared>, PoolStatus)> {
+        let key = spec.id();
+        let mut joined = false;
+        let mut slots = self.slots.lock().unwrap();
+        loop {
+            match slots.get(&key) {
+                Some(Slot::Ready(p)) => {
+                    let p = p.clone();
+                    drop(slots);
+                    return if joined {
+                        self.joins.fetch_add(1, Ordering::Relaxed);
+                        telemetry::global().counter("pool.join").incr();
+                        Ok((p, PoolStatus::Joined))
+                    } else {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        telemetry::global().counter("pool.hit").incr();
+                        Ok((p, PoolStatus::Hit))
+                    };
+                }
+                Some(Slot::InFlight) => {
+                    if !joined {
+                        telemetry::global().counter("pool.wait").incr();
+                        joined = true;
+                    }
+                    slots = self.done.wait(slots).unwrap();
+                }
+                Some(Slot::Failed(msg)) => {
+                    if joined {
+                        // the prepare this caller was waiting on failed
+                        let msg = msg.clone();
+                        drop(slots);
+                        anyhow::bail!("shared prefix '{key}' failed to prepare: {msg}");
+                    }
+                    // stale failure from an earlier job: retry fresh
+                    slots.remove(&key);
+                }
+                None => {
+                    slots.insert(key.clone(), Slot::InFlight);
+                    drop(slots);
+                    return self.prepare_slot(spec, &key, cache, threads);
+                }
+            }
+        }
+    }
+
+    fn prepare_slot(
+        &self,
+        spec: &PrefixSpec,
+        key: &str,
+        cache: Option<&PrefixCache>,
+        threads: usize,
+    ) -> Result<(Arc<Prepared>, PoolStatus)> {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        telemetry::global().counter("pool.miss").incr();
+        let mut guard = InFlightGuard { pool: self, key, armed: true };
+        let outcome = prepare_cached_threads(spec, None, cache, threads);
+        guard.armed = false;
+        drop(guard);
+        let mut slots = self.slots.lock().unwrap();
+        match outcome {
+            Ok((prep, _cache_status)) => {
+                let p = Arc::new(prep);
+                slots.insert(key.to_string(), Slot::Ready(p.clone()));
+                self.done.notify_all();
+                Ok((p, PoolStatus::Prepared))
+            }
+            Err(e) => {
+                self.failures.fetch_add(1, Ordering::Relaxed);
+                telemetry::global().counter("pool.fail").incr();
+                slots.insert(key.to_string(), Slot::Failed(format!("{e:#}")));
+                self.done.notify_all();
+                Err(e)
+            }
+        }
+    }
+
+    /// Number of prefixes currently resident (ready to share).
+    pub fn ready_len(&self) -> usize {
+        self.slots
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| matches!(s, Slot::Ready(_)))
+            .count()
+    }
+
+    /// Drop a resident or failed prefix; `true` if something was
+    /// evicted. In-flight slots are left alone (their preparer will
+    /// overwrite them when it finishes).
+    pub fn evict(&self, spec: &PrefixSpec) -> bool {
+        let key = spec.id();
+        let mut slots = self.slots.lock().unwrap();
+        match slots.get(&key) {
+            Some(Slot::InFlight) | None => false,
+            Some(_) => {
+                slots.remove(&key);
+                true
+            }
+        }
+    }
+
+    /// This pool's counters.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            joins: self.joins.load(Ordering::Relaxed),
+            failures: self.failures.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::StatsSource;
+
+    fn spec() -> PrefixSpec {
+        PrefixSpec {
+            net: "resnet18".into(),
+            hw: 32,
+            hw_profile: crate::hw::DEFAULT_PROFILE.into(),
+            stats: StatsSource::Synthetic,
+            profile_images: 1,
+            seed: 11,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    #[test]
+    fn concurrent_requests_prepare_exactly_once() {
+        let pool = PrefixPool::new();
+        let spec = spec();
+        let results: Vec<Arc<Prepared>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| s.spawn(|| pool.get_or_prepare(&spec, None, 1).unwrap().0))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let stats = pool.stats();
+        assert_eq!(stats.misses, 1, "exactly one prepare ran: {stats:?}");
+        assert_eq!(stats.hits + stats.joins, 3, "everyone else shared it: {stats:?}");
+        assert_eq!(stats.failures, 0);
+        assert_eq!(pool.ready_len(), 1);
+        for r in &results[1..] {
+            assert!(Arc::ptr_eq(&results[0], r), "all callers share one Prepared");
+        }
+    }
+
+    #[test]
+    fn failed_prepare_does_not_poison_the_pool() {
+        let pool = PrefixPool::new();
+        let mut bad = spec();
+        bad.hw_profile = "no-such-profile".into();
+        assert!(pool.get_or_prepare(&bad, None, 1).is_err());
+        // a second attempt retries fresh (no deadlock, no stale panic)
+        assert!(pool.get_or_prepare(&bad, None, 1).is_err());
+        assert_eq!(pool.stats().failures, 2, "each attempt failed independently");
+        // and an unrelated valid prefix is unaffected
+        let (p, status) = pool.get_or_prepare(&spec(), None, 1).unwrap();
+        assert_eq!(status, PoolStatus::Prepared);
+        assert_eq!(p.min_pes(), 86);
+        // second valid request is a pool hit
+        let (_, status) = pool.get_or_prepare(&spec(), None, 1).unwrap();
+        assert_eq!(status, PoolStatus::Hit);
+    }
+
+    #[test]
+    fn evict_drops_resident_prefixes() {
+        let pool = PrefixPool::new();
+        let spec = spec();
+        assert!(!pool.evict(&spec), "nothing to evict yet");
+        pool.get_or_prepare(&spec, None, 1).unwrap();
+        assert_eq!(pool.ready_len(), 1);
+        assert!(pool.evict(&spec));
+        assert_eq!(pool.ready_len(), 0);
+        // next request prepares again
+        let (_, status) = pool.get_or_prepare(&spec, None, 1).unwrap();
+        assert_eq!(status, PoolStatus::Prepared);
+        assert_eq!(pool.stats().misses, 2);
+    }
+}

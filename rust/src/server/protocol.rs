@@ -1,0 +1,519 @@
+//! The daemon's JSON-lines wire protocol.
+//!
+//! One request per line, one JSON object per request; responses stream
+//! back as JSON lines too, so a client is a loop of `writeln` +
+//! `read_line` over the socket. Requests are parsed **streaming** with
+//! [`IoJsonReader`] — a job spec never materializes a DOM tree on the
+//! way in; responses are rendered with [`JsonWriter`] in compact form.
+//!
+//! Requests (`op` selects the variant; unknown fields are rejected so
+//! typos fail loudly):
+//!
+//! ```json
+//! {"op":"submit","id":"j1","priority":0,"net":"resnet18","res":32,
+//!  "hw":"rram-128","stats":"synth","profile_images":2,"seed":7,
+//!  "scenarios":[{"alloc":"block-wise","pes":129,"images":2}]}
+//! {"op":"cancel","job":"j1"}
+//! {"op":"stats"}
+//! {"op":"shutdown"}
+//! ```
+//!
+//! Responses (`type` tags each line): `accepted`, one `result` per
+//! finished scenario, a terminal `done` per job, `cancelled`, `stats`,
+//! `shutting_down`, and `error`. See `docs/architecture.md` for the
+//! full field tables.
+
+use std::borrow::Cow;
+
+use super::ServerError;
+use crate::pipeline::{PrefixSpec, Scenario, ScenarioBuilder, ScenarioOutcome, StatsSource};
+use crate::util::json::Json;
+use crate::util::json_stream::{Event, EventSource, IoJsonReader, JsonWriter};
+use anyhow::Result;
+
+/// One request line, parsed and syntactically validated (semantic
+/// validation — nets, strategies, budgets — happens in
+/// [`JobSpec::build`] via [`ScenarioBuilder`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Submit a job: a shared prefix plus one or more scenarios.
+    Submit(JobSpec),
+    /// Cancel a queued or running job by id.
+    Cancel {
+        /// The id from the job's `accepted` response.
+        job: String,
+    },
+    /// Ask for the server + telemetry counters.
+    Stats,
+    /// Drain and stop the daemon.
+    Shutdown,
+}
+
+/// The submit payload: prefix knobs (shared by every scenario in the
+/// job, and pooled across jobs) plus the per-scenario list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// Client-chosen job id; the server assigns `job-N` when absent.
+    pub id: Option<String>,
+    /// Smaller = more urgent; default 0.
+    pub priority: i64,
+    /// Network name (required).
+    pub net: String,
+    /// Input resolution; default 64.
+    pub res: usize,
+    /// Hardware profile name/alias/path; default `rram-128`.
+    pub hw_profile: String,
+    /// Activation statistics source; default synthetic.
+    pub stats: StatsSource,
+    /// Profiling images; default 2.
+    pub profile_images: usize,
+    /// Synthetic-statistics seed; default 7.
+    pub seed: u64,
+    /// AOT artifacts directory (golden stats only); default
+    /// `artifacts`.
+    pub artifacts_dir: String,
+    /// The scenarios to run against the shared prefix (at least one).
+    pub scenarios: Vec<ScenarioReq>,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        JobSpec {
+            id: None,
+            priority: 0,
+            net: String::new(),
+            res: 64,
+            hw_profile: crate::hw::DEFAULT_PROFILE.into(),
+            stats: StatsSource::Synthetic,
+            profile_images: 2,
+            seed: 7,
+            artifacts_dir: "artifacts".into(),
+            scenarios: Vec::new(),
+        }
+    }
+}
+
+/// One scenario inside a [`JobSpec`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioReq {
+    /// Allocation strategy; default `block-wise`.
+    pub alloc: String,
+    /// Dataflow override; defaults to the strategy's dataflow.
+    pub dataflow: Option<String>,
+    /// Simulation engine override; default `event`.
+    pub engine: Option<String>,
+    /// PE budget (required, >= 1).
+    pub pes: usize,
+    /// Simulated images; default 8.
+    pub images: usize,
+}
+
+impl Default for ScenarioReq {
+    fn default() -> Self {
+        ScenarioReq { alloc: "block-wise".into(), dataflow: None, engine: None, pes: 0, images: 8 }
+    }
+}
+
+impl JobSpec {
+    /// Validate through [`ScenarioBuilder`] and lower to the pipeline
+    /// types: the shared [`PrefixSpec`] and one [`Scenario`] per entry.
+    pub fn build(&self) -> Result<(PrefixSpec, Vec<Scenario>)> {
+        anyhow::ensure!(!self.scenarios.is_empty(), "job has no scenarios");
+        let base = ScenarioBuilder::new()
+            .net(&self.net)
+            .hw(self.res)
+            .hw_profile(&self.hw_profile)
+            .stats(self.stats)
+            .profile_images(self.profile_images)
+            .seed(self.seed)
+            .artifacts_dir(&self.artifacts_dir);
+        let prefix = base.prefix()?;
+        let mut scenarios = Vec::with_capacity(self.scenarios.len());
+        for (i, req) in self.scenarios.iter().enumerate() {
+            let mut b = base.clone().alloc(&req.alloc).pes(req.pes).sim_images(req.images);
+            if let Some(df) = &req.dataflow {
+                b = b.dataflow(df);
+            }
+            if let Some(e) = &req.engine {
+                b = b.engine(e);
+            }
+            scenarios
+                .push(b.build().map_err(|e| anyhow::anyhow!("scenario {i}: {e:#}"))?);
+        }
+        Ok((prefix, scenarios))
+    }
+}
+
+fn protocol(msg: impl Into<String>) -> ServerError {
+    ServerError::Protocol(msg.into())
+}
+
+fn expect_str(r: &mut IoJsonReader, field: &str) -> Result<String, ServerError> {
+    match r.next_event()? {
+        Some(Event::Str(s)) => Ok(s.into_owned()),
+        _ => Err(protocol(format!("field '{field}' must be a string"))),
+    }
+}
+
+fn expect_usize(r: &mut IoJsonReader, field: &str) -> Result<usize, ServerError> {
+    match r.next_event()? {
+        Some(Event::Num(n)) => n
+            .as_usize()
+            .ok_or_else(|| protocol(format!("field '{field}' must be a non-negative integer"))),
+        _ => Err(protocol(format!("field '{field}' must be a number"))),
+    }
+}
+
+fn expect_u64(r: &mut IoJsonReader, field: &str) -> Result<u64, ServerError> {
+    match r.next_event()? {
+        Some(Event::Num(n)) => n
+            .as_u64()
+            .ok_or_else(|| protocol(format!("field '{field}' must be a non-negative integer"))),
+        _ => Err(protocol(format!("field '{field}' must be a number"))),
+    }
+}
+
+fn expect_i64(r: &mut IoJsonReader, field: &str) -> Result<i64, ServerError> {
+    match r.next_event()? {
+        Some(Event::Num(n)) => {
+            n.as_i64().ok_or_else(|| protocol(format!("field '{field}' must be an integer")))
+        }
+        _ => Err(protocol(format!("field '{field}' must be a number"))),
+    }
+}
+
+fn parse_scenarios(r: &mut IoJsonReader) -> Result<Vec<ScenarioReq>, ServerError> {
+    match r.next_event()? {
+        Some(Event::BeginArray) => {}
+        _ => return Err(protocol("field 'scenarios' must be an array of objects")),
+    }
+    let mut out = Vec::new();
+    loop {
+        match r.next_event()? {
+            Some(Event::EndArray) => return Ok(out),
+            Some(Event::BeginObject) => out.push(parse_scenario_body(r)?),
+            _ => return Err(protocol("'scenarios' entries must be objects")),
+        }
+    }
+}
+
+fn parse_scenario_body(r: &mut IoJsonReader) -> Result<ScenarioReq, ServerError> {
+    let mut sc = ScenarioReq::default();
+    let mut saw_pes = false;
+    loop {
+        let key: Cow<'_, str> = match r.next_event()? {
+            Some(Event::EndObject) => break,
+            Some(Event::Key(k)) => k,
+            _ => return Err(protocol("malformed scenario object")),
+        };
+        match key.into_owned().as_str() {
+            "alloc" => sc.alloc = expect_str(r, "alloc")?,
+            "dataflow" => sc.dataflow = Some(expect_str(r, "dataflow")?),
+            "engine" => sc.engine = Some(expect_str(r, "engine")?),
+            "pes" => {
+                sc.pes = expect_usize(r, "pes")?;
+                saw_pes = true;
+            }
+            "images" => sc.images = expect_usize(r, "images")?,
+            other => return Err(protocol(format!("unknown scenario field '{other}'"))),
+        }
+    }
+    if !saw_pes || sc.pes == 0 {
+        return Err(protocol("every scenario needs \"pes\" >= 1"));
+    }
+    Ok(sc)
+}
+
+/// Parse one request line. The line must be a single JSON object with
+/// an `op` field; unknown fields are errors (fail loudly on typos).
+pub fn parse_request(line: &[u8]) -> Result<Request, ServerError> {
+    let mut r = IoJsonReader::new(line)?;
+    match r.next_event()? {
+        Some(Event::BeginObject) => {}
+        _ => return Err(protocol("request must be a JSON object")),
+    }
+    let mut op: Option<String> = None;
+    let mut job: Option<String> = None;
+    let mut spec = JobSpec::default();
+    let mut saw_scenarios = false;
+    loop {
+        let key: Cow<'_, str> = match r.next_event()? {
+            Some(Event::EndObject) => break,
+            Some(Event::Key(k)) => k,
+            _ => return Err(protocol("malformed request object")),
+        };
+        match key.into_owned().as_str() {
+            "op" => op = Some(expect_str(&mut r, "op")?),
+            "job" => job = Some(expect_str(&mut r, "job")?),
+            "id" => spec.id = Some(expect_str(&mut r, "id")?),
+            "priority" => spec.priority = expect_i64(&mut r, "priority")?,
+            "net" => spec.net = expect_str(&mut r, "net")?,
+            "res" => spec.res = expect_usize(&mut r, "res")?,
+            "hw" => spec.hw_profile = expect_str(&mut r, "hw")?,
+            "stats" => {
+                let name = expect_str(&mut r, "stats")?;
+                spec.stats = StatsSource::parse(&name)
+                    .ok_or_else(|| protocol(format!("unknown stats source '{name}'")))?;
+            }
+            "profile_images" => spec.profile_images = expect_usize(&mut r, "profile_images")?,
+            "seed" => spec.seed = expect_u64(&mut r, "seed")?,
+            "artifacts" => spec.artifacts_dir = expect_str(&mut r, "artifacts")?,
+            "scenarios" => {
+                spec.scenarios = parse_scenarios(&mut r)?;
+                saw_scenarios = true;
+            }
+            other => return Err(protocol(format!("unknown request field '{other}'"))),
+        }
+    }
+    if r.next_event()?.is_some() {
+        return Err(protocol("trailing data after request object"));
+    }
+    match op.as_deref() {
+        Some("submit") => {
+            if !saw_scenarios || spec.scenarios.is_empty() {
+                return Err(protocol("submit needs a non-empty \"scenarios\" array"));
+            }
+            if spec.net.is_empty() {
+                return Err(protocol("submit needs a \"net\""));
+            }
+            Ok(Request::Submit(spec))
+        }
+        Some("cancel") => {
+            let job = job.ok_or_else(|| protocol("cancel needs a \"job\" id"))?;
+            Ok(Request::Cancel { job })
+        }
+        Some("stats") => Ok(Request::Stats),
+        Some("shutdown") => Ok(Request::Shutdown),
+        Some(other) => Err(protocol(format!(
+            "unknown op '{other}' (expected submit|cancel|stats|shutdown)"
+        ))),
+        None => Err(protocol("request has no \"op\"")),
+    }
+}
+
+// ---- response lines -------------------------------------------------------
+
+fn line<F>(f: F) -> Vec<u8>
+where
+    F: FnOnce(&mut JsonWriter<&mut Vec<u8>>) -> std::io::Result<()>,
+{
+    let mut buf = Vec::new();
+    let mut w = JsonWriter::compact(&mut buf);
+    f(&mut w).expect("writing JSON to a Vec cannot fail");
+    w.finish().expect("writing JSON to a Vec cannot fail");
+    buf.push(b'\n');
+    buf
+}
+
+/// `{"type":"accepted",...}` — the job was validated and queued.
+pub fn accepted_line(job: &str, scenarios: usize, queue_depth: usize) -> Vec<u8> {
+    line(|w| {
+        w.begin_obj()?;
+        w.key("type")?;
+        w.str_value("accepted")?;
+        w.key("job")?;
+        w.str_value(job)?;
+        w.key("scenarios")?;
+        w.num_value(scenarios as u64)?;
+        w.key("queue_depth")?;
+        w.num_value(queue_depth as u64)?;
+        w.end_obj()
+    })
+}
+
+/// `{"type":"result",...}` — one finished scenario, streamed as it
+/// completes. `prefix` records how the pool satisfied the shared
+/// prefix (`pool-hit` / `prepared` / `joined`).
+pub fn result_line(job: &str, index: usize, prefix: &str, outcome: &ScenarioOutcome) -> Vec<u8> {
+    line(|w| {
+        w.begin_obj()?;
+        w.key("type")?;
+        w.str_value("result")?;
+        w.key("job")?;
+        w.str_value(job)?;
+        w.key("index")?;
+        w.num_value(index as u64)?;
+        w.key("scenario")?;
+        w.str_value(&outcome.scenario.id())?;
+        w.key("prefix")?;
+        w.str_value(prefix)?;
+        w.key("report")?;
+        w.value(&outcome.report_json())?;
+        w.end_obj()
+    })
+}
+
+/// `{"type":"done",...}` — the job's terminal line.
+pub fn done_line(job: &str, ok: usize, failed: usize, cancelled: bool) -> Vec<u8> {
+    line(|w| {
+        w.begin_obj()?;
+        w.key("type")?;
+        w.str_value("done")?;
+        w.key("job")?;
+        w.str_value(job)?;
+        w.key("ok")?;
+        w.num_value(ok as u64)?;
+        w.key("failed")?;
+        w.num_value(failed as u64)?;
+        w.key("cancelled")?;
+        w.bool_value(cancelled)?;
+        w.end_obj()
+    })
+}
+
+/// `{"type":"error",...}` — a request or scenario failed.
+pub fn error_line(job: Option<&str>, msg: &str) -> Vec<u8> {
+    line(|w| {
+        w.begin_obj()?;
+        w.key("type")?;
+        w.str_value("error")?;
+        if let Some(job) = job {
+            w.key("job")?;
+            w.str_value(job)?;
+        }
+        w.key("message")?;
+        w.str_value(msg)?;
+        w.end_obj()
+    })
+}
+
+/// `{"type":"cancelled",...}` — acknowledgement of a cancel request;
+/// `found` says whether the job was still live.
+pub fn cancelled_line(job: &str, found: bool) -> Vec<u8> {
+    line(|w| {
+        w.begin_obj()?;
+        w.key("type")?;
+        w.str_value("cancelled")?;
+        w.key("job")?;
+        w.str_value(job)?;
+        w.key("found")?;
+        w.bool_value(found)?;
+        w.end_obj()
+    })
+}
+
+/// `{"type":"stats",...}` — per-server counters plus the global
+/// telemetry snapshot.
+pub fn stats_line(server: &Json, telemetry: &Json) -> Vec<u8> {
+    line(|w| {
+        w.begin_obj()?;
+        w.key("type")?;
+        w.str_value("stats")?;
+        w.key("server")?;
+        w.value(server)?;
+        w.key("telemetry")?;
+        w.value(telemetry)?;
+        w.end_obj()
+    })
+}
+
+/// `{"type":"shutting_down"}` — acknowledgement of a shutdown request.
+pub fn shutting_down_line() -> Vec<u8> {
+    line(|w| {
+        w.begin_obj()?;
+        w.key("type")?;
+        w.str_value("shutting_down")?;
+        w.end_obj()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_parses_with_defaults_and_overrides() {
+        let req = parse_request(
+            br#"{"op":"submit","id":"j9","priority":-2,"net":"resnet18","res":32,
+                "hw":"paper","stats":"synth","profile_images":1,"seed":3,
+                "scenarios":[{"alloc":"hybrid","pes":129,"images":2},{"pes":172}]}"#,
+        )
+        .unwrap();
+        let Request::Submit(spec) = req else { panic!("expected submit") };
+        assert_eq!(spec.id.as_deref(), Some("j9"));
+        assert_eq!(spec.priority, -2);
+        assert_eq!(spec.net, "resnet18");
+        assert_eq!(spec.res, 32);
+        assert_eq!(spec.seed, 3);
+        assert_eq!(spec.scenarios.len(), 2);
+        assert_eq!(spec.scenarios[0].alloc, "hybrid");
+        assert_eq!(spec.scenarios[0].images, 2);
+        assert_eq!(spec.scenarios[1].alloc, "block-wise", "defaulted");
+        assert_eq!(spec.scenarios[1].images, 8, "defaulted");
+
+        let (prefix, scenarios) = spec.build().unwrap();
+        assert_eq!(prefix.hw_profile, "rram-128", "alias canonicalized by the builder");
+        assert_eq!(scenarios.len(), 2);
+        assert_eq!(scenarios[0].alloc, "hybrid");
+    }
+
+    #[test]
+    fn other_ops_parse() {
+        assert_eq!(
+            parse_request(br#"{"op":"cancel","job":"j1"}"#).unwrap(),
+            Request::Cancel { job: "j1".into() }
+        );
+        assert_eq!(parse_request(br#"{"op":"stats"}"#).unwrap(), Request::Stats);
+        assert_eq!(parse_request(br#"{"op":"shutdown"}"#).unwrap(), Request::Shutdown);
+    }
+
+    #[test]
+    fn malformed_requests_fail_loudly() {
+        for (line, needle) in [
+            (&br#"[1,2]"#[..], "must be a JSON object"),
+            (br#"{"net":"resnet18"}"#, "no \"op\""),
+            (br#"{"op":"fly"}"#, "unknown op"),
+            (br#"{"op":"submit","net":"resnet18"}"#, "scenarios"),
+            (br#"{"op":"submit","scenarios":[{"pes":1}]}"#, "needs a \"net\""),
+            (br#"{"op":"submit","net":"r","scenarios":[{}]}"#, "\"pes\""),
+            (br#"{"op":"cancel"}"#, "\"job\""),
+            (br#"{"op":"stats","bogus":1}"#, "unknown request field 'bogus'"),
+            (br#"{"op":"stats"} {"op":"stats"}"#, "trailing"),
+            (br#"{"op":"submit","net":"x","scenarios":[{"pes":1,"zap":2}]}"#, "scenario field"),
+            (br#"{"op":"submit","net":"x","res":-1,"scenarios":[{"pes":1}]}"#, "'res'"),
+            (br#"{"op":"submit","net":"x","stats":"psychic","scenarios":[{"pes":1}]}"#, "stats"),
+            (br#"{"op":"oops""#, ""),
+        ] {
+            let err = parse_request(line).unwrap_err().to_string();
+            assert!(err.contains(needle), "line {:?} gave {err:?}", String::from_utf8_lossy(line));
+        }
+    }
+
+    #[test]
+    fn semantic_errors_surface_from_the_builder() {
+        let Request::Submit(spec) =
+            parse_request(br#"{"op":"submit","net":"resnet19","scenarios":[{"pes":1}]}"#).unwrap()
+        else {
+            panic!("expected submit")
+        };
+        let err = format!("{:#}", spec.build().unwrap_err());
+        assert!(err.contains("did you mean 'resnet18'?"), "{err}");
+    }
+
+    #[test]
+    fn response_lines_are_wellformed_json() {
+        let acc = accepted_line("j1", 3, 1);
+        let s = std::str::from_utf8(&acc).unwrap();
+        assert!(s.ends_with('\n'));
+        let j = Json::parse(s.trim()).unwrap();
+        assert_eq!(j.get("type").as_str(), Some("accepted"));
+        assert_eq!(j.get("queue_depth").as_u64(), Some(1));
+
+        let done = done_line("j1", 2, 0, false);
+        let j = Json::parse(std::str::from_utf8(&done).unwrap().trim()).unwrap();
+        assert_eq!(j.get("ok").as_u64(), Some(2));
+        assert_eq!(j.get("cancelled").as_bool(), Some(false));
+
+        let err = error_line(Some("j1"), "boom \"quoted\"");
+        let j = Json::parse(std::str::from_utf8(&err).unwrap().trim()).unwrap();
+        assert_eq!(j.get("message").as_str(), Some("boom \"quoted\""));
+
+        let c = cancelled_line("j2", true);
+        let j = Json::parse(std::str::from_utf8(&c).unwrap().trim()).unwrap();
+        assert_eq!(j.get("found").as_bool(), Some(true));
+
+        let sd = shutting_down_line();
+        let j = Json::parse(std::str::from_utf8(&sd).unwrap().trim()).unwrap();
+        assert_eq!(j.get("type").as_str(), Some("shutting_down"));
+    }
+}

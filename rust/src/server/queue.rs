@@ -1,0 +1,329 @@
+//! Fair priority admission queue with per-job cancellation.
+//!
+//! Ordering is strict priority (smaller number = more urgent) with FIFO
+//! within a priority class — a monotone sequence number breaks ties, so
+//! two jobs submitted at the same priority always run in submission
+//! order and no job can starve a same-priority peer. Capacity is
+//! bounded: [`JobQueue::push`] rejects (rather than blocks) when the
+//! queue is full, so an overloaded daemon fails fast instead of
+//! buffering without bound.
+//!
+//! Cancellation is cooperative: a [`JobHandle`] is shared between the
+//! submitter (which may [`JobHandle::cancel`]) and the worker that
+//! eventually pops the job. Cancelled entries stop counting against
+//! capacity immediately — the queue's admission check only counts live
+//! entries — so cancelling a queued job frees its slot without waiting
+//! for a worker to drain it.
+
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Anything the queue can check for cooperative cancellation.
+pub trait Cancellable {
+    /// `true` once the item has been cancelled by its submitter.
+    fn is_cancelled(&self) -> bool;
+}
+
+/// Lifecycle of one submitted job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Admitted, waiting for a worker.
+    Queued,
+    /// A worker is running its scenarios.
+    Running,
+    /// All scenarios finished (some may have failed individually).
+    Done,
+    /// Cancelled before or during execution.
+    Cancelled,
+    /// The shared prefix failed to prepare, or every write failed.
+    Failed,
+}
+
+impl JobState {
+    fn from_u8(v: u8) -> JobState {
+        match v {
+            0 => JobState::Queued,
+            1 => JobState::Running,
+            2 => JobState::Done,
+            3 => JobState::Cancelled,
+            _ => JobState::Failed,
+        }
+    }
+
+    /// Lower-case wire/display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Cancelled => "cancelled",
+            JobState::Failed => "failed",
+        }
+    }
+}
+
+/// Shared, lock-free view of one job's identity, state, and cancel
+/// flag. The daemon hands one to the submitter's connection (for
+/// `cancel` requests) and to the worker that runs the job.
+#[derive(Debug)]
+pub struct JobHandle {
+    id: String,
+    cancelled: AtomicBool,
+    state: AtomicU8,
+}
+
+impl JobHandle {
+    /// A fresh handle in the `Queued` state.
+    pub fn new(id: impl Into<String>) -> Arc<JobHandle> {
+        Arc::new(JobHandle {
+            id: id.into(),
+            cancelled: AtomicBool::new(false),
+            state: AtomicU8::new(0),
+        })
+    }
+
+    /// The job id this handle tracks.
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    /// Request cancellation. Queued jobs are skipped by the worker that
+    /// pops them; running jobs stop at the next scenario boundary.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    /// Has [`Self::cancel`] been called?
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+
+    /// Current lifecycle state.
+    pub fn state(&self) -> JobState {
+        JobState::from_u8(self.state.load(Ordering::Relaxed))
+    }
+
+    /// Advance the lifecycle state (workers only).
+    pub fn set_state(&self, s: JobState) {
+        self.state.store(s as u8, Ordering::Relaxed);
+    }
+}
+
+impl Cancellable for Arc<JobHandle> {
+    fn is_cancelled(&self) -> bool {
+        JobHandle::is_cancelled(self)
+    }
+}
+
+/// Why a [`JobQueue::push`] was rejected; the item comes back so the
+/// caller can report and drop it.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// Live entries already fill the configured capacity.
+    Full(T),
+    /// The queue was closed (daemon shutting down).
+    Closed(T),
+}
+
+struct Entry<T> {
+    priority: i64,
+    seq: u64,
+    item: T,
+}
+
+// BinaryHeap is a max-heap; reverse the comparison so the *smallest*
+// (priority, seq) pops first: most urgent class, FIFO within it.
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (other.priority, other.seq).cmp(&(self.priority, self.seq))
+    }
+}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        (self.priority, self.seq) == (other.priority, other.seq)
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+struct Inner<T> {
+    heap: BinaryHeap<Entry<T>>,
+    next_seq: u64,
+    closed: bool,
+}
+
+/// The bounded, cancellation-aware priority queue.
+pub struct JobQueue<T: Cancellable> {
+    inner: Mutex<Inner<T>>,
+    ready: Condvar,
+    cap: usize,
+}
+
+impl<T: Cancellable> JobQueue<T> {
+    /// A queue admitting at most `cap` live entries (`cap` is clamped
+    /// to at least 1).
+    pub fn new(cap: usize) -> JobQueue<T> {
+        JobQueue {
+            inner: Mutex::new(Inner { heap: BinaryHeap::new(), next_seq: 0, closed: false }),
+            ready: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Configured capacity (live entries).
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Admit an item at `priority` (smaller = more urgent). Returns the
+    /// live depth after admission, or the item back if the queue is
+    /// full or closed. Cancelled entries do not count against capacity.
+    pub fn push(&self, priority: i64, item: T) -> Result<usize, PushError<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(PushError::Closed(item));
+        }
+        let live = inner.heap.iter().filter(|e| !e.item.is_cancelled()).count();
+        if live >= self.cap {
+            return Err(PushError::Full(item));
+        }
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        inner.heap.push(Entry { priority, seq, item });
+        drop(inner);
+        self.ready.notify_one();
+        Ok(live + 1)
+    }
+
+    /// Block until an item is available (or the queue closes — then
+    /// `None`). Cancelled items are returned like any other so the
+    /// worker can emit the job's terminal status; callers must check
+    /// [`Cancellable::is_cancelled`] before doing real work.
+    pub fn pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(entry) = inner.heap.pop() {
+                return Some(entry.item);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.ready.wait(inner).unwrap();
+        }
+    }
+
+    /// Entries currently queued (live and cancelled).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().heap.len()
+    }
+
+    /// Live (non-cancelled) entries — what [`Self::push`] admits
+    /// against.
+    pub fn live_len(&self) -> usize {
+        self.inner.lock().unwrap().heap.iter().filter(|e| !e.item.is_cancelled()).count()
+    }
+
+    /// Is the queue empty?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue: remaining entries are dropped, parked and
+    /// future `pop`s return `None`, and future `push`es are rejected.
+    /// Used for shutdown — workers finish their current job, see
+    /// `None`, and exit; queued-but-unstarted work is discarded.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        inner.heap.clear();
+        drop(inner);
+        self.ready.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Item {
+        tag: usize,
+        handle: Arc<JobHandle>,
+    }
+
+    impl Cancellable for Item {
+        fn is_cancelled(&self) -> bool {
+            self.handle.is_cancelled()
+        }
+    }
+
+    fn item(tag: usize) -> Item {
+        Item { tag, handle: JobHandle::new(format!("job-{tag}")) }
+    }
+
+    #[test]
+    fn pops_by_priority_then_fifo() {
+        let q: JobQueue<Item> = JobQueue::new(16);
+        q.push(5, item(1)).map_err(|_| ()).unwrap();
+        q.push(0, item(2)).map_err(|_| ()).unwrap();
+        q.push(5, item(3)).map_err(|_| ()).unwrap();
+        q.push(0, item(4)).map_err(|_| ()).unwrap();
+        let order: Vec<usize> = (0..4).map(|_| q.pop().unwrap().tag).collect();
+        assert_eq!(order, vec![2, 4, 1, 3], "urgent class first, FIFO within class");
+    }
+
+    #[test]
+    fn cancelled_entry_frees_its_slot() {
+        let q: JobQueue<Item> = JobQueue::new(2);
+        let a = item(1);
+        let a_handle = a.handle.clone();
+        q.push(0, a).map_err(|_| ()).unwrap();
+        q.push(0, item(2)).map_err(|_| ()).unwrap();
+        assert!(matches!(q.push(0, item(3)), Err(PushError::Full(_))), "at capacity");
+        a_handle.cancel();
+        assert_eq!(q.live_len(), 1);
+        q.push(0, item(3)).map_err(|_| ()).unwrap();
+        // the cancelled entry still pops (worker emits its terminal
+        // status) but carries the flag
+        let popped: Vec<Item> = (0..3).map(|_| q.pop().unwrap()).collect();
+        assert_eq!(popped.iter().filter(|i| i.is_cancelled()).count(), 1);
+        assert!(popped.iter().any(|i| i.tag == 3), "freed slot admitted the new job");
+    }
+
+    #[test]
+    fn close_rejects_pushes_and_unblocks_pops() {
+        let q: JobQueue<Item> = JobQueue::new(4);
+        q.push(0, item(1)).map_err(|_| ()).unwrap();
+        q.close();
+        assert!(matches!(q.push(0, item(2)), Err(PushError::Closed(_))));
+        assert!(q.pop().is_none(), "closed queue drops queued work");
+        // a parked popper wakes too
+        let q2 = std::sync::Arc::new(JobQueue::<Item>::new(4));
+        let q3 = q2.clone();
+        let t = std::thread::spawn(move || q3.pop().is_none());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q2.close();
+        assert!(t.join().unwrap());
+    }
+
+    #[test]
+    fn handle_state_roundtrips() {
+        let h = JobHandle::new("j1");
+        assert_eq!(h.state(), JobState::Queued);
+        assert_eq!(h.id(), "j1");
+        h.set_state(JobState::Running);
+        assert_eq!(h.state(), JobState::Running);
+        h.set_state(JobState::Done);
+        assert_eq!(h.state().name(), "done");
+        assert!(!h.is_cancelled());
+        h.cancel();
+        assert!(h.is_cancelled());
+    }
+}

@@ -194,14 +194,25 @@ pub enum Json {
 }
 
 /// Parse error with byte offset.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {offset}: {msg}")]
+#[derive(Debug)]
 pub struct JsonError {
     /// Byte offset the parse failed at.
     pub offset: usize,
     /// Human-readable description.
     pub msg: String,
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+// Hand-rolled (not a derive macro) so callers — anyhow `?` chains, the
+// server's error type — can treat a parse failure as a real
+// `std::error::Error` without this crate pulling in a proc-macro
+// dependency for one impl.
+impl std::error::Error for JsonError {}
 
 impl Json {
     /// Parse a JSON document.

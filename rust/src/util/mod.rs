@@ -16,3 +16,4 @@ pub mod table;
 pub mod bench;
 pub mod propcheck;
 pub mod stats;
+pub mod telemetry;

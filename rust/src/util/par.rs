@@ -11,8 +11,27 @@ use anyhow::Result;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+/// Environment variable consulted by [`default_threads`].
+pub const THREADS_ENV: &str = "CIMFAB_THREADS";
+
 /// Worker count used when the caller does not specify `--threads`.
+///
+/// Resolution order: an explicit `--threads N` flag (handled by the CLI
+/// before this function is consulted) wins; otherwise a positive
+/// integer in the `CIMFAB_THREADS` environment variable; otherwise the
+/// machine's available parallelism. A `CIMFAB_THREADS` value that is
+/// empty, non-numeric, or `0` is ignored rather than honored — zero
+/// workers is never a valid pool size, and the env var is a soft
+/// default (the fail-fast rejection of `--threads 0` lives in the CLI,
+/// where the user typed it).
 pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var(THREADS_ENV) {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
@@ -90,6 +109,25 @@ mod tests {
 
     #[test]
     fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
+    }
+
+    // One test owns the env var end to end: tests in this binary run
+    // concurrently, and CIMFAB_THREADS is process-global state.
+    #[test]
+    fn default_threads_honors_env_var() {
+        std::env::set_var(THREADS_ENV, "3");
+        assert_eq!(default_threads(), 3);
+
+        std::env::set_var(THREADS_ENV, " 5 ");
+        assert_eq!(default_threads(), 5, "surrounding whitespace is tolerated");
+
+        for bogus in ["0", "", "many", "-2", "1.5"] {
+            std::env::set_var(THREADS_ENV, bogus);
+            assert!(default_threads() >= 1, "invalid value {bogus:?} falls back");
+        }
+
+        std::env::remove_var(THREADS_ENV);
         assert!(default_threads() >= 1);
     }
 }

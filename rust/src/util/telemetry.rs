@@ -1,0 +1,306 @@
+//! Process-wide telemetry: counters, gauges, and latency timers.
+//!
+//! The serving layer (and, behind `--telemetry-dump`, the batch
+//! subcommands) need a cheap way to answer "where did the time go and
+//! how often did each fast path fire" without plumbing a context object
+//! through every pipeline signature. This module provides the smallest
+//! metrics kernel that supports that: three instrument kinds behind a
+//! [`Registry`], all lock-free on the hot path (a handful of relaxed
+//! atomic ops per event), keyed by **static label** so the set of
+//! metric names is fixed at compile time and documented in
+//! `docs/architecture.md`.
+//!
+//! - [`Counter`] — monotonically increasing event count
+//!   (`pool.hit`, `serve.jobs.accepted`, …).
+//! - [`Gauge`] — instantaneous signed level (`serve.queue.depth`,
+//!   `serve.jobs.in_flight`).
+//! - [`Timer`] — latency accumulator (count / total / max) with an
+//!   RAII guard (`stage.simulate`, `stage.prepare`, …).
+//!
+//! Instruments registered through the process-wide [`global`] registry
+//! live for the life of the process; [`Registry::snapshot`] renders the
+//! current values as a [`Json`] tree (deterministically ordered, since
+//! the registry is a `BTreeMap`) for the `stats` wire request and the
+//! `--telemetry-dump` flag. Tests that need isolation construct their
+//! own private `Registry` — the pipeline only ever *adds* to the global
+//! one, so assertions against absolute global values belong in
+//! per-instance stats (see `server::PrefixPool::stats`), not here.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// Monotonically increasing event counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    /// Increment by one.
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    /// Increment by `n`.
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current count.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed level (queue depth, jobs in flight).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicI64,
+}
+
+impl Gauge {
+    /// Set the gauge to an absolute level.
+    pub fn set(&self, v: i64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    /// Move the gauge up by `n`.
+    pub fn add(&self, n: i64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Move the gauge down by `n`.
+    pub fn sub(&self, n: i64) {
+        self.value.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    /// Current level.
+    pub fn get(&self) -> i64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency accumulator: observation count, total, and max.
+///
+/// Mean latency is derived at snapshot time (`total / count`), so the
+/// hot path is three relaxed atomic ops and no floating point.
+#[derive(Debug, Default)]
+pub struct Timer {
+    count: AtomicU64,
+    total_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Timer {
+    /// Record one observed duration.
+    pub fn observe(&self, d: Duration) {
+        let ns = u64::try_from(d.as_nanos()).unwrap_or(u64::MAX);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.total_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Start an RAII span; the elapsed time is recorded when the guard
+    /// drops, so early returns and `?` exits are timed correctly.
+    pub fn start(&self) -> TimerGuard<'_> {
+        TimerGuard { timer: self, started: Instant::now() }
+    }
+
+    /// Time a closure and pass its result through.
+    pub fn time<T>(&self, f: impl FnOnce() -> T) -> T {
+        let _guard = self.start();
+        f()
+    }
+
+    /// Number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observed durations.
+    pub fn total(&self) -> Duration {
+        Duration::from_nanos(self.total_ns.load(Ordering::Relaxed))
+    }
+
+    /// Largest single observation.
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns.load(Ordering::Relaxed))
+    }
+}
+
+/// Guard returned by [`Timer::start`]; records on drop.
+#[derive(Debug)]
+pub struct TimerGuard<'a> {
+    timer: &'a Timer,
+    started: Instant,
+}
+
+impl Drop for TimerGuard<'_> {
+    fn drop(&mut self) {
+        self.timer.observe(self.started.elapsed());
+    }
+}
+
+/// A named collection of instruments.
+///
+/// Lookup takes a read lock on a `BTreeMap` and clones an `Arc`; the
+/// instruments themselves are updated without any lock. Call sites on
+/// hot loops should hoist the `Arc` out of the loop.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: RwLock<BTreeMap<&'static str, Arc<Counter>>>,
+    gauges: RwLock<BTreeMap<&'static str, Arc<Gauge>>>,
+    timers: RwLock<BTreeMap<&'static str, Arc<Timer>>>,
+}
+
+fn get_or_insert<T: Default>(
+    map: &RwLock<BTreeMap<&'static str, Arc<T>>>,
+    name: &'static str,
+) -> Arc<T> {
+    if let Some(v) = map.read().unwrap().get(name) {
+        return v.clone();
+    }
+    map.write().unwrap().entry(name).or_default().clone()
+}
+
+impl Registry {
+    /// Fresh, empty registry (tests; the process uses [`global`]).
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Counter registered under `name` (created on first use).
+    pub fn counter(&self, name: &'static str) -> Arc<Counter> {
+        get_or_insert(&self.counters, name)
+    }
+
+    /// Gauge registered under `name` (created on first use).
+    pub fn gauge(&self, name: &'static str) -> Arc<Gauge> {
+        get_or_insert(&self.gauges, name)
+    }
+
+    /// Timer registered under `name` (created on first use).
+    pub fn timer(&self, name: &'static str) -> Arc<Timer> {
+        get_or_insert(&self.timers, name)
+    }
+
+    /// Render every registered instrument as a JSON tree:
+    ///
+    /// ```json
+    /// {
+    ///   "counters": {"pool.hit": 3},
+    ///   "gauges":   {"serve.queue.depth": 0},
+    ///   "timers":   {"stage.simulate":
+    ///                {"count": 8, "total_ms": 12.5, "mean_ms": 1.56, "max_ms": 4.0}}
+    /// }
+    /// ```
+    ///
+    /// Keys are sorted (BTreeMap all the way down), so two snapshots of
+    /// the same state serialize byte-identically.
+    pub fn snapshot(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (name, c) in self.counters.read().unwrap().iter() {
+            counters.insert(name.to_string(), Json::num(c.get()));
+        }
+        let mut gauges = BTreeMap::new();
+        for (name, g) in self.gauges.read().unwrap().iter() {
+            gauges.insert(name.to_string(), Json::num(g.get()));
+        }
+        let mut timers = BTreeMap::new();
+        for (name, t) in self.timers.read().unwrap().iter() {
+            let count = t.count();
+            let total_ms = t.total().as_secs_f64() * 1e3;
+            let mean_ms = if count == 0 { 0.0 } else { total_ms / count as f64 };
+            timers.insert(
+                name.to_string(),
+                Json::obj(vec![
+                    ("count", Json::num(count)),
+                    ("total_ms", Json::num(total_ms)),
+                    ("mean_ms", Json::num(mean_ms)),
+                    ("max_ms", Json::num(t.max().as_secs_f64() * 1e3)),
+                ]),
+            );
+        }
+        Json::obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("timers", Json::Obj(timers)),
+        ])
+    }
+}
+
+/// The process-wide registry the pipeline and serving layer record into.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let reg = Registry::new();
+        let c = reg.counter("test.events");
+        c.incr();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        assert_eq!(reg.counter("test.events").get(), 5, "same instrument on re-lookup");
+
+        let g = reg.gauge("test.depth");
+        g.set(3);
+        g.add(2);
+        g.sub(4);
+        assert_eq!(g.get(), 1);
+    }
+
+    #[test]
+    fn timer_accumulates_and_guards_record_on_drop() {
+        let reg = Registry::new();
+        let t = reg.timer("test.latency");
+        t.observe(Duration::from_millis(2));
+        t.observe(Duration::from_millis(6));
+        assert_eq!(t.count(), 2);
+        assert!(t.total() >= Duration::from_millis(8));
+        assert!(t.max() >= Duration::from_millis(6));
+
+        {
+            let _g = t.start();
+        }
+        assert_eq!(t.count(), 3, "guard drop records an observation");
+
+        let out = t.time(|| 42);
+        assert_eq!(out, 42);
+        assert_eq!(t.count(), 4);
+    }
+
+    #[test]
+    fn snapshot_is_deterministic_and_sorted() {
+        let reg = Registry::new();
+        reg.counter("b.second").add(2);
+        reg.counter("a.first").add(1);
+        reg.gauge("depth").set(7);
+        reg.timer("lat").observe(Duration::from_millis(1));
+
+        let snap = reg.snapshot();
+        assert_eq!(snap.get("counters").get("a.first").as_u64(), Some(1));
+        assert_eq!(snap.get("counters").get("b.second").as_u64(), Some(2));
+        assert_eq!(snap.get("gauges").get("depth").as_f64(), Some(7.0));
+        assert_eq!(snap.get("timers").get("lat").get("count").as_u64(), Some(1));
+
+        let a = snap.compact();
+        let b = reg.snapshot().compact();
+        assert_eq!(a, b, "unchanged state snapshots byte-identically");
+    }
+
+    #[test]
+    fn global_registry_is_a_singleton() {
+        global().counter("test.global.singleton").incr();
+        assert!(global().counter("test.global.singleton").get() >= 1);
+    }
+}

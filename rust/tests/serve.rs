@@ -1,0 +1,307 @@
+//! End-to-end pins for the `cimfab serve` daemon (`cimfab::server`):
+//!
+//! * two concurrent jobs sharing a `PrefixSpec` prepare the prefix
+//!   exactly once (pool misses == 1), and the pooled results are
+//!   byte-identical to a serial batch `run_sweep` over the same
+//!   scenarios;
+//! * a cancelled job frees its queue slot (a previously-rejected submit
+//!   succeeds after the cancel) without poisoning the pool (a later job
+//!   on the same prefix still runs, on a pool hit);
+//! * malformed request lines answer with an `error` line and leave the
+//!   connection usable;
+//! * `shutdown` over the wire stops the daemon with `Ok(())`, and a
+//!   Unix-socket daemon removes its socket file on the way out.
+//!
+//! Tests bind TCP port 0 (the OS picks a free port) so parallel test
+//! processes never collide; the Unix-socket path is exercised once,
+//! under a pid-stamped temp path.
+
+use cimfab::pipeline::{run_sweep, ScenarioBuilder, SweepCfg};
+use cimfab::server::{Bind, ServeCfg, Server};
+use cimfab::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Barrier};
+use std::thread::JoinHandle;
+
+/// Bind on a free port and serve on a background thread.
+fn start(mut cfg: ServeCfg) -> (SocketAddr, JoinHandle<anyhow::Result<()>>) {
+    cfg.bind = Bind::Tcp("127.0.0.1:0".into());
+    let server = Server::bind(cfg).unwrap();
+    let addr = server.tcp_addr().unwrap();
+    let h = std::thread::spawn(move || server.run());
+    (addr, h)
+}
+
+struct Client {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let w = TcpStream::connect(addr).unwrap();
+        let r = BufReader::new(w.try_clone().unwrap());
+        Client { w, r }
+    }
+
+    fn send(&mut self, line: &str) {
+        self.w.write_all(line.as_bytes()).unwrap();
+        self.w.write_all(b"\n").unwrap();
+        self.w.flush().unwrap();
+    }
+
+    fn recv(&mut self) -> Json {
+        let mut line = String::new();
+        let n = self.r.read_line(&mut line).unwrap();
+        assert!(n > 0, "server closed the connection unexpectedly");
+        Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad JSON line {line:?}: {e}"))
+    }
+
+    /// Read lines until one with `"type": ty` arrives; returns every
+    /// line read, the match last.
+    fn recv_until(&mut self, ty: &str) -> Vec<Json> {
+        let mut out = Vec::new();
+        loop {
+            let j = self.recv();
+            let done = j.get("type").as_str() == Some(ty);
+            out.push(j);
+            if done {
+                return out;
+            }
+        }
+    }
+
+    /// Read until this job's terminal `done` line.
+    fn recv_job(&mut self, job: &str) -> Vec<Json> {
+        let mut out = Vec::new();
+        loop {
+            let j = self.recv();
+            let done =
+                j.get("type").as_str() == Some("done") && j.get("job").as_str() == Some(job);
+            out.push(j);
+            if done {
+                return out;
+            }
+        }
+    }
+}
+
+fn shutdown(addr: SocketAddr, h: JoinHandle<anyhow::Result<()>>) {
+    let mut c = Client::connect(addr);
+    c.send(r#"{"op":"shutdown"}"#);
+    assert_eq!(c.recv().get("type").as_str(), Some("shutting_down"));
+    h.join().unwrap().unwrap();
+}
+
+/// The wire submit for `net=resnet18 res=32` with the crate-default
+/// prefix knobs, so the shared prefix matches `base_builder()` exactly.
+fn submit_line(id: &str, alloc: &str, images: usize) -> String {
+    format!(
+        r#"{{"op":"submit","id":"{id}","net":"resnet18","res":32,"scenarios":[{{"alloc":"{alloc}","pes":129,"images":{images}}}]}}"#
+    )
+}
+
+/// The batch-side twin of [`submit_line`]'s prefix.
+fn base_builder() -> ScenarioBuilder {
+    ScenarioBuilder::new().net("resnet18").hw(32)
+}
+
+#[test]
+fn concurrent_jobs_share_one_prepare_and_match_batch_sweep() {
+    let (addr, h) = start(ServeCfg::new(Bind::Tcp(String::new())));
+
+    // two clients submit jobs with the same prefix at the same instant
+    let barrier = Arc::new(Barrier::new(2));
+    let jobs = [("a", "baseline"), ("b", "block-wise")];
+    let mut joins = Vec::new();
+    for (id, alloc) in jobs {
+        let barrier = barrier.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr);
+            barrier.wait();
+            c.send(&submit_line(id, alloc, 4));
+            let lines = c.recv_job(id);
+            let done = lines.last().unwrap();
+            assert_eq!(done.get("ok").as_u64(), Some(1), "{id}: {done:?}");
+            assert_eq!(done.get("failed").as_u64(), Some(0));
+            let result = lines
+                .iter()
+                .find(|l| l.get("type").as_str() == Some("result"))
+                .unwrap_or_else(|| panic!("{id}: no result line in {lines:?}"));
+            (result.get("report").compact(), result.get("prefix").as_str().unwrap().to_string())
+        }));
+    }
+    let wire: Vec<(String, String)> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+
+    // the pool prepared the shared prefix exactly once; the other job
+    // either joined the in-flight prepare or hit the finished entry
+    let mut c = Client::connect(addr);
+    c.send(r#"{"op":"stats"}"#);
+    let stats = c.recv();
+    let pool = stats.get("server").get("pool");
+    assert_eq!(pool.get("misses").as_u64(), Some(1), "{stats:?}");
+    assert_eq!(
+        pool.get("hits").as_u64().unwrap() + pool.get("joins").as_u64().unwrap(),
+        1,
+        "{stats:?}"
+    );
+    assert_eq!(pool.get("failures").as_u64(), Some(0));
+    for (_, status) in &wire {
+        assert!(
+            ["prepared", "pool-hit", "joined"].contains(&status.as_str()),
+            "unexpected prefix status {status}"
+        );
+    }
+
+    // byte-identical to a serial batch sweep over the same scenarios
+    let scenarios: Vec<_> = jobs
+        .iter()
+        .map(|(_, alloc)| base_builder().alloc(*alloc).pes(129).sim_images(4).build().unwrap())
+        .collect();
+    let batch = run_sweep(&scenarios, &SweepCfg::serial()).unwrap();
+    for ((wire_report, _), outcome) in wire.iter().zip(&batch) {
+        assert_eq!(
+            *wire_report,
+            outcome.report_json().compact(),
+            "served result diverged from the batch pipeline"
+        );
+    }
+
+    shutdown(addr, h);
+}
+
+#[test]
+fn cancelled_job_frees_its_slot_and_leaves_the_pool_clean() {
+    // one worker + a one-slot queue makes admission observable: while
+    // job "a" runs, exactly one job can wait in the queue
+    let mut cfg = ServeCfg::new(Bind::Tcp(String::new()));
+    cfg.workers = 1;
+    cfg.queue_cap = 1;
+    let (addr, h) = start(cfg);
+    let mut c = Client::connect(addr);
+
+    // "a" uses a dedicated prefix (seed 99) so its prepare keeps the
+    // single worker busy while the queue dance below runs
+    c.send(
+        r#"{"op":"submit","id":"a","net":"resnet18","res":32,"seed":99,"profile_images":3,"scenarios":[{"alloc":"block-wise","pes":129,"images":8},{"alloc":"baseline","pes":129,"images":8}]}"#,
+    );
+    assert_eq!(c.recv().get("type").as_str(), Some("accepted"));
+
+    // "b" fills the only queue slot; "c" must bounce
+    c.send(&submit_line("b", "block-wise", 2));
+    assert_eq!(c.recv().get("type").as_str(), Some("accepted"));
+    c.send(&submit_line("c", "block-wise", 2));
+    let rejected = c.recv();
+    assert_eq!(rejected.get("type").as_str(), Some("error"), "{rejected:?}");
+    assert!(rejected.get("message").as_str().unwrap().contains("queue full"), "{rejected:?}");
+
+    // cancelling "b" frees the slot immediately — "d" is admitted
+    // without waiting for a worker to reap the cancelled entry
+    c.send(r#"{"op":"cancel","job":"b"}"#);
+    let ack = c.recv_until("cancelled");
+    assert_eq!(ack.last().unwrap().get("found").as_bool(), Some(true));
+    c.send(&submit_line("d", "block-wise", 2));
+    let lines = c.recv_until("accepted");
+    assert_eq!(lines.last().unwrap().get("job").as_str(), Some("d"), "{lines:?}");
+
+    // "b" terminates as cancelled with nothing run; "a" and "d" both
+    // complete — the cancellation poisoned neither the queue nor the
+    // pool ("d" shares the default-seed prefix, not a's)
+    let mut done_b = None;
+    let mut done_a = None;
+    let mut done_d = None;
+    while done_b.is_none() || done_a.is_none() || done_d.is_none() {
+        let j = c.recv();
+        if j.get("type").as_str() == Some("done") {
+            match j.get("job").as_str() {
+                Some("a") => done_a = Some(j),
+                Some("b") => done_b = Some(j),
+                Some("d") => done_d = Some(j),
+                _ => {}
+            }
+        }
+    }
+    let b = done_b.unwrap();
+    assert_eq!(b.get("cancelled").as_bool(), Some(true), "{b:?}");
+    assert_eq!(b.get("ok").as_u64(), Some(0));
+    assert_eq!(done_a.unwrap().get("ok").as_u64(), Some(2));
+    assert_eq!(done_d.unwrap().get("ok").as_u64(), Some(1));
+
+    shutdown(addr, h);
+}
+
+#[test]
+fn malformed_lines_answer_error_and_keep_the_connection() {
+    let (addr, h) = start(ServeCfg::new(Bind::Tcp(String::new())));
+    let mut c = Client::connect(addr);
+
+    for (line, needle) in [
+        ("this is not json", "invalid request JSON"),
+        (r#"{"op":"fly"}"#, "unknown op"),
+        (r#"{"op":"submit","net":"resnet18"}"#, "scenarios"),
+        (r#"{"op":"stats","bogus":1}"#, "unknown request field"),
+    ] {
+        c.send(line);
+        let j = c.recv();
+        assert_eq!(j.get("type").as_str(), Some("error"), "{line} -> {j:?}");
+        assert!(j.get("message").as_str().unwrap().contains(needle), "{line} -> {j:?}");
+    }
+
+    // a semantically-bad submit is rejected per job, with the job id
+    c.send(r#"{"op":"submit","id":"typo","net":"resnet19","scenarios":[{"pes":129}]}"#);
+    let j = c.recv();
+    assert_eq!(j.get("type").as_str(), Some("error"));
+    assert_eq!(j.get("job").as_str(), Some("typo"));
+    assert!(j.get("message").as_str().unwrap().contains("resnet18"), "{j:?}");
+
+    // ... and the same connection still serves valid requests
+    c.send(r#"{"op":"stats"}"#);
+    let j = c.recv();
+    assert_eq!(j.get("type").as_str(), Some("stats"));
+    assert_eq!(j.get("server").get("rejected").as_u64(), Some(1), "{j:?}");
+
+    shutdown(addr, h);
+}
+
+#[cfg(unix)]
+#[test]
+fn unix_socket_daemon_serves_and_cleans_up_its_socket_file() {
+    use std::os::unix::net::UnixStream;
+
+    let path = std::env::temp_dir().join(format!("cimfab-serve-test-{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let server = Server::bind(ServeCfg::new(Bind::Unix(path.clone()))).unwrap();
+    let h = std::thread::spawn(move || server.run());
+
+    let w = UnixStream::connect(&path).unwrap();
+    let mut r = BufReader::new(w.try_clone().unwrap());
+    let send = |line: &str| {
+        (&w).write_all(line.as_bytes()).unwrap();
+        (&w).write_all(b"\n").unwrap();
+    };
+    let mut recv = || {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        Json::parse(line.trim()).unwrap()
+    };
+
+    send(&submit_line("u1", "block-wise", 2));
+    assert_eq!(recv().get("type").as_str(), Some("accepted"));
+    loop {
+        let j = recv();
+        if j.get("type").as_str() == Some("done") {
+            assert_eq!(j.get("ok").as_u64(), Some(1), "{j:?}");
+            break;
+        }
+    }
+    send(r#"{"op":"shutdown"}"#);
+    assert_eq!(recv().get("type").as_str(), Some("shutting_down"));
+    h.join().unwrap().unwrap();
+    assert!(!path.exists(), "daemon left its socket file behind");
+
+    // a second daemon can bind the same path after the clean exit
+    let server = Server::bind(ServeCfg::new(Bind::Unix(path.clone()))).unwrap();
+    drop(server);
+    let _ = std::fs::remove_file(&path);
+}

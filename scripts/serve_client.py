@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Minimal client for the `cimfab serve` JSON-lines wire protocol.
+
+Talks to a daemon over a Unix socket (--socket) or TCP (--connect),
+sends one request, and prints every response line until the exchange is
+complete. Used by the CI serve smoke test; stdlib only.
+
+Examples:
+    cimfab serve --socket /tmp/cimfab.sock &
+    scripts/serve_client.py --socket /tmp/cimfab.sock --wait-listening \
+        submit --net resnet18 --res 32 --alloc block-wise --pes 129 --images 2
+    scripts/serve_client.py --socket /tmp/cimfab.sock stats
+    scripts/serve_client.py --socket /tmp/cimfab.sock cancel --job job-1
+    scripts/serve_client.py --socket /tmp/cimfab.sock shutdown
+"""
+
+import argparse
+import json
+import socket
+import sys
+import time
+
+
+def connect(args):
+    deadline = time.monotonic() + (args.wait_listening or 0)
+    while True:
+        try:
+            if args.socket:
+                s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+                s.connect(args.socket)
+            else:
+                host, _, port = args.connect.rpartition(":")
+                s = socket.create_connection((host, int(port)))
+            return s
+        except OSError:
+            if time.monotonic() >= deadline:
+                raise
+            time.sleep(0.1)
+
+
+def build_request(args):
+    if args.op == "submit":
+        scenario = {"alloc": args.alloc, "pes": args.pes, "images": args.images}
+        if args.dataflow:
+            scenario["dataflow"] = args.dataflow
+        if args.engine:
+            scenario["engine"] = args.engine
+        req = {
+            "op": "submit",
+            "net": args.net,
+            "res": args.res,
+            "seed": args.seed,
+            "scenarios": [scenario],
+        }
+        if args.id:
+            req["id"] = args.id
+        if args.priority:
+            req["priority"] = args.priority
+        return req
+    if args.op == "cancel":
+        return {"op": "cancel", "job": args.job}
+    return {"op": args.op}
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--socket", help="Unix socket path of the daemon")
+    p.add_argument("--connect", help="TCP address host:port of the daemon")
+    p.add_argument(
+        "--wait-listening",
+        type=float,
+        nargs="?",
+        const=10.0,
+        default=None,
+        metavar="SECS",
+        help="retry connecting for up to SECS seconds (default 10)",
+    )
+    sub = p.add_subparsers(dest="op", required=True)
+
+    submit = sub.add_parser("submit", help="submit a one-scenario job")
+    submit.add_argument("--id", help="client-chosen job id")
+    submit.add_argument("--priority", type=int, default=0)
+    submit.add_argument("--net", default="resnet18")
+    submit.add_argument("--res", type=int, default=64)
+    submit.add_argument("--seed", type=int, default=7)
+    submit.add_argument("--alloc", default="block-wise")
+    submit.add_argument("--dataflow")
+    submit.add_argument("--engine")
+    submit.add_argument("--pes", type=int, required=True)
+    submit.add_argument("--images", type=int, default=8)
+
+    cancel = sub.add_parser("cancel", help="cancel a live job by id")
+    cancel.add_argument("--job", required=True)
+    sub.add_parser("stats", help="print server + telemetry counters")
+    sub.add_parser("shutdown", help="drain and stop the daemon")
+
+    args = p.parse_args()
+    if bool(args.socket) == bool(args.connect):
+        p.error("need exactly one of --socket or --connect")
+
+    req = build_request(args)
+    with connect(args) as s:
+        s.sendall((json.dumps(req) + "\n").encode())
+        # read until the exchange's terminal line; submit streams result
+        # lines and ends with this job's "done"
+        reader = s.makefile("r", encoding="utf-8")
+        accepted = False
+        for line in reader:
+            line = line.strip()
+            if not line:
+                continue
+            reply = json.loads(line)  # malformed output should fail the smoke
+            print(line)
+            kind = reply.get("type")
+            if args.op == "submit":
+                if kind == "accepted":
+                    accepted = True
+                elif kind == "error" and not accepted:
+                    sys.exit(1)  # rejected before admission: no done follows
+                elif kind == "done":
+                    sys.exit(0 if reply.get("ok", 0) > 0 and not reply.get("failed") else 1)
+            elif kind == "error":
+                sys.exit(1)
+            elif kind in ("stats", "cancelled", "shutting_down"):
+                sys.exit(0)
+        sys.exit(1)  # connection closed before a terminal line
+
+
+if __name__ == "__main__":
+    main()
