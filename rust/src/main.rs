@@ -144,6 +144,10 @@ fn serve_cfg(args: &Args) -> Result<cimfab::server::ServeCfg, String> {
     if cfg.queue_cap == 0 {
         return Err("--queue-cap 0 is invalid; the queue must admit at least one job".to_string());
     }
+    cfg.pool_cap = args.get_usize("pool-cap", cfg.pool_cap)?;
+    if cfg.pool_cap == 0 {
+        return Err("--pool-cap 0 is invalid; the pool must hold at least one prefix".to_string());
+    }
     cfg.cache_dir =
         if args.has_flag("no-cache") { None } else { args.get("cache-dir").map(str::to_string) };
     Ok(cfg)
@@ -709,4 +713,6 @@ protocol — JSON lines: submit/cancel/stats/shutdown):
   --workers N              concurrent job workers (default 2)
   --queue-cap N            max live (queued) jobs before submits are
                            rejected (default 256)
+  --pool-cap N             max resident prepared prefixes in the
+                           in-memory pool, LRU evicted (default 64)
   --threads / --cache-dir / --no-cache as above, applied to every job";

@@ -5,7 +5,13 @@
 //! flag). Each connection gets a reader thread that parses one request
 //! per line and answers on a per-connection writer shared (behind a
 //! mutex) with the workers, so result lines from concurrent jobs
-//! interleave at line granularity only. `workers` threads pop jobs from
+//! interleave at line granularity only; the submit path holds that
+//! mutex across queue admission and the `accepted` ack, so a job's
+//! `accepted` line always precedes its `result`/`done` lines even when
+//! a worker pops it immediately. Client writes carry a timeout and a
+//! dead-latch ([`ConnWriter`]): a client that vanishes or stops
+//! reading costs a worker at most one timed-out write, after which the
+//! job continues with its output discarded. `workers` threads pop jobs from
 //! the [`JobQueue`] and run them: shared prefix through the
 //! [`PrefixPool`], then each scenario through
 //! [`crate::pipeline::run_scenario`], streaming a `result` line as each
@@ -58,25 +64,57 @@ pub struct ServeCfg {
     pub threads: usize,
     /// Admission queue capacity (live jobs).
     pub queue_cap: usize,
+    /// Max resident prepared prefixes in the in-memory pool (LRU
+    /// evicted past this; >= 1).
+    pub pool_cap: usize,
     /// On-disk prefix cache directory (`None` = in-memory pool only).
     pub cache_dir: Option<String>,
 }
 
 impl ServeCfg {
     /// Defaults: 2 workers, [`crate::util::par::default_threads`]
-    /// prepare threads, a 256-job queue, no on-disk cache.
+    /// prepare threads, a 256-job queue, a
+    /// [`super::pool::DEFAULT_MAX_RESIDENT`]-prefix pool, no on-disk
+    /// cache.
     pub fn new(bind: Bind) -> ServeCfg {
         ServeCfg {
             bind,
             workers: 2,
             threads: crate::util::par::default_threads(),
             queue_cap: 256,
+            pool_cap: super::pool::DEFAULT_MAX_RESIDENT,
             cache_dir: None,
         }
     }
 }
 
-type SharedWriter = Arc<Mutex<Box<dyn Write + Send>>>;
+/// How long a single client write may block before the client is
+/// declared dead. A client that stops reading (full TCP send buffer)
+/// must not pin a worker thread on `write_all` forever.
+const CLIENT_WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// One connection's write half. `dead` latches on the first failed or
+/// timed-out write: the job keeps running, later writes are discarded,
+/// and no worker ever stalls on a vanished or stuck client again.
+struct ConnWriter {
+    w: Box<dyn Write + Send>,
+    dead: bool,
+}
+
+impl ConnWriter {
+    fn write_line(&mut self, bytes: &[u8]) {
+        if self.dead {
+            return;
+        }
+        // a timeout can leave a partial line on the wire, so the stream
+        // is unusable either way — latch rather than retry
+        if self.w.write_all(bytes).and_then(|()| self.w.flush()).is_err() {
+            self.dead = true;
+        }
+    }
+}
+
+type SharedWriter = Arc<Mutex<ConnWriter>>;
 
 /// One admitted job, queued for a worker.
 struct Job {
@@ -166,17 +204,21 @@ impl Listener {
 
 impl Stream {
     /// Split into a read half and a boxed write half (`try_clone`
-    /// duplicates the underlying socket).
+    /// duplicates the underlying socket). Writes carry
+    /// [`CLIENT_WRITE_TIMEOUT`] so a stuck client can't pin a worker;
+    /// reads stay unbounded (an idle connection is legitimate).
     fn split(self) -> std::io::Result<(Box<dyn Read + Send>, Box<dyn Write + Send>)> {
         match self {
             #[cfg(unix)]
             Stream::Unix(s) => {
                 s.set_nonblocking(false)?;
+                s.set_write_timeout(Some(CLIENT_WRITE_TIMEOUT))?;
                 let r = s.try_clone()?;
                 Ok((Box::new(r), Box::new(s)))
             }
             Stream::Tcp(s) => {
                 s.set_nonblocking(false)?;
+                s.set_write_timeout(Some(CLIENT_WRITE_TIMEOUT))?;
                 let r = s.try_clone()?;
                 Ok((Box::new(r), Box::new(s)))
             }
@@ -228,6 +270,7 @@ impl Server {
     pub fn bind(cfg: ServeCfg) -> Result<Server> {
         anyhow::ensure!(cfg.workers >= 1, "serve needs at least one worker");
         anyhow::ensure!(cfg.threads >= 1, "serve needs at least one prepare thread");
+        anyhow::ensure!(cfg.pool_cap >= 1, "serve needs room for at least one pooled prefix");
         let listener = match &cfg.bind {
             Bind::Unix(path) => {
                 #[cfg(unix)]
@@ -254,7 +297,7 @@ impl Server {
         };
         let shared = Arc::new(Shared {
             queue: JobQueue::new(cfg.queue_cap),
-            pool: PrefixPool::new(),
+            pool: PrefixPool::with_capacity(cfg.pool_cap),
             cache,
             threads: cfg.threads,
             jobs: Mutex::new(HashMap::new()),
@@ -336,11 +379,7 @@ impl Server {
 }
 
 fn write_line(out: &SharedWriter, bytes: &[u8]) {
-    // a vanished client must not take the worker down with it; its
-    // job keeps running and later writes keep failing silently
-    let mut w = out.lock().unwrap();
-    let _ = w.write_all(bytes);
-    let _ = w.flush();
+    out.lock().unwrap().write_line(bytes);
 }
 
 fn trim_line(buf: &[u8]) -> &[u8] {
@@ -358,7 +397,7 @@ fn trim_line(buf: &[u8]) -> &[u8] {
 
 fn connection_loop(shared: &Arc<Shared>, stream: Stream) {
     let Ok((read_half, write_half)) = stream.split() else { return };
-    let out: SharedWriter = Arc::new(Mutex::new(write_half));
+    let out: SharedWriter = Arc::new(Mutex::new(ConnWriter { w: write_half, dead: false }));
     let mut reader = BufReader::new(read_half);
     let mut buf = Vec::new();
     loop {
@@ -448,28 +487,29 @@ fn submit(shared: &Arc<Shared>, out: &SharedWriter, spec: protocol::JobSpec) {
     }
     let n = scenarios.len();
     let job = Job { handle, prefix, scenarios, out: out.clone() };
+    // hold the connection writer across the push and the ack: a worker
+    // can pop the job immediately, but its result/done lines block on
+    // this mutex, so the client always sees `accepted` first
+    let mut w = out.lock().unwrap();
     match shared.queue.push(spec.priority, job) {
         Ok(depth) => {
             shared.stats.accepted.fetch_add(1, Ordering::Relaxed);
             telemetry::global().counter("serve.jobs.accepted").incr();
             telemetry::global().gauge("serve.queue.depth").set(depth as i64);
-            write_line(out, &protocol::accepted_line(&id, n, depth));
+            w.write_line(&protocol::accepted_line(&id, n, depth));
         }
         Err(PushError::Full(_)) => {
             shared.unregister(&id);
             shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
             telemetry::global().counter("serve.jobs.rejected").incr();
-            write_line(
-                out,
-                &protocol::error_line(
-                    Some(&id),
-                    &format!("queue full ({} live jobs) — retry later", shared.queue.capacity()),
-                ),
-            );
+            w.write_line(&protocol::error_line(
+                Some(&id),
+                &format!("queue full ({} live jobs) — retry later", shared.queue.capacity()),
+            ));
         }
         Err(PushError::Closed(_)) => {
             shared.unregister(&id);
-            write_line(out, &protocol::error_line(Some(&id), "server is shutting down"));
+            w.write_line(&protocol::error_line(Some(&id), "server is shutting down"));
         }
     }
 }

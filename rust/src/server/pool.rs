@@ -14,6 +14,12 @@
 //! error, but the failed slot is treated as absent by the next fresh
 //! arrival, which retries from scratch. A cancelled or failed job can
 //! therefore never poison the pool for later jobs.
+//!
+//! Residency is bounded: at most `max_resident` prepared prefixes stay
+//! in the pool, least-recently-used evicted first, so a long-running
+//! daemon fed a stream of distinct prefixes does not grow without
+//! bound. Eviction only drops the pool's own `Arc` — jobs still holding
+//! a prefix keep it alive until they finish.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -27,8 +33,9 @@ use anyhow::Result;
 enum Slot {
     /// One worker is preparing this prefix; wait on the condvar.
     InFlight,
-    /// Prepared and resident; share it.
-    Ready(Arc<Prepared>),
+    /// Prepared and resident; share it. `tick` is the last-use stamp
+    /// the LRU eviction orders on.
+    Ready { prep: Arc<Prepared>, tick: u64 },
     /// The last prepare failed. Waiters see the message; the next
     /// fresh arrival clears the slot and retries.
     Failed(String),
@@ -72,6 +79,8 @@ pub struct PoolStats {
     pub joins: u64,
     /// Prepares that failed (each also counts as a miss).
     pub failures: u64,
+    /// Resident prefixes dropped by the LRU bound.
+    pub evictions: u64,
 }
 
 impl PoolStats {
@@ -82,21 +91,38 @@ impl PoolStats {
             ("misses", Json::num(self.misses)),
             ("joins", Json::num(self.joins)),
             ("failures", Json::num(self.failures)),
+            ("evictions", Json::num(self.evictions)),
             ("ready", Json::num(ready as u64)),
         ])
     }
 }
 
+/// Default residency bound: generous for real sweeps (a prefix is one
+/// net × resolution × profile), tight enough that a daemon fed an
+/// adversarial stream of distinct prefixes stays bounded.
+pub const DEFAULT_MAX_RESIDENT: usize = 64;
+
 /// The pool proper. All methods take `&self`; one instance is shared by
 /// every daemon worker behind an `Arc`.
-#[derive(Default)]
 pub struct PrefixPool {
     slots: Mutex<HashMap<String, Slot>>,
     done: Condvar,
+    /// Ready slots are LRU-evicted past this bound (in-flight and
+    /// failed slots don't count — failures are reclaimed on retry).
+    max_resident: usize,
+    /// Monotonic last-use clock for the LRU order.
+    tick: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
     joins: AtomicU64,
     failures: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl Default for PrefixPool {
+    fn default() -> PrefixPool {
+        PrefixPool::new()
+    }
 }
 
 /// Marks the in-flight slot `Failed` if the preparing thread unwinds
@@ -119,9 +145,25 @@ impl Drop for InFlightGuard<'_> {
 }
 
 impl PrefixPool {
-    /// An empty pool.
+    /// An empty pool with the [`DEFAULT_MAX_RESIDENT`] bound.
     pub fn new() -> PrefixPool {
-        PrefixPool::default()
+        PrefixPool::with_capacity(DEFAULT_MAX_RESIDENT)
+    }
+
+    /// An empty pool keeping at most `max_resident` (>= 1) prepared
+    /// prefixes, least-recently-used evicted first.
+    pub fn with_capacity(max_resident: usize) -> PrefixPool {
+        PrefixPool {
+            slots: Mutex::new(HashMap::new()),
+            done: Condvar::new(),
+            max_resident: max_resident.max(1),
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            joins: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
     }
 
     /// Return the shared [`Prepared`] for `spec`, preparing it (through
@@ -140,9 +182,10 @@ impl PrefixPool {
         let mut joined = false;
         let mut slots = self.slots.lock().unwrap();
         loop {
-            match slots.get(&key) {
-                Some(Slot::Ready(p)) => {
-                    let p = p.clone();
+            match slots.get_mut(&key) {
+                Some(Slot::Ready { prep, tick }) => {
+                    *tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+                    let p = prep.clone();
                     drop(slots);
                     return if joined {
                         self.joins.fetch_add(1, Ordering::Relaxed);
@@ -197,7 +240,9 @@ impl PrefixPool {
         match outcome {
             Ok((prep, _cache_status)) => {
                 let p = Arc::new(prep);
-                slots.insert(key.to_string(), Slot::Ready(p.clone()));
+                let now = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+                slots.insert(key.to_string(), Slot::Ready { prep: p.clone(), tick: now });
+                self.evict_lru(&mut slots);
                 self.done.notify_all();
                 Ok((p, PoolStatus::Prepared))
             }
@@ -211,13 +256,34 @@ impl PrefixPool {
         }
     }
 
+    /// Drop least-recently-used ready slots until the bound holds.
+    /// Jobs still holding an evicted `Arc<Prepared>` are unaffected.
+    fn evict_lru(&self, slots: &mut HashMap<String, Slot>) {
+        let mut ready: Vec<(String, u64)> = slots
+            .iter()
+            .filter_map(|(k, s)| match s {
+                Slot::Ready { tick, .. } => Some((k.clone(), *tick)),
+                _ => None,
+            })
+            .collect();
+        if ready.len() <= self.max_resident {
+            return;
+        }
+        ready.sort_by_key(|(_, tick)| *tick);
+        for (key, _) in ready.iter().take(ready.len() - self.max_resident) {
+            slots.remove(key);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            telemetry::global().counter("pool.evict").incr();
+        }
+    }
+
     /// Number of prefixes currently resident (ready to share).
     pub fn ready_len(&self) -> usize {
         self.slots
             .lock()
             .unwrap()
             .values()
-            .filter(|s| matches!(s, Slot::Ready(_)))
+            .filter(|s| matches!(s, Slot::Ready { .. }))
             .count()
     }
 
@@ -243,6 +309,7 @@ impl PrefixPool {
             misses: self.misses.load(Ordering::Relaxed),
             joins: self.joins.load(Ordering::Relaxed),
             failures: self.failures.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
         }
     }
 }
@@ -300,6 +367,28 @@ mod tests {
         // second valid request is a pool hit
         let (_, status) = pool.get_or_prepare(&spec(), None, 1).unwrap();
         assert_eq!(status, PoolStatus::Hit);
+    }
+
+    #[test]
+    fn lru_bound_caps_residency_and_evicts_coldest() {
+        let pool = PrefixPool::with_capacity(2);
+        let mut a = spec();
+        a.seed = 1;
+        let mut b = spec();
+        b.seed = 2;
+        let mut c = spec();
+        c.seed = 3;
+        pool.get_or_prepare(&a, None, 1).unwrap();
+        pool.get_or_prepare(&b, None, 1).unwrap();
+        // touch `a` so `b` becomes the least recently used
+        assert_eq!(pool.get_or_prepare(&a, None, 1).unwrap().1, PoolStatus::Hit);
+        pool.get_or_prepare(&c, None, 1).unwrap();
+        assert_eq!(pool.ready_len(), 2, "the bound holds after the third prepare");
+        assert_eq!(pool.stats().evictions, 1);
+        // `a` survived (it was touched), `b` was the one evicted
+        assert_eq!(pool.get_or_prepare(&a, None, 1).unwrap().1, PoolStatus::Hit);
+        assert_eq!(pool.get_or_prepare(&b, None, 1).unwrap().1, PoolStatus::Prepared);
+        assert_eq!(pool.ready_len(), 2);
     }
 
     #[test]

@@ -7,7 +7,7 @@ complete. Used by the CI serve smoke test; stdlib only.
 
 Examples:
     cimfab serve --socket /tmp/cimfab.sock &
-    scripts/serve_client.py --socket /tmp/cimfab.sock --wait-listening \
+    scripts/serve_client.py --socket /tmp/cimfab.sock --wait-listening 10 \
         submit --net resnet18 --res 32 --alloc block-wise --pes 129 --images 2
     scripts/serve_client.py --socket /tmp/cimfab.sock stats
     scripts/serve_client.py --socket /tmp/cimfab.sock cancel --job job-1
@@ -22,7 +22,7 @@ import time
 
 
 def connect(args):
-    deadline = time.monotonic() + (args.wait_listening or 0)
+    deadline = time.monotonic() + args.wait_listening
     while True:
         try:
             if args.socket:
@@ -66,14 +66,14 @@ def main():
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--socket", help="Unix socket path of the daemon")
     p.add_argument("--connect", help="TCP address host:port of the daemon")
+    # takes an explicit value: with nargs='?' argparse would swallow the
+    # following subcommand token ("submit") as the float and exit 2
     p.add_argument(
         "--wait-listening",
         type=float,
-        nargs="?",
-        const=10.0,
-        default=None,
+        default=0.0,
         metavar="SECS",
-        help="retry connecting for up to SECS seconds (default 10)",
+        help="retry connecting for up to SECS seconds (default: no retry)",
     )
     sub = p.add_subparsers(dest="op", required=True)
 
