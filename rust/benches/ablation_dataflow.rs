@@ -56,6 +56,7 @@ fn main() {
             .iter()
             .map(|d| vec![*d.iter().min().unwrap(); d.len()])
             .collect(),
+        pools: None,
     };
 
     let mut b = Bencher::new(0, 2);
@@ -80,6 +81,7 @@ fn main() {
                     engine: &cimfab::sim::engine::EVENT,
                     images: 8,
                     warmup: 2,
+                    write_latency_ns: 100.0,
                 },
             );
             ips = r.throughput_ips;

@@ -1,0 +1,101 @@
+//! Weight-pool bench: big nets on small chips.
+//!
+//! Runs ResNet18 on progressively undersized rram-128 chips — full
+//! size, half, and quarter — with the `pooled` allocator making up the
+//! gap through time-multiplexed reprogramming, and reports the cost of
+//! oversubscription: reload count, cells rewritten, visible stall
+//! cycles, and the throughput retained relative to the full-size chip.
+//! Emits `BENCH_weight_pools.json` (repo root, archived by CI) in the
+//! shared `{name, baseline_ms, optimized_ms, speedup}` schema, where
+//! baseline is the full-size (1x) simulation wall-clock and optimized
+//! the quarter-size (4x) pooled one.
+
+use cimfab::pipeline::{self, PrefixSpec, ScenarioBuilder, StatsSource};
+use cimfab::util::bench::{banner, write_bench_json, Bencher};
+use cimfab::util::json::Json;
+use cimfab::util::table::{fmt_f, fmt_int, Table};
+
+fn main() {
+    banner(
+        "Weight pools",
+        "ResNet18 on full/half/quarter rram-128 chips via pooled reprogramming",
+    );
+    let spec = PrefixSpec {
+        net: "resnet18".into(),
+        hw: 32,
+        hw_profile: cimfab::hw::DEFAULT_PROFILE.into(),
+        stats: StatsSource::Synthetic,
+        profile_images: 1,
+        seed: 7,
+        artifacts_dir: "artifacts".into(),
+    };
+    let prep = pipeline::prepare(&spec, None).unwrap();
+    let min_pes = prep.min_pes();
+
+    let mut b = Bencher::new(1, 3);
+    let mut t = Table::new([
+        "oversub",
+        "PEs",
+        "inferences/s",
+        "reloads",
+        "cells rewritten",
+        "stall cycles",
+        "stall %",
+    ]);
+    let mut wall_ms = Vec::new();
+    let mut tput = Vec::new();
+    for ratio in [1.0f64, 2.0, 4.0] {
+        let pes = (min_pes as f64 / ratio).ceil() as usize;
+        let sc = ScenarioBuilder::from_prefix(&spec)
+            .alloc("pooled")
+            .pes(pes)
+            .sim_images(4)
+            .oversub(ratio)
+            .build()
+            .unwrap();
+        let mut out = None;
+        let mean = b
+            .bench(&format!("pooled @{ratio}x ({pes} PEs)"), || {
+                out = Some(pipeline::run_scenario(&prep.view(), &sc, None).unwrap());
+            })
+            .summary
+            .mean;
+        let out = out.unwrap();
+        let r = &out.result;
+        if ratio > 1.0 {
+            assert!(r.reloads >= 1, "@{ratio}x: the undersized chip must reload");
+        } else {
+            assert_eq!(r.reloads, 0, "@1x: pooling must stay off");
+        }
+        t.row([
+            format!("{ratio}x"),
+            pes.to_string(),
+            fmt_f(r.throughput_ips, 2),
+            r.reloads.to_string(),
+            fmt_int(r.reload_cells),
+            fmt_int(r.reload_stall_cycles),
+            fmt_f(r.reload_stall_cycles as f64 / r.makespan.max(1) as f64 * 100.0, 2),
+        ]);
+        wall_ms.push(mean * 1e3);
+        tput.push(r.throughput_ips);
+    }
+    println!("{}", t.render());
+    println!(
+        "throughput retained on the quarter chip: {:.1}% of full size",
+        tput[2] / tput[0].max(1e-12) * 100.0
+    );
+
+    write_bench_json(
+        "weight_pools",
+        wall_ms[0],
+        wall_ms[2],
+        vec![
+            ("net", Json::str("resnet18")),
+            ("ratios", Json::arr([1.0, 2.0, 4.0].iter().map(|&r| Json::num(r)))),
+            ("full_ips", Json::num(tput[0])),
+            ("half_ips", Json::num(tput[1])),
+            ("quarter_ips", Json::num(tput[2])),
+        ],
+    );
+    println!("\n{}", b.report());
+}

@@ -110,6 +110,7 @@ pub fn layerwise(
             .enumerate()
             .map(|(l, g)| vec![copies[l]; g.blocks_per_copy])
             .collect(),
+        pools: None,
     })
 }
 
@@ -142,7 +143,7 @@ pub fn blockwise(
     for (i, b) in blocks.iter().enumerate() {
         duplicates[b.layer][b.row] = copies[i];
     }
-    Ok(AllocationPlan { algorithm: "blockwise".into(), duplicates })
+    Ok(AllocationPlan { algorithm: "blockwise".into(), duplicates, pools: None })
 }
 
 #[cfg(test)]

@@ -111,7 +111,12 @@ impl Allocator for Hybrid {
                 Some(r) => duplicates[l][r] = copies[u],
             }
         }
-        finish_plan(AllocationPlan { algorithm: String::new(), duplicates }, self.name(), map, budget_arrays)
+        finish_plan(
+            AllocationPlan { algorithm: String::new(), duplicates, pools: None },
+            self.name(),
+            map,
+            budget_arrays,
+        )
     }
 }
 

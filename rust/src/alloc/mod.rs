@@ -30,6 +30,7 @@ pub mod builtin;
 pub mod greedy;
 pub mod hybrid;
 pub mod oracle;
+pub mod pooled;
 
 use crate::mapping::{AllocationPlan, NetworkMap};
 use crate::stats::NetworkProfile;
@@ -108,6 +109,29 @@ pub trait Allocator: Send + Sync {
         profile: &NetworkProfile,
         budget_arrays: usize,
     ) -> crate::Result<AllocationPlan>;
+
+    /// Allocate against a *physical* chip of `physical_arrays` arrays
+    /// oversubscribed by ratio `oversub` (logical capacity =
+    /// `⌊physical × oversub⌋`). The default implementation only accepts
+    /// `oversub == 1.0` (delegating to [`Allocator::allocate`]); only
+    /// strategies that can emit a reprogramming schedule — the `pooled`
+    /// allocator — override it.
+    fn allocate_oversub(
+        &self,
+        map: &NetworkMap,
+        profile: &NetworkProfile,
+        physical_arrays: usize,
+        oversub: f64,
+    ) -> crate::Result<AllocationPlan> {
+        anyhow::ensure!(
+            oversub == 1.0,
+            "allocation strategy '{}' cannot oversubscribe the chip (requested {}x); \
+             use --alloc pooled for time-multiplexed weight pools",
+            self.name(),
+            oversub
+        );
+        self.allocate(map, profile, physical_arrays)
+    }
 }
 
 /// Shared tail of every [`Allocator::allocate`] implementation: stamp

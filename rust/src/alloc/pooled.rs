@@ -1,0 +1,299 @@
+//! CIMPool-style weight pools: time-multiplexed array sharing for nets
+//! bigger than the chip.
+//!
+//! The paper's allocators assume the chip holds the whole net — weights
+//! are programmed into eNVM once and never move. `pooled` drops that
+//! assumption: the chip is declared with an *oversubscription ratio*
+//! `R ≥ 1` ([`crate::hw::ChipSpec::oversub`] or `--oversub R`) and the
+//! allocator plans against the **logical** capacity `⌊physical × R⌋`
+//! while partitioning the layers into **pools** — contiguous resident
+//! sets that fit the **physical** chip. The hottest blocks (by profiled
+//! zero-skip cycles, the same signal `block-wise` balances on) are
+//! *pinned* resident across every pool; cold blocks share the remaining
+//! slots and are reprogrammed when their pool is swapped in. The swap
+//! schedule ships in the plan ([`PoolSchedule`]) so the simulator can
+//! charge `write_latency_ns × cells` of occupancy and the energy model
+//! `write_energy_pj × cells` per reload.
+//!
+//! At `R == 1` (or whenever the logical plan happens to fit the physical
+//! chip) the plan is byte-identical to the `block-wise` plan of the same
+//! budget, restamped `pooled`, with no schedule attached — pinned by
+//! `tests/weight_pools.rs`.
+
+use super::{finish_plan, greedy, Allocator};
+use crate::mapping::{AllocationPlan, NetworkMap, Pool, PoolSchedule};
+use crate::stats::NetworkProfile;
+
+/// Weight-pool allocator (CIMPool-style oversubscription).
+#[derive(Debug, Clone, Copy)]
+pub struct Pooled;
+
+/// The registered `pooled` strategy.
+pub static POOLED: Pooled = Pooled;
+
+impl Allocator for Pooled {
+    fn name(&self) -> &str {
+        "pooled"
+    }
+
+    fn describe(&self) -> &str {
+        "CIMPool-style weight pools: block-wise duplicates against the logical \
+         (oversubscribed) capacity, hot blocks pinned resident, cold blocks \
+         time-multiplexed through the remaining arrays with an explicit \
+         reprogramming schedule"
+    }
+
+    fn default_dataflow(&self) -> &str {
+        "block-wise"
+    }
+
+    fn uniform_plans(&self) -> bool {
+        false
+    }
+
+    fn allocate(
+        &self,
+        map: &NetworkMap,
+        profile: &NetworkProfile,
+        budget_arrays: usize,
+    ) -> crate::Result<AllocationPlan> {
+        // No oversubscription: exactly the block-wise plan, restamped.
+        let plan = greedy::blockwise(map, &profile.block_cycles, budget_arrays)?;
+        finish_plan(plan, self.name(), map, budget_arrays)
+    }
+
+    fn allocate_oversub(
+        &self,
+        map: &NetworkMap,
+        profile: &NetworkProfile,
+        physical_arrays: usize,
+        oversub: f64,
+    ) -> crate::Result<AllocationPlan> {
+        anyhow::ensure!(
+            oversub.is_finite() && oversub > 0.0,
+            "oversubscription ratio must be finite and positive, got {oversub}"
+        );
+        let logical = (physical_arrays as f64 * oversub).floor() as usize;
+        let mut plan = greedy::blockwise(map, &profile.block_cycles, logical)?;
+        if plan.arrays_used(map) > physical_arrays {
+            plan.pools = Some(build_schedule(map, profile, &plan, physical_arrays)?);
+        }
+        finish_plan(plan, self.name(), map, logical)
+    }
+}
+
+/// Partition the plan's blocks into pinned-resident blocks plus
+/// contiguous layer pools sized to the physical chip. Deterministic:
+/// pinning order is profiled heat (descending) with `(layer, row)`
+/// tie-breaks; pools are greedy first-fit layer ranges.
+fn build_schedule(
+    map: &NetworkMap,
+    profile: &NetworkProfile,
+    plan: &AllocationPlan,
+    physical_arrays: usize,
+) -> crate::Result<PoolSchedule> {
+    // Per-block physical footprint (all duplicates stay together) and
+    // per-layer unpinned footprint.
+    let foot = |l: usize, r: usize| plan.duplicates[l][r] * map.grids[l].arrays_per_block;
+    let cells = |l: usize, r: usize| {
+        map.grids[l].weight_cells_in_block(r, &map.array) * plan.duplicates[l][r] as u64
+    };
+    let mut unpinned_foot: Vec<usize> = map
+        .grids
+        .iter()
+        .enumerate()
+        .map(|(l, g)| (0..g.blocks_per_copy).map(|r| foot(l, r)).sum())
+        .collect();
+    // A pool must at minimum host one whole layer next to the pinned set.
+    if let Some((l, &need)) = unpinned_foot.iter().enumerate().max_by_key(|&(_, f)| *f) {
+        anyhow::ensure!(
+            need <= physical_arrays,
+            "layer {} ('{}') needs {} arrays but the physical chip has {}; \
+             lower --oversub or raise --pes",
+            l,
+            map.grids[l].name,
+            need,
+            physical_arrays
+        );
+    }
+
+    // Pin the hottest blocks while every layer still fits beside them.
+    let mut candidates: Vec<(usize, usize)> = map.blocks().iter().map(|b| (b.layer, b.row)).collect();
+    candidates.sort_by(|&(al, ar), &(bl, br)| {
+        profile.block_cycles[bl][br]
+            .total_cmp(&profile.block_cycles[al][ar])
+            .then_with(|| (al, ar).cmp(&(bl, br)))
+    });
+    let mut pinned = vec![Vec::new(); map.grids.len()];
+    let mut pinned_total = 0usize;
+    for (l, r) in candidates {
+        let cost = foot(l, r);
+        let widest = unpinned_foot
+            .iter()
+            .enumerate()
+            .map(|(m, &f)| if m == l { f - cost } else { f })
+            .max()
+            .unwrap_or(0);
+        if pinned_total + cost + widest <= physical_arrays {
+            pinned_total += cost;
+            unpinned_foot[l] -= cost;
+            pinned[l].push(r);
+        }
+    }
+
+    // Greedy first-fit contiguous layer ranges over the leftover space.
+    let free = physical_arrays - pinned_total;
+    let mut ranges: Vec<(usize, usize)> = Vec::new();
+    let mut start = 0usize;
+    let mut acc = 0usize;
+    for (l, &f) in unpinned_foot.iter().enumerate() {
+        if l > start && acc + f > free {
+            ranges.push((start, l - 1));
+            start = l;
+            acc = 0;
+        }
+        acc += f;
+    }
+    ranges.push((start, map.grids.len() - 1));
+
+    let range_cells = |a: usize, b: usize| -> u64 {
+        (a..=b)
+            .flat_map(|l| {
+                (0..map.grids[l].blocks_per_copy)
+                    .filter(move |r| !pinned[l].contains(r))
+                    .map(move |r| cells(l, r))
+            })
+            .sum()
+    };
+    let pools: Vec<Pool> = ranges
+        .iter()
+        .enumerate()
+        .map(|(i, &(a, b))| {
+            let swap: usize = unpinned_foot[a..=b].iter().sum();
+            Pool {
+                first_layer: a,
+                last_layer: b,
+                resident_arrays: pinned_total + swap,
+                swap_arrays: if i == 0 { 0 } else { swap },
+                swap_cells: if i == 0 { 0 } else { range_cells(a, b) },
+            }
+        })
+        .collect();
+    let pinned_cells: u64 = pinned
+        .iter()
+        .enumerate()
+        .flat_map(|(l, rows)| rows.iter().map(move |&r| cells(l, r)))
+        .sum();
+    let (a0, b0) = ranges[0];
+    Ok(PoolSchedule {
+        physical_arrays,
+        pinned_arrays: pinned_total,
+        initial_cells: pinned_cells + range_cells(a0, b0),
+        pools,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::builtin::BLOCK_WISE;
+    use crate::config::ArrayCfg;
+    use crate::dnn::resnet18;
+    use crate::mapping::map_network;
+    use crate::stats::synth::{synth_activations, SynthCfg};
+    use crate::stats::trace_from_activations;
+
+    fn setup() -> (NetworkMap, NetworkProfile) {
+        let g = resnet18(32, 10);
+        let map = map_network(&g, ArrayCfg::paper(), false);
+        let acts = synth_activations(&g, &map, 1, 5, SynthCfg::default());
+        let trace = trace_from_activations(&g, &map, &acts);
+        let prof = NetworkProfile::from_trace(&map, &trace);
+        (map, prof)
+    }
+
+    #[test]
+    fn unit_ratio_restamps_the_blockwise_plan() {
+        let (map, prof) = setup();
+        let budget = map.min_arrays() * 2;
+        let pooled = POOLED.allocate(&map, &prof, budget).unwrap();
+        let pooled_ov = POOLED.allocate_oversub(&map, &prof, budget, 1.0).unwrap();
+        let mut base = BLOCK_WISE.allocate(&map, &prof, budget).unwrap();
+        base.algorithm = "pooled".into();
+        assert_eq!(pooled, base);
+        assert_eq!(pooled_ov, base);
+        assert!(pooled.pools.is_none());
+    }
+
+    #[test]
+    fn oversubscription_attaches_a_schedule() {
+        let (map, prof) = setup();
+        // quarter-size chip, 4x oversubscribed: logical = min_arrays
+        let physical = map.min_arrays().div_ceil(4);
+        let plan = POOLED.allocate_oversub(&map, &prof, physical, 4.0).unwrap();
+        plan.validate(&map, physical * 4).unwrap();
+        assert_eq!(plan.algorithm, "pooled");
+        let ps = plan.pools.as_ref().expect("oversubscribed plan has a schedule");
+        assert_eq!(ps.physical_arrays, physical);
+        assert!(ps.pools.len() > 1, "{} pools", ps.pools.len());
+        assert!(ps.reloads() >= 1);
+        assert!(ps.reload_cells() > 0);
+        // every pool fits the physical chip and covers the layers once
+        for p in &ps.pools {
+            assert!(p.resident_arrays <= physical);
+        }
+        // cells are conserved: initial + reloads program every placed copy
+        let total: u64 = map
+            .grids
+            .iter()
+            .enumerate()
+            .flat_map(|(l, g)| {
+                (0..g.blocks_per_copy).map(move |r| {
+                    g.weight_cells_in_block(r, &map.array) * plan.duplicates[l][r] as u64
+                })
+            })
+            .sum();
+        // pinned cells are programmed once; swapped pools reprogram the
+        // rest, with pool 0's unpinned cells in the initial load
+        assert!(ps.initial_cells + ps.reload_cells() >= total);
+        assert!(ps.initial_cells <= total);
+    }
+
+    #[test]
+    fn schedule_is_deterministic() {
+        let (map, prof) = setup();
+        let physical = map.min_arrays().div_ceil(3);
+        let a = POOLED.allocate_oversub(&map, &prof, physical, 3.0).unwrap();
+        let b = POOLED.allocate_oversub(&map, &prof, physical, 3.0).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn impossible_layers_are_rejected_with_guidance() {
+        let (map, prof) = setup();
+        // a chip smaller than the widest single layer cannot host any pool
+        let widest = map.grids.iter().map(|g| g.arrays_per_copy()).max().unwrap();
+        let physical = widest / 2;
+        let oversub = (map.min_arrays() * 2) as f64 / physical as f64;
+        let err = POOLED
+            .allocate_oversub(&map, &prof, physical, oversub)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("lower --oversub or raise --pes"), "{err}");
+    }
+
+    #[test]
+    fn non_pooled_strategies_refuse_oversubscription() {
+        let (map, prof) = setup();
+        let err = BLOCK_WISE
+            .allocate_oversub(&map, &prof, map.min_arrays(), 2.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--alloc pooled"), "{err}");
+        // at 1.0 the default implementation just allocates
+        let plan = BLOCK_WISE
+            .allocate_oversub(&map, &prof, map.min_arrays() * 2, 1.0)
+            .unwrap();
+        assert_eq!(plan.algorithm, "block-wise");
+    }
+}

@@ -37,6 +37,10 @@ pub struct EnergyCfg {
     /// Leakage power per *allocated* array (peripheral logic + SRAM
     /// slice), in picowatts. Unallocated arrays are power-gated.
     pub array_leak_pw: f64,
+    /// Programming one eNVM cell (one weight write), in picojoules.
+    /// Charged once per programmed cell at deployment, and again for
+    /// every cell rewritten by a weight-pool reload.
+    pub write_pj: f64,
 }
 
 impl Default for EnergyCfg {
@@ -52,6 +56,8 @@ impl Default for EnergyCfg {
             // ~1 µW per array for peripheral logic + local SRAM slice at
             // 32 nm (NeuroSim-scale); 5,472 arrays ⇒ ~5.5 mW chip leakage.
             array_leak_pw: 1_000_000.0,
+            // RRAM SET/RESET pulse (the rram-128 device constant).
+            write_pj: 10.0,
         }
     }
 }
@@ -74,6 +80,7 @@ impl EnergyCfg {
             sram_byte_pj: shared.sram_byte_pj,
             vector_acc_pj: shared.vector_acc_pj,
             array_leak_pw: p.device.leakage_pw(),
+            write_pj: p.device.write_energy_pj(),
         })
     }
 }
@@ -93,6 +100,14 @@ pub struct EnergyReport {
     pub vector_uj: f64,
     /// Leakage over the makespan (µJ).
     pub leakage_uj: f64,
+    /// One-time weight-programming energy (µJ): every cell the plan
+    /// deploys costs one device write. Paid at deployment, so it is
+    /// reported as its own line item and *not* amortized into the
+    /// per-inference figures.
+    pub program_uj: f64,
+    /// Weight-pool reload energy (µJ): cells rewritten by pool swaps
+    /// during the run. Zero unless the plan oversubscribes the chip.
+    pub reload_uj: f64,
     /// Images the estimate covers.
     pub images: usize,
 }
@@ -103,9 +118,10 @@ impl EnergyReport {
         self.adc_uj + self.rows_uj + self.noc_uj + self.sram_uj + self.vector_uj
     }
 
-    /// Total energy (µJ).
+    /// Total run energy (µJ): dynamic + leakage + pool reloads. Excludes
+    /// the one-time [`EnergyReport::program_uj`] deployment cost.
     pub fn total_uj(&self) -> f64 {
-        self.dynamic_uj() + self.leakage_uj
+        self.dynamic_uj() + self.leakage_uj + self.reload_uj
     }
 
     /// Microjoules per inference.
@@ -170,6 +186,26 @@ pub fn estimate(
     let seconds = result.makespan as f64 / chip.clock_hz;
     let leakage_pj = cfg.array_leak_pw * arrays_used * seconds;
 
+    // One-time programming: every deployed cell costs one device write.
+    // Pooled plans only program the initial residency up front; the rest
+    // arrives via reloads, which the simulator counts per rewritten cell.
+    let program_cells: u64 = match &plan.pools {
+        Some(ps) => ps.initial_cells,
+        None => map
+            .grids
+            .iter()
+            .enumerate()
+            .map(|(l, g)| {
+                (0..g.blocks_per_copy)
+                    .map(|r| {
+                        g.weight_cells_in_block(r, &map.array)
+                            * plan.duplicates[l][r] as u64
+                    })
+                    .sum::<u64>()
+            })
+            .sum(),
+    };
+
     EnergyReport {
         adc_uj: adc_samples * cfg.adc_sample_pj * 1e-6,
         rows_uj: row_events * cfg.row_drive_pj * 1e-6,
@@ -177,6 +213,8 @@ pub fn estimate(
         sram_uj: sram_bytes * cfg.sram_byte_pj * 1e-6,
         vector_uj: vector_accs * cfg.vector_acc_pj * 1e-6,
         leakage_uj: leakage_pj * 1e-6,
+        program_uj: program_cells as f64 * cfg.write_pj * 1e-6,
+        reload_uj: result.reload_cells as f64 * cfg.write_pj * 1e-6,
         images: result.images,
     }
 }
@@ -192,6 +230,8 @@ pub fn energy_table(
         "leakage µJ/inf",
         "leak %",
         "TOPS/W",
+        "program µJ",
+        "reload µJ/inf",
     ]);
     for (name, r, macs) in rows {
         let n = r.images.max(1) as f64;
@@ -202,6 +242,8 @@ pub fn energy_table(
             crate::util::table::fmt_f(r.leakage_uj / n, 2),
             crate::util::table::fmt_f(r.leakage_fraction() * 100.0, 1),
             crate::util::table::fmt_f(r.tops_per_watt(*macs), 2),
+            crate::util::table::fmt_f(r.program_uj, 2),
+            crate::util::table::fmt_f(r.reload_uj / n, 2),
         ]);
     }
     t
@@ -247,6 +289,19 @@ mod tests {
         assert!(e.leakage_uj > 0.0);
         assert!(e.uj_per_inference() > 0.0);
         assert!((0.0..=1.0).contains(&e.leakage_fraction()));
+    }
+
+    #[test]
+    fn programming_energy_is_itemized() {
+        // Every deployed cell costs one write; a fully-resident plan has
+        // no reloads, so reload energy stays zero while the one-time
+        // programming line item is substantial.
+        let (e, _) = run("block-wise");
+        assert!(e.program_uj > 0.0);
+        assert_eq!(e.reload_uj, 0.0);
+        // one-time cost is excluded from the per-inference figures
+        let total = e.dynamic_uj() + e.leakage_uj;
+        assert_eq!(e.total_uj(), total);
     }
 
     #[test]
@@ -320,5 +375,9 @@ mod tests {
         assert!(pcram.adc_sample_pj < rram.adc_sample_pj);
         assert!(sram.adc_sample_pj > rram.adc_sample_pj);
         assert!(sram.array_leak_pw > rram.array_leak_pw, "SRAM leaks");
+        // write energy comes straight from the device model
+        assert_eq!(rram.write_pj, d.write_pj);
+        assert!(pcram.write_pj > rram.write_pj, "PCM writes cost more");
+        assert!(sram.write_pj < rram.write_pj, "SRAM writes are cheap");
     }
 }

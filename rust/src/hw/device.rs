@@ -55,11 +55,18 @@ pub trait DeviceModel: Send + Sync {
     /// Energy to drive one word line for one read batch (picojoules).
     fn read_energy_pj(&self) -> f64;
 
-    /// Energy to program one cell (picojoules). Reported by `list-hw`;
-    /// inference-time simulation never writes.
+    /// Energy to program one cell (picojoules). Charged once at
+    /// deployment for every programmed cell (the energy report's
+    /// `program_uj` line item) and again for every cell the `pooled`
+    /// allocator rewrites when an oversubscribed chip swaps weight
+    /// pools mid-inference (`reload_uj`).
     fn write_energy_pj(&self) -> f64;
 
-    /// Cell programming latency (nanoseconds). Reported by `list-hw`.
+    /// Cell programming latency (nanoseconds). Drives the simulator's
+    /// reprogramming stalls under the `pooled` allocator
+    /// ([`crate::sim::SimCfg::with_write_latency`]); a pool swap
+    /// occupies its arrays for `write_latency_ns × cells` before they
+    /// can compute again.
     fn write_latency_ns(&self) -> f64;
 
     /// Leakage power per allocated array (picowatts), peripheral logic

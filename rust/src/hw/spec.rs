@@ -175,6 +175,13 @@ pub struct ChipSpec {
     pub router_latency: usize,
     /// Images in flight for pipelined simulation.
     pub pipeline_images: usize,
+    /// Logical/physical array capacity ratio (default 1.0). Above 1.0
+    /// the chip is declared *smaller* than the nets it runs: allocators
+    /// may plan for `floor(physical × oversub)` logical arrays, and the
+    /// `pooled` strategy time-multiplexes the physical arrays across
+    /// weight pools with explicit reprogramming. Must be finite and
+    /// positive; 1.0 keeps every historical artifact byte-identical.
+    pub oversub: f64,
 }
 
 impl Default for ChipSpec {
@@ -188,6 +195,7 @@ impl Default for ChipSpec {
             link_bytes_per_cycle: 32,
             router_latency: 1,
             pipeline_images: 8,
+            oversub: 1.0,
         }
     }
 }
@@ -203,7 +211,36 @@ impl ChipSpec {
         );
         anyhow::ensure!(self.link_bytes_per_cycle >= 1, "NoC links must move at least one byte");
         anyhow::ensure!(self.pipeline_images >= 1, "the pipeline needs at least one image slot");
+        anyhow::ensure!(
+            self.oversub.is_finite() && self.oversub > 0.0,
+            "oversubscription ratio must be finite and positive, got {}",
+            self.oversub
+        );
         Ok(())
+    }
+
+    /// Physical arrays a `pes`-PE chip holds.
+    pub fn physical_arrays(&self, pes: usize) -> usize {
+        self.arrays_per_pe * pes
+    }
+
+    /// Logical array capacity at this spec's oversubscription ratio:
+    /// what an allocator may plan for, `floor(physical × oversub)`.
+    pub fn logical_arrays(&self, pes: usize) -> usize {
+        (self.physical_arrays(pes) as f64 * self.oversub).floor() as usize
+    }
+
+    /// Does a net demanding `demand_arrays` minimum arrays fit the
+    /// logical capacity of a `pes`-PE chip?
+    pub fn fits(&self, demand_arrays: usize, pes: usize) -> bool {
+        demand_arrays <= self.logical_arrays(pes)
+    }
+
+    /// The oversubscription ratio a `demand_arrays`-array net implies on
+    /// a `pes`-PE chip (demand / physical capacity; ≤ 1.0 means the net
+    /// fits without pooling).
+    pub fn oversub_for(&self, demand_arrays: usize, pes: usize) -> f64 {
+        demand_arrays as f64 / self.physical_arrays(pes).max(1) as f64
     }
 
     /// Lower to a [`ChipCfg`] at `pes` PEs around an already-lowered
@@ -224,9 +261,11 @@ impl ChipSpec {
         })
     }
 
-    /// Deterministic JSON form.
+    /// Deterministic JSON form. The `oversub` key appears only when the
+    /// ratio is non-default, so builtin emissions (and the prefix-cache
+    /// keys hashed from them) are unchanged when the axis is off.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("arrays_per_pe", Json::num(self.arrays_per_pe)),
             ("clock_hz", Json::num(self.clock_hz)),
             ("feature_packet_bytes", Json::num(self.feature_packet_bytes)),
@@ -234,7 +273,11 @@ impl ChipSpec {
             ("link_bytes_per_cycle", Json::num(self.link_bytes_per_cycle)),
             ("router_latency", Json::num(self.router_latency)),
             ("pipeline_images", Json::num(self.pipeline_images)),
-        ])
+        ];
+        if self.oversub != 1.0 {
+            pairs.push(("oversub", Json::num(self.oversub)));
+        }
+        Json::obj(pairs)
     }
 
     /// Parse, filling absent fields with the paper defaults.
@@ -254,6 +297,7 @@ impl ChipSpec {
                 .unwrap_or(d.link_bytes_per_cycle),
             router_latency: j.get("router_latency").as_usize().unwrap_or(d.router_latency),
             pipeline_images: j.get("pipeline_images").as_usize().unwrap_or(d.pipeline_images),
+            oversub: j.get("oversub").as_f64().unwrap_or(d.oversub),
         })
     }
 }
@@ -318,6 +362,12 @@ mod tests {
         assert_eq!(ArraySpec::from_json(&s.to_json()).unwrap(), s);
         let c = ChipSpec { arrays_per_pe: 32, ..ChipSpec::default() };
         assert_eq!(ChipSpec::from_json(&c.to_json()).unwrap(), c);
+        // the oversubscription axis round-trips when non-default …
+        let c = ChipSpec { oversub: 2.5, ..ChipSpec::default() };
+        assert_eq!(ChipSpec::from_json(&c.to_json()).unwrap(), c);
+        // … and the default emission carries no oversub key at all, so
+        // historical profile JSON (and cache keys) are byte-stable
+        assert!(!ChipSpec::default().to_json().pretty().contains("oversub"));
     }
 
     #[test]
@@ -327,5 +377,30 @@ mod tests {
         assert!(ChipSpec { clock_hz: 0.0, ..ChipSpec::default() }.validate().is_err());
         let array = ArraySpec::default().lower(&RRAM).unwrap();
         assert!(ChipSpec::default().lower(0, array).is_err());
+    }
+
+    #[test]
+    fn oversubscription_rejects_zero_nan_and_negatives() {
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let err = ChipSpec { oversub: bad, ..ChipSpec::default() }
+                .validate()
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("oversubscription"), "{err}");
+        }
+        assert!(ChipSpec { oversub: 4.0, ..ChipSpec::default() }.validate().is_ok());
+        assert!(ChipSpec { oversub: 0.5, ..ChipSpec::default() }.validate().is_ok());
+    }
+
+    #[test]
+    fn capacity_queries_derive_from_the_ratio() {
+        let c = ChipSpec::default(); // 64 arrays/PE
+        assert_eq!(c.physical_arrays(86), 5504);
+        assert_eq!(c.logical_arrays(86), 5504);
+        assert!(c.fits(5472, 86) && !c.fits(5505, 86));
+        let quarter = ChipSpec { oversub: 4.0, ..ChipSpec::default() };
+        assert_eq!(quarter.logical_arrays(22), 22 * 64 * 4);
+        assert!(quarter.fits(5472, 22));
+        assert!((quarter.oversub_for(5472, 22) - 5472.0 / 1408.0).abs() < 1e-12);
     }
 }

@@ -184,6 +184,78 @@ fn set_engine(scenarios: &mut [pipeline::Scenario], args: &Args) -> cimfab::Resu
     Ok(())
 }
 
+/// Apply `--oversub` to a batch of scenarios (sweep/util), validating
+/// the ratio once up front (the [`ScenarioBuilder`] rule: finite and
+/// positive; 1.0 is the historical default).
+fn set_oversub(scenarios: &mut [pipeline::Scenario], args: &Args) -> cimfab::Result<()> {
+    let ratio = args.get_f64("oversub", 1.0).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(
+        ratio.is_finite() && ratio > 0.0,
+        "oversubscription ratio must be finite and positive, got {ratio}"
+    );
+    if ratio != 1.0 {
+        for sc in scenarios {
+            sc.oversub = ratio;
+        }
+    }
+    Ok(())
+}
+
+/// `cimfab util capacity [NET] --hw NAME`: how big is the net, does it
+/// fit the chip, and how many PEs does each oversubscription ratio need?
+fn capacity_report(args: &Args) -> cimfab::Result<()> {
+    let net = args
+        .positionals
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or_else(|| args.get_or("net", "resnet18"));
+    let res = args.get_usize("res", 64).map_err(anyhow::Error::msg)?;
+    let hw = cimfab::hw::ProfileRegistry::resolve(
+        args.get_or("hw", cimfab::hw::DEFAULT_PROFILE),
+    )?;
+    let graph = pipeline::build_graph(net, res)?;
+    let map = cimfab::mapping::map_network(&graph, hw.array_cfg()?, false);
+    let demand = map.min_arrays();
+    println!(
+        "capacity: {net} @{res} needs {} arrays ({} blocks, {} weight cells) on {}",
+        cimfab::util::table::fmt_int(demand as u64),
+        map.total_blocks(),
+        cimfab::util::table::fmt_int(map.total_weight_cells()),
+        hw.name
+    );
+    let mut t = Table::new(["oversub", "PEs needed", "physical arrays", "logical arrays"]);
+    for ratio in [1.0f64, 2.0, 4.0] {
+        let spec = cimfab::hw::ChipSpec { oversub: ratio, ..hw.chip.clone() };
+        let mut pes = (demand as f64 / (spec.arrays_per_pe as f64 * ratio)).ceil() as usize;
+        pes = pes.max(1);
+        while !spec.fits(demand, pes) {
+            pes += 1;
+        }
+        t.row([
+            format!("{ratio}x"),
+            pes.to_string(),
+            cimfab::util::table::fmt_int(spec.physical_arrays(pes) as u64),
+            cimfab::util::table::fmt_int(spec.logical_arrays(pes) as u64),
+        ]);
+    }
+    report::print_table(&t)?;
+    if args.get("pes").is_some() {
+        let pes = args.get_usize("pes", 1).map_err(anyhow::Error::msg)?;
+        let implied = hw.chip.oversub_for(demand, pes);
+        println!(
+            "--pes {pes}: {} physical arrays, implied oversubscription {:.2}x — {}",
+            cimfab::util::table::fmt_int(hw.chip.physical_arrays(pes) as u64),
+            implied,
+            if implied <= 1.0 {
+                "fits without pooling".to_string()
+            } else {
+                format!("needs --alloc pooled --oversub {:.2} (or more PEs)", implied)
+            }
+        );
+    }
+    Ok(())
+}
+
 fn run(args: &Args) -> cimfab::Result<()> {
     let out = run_cmd(args);
     // after a successful run, dump whatever the stages recorded — stage
@@ -282,6 +354,10 @@ fn run_cmd(args: &Args) -> cimfab::Result<()> {
             if let Some(engine) = args.get("engine") {
                 builder = builder.engine(engine);
             }
+            if args.get("oversub").is_some() {
+                builder =
+                    builder.oversub(args.get_f64("oversub", 1.0).map_err(anyhow::Error::msg)?);
+            }
             let sc = builder.build()?;
             let out = pipeline::run_scenario(&prep.view(), &sc, dumper.as_ref())?;
             if args.has_flag("verbose") {
@@ -298,6 +374,14 @@ fn run_cmd(args: &Args) -> cimfab::Result<()> {
                 out.result.makespan,
                 out.result.noc.peak_link_utilization
             );
+            if out.result.reloads > 0 {
+                println!(
+                    "weight pools: {} reloads, {} cells rewritten, {} stall cycles",
+                    out.result.reloads,
+                    cimfab::util::table::fmt_int(out.result.reload_cells),
+                    cimfab::util::table::fmt_int(out.result.reload_stall_cycles)
+                );
+            }
             Ok(())
         }
         Some("sweep") => {
@@ -322,6 +406,7 @@ fn run_cmd(args: &Args) -> cimfab::Result<()> {
                 opts.sim_images,
             );
             set_engine(&mut scenarios, args)?;
+            set_oversub(&mut scenarios, args)?;
 
             let t0 = Instant::now();
             let outcomes = run_scenarios_prepared(&prep, &scenarios, &cfg)?;
@@ -341,6 +426,17 @@ fn run_cmd(args: &Args) -> cimfab::Result<()> {
                 cfg.threads,
                 elapsed
             );
+            if outcomes.iter().any(|o| o.result.reloads > 0) {
+                let rows: Vec<(String, cimfab::sim::SimResult)> = outcomes
+                    .iter()
+                    .filter(|o| o.result.reloads > 0)
+                    .map(|o| {
+                        (format!("{}@{}", o.scenario.alloc, o.scenario.pes), o.result.clone())
+                    })
+                    .collect();
+                println!("== weight-pool reloads ==");
+                report::print_table(&report::reload_summary(&rows))?;
+            }
 
             // Pin the parallel schedule against a serial reference run and
             // report the measured wall-clock speedup. Results are compared
@@ -376,6 +472,9 @@ fn run_cmd(args: &Args) -> cimfab::Result<()> {
             Ok(())
         }
         Some("util") => {
+            if args.positionals.first().map(String::as_str) == Some("capacity") {
+                return capacity_report(args);
+            }
             let opts = driver_opts(args).map_err(anyhow::Error::msg)?;
             let cfg = sweep_cfg(args).map_err(anyhow::Error::msg)?;
             let dumper = cfg.dumper()?;
@@ -393,6 +492,7 @@ fn run_cmd(args: &Args) -> cimfab::Result<()> {
             let mut scenarios =
                 pipeline::scenarios_for(&opts.prefix_spec(), &[pes], &algs, opts.sim_images);
             set_engine(&mut scenarios, args)?;
+            set_oversub(&mut scenarios, args)?;
             let outcomes = run_scenarios_prepared(&prep, &scenarios, &cfg)?;
             let results: Vec<(String, cimfab::sim::SimResult)> = outcomes
                 .iter()
@@ -409,6 +509,10 @@ fn run_cmd(args: &Args) -> cimfab::Result<()> {
             report::print_table(&report::fig9_table(&prep.map, &with_zs))?;
             println!("== headline speedups ==");
             report::print_table(&report::speedup_summary(&results))?;
+            if results.iter().any(|(_, r)| r.reloads > 0) {
+                println!("== weight-pool reloads ==");
+                report::print_table(&report::reload_summary(&results))?;
+            }
             Ok(())
         }
         Some("list-strategies") => {
@@ -461,6 +565,7 @@ fn run_cmd(args: &Args) -> cimfab::Result<()> {
                 "ADC bits",
                 "rows/read",
                 "cycles (best..worst)",
+                "capacity/PE",
                 "description",
             ]);
             // sort by name so the listing (and CI smoke diffs) are stable
@@ -477,6 +582,12 @@ fn run_cmd(args: &Args) -> cimfab::Result<()> {
                     cfg.adc_bits.to_string(),
                     cfg.adc_rows().to_string(),
                     format!("{best}..{worst}"),
+                    // weight capacity one PE holds: arrays × rows × cols
+                    // at the device's bits per cell
+                    format!(
+                        "{}x{}x{}x{}b",
+                        p.chip.arrays_per_pe, cfg.rows, cfg.cols, cfg.cell_bits
+                    ),
                     p.description.clone(),
                 ]);
             }
@@ -684,6 +795,11 @@ Common options:
                            `cimfab list-strategies`; --alg is an alias);
                            sweep/util/energy also take NAME,NAME,... or
                            paper|all
+  --oversub R              logical/physical array ratio (default 1.0;
+                           simulate/sweep/util). Above 1.0 the chip is
+                           undersized R× and `--alloc pooled` time-
+                           multiplexes weight pools onto it with explicit
+                           reprogramming; other strategies reject R > 1
   --dataflow NAME          dataflow model override (simulate only)
   --engine event|stepped   simulation engine (default event; stepped is
                            the bit-identical cycle-walking reference —
@@ -705,6 +821,11 @@ Common options:
   --telemetry-dump         print telemetry counters/gauges/stage timers
                            after a successful run
   --seed N --csv --verbose --artifacts DIR
+
+util subcommands:
+  util capacity [NET]      weight-capacity check: arrays the net demands
+                           vs the chip (--hw) at 1x/2x/4x oversub, plus
+                           the implied ratio for an explicit --pes
 
 serve options (see docs/architecture.md \"Serving layer\" for the wire
 protocol — JSON lines: submit/cancel/stats/shutdown):

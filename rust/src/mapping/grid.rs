@@ -68,6 +68,19 @@ impl LayerGrid {
             (self.rows_in_block(row, cfg) * self.matrix_cols) as u64
         }
     }
+
+    /// Nonzero weight cells programmed into block `row` (one copy).
+    /// Block-diagonal blocks hold one weight per hosted row; dense blocks
+    /// hold all `matrix_cols` weight columns. Drives programming/reload
+    /// energy and reprogramming latency.
+    pub fn weight_cells_in_block(&self, row: usize, cfg: &ArrayCfg) -> u64 {
+        let weights = if self.diagonal {
+            self.rows_in_block(row, cfg) as u64
+        } else {
+            (self.rows_in_block(row, cfg) * self.matrix_cols) as u64
+        };
+        weights * cfg.cells_per_weight() as u64
+    }
 }
 
 /// A whole network mapped to array grids.
@@ -105,6 +118,19 @@ impl NetworkMap {
             }
         }
         out
+    }
+
+    /// Weight cells programmed for one copy of every block (the net's
+    /// storage demand in cells; duplicates multiply per-block counts).
+    pub fn total_weight_cells(&self) -> u64 {
+        self.grids
+            .iter()
+            .map(|g| {
+                (0..g.blocks_per_copy)
+                    .map(|r| g.weight_cells_in_block(r, &self.array))
+                    .sum::<u64>()
+            })
+            .sum()
     }
 
     /// Global dense index of a block (for counter arrays).
@@ -331,6 +357,27 @@ mod tests {
             map.grids.iter().filter(|g| g.diagonal).map(|g| g.arrays_per_copy()).sum();
         let pw13 = map.grids.iter().find(|g| g.name == "pw13").unwrap();
         assert!(dw_arrays < pw13.arrays_per_copy(), "{dw_arrays} vs {}", pw13.arrays_per_copy());
+    }
+
+    #[test]
+    fn weight_cells_follow_the_geometry() {
+        use crate::dnn::mobilenet;
+        let map = map_network(&resnet18(224, 1000), ArrayCfg::paper(), false);
+        // conv1: 147×64 weights × 8 cells, split 128+19 rows per block
+        let g = &map.grids[0];
+        assert_eq!(g.weight_cells_in_block(0, &map.array), 128 * 64 * 8);
+        assert_eq!(g.weight_cells_in_block(1, &map.array), 19 * 64 * 8);
+        // total = Σ rows×cols×8 over the conv stack, independent of tiling
+        let want: u64 = map
+            .grids
+            .iter()
+            .map(|g| (g.matrix_rows * g.matrix_cols * 8) as u64)
+            .sum();
+        assert_eq!(map.total_weight_cells(), want);
+        // diagonal blocks carry one weight per hosted row
+        let mn = map_network(&mobilenet(32, 10), ArrayCfg::paper(), false);
+        let dw = mn.grids.iter().find(|g| g.name == "dw9").unwrap();
+        assert_eq!(dw.weight_cells_in_block(0, &mn.array), 126 * 8);
     }
 
     #[test]

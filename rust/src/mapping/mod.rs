@@ -12,5 +12,5 @@ pub mod plan;
 pub mod placement;
 
 pub use grid::{map_network, BlockId, LayerGrid, NetworkMap};
-pub use plan::AllocationPlan;
+pub use plan::{AllocationPlan, Pool, PoolSchedule};
 pub use placement::{place, Placement};

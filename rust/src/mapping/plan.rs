@@ -14,6 +14,60 @@ pub struct AllocationPlan {
     pub algorithm: String,
     /// `duplicates[layer][row]` ≥ 1.
     pub duplicates: Vec<Vec<usize>>,
+    /// Reprogramming schedule when the plan oversubscribes the physical
+    /// chip (the `pooled` strategy). `None` — the historical case — means
+    /// every block is programmed once and stays resident.
+    pub pools: Option<PoolSchedule>,
+}
+
+/// One resident set in a time-multiplexed (oversubscribed) plan: a
+/// contiguous layer range whose unpinned blocks occupy the shared array
+/// slots while the pool is active.
+///
+/// All fields are integers so the schedule participates in the plan's
+/// `Eq`/byte-stable artifact guarantees.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Pool {
+    /// First layer of the pool (inclusive).
+    pub first_layer: usize,
+    /// Last layer of the pool (inclusive).
+    pub last_layer: usize,
+    /// Arrays resident while this pool is active (pinned + this pool's
+    /// unpinned blocks).
+    pub resident_arrays: usize,
+    /// Arrays that must be reprogrammed when this pool is swapped in
+    /// (zero for the first pool — initial programming covers it).
+    pub swap_arrays: usize,
+    /// Weight cells written by that swap (drives reload energy/latency).
+    pub swap_cells: u64,
+}
+
+/// The explicit reprogramming schedule a `pooled` plan carries: how the
+/// physical chip is partitioned into resident sets over time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolSchedule {
+    /// Physical array capacity the pools were sized to.
+    pub physical_arrays: usize,
+    /// Arrays pinned resident across every pool (the hottest blocks, by
+    /// profiled cycles — they are never reprogrammed).
+    pub pinned_arrays: usize,
+    /// Weight cells programmed before the first inference (pinned blocks
+    /// plus the first pool's unpinned blocks).
+    pub initial_cells: u64,
+    /// The resident sets, in execution order, covering every layer once.
+    pub pools: Vec<Pool>,
+}
+
+impl PoolSchedule {
+    /// Total cells written by pool swaps (excludes initial programming).
+    pub fn reload_cells(&self) -> u64 {
+        self.pools.iter().map(|p| p.swap_cells).sum()
+    }
+
+    /// Number of swap events (pools entered via reprogramming).
+    pub fn reloads(&self) -> u64 {
+        self.pools.iter().filter(|p| p.swap_arrays > 0).count() as u64
+    }
 }
 
 impl AllocationPlan {
@@ -22,6 +76,7 @@ impl AllocationPlan {
         AllocationPlan {
             algorithm: "minimal".into(),
             duplicates: map.grids.iter().map(|g| vec![1; g.blocks_per_copy]).collect(),
+            pools: None,
         }
     }
 
@@ -71,6 +126,29 @@ impl AllocationPlan {
         let used = self.arrays_used(map);
         if used > budget_arrays {
             return Err(format!("plan uses {used} arrays > budget {budget_arrays}"));
+        }
+        if let Some(ps) = &self.pools {
+            let mut next = 0usize;
+            for p in &ps.pools {
+                if p.first_layer != next || p.last_layer < p.first_layer {
+                    return Err(format!(
+                        "pool schedule is not a contiguous layer partition at layer {next}"
+                    ));
+                }
+                if p.resident_arrays > ps.physical_arrays {
+                    return Err(format!(
+                        "pool [{}..={}] holds {} arrays > physical capacity {}",
+                        p.first_layer, p.last_layer, p.resident_arrays, ps.physical_arrays
+                    ));
+                }
+                next = p.last_layer + 1;
+            }
+            if next != map.grids.len() {
+                return Err(format!(
+                    "pool schedule covers {next} layers, map has {}",
+                    map.grids.len()
+                ));
+            }
         }
         Ok(())
     }
@@ -132,6 +210,40 @@ mod tests {
         let mut plan = AllocationPlan::minimal(&map);
         plan.duplicates[3][0] = 0;
         assert!(plan.validate(&map, 100_000).is_err());
+    }
+
+    #[test]
+    fn pool_schedule_must_partition_the_layers() {
+        let map = rn18_map();
+        let mut plan = AllocationPlan::minimal(&map);
+        let nl = map.grids.len();
+        plan.pools = Some(PoolSchedule {
+            physical_arrays: map.min_arrays(),
+            pinned_arrays: 0,
+            initial_cells: 1,
+            pools: vec![
+                Pool {
+                    first_layer: 0,
+                    last_layer: nl / 2,
+                    resident_arrays: 1,
+                    swap_arrays: 0,
+                    swap_cells: 0,
+                },
+                Pool {
+                    first_layer: nl / 2 + 1,
+                    last_layer: nl - 1,
+                    resident_arrays: 1,
+                    swap_arrays: 1,
+                    swap_cells: 16384,
+                },
+            ],
+        });
+        plan.validate(&map, map.min_arrays()).unwrap();
+        assert_eq!(plan.pools.as_ref().unwrap().reloads(), 1);
+        assert_eq!(plan.pools.as_ref().unwrap().reload_cells(), 16384);
+        // a gap in the layer coverage is rejected
+        plan.pools.as_mut().unwrap().pools[1].first_layer = nl / 2 + 2;
+        assert!(plan.validate(&map, map.min_arrays()).is_err());
     }
 
     #[test]

@@ -146,16 +146,41 @@ pub fn profile_json(p: &NetworkProfile) -> Json {
     ])
 }
 
-/// Stage `Allocate`: the duplicate counts the algorithm granted.
+/// Stage `Allocate`: the duplicate counts the algorithm granted. The
+/// reprogramming schedule (`pools`) appears only when the plan carries
+/// one, so non-pooled plan artifacts keep their historical bytes.
 pub fn plan_json(plan: &AllocationPlan, map: &NetworkMap) -> Json {
-    Json::obj(vec![
+    let mut pairs = vec![
         ("algorithm", Json::str(&plan.algorithm)),
         ("arrays_used", Json::num(plan.arrays_used(map))),
         (
             "duplicates",
             Json::arr(plan.duplicates.iter().map(|d| usize_arr(d))),
         ),
-    ])
+    ];
+    if let Some(ps) = &plan.pools {
+        pairs.push((
+            "pools",
+            Json::obj(vec![
+                ("physical_arrays", Json::num(ps.physical_arrays)),
+                ("pinned_arrays", Json::num(ps.pinned_arrays)),
+                ("initial_cells", Json::num(ps.initial_cells)),
+                (
+                    "pools",
+                    Json::arr(ps.pools.iter().map(|p| {
+                        Json::obj(vec![
+                            ("first_layer", Json::num(p.first_layer)),
+                            ("last_layer", Json::num(p.last_layer)),
+                            ("resident_arrays", Json::num(p.resident_arrays)),
+                            ("swap_arrays", Json::num(p.swap_arrays)),
+                            ("swap_cells", Json::num(p.swap_cells)),
+                        ])
+                    })),
+                ),
+            ]),
+        ));
+    }
+    Json::obj(pairs)
 }
 
 /// Stage `Place`: instance → PE assignment.
@@ -171,9 +196,11 @@ pub fn placement_json(p: &Placement) -> Json {
     ])
 }
 
-/// Stage `Simulate`: the full simulation result.
+/// Stage `Simulate`: the full simulation result. Reload keys appear
+/// only when the run actually swapped pools (historical artifacts are
+/// byte-identical when the oversubscription axis is off).
 pub fn sim_result_json(r: &SimResult) -> Json {
-    Json::obj(vec![
+    let mut pairs = vec![
         ("makespan", Json::num(r.makespan)),
         ("images", Json::num(r.images)),
         ("throughput_ips", Json::num(r.throughput_ips)),
@@ -190,7 +217,13 @@ pub fn sim_result_json(r: &SimResult) -> Json {
                 ("peak_link_utilization", Json::num(r.noc.peak_link_utilization)),
             ]),
         ),
-    ])
+    ];
+    if r.reloads > 0 {
+        pairs.push(("reloads", Json::num(r.reloads)));
+        pairs.push(("reload_cells", Json::num(r.reload_cells)));
+        pairs.push(("reload_stall_cycles", Json::num(r.reload_stall_cycles)));
+    }
+    Json::obj(pairs)
 }
 
 #[cfg(test)]

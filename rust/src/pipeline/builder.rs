@@ -50,6 +50,7 @@ pub struct ScenarioBuilder {
     engine: String,
     pes: Option<usize>,
     sim_images: usize,
+    oversub: f64,
     cache_dir: Option<String>,
 }
 
@@ -68,6 +69,7 @@ impl Default for ScenarioBuilder {
             engine: crate::sim::engine::DEFAULT_ENGINE.into(),
             pes: None,
             sim_images: 8,
+            oversub: 1.0,
             cache_dir: None,
         }
     }
@@ -170,6 +172,15 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Oversubscription ratio (`--oversub R`): declare the chip's
+    /// logical array capacity as `R ×` its physical arrays. `1.0` (the
+    /// default) is the historical fully-resident regime; above it the
+    /// allocation strategy must support weight pools (`pooled`).
+    pub fn oversub(mut self, ratio: f64) -> Self {
+        self.oversub = ratio;
+        self
+    }
+
     /// Cache prepared prefixes content-addressed under this directory
     /// (`--cache-dir`); [`Self::prepare`] then reuses entries across
     /// runs. Off by default.
@@ -262,6 +273,11 @@ impl ScenarioBuilder {
             self.sim_images
         );
         let engine = crate::sim::engine::lookup(&self.engine)?;
+        anyhow::ensure!(
+            self.oversub.is_finite() && self.oversub > 0.0,
+            "oversubscription ratio must be finite and positive, got {}",
+            self.oversub
+        );
         Ok(Scenario {
             prefix,
             alloc: allocator.name().to_string(),
@@ -269,6 +285,7 @@ impl ScenarioBuilder {
             engine: engine.name().to_string(),
             pes,
             sim_images: self.sim_images,
+            oversub: self.oversub,
         })
     }
 }
@@ -336,6 +353,19 @@ mod tests {
         assert_eq!(sc.id(), "block-wise_pes172_img8_stepped");
         let err = valid().engine("evnt").build().unwrap_err().to_string();
         assert!(err.contains("did you mean 'event'?"), "{err}");
+    }
+
+    #[test]
+    fn oversubscription_validates_and_defaults_off() {
+        let sc = valid().build().unwrap();
+        assert_eq!(sc.oversub, 1.0);
+        let sc = valid().alloc("pooled").oversub(4.0).build().unwrap();
+        assert_eq!(sc.oversub, 4.0);
+        assert_eq!(sc.id(), "pooled_pes172_img8_ov4");
+        for bad in [0.0, -2.0, f64::NAN, f64::INFINITY] {
+            let err = valid().oversub(bad).build().unwrap_err().to_string();
+            assert!(err.contains("oversubscription"), "{err}");
+        }
     }
 
     #[test]

@@ -124,8 +124,10 @@ pub struct ScenarioOutcome {
 
 impl ScenarioOutcome {
     /// Stage `Report` artifact: the scenario plus its headline numbers.
+    /// Reload keys appear only when the run actually swapped pools, so
+    /// historical reports are byte-identical.
     pub fn report_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("scenario", self.scenario.to_json()),
             ("throughput_ips", Json::num(self.result.throughput_ips)),
             ("chip_util", Json::num(self.result.chip_util)),
@@ -134,7 +136,13 @@ impl ScenarioOutcome {
                 "peak_link_utilization",
                 Json::num(self.result.noc.peak_link_utilization),
             ),
-        ])
+        ];
+        if self.result.reloads > 0 {
+            pairs.push(("reloads", Json::num(self.result.reloads)));
+            pairs.push(("reload_cells", Json::num(self.result.reload_cells)));
+            pairs.push(("reload_stall_cycles", Json::num(self.result.reload_stall_cycles)));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -402,10 +410,18 @@ pub fn run_scenario(
     let flow = crate::strategy::StrategyRegistry::lookup_dataflow(&sc.dataflow)?;
     let engine = crate::sim::engine::lookup(&sc.engine)?;
 
+    // Effective oversubscription: the scenario axis (`--oversub`) wins;
+    // otherwise an undersized hardware profile's declared ratio applies.
+    let oversub = if sc.oversub != 1.0 { sc.oversub } else { prep.hw.chip.oversub };
+
     // Allocate
-    let plan = reg
-        .timer("stage.allocate")
-        .time(|| allocator.allocate(prep.map, prep.profile, chip.total_arrays()))?;
+    let plan = reg.timer("stage.allocate").time(|| {
+        if oversub == 1.0 {
+            allocator.allocate(prep.map, prep.profile, chip.total_arrays())
+        } else {
+            allocator.allocate_oversub(prep.map, prep.profile, chip.total_arrays(), oversub)
+        }
+    })?;
     anyhow::ensure!(
         !flow.requires_uniform_plan() || plan.is_layerwise(),
         "dataflow '{}' requires layer-uniform plans, but '{}' produced a non-uniform one",
@@ -416,16 +432,25 @@ pub fn run_scenario(
         d.dump(&sub, Stage::Allocate, &artifact::plan_json(&plan, prep.map))?;
     }
 
-    // Place
+    // Place. Oversubscribed plans lay out against the *logical* chip
+    // (each PE time-multiplexes up to `⌈arrays_per_pe × R⌉` array
+    // images); the pool schedule in the plan bounds what is physically
+    // resident at any instant.
+    let mut logical = chip.clone();
+    if oversub > 1.0 {
+        logical.arrays_per_pe = (chip.arrays_per_pe as f64 * oversub).ceil() as usize;
+    }
     let placement =
-        reg.timer("stage.place").time(|| crate::mapping::place(prep.map, &plan, &chip))?;
+        reg.timer("stage.place").time(|| crate::mapping::place(prep.map, &plan, &logical))?;
     if let Some(d) = dump {
         d.dump(&sub, Stage::Place, &artifact::placement_json(&placement))?;
     }
 
     // Simulate
-    let cfg =
-        crate::sim::SimCfg::for_strategy(allocator, flow, sc.sim_images).with_engine(engine);
+    let cfg = crate::sim::SimCfg::for_strategy(allocator, flow, sc.sim_images)
+        .with_engine(engine)
+        .with_write_latency(prep.hw.device.write_latency_ns());
+    let chip = logical;
     let result = reg
         .timer("stage.simulate")
         .time(|| crate::sim::simulate(&chip, prep.map, &plan, &placement, prep.trace, cfg));

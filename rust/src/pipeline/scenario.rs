@@ -147,6 +147,12 @@ pub struct Scenario {
     pub pes: usize,
     /// Images pushed through the pipelined simulation.
     pub sim_images: usize,
+    /// Oversubscription ratio: logical array capacity over physical
+    /// (`--oversub R`). `1.0` — the historical case — leaves ids,
+    /// artifacts, and budgets untouched; above it the chip is declared
+    /// smaller than the plan and the allocator must emit a reprogramming
+    /// schedule (the `pooled` strategy).
+    pub oversub: f64,
 }
 
 impl Scenario {
@@ -168,19 +174,28 @@ impl Scenario {
             id.push('_');
             id.push_str(&self.engine);
         }
+        if self.oversub != 1.0 {
+            id.push_str(&format!("_ov{}", self.oversub));
+        }
         id
     }
 
     /// Deterministic JSON form (part of every scenario-stage artifact).
+    /// `oversub` appears only when the axis is on, so historical
+    /// artifacts are byte-identical.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("prefix", self.prefix.to_json()),
             ("alloc", Json::str(&self.alloc)),
             ("dataflow", Json::str(&self.dataflow)),
             ("engine", Json::str(&self.engine)),
             ("pes", Json::num(self.pes)),
             ("sim_images", Json::num(self.sim_images)),
-        ])
+        ];
+        if self.oversub != 1.0 {
+            pairs.push(("oversub", Json::num(self.oversub)));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -221,6 +236,7 @@ pub fn scenarios_for(
                 engine: crate::sim::engine::DEFAULT_ENGINE.to_string(),
                 pes,
                 sim_images,
+                oversub: 1.0,
             });
         }
     }
@@ -260,6 +276,7 @@ mod tests {
             engine: crate::sim::engine::DEFAULT_ENGINE.into(),
             pes: 172,
             sim_images: 8,
+            oversub: 1.0,
         }
     }
 
@@ -286,6 +303,18 @@ mod tests {
         sc.engine = "stepped".into();
         assert_eq!(sc.id(), "block-wise_pes172_img8_stepped");
         assert_eq!(sc.to_json().get("engine").as_str(), Some("stepped"));
+    }
+
+    #[test]
+    fn oversubscription_shows_up_in_the_id_only_when_on() {
+        let mut sc = scenario("pooled", "block-wise");
+        assert_eq!(sc.id(), "pooled_pes172_img8"); // 1.0 keeps historical form
+        assert!(sc.to_json().pretty().find("oversub").is_none());
+        sc.oversub = 4.0;
+        assert_eq!(sc.id(), "pooled_pes172_img8_ov4");
+        sc.oversub = 2.5;
+        assert_eq!(sc.id(), "pooled_pes172_img8_ov2.5");
+        assert_eq!(sc.to_json().get("oversub").as_f64(), Some(2.5));
     }
 
     #[test]

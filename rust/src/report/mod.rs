@@ -132,6 +132,24 @@ pub fn telemetry_table(snap: &crate::util::json::Json) -> Table {
     t
 }
 
+/// Reload/pool summary for oversubscribed runs: swap counts, cells
+/// written, and visible stall cycles per scenario. Only rendered when at
+/// least one result actually reloaded (callers skip it otherwise, so
+/// historical report output is unchanged when the axis is off).
+pub fn reload_summary(results: &[(String, SimResult)]) -> Table {
+    let mut t = Table::new(["algorithm", "reloads", "cells written", "stall cycles", "stall %"]);
+    for (alloc, r) in results {
+        t.row([
+            alloc.clone(),
+            r.reloads.to_string(),
+            crate::util::table::fmt_int(r.reload_cells),
+            crate::util::table::fmt_int(r.reload_stall_cycles),
+            fmt_f(r.reload_stall_cycles as f64 / r.makespan.max(1) as f64 * 100.0, 2),
+        ]);
+    }
+    t
+}
+
 /// Throughput speedup summary (the paper's headline numbers), relative
 /// to the three reference strategies when present.
 pub fn speedup_summary(results: &[(String, SimResult)]) -> Table {
@@ -175,6 +193,9 @@ mod tests {
                 mean_link_utilization: 0.01,
                 peak_link_utilization: 0.05,
             },
+            reloads: 0,
+            reload_cells: 0,
+            reload_stall_cycles: 0,
         }
     }
 
@@ -225,6 +246,19 @@ mod tests {
         assert!(rendered.contains("-1"), "{rendered}");
         assert!(rendered.contains("stage.simulate"), "{rendered}");
         assert!(rendered.contains("1.750"), "{rendered}");
+    }
+
+    #[test]
+    fn reload_summary_itemizes_swaps() {
+        let mut r = dummy_result(42.0);
+        r.reloads = 3;
+        r.reload_cells = 2_000_000;
+        r.reload_stall_cycles = 250;
+        let rendered = reload_summary(&[("pooled".to_string(), r)]).render();
+        assert!(rendered.contains("pooled"), "{rendered}");
+        assert!(rendered.contains('3'), "{rendered}");
+        assert!(rendered.contains("2,000,000"), "{rendered}");
+        assert!(rendered.contains("25.00"), "{rendered}");
     }
 
     #[test]

@@ -106,11 +106,20 @@ pub struct ScenarioReq {
     pub pes: usize,
     /// Simulated images; default 8.
     pub images: usize,
+    /// Logical/physical oversubscription ratio; default 1.0 (off).
+    pub oversub: f64,
 }
 
 impl Default for ScenarioReq {
     fn default() -> Self {
-        ScenarioReq { alloc: "block-wise".into(), dataflow: None, engine: None, pes: 0, images: 8 }
+        ScenarioReq {
+            alloc: "block-wise".into(),
+            dataflow: None,
+            engine: None,
+            pes: 0,
+            images: 8,
+            oversub: 1.0,
+        }
     }
 }
 
@@ -130,7 +139,12 @@ impl JobSpec {
         let prefix = base.prefix()?;
         let mut scenarios = Vec::with_capacity(self.scenarios.len());
         for (i, req) in self.scenarios.iter().enumerate() {
-            let mut b = base.clone().alloc(&req.alloc).pes(req.pes).sim_images(req.images);
+            let mut b = base
+                .clone()
+                .alloc(&req.alloc)
+                .pes(req.pes)
+                .sim_images(req.images)
+                .oversub(req.oversub);
             if let Some(df) = &req.dataflow {
                 b = b.dataflow(df);
             }
@@ -182,6 +196,13 @@ fn expect_i64(r: &mut IoJsonReader, field: &str) -> Result<i64, ServerError> {
     }
 }
 
+fn expect_f64(r: &mut IoJsonReader, field: &str) -> Result<f64, ServerError> {
+    match r.next_event()? {
+        Some(Event::Num(n)) => Ok(n.as_f64()),
+        _ => Err(protocol(format!("field '{field}' must be a number"))),
+    }
+}
+
 fn parse_scenarios(r: &mut IoJsonReader) -> Result<Vec<ScenarioReq>, ServerError> {
     match r.next_event()? {
         Some(Event::BeginArray) => {}
@@ -215,6 +236,7 @@ fn parse_scenario_body(r: &mut IoJsonReader) -> Result<ScenarioReq, ServerError>
                 saw_pes = true;
             }
             "images" => sc.images = expect_usize(r, "images")?,
+            "oversub" => sc.oversub = expect_f64(r, "oversub")?,
             other => return Err(protocol(format!("unknown scenario field '{other}'"))),
         }
     }
@@ -445,6 +467,29 @@ mod tests {
         assert_eq!(prefix.hw_profile, "rram-128", "alias canonicalized by the builder");
         assert_eq!(scenarios.len(), 2);
         assert_eq!(scenarios[0].alloc, "hybrid");
+    }
+
+    #[test]
+    fn oversub_rides_the_scenario_and_validates() {
+        let Request::Submit(spec) = parse_request(
+            br#"{"op":"submit","net":"resnet18","res":32,
+                "scenarios":[{"alloc":"pooled","pes":22,"oversub":4}]}"#,
+        )
+        .unwrap() else {
+            panic!("expected submit")
+        };
+        assert_eq!(spec.scenarios[0].oversub, 4.0);
+        let (_, scenarios) = spec.build().unwrap();
+        assert!(scenarios[0].id().ends_with("_ov4"), "{}", scenarios[0].id());
+        // the builder rejects nonsense ratios
+        let Request::Submit(bad) = parse_request(
+            br#"{"op":"submit","net":"resnet18","scenarios":[{"pes":22,"oversub":0}]}"#,
+        )
+        .unwrap() else {
+            panic!("expected submit")
+        };
+        let err = format!("{:#}", bad.build().unwrap_err());
+        assert!(err.contains("oversubscription"), "{err}");
     }
 
     #[test]

@@ -143,7 +143,7 @@ mod tests {
 
     fn stage_time(dataflow: &'static dyn DataflowModel, dups: Vec<usize>) -> (u64, Vec<u64>) {
         let (_, map, trace, chip) = setup();
-        let plan = AllocationPlan { algorithm: "test".into(), duplicates: vec![dups] };
+        let plan = AllocationPlan { algorithm: "test".into(), duplicates: vec![dups], pools: None };
         let placement = place(&map, &plan, &chip).unwrap();
         let mut mesh = Mesh::new(&chip);
         let n: usize = plan.duplicates[0].iter().sum();
@@ -154,6 +154,7 @@ mod tests {
             engine: &crate::sim::engine::EVENT,
             images: 1,
             warmup: 0,
+            write_latency_ns: 100.0,
         };
         let t = simulate_stage(
             &chip, &map, &plan, &placement, &mut mesh, &trace.images[0].layers[0], 0, cfg,
@@ -206,7 +207,7 @@ mod tests {
     #[test]
     fn baseline_mode_is_deterministic_and_slower() {
         let (_, map, trace, chip) = setup();
-        let plan = AllocationPlan { algorithm: "t".into(), duplicates: vec![vec![1; 5]] };
+        let plan = AllocationPlan { algorithm: "t".into(), duplicates: vec![vec![1; 5]], pools: None };
         let placement = place(&map, &plan, &chip).unwrap();
         let mut mesh = Mesh::new(&chip);
         let mut busy = vec![0u64; 5];
@@ -219,6 +220,7 @@ mod tests {
                 engine: &crate::sim::engine::EVENT,
                 images: 1,
                 warmup: 0,
+                write_latency_ns: 100.0,
             },
             &mut busy,
         );
@@ -232,6 +234,7 @@ mod tests {
                 engine: &crate::sim::engine::EVENT,
                 images: 1,
                 warmup: 0,
+                write_latency_ns: 100.0,
             },
             &mut busy2,
         );

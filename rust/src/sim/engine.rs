@@ -186,6 +186,17 @@ impl Engine for SteppedEngine {
     }
 }
 
+/// Cycles a `Reprogram` event occupies its target arrays: `cells` eNVM
+/// cell writes at `write_latency_ns` each, converted to whole clock
+/// cycles (ceiling — a partial write still blocks the cycle). Both
+/// engines charge reprogramming through this one function (see
+/// [`super::simulate`]), so pool swaps are parity-safe by construction:
+/// at RRAM's 100 ns per cell and the paper's 100 MHz clock this is 10
+/// cycles per cell, 163,840 cycles for a full 128×128 array.
+pub fn reprogram_cycles(write_latency_ns: f64, clock_hz: f64, cells: u64) -> u64 {
+    (write_latency_ns * 1e-9 * clock_hz).ceil() as u64 * cells
+}
+
 /// Duration of work item (patch `p`, block `r`) under the read mode.
 #[inline]
 pub(super) fn item_dur(lt: &LayerTrace, mode: ReadMode, p: usize, r: usize) -> u64 {
@@ -518,7 +529,7 @@ mod tests {
         mode: ReadMode,
     ) -> (u64, Vec<u64>, crate::noc::NocStats) {
         let (map, trace, chip) = setup();
-        let plan = AllocationPlan { algorithm: "test".into(), duplicates: vec![dups] };
+        let plan = AllocationPlan { algorithm: "test".into(), duplicates: vec![dups], pools: None };
         let placement = place(&map, &plan, &chip).unwrap();
         let mut mesh = Mesh::new(&chip);
         let n: usize = plan.duplicates[0].iter().sum();
@@ -543,6 +554,16 @@ mod tests {
         let err = lookup("evnt").unwrap_err().to_string();
         assert!(err.contains("did you mean 'event'?"), "{err}");
         assert_eq!(engines().map(|e| e.name().to_string()), ENGINE_NAMES.map(str::to_string));
+    }
+
+    #[test]
+    fn reprogram_cost_matches_the_device_constants() {
+        // RRAM: 100 ns/cell at 100 MHz → 10 cycles/cell
+        assert_eq!(reprogram_cycles(100.0, 100e6, 1), 10);
+        assert_eq!(reprogram_cycles(100.0, 100e6, 128 * 128), 163_840);
+        // SRAM: 1 ns/cell still rounds up to a whole cycle
+        assert_eq!(reprogram_cycles(1.0, 100e6, 4), 4);
+        assert_eq!(reprogram_cycles(0.0, 100e6, 7), 0);
     }
 
     #[test]
@@ -583,7 +604,7 @@ mod tests {
         let acts = vec![vec![crate::tensor::Tensor::zeros(&[4, 4, 4])]];
         let trace = trace_from_activations(&g, &map, &acts);
         let chip = ChipCfg::paper(2);
-        let plan = AllocationPlan { algorithm: "t".into(), duplicates: vec![vec![2]] };
+        let plan = AllocationPlan { algorithm: "t".into(), duplicates: vec![vec![2]], pools: None };
         let placement = place(&map, &plan, &chip).unwrap();
         for engine in engines() {
             let mut mesh = Mesh::new(&chip);

@@ -132,6 +132,11 @@ pub struct SimCfg {
     pub images: usize,
     /// Leading images excluded from the steady-state throughput estimate.
     pub warmup: usize,
+    /// Per-cell eNVM write latency (device-dependent), charged when a
+    /// plan carries a [`crate::mapping::PoolSchedule`] and pool swaps
+    /// reprogram arrays mid-run. Irrelevant — never read — for plans
+    /// without pools.
+    pub write_latency_ns: f64,
 }
 
 impl std::fmt::Debug for SimCfg {
@@ -142,6 +147,7 @@ impl std::fmt::Debug for SimCfg {
             .field("engine", &self.engine.name())
             .field("images", &self.images)
             .field("warmup", &self.warmup)
+            .field("write_latency_ns", &self.write_latency_ns)
             .finish()
     }
 }
@@ -162,6 +168,7 @@ impl SimCfg {
             engine: &engine::EVENT,
             images,
             warmup: (images / 4).min(2),
+            write_latency_ns: 100.0,
         }
     }
 
@@ -177,6 +184,14 @@ impl SimCfg {
     /// The same configuration under a different simulation engine.
     pub fn with_engine(mut self, engine: &'static dyn Engine) -> SimCfg {
         self.engine = engine;
+        self
+    }
+
+    /// The same configuration with a device-specific eNVM write latency
+    /// (the pipeline sets this from the hardware profile's
+    /// [`crate::hw::DeviceModel`]).
+    pub fn with_write_latency(mut self, ns: f64) -> SimCfg {
+        self.write_latency_ns = ns;
         self
     }
 }
@@ -200,6 +215,14 @@ pub struct SimResult {
     pub chip_util: f64,
     /// NoC statistics over the run.
     pub noc: NocStats,
+    /// Pool swaps executed (0 for plans without a reprogramming
+    /// schedule).
+    pub reloads: u64,
+    /// Weight cells reprogrammed by those swaps.
+    pub reload_cells: u64,
+    /// Cycles the pipeline stalled on reprogramming that could not be
+    /// hidden behind compute on still-resident blocks.
+    pub reload_stall_cycles: u64,
 }
 
 impl SimResult {
@@ -248,16 +271,63 @@ pub fn simulate(
         }
     }
 
-    // 2. pipeline composition
-    let sched = pipeline::schedule(&stage_t);
-    let makespan = sched.makespan;
-
-    // 3. throughput over the steady-state window
-    let warm = cfg.warmup.min(cfg.images - 1);
-    let t_start = if warm == 0 { 0 } else { sched.end[warm - 1][nl - 1] };
-    let t_end = sched.end[cfg.images - 1][nl - 1];
-    let window = (t_end - t_start).max(1);
-    let throughput_ips = (cfg.images - warm) as f64 / (window as f64 / chip.clock_hz);
+    // 2+3. pipeline composition and throughput. Plans without a pool
+    // schedule compose all layers into one pipeline (the historical
+    // path, byte-for-byte). Pooled plans run batch-major: every image
+    // flows through pool p's resident layers, then the next pool is
+    // swapped in (reprogramming overlapped against arrays the previous
+    // pool has already freed), so each pool is its own sub-pipeline and
+    // visible swap cycles stall between them. This accounting is
+    // engine-independent — both engines produce identical stage times,
+    // so pooled runs stay bit-identical across engines.
+    let (makespan, throughput_ips, reloads, reload_cells, reload_stall_cycles) =
+        match plan.pools.as_ref().filter(|ps| ps.pools.len() > 1) {
+            None => {
+                let sched = pipeline::schedule(&stage_t);
+                let makespan = sched.makespan;
+                let warm = cfg.warmup.min(cfg.images - 1);
+                let t_start = if warm == 0 { 0 } else { sched.end[warm - 1][nl - 1] };
+                let t_end = sched.end[cfg.images - 1][nl - 1];
+                let window = (t_end - t_start).max(1);
+                let tput = (cfg.images - warm) as f64 / (window as f64 / chip.clock_hz);
+                (makespan, tput, 0, 0, 0)
+            }
+            Some(ps) => {
+                let per_cell = engine::reprogram_cycles(cfg.write_latency_ns, chip.clock_hz, 1);
+                let mut makespan = 0u64;
+                let mut reloads = 0u64;
+                let mut cells_total = 0u64;
+                let mut stall_total = 0u64;
+                let mut prev_resident = ps.pools[0].resident_arrays;
+                for (i, p) in ps.pools.iter().enumerate() {
+                    let sub: Vec<Vec<u64>> = stage_t
+                        .iter()
+                        .map(|row| row[p.first_layer..=p.last_layer].to_vec())
+                        .collect();
+                    makespan += pipeline::schedule(&sub).makespan;
+                    if i > 0 && p.swap_arrays > 0 {
+                        reloads += 1;
+                        cells_total += p.swap_cells;
+                        // writes into arrays the previous pool already
+                        // freed hide behind its tail compute; only the
+                        // cells aimed at still-occupied arrays stall
+                        let free = ps.physical_arrays.saturating_sub(prev_resident) as u64;
+                        let visible = (p.swap_arrays as u64).saturating_sub(free);
+                        let vis_cells = if visible == 0 {
+                            0
+                        } else {
+                            (p.swap_cells * visible).div_ceil(p.swap_arrays as u64)
+                        };
+                        // PEs drive their arrays' word lines in parallel
+                        stall_total += per_cell * vis_cells.div_ceil(chip.pes.max(1) as u64);
+                    }
+                    prev_resident = p.resident_arrays;
+                }
+                makespan += stall_total;
+                let tput = cfg.images as f64 / (makespan.max(1) as f64 / chip.clock_hz);
+                (makespan, tput, reloads, cells_total, stall_total)
+            }
+        };
 
     // 4. utilization counters
     let mut layer_util = vec![0.0; nl];
@@ -292,6 +362,9 @@ pub fn simulate(
         block_util,
         chip_util: total_busy as f64 / total_cap.max(1) as f64,
         noc: mesh.stats(makespan),
+        reloads,
+        reload_cells,
+        reload_stall_cycles,
     }
 }
 
@@ -398,9 +471,45 @@ mod tests {
                 engine: &engine::EVENT,
                 images: 8,
                 warmup: 2,
+                write_latency_ns: 100.0,
             },
         );
         assert!(r.layer_util[0] > 0.5, "util {}", r.layer_util[0]);
+    }
+
+    #[test]
+    fn pooled_plans_charge_visible_reload_stalls() {
+        let g = resnet18(32, 10);
+        let map = map_network(&g, ArrayCfg::paper(), false);
+        let acts = synth_activations(&g, &map, 2, 17, SynthCfg::default());
+        let trace = trace_from_activations(&g, &map, &acts);
+        let prof = NetworkProfile::from_trace(&map, &trace);
+        // quarter-size chip, 4x oversubscribed: the net no longer fits
+        let chip = ChipCfg::paper(22);
+        let a = StrategyRegistry::lookup_allocator("pooled").unwrap();
+        let plan = a.allocate_oversub(&map, &prof, chip.total_arrays(), 4.0).unwrap();
+        assert!(plan.pools.is_some());
+        // placement happens against the logical (oversubscribed) chip
+        let mut logical = chip.clone();
+        logical.arrays_per_pe *= 4;
+        let placement = place(&map, &plan, &logical).unwrap();
+        let cfg = SimCfg::for_strategy_name("pooled", 6).unwrap();
+        let r = simulate(&logical, &map, &plan, &placement, &trace, cfg);
+        assert!(r.reloads >= 1, "expected pool swaps, got {}", r.reloads);
+        assert!(r.reload_cells > 0);
+        assert!(r.reload_stall_cycles > 0, "swaps into occupied arrays must stall");
+        assert!(r.makespan > r.reload_stall_cycles);
+        // the reload model is engine-independent: both engines agree
+        let r2 = simulate(
+            &logical,
+            &map,
+            &plan,
+            &placement,
+            &trace,
+            cfg.with_engine(&engine::STEPPED),
+        );
+        assert_eq!(r.makespan, r2.makespan);
+        assert_eq!(r.reload_stall_cycles, r2.reload_stall_cycles);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //!
 //! [`StrategyRegistry`] maps names (and aliases) to trait objects. The
 //! global registry starts with the built-ins — allocators `baseline`,
-//! `weight-based`, `perf-based`, `block-wise`, `hybrid`; dataflows
+//! `weight-based`, `perf-based`, `block-wise`, `hybrid`, `pooled`; dataflows
 //! `layer-wise`, `block-wise` — and accepts process-wide registration
 //! of new `&'static` strategies ([`StrategyRegistry::register_global`]),
 //! so a downstream crate can plug a policy in and immediately drive it
@@ -23,7 +23,7 @@
 //! [`crate::hw::ProfileRegistry`] maps names to device-model-backed
 //! hardware profiles the way this registry maps names to policies.
 
-use crate::alloc::{builtin, hybrid, Allocator};
+use crate::alloc::{builtin, hybrid, pooled, Allocator};
 use crate::sim::{dataflow, DataflowModel};
 use crate::util::cli::unknown_value_msg;
 use anyhow::Result;
@@ -60,12 +60,16 @@ impl StrategyRegistry {
             &builtin::PERF_BASED,
             &builtin::BLOCK_WISE,
             &hybrid::HYBRID,
+            &pooled::POOLED,
         ] {
             reg.register_allocator(a).expect("built-in names are distinct");
         }
-        for (alias, canonical) in
-            [("weight", "weight-based"), ("perf", "perf-based"), ("block", "block-wise")]
-        {
+        for (alias, canonical) in [
+            ("weight", "weight-based"),
+            ("perf", "perf-based"),
+            ("block", "block-wise"),
+            ("pool", "pooled"),
+        ] {
             reg.alloc_aliases.insert(alias.into(), canonical.into());
         }
         for d in [&dataflow::LAYER_WISE as &'static dyn DataflowModel, &dataflow::BLOCK_WISE] {
@@ -201,6 +205,8 @@ mod tests {
         assert_eq!(StrategyRegistry::lookup_allocator("hybrid").unwrap().name(), "hybrid");
         assert_eq!(StrategyRegistry::lookup_allocator("weight").unwrap().name(), "weight-based");
         assert_eq!(StrategyRegistry::lookup_allocator("block").unwrap().name(), "block-wise");
+        assert_eq!(StrategyRegistry::lookup_allocator("pool").unwrap().name(), "pooled");
+        assert_eq!(StrategyRegistry::lookup_allocator("pooled").unwrap().name(), "pooled");
         for name in ["layer-wise", "block-wise"] {
             assert_eq!(StrategyRegistry::lookup_dataflow(name).unwrap().name(), name);
         }

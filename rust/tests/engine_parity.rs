@@ -71,6 +71,48 @@ fn event_engine_matches_stepped_reference_on_fig8_resnet18() {
 }
 
 #[test]
+fn pooled_engines_agree_at_every_oversubscription_ratio() {
+    // Golden pooled parity on the Fig 8 ResNet18 scenario: shrink the
+    // chip by the oversubscription ratio so the weight-pool schedule
+    // actually swaps mid-run, and require both engines to agree on the
+    // full simulate artifact (makespan, stalls, reload counters) at
+    // 1x (pooling off), 2x, and 4x.
+    let prep = pipeline::prepare(&spec(), None).unwrap();
+    let min_pes = prep.min_pes();
+    for oversub in [1.0f64, 2.0, 4.0] {
+        let pes = (min_pes as f64 / oversub).ceil() as usize;
+        let base = ScenarioBuilder::from_prefix(&spec())
+            .alloc("pooled")
+            .pes(pes)
+            .sim_images(2)
+            .oversub(oversub);
+        let ev = base.clone().engine("event").build().unwrap();
+        let st = base.clone().engine("stepped").build().unwrap();
+        let ev_out = pipeline::run_scenario(&prep.view(), &ev, None).unwrap();
+        let st_out = pipeline::run_scenario(&prep.view(), &st, None).unwrap();
+        assert_eq!(
+            ev_out.plan, st_out.plan,
+            "pooled @{oversub}x: allocation must not depend on the engine"
+        );
+        assert_eq!(
+            artifact::sim_result_json(&ev_out.result).pretty(),
+            artifact::sim_result_json(&st_out.result).pretty(),
+            "pooled @{oversub}x: event engine diverged from the stepped reference"
+        );
+        if oversub > 1.0 {
+            assert!(
+                ev_out.result.reloads >= 1,
+                "pooled @{oversub}x: the shrunken chip should need at least one reload"
+            );
+            assert!(ev_out.plan.pools.is_some());
+        } else {
+            assert_eq!(ev_out.result.reloads, 0, "pooling must stay off at 1x");
+            assert!(ev_out.plan.pools.is_none());
+        }
+    }
+}
+
+#[test]
 fn parity_holds_on_the_depthwise_workload() {
     // MobileNet exercises the block-diagonal grids; parity must hold
     // there too (one strategy per dataflow family keeps this fast).

@@ -96,6 +96,7 @@ fn dataflow_ablation_blockwise_alloc_layerwise_flow() {
             engine: &cimfab::sim::engine::EVENT,
             images: 6,
             warmup: 1,
+            write_latency_ns: 100.0,
         },
     );
     let bw = simulate(
@@ -106,6 +107,7 @@ fn dataflow_ablation_blockwise_alloc_layerwise_flow() {
             engine: &cimfab::sim::engine::EVENT,
             images: 6,
             warmup: 1,
+            write_latency_ns: 100.0,
         },
     );
     assert!(

@@ -177,6 +177,7 @@ fn synthetic_prefixes_differing_only_in_artifacts_dir_share_one_prefix() {
         engine: "event".into(),
         pes: 172,
         sim_images: 4,
+        oversub: 1.0,
     };
     let scs = vec![mk(a, "weight-based", "layer-wise"), mk(b, "block-wise", "block-wise")];
     let dir = tmp_dir("shared");
@@ -212,6 +213,7 @@ fn multi_prefix_sweep_prepares_each_prefix_once_and_stays_ordered() {
                 engine: "event".into(),
                 pes: 200,
                 sim_images: 4,
+                oversub: 1.0,
             });
         }
     }

@@ -1,0 +1,164 @@
+//! Weight-pool subsystem guarantees, end to end:
+//!
+//! * **resolve precedence** — `--hw`'s name-or-path grammar: a local
+//!   file can never shadow a registered profile name, but unknown bare
+//!   names still fall back to a file of that name;
+//! * **unit-ratio identity** — propcheck: `pooled` at oversub 1.0 is
+//!   byte-identical (via the plan artifact) to the block-wise allocator
+//!   across random budgets, so turning the axis off costs nothing;
+//! * **big-nets-on-small-chips** — ResNet18 completes on a quarter-size
+//!   rram-128 chip at 4x oversubscription with at least one reload,
+//!   itemized reload cells/stalls, and the schedule in the plan artifact;
+//! * **refusal** — non-pooled strategies reject oversubscription through
+//!   the pipeline with actionable guidance.
+
+use cimfab::alloc::{greedy, Allocator};
+use cimfab::config::ArrayCfg;
+use cimfab::dnn::resnet18;
+use cimfab::mapping::{map_network, NetworkMap};
+use cimfab::pipeline::{self, artifact, PrefixSpec, ScenarioBuilder, StatsSource};
+use cimfab::stats::synth::{synth_activations, SynthCfg};
+use cimfab::stats::{trace_from_activations, NetworkProfile};
+use cimfab::strategy::StrategyRegistry;
+use cimfab::util::propcheck;
+
+fn spec() -> PrefixSpec {
+    PrefixSpec {
+        net: "resnet18".into(),
+        hw: 32,
+        hw_profile: cimfab::hw::DEFAULT_PROFILE.into(),
+        stats: StatsSource::Synthetic,
+        profile_images: 1,
+        seed: 7,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+fn setup() -> (NetworkMap, NetworkProfile) {
+    let g = resnet18(32, 10);
+    let map = map_network(&g, ArrayCfg::paper(), false);
+    let acts = synth_activations(&g, &map, 2, 17, SynthCfg::default());
+    let trace = trace_from_activations(&g, &map, &acts);
+    let prof = NetworkProfile::from_trace(&map, &trace);
+    (map, prof)
+}
+
+#[test]
+fn resolve_precedence_registered_name_beats_local_file() {
+    use cimfab::hw::{HwProfile, ProfileRegistry};
+    let dir = std::env::temp_dir().join(format!("cimfab_wp_resolve_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // a local file named exactly like a registered alias …
+    let mut shadow = HwProfile::rram_256();
+    shadow.name = "local-shadow".into();
+    shadow.save(dir.join("pcram").to_str().unwrap()).unwrap();
+    // … and one whose name the registry does not know
+    let mut fallback = HwProfile::rram_256();
+    fallback.name = "from-file".into();
+    fallback.save(dir.join("localonly").to_str().unwrap()).unwrap();
+
+    // run the bare-name lookups from inside the directory, then restore
+    // the working directory before asserting
+    let old = std::env::current_dir().unwrap();
+    std::env::set_current_dir(&dir).unwrap();
+    let named = ProfileRegistry::resolve("pcram");
+    let file = ProfileRegistry::resolve("localonly");
+    std::env::set_current_dir(old).unwrap();
+
+    assert_eq!(
+        named.unwrap().name,
+        "pcram-128",
+        "a local file must never shadow a registered name"
+    );
+    assert_eq!(
+        file.unwrap().name,
+        "from-file",
+        "unknown bare names fall back to a local file"
+    );
+    // an explicit path always loads the file, registered name or not
+    let by_path = ProfileRegistry::resolve(dir.join("pcram").to_str().unwrap()).unwrap();
+    assert_eq!(by_path.name, "local-shadow");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn pooled_at_unit_ratio_matches_blockwise_byte_for_byte() {
+    let (map, prof) = setup();
+    let pooled = StrategyRegistry::lookup_allocator("pooled").unwrap();
+    propcheck::check("pooled@1.0 == block-wise", 0xB10C, 20, |rng| {
+        let budget = map.min_arrays() + rng.index(map.min_arrays() * 2 + 1);
+        let got = pooled.allocate(&map, &prof, budget).unwrap();
+        // the pre-pool path, restamped the way the registry parity test
+        // normalizes algorithm names
+        let mut want = greedy::blockwise(&map, &prof.block_cycles, budget).unwrap();
+        want.algorithm = "pooled".into();
+        cimfab::prop_assert!(
+            artifact::plan_json(&got, &map).pretty() == artifact::plan_json(&want, &map).pretty(),
+            "budget {budget}: pooled@1.0 diverged from block-wise"
+        );
+        // the explicit-ratio entry point agrees at exactly 1.0
+        let via_ratio = pooled.allocate_oversub(&map, &prof, budget, 1.0).unwrap();
+        cimfab::prop_assert!(
+            artifact::plan_json(&via_ratio, &map).pretty()
+                == artifact::plan_json(&want, &map).pretty(),
+            "budget {budget}: allocate_oversub(1.0) diverged"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn resnet18_completes_on_a_quarter_size_chip() {
+    let prep = pipeline::prepare(&spec(), None).unwrap();
+    let pes = prep.min_pes().div_ceil(4);
+    let sc = ScenarioBuilder::from_prefix(&spec())
+        .alloc("pooled")
+        .pes(pes)
+        .sim_images(2)
+        .oversub(4.0)
+        .build()
+        .unwrap();
+    assert!(sc.id().ends_with("_ov4"), "{}", sc.id());
+    let out = pipeline::run_scenario(&prep.view(), &sc, None).unwrap();
+
+    // the oversubscribed run actually swapped pools and charged for it
+    assert!(out.result.reloads >= 1, "quarter chip must reload at least once");
+    assert!(out.result.reload_cells > 0);
+    assert!(out.result.reload_stall_cycles > 0);
+    assert!(out.result.throughput_ips > 0.0);
+
+    // the reprogramming schedule rides the plan artifact …
+    let pj = artifact::plan_json(&out.plan, &prep.map);
+    let pools = pj.get("pools").get("pools").as_arr().unwrap();
+    assert!(pools.len() > 1, "schedule should partition the net into several pools");
+    // … and the reload counters ride the report
+    let rep = out.report_json();
+    assert!(rep.get("reloads").as_u64().unwrap() >= 1);
+    assert!(rep.get("reload_cells").as_u64().unwrap() > 0);
+
+    // a full-size run of the same scenario id family stays reload-free
+    let full = ScenarioBuilder::from_prefix(&spec())
+        .alloc("pooled")
+        .pes(prep.min_pes())
+        .sim_images(2)
+        .build()
+        .unwrap();
+    let full_out = pipeline::run_scenario(&prep.view(), &full, None).unwrap();
+    assert_eq!(full_out.result.reloads, 0);
+    assert!(full_out.report_json().get("reloads").as_u64().is_none());
+}
+
+#[test]
+fn non_pooled_strategies_reject_oversubscription_through_the_pipeline() {
+    let prep = pipeline::prepare(&spec(), None).unwrap();
+    let sc = ScenarioBuilder::from_prefix(&spec())
+        .alloc("block-wise")
+        .pes(prep.min_pes())
+        .sim_images(2)
+        .oversub(2.0)
+        .build()
+        .unwrap();
+    let err = format!("{:#}", pipeline::run_scenario(&prep.view(), &sc, None).unwrap_err());
+    assert!(err.contains("cannot oversubscribe"), "{err}");
+    assert!(err.contains("pooled"), "guidance should point at --alloc pooled: {err}");
+}

@@ -1,8 +1,9 @@
 #!/usr/bin/env python3
-"""Markdown link checker for the docs site and README.
+"""Markdown link checker for the docs site and the root markdown.
 
 Checks every markdown file passed on the command line (or, with no
-arguments, README.md plus docs/**/*.md) for:
+arguments, every *.md at the repo root — README, ROADMAP, CHANGES, … —
+plus docs/**/*.md) for:
 
   * relative links whose target file does not exist;
   * intra-document anchor links (#heading) with no matching heading.
@@ -60,7 +61,10 @@ def check_file(path: str) -> list[str]:
 def main() -> int:
     files = sys.argv[1:]
     if not files:
-        files = ["README.md"]
+        # every root-level markdown file (historically only README.md,
+        # which silently skipped ROADMAP.md and friends) …
+        files = sorted(n for n in os.listdir(".") if n.endswith(".md"))
+        # … plus the docs tree
         for root, _, names in os.walk("docs"):
             files += [os.path.join(root, n) for n in names if n.endswith(".md")]
     all_errors = []
