@@ -57,6 +57,7 @@ fn main() {
             .map(|d| vec![*d.iter().min().unwrap(); d.len()])
             .collect(),
         pools: None,
+        read_rows: None,
     };
 
     let mut b = Bencher::new(0, 2);
@@ -82,6 +83,7 @@ fn main() {
                     images: 8,
                     warmup: 2,
                     write_latency_ns: 100.0,
+                    inject: None,
                 },
             );
             ips = r.throughput_ips;

@@ -1,0 +1,120 @@
+//! Error-injection bench: accuracy vs latency across device profiles.
+//!
+//! Runs ResNet18 block-wise on the three built-in hardware profiles —
+//! `rram-128`, `pcram-128`, `sram-128` — fault-free and under
+//! `--inject-errors` at each device's own variance (the §III-A σ), and
+//! reports the wall-clock cost of the Monte Carlo accountant next to
+//! the bit-error rates it measures. The derived ADC width already
+//! embodies the variance budget (pcram reads 2 rows where sram reads
+//! 64), so the BER column shows the *residual* error rate each profile
+//! pays after that derating. Emits `BENCH_error_injection.json` (repo
+//! root, archived by CI) in the shared `{name, baseline_ms,
+//! optimized_ms, speedup}` schema, where baseline is the fault-free
+//! rram-128 simulation wall-clock and optimized the injected one.
+
+use cimfab::pipeline::{self, PrefixSpec, ScenarioBuilder, StatsSource};
+use cimfab::util::bench::{banner, write_bench_json, Bencher};
+use cimfab::util::json::Json;
+use cimfab::util::table::{fmt_f, fmt_int, Table};
+
+fn main() {
+    banner(
+        "Error injection",
+        "ResNet18 fault-free vs --inject-errors on rram-128 / pcram-128 / sram-128",
+    );
+    let mut b = Bencher::new(1, 3);
+    let mut t = Table::new([
+        "profile",
+        "adc rows",
+        "sigma",
+        "fault-free ms",
+        "injected ms",
+        "overhead %",
+        "ADC reads",
+        "flipped",
+        "BER",
+        "worst BER",
+    ]);
+    let mut extra: Vec<(&str, Json)> = vec![("net", Json::str("resnet18"))];
+    let mut rram_ms = (0.0f64, 0.0f64);
+    for profile in ["rram-128", "pcram-128", "sram-128"] {
+        let spec = PrefixSpec {
+            net: "resnet18".into(),
+            hw: 32,
+            hw_profile: profile.into(),
+            stats: StatsSource::Synthetic,
+            profile_images: 1,
+            seed: 7,
+            artifacts_dir: "artifacts".into(),
+        };
+        let prep = pipeline::prepare(&spec, None).unwrap();
+        let sigma = prep.hw.device.variance();
+        let adc_rows = prep.map.array.adc_rows();
+        let base = ScenarioBuilder::from_prefix(&spec)
+            .alloc("block-wise")
+            .pes(prep.min_pes() * 2)
+            .sim_images(4);
+
+        let clean = base.clone().build().unwrap();
+        let clean_ms = b
+            .bench(&format!("{profile} fault-free"), || {
+                pipeline::run_scenario(&prep.view(), &clean, None).unwrap();
+            })
+            .summary
+            .mean
+            * 1e3;
+
+        let faulty = base.clone().inject_errors(7).build().unwrap();
+        let mut out = None;
+        let faulty_ms = b
+            .bench(&format!("{profile} injected @ σ={sigma}"), || {
+                out = Some(pipeline::run_scenario(&prep.view(), &faulty, None).unwrap());
+            })
+            .summary
+            .mean
+            * 1e3;
+        let out = out.unwrap();
+        let e = out.result.errors.as_ref().expect("injected runs must report ErrorStats");
+        assert!(e.reads > 0, "{profile}: the accountant must count conversions");
+        if sigma >= 0.05 {
+            assert!(e.flipped > 0, "{profile}: σ={sigma} must flip some codes");
+        }
+
+        t.row([
+            profile.to_string(),
+            adc_rows.to_string(),
+            fmt_f(sigma, 3),
+            fmt_f(clean_ms, 2),
+            fmt_f(faulty_ms, 2),
+            fmt_f((faulty_ms / clean_ms.max(1e-12) - 1.0) * 100.0, 1),
+            fmt_int(e.reads),
+            fmt_int(e.flipped),
+            format!("{:.3e}", e.ber),
+            format!("{:.3e}", e.worst_ber),
+        ]);
+        extra.push((
+            profile,
+            Json::obj(vec![
+                ("adc_rows", Json::num(adc_rows)),
+                ("sigma", Json::num(sigma)),
+                ("fault_free_ms", Json::num(clean_ms)),
+                ("injected_ms", Json::num(faulty_ms)),
+                ("reads", Json::num(e.reads)),
+                ("flipped", Json::num(e.flipped)),
+                ("ber", Json::num(e.ber)),
+                ("worst_ber", Json::num(e.worst_ber)),
+            ]),
+        ));
+        if profile == "rram-128" {
+            rram_ms = (clean_ms, faulty_ms);
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "injection overhead on rram-128: {:.1}% of the fault-free wall-clock",
+        (rram_ms.1 / rram_ms.0.max(1e-12) - 1.0) * 100.0
+    );
+
+    write_bench_json("error_injection", rram_ms.0, rram_ms.1, extra);
+    println!("\n{}", b.report());
+}

@@ -111,6 +111,7 @@ pub fn layerwise(
             .map(|(l, g)| vec![copies[l]; g.blocks_per_copy])
             .collect(),
         pools: None,
+        read_rows: None,
     })
 }
 
@@ -143,7 +144,7 @@ pub fn blockwise(
     for (i, b) in blocks.iter().enumerate() {
         duplicates[b.layer][b.row] = copies[i];
     }
-    Ok(AllocationPlan { algorithm: "blockwise".into(), duplicates, pools: None })
+    Ok(AllocationPlan { algorithm: "blockwise".into(), duplicates, pools: None, read_rows: None })
 }
 
 #[cfg(test)]

@@ -112,7 +112,7 @@ impl Allocator for Hybrid {
             }
         }
         finish_plan(
-            AllocationPlan { algorithm: String::new(), duplicates, pools: None },
+            AllocationPlan { algorithm: String::new(), duplicates, pools: None, read_rows: None },
             self.name(),
             map,
             budget_arrays,

@@ -13,6 +13,7 @@
 //! | `perf-based`   | whole layer | profiled one-copy layer cycles under zero-skipping |
 //! | `block-wise`   | single block | profiled one-copy block cycles (the contribution) |
 //! | `hybrid`       | layer before / block after a split point | mixed ([`hybrid::Hybrid`]) |
+//! | `varaware`     | single block | block cycles inflated by variance-aware read-width derating ([`varaware::VarAware`]) |
 //!
 //! `baseline` is weight-based allocation *without* zero-skipping at
 //! simulation time (prior work's deterministic regime, where
@@ -31,6 +32,7 @@ pub mod greedy;
 pub mod hybrid;
 pub mod oracle;
 pub mod pooled;
+pub mod varaware;
 
 use crate::mapping::{AllocationPlan, NetworkMap};
 use crate::stats::NetworkProfile;

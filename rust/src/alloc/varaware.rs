@@ -1,0 +1,180 @@
+//! Variance-aware block-wise allocation: trade arrays for BER.
+//!
+//! The §III-A fault model makes a read of `k` active cells err with
+//! probability `2·Q(0.5/(σ√k))` — so the blocks that matter for
+//! accuracy are the ones whose word-line batches run *full*: high
+//! ones-density blocks see close to `adc_rows` active cells per batch,
+//! low-density blocks rarely do. `varaware` uses the profiled per-block
+//! ones densities ([`NetworkProfile::block_density`]) to derate the
+//! read width of dense blocks (halving or quartering rows-per-read,
+//! which halves/quarters the effective `k`) and then runs the ordinary
+//! block-wise water-filling over latencies inflated by the extra
+//! batches, so the derated blocks win back duplicates. The plan carries
+//! the widths in [`AllocationPlan::read_rows`]; the simulator charges
+//! the extra cycles and the injection accountant uses the derated `k`.
+//!
+//! With a uniform ones distribution nothing is derated and the plan is
+//! byte-identical to `block-wise` (only the stamped name differs) —
+//! pinned by `tests/error_injection.rs`.
+
+use super::{finish_plan, greedy, Allocator};
+use crate::mapping::{AllocationPlan, NetworkMap};
+use crate::stats::NetworkProfile;
+
+/// Variance-aware block-wise allocation ([`VARAWARE`]).
+#[derive(Debug, Clone, Copy)]
+pub struct VarAware;
+
+/// The registered `varaware` strategy.
+pub static VARAWARE: VarAware = VarAware;
+
+/// Density ratio (block / network mean) above which a block's read
+/// width is halved once, and twice.
+const DERATE_HALF: f64 = 1.25;
+const DERATE_QUARTER: f64 = 1.5;
+
+/// Per-block derate shift: read width = `adc_rows >> shift`.
+fn derate_shift(density: f64, mean: f64) -> u32 {
+    if mean <= 0.0 {
+        return 0;
+    }
+    let ratio = density / mean;
+    if ratio >= DERATE_QUARTER {
+        2
+    } else if ratio >= DERATE_HALF {
+        1
+    } else {
+        0
+    }
+}
+
+impl Allocator for VarAware {
+    fn name(&self) -> &str {
+        "varaware"
+    }
+
+    fn describe(&self) -> &str {
+        "block-wise duplicates with variance-aware read widths: dense blocks read \
+         fewer rows per ADC batch (lower BER under --inject-errors) and win back \
+         duplicates for the extra batches (§III-A applied per block)"
+    }
+
+    fn default_dataflow(&self) -> &str {
+        "block-wise"
+    }
+
+    fn uniform_plans(&self) -> bool {
+        false
+    }
+
+    fn allocate(
+        &self,
+        map: &NetworkMap,
+        profile: &NetworkProfile,
+        budget_arrays: usize,
+    ) -> crate::Result<AllocationPlan> {
+        // network-mean ones density over every block
+        let (mut sum, mut n) = (0.0f64, 0usize);
+        for layer in &profile.block_density {
+            for &d in layer {
+                sum += d;
+                n += 1;
+            }
+        }
+        let mean = if n > 0 { sum / n as f64 } else { 0.0 };
+
+        let shifts: Vec<Vec<u32>> = profile
+            .block_density
+            .iter()
+            .map(|layer| layer.iter().map(|&d| derate_shift(d, mean)).collect())
+            .collect();
+
+        // Uniform distribution ⇒ nothing derated ⇒ exactly the base
+        // strategy's plan (identity pinned by tests/error_injection.rs).
+        if shifts.iter().all(|l| l.iter().all(|&s| s == 0)) {
+            let plan = greedy::blockwise(map, &profile.block_cycles, budget_arrays)?;
+            return finish_plan(plan, self.name(), map, budget_arrays);
+        }
+
+        // A block derated by `s` runs 2^s× the batches, so water-fill
+        // over the inflated latencies: the derated blocks' extra cycles
+        // compete for duplicates like any other slowness.
+        let inflated: Vec<Vec<f64>> = profile
+            .block_cycles
+            .iter()
+            .zip(&shifts)
+            .map(|(cyc, sh)| {
+                cyc.iter().zip(sh).map(|(&c, &s)| c * (1u64 << s) as f64).collect()
+            })
+            .collect();
+        let mut plan = greedy::blockwise(map, &inflated, budget_arrays)?;
+        let full = map.array.adc_rows();
+        plan.read_rows = Some(
+            shifts
+                .iter()
+                .map(|layer| layer.iter().map(|&s| (full >> s).max(1)).collect())
+                .collect(),
+        );
+        finish_plan(plan, self.name(), map, budget_arrays)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArrayCfg;
+    use crate::dnn::resnet18;
+    use crate::mapping::map_network;
+    use crate::stats::synth::{synth_activations, SynthCfg};
+    use crate::stats::trace_from_activations;
+
+    fn setup() -> (NetworkMap, NetworkProfile) {
+        let g = resnet18(32, 10);
+        let map = map_network(&g, ArrayCfg::paper(), false);
+        let acts = synth_activations(&g, &map, 1, 5, SynthCfg::default());
+        let trace = trace_from_activations(&g, &map, &acts);
+        let prof = NetworkProfile::from_trace(&map, &trace);
+        (map, prof)
+    }
+
+    #[test]
+    fn derate_shift_thresholds() {
+        assert_eq!(derate_shift(0.10, 0.10), 0);
+        assert_eq!(derate_shift(0.13, 0.10), 1);
+        assert_eq!(derate_shift(0.20, 0.10), 2);
+        // degenerate all-zero profile never derates
+        assert_eq!(derate_shift(0.0, 0.0), 0);
+    }
+
+    #[test]
+    fn skewed_density_produces_valid_derated_plans() {
+        let (map, mut prof) = setup();
+        // force a strongly bimodal density so some blocks derate
+        for layer in prof.block_density.iter_mut() {
+            for (r, d) in layer.iter_mut().enumerate() {
+                *d = if r % 2 == 0 { 0.05 } else { 0.5 };
+            }
+        }
+        let budget = map.min_arrays() * 2;
+        let plan = VARAWARE.allocate(&map, &prof, budget).unwrap();
+        assert_eq!(plan.algorithm, "varaware");
+        plan.validate(&map, budget).unwrap();
+        let rr = plan.read_rows.as_ref().expect("skewed densities must derate");
+        let full = map.array.adc_rows();
+        let derated = rr.iter().flatten().filter(|&&w| w < full).count();
+        assert!(derated > 0, "no block was derated");
+        assert!(rr.iter().flatten().all(|&w| w == full || w == full / 2 || w == full / 4));
+    }
+
+    #[test]
+    fn uniform_density_keeps_full_read_width() {
+        let (map, mut prof) = setup();
+        for layer in prof.block_density.iter_mut() {
+            for d in layer.iter_mut() {
+                *d = 0.25;
+            }
+        }
+        let plan = VARAWARE.allocate(&map, &prof, map.min_arrays() * 2).unwrap();
+        assert!(plan.read_rows.is_none(), "uniform density must not derate");
+    }
+}

@@ -201,6 +201,38 @@ fn set_oversub(scenarios: &mut [pipeline::Scenario], args: &Args) -> cimfab::Res
     Ok(())
 }
 
+/// Apply `--inject-errors SEED` / `--fault-sigma S` to a batch of
+/// scenarios (sweep/util), validating once up front (the
+/// [`ScenarioBuilder`] rules: sigma finite and non-negative, and only
+/// meaningful with a seed).
+fn set_inject(scenarios: &mut [pipeline::Scenario], args: &Args) -> cimfab::Result<()> {
+    let seed = match args.get("inject-errors") {
+        Some(_) => Some(args.get_u64("inject-errors", 0).map_err(anyhow::Error::msg)?),
+        None => None,
+    };
+    let sigma = match args.get("fault-sigma") {
+        Some(_) => Some(args.get_f64("fault-sigma", 0.0).map_err(anyhow::Error::msg)?),
+        None => None,
+    };
+    if let Some(s) = sigma {
+        anyhow::ensure!(
+            seed.is_some(),
+            "--fault-sigma only applies under error injection; add --inject-errors SEED"
+        );
+        anyhow::ensure!(
+            s.is_finite() && s >= 0.0,
+            "fault sigma must be finite and non-negative, got {s}"
+        );
+    }
+    if seed.is_some() {
+        for sc in scenarios {
+            sc.inject_seed = seed;
+            sc.fault_sigma = sigma;
+        }
+    }
+    Ok(())
+}
+
 /// `cimfab util capacity [NET] --hw NAME`: how big is the net, does it
 /// fit the chip, and how many PEs does each oversubscription ratio need?
 fn capacity_report(args: &Args) -> cimfab::Result<()> {
@@ -358,6 +390,14 @@ fn run_cmd(args: &Args) -> cimfab::Result<()> {
                 builder =
                     builder.oversub(args.get_f64("oversub", 1.0).map_err(anyhow::Error::msg)?);
             }
+            if args.get("inject-errors").is_some() {
+                builder = builder
+                    .inject_errors(args.get_u64("inject-errors", 0).map_err(anyhow::Error::msg)?);
+            }
+            if args.get("fault-sigma").is_some() {
+                builder = builder
+                    .fault_sigma(args.get_f64("fault-sigma", 0.0).map_err(anyhow::Error::msg)?);
+            }
             let sc = builder.build()?;
             let out = pipeline::run_scenario(&prep.view(), &sc, dumper.as_ref())?;
             if args.has_flag("verbose") {
@@ -380,6 +420,18 @@ fn run_cmd(args: &Args) -> cimfab::Result<()> {
                     out.result.reloads,
                     cimfab::util::table::fmt_int(out.result.reload_cells),
                     cimfab::util::table::fmt_int(out.result.reload_stall_cycles)
+                );
+            }
+            if let Some(e) = &out.result.errors {
+                println!(
+                    "injected errors: {} flipped codes over {} ADC reads \
+                     (BER {:.3e}, worst block L{}[{}] at {:.3e})",
+                    cimfab::util::table::fmt_int(e.flipped),
+                    cimfab::util::table::fmt_int(e.reads),
+                    e.ber,
+                    e.worst_layer,
+                    e.worst_block,
+                    e.worst_ber
                 );
             }
             Ok(())
@@ -407,6 +459,7 @@ fn run_cmd(args: &Args) -> cimfab::Result<()> {
             );
             set_engine(&mut scenarios, args)?;
             set_oversub(&mut scenarios, args)?;
+            set_inject(&mut scenarios, args)?;
 
             let t0 = Instant::now();
             let outcomes = run_scenarios_prepared(&prep, &scenarios, &cfg)?;
@@ -436,6 +489,17 @@ fn run_cmd(args: &Args) -> cimfab::Result<()> {
                     .collect();
                 println!("== weight-pool reloads ==");
                 report::print_table(&report::reload_summary(&rows))?;
+            }
+            if outcomes.iter().any(|o| o.result.errors.is_some()) {
+                let rows: Vec<(String, cimfab::sim::SimResult)> = outcomes
+                    .iter()
+                    .filter(|o| o.result.errors.is_some())
+                    .map(|o| {
+                        (format!("{}@{}", o.scenario.alloc, o.scenario.pes), o.result.clone())
+                    })
+                    .collect();
+                println!("== injected errors ==");
+                report::print_table(&report::error_summary(&rows))?;
             }
 
             // Pin the parallel schedule against a serial reference run and
@@ -493,6 +557,7 @@ fn run_cmd(args: &Args) -> cimfab::Result<()> {
                 pipeline::scenarios_for(&opts.prefix_spec(), &[pes], &algs, opts.sim_images);
             set_engine(&mut scenarios, args)?;
             set_oversub(&mut scenarios, args)?;
+            set_inject(&mut scenarios, args)?;
             let outcomes = run_scenarios_prepared(&prep, &scenarios, &cfg)?;
             let results: Vec<(String, cimfab::sim::SimResult)> = outcomes
                 .iter()
@@ -512,6 +577,10 @@ fn run_cmd(args: &Args) -> cimfab::Result<()> {
             if results.iter().any(|(_, r)| r.reloads > 0) {
                 println!("== weight-pool reloads ==");
                 report::print_table(&report::reload_summary(&results))?;
+            }
+            if results.iter().any(|(_, r)| r.errors.is_some()) {
+                println!("== injected errors ==");
+                report::print_table(&report::error_summary(&results))?;
             }
             Ok(())
         }
@@ -800,6 +869,15 @@ Common options:
                            undersized R× and `--alloc pooled` time-
                            multiplexes weight pools onto it with explicit
                            reprogramming; other strategies reject R > 1
+  --inject-errors SEED     seeded Monte Carlo read-error injection
+                           (simulate/sweep/util): sample §III-A per-read
+                           deviations, count flipped ADC codes, report
+                           BER per scenario; off by default — fault-free
+                           runs are byte-identical with or without the
+                           feature built
+  --fault-sigma S          per-cell conductance deviation for injection
+                           (default: the hardware profile's device
+                           variance; requires --inject-errors)
   --dataflow NAME          dataflow model override (simulate only)
   --engine event|stepped   simulation engine (default event; stepped is
                            the bit-identical cycle-walking reference —

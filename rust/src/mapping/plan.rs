@@ -18,6 +18,13 @@ pub struct AllocationPlan {
     /// chip (the `pooled` strategy). `None` — the historical case — means
     /// every block is programmed once and stays resident.
     pub pools: Option<PoolSchedule>,
+    /// Per-block word-line read width override: `read_rows[layer][row]`
+    /// rows are driven per ADC batch instead of the array's full
+    /// `adc_rows()`. `None` — the historical case — keeps every block at
+    /// the profile's derived width. The `varaware` strategy derates
+    /// high-ones-density blocks (fewer rows per read ⇒ more batches ⇒
+    /// more cycles, but a lower per-read error rate under injection).
+    pub read_rows: Option<Vec<Vec<usize>>>,
 }
 
 /// One resident set in a time-multiplexed (oversubscribed) plan: a
@@ -77,6 +84,7 @@ impl AllocationPlan {
             algorithm: "minimal".into(),
             duplicates: map.grids.iter().map(|g| vec![1; g.blocks_per_copy]).collect(),
             pools: None,
+            read_rows: None,
         }
     }
 
@@ -126,6 +134,32 @@ impl AllocationPlan {
         let used = self.arrays_used(map);
         if used > budget_arrays {
             return Err(format!("plan uses {used} arrays > budget {budget_arrays}"));
+        }
+        if let Some(rr) = &self.read_rows {
+            if rr.len() != map.grids.len() {
+                return Err(format!(
+                    "read-rows override covers {} layers, map has {}",
+                    rr.len(),
+                    map.grids.len()
+                ));
+            }
+            let full = map.array.adc_rows();
+            for (l, (widths, g)) in rr.iter().zip(&map.grids).enumerate() {
+                if widths.len() != g.blocks_per_copy {
+                    return Err(format!(
+                        "layer {l} read-rows override has {} blocks, grid has {}",
+                        widths.len(),
+                        g.blocks_per_copy
+                    ));
+                }
+                for (r, &w) in widths.iter().enumerate() {
+                    if w == 0 || w > full || !w.is_power_of_two() {
+                        return Err(format!(
+                            "block ({l},{r}) read width {w} is not a power of two in 1..={full}"
+                        ));
+                    }
+                }
+            }
         }
         if let Some(ps) = &self.pools {
             let mut next = 0usize;
@@ -243,6 +277,28 @@ mod tests {
         assert_eq!(plan.pools.as_ref().unwrap().reload_cells(), 16384);
         // a gap in the layer coverage is rejected
         plan.pools.as_mut().unwrap().pools[1].first_layer = nl / 2 + 2;
+        assert!(plan.validate(&map, map.min_arrays()).is_err());
+    }
+
+    #[test]
+    fn read_rows_override_is_validated() {
+        let map = rn18_map();
+        let mut plan = AllocationPlan::minimal(&map);
+        let full = map.array.adc_rows();
+        plan.read_rows =
+            Some(map.grids.iter().map(|g| vec![full; g.blocks_per_copy]).collect());
+        plan.validate(&map, map.min_arrays()).unwrap();
+        // a derated power-of-two width is fine
+        plan.read_rows.as_mut().unwrap()[2][0] = full / 2;
+        plan.validate(&map, map.min_arrays()).unwrap();
+        // zero, non-power-of-two, and wider-than-the-ADC widths are not
+        for bad in [0usize, 3, full * 2] {
+            plan.read_rows.as_mut().unwrap()[2][0] = bad;
+            assert!(plan.validate(&map, map.min_arrays()).is_err(), "width {bad} accepted");
+        }
+        plan.read_rows.as_mut().unwrap()[2][0] = full;
+        // a layer-count mismatch is rejected
+        plan.read_rows.as_mut().unwrap().pop();
         assert!(plan.validate(&map, map.min_arrays()).is_err());
     }
 

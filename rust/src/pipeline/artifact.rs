@@ -147,8 +147,9 @@ pub fn profile_json(p: &NetworkProfile) -> Json {
 }
 
 /// Stage `Allocate`: the duplicate counts the algorithm granted. The
-/// reprogramming schedule (`pools`) appears only when the plan carries
-/// one, so non-pooled plan artifacts keep their historical bytes.
+/// reprogramming schedule (`pools`) and derated read widths
+/// (`read_rows`) appear only when the plan carries them, so ordinary
+/// plan artifacts keep their historical bytes.
 pub fn plan_json(plan: &AllocationPlan, map: &NetworkMap) -> Json {
     let mut pairs = vec![
         ("algorithm", Json::str(&plan.algorithm)),
@@ -158,6 +159,9 @@ pub fn plan_json(plan: &AllocationPlan, map: &NetworkMap) -> Json {
             Json::arr(plan.duplicates.iter().map(|d| usize_arr(d))),
         ),
     ];
+    if let Some(rr) = &plan.read_rows {
+        pairs.push(("read_rows", Json::arr(rr.iter().map(|l| usize_arr(l)))));
+    }
     if let Some(ps) = &plan.pools {
         pairs.push((
             "pools",
@@ -197,8 +201,9 @@ pub fn placement_json(p: &Placement) -> Json {
 }
 
 /// Stage `Simulate`: the full simulation result. Reload keys appear
-/// only when the run actually swapped pools (historical artifacts are
-/// byte-identical when the oversubscription axis is off).
+/// only when the run actually swapped pools, and the `errors` object
+/// only under `--inject-errors` (historical artifacts are
+/// byte-identical when both axes are off).
 pub fn sim_result_json(r: &SimResult) -> Json {
     let mut pairs = vec![
         ("makespan", Json::num(r.makespan)),
@@ -222,6 +227,19 @@ pub fn sim_result_json(r: &SimResult) -> Json {
         pairs.push(("reloads", Json::num(r.reloads)));
         pairs.push(("reload_cells", Json::num(r.reload_cells)));
         pairs.push(("reload_stall_cycles", Json::num(r.reload_stall_cycles)));
+    }
+    if let Some(e) = &r.errors {
+        pairs.push((
+            "errors",
+            Json::obj(vec![
+                ("reads", Json::num(e.reads)),
+                ("flipped", Json::num(e.flipped)),
+                ("ber", Json::num(e.ber)),
+                ("worst_layer", Json::num(e.worst_layer)),
+                ("worst_block", Json::num(e.worst_block)),
+                ("worst_ber", Json::num(e.worst_ber)),
+            ]),
+        ));
     }
     Json::obj(pairs)
 }

@@ -51,6 +51,8 @@ pub struct ScenarioBuilder {
     pes: Option<usize>,
     sim_images: usize,
     oversub: f64,
+    inject_seed: Option<u64>,
+    fault_sigma: Option<f64>,
     cache_dir: Option<String>,
 }
 
@@ -70,6 +72,8 @@ impl Default for ScenarioBuilder {
             pes: None,
             sim_images: 8,
             oversub: 1.0,
+            inject_seed: None,
+            fault_sigma: None,
             cache_dir: None,
         }
     }
@@ -181,6 +185,23 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Seeded Monte Carlo error injection (`--inject-errors SEED`):
+    /// sample per-read conductance deviations during simulation and
+    /// report [`crate::sim::ErrorStats`]. Off by default — the
+    /// fault-free path stays byte-identical.
+    pub fn inject_errors(mut self, seed: u64) -> Self {
+        self.inject_seed = Some(seed);
+        self
+    }
+
+    /// Pin the per-cell deviation σ for injection (`--fault-sigma S`);
+    /// without it the hardware profile's device variance is used.
+    /// Requires [`Self::inject_errors`].
+    pub fn fault_sigma(mut self, sigma: f64) -> Self {
+        self.fault_sigma = Some(sigma);
+        self
+    }
+
     /// Cache prepared prefixes content-addressed under this directory
     /// (`--cache-dir`); [`Self::prepare`] then reuses entries across
     /// runs. Off by default.
@@ -278,6 +299,16 @@ impl ScenarioBuilder {
             "oversubscription ratio must be finite and positive, got {}",
             self.oversub
         );
+        if let Some(sigma) = self.fault_sigma {
+            anyhow::ensure!(
+                self.inject_seed.is_some(),
+                "--fault-sigma only applies under error injection; add --inject-errors SEED"
+            );
+            anyhow::ensure!(
+                sigma.is_finite() && sigma >= 0.0,
+                "fault sigma must be finite and non-negative, got {sigma}"
+            );
+        }
         Ok(Scenario {
             prefix,
             alloc: allocator.name().to_string(),
@@ -286,6 +317,8 @@ impl ScenarioBuilder {
             pes,
             sim_images: self.sim_images,
             oversub: self.oversub,
+            inject_seed: self.inject_seed,
+            fault_sigma: self.fault_sigma,
         })
     }
 }
@@ -365,6 +398,27 @@ mod tests {
         for bad in [0.0, -2.0, f64::NAN, f64::INFINITY] {
             let err = valid().oversub(bad).build().unwrap_err().to_string();
             assert!(err.contains("oversubscription"), "{err}");
+        }
+    }
+
+    #[test]
+    fn error_injection_validates_and_defaults_off() {
+        let sc = valid().build().unwrap();
+        assert_eq!(sc.inject_seed, None);
+        assert_eq!(sc.fault_sigma, None);
+        let sc = valid().inject_errors(7).build().unwrap();
+        assert_eq!(sc.inject_seed, Some(7));
+        assert_eq!(sc.id(), "block-wise_pes172_img8_err7");
+        let sc = valid().inject_errors(7).fault_sigma(0.05).build().unwrap();
+        assert_eq!(sc.fault_sigma, Some(0.05));
+        assert_eq!(sc.id(), "block-wise_pes172_img8_err7_fs0.05");
+        // sigma without a seed is a config error, as are bad sigmas
+        let err = valid().fault_sigma(0.05).build().unwrap_err().to_string();
+        assert!(err.contains("--inject-errors"), "{err}");
+        for bad in [-0.1, f64::NAN, f64::INFINITY] {
+            let err =
+                valid().inject_errors(7).fault_sigma(bad).build().unwrap_err().to_string();
+            assert!(err.contains("fault sigma"), "{err}");
         }
     }
 

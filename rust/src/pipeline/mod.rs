@@ -142,6 +142,12 @@ impl ScenarioOutcome {
             pairs.push(("reload_cells", Json::num(self.result.reload_cells)));
             pairs.push(("reload_stall_cycles", Json::num(self.result.reload_stall_cycles)));
         }
+        if let Some(e) = &self.result.errors {
+            pairs.push(("error_reads", Json::num(e.reads)));
+            pairs.push(("error_flipped", Json::num(e.flipped)));
+            pairs.push(("error_ber", Json::num(e.ber)));
+            pairs.push(("worst_block_ber", Json::num(e.worst_ber)));
+        }
         Json::obj(pairs)
     }
 }
@@ -447,9 +453,15 @@ pub fn run_scenario(
     }
 
     // Simulate
-    let cfg = crate::sim::SimCfg::for_strategy(allocator, flow, sc.sim_images)
+    let mut cfg = crate::sim::SimCfg::for_strategy(allocator, flow, sc.sim_images)
         .with_engine(engine)
         .with_write_latency(prep.hw.device.write_latency_ns());
+    if let Some(seed) = sc.inject_seed {
+        // the profile's device variance is the natural σ; --fault-sigma
+        // pins a what-if value without switching hardware profiles
+        let sigma = sc.fault_sigma.unwrap_or_else(|| prep.hw.device.variance());
+        cfg = cfg.with_inject(crate::sim::FaultCfg { seed, sigma });
+    }
     let chip = logical;
     let result = reg
         .timer("stage.simulate")

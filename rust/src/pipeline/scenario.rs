@@ -153,6 +153,15 @@ pub struct Scenario {
     /// smaller than the plan and the allocator must emit a reprogramming
     /// schedule (the `pooled` strategy).
     pub oversub: f64,
+    /// Monte Carlo error-injection seed (`--inject-errors SEED`).
+    /// `None` — the historical case — leaves ids and artifacts
+    /// untouched; `Some` makes [`crate::sim::simulate`] sample per-read
+    /// deviations and report [`crate::sim::ErrorStats`].
+    pub inject_seed: Option<u64>,
+    /// Per-cell conductance deviation σ for injection (`--fault-sigma`).
+    /// `None` defers to the hardware profile's device variance; only
+    /// meaningful alongside `inject_seed`.
+    pub fault_sigma: Option<f64>,
 }
 
 impl Scenario {
@@ -177,12 +186,18 @@ impl Scenario {
         if self.oversub != 1.0 {
             id.push_str(&format!("_ov{}", self.oversub));
         }
+        if let Some(seed) = self.inject_seed {
+            id.push_str(&format!("_err{seed}"));
+            if let Some(sigma) = self.fault_sigma {
+                id.push_str(&format!("_fs{sigma}"));
+            }
+        }
         id
     }
 
     /// Deterministic JSON form (part of every scenario-stage artifact).
-    /// `oversub` appears only when the axis is on, so historical
-    /// artifacts are byte-identical.
+    /// `oversub` and the injection pair appear only when their axes are
+    /// on, so historical artifacts are byte-identical.
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("prefix", self.prefix.to_json()),
@@ -194,6 +209,12 @@ impl Scenario {
         ];
         if self.oversub != 1.0 {
             pairs.push(("oversub", Json::num(self.oversub)));
+        }
+        if let Some(seed) = self.inject_seed {
+            pairs.push(("inject_seed", Json::num(seed)));
+        }
+        if let Some(sigma) = self.fault_sigma {
+            pairs.push(("fault_sigma", Json::num(sigma)));
         }
         Json::obj(pairs)
     }
@@ -237,6 +258,8 @@ pub fn scenarios_for(
                 pes,
                 sim_images,
                 oversub: 1.0,
+                inject_seed: None,
+                fault_sigma: None,
             });
         }
     }
@@ -277,6 +300,8 @@ mod tests {
             pes: 172,
             sim_images: 8,
             oversub: 1.0,
+            inject_seed: None,
+            fault_sigma: None,
         }
     }
 
@@ -315,6 +340,21 @@ mod tests {
         sc.oversub = 2.5;
         assert_eq!(sc.id(), "pooled_pes172_img8_ov2.5");
         assert_eq!(sc.to_json().get("oversub").as_f64(), Some(2.5));
+    }
+
+    #[test]
+    fn error_injection_shows_up_in_the_id_only_when_on() {
+        let mut sc = scenario("block-wise", "block-wise");
+        assert_eq!(sc.id(), "block-wise_pes172_img8"); // off keeps historical form
+        assert!(sc.to_json().pretty().find("inject_seed").is_none());
+        sc.inject_seed = Some(7);
+        assert_eq!(sc.id(), "block-wise_pes172_img8_err7");
+        assert_eq!(sc.to_json().get("inject_seed").as_u64(), Some(7));
+        // sigma defaults to the device model unless pinned, and the pin
+        // is part of the id
+        sc.fault_sigma = Some(0.05);
+        assert_eq!(sc.id(), "block-wise_pes172_img8_err7_fs0.05");
+        assert_eq!(sc.to_json().get("fault_sigma").as_f64(), Some(0.05));
     }
 
     #[test]

@@ -150,6 +150,28 @@ pub fn reload_summary(results: &[(String, SimResult)]) -> Table {
     t
 }
 
+/// Injected-error summary for `--inject-errors` runs: ADC reads, flipped
+/// codes, network BER, and the worst block's BER per scenario. Only
+/// rendered when at least one result carries [`crate::sim::ErrorStats`]
+/// (callers skip it otherwise, so fault-free report output is
+/// unchanged).
+pub fn error_summary(results: &[(String, SimResult)]) -> Table {
+    let mut t =
+        Table::new(["algorithm", "ADC reads", "flipped", "BER", "worst block", "worst BER"]);
+    for (alloc, r) in results {
+        let Some(e) = &r.errors else { continue };
+        t.row([
+            alloc.clone(),
+            crate::util::table::fmt_int(e.reads),
+            crate::util::table::fmt_int(e.flipped),
+            format!("{:.3e}", e.ber),
+            format!("L{}[{}]", e.worst_layer, e.worst_block),
+            format!("{:.3e}", e.worst_ber),
+        ]);
+    }
+    t
+}
+
 /// Throughput speedup summary (the paper's headline numbers), relative
 /// to the three reference strategies when present.
 pub fn speedup_summary(results: &[(String, SimResult)]) -> Table {
@@ -196,6 +218,7 @@ mod tests {
             reloads: 0,
             reload_cells: 0,
             reload_stall_cycles: 0,
+            errors: None,
         }
     }
 
@@ -259,6 +282,27 @@ mod tests {
         assert!(rendered.contains('3'), "{rendered}");
         assert!(rendered.contains("2,000,000"), "{rendered}");
         assert!(rendered.contains("25.00"), "{rendered}");
+    }
+
+    #[test]
+    fn error_summary_itemizes_flips_and_skips_fault_free_rows() {
+        let mut r = dummy_result(42.0);
+        r.errors = Some(crate::sim::ErrorStats {
+            reads: 1_000_000,
+            flipped: 420,
+            ber: 4.2e-4,
+            worst_layer: 3,
+            worst_block: 1,
+            worst_ber: 9.5e-3,
+        });
+        let rows =
+            vec![("block-wise".to_string(), r), ("fault-free".to_string(), dummy_result(1.0))];
+        let rendered = error_summary(&rows).render();
+        assert!(rendered.contains("block-wise"), "{rendered}");
+        assert!(rendered.contains("1,000,000"), "{rendered}");
+        assert!(rendered.contains("4.200e-4"), "{rendered}");
+        assert!(rendered.contains("L3[1]"), "{rendered}");
+        assert!(!rendered.contains("fault-free"), "{rendered}");
     }
 
     #[test]

@@ -108,6 +108,10 @@ pub struct ScenarioReq {
     pub images: usize,
     /// Logical/physical oversubscription ratio; default 1.0 (off).
     pub oversub: f64,
+    /// Monte Carlo error-injection seed; default absent (off).
+    pub inject_errors: Option<u64>,
+    /// Injection σ override; defaults to the device's variance.
+    pub fault_sigma: Option<f64>,
 }
 
 impl Default for ScenarioReq {
@@ -119,6 +123,8 @@ impl Default for ScenarioReq {
             pes: 0,
             images: 8,
             oversub: 1.0,
+            inject_errors: None,
+            fault_sigma: None,
         }
     }
 }
@@ -150,6 +156,12 @@ impl JobSpec {
             }
             if let Some(e) = &req.engine {
                 b = b.engine(e);
+            }
+            if let Some(seed) = req.inject_errors {
+                b = b.inject_errors(seed);
+            }
+            if let Some(sigma) = req.fault_sigma {
+                b = b.fault_sigma(sigma);
             }
             scenarios
                 .push(b.build().map_err(|e| anyhow::anyhow!("scenario {i}: {e:#}"))?);
@@ -237,6 +249,8 @@ fn parse_scenario_body(r: &mut IoJsonReader) -> Result<ScenarioReq, ServerError>
             }
             "images" => sc.images = expect_usize(r, "images")?,
             "oversub" => sc.oversub = expect_f64(r, "oversub")?,
+            "inject_errors" => sc.inject_errors = Some(expect_u64(r, "inject_errors")?),
+            "fault_sigma" => sc.fault_sigma = Some(expect_f64(r, "fault_sigma")?),
             other => return Err(protocol(format!("unknown scenario field '{other}'"))),
         }
     }
@@ -490,6 +504,30 @@ mod tests {
         };
         let err = format!("{:#}", bad.build().unwrap_err());
         assert!(err.contains("oversubscription"), "{err}");
+    }
+
+    #[test]
+    fn error_injection_rides_the_scenario_and_validates() {
+        let Request::Submit(spec) = parse_request(
+            br#"{"op":"submit","net":"resnet18","res":32,
+                "scenarios":[{"pes":86,"inject_errors":7,"fault_sigma":0.05}]}"#,
+        )
+        .unwrap() else {
+            panic!("expected submit")
+        };
+        assert_eq!(spec.scenarios[0].inject_errors, Some(7));
+        assert_eq!(spec.scenarios[0].fault_sigma, Some(0.05));
+        let (_, scenarios) = spec.build().unwrap();
+        assert!(scenarios[0].id().ends_with("_err7_fs0.05"), "{}", scenarios[0].id());
+        // sigma without a seed is rejected by the builder
+        let Request::Submit(bad) = parse_request(
+            br#"{"op":"submit","net":"resnet18","scenarios":[{"pes":86,"fault_sigma":0.05}]}"#,
+        )
+        .unwrap() else {
+            panic!("expected submit")
+        };
+        let err = format!("{:#}", bad.build().unwrap_err());
+        assert!(err.contains("--inject-errors"), "{err}");
     }
 
     #[test]

@@ -143,7 +143,12 @@ mod tests {
 
     fn stage_time(dataflow: &'static dyn DataflowModel, dups: Vec<usize>) -> (u64, Vec<u64>) {
         let (_, map, trace, chip) = setup();
-        let plan = AllocationPlan { algorithm: "test".into(), duplicates: vec![dups], pools: None };
+        let plan = AllocationPlan {
+            algorithm: "test".into(),
+            duplicates: vec![dups],
+            pools: None,
+            read_rows: None,
+        };
         let placement = place(&map, &plan, &chip).unwrap();
         let mut mesh = Mesh::new(&chip);
         let n: usize = plan.duplicates[0].iter().sum();
@@ -155,6 +160,7 @@ mod tests {
             images: 1,
             warmup: 0,
             write_latency_ns: 100.0,
+            inject: None,
         };
         let t = simulate_stage(
             &chip, &map, &plan, &placement, &mut mesh, &trace.images[0].layers[0], 0, cfg,
@@ -207,7 +213,12 @@ mod tests {
     #[test]
     fn baseline_mode_is_deterministic_and_slower() {
         let (_, map, trace, chip) = setup();
-        let plan = AllocationPlan { algorithm: "t".into(), duplicates: vec![vec![1; 5]], pools: None };
+        let plan = AllocationPlan {
+            algorithm: "t".into(),
+            duplicates: vec![vec![1; 5]],
+            pools: None,
+            read_rows: None,
+        };
         let placement = place(&map, &plan, &chip).unwrap();
         let mut mesh = Mesh::new(&chip);
         let mut busy = vec![0u64; 5];
@@ -221,6 +232,7 @@ mod tests {
                 images: 1,
                 warmup: 0,
                 write_latency_ns: 100.0,
+                inject: None,
             },
             &mut busy,
         );
@@ -235,6 +247,7 @@ mod tests {
                 images: 1,
                 warmup: 0,
                 write_latency_ns: 100.0,
+                inject: None,
             },
             &mut busy2,
         );

@@ -529,7 +529,12 @@ mod tests {
         mode: ReadMode,
     ) -> (u64, Vec<u64>, crate::noc::NocStats) {
         let (map, trace, chip) = setup();
-        let plan = AllocationPlan { algorithm: "test".into(), duplicates: vec![dups], pools: None };
+        let plan = AllocationPlan {
+            algorithm: "test".into(),
+            duplicates: vec![dups],
+            pools: None,
+            read_rows: None,
+        };
         let placement = place(&map, &plan, &chip).unwrap();
         let mut mesh = Mesh::new(&chip);
         let n: usize = plan.duplicates[0].iter().sum();
@@ -604,7 +609,12 @@ mod tests {
         let acts = vec![vec![crate::tensor::Tensor::zeros(&[4, 4, 4])]];
         let trace = trace_from_activations(&g, &map, &acts);
         let chip = ChipCfg::paper(2);
-        let plan = AllocationPlan { algorithm: "t".into(), duplicates: vec![vec![2]], pools: None };
+        let plan = AllocationPlan {
+            algorithm: "t".into(),
+            duplicates: vec![vec![2]],
+            pools: None,
+            read_rows: None,
+        };
         let placement = place(&map, &plan, &chip).unwrap();
         for engine in engines() {
             let mut mesh = Mesh::new(&chip);

@@ -30,6 +30,7 @@ use crate::config::ChipCfg;
 use crate::mapping::{AllocationPlan, NetworkMap, Placement};
 use crate::noc::{Mesh, NocStats};
 use crate::stats::{LayerTrace, NetTrace};
+use crate::util::prng::Prng;
 use crate::xbar::ReadMode;
 
 /// Everything a dataflow reads about the machine and the plan while
@@ -116,6 +117,40 @@ pub trait DataflowModel: Send + Sync {
     ) -> u64;
 }
 
+/// Seeded §III-A fault-injection parameters ([`SimCfg::inject`]).
+///
+/// Determinism contract: every block derives its own PRNG stream from
+/// `seed` alone (`Prng::new(seed).fork(block id)`), and the conversion
+/// counts come from the trace arithmetic both engines share — so event,
+/// stepped, and every parallel-sweep thread report bit-identical
+/// [`ErrorStats`] for a given `(seed, sigma)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultCfg {
+    /// Base PRNG seed (`--inject-errors SEED`).
+    pub seed: u64,
+    /// Relative per-cell on-current deviation — the device's variance
+    /// unless `--fault-sigma` overrides it. `0.0` injects nothing.
+    pub sigma: f64,
+}
+
+/// Injected-error telemetry ([`SimResult::errors`]) — present only when
+/// [`SimCfg::inject`] is set, so historical artifacts stay byte-identical.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ErrorStats {
+    /// ADC conversions performed across the run.
+    pub reads: u64,
+    /// Conversions whose code flipped under the fault model.
+    pub flipped: u64,
+    /// Whole-run bit-error rate (`flipped / reads`).
+    pub ber: f64,
+    /// Layer index of the worst block by per-block BER.
+    pub worst_layer: usize,
+    /// Block row (within its layer) of the worst block.
+    pub worst_block: usize,
+    /// That block's BER.
+    pub worst_ber: f64,
+}
+
 /// Simulation parameters.
 #[derive(Clone, Copy)]
 pub struct SimCfg {
@@ -137,6 +172,9 @@ pub struct SimCfg {
     /// reprogram arrays mid-run. Irrelevant — never read — for plans
     /// without pools.
     pub write_latency_ns: f64,
+    /// Seeded §III-A error injection. `None` — the historical default —
+    /// leaves every read ideal and [`SimResult::errors`] empty.
+    pub inject: Option<FaultCfg>,
 }
 
 impl std::fmt::Debug for SimCfg {
@@ -148,6 +186,7 @@ impl std::fmt::Debug for SimCfg {
             .field("images", &self.images)
             .field("warmup", &self.warmup)
             .field("write_latency_ns", &self.write_latency_ns)
+            .field("inject", &self.inject)
             .finish()
     }
 }
@@ -169,6 +208,7 @@ impl SimCfg {
             images,
             warmup: (images / 4).min(2),
             write_latency_ns: 100.0,
+            inject: None,
         }
     }
 
@@ -192,6 +232,14 @@ impl SimCfg {
     /// [`crate::hw::DeviceModel`]).
     pub fn with_write_latency(mut self, ns: f64) -> SimCfg {
         self.write_latency_ns = ns;
+        self
+    }
+
+    /// The same configuration with seeded §III-A error injection on
+    /// (the pipeline builds the [`FaultCfg`] from `--inject-errors` and
+    /// the device's variance or `--fault-sigma`).
+    pub fn with_inject(mut self, fault: FaultCfg) -> SimCfg {
+        self.inject = Some(fault);
         self
     }
 }
@@ -223,12 +271,137 @@ pub struct SimResult {
     /// Cycles the pipeline stalled on reprogramming that could not be
     /// hidden behind compute on still-resident blocks.
     pub reload_stall_cycles: u64,
+    /// Injected-error telemetry — `Some` iff [`SimCfg::inject`] was set.
+    pub errors: Option<ErrorStats>,
 }
 
 impl SimResult {
     /// Speedup of `self` over `other` in throughput.
     pub fn speedup_over(&self, other: &SimResult) -> f64 {
         self.throughput_ips / other.throughput_ips
+    }
+}
+
+/// Exact `Binomial(n, p)` sample in `O(successes)`: geometric gaps
+/// between successes via inversion (`⌊ln(1−u)/ln(1−p)⌋` failures per
+/// gap), so sampling millions of near-certain non-flips costs nothing.
+fn binomial_flips(rng: &mut Prng, n: u64, p: f64) -> u64 {
+    if n == 0 || p <= 0.0 {
+        return 0;
+    }
+    if p >= 1.0 {
+        return n;
+    }
+    let log_q = (1.0 - p).ln();
+    let mut flips = 0u64;
+    let mut idx = 0u64;
+    loop {
+        // failures before the next success; the f64→u64 cast saturates,
+        // which is exactly the "past the end" case
+        let gap = ((1.0 - rng.f64()).ln() / log_q).floor();
+        let gap = if gap >= n as f64 { n } else { gap as u64 };
+        idx = idx.saturating_add(gap);
+        if idx >= n {
+            return flips;
+        }
+        flips += 1;
+        idx += 1;
+    }
+}
+
+/// Clone `trace` with a variance-aware plan's derated read widths
+/// applied: block (l, r) at width `w < adc_rows` reads each full-width
+/// word-line batch in `adc_rows/w` sub-reads, so its zero-skip and
+/// baseline durations scale by that exact integer factor.
+fn derate_trace(trace: &NetTrace, read_rows: &[Vec<usize>], full: usize) -> NetTrace {
+    let mut t = trace.clone();
+    for it in &mut t.images {
+        for (lt, widths) in it.layers.iter_mut().zip(read_rows) {
+            for (r, &w) in widths.iter().enumerate() {
+                if w >= full {
+                    continue;
+                }
+                let f = (full / w) as u32;
+                for p in 0..lt.positions {
+                    lt.zs[p * lt.blocks + r] *= f;
+                }
+                lt.baseline[r] *= f;
+            }
+        }
+    }
+    t
+}
+
+/// Engine-independent error accounting for [`SimCfg::inject`]: count
+/// the ADC conversions every block performs over the run (one per
+/// physical column per word-line batch — the batch counts come from
+/// the same trace arithmetic both engines execute) and sample its
+/// flipped codes from `Binomial(N, read_error_rate(k, sigma))` with
+/// `k` the block's read width, on a per-block PRNG stream forked from
+/// the seed. Duplicates split a block's work without changing its
+/// total conversions, so the tally is placement- and plan-duplicate-
+/// independent; event, stepped, and every sweep thread report
+/// identical [`ErrorStats`].
+fn inject_error_stats(
+    map: &NetworkMap,
+    plan: &AllocationPlan,
+    trace: &NetTrace,
+    cfg: &SimCfg,
+    fault: FaultCfg,
+) -> ErrorStats {
+    let full = map.array.adc_rows();
+    let col_mux = map.array.col_mux as u64;
+    let cols = map.array.cols as u64;
+    let nt = trace.images.len();
+    let mut reads = 0u64;
+    let mut flipped = 0u64;
+    let (mut worst_layer, mut worst_block, mut worst_ber) = (0usize, 0usize, 0.0f64);
+    for (l, g) in map.grids.iter().enumerate() {
+        for r in 0..g.blocks_per_copy {
+            let width = plan.read_rows.as_ref().map_or(full, |rr| rr[l][r]);
+            // word-line batches this block runs across all simulated
+            // images (zs/baseline are batches × col_mux by construction,
+            // so the division is exact)
+            let mut batches = 0u64;
+            for (ti, it) in trace.images.iter().enumerate() {
+                let uses = (cfg.images / nt + usize::from(ti < cfg.images % nt)) as u64;
+                if uses == 0 {
+                    continue;
+                }
+                let lt = &it.layers[l];
+                let per_image = match cfg.mode {
+                    ReadMode::ZeroSkip => {
+                        (0..lt.positions).map(|p| lt.zs_at(p, r) as u64).sum::<u64>() / col_mux
+                    }
+                    ReadMode::Baseline => {
+                        lt.positions as u64 * (lt.baseline[r] as u64 / col_mux)
+                    }
+                };
+                batches += uses * per_image;
+            }
+            let n = batches * cols * g.arrays_per_block as u64;
+            let p = crate::xbar::variance::read_error_rate(width, fault.sigma);
+            let mut rng = Prng::new(fault.seed).fork(((l as u64) << 20) | r as u64);
+            let f = binomial_flips(&mut rng, n, p);
+            reads += n;
+            flipped += f;
+            if n > 0 {
+                let ber = f as f64 / n as f64;
+                if ber > worst_ber {
+                    worst_ber = ber;
+                    worst_layer = l;
+                    worst_block = r;
+                }
+            }
+        }
+    }
+    ErrorStats {
+        reads,
+        flipped,
+        ber: flipped as f64 / reads.max(1) as f64,
+        worst_layer,
+        worst_block,
+        worst_ber,
     }
 }
 
@@ -243,6 +416,20 @@ pub fn simulate(
 ) -> SimResult {
     assert!(cfg.images >= 1);
     assert!(!trace.images.is_empty());
+    // Variance-aware plans derate some blocks' read widths, scaling
+    // their trace durations; plans without overrides (the historical
+    // path) keep the borrowed trace untouched, byte-for-byte.
+    let derated;
+    let trace = match plan.read_rows.as_ref().filter(|rr| {
+        let full = map.array.adc_rows();
+        rr.iter().any(|l| l.iter().any(|&w| w < full))
+    }) {
+        None => trace,
+        Some(rr) => {
+            derated = derate_trace(trace, rr, map.array.adc_rows());
+            &derated
+        }
+    };
     let nl = map.grids.len();
     let mut mesh = Mesh::new(chip);
 
@@ -351,6 +538,10 @@ pub fn simulate(
         block_util[l] = per_block;
     }
 
+    // 5. seeded error injection — engine- and thread-independent, so it
+    //    never perturbs the parity guarantees above
+    let errors = cfg.inject.map(|f| inject_error_stats(map, plan, trace, &cfg, f));
+
     SimResult {
         makespan,
         images: cfg.images,
@@ -365,6 +556,7 @@ pub fn simulate(
         reloads,
         reload_cells,
         reload_stall_cycles,
+        errors,
     }
 }
 
@@ -472,6 +664,7 @@ mod tests {
                 images: 8,
                 warmup: 2,
                 write_latency_ns: 100.0,
+                inject: None,
             },
         );
         assert!(r.layer_util[0] > 0.5, "util {}", r.layer_util[0]);
@@ -510,6 +703,91 @@ mod tests {
         );
         assert_eq!(r.makespan, r2.makespan);
         assert_eq!(r.reload_stall_cycles, r2.reload_stall_cycles);
+    }
+
+    #[test]
+    fn injected_errors_are_engine_and_seed_deterministic() {
+        let g = resnet18(32, 10);
+        let map = map_network(&g, ArrayCfg::paper(), false);
+        let acts = synth_activations(&g, &map, 2, 17, SynthCfg::default());
+        let trace = trace_from_activations(&g, &map, &acts);
+        let prof = NetworkProfile::from_trace(&map, &trace);
+        let chip = ChipCfg::paper(172);
+        let a = StrategyRegistry::lookup_allocator("block-wise").unwrap();
+        let plan = a.allocate(&map, &prof, chip.total_arrays()).unwrap();
+        let placement = place(&map, &plan, &chip).unwrap();
+        let base = SimCfg::for_strategy_name("block-wise", 4).unwrap();
+
+        // injection off ⇒ no record (the historical result shape)
+        assert!(simulate(&chip, &map, &plan, &placement, &trace, base).errors.is_none());
+
+        let cfg = base.with_inject(FaultCfg { seed: 7, sigma: 0.05 });
+        let r1 = simulate(&chip, &map, &plan, &placement, &trace, cfg);
+        let e1 = r1.errors.clone().expect("injection on must record stats");
+        assert!(e1.reads > 0 && e1.flipped > 0, "{e1:?}");
+        assert!(e1.worst_ber >= e1.ber, "{e1:?}");
+
+        // bit-identical across engines and across replays
+        let r2 = simulate(
+            &chip,
+            &map,
+            &plan,
+            &placement,
+            &trace,
+            cfg.with_engine(&engine::STEPPED),
+        );
+        assert_eq!(r2.errors.as_ref(), Some(&e1));
+        let r3 = simulate(&chip, &map, &plan, &placement, &trace, cfg);
+        assert_eq!(r3.errors.as_ref(), Some(&e1));
+
+        // a stronger sigma flips far more codes
+        let heavy = base.with_inject(FaultCfg { seed: 8, sigma: 0.3 });
+        let e4 = simulate(&chip, &map, &plan, &placement, &trace, heavy).errors.unwrap();
+        assert!(e4.flipped > e1.flipped * 10, "{} vs {}", e4.flipped, e1.flipped);
+
+        // sigma = 0 records zero flips over the same read count
+        let zero = base.with_inject(FaultCfg { seed: 7, sigma: 0.0 });
+        let e5 = simulate(&chip, &map, &plan, &placement, &trace, zero).errors.unwrap();
+        assert_eq!(e5.reads, e1.reads);
+        assert_eq!(e5.flipped, 0);
+        assert_eq!(e5.ber, 0.0);
+    }
+
+    #[test]
+    fn derated_read_widths_cost_cycles_and_cut_ber() {
+        // varaware on a skewed density profile: derated blocks make the
+        // run slower but strictly cut the measured BER vs block-wise at
+        // the same seed/sigma.
+        let g = resnet18(32, 10);
+        let map = map_network(&g, ArrayCfg::paper(), false);
+        let acts = synth_activations(&g, &map, 2, 17, SynthCfg::default());
+        let trace = trace_from_activations(&g, &map, &acts);
+        let mut prof = NetworkProfile::from_trace(&map, &trace);
+        for layer in prof.block_density.iter_mut() {
+            for (r, d) in layer.iter_mut().enumerate() {
+                *d = if r % 2 == 0 { 0.05 } else { 0.5 };
+            }
+        }
+        let chip = ChipCfg::paper(172);
+        let fault = FaultCfg { seed: 7, sigma: 0.10 };
+        let run = |alloc: &str| {
+            let a = StrategyRegistry::lookup_allocator(alloc).unwrap();
+            let plan = a.allocate(&map, &prof, chip.total_arrays()).unwrap();
+            let placement = place(&map, &plan, &chip).unwrap();
+            let cfg = SimCfg::for_strategy_name(alloc, 4).unwrap().with_inject(fault);
+            (simulate(&chip, &map, &plan, &placement, &trace, cfg), plan)
+        };
+        let (va, va_plan) = run("varaware");
+        let (bw, _) = run("block-wise");
+        assert!(va_plan.read_rows.is_some(), "skewed profile must derate");
+        let (ea, eb) = (va.errors.unwrap(), bw.errors.unwrap());
+        assert!(ea.reads > eb.reads, "derated blocks must add sub-reads");
+        assert!(
+            ea.ber < eb.ber,
+            "varaware BER {} must beat block-wise {}",
+            ea.ber,
+            eb.ber
+        );
     }
 
     #[test]

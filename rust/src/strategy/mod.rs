@@ -11,7 +11,8 @@
 //!
 //! [`StrategyRegistry`] maps names (and aliases) to trait objects. The
 //! global registry starts with the built-ins — allocators `baseline`,
-//! `weight-based`, `perf-based`, `block-wise`, `hybrid`, `pooled`; dataflows
+//! `weight-based`, `perf-based`, `block-wise`, `hybrid`, `pooled`,
+//! `varaware`; dataflows
 //! `layer-wise`, `block-wise` — and accepts process-wide registration
 //! of new `&'static` strategies ([`StrategyRegistry::register_global`]),
 //! so a downstream crate can plug a policy in and immediately drive it
@@ -23,7 +24,7 @@
 //! [`crate::hw::ProfileRegistry`] maps names to device-model-backed
 //! hardware profiles the way this registry maps names to policies.
 
-use crate::alloc::{builtin, hybrid, pooled, Allocator};
+use crate::alloc::{builtin, hybrid, pooled, varaware, Allocator};
 use crate::sim::{dataflow, DataflowModel};
 use crate::util::cli::unknown_value_msg;
 use anyhow::Result;
@@ -61,6 +62,7 @@ impl StrategyRegistry {
             &builtin::BLOCK_WISE,
             &hybrid::HYBRID,
             &pooled::POOLED,
+            &varaware::VARAWARE,
         ] {
             reg.register_allocator(a).expect("built-in names are distinct");
         }

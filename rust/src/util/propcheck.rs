@@ -34,6 +34,26 @@ pub fn check_one<F: FnMut(&mut Prng) -> PropResult>(name: &str, case_seed: u64, 
     }
 }
 
+/// Assert a Monte Carlo `estimate` lands within `n_sigma` standard errors
+/// of an analytic `expected` value. Panics with the full numbers (estimate,
+/// expected, deviation in σ units) on violation, so a statistical test
+/// failure reports how far out it landed, not just that it did.
+///
+/// `std_err` is the standard error of the estimator (e.g. `√(p(1−p)/N)`
+/// for a Binomial proportion); it is floored at a tiny epsilon so an
+/// exactly-zero analytic corner (p = 0 ⇒ σ = 0) still admits an exactly-
+/// zero estimate instead of dividing by zero.
+pub fn check_stat(name: &str, estimate: f64, expected: f64, std_err: f64, n_sigma: f64) {
+    let se = std_err.max(1e-300);
+    let dev = (estimate - expected).abs() / se;
+    if dev > n_sigma {
+        panic!(
+            "statistic '{name}' out of bounds: estimate {estimate:.6e} vs expected \
+             {expected:.6e} is {dev:.2}σ away (limit {n_sigma}σ, std err {std_err:.3e})"
+        );
+    }
+}
+
 /// Assert helper for properties: produce `Err` with formatted message
 /// instead of panicking, so the harness can report the seed.
 #[macro_export]
@@ -75,5 +95,19 @@ mod tests {
             let _ = rng.next_u64();
             Ok(())
         });
+    }
+
+    #[test]
+    fn check_stat_accepts_estimates_inside_the_interval() {
+        // 2σ away with a 3σ limit
+        check_stat("inside", 0.52, 0.50, 0.01, 3.0);
+        // the p = 0 corner: zero estimate, zero expectation, zero std err
+        check_stat("degenerate-zero", 0.0, 0.0, 0.0, 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "statistic 'outside' out of bounds")]
+    fn check_stat_rejects_estimates_outside_the_interval() {
+        check_stat("outside", 0.56, 0.50, 0.01, 3.0);
     }
 }

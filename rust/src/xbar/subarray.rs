@@ -13,6 +13,19 @@
 use super::adc::Adc;
 use super::scheduler::{cycles_for_slice, ReadMode};
 use crate::config::ArrayCfg;
+use crate::util::prng::Prng;
+
+/// Per-call tally of a fault-injected read ([`SubArray::matvec_inject`]):
+/// how many ADC conversions were sampled and how many produced a code
+/// different from the ideal one.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct InjectTally {
+    /// ADC conversions performed (one per weight-bit plane × weight
+    /// column × word-line batch, i.e. one per physical column per batch).
+    pub conversions: u64,
+    /// Conversions whose noisy code differed from the ideal code.
+    pub flips: u64,
+}
 
 /// One programmed sub-array: `rows × weight_cols` 8-bit weights held as
 /// bit-planes, plus the read machinery.
@@ -136,6 +149,78 @@ impl SubArray {
         (psums32, cycles_for_slice(&self.cfg, mode, x))
     }
 
+    /// [`SubArray::matvec`] under the §III-A fault model: each ADC
+    /// conversion of `k` current-contributing cells samples a summed-
+    /// current deviation `N(0, sigma·√k)` from `rng` (each active cell's
+    /// on-current is `N(1, sigma)`, so `k` of them deviate together by
+    /// `sigma·√k`), rounds the noisy current through the ADC transfer
+    /// function, and shift-adds the *noisy* code into the partial sums.
+    ///
+    /// Returns `(psums, cycles, tally)`; `tally` counts every conversion
+    /// and every code that differed from the ideal one. With `sigma <= 0`
+    /// nothing is drawn from `rng` and the call is byte-identical to
+    /// [`SubArray::matvec`] (zero tally). Determinism is the caller's
+    /// contract: seed `rng` per (seed, array, read-index) — e.g. via
+    /// [`Prng::fork`] — so both engines and parallel sweeps replay the
+    /// same stream.
+    pub fn matvec_inject(
+        &self,
+        x: &[u8],
+        mode: ReadMode,
+        sigma: f64,
+        rng: &mut Prng,
+    ) -> (Vec<i32>, u32, InjectTally) {
+        if sigma <= 0.0 {
+            let (psums, cycles) = self.matvec(x, mode);
+            return (psums, cycles, InjectTally::default());
+        }
+        assert_eq!(x.len(), self.rows, "input length {} != rows {}", x.len(), self.rows);
+        let wcols = self.cfg.weight_cols();
+        let adc_rows = self.cfg.adc_rows();
+        let mut psums = vec![0i64; wcols];
+        let mut tally = InjectTally::default();
+
+        for ib in 0..self.cfg.input_bits {
+            let active: Vec<usize> = match mode {
+                ReadMode::ZeroSkip => {
+                    (0..self.rows).filter(|&r| (x[r] >> ib) & 1 == 1).collect()
+                }
+                ReadMode::Baseline => (0..self.rows).collect(),
+            };
+            for batch in active.chunks(adc_rows) {
+                for (wb, plane) in self.planes.iter().enumerate() {
+                    let sig: i64 = if wb == self.cfg.weight_bits - 1 {
+                        -(1i64 << wb)
+                    } else {
+                        1i64 << wb
+                    };
+                    for (c, psum) in psums.iter_mut().enumerate() {
+                        let mut sum = 0u32;
+                        for &r in batch {
+                            let inp = match mode {
+                                ReadMode::ZeroSkip => 1u32,
+                                ReadMode::Baseline => ((x[r] >> ib) & 1) as u32,
+                            };
+                            sum += inp * plane[r * wcols + c] as u32;
+                        }
+                        // k = sum cells drive current; their combined
+                        // deviation is N(0, sigma·√k) (zero when k = 0,
+                        // so the draw below is a no-op there).
+                        let current = sum as f64 + sigma * (sum as f64).sqrt() * rng.normal();
+                        let code = self.adc.read_analog(current);
+                        tally.conversions += 1;
+                        if code != self.adc.read_ideal(sum) {
+                            tally.flips += 1;
+                        }
+                        *psum += sig * ((code as i64) << ib);
+                    }
+                }
+            }
+        }
+        let psums32 = psums.into_iter().map(|p| p as i32).collect();
+        (psums32, cycles_for_slice(&self.cfg, mode, x), tally)
+    }
+
     /// Reference dot product via plain integer arithmetic (no ADC
     /// batching) — what the analog path must equal.
     pub fn matvec_ref(&self, x: &[u8]) -> Vec<i32> {
@@ -232,6 +317,60 @@ mod tests {
         // functional-model panic
         let err = SubArray::for_profile(&HwProfile::pcram_128(), &w).unwrap_err().to_string();
         assert!(err.contains("binary cells"), "{err}");
+    }
+
+    #[test]
+    fn inject_at_sigma_zero_is_byte_identical_to_the_fault_free_path() {
+        propcheck::check("inject@sigma=0 == matvec", 0xFA01, 30, |rng| {
+            let cfg = ArrayCfg::paper();
+            let rows = 1 + rng.index(cfg.rows);
+            let w = random_weights(rng, rows, cfg.weight_cols());
+            let sa = SubArray::program(cfg, &w);
+            let x: Vec<u8> = (0..rows).map(|_| rng.next_u32() as u8).collect();
+            let mut fault_rng = Prng::new(7);
+            let before = fault_rng.clone();
+            let (psums, cycles, tally) = sa.matvec_inject(&x, ReadMode::ZeroSkip, 0.0, &mut fault_rng);
+            let (want_p, want_c) = sa.matvec(&x, ReadMode::ZeroSkip);
+            crate::prop_assert!(psums == want_p && cycles == want_c, "sigma=0 diverged");
+            crate::prop_assert!(tally == InjectTally::default(), "sigma=0 tallied {tally:?}");
+            // and the rng stream must be untouched
+            crate::prop_assert!(
+                fault_rng.clone().next_u64() == before.clone().next_u64(),
+                "sigma=0 consumed rng state"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn inject_is_deterministic_per_seed() {
+        let cfg = ArrayCfg::paper();
+        let mut rng = Prng::new(0xFA02);
+        let w = random_weights(&mut rng, 64, cfg.weight_cols());
+        let sa = SubArray::program(cfg, &w);
+        let x: Vec<u8> = (0..64).map(|_| rng.next_u32() as u8).collect();
+        let run = |seed: u64| {
+            let mut r = Prng::new(seed);
+            sa.matvec_inject(&x, ReadMode::ZeroSkip, 0.3, &mut r)
+        };
+        assert_eq!(run(11), run(11), "same seed must replay bit-identically");
+        // a strong sigma on dense inputs flips at least one code
+        let (_, _, tally) = run(11);
+        assert!(tally.conversions > 0 && tally.flips > 0, "no faults at sigma=0.3: {tally:?}");
+    }
+
+    #[test]
+    fn inject_counts_one_conversion_per_column_per_batch() {
+        // 4 active rows on the paper cfg (8-row batches): ZeroSkip drives
+        // one batch on the planes where the input bit is set. With inputs
+        // = 1 only bit plane 0 is active ⇒ 1 batch × 128 physical columns.
+        let cfg = ArrayCfg::paper();
+        let w = vec![-1i8; 4 * 16]; // all planes all-ones
+        let sa = SubArray::program(cfg.clone(), &w);
+        let x = vec![1u8; 4];
+        let mut rng = Prng::new(3);
+        let (_, _, tally) = sa.matvec_inject(&x, ReadMode::ZeroSkip, 0.05, &mut rng);
+        assert_eq!(tally.conversions, (cfg.weight_bits * cfg.weight_cols()) as u64);
     }
 
     #[test]

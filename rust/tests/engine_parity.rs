@@ -113,6 +113,40 @@ fn pooled_engines_agree_at_every_oversubscription_ratio() {
 }
 
 #[test]
+fn engines_agree_under_error_injection() {
+    // The injection accountant runs outside both engines over the same
+    // trace and plan, so the full simulate artifact — ErrorStats block
+    // included — must stay bit-identical between engines, for both the
+    // plain block-wise plan and the derating varaware plan.
+    let prep = pipeline::prepare(&spec(), None).unwrap();
+    let pes = prep.min_pes() * 2;
+    for alloc in ["block-wise", "varaware"] {
+        let base = ScenarioBuilder::from_prefix(&spec())
+            .alloc(alloc)
+            .pes(pes)
+            .sim_images(2)
+            .inject_errors(7)
+            .fault_sigma(0.05);
+        let ev = base.clone().engine("event").build().unwrap();
+        let st = base.clone().engine("stepped").build().unwrap();
+        assert!(ev.id().ends_with("_err7_fs0.05"), "{}", ev.id());
+        let ev_out = pipeline::run_scenario(&prep.view(), &ev, None).unwrap();
+        let st_out = pipeline::run_scenario(&prep.view(), &st, None).unwrap();
+        assert_eq!(
+            ev_out.plan, st_out.plan,
+            "{alloc} under injection: allocation must not depend on the engine"
+        );
+        assert_eq!(
+            artifact::sim_result_json(&ev_out.result).pretty(),
+            artifact::sim_result_json(&st_out.result).pretty(),
+            "{alloc} under injection: event engine diverged from the stepped reference"
+        );
+        let e = ev_out.result.errors.as_ref().expect("injection must report ErrorStats");
+        assert!(e.reads > 0 && e.flipped > 0, "{alloc}: σ=0.05 must flip some codes");
+    }
+}
+
+#[test]
 fn parity_holds_on_the_depthwise_workload() {
     // MobileNet exercises the block-diagonal grids; parity must hold
     // there too (one strategy per dataflow family keeps this fast).

@@ -1,0 +1,255 @@
+//! Seeded error-injection suite: the Monte Carlo fault model must agree
+//! with the §III-A analytic rate, inject nothing at σ=0, keep every
+//! fault-free artifact byte-identical, and leave the `varaware`
+//! allocator indistinguishable from `block-wise` on uniform ones
+//! distributions.
+//!
+//! Statistical assertions go through
+//! `cimfab::util::propcheck::check_stat` with a 3σ bound, so with the
+//! pinned seed (`CIMFAB_TEST_SEED`, default 7) they are deterministic
+//! and with any other seed they fail with probability < 0.3%.
+
+use cimfab::alloc::{greedy, varaware::VARAWARE, Allocator};
+use cimfab::config::ArrayCfg;
+use cimfab::dnn::resnet18;
+use cimfab::mapping::{map_network, NetworkMap};
+use cimfab::pipeline::{self, artifact, PrefixSpec, ScenarioBuilder, StatsSource};
+use cimfab::stats::synth::{synth_activations, SynthCfg};
+use cimfab::stats::{trace_from_activations, NetworkProfile};
+use cimfab::util::json::Json;
+use cimfab::util::prng::Prng;
+use cimfab::util::propcheck;
+use cimfab::xbar::variance::read_error_rate;
+use cimfab::xbar::{ReadMode, SubArray};
+
+/// CI pins `CIMFAB_TEST_SEED=7`; any other value still passes with
+/// probability ≥ 99.7% per statistical assertion (3σ bounds).
+fn test_seed() -> u64 {
+    std::env::var("CIMFAB_TEST_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(7)
+}
+
+fn spec() -> PrefixSpec {
+    PrefixSpec {
+        net: "resnet18".into(),
+        hw: 32,
+        hw_profile: cimfab::hw::DEFAULT_PROFILE.into(),
+        stats: StatsSource::Synthetic,
+        profile_images: 1,
+        seed: 7,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+fn setup() -> (NetworkMap, NetworkProfile) {
+    let g = resnet18(32, 10);
+    let map = map_network(&g, ArrayCfg::paper(), false);
+    let acts = synth_activations(&g, &map, 2, 17, SynthCfg::default());
+    let trace = trace_from_activations(&g, &map, &acts);
+    let prof = NetworkProfile::from_trace(&map, &trace);
+    (map, prof)
+}
+
+#[test]
+fn injected_flip_rate_matches_the_variance_model() {
+    // All-0xFF weights put a '1' in every bit plane, and driving exactly
+    // k = 4 of the 128 word lines makes every ADC conversion sum to 4 —
+    // mid-range for the 3-bit ADC (adc_rows = 8), so clamping never
+    // hides an upward flip and the per-conversion flip probability is
+    // exactly `read_error_rate(4, σ) = 2·Q(0.5/(2σ))`.
+    let cfg = ArrayCfg::paper();
+    let k = 4usize;
+    assert!(k < cfg.adc_rows(), "k must stay below adc_rows to avoid clamping");
+    let weights = vec![-1i8; cfg.rows * cfg.weight_cols()];
+    let conversions_per_call = (cfg.weight_bits * cfg.weight_cols()) as u64;
+    let sa = SubArray::program(cfg, &weights);
+    let mut x = vec![0u8; cfg.rows];
+    for xi in x.iter_mut().take(k) {
+        *xi = 1; // value 1 ⇒ only input bit-plane 0 is active under zero-skip
+    }
+
+    let mut root = Prng::new(test_seed());
+    let trials = 400u64;
+    let mut flips_by_sigma = Vec::new();
+    for &sigma in &[0.10f64, 0.15] {
+        let (mut conversions, mut flips) = (0u64, 0u64);
+        for t in 0..trials {
+            let mut rng = root.fork(t);
+            let (psums, _, tally) = sa.matvec_inject(&x, ReadMode::ZeroSkip, sigma, &mut rng);
+            assert_eq!(psums.len(), sa.cfg().weight_cols());
+            assert_eq!(
+                tally.conversions, conversions_per_call,
+                "one batch of 4 rows × 8 weight planes × 16 weight columns"
+            );
+            conversions += tally.conversions;
+            flips += tally.flips;
+        }
+        assert!(flips > 0, "σ={sigma} must flip some codes over {conversions} conversions");
+        let p = read_error_rate(k, sigma);
+        let measured = flips as f64 / conversions as f64;
+        let se = (p * (1.0 - p) / conversions as f64).sqrt();
+        propcheck::check_stat(
+            &format!("sub-array flip rate @ σ={sigma}"),
+            measured,
+            p,
+            se,
+            3.0,
+        );
+        flips_by_sigma.push(flips);
+    }
+    assert!(
+        flips_by_sigma[1] > flips_by_sigma[0],
+        "flip counts must grow with σ: {flips_by_sigma:?}"
+    );
+}
+
+#[test]
+fn sigma_zero_is_byte_identical_to_the_fault_free_path() {
+    propcheck::check("matvec_inject(σ=0) == matvec", 0x51_60, 40, |rng| {
+        let cfg = ArrayCfg::paper();
+        let rows = 1 + rng.index(cfg.rows);
+        let wcols = cfg.weight_cols();
+        let w: Vec<i8> = (0..rows * wcols).map(|_| rng.next_u32() as i8).collect();
+        let x: Vec<u8> = (0..rows).map(|_| rng.next_u32() as u8).collect();
+        let mode = if rng.index(2) == 0 { ReadMode::ZeroSkip } else { ReadMode::Baseline };
+        let sa = SubArray::program(cfg, &w);
+        let (want_psums, want_cycles) = sa.matvec(&x, mode);
+        // two identical streams: one goes through the injector, then
+        // both must produce the same next draw — σ=0 consumes nothing
+        let mut used = rng.fork(1);
+        let mut untouched = used.clone();
+        let (psums, cycles, tally) = sa.matvec_inject(&x, mode, 0.0, &mut used);
+        cimfab::prop_assert!(psums == want_psums, "σ=0 psums diverged");
+        cimfab::prop_assert!(cycles == want_cycles, "σ=0 cycles diverged");
+        cimfab::prop_assert!(
+            tally.conversions == 0 && tally.flips == 0,
+            "σ=0 must tally nothing, got {tally:?}"
+        );
+        cimfab::prop_assert!(
+            used.next_u64() == untouched.next_u64(),
+            "σ=0 must not draw from the PRNG"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn pipeline_ber_matches_the_analytic_rate_on_both_engines() {
+    // Every block of a non-derated plan reads full adc_rows-wide
+    // batches, so the run's BER is a Binomial(reads, p)/reads sample
+    // with p = read_error_rate(adc_rows, σ) exactly.
+    let prep = pipeline::prepare(&spec(), None).unwrap();
+    let sigma = 0.10;
+    let p = read_error_rate(ArrayCfg::paper().adc_rows(), sigma);
+    for engine in ["event", "stepped"] {
+        let sc = ScenarioBuilder::from_prefix(&spec())
+            .alloc("block-wise")
+            .engine(engine)
+            .pes(prep.min_pes() * 2)
+            .sim_images(2)
+            .inject_errors(test_seed())
+            .fault_sigma(sigma)
+            .build()
+            .unwrap();
+        let out = pipeline::run_scenario(&prep.view(), &sc, None).unwrap();
+        let e = out.result.errors.as_ref().expect("injection must report ErrorStats");
+        assert!(e.reads > 0 && e.flipped > 0, "{engine}: σ=0.1 must flip codes");
+        assert!(e.worst_ber >= e.ber, "{engine}: the worst block can't beat the mean");
+        let se = (p * (1.0 - p) / e.reads as f64).sqrt();
+        propcheck::check_stat(&format!("{engine} network BER @ σ={sigma}"), e.ber, p, se, 3.0);
+    }
+}
+
+#[test]
+fn injection_off_keeps_artifacts_byte_identical() {
+    let prep = pipeline::prepare(&spec(), None).unwrap();
+    let base = ScenarioBuilder::from_prefix(&spec())
+        .alloc("block-wise")
+        .pes(prep.min_pes() * 2)
+        .sim_images(2);
+
+    // fault-free run: no `_err` id segment, no errors key, no read_rows
+    let off = base.clone().build().unwrap();
+    assert!(!off.id().contains("_err"), "{}", off.id());
+    let off_out = pipeline::run_scenario(&prep.view(), &off, None).unwrap();
+    assert!(off_out.result.errors.is_none());
+    assert!(off_out.plan.read_rows.is_none());
+    let off_json = artifact::sim_result_json(&off_out.result).pretty();
+    assert!(!off_json.contains("\"errors\""), "{off_json}");
+    assert!(!artifact::plan_json(&off_out.plan, &prep.map).pretty().contains("read_rows"));
+
+    // σ=0 injection: the errors object appears but accounts zero flips,
+    // and every other key matches the fault-free artifact byte for byte
+    let zero = base.clone().inject_errors(test_seed()).fault_sigma(0.0).build().unwrap();
+    let zero_out = pipeline::run_scenario(&prep.view(), &zero, None).unwrap();
+    let e = zero_out.result.errors.as_ref().expect("seeded runs always report ErrorStats");
+    assert!(e.reads > 0, "σ=0 still counts conversions");
+    assert_eq!(e.flipped, 0, "σ=0 must inject nothing");
+    assert_eq!(e.ber, 0.0);
+    let mut stripped = artifact::sim_result_json(&zero_out.result);
+    if let Json::Obj(m) = &mut stripped {
+        m.remove("errors").expect("σ=0 artifact must carry the errors object");
+    }
+    assert_eq!(
+        stripped.pretty(),
+        off_json,
+        "σ=0 injection changed a fault-free artifact byte"
+    );
+}
+
+#[test]
+fn varaware_at_uniform_density_is_byte_identical_to_block_wise() {
+    // With a uniform ones distribution nothing derates, so `varaware`
+    // must delegate to the base block-wise water-filling exactly — the
+    // same identity `pooled@1.0` pins in tests/weight_pools.rs.
+    let (map, mut prof) = setup();
+    for layer in prof.block_density.iter_mut() {
+        for d in layer.iter_mut() {
+            *d = 0.25;
+        }
+    }
+    propcheck::check("varaware@uniform == block-wise", 0x7A2A, 20, |rng| {
+        let budget = map.min_arrays() + rng.index(map.min_arrays() * 2 + 1);
+        let got = VARAWARE.allocate(&map, &prof, budget).unwrap();
+        cimfab::prop_assert!(got.read_rows.is_none(), "uniform density must not derate");
+        let mut want = greedy::blockwise(&map, &prof.block_cycles, budget).unwrap();
+        want.algorithm = "varaware".into();
+        cimfab::prop_assert!(
+            artifact::plan_json(&got, &map).pretty() == artifact::plan_json(&want, &map).pretty(),
+            "varaware diverged from block-wise at budget {budget}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn varaware_derated_widths_cut_the_per_read_error_rate() {
+    // Bimodal ones densities force derating; every derated width must
+    // validate against the plan rules (power-of-two divisor of
+    // adc_rows) and strictly cut the §III-A per-conversion flip
+    // probability the injection accountant charges that block — the
+    // accuracy side of the accuracy/latency trade the bench sweeps.
+    let (map, mut prof) = setup();
+    for layer in prof.block_density.iter_mut() {
+        for (r, d) in layer.iter_mut().enumerate() {
+            *d = if r % 2 == 0 { 0.05 } else { 0.5 };
+        }
+    }
+    let budget = map.min_arrays() * 2;
+    let plan = VARAWARE.allocate(&map, &prof, budget).unwrap();
+    plan.validate(&map, budget).unwrap();
+    let rr = plan.read_rows.as_ref().expect("skewed densities must derate");
+    let full = map.array.adc_rows();
+    let sigma = 0.10;
+    let full_rate = read_error_rate(full, sigma);
+    let mut derated = 0usize;
+    for &w in rr.iter().flatten() {
+        if w < full {
+            derated += 1;
+            assert!(
+                read_error_rate(w, sigma) < full_rate,
+                "width {w} must err less often than {full}"
+            );
+        }
+    }
+    assert!(derated > 0, "no block was derated");
+}

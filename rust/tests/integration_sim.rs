@@ -97,6 +97,7 @@ fn dataflow_ablation_blockwise_alloc_layerwise_flow() {
             images: 6,
             warmup: 1,
             write_latency_ns: 100.0,
+            inject: None,
         },
     );
     let bw = simulate(
@@ -108,6 +109,7 @@ fn dataflow_ablation_blockwise_alloc_layerwise_flow() {
             images: 6,
             warmup: 1,
             write_latency_ns: 100.0,
+            inject: None,
         },
     );
     assert!(

@@ -178,6 +178,8 @@ fn synthetic_prefixes_differing_only_in_artifacts_dir_share_one_prefix() {
         pes: 172,
         sim_images: 4,
         oversub: 1.0,
+        inject_seed: None,
+        fault_sigma: None,
     };
     let scs = vec![mk(a, "weight-based", "layer-wise"), mk(b, "block-wise", "block-wise")];
     let dir = tmp_dir("shared");
@@ -214,6 +216,8 @@ fn multi_prefix_sweep_prepares_each_prefix_once_and_stays_ordered() {
                 pes: 200,
                 sim_images: 4,
                 oversub: 1.0,
+                inject_seed: None,
+                fault_sigma: None,
             });
         }
     }
