@@ -1,0 +1,134 @@
+//! Fault-tolerance bench: what remapping buys on a damaged chip.
+//!
+//! Runs ResNet18 block-wise on rram-128 three ways — fault-free, at 1%
+//! stuck-at + 1% dead arrays repaired onto spares, and the same chip
+//! unrepaired (`--no-fault-remap`) — and reports the residual bit-error
+//! rate each way next to the wall-clock cost of the fault machinery.
+//! The headline is the recovery ratio: residual BER unrepaired over
+//! repaired. Emits `BENCH_fault_tolerance.json` (repo root, archived by
+//! CI) in the shared `{name, baseline_ms, optimized_ms, speedup}`
+//! schema, where baseline is the fault-free simulation wall-clock and
+//! optimized the repaired faulty one.
+
+use cimfab::pipeline::{self, PrefixSpec, ScenarioBuilder, StatsSource};
+use cimfab::util::bench::{banner, write_bench_json, Bencher};
+use cimfab::util::json::Json;
+use cimfab::util::table::{fmt_f, fmt_int, Table};
+
+const STUCK_AT: f64 = 0.01;
+const DEAD: f64 = 0.01;
+const SPARES: usize = 256;
+const SEED: u64 = 7;
+
+fn main() {
+    banner(
+        "Fault tolerance",
+        "ResNet18 on rram-128: fault-free vs 1% stuck-at + 1% dead, repaired and as-is",
+    );
+    let spec = PrefixSpec {
+        net: "resnet18".into(),
+        hw: 32,
+        hw_profile: "rram-128".into(),
+        stats: StatsSource::Synthetic,
+        profile_images: 1,
+        seed: 7,
+        artifacts_dir: "artifacts".into(),
+    };
+    let prep = pipeline::prepare(&spec, None).unwrap();
+    let base = ScenarioBuilder::from_prefix(&spec)
+        .alloc("block-wise")
+        .pes(prep.min_pes() * 2)
+        .sim_images(4);
+    let faulty = || {
+        base.clone()
+            .stuck_at_rate(STUCK_AT)
+            .dead_array_rate(DEAD)
+            .fault_seed(SEED)
+            .spare_arrays(SPARES)
+    };
+
+    let mut b = Bencher::new(1, 3);
+    let mut t = Table::new([
+        "chip",
+        "ms",
+        "dead",
+        "remapped",
+        "spares used",
+        "derated",
+        "retired",
+        "retries",
+        "residual BER",
+    ]);
+    let mut extra: Vec<(&str, Json)> = vec![
+        ("net", Json::str("resnet18")),
+        ("stuck_at_rate", Json::num(STUCK_AT)),
+        ("dead_array_rate", Json::num(DEAD)),
+        ("spare_arrays", Json::num(SPARES)),
+        ("fault_seed", Json::num(SEED)),
+    ];
+    let mut ms = Vec::new();
+    let mut bers = Vec::new();
+    for (label, key, sc) in [
+        ("fault-free", "fault_free", base.clone().build().unwrap()),
+        ("faulty, remapped", "remapped", faulty().build().unwrap()),
+        ("faulty, as-is", "no_remap", faulty().fault_remap(false).build().unwrap()),
+    ] {
+        let mut out = None;
+        let wall_ms = b
+            .bench(label, || {
+                out = Some(pipeline::run_scenario(&prep.view(), &sc, None).unwrap());
+            })
+            .summary
+            .mean
+            * 1e3;
+        let out = out.unwrap();
+        let fl = out.result.faults.unwrap_or_default();
+        t.row([
+            label.to_string(),
+            fmt_f(wall_ms, 2),
+            fmt_int(fl.dead_arrays),
+            fmt_int(fl.remapped_blocks),
+            fmt_int(fl.spares_used),
+            fmt_int(fl.derated_arrays),
+            fmt_int(fl.retired_arrays),
+            fmt_int(fl.write_retries),
+            format!("{:.3e}", fl.residual_ber),
+        ]);
+        extra.push((
+            key,
+            Json::obj(vec![
+                ("ms", Json::num(wall_ms)),
+                ("dead_arrays", Json::num(fl.dead_arrays)),
+                ("remapped_blocks", Json::num(fl.remapped_blocks)),
+                ("spares_used", Json::num(fl.spares_used)),
+                ("derated_arrays", Json::num(fl.derated_arrays)),
+                ("retired_arrays", Json::num(fl.retired_arrays)),
+                ("write_retries", Json::num(fl.write_retries)),
+                ("residual_ber", Json::num(fl.residual_ber)),
+            ]),
+        ));
+        ms.push(wall_ms);
+        bers.push(fl.residual_ber);
+    }
+    println!("{}", t.render());
+
+    assert_eq!(bers[0], 0.0, "the fault-free chip must carry no residual BER");
+    assert!(
+        bers[1] < bers[2],
+        "remapping must recover BER: {:.3e} repaired vs {:.3e} as-is",
+        bers[1],
+        bers[2]
+    );
+    println!(
+        "repair recovers {:.1}x of the residual BER ({:.3e} -> {:.3e}); fault machinery \
+         costs {:.1}% of the fault-free wall-clock",
+        bers[2] / bers[1].max(1e-18),
+        bers[2],
+        bers[1],
+        (ms[1] / ms[0].max(1e-12) - 1.0) * 100.0
+    );
+    extra.push(("ber_recovery", Json::num(bers[2] / bers[1].max(1e-18))));
+
+    write_bench_json("fault_tolerance", ms[0], ms[1], extra);
+    println!("\n{}", b.report());
+}

@@ -19,6 +19,10 @@
 //! simulation time (prior work's deterministic regime, where
 //! weight-based allocation is in fact optimal).
 //!
+//! Orthogonally to the strategy, the fault-aware [`remap`] pass runs
+//! over any finished plan to steer blocks off permanently-faulty arrays
+//! (a [`crate::hw::FaultMap`]) onto the chip's spare reserve.
+//!
 //! Strategies are string-addressable through
 //! [`crate::strategy::StrategyRegistry`]; adding one means implementing
 //! [`Allocator`] and registering it — no enum to extend, no `match`
@@ -32,6 +36,7 @@ pub mod greedy;
 pub mod hybrid;
 pub mod oracle;
 pub mod pooled;
+pub mod remap;
 pub mod varaware;
 
 use crate::mapping::{AllocationPlan, NetworkMap};

@@ -1,0 +1,306 @@
+//! Fault-aware remapping: steer any strategy's plan around permanent
+//! faults.
+//!
+//! The pass runs *after* allocation, so every strategy — built-in or
+//! registered — gets repair for free. It walks the plan's block
+//! instances in canonical array order (layer-major, block row, then
+//! duplicate, each instance occupying `arrays_per_block` consecutive
+//! physical arrays — the same packing [`AllocationPlan::arrays_used`]
+//! counts), consults the [`FaultMap`], and:
+//!
+//! * **remaps** instances sitting on unusable arrays (dead, or stuck
+//!   beyond [`MAX_STUCK_DERATE`]) onto usable arrays from the spare
+//!   reserve ([`crate::hw::ChipSpec::spare_arrays`]) when repair is on;
+//! * **derates** blocks whose in-service arrays carry a tolerable
+//!   stuck-cell fraction by halving their ADC read width (fewer rows
+//!   per read ⇒ a stuck row pollutes fewer conversions), clamped into
+//!   the plan's existing `read_rows` override;
+//! * **accounts** the damage left in service as a residual bit-error
+//!   rate: a stuck cell flips roughly half the conversions it joins, a
+//!   dead or unrepaired-unusable array computes garbage (BER 0.5).
+//!
+//! When repair is requested but the usable spares run out, the pass
+//! fails with a diagnostic `Result` error — never a panic — naming the
+//! shortfall and the knobs that fix it.
+
+use crate::hw::FaultMap;
+use crate::mapping::{AllocationPlan, NetworkMap};
+use anyhow::Result;
+
+/// Stuck-cell fraction above which an array is pulled from service
+/// instead of derated: beyond this, halving the read width no longer
+/// keeps the expected conversion error under the ADC's margin.
+pub const MAX_STUCK_DERATE: f64 = 0.25;
+
+/// What the remap pass did to a plan — merged into the run's
+/// [`crate::sim::FaultStats`] block by the pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct RemapStats {
+    /// Dead arrays in the fault map (whole chip, spares included).
+    pub dead_arrays: u64,
+    /// Block instances steered off unusable arrays onto spares.
+    pub remapped_blocks: u64,
+    /// Spare arrays consumed by that remapping.
+    pub spares_used: u64,
+    /// Arrays kept in service with a nonzero (derated) stuck fraction.
+    pub derated_arrays: u64,
+    /// Expected bit-error-rate contribution of the faults left in
+    /// service (stuck cells at half weight; unrepaired unusable arrays
+    /// at 0.5 — garbage).
+    pub residual_ber: f64,
+    /// Mean stuck-cell fraction over in-service arrays — the pipeline
+    /// derives the write-verify failure probability from it.
+    pub mean_stuck_in_use: f64,
+}
+
+/// Apply the fault map to `plan`. Returns the (possibly derated) plan
+/// and the repair accounting. `spare_arrays` usable arrays are drawn
+/// from the *end* of the fault map's index space; `repair` off keeps
+/// every instance where the allocator put it and only accounts the
+/// damage (the no-repair baseline the fault-tolerance bench compares
+/// against).
+pub fn remap_plan(
+    plan: &AllocationPlan,
+    map: &NetworkMap,
+    faults: &FaultMap,
+    spare_arrays: usize,
+    repair: bool,
+) -> Result<(AllocationPlan, RemapStats)> {
+    let used = plan.arrays_used(map);
+    anyhow::ensure!(
+        faults.arrays >= used + spare_arrays,
+        "fault map covers {} arrays but the plan occupies {used} plus {spare_arrays} \
+         spare(s); provide a map for the whole chip",
+        faults.arrays
+    );
+    let mut stats = RemapStats { dead_arrays: faults.dead_count() as u64, ..Default::default() };
+    let full = map.array.adc_rows();
+
+    // usable spares, drawn from the reserve at the end of the index
+    // space (a spare can itself be faulty — skip it, it repairs nothing)
+    let mut spares = (faults.arrays - spare_arrays..faults.arrays)
+        .filter(|&i| !faults.is_dead(i) && faults.stuck_fraction(i) <= MAX_STUCK_DERATE);
+
+    let mut out = plan.clone();
+    let mut cursor = 0usize;
+    let mut ber_sum = 0.0f64;
+    let mut stuck_sum = 0.0f64;
+    let mut short_instances = 0u64;
+    let mut short_arrays = 0u64;
+    for (l, g) in map.grids.iter().enumerate() {
+        for r in 0..g.blocks_per_copy {
+            let mut derate_block = false;
+            for _inst in 0..plan.duplicates[l][r] {
+                let arrays = cursor..cursor + g.arrays_per_block;
+                cursor += g.arrays_per_block;
+                let unusable = arrays
+                    .clone()
+                    .any(|i| faults.is_dead(i) || faults.stuck_fraction(i) > MAX_STUCK_DERATE);
+                if unusable && repair {
+                    // steer the whole instance onto spares
+                    let mut replacement = Vec::with_capacity(g.arrays_per_block);
+                    for _ in 0..g.arrays_per_block {
+                        match spares.next() {
+                            Some(s) => replacement.push(s),
+                            None => {
+                                short_instances += 1;
+                                short_arrays +=
+                                    (g.arrays_per_block - replacement.len()) as u64;
+                                // return what this instance drew: later
+                                // instances don't inherit its shortfall
+                                stats.spares_used -= replacement.len() as u64;
+                                replacement.clear();
+                                break;
+                            }
+                        }
+                        stats.spares_used += 1;
+                    }
+                    if replacement.is_empty() {
+                        continue;
+                    }
+                    stats.remapped_blocks += 1;
+                    for i in replacement {
+                        let s = faults.stuck_fraction(i);
+                        if s > 0.0 {
+                            stats.derated_arrays += 1;
+                            derate_block = true;
+                        }
+                        ber_sum += s / 2.0;
+                        stuck_sum += s;
+                    }
+                } else if unusable {
+                    // left in place, computing garbage
+                    ber_sum += 0.5 * g.arrays_per_block as f64;
+                } else {
+                    for i in arrays {
+                        let s = faults.stuck_fraction(i);
+                        if s > 0.0 {
+                            stats.derated_arrays += 1;
+                            derate_block = true;
+                        }
+                        ber_sum += s / 2.0;
+                        stuck_sum += s;
+                    }
+                }
+            }
+            if derate_block && full >= 2 {
+                let rr = out.read_rows.get_or_insert_with(|| {
+                    map.grids.iter().map(|g| vec![full; g.blocks_per_copy]).collect()
+                });
+                rr[l][r] = rr[l][r].min(full / 2).max(1);
+            }
+        }
+    }
+    anyhow::ensure!(
+        short_instances == 0,
+        "permanent faults exceed spare capacity: {short_instances} block instance(s) \
+         ({short_arrays} array(s)) still need remapping after the {spare_arrays} spare(s) \
+         ran out; raise ChipSpec.spare_arrays (--spare-arrays), lower \
+         --stuck-at-rate/--dead-array-rate, or run without repair (--no-fault-remap) to \
+         measure the degraded chip as-is"
+    );
+    let in_use = used.max(1) as f64;
+    stats.residual_ber = ber_sum / in_use;
+    stats.mean_stuck_in_use = stuck_sum / in_use;
+    Ok((out, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArrayCfg;
+    use crate::dnn::resnet18;
+    use crate::mapping::map_network;
+
+    fn setup() -> (NetworkMap, AllocationPlan) {
+        let map = map_network(&resnet18(32, 10), ArrayCfg::paper(), false);
+        let plan = AllocationPlan::minimal(&map);
+        (map, plan)
+    }
+
+    #[test]
+    fn healthy_map_is_an_identity() {
+        let (map, plan) = setup();
+        let used = plan.arrays_used(&map);
+        let faults = FaultMap::healthy(used + 4);
+        let (out, stats) = remap_plan(&plan, &map, &faults, 4, true).unwrap();
+        assert_eq!(out, plan, "healthy chip must leave the plan untouched");
+        assert_eq!(stats, RemapStats::default());
+    }
+
+    #[test]
+    fn dead_array_is_remapped_onto_a_spare() {
+        let (map, plan) = setup();
+        let used = plan.arrays_used(&map);
+        let mut faults = FaultMap::healthy(used + 8);
+        faults.dead[0] = true;
+        let apb = map.grids[0].arrays_per_block as u64;
+
+        // with repair: the hit instance moves to pristine spares
+        let (out, st) = remap_plan(&plan, &map, &faults, 8, true).unwrap();
+        assert_eq!(st.remapped_blocks, 1);
+        assert_eq!(st.spares_used, apb);
+        assert_eq!(st.dead_arrays, 1);
+        assert_eq!(st.residual_ber, 0.0, "pristine spares leave no residue");
+        assert_eq!(out.duplicates, plan.duplicates);
+
+        // without repair: the instance stays and computes garbage
+        let (_, st) = remap_plan(&plan, &map, &faults, 8, false).unwrap();
+        assert_eq!(st.remapped_blocks, 0);
+        assert_eq!(st.spares_used, 0);
+        assert!(st.residual_ber > 0.0, "{st:?}");
+    }
+
+    #[test]
+    fn repair_recovers_ber_versus_no_repair() {
+        let (map, plan) = setup();
+        let used = plan.arrays_used(&map);
+        // a generous spare reserve: every dead-struck instance must fit
+        let mut faults = FaultMap::generate(used + 512, 0.01, 0.02, 7).unwrap();
+        for i in used..used + 512 {
+            faults.dead[i] = false;
+            faults.stuck[i] = 0.0;
+        }
+        // make sure at least one in-plan array is dead regardless of seed
+        faults.dead[3] = true;
+        let (_, with) = remap_plan(&plan, &map, &faults, 512, true).unwrap();
+        let (_, without) = remap_plan(&plan, &map, &faults, 512, false).unwrap();
+        assert!(
+            with.residual_ber < without.residual_ber,
+            "repair {} must beat no-repair {}",
+            with.residual_ber,
+            without.residual_ber
+        );
+        assert!(with.remapped_blocks > 0);
+    }
+
+    #[test]
+    fn tolerable_stuck_fractions_derate_the_block() {
+        let (map, plan) = setup();
+        let used = plan.arrays_used(&map);
+        let mut faults = FaultMap::healthy(used);
+        faults.stuck[0] = 0.02;
+        let (out, st) = remap_plan(&plan, &map, &faults, 0, true).unwrap();
+        assert_eq!(st.remapped_blocks, 0, "tolerable damage stays in place");
+        assert_eq!(st.derated_arrays, 1);
+        assert!(st.residual_ber > 0.0 && st.residual_ber < 0.01, "{st:?}");
+        assert!((st.mean_stuck_in_use - 0.02 / used as f64).abs() < 1e-12);
+        let full = map.array.adc_rows();
+        out.validate(&map, used).expect("derated plan must stay valid");
+        let rr = out.read_rows.expect("derating must set a read-rows override");
+        assert_eq!(rr[0][0], full / 2);
+        assert!(rr[1].iter().all(|&w| w == full), "other blocks stay at full width");
+    }
+
+    #[test]
+    fn heavy_stuck_fraction_counts_as_unusable() {
+        let (map, plan) = setup();
+        let used = plan.arrays_used(&map);
+        let mut faults = FaultMap::healthy(used + 8);
+        faults.stuck[0] = MAX_STUCK_DERATE * 2.0;
+        let (_, st) = remap_plan(&plan, &map, &faults, 8, true).unwrap();
+        assert_eq!(st.remapped_blocks, 1, "beyond the derate cap the array is pulled");
+    }
+
+    #[test]
+    fn exhausted_spares_fail_with_a_diagnostic() {
+        let (map, plan) = setup();
+        let used = plan.arrays_used(&map);
+        let apb = map.grids[0].arrays_per_block;
+        let mut faults = FaultMap::healthy(used + apb);
+        // two dead instances' worth of arrays, spares for only one
+        for i in 0..2 * apb {
+            faults.dead[i] = true;
+        }
+        let err = remap_plan(&plan, &map, &faults, apb, true).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("exceed spare capacity"), "{msg}");
+        assert!(msg.contains("--spare-arrays"), "{msg}");
+        // without repair the same chip runs (degraded), no error
+        let (_, st) = remap_plan(&plan, &map, &faults, apb, false).unwrap();
+        assert!(st.residual_ber > 0.0);
+    }
+
+    #[test]
+    fn faulty_spares_are_skipped_not_used() {
+        let (map, plan) = setup();
+        let used = plan.arrays_used(&map);
+        let apb = map.grids[0].arrays_per_block;
+        let mut faults = FaultMap::healthy(used + apb + 1);
+        faults.dead[0] = true;
+        faults.dead[used] = true; // first spare is itself dead
+        // reserve = apb + 1 spares, one of them dead ⇒ exactly enough
+        let (_, st) = remap_plan(&plan, &map, &faults, apb + 1, true).unwrap();
+        assert_eq!(st.remapped_blocks, 1);
+        assert_eq!(st.spares_used, apb as u64);
+    }
+
+    #[test]
+    fn undersized_fault_map_is_rejected() {
+        let (map, plan) = setup();
+        let used = plan.arrays_used(&map);
+        let faults = FaultMap::healthy(used - 1);
+        let err = remap_plan(&plan, &map, &faults, 0, true).unwrap_err();
+        assert!(format!("{err:#}").contains("whole chip"), "{err:#}");
+    }
+}

@@ -1,0 +1,296 @@
+//! Permanent-fault description: which arrays are dead and what fraction
+//! of each survivor's cells are stuck at Gon/Goff.
+//!
+//! A [`FaultMap`] is plain data over a chip's physical array index
+//! space. It is either **generated** from chip-level rates with a seed
+//! ([`FaultMap::generate`] — per-array streams forked from one root, so
+//! the same `(arrays, rates, seed)` tuple reproduces the same map on
+//! every thread and engine) or **loaded** from a sparse JSON file
+//! ([`FaultMap::load`] — measured silicon, with path-context errors and
+//! no panics on malformed input). The fault-aware remap pass
+//! ([`crate::alloc::remap`]) steers allocation plans around it, and the
+//! simulator's write-verify accounting charges retries against it.
+//!
+//! The JSON schema (also what [`FaultMap::to_json`] emits) is sparse —
+//! healthy arrays are implicit:
+//!
+//! ```json
+//! {
+//!   "arrays": 1024,
+//!   "seed": 7,
+//!   "dead": [3, 97],
+//!   "stuck": [ {"array": 5, "fraction": 0.012} ]
+//! }
+//! ```
+
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+use anyhow::{Context, Result};
+
+/// Permanent faults over a chip's physical arrays: per-array stuck-at
+/// cell fractions plus whole-dead arrays. Index space is
+/// `0..arrays` in the chip's canonical array order (PE-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultMap {
+    /// Physical arrays this map describes.
+    pub arrays: usize,
+    /// `dead[i]`: array `i` is entirely unusable.
+    pub dead: Vec<bool>,
+    /// `stuck[i]`: fraction of array `i`'s cells stuck at Gon/Goff
+    /// (in `[0, 1]`; `0.0` for healthy arrays, ignored for dead ones).
+    pub stuck: Vec<f64>,
+    /// The seed the map was generated from (or the file's recorded
+    /// seed) — carried so artifacts stay reproducible.
+    pub seed: u64,
+}
+
+impl FaultMap {
+    /// A fully healthy map (no dead arrays, nothing stuck).
+    pub fn healthy(arrays: usize) -> FaultMap {
+        FaultMap { arrays, dead: vec![false; arrays], stuck: vec![0.0; arrays], seed: 0 }
+    }
+
+    /// Generate a seeded map: each array draws from its own forked
+    /// stream (`Prng::new(seed).fork(i)`), so the map is deterministic
+    /// per `(arrays, rates, seed)` regardless of thread layout. An
+    /// array is dead with probability `dead_array_rate`; otherwise its
+    /// stuck-cell fraction is `stuck_at_rate` scaled by a uniform
+    /// factor in `[0.5, 1.5)` (clamped to `[0, 1]`), so maps show
+    /// per-array spread rather than one uniform fraction.
+    pub fn generate(
+        arrays: usize,
+        stuck_at_rate: f64,
+        dead_array_rate: f64,
+        seed: u64,
+    ) -> Result<FaultMap> {
+        anyhow::ensure!(
+            stuck_at_rate.is_finite() && (0.0..=1.0).contains(&stuck_at_rate),
+            "stuck-at rate must be in [0, 1], got {stuck_at_rate}"
+        );
+        anyhow::ensure!(
+            dead_array_rate.is_finite() && (0.0..=1.0).contains(&dead_array_rate),
+            "dead-array rate must be in [0, 1], got {dead_array_rate}"
+        );
+        let mut root = Prng::new(seed);
+        let mut dead = Vec::with_capacity(arrays);
+        let mut stuck = Vec::with_capacity(arrays);
+        for i in 0..arrays {
+            let mut rng = root.fork(i as u64);
+            if rng.chance(dead_array_rate) {
+                dead.push(true);
+                stuck.push(0.0);
+            } else if stuck_at_rate > 0.0 {
+                dead.push(false);
+                stuck.push((stuck_at_rate * (0.5 + rng.f64())).clamp(0.0, 1.0));
+            } else {
+                dead.push(false);
+                stuck.push(0.0);
+            }
+        }
+        Ok(FaultMap { arrays, dead, stuck, seed })
+    }
+
+    /// Load a sparse map from a JSON file (see the module docs for the
+    /// schema). All failures — unreadable file, malformed JSON, indices
+    /// out of range, fractions outside `[0, 1]` — are `Result` errors
+    /// carrying the path, never panics.
+    pub fn load(path: &str) -> Result<FaultMap> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading fault map {path}"))?;
+        Self::from_json_text(&text).with_context(|| format!("parsing fault map {path}"))
+    }
+
+    /// Parse the sparse JSON schema from a string (the testable core of
+    /// [`FaultMap::load`]).
+    pub fn from_json_text(text: &str) -> Result<FaultMap> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("invalid JSON: {e}"))?;
+        let obj = j.as_obj().context("fault map must be a JSON object")?;
+        for key in obj.keys() {
+            anyhow::ensure!(
+                matches!(key.as_str(), "arrays" | "seed" | "dead" | "stuck"),
+                "unknown fault-map field '{key}' (expected arrays/seed/dead/stuck)"
+            );
+        }
+        let arrays = j
+            .get("arrays")
+            .as_usize()
+            .context("fault map needs a positive integer 'arrays' count")?;
+        anyhow::ensure!(arrays >= 1, "fault map 'arrays' must be at least 1");
+        let seed = j.get("seed").as_u64().unwrap_or(0);
+        let mut map = FaultMap::healthy(arrays);
+        map.seed = seed;
+        if let Some(dead) = j.get("dead").as_arr() {
+            for (n, d) in dead.iter().enumerate() {
+                let i = d
+                    .as_usize()
+                    .with_context(|| format!("dead[{n}] must be an array index"))?;
+                anyhow::ensure!(
+                    i < arrays,
+                    "dead[{n}] = {i} is out of range for {arrays} arrays"
+                );
+                map.dead[i] = true;
+            }
+        }
+        if let Some(stuck) = j.get("stuck").as_arr() {
+            for (n, s) in stuck.iter().enumerate() {
+                let i = s
+                    .get("array")
+                    .as_usize()
+                    .with_context(|| format!("stuck[{n}] needs an 'array' index"))?;
+                anyhow::ensure!(
+                    i < arrays,
+                    "stuck[{n}].array = {i} is out of range for {arrays} arrays"
+                );
+                let f = s
+                    .get("fraction")
+                    .as_f64()
+                    .with_context(|| format!("stuck[{n}] needs a numeric 'fraction'"))?;
+                anyhow::ensure!(
+                    f.is_finite() && (0.0..=1.0).contains(&f),
+                    "stuck[{n}].fraction must be in [0, 1], got {f}"
+                );
+                map.stuck[i] = f;
+            }
+        }
+        Ok(map)
+    }
+
+    /// The sparse JSON form (deterministic: indices ascend).
+    pub fn to_json(&self) -> Json {
+        let dead: Vec<Json> = (0..self.arrays)
+            .filter(|&i| self.dead[i])
+            .map(|i| Json::num(i as u64))
+            .collect();
+        let stuck: Vec<Json> = (0..self.arrays)
+            .filter(|&i| !self.dead[i] && self.stuck[i] > 0.0)
+            .map(|i| {
+                Json::obj(vec![
+                    ("array", Json::num(i as u64)),
+                    ("fraction", Json::num(self.stuck[i])),
+                ])
+            })
+            .collect();
+        let mut pairs = vec![
+            ("arrays", Json::num(self.arrays as u64)),
+            ("seed", Json::num(self.seed)),
+        ];
+        if !dead.is_empty() {
+            pairs.push(("dead", Json::arr(dead)));
+        }
+        if !stuck.is_empty() {
+            pairs.push(("stuck", Json::arr(stuck)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Dead arrays in the map.
+    pub fn dead_count(&self) -> usize {
+        self.dead.iter().filter(|&&d| d).count()
+    }
+
+    /// Is array `i` completely unusable?
+    pub fn is_dead(&self, i: usize) -> bool {
+        self.dead.get(i).copied().unwrap_or(false)
+    }
+
+    /// Stuck-cell fraction of array `i` (`0.0` out of range or dead).
+    pub fn stuck_fraction(&self, i: usize) -> f64 {
+        if self.is_dead(i) {
+            0.0
+        } else {
+            self.stuck.get(i).copied().unwrap_or(0.0)
+        }
+    }
+
+    /// Is the map entirely healthy (nothing dead, nothing stuck)?
+    pub fn is_healthy(&self) -> bool {
+        self.dead.iter().all(|&d| !d) && self.stuck.iter().all(|&s| s == 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_seed_deterministic() {
+        let a = FaultMap::generate(256, 0.01, 0.02, 7).unwrap();
+        let b = FaultMap::generate(256, 0.01, 0.02, 7).unwrap();
+        assert_eq!(a, b);
+        let c = FaultMap::generate(256, 0.01, 0.02, 8).unwrap();
+        assert_ne!(a, c, "a different seed must draw a different map");
+    }
+
+    #[test]
+    fn generated_rates_land_near_the_requested_ones() {
+        let m = FaultMap::generate(4096, 0.01, 0.05, 7).unwrap();
+        let dead = m.dead_count() as f64 / 4096.0;
+        assert!((0.02..=0.10).contains(&dead), "dead rate {dead} far from 0.05");
+        let live: Vec<f64> =
+            (0..m.arrays).filter(|&i| !m.dead[i]).map(|i| m.stuck[i]).collect();
+        let mean = live.iter().sum::<f64>() / live.len() as f64;
+        assert!((0.007..=0.013).contains(&mean), "mean stuck {mean} far from 0.01");
+        assert!(live.iter().all(|&s| (0.0..=1.0).contains(&s)));
+    }
+
+    #[test]
+    fn zero_rates_generate_a_healthy_map() {
+        let m = FaultMap::generate(64, 0.0, 0.0, 7).unwrap();
+        assert!(m.is_healthy());
+        assert_eq!(m, FaultMap { seed: 7, ..FaultMap::healthy(64) });
+    }
+
+    #[test]
+    fn bad_rates_are_rejected() {
+        for bad in [-0.1, 1.5, f64::NAN, f64::INFINITY] {
+            assert!(FaultMap::generate(64, bad, 0.0, 7).is_err(), "stuck {bad}");
+            assert!(FaultMap::generate(64, 0.0, bad, 7).is_err(), "dead {bad}");
+        }
+    }
+
+    #[test]
+    fn json_round_trips_sparsely() {
+        let mut m = FaultMap::healthy(8);
+        m.seed = 42;
+        m.dead[3] = true;
+        m.stuck[5] = 0.012;
+        let text = m.to_json().pretty();
+        let back = FaultMap::from_json_text(&text).unwrap();
+        assert_eq!(m, back);
+        // healthy arrays stay implicit
+        assert!(!text.contains("\"array\": 0"), "{text}");
+    }
+
+    #[test]
+    fn malformed_maps_fail_loudly_not_panic() {
+        for (text, needle) in [
+            ("nonsense", "invalid JSON"),
+            ("[1,2]", "must be a JSON object"),
+            ("{}", "'arrays'"),
+            (r#"{"arrays": 0}"#, "at least 1"),
+            (r#"{"arrays": 4, "dead": [9]}"#, "out of range"),
+            (r#"{"arrays": 4, "dead": ["x"]}"#, "dead[0]"),
+            (r#"{"arrays": 4, "stuck": [{"fraction": 0.1}]}"#, "'array' index"),
+            (r#"{"arrays": 4, "stuck": [{"array": 1}]}"#, "'fraction'"),
+            (r#"{"arrays": 4, "stuck": [{"array": 1, "fraction": 2.0}]}"#, "[0, 1]"),
+            (r#"{"arrays": 4, "bogus": 1}"#, "unknown fault-map field"),
+        ] {
+            let err = format!("{:#}", FaultMap::from_json_text(text).unwrap_err());
+            assert!(err.contains(needle), "{text}: {err}");
+        }
+    }
+
+    #[test]
+    fn load_errors_carry_the_path() {
+        let err = format!("{:#}", FaultMap::load("/no/such/faultmap.json").unwrap_err());
+        assert!(err.contains("/no/such/faultmap.json"), "{err}");
+        let dir = std::env::temp_dir().join(format!("cimfab_fmap_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.json");
+        std::fs::write(&path, "{").unwrap();
+        let err = format!("{:#}", FaultMap::load(path.to_str().unwrap()).unwrap_err());
+        assert!(err.contains("bad.json"), "{err}");
+        assert!(err.contains("invalid JSON"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

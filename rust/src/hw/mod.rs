@@ -17,6 +17,10 @@
 //!   returning `Result` instead of asserting.
 //! * [`HwProfile`] — the composed, named description. JSON-loadable from
 //!   a file path, so custom silicon needs no recompile.
+//! * [`FaultMap`] — permanent faults over the physical arrays (stuck-at
+//!   cell fractions, dead arrays): seeded generation or sparse JSON
+//!   load, consumed by the fault-aware remap pass and write-verify
+//!   accounting.
 //! * [`ProfileRegistry`] — global name/alias-addressable registry
 //!   mirroring [`crate::strategy::StrategyRegistry`]: did-you-mean
 //!   lookups, process-wide registration, and [`ProfileRegistry::resolve`]
@@ -28,11 +32,13 @@
 //! integration test — so every pre-profile result is reproduced exactly.
 
 pub mod device;
+pub mod faults;
 pub mod profile;
 pub mod registry;
 pub mod spec;
 
 pub use device::DeviceModel;
+pub use faults::FaultMap;
 pub use profile::HwProfile;
 pub use registry::{ProfileRegistry, DEFAULT_PROFILE};
 pub use spec::{ArraySpec, ChipSpec};

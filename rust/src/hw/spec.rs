@@ -182,6 +182,12 @@ pub struct ChipSpec {
     /// weight pools with explicit reprogramming. Must be finite and
     /// positive; 1.0 keeps every historical artifact byte-identical.
     pub oversub: f64,
+    /// Physical arrays held back as repair spares (default 0). Spares
+    /// are excluded from the allocator's budget; the fault-aware remap
+    /// pass ([`crate::alloc::remap`]) steers blocks off dead or heavily
+    /// degraded arrays onto them. At 0 the reserve (and its JSON key)
+    /// does not exist, keeping historical artifacts byte-identical.
+    pub spare_arrays: usize,
 }
 
 impl Default for ChipSpec {
@@ -196,6 +202,7 @@ impl Default for ChipSpec {
             router_latency: 1,
             pipeline_images: 8,
             oversub: 1.0,
+            spare_arrays: 0,
         }
     }
 }
@@ -277,6 +284,9 @@ impl ChipSpec {
         if self.oversub != 1.0 {
             pairs.push(("oversub", Json::num(self.oversub)));
         }
+        if self.spare_arrays != 0 {
+            pairs.push(("spare_arrays", Json::num(self.spare_arrays)));
+        }
         Json::obj(pairs)
     }
 
@@ -298,6 +308,7 @@ impl ChipSpec {
             router_latency: j.get("router_latency").as_usize().unwrap_or(d.router_latency),
             pipeline_images: j.get("pipeline_images").as_usize().unwrap_or(d.pipeline_images),
             oversub: j.get("oversub").as_f64().unwrap_or(d.oversub),
+            spare_arrays: j.get("spare_arrays").as_usize().unwrap_or(d.spare_arrays),
         })
     }
 }
@@ -368,6 +379,10 @@ mod tests {
         // … and the default emission carries no oversub key at all, so
         // historical profile JSON (and cache keys) are byte-stable
         assert!(!ChipSpec::default().to_json().pretty().contains("oversub"));
+        // the spare-array reserve follows the same conditional-key rule
+        let c = ChipSpec { spare_arrays: 8, ..ChipSpec::default() };
+        assert_eq!(ChipSpec::from_json(&c.to_json()).unwrap(), c);
+        assert!(!ChipSpec::default().to_json().pretty().contains("spare_arrays"));
     }
 
     #[test]

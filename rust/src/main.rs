@@ -47,8 +47,14 @@ use cimfab::xbar::{variance, ReadMode};
 use std::time::Instant;
 
 fn main() {
-    let args = match Args::from_env(&["verbose", "csv", "no-verify", "no-cache", "telemetry-dump"])
-    {
+    let args = match Args::from_env(&[
+        "verbose",
+        "csv",
+        "no-verify",
+        "no-cache",
+        "no-fault-remap",
+        "telemetry-dump",
+    ]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -233,6 +239,83 @@ fn set_inject(scenarios: &mut [pipeline::Scenario], args: &Args) -> cimfab::Resu
     Ok(())
 }
 
+/// Apply the permanent-fault flags (`--stuck-at-rate`,
+/// `--dead-array-rate`, `--fault-seed`, `--fault-map`,
+/// `--no-fault-remap`, `--spare-arrays`, `--max-write-retries`) to a
+/// batch of scenarios (sweep/util), enforcing the [`ScenarioBuilder`]
+/// rules once up front so every scenario carries the same axes (and the
+/// same id suffix) the builder would have produced.
+fn set_faults(scenarios: &mut [pipeline::Scenario], args: &Args) -> cimfab::Result<()> {
+    let rate = |name: &str| -> cimfab::Result<Option<f64>> {
+        match args.get(name) {
+            Some(_) => Ok(Some(args.get_f64(name, 0.0).map_err(anyhow::Error::msg)?)),
+            None => Ok(None),
+        }
+    };
+    let stuck = rate("stuck-at-rate")?;
+    let dead = rate("dead-array-rate")?;
+    let seed = match args.get("fault-seed") {
+        Some(_) => Some(args.get_u64("fault-seed", 0).map_err(anyhow::Error::msg)?),
+        None => None,
+    };
+    let map = args.get("fault-map").map(str::to_string);
+    let spares = match args.get("spare-arrays") {
+        Some(_) => Some(args.get_usize("spare-arrays", 0).map_err(anyhow::Error::msg)?),
+        None => None,
+    };
+    let retries = match args.get("max-write-retries") {
+        Some(_) => {
+            Some(args.get_u64("max-write-retries", 0).map_err(anyhow::Error::msg)? as u32)
+        }
+        None => None,
+    };
+    let no_remap = args.has_flag("no-fault-remap");
+    let has_faults = stuck.is_some() || dead.is_some() || map.is_some();
+    if !has_faults {
+        anyhow::ensure!(
+            seed.is_none() && spares.is_none() && retries.is_none() && !no_remap,
+            "--fault-seed/--spare-arrays/--max-write-retries/--no-fault-remap only apply \
+             to faulty chips; add --stuck-at-rate, --dead-array-rate or --fault-map"
+        );
+        return Ok(());
+    }
+    if map.is_some() {
+        anyhow::ensure!(
+            stuck.is_none() && dead.is_none(),
+            "--fault-map carries its own fault set and cannot be combined with \
+             --stuck-at-rate/--dead-array-rate"
+        );
+        anyhow::ensure!(
+            seed.is_none(),
+            "--fault-seed does not apply to --fault-map (the map carries its own seed)"
+        );
+    }
+    for (name, r) in [("stuck-at", stuck), ("dead-array", dead)] {
+        if let Some(r) = r {
+            anyhow::ensure!(
+                r.is_finite() && (0.0..=1.0).contains(&r),
+                "{name} rate must be in [0, 1], got {r}"
+            );
+        }
+    }
+    // mirror the builder's default: generated maps get seed 0 unless told
+    // otherwise, loaded maps carry their own seed
+    let seed = match (seed, map.is_none()) {
+        (None, true) => Some(0),
+        (s, _) => s,
+    };
+    for sc in scenarios {
+        sc.stuck_at_rate = stuck;
+        sc.dead_array_rate = dead;
+        sc.fault_seed = seed;
+        sc.fault_map = map.clone();
+        sc.fault_remap = !no_remap;
+        sc.spare_arrays = spares;
+        sc.max_write_retries = retries;
+    }
+    Ok(())
+}
+
 /// `cimfab util capacity [NET] --hw NAME`: how big is the net, does it
 /// fit the chip, and how many PEs does each oversubscription ratio need?
 fn capacity_report(args: &Args) -> cimfab::Result<()> {
@@ -398,6 +481,36 @@ fn run_cmd(args: &Args) -> cimfab::Result<()> {
                 builder = builder
                     .fault_sigma(args.get_f64("fault-sigma", 0.0).map_err(anyhow::Error::msg)?);
             }
+            if args.get("stuck-at-rate").is_some() {
+                builder = builder.stuck_at_rate(
+                    args.get_f64("stuck-at-rate", 0.0).map_err(anyhow::Error::msg)?,
+                );
+            }
+            if args.get("dead-array-rate").is_some() {
+                builder = builder.dead_array_rate(
+                    args.get_f64("dead-array-rate", 0.0).map_err(anyhow::Error::msg)?,
+                );
+            }
+            if args.get("fault-seed").is_some() {
+                builder = builder
+                    .fault_seed(args.get_u64("fault-seed", 0).map_err(anyhow::Error::msg)?);
+            }
+            if let Some(path) = args.get("fault-map") {
+                builder = builder.fault_map(path);
+            }
+            if args.has_flag("no-fault-remap") {
+                builder = builder.fault_remap(false);
+            }
+            if args.get("spare-arrays").is_some() {
+                builder = builder.spare_arrays(
+                    args.get_usize("spare-arrays", 0).map_err(anyhow::Error::msg)?,
+                );
+            }
+            if args.get("max-write-retries").is_some() {
+                builder = builder.max_write_retries(
+                    args.get_u64("max-write-retries", 0).map_err(anyhow::Error::msg)? as u32,
+                );
+            }
             let sc = builder.build()?;
             let out = pipeline::run_scenario(&prep.view(), &sc, dumper.as_ref())?;
             if args.has_flag("verbose") {
@@ -434,6 +547,20 @@ fn run_cmd(args: &Args) -> cimfab::Result<()> {
                     e.worst_ber
                 );
             }
+            if let Some(f) = &out.result.faults {
+                println!(
+                    "permanent faults: {} dead arrays, {} blocks remapped onto {} spares, \
+                     {} derated, {} retired by write-verify ({} retries), \
+                     residual BER {:.3e}",
+                    f.dead_arrays,
+                    f.remapped_blocks,
+                    f.spares_used,
+                    f.derated_arrays,
+                    f.retired_arrays,
+                    cimfab::util::table::fmt_int(f.write_retries),
+                    f.residual_ber
+                );
+            }
             Ok(())
         }
         Some("sweep") => {
@@ -460,6 +587,7 @@ fn run_cmd(args: &Args) -> cimfab::Result<()> {
             set_engine(&mut scenarios, args)?;
             set_oversub(&mut scenarios, args)?;
             set_inject(&mut scenarios, args)?;
+            set_faults(&mut scenarios, args)?;
 
             let t0 = Instant::now();
             let outcomes = run_scenarios_prepared(&prep, &scenarios, &cfg)?;
@@ -500,6 +628,17 @@ fn run_cmd(args: &Args) -> cimfab::Result<()> {
                     .collect();
                 println!("== injected errors ==");
                 report::print_table(&report::error_summary(&rows))?;
+            }
+            if outcomes.iter().any(|o| o.result.faults.is_some()) {
+                let rows: Vec<(String, cimfab::sim::SimResult)> = outcomes
+                    .iter()
+                    .filter(|o| o.result.faults.is_some())
+                    .map(|o| {
+                        (format!("{}@{}", o.scenario.alloc, o.scenario.pes), o.result.clone())
+                    })
+                    .collect();
+                println!("== permanent faults ==");
+                report::print_table(&report::fault_summary(&rows))?;
             }
 
             // Pin the parallel schedule against a serial reference run and
@@ -558,6 +697,7 @@ fn run_cmd(args: &Args) -> cimfab::Result<()> {
             set_engine(&mut scenarios, args)?;
             set_oversub(&mut scenarios, args)?;
             set_inject(&mut scenarios, args)?;
+            set_faults(&mut scenarios, args)?;
             let outcomes = run_scenarios_prepared(&prep, &scenarios, &cfg)?;
             let results: Vec<(String, cimfab::sim::SimResult)> = outcomes
                 .iter()
@@ -581,6 +721,10 @@ fn run_cmd(args: &Args) -> cimfab::Result<()> {
             if results.iter().any(|(_, r)| r.errors.is_some()) {
                 println!("== injected errors ==");
                 report::print_table(&report::error_summary(&results))?;
+            }
+            if results.iter().any(|(_, r)| r.faults.is_some()) {
+                println!("== permanent faults ==");
+                report::print_table(&report::fault_summary(&results))?;
             }
             Ok(())
         }
@@ -878,6 +1022,27 @@ Common options:
   --fault-sigma S          per-cell conductance deviation for injection
                            (default: the hardware profile's device
                            variance; requires --inject-errors)
+  --stuck-at-rate R        permanent stuck-at cell fraction per array
+                           (simulate/sweep/util): generates a seeded
+                           fault map, derates partially-faulty arrays
+                           and drives write-verify retries; off by
+                           default — fault-free runs stay byte-identical
+  --dead-array-rate R      whole-dead-array probability for the generated
+                           fault map (seeded; combines with
+                           --stuck-at-rate)
+  --fault-seed N           fault-map generation seed (default 0;
+                           requires a fault rate)
+  --fault-map PATH.json    load a measured fault map instead of
+                           generating one (mutually exclusive with the
+                           rate flags; carries its own seed)
+  --no-fault-remap         disable the fault-aware remap pass — faulty
+                           arrays stay in service (degraded baseline)
+  --spare-arrays N         spare-array reserve for fault remapping
+                           (default: the hardware profile's
+                           spare_arrays; requires a fault axis)
+  --max-write-retries N    write-verify retry budget per reprogrammed
+                           cell before its array is retired (default 3;
+                           requires a fault axis)
   --dataflow NAME          dataflow model override (simulate only)
   --engine event|stepped   simulation engine (default event; stepped is
                            the bit-identical cycle-walking reference —

@@ -201,9 +201,10 @@ pub fn placement_json(p: &Placement) -> Json {
 }
 
 /// Stage `Simulate`: the full simulation result. Reload keys appear
-/// only when the run actually swapped pools, and the `errors` object
-/// only under `--inject-errors` (historical artifacts are
-/// byte-identical when both axes are off).
+/// only when the run actually swapped pools, the `errors` object only
+/// under `--inject-errors`, and the `faults` object only when the
+/// scenario models permanent faults (historical artifacts are
+/// byte-identical when every axis is off).
 pub fn sim_result_json(r: &SimResult) -> Json {
     let mut pairs = vec![
         ("makespan", Json::num(r.makespan)),
@@ -238,6 +239,20 @@ pub fn sim_result_json(r: &SimResult) -> Json {
                 ("worst_layer", Json::num(e.worst_layer)),
                 ("worst_block", Json::num(e.worst_block)),
                 ("worst_ber", Json::num(e.worst_ber)),
+            ]),
+        ));
+    }
+    if let Some(fl) = &r.faults {
+        pairs.push((
+            "faults",
+            Json::obj(vec![
+                ("dead_arrays", Json::num(fl.dead_arrays)),
+                ("retired_arrays", Json::num(fl.retired_arrays)),
+                ("remapped_blocks", Json::num(fl.remapped_blocks)),
+                ("spares_used", Json::num(fl.spares_used)),
+                ("derated_arrays", Json::num(fl.derated_arrays)),
+                ("write_retries", Json::num(fl.write_retries)),
+                ("residual_ber", Json::num(fl.residual_ber)),
             ]),
         ));
     }

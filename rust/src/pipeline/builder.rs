@@ -53,6 +53,13 @@ pub struct ScenarioBuilder {
     oversub: f64,
     inject_seed: Option<u64>,
     fault_sigma: Option<f64>,
+    stuck_at_rate: Option<f64>,
+    dead_array_rate: Option<f64>,
+    fault_seed: Option<u64>,
+    fault_map: Option<String>,
+    fault_remap: bool,
+    spare_arrays: Option<usize>,
+    max_write_retries: Option<u32>,
     cache_dir: Option<String>,
 }
 
@@ -74,6 +81,13 @@ impl Default for ScenarioBuilder {
             oversub: 1.0,
             inject_seed: None,
             fault_sigma: None,
+            stuck_at_rate: None,
+            dead_array_rate: None,
+            fault_seed: None,
+            fault_map: None,
+            fault_remap: true,
+            spare_arrays: None,
+            max_write_retries: None,
             cache_dir: None,
         }
     }
@@ -202,6 +216,58 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Permanent stuck-at-Gon/Goff cell fraction (`--stuck-at-rate R`):
+    /// generate a seeded [`crate::hw::FaultMap`] where each array has
+    /// roughly `R` of its cells stuck. Off by default — the fault-free
+    /// path stays byte-identical.
+    pub fn stuck_at_rate(mut self, rate: f64) -> Self {
+        self.stuck_at_rate = Some(rate);
+        self
+    }
+
+    /// Whole-dead-array rate for generated fault maps
+    /// (`--dead-array-rate R`).
+    pub fn dead_array_rate(mut self, rate: f64) -> Self {
+        self.dead_array_rate = Some(rate);
+        self
+    }
+
+    /// Seed for generated fault maps (`--fault-seed SEED`); defaults to
+    /// 0 when rates are given without it.
+    pub fn fault_seed(mut self, seed: u64) -> Self {
+        self.fault_seed = Some(seed);
+        self
+    }
+
+    /// Load a measured fault map from a JSON file (`--fault-map PATH`)
+    /// instead of generating one — mutually exclusive with the rates.
+    pub fn fault_map(mut self, path: impl Into<String>) -> Self {
+        self.fault_map = Some(path.into());
+        self
+    }
+
+    /// Toggle the fault-aware remap pass (`--no-fault-remap` turns it
+    /// off to measure the unrepaired chip). On by default.
+    pub fn fault_remap(mut self, on: bool) -> Self {
+        self.fault_remap = on;
+        self
+    }
+
+    /// Override the spare-array reserve (`--spare-arrays N`); without it
+    /// the hardware profile's [`crate::hw::ChipSpec::spare_arrays`]
+    /// applies.
+    pub fn spare_arrays(mut self, n: usize) -> Self {
+        self.spare_arrays = Some(n);
+        self
+    }
+
+    /// Write-verify retry budget per cell (`--max-write-retries N`,
+    /// default 3). Requires a fault axis.
+    pub fn max_write_retries(mut self, n: u32) -> Self {
+        self.max_write_retries = Some(n);
+        self
+    }
+
     /// Cache prepared prefixes content-addressed under this directory
     /// (`--cache-dir`); [`Self::prepare`] then reuses entries across
     /// runs. Off by default.
@@ -309,6 +375,50 @@ impl ScenarioBuilder {
                 "fault sigma must be finite and non-negative, got {sigma}"
             );
         }
+        let has_faults = self.stuck_at_rate.is_some()
+            || self.dead_array_rate.is_some()
+            || self.fault_map.is_some();
+        anyhow::ensure!(
+            self.fault_map.is_none()
+                || (self.stuck_at_rate.is_none() && self.dead_array_rate.is_none()),
+            "--fault-map loads a measured map and cannot be combined with \
+             --stuck-at-rate/--dead-array-rate (generated maps)"
+        );
+        for (name, rate) in
+            [("stuck-at", self.stuck_at_rate), ("dead-array", self.dead_array_rate)]
+        {
+            if let Some(r) = rate {
+                anyhow::ensure!(
+                    r.is_finite() && (0.0..=1.0).contains(&r),
+                    "{name} rate must be in [0, 1], got {r}"
+                );
+            }
+        }
+        if self.fault_seed.is_some() {
+            anyhow::ensure!(
+                self.stuck_at_rate.is_some() || self.dead_array_rate.is_some(),
+                "--fault-seed only seeds generated fault maps; add --stuck-at-rate \
+                 and/or --dead-array-rate (a --fault-map file carries its own seed)"
+            );
+        }
+        if !has_faults {
+            anyhow::ensure!(
+                self.fault_remap,
+                "--no-fault-remap only applies with permanent faults; add \
+                 --stuck-at-rate/--dead-array-rate or --fault-map"
+            );
+            anyhow::ensure!(
+                self.max_write_retries.is_none(),
+                "--max-write-retries only applies with permanent faults; add \
+                 --stuck-at-rate/--dead-array-rate or --fault-map"
+            );
+            anyhow::ensure!(
+                self.spare_arrays.is_none(),
+                "--spare-arrays reserves repair spares for permanent faults; add \
+                 --stuck-at-rate/--dead-array-rate or --fault-map (or set \
+                 spare_arrays in the hardware profile)"
+            );
+        }
         Ok(Scenario {
             prefix,
             alloc: allocator.name().to_string(),
@@ -319,6 +429,16 @@ impl ScenarioBuilder {
             oversub: self.oversub,
             inject_seed: self.inject_seed,
             fault_sigma: self.fault_sigma,
+            stuck_at_rate: self.stuck_at_rate,
+            dead_array_rate: self.dead_array_rate,
+            fault_seed: match (self.fault_seed, has_faults && self.fault_map.is_none()) {
+                (None, true) => Some(0),
+                (seed, _) => seed,
+            },
+            fault_map: self.fault_map.clone(),
+            fault_remap: self.fault_remap,
+            spare_arrays: self.spare_arrays,
+            max_write_retries: self.max_write_retries,
         })
     }
 }
@@ -420,6 +540,69 @@ mod tests {
                 valid().inject_errors(7).fault_sigma(bad).build().unwrap_err().to_string();
             assert!(err.contains("fault sigma"), "{err}");
         }
+    }
+
+    #[test]
+    fn permanent_faults_validate_and_default_off() {
+        let sc = valid().build().unwrap();
+        assert!(!sc.has_faults());
+        assert!(sc.fault_remap);
+        assert_eq!(sc.id(), "block-wise_pes172_img8");
+
+        let sc = valid()
+            .stuck_at_rate(0.01)
+            .dead_array_rate(0.02)
+            .fault_seed(7)
+            .spare_arrays(16)
+            .max_write_retries(5)
+            .build()
+            .unwrap();
+        assert!(sc.has_faults());
+        assert_eq!(sc.stuck_at_rate, Some(0.01));
+        assert_eq!(sc.dead_array_rate, Some(0.02));
+        assert_eq!(sc.fault_seed, Some(7));
+        assert_eq!(sc.spare_arrays, Some(16));
+        assert_eq!(sc.max_write_retries, Some(5));
+        assert_eq!(sc.id(), "block-wise_pes172_img8_sa0.01_da0.02_flt7_sp16_wr5");
+
+        // rates without an explicit seed pin seed 0 so artifacts stay
+        // reproducible
+        let sc = valid().stuck_at_rate(0.01).build().unwrap();
+        assert_eq!(sc.fault_seed, Some(0));
+        assert_eq!(sc.id(), "block-wise_pes172_img8_sa0.01_flt0");
+
+        // turning repair off is part of the id
+        let sc = valid().stuck_at_rate(0.01).fault_remap(false).build().unwrap();
+        assert!(!sc.fault_remap);
+        assert!(sc.id().ends_with("_noremap"), "{}", sc.id());
+
+        // bad rates fail fast
+        for bad in [-0.1, 1.5, f64::NAN, f64::INFINITY] {
+            let err = valid().stuck_at_rate(bad).build().unwrap_err().to_string();
+            assert!(err.contains("[0, 1]"), "{err}");
+            let err = valid().dead_array_rate(bad).build().unwrap_err().to_string();
+            assert!(err.contains("[0, 1]"), "{err}");
+        }
+
+        // fault knobs without a fault axis are config errors
+        let err = valid().fault_seed(7).build().unwrap_err().to_string();
+        assert!(err.contains("--stuck-at-rate"), "{err}");
+        let err = valid().fault_remap(false).build().unwrap_err().to_string();
+        assert!(err.contains("--no-fault-remap"), "{err}");
+        let err = valid().max_write_retries(5).build().unwrap_err().to_string();
+        assert!(err.contains("--max-write-retries"), "{err}");
+        let err = valid().spare_arrays(4).build().unwrap_err().to_string();
+        assert!(err.contains("--spare-arrays"), "{err}");
+
+        // a measured map carries its own seed and excludes the rates
+        let err =
+            valid().fault_map("m.json").stuck_at_rate(0.01).build().unwrap_err().to_string();
+        assert!(err.contains("cannot be combined"), "{err}");
+        let err = valid().fault_map("m.json").fault_seed(7).build().unwrap_err().to_string();
+        assert!(err.contains("carries its own seed"), "{err}");
+        let sc = valid().fault_map("maps/chip.json").build().unwrap();
+        assert_eq!(sc.fault_seed, None);
+        assert!(sc.id().contains("_fmap-"), "{}", sc.id());
     }
 
     #[test]

@@ -148,6 +148,15 @@ impl ScenarioOutcome {
             pairs.push(("error_ber", Json::num(e.ber)));
             pairs.push(("worst_block_ber", Json::num(e.worst_ber)));
         }
+        if let Some(fl) = &self.result.faults {
+            pairs.push(("fault_dead_arrays", Json::num(fl.dead_arrays)));
+            pairs.push(("fault_retired_arrays", Json::num(fl.retired_arrays)));
+            pairs.push(("fault_remapped_blocks", Json::num(fl.remapped_blocks)));
+            pairs.push(("fault_spares_used", Json::num(fl.spares_used)));
+            pairs.push(("fault_derated_arrays", Json::num(fl.derated_arrays)));
+            pairs.push(("fault_write_retries", Json::num(fl.write_retries)));
+            pairs.push(("fault_residual_ber", Json::num(fl.residual_ber)));
+        }
         Json::obj(pairs)
     }
 }
@@ -420,12 +429,25 @@ pub fn run_scenario(
     // otherwise an undersized hardware profile's declared ratio applies.
     let oversub = if sc.oversub != 1.0 { sc.oversub } else { prep.hw.chip.oversub };
 
+    // Spare reserve: the scenario override wins; otherwise the hardware
+    // profile's declared reserve applies. Spares come off the
+    // allocator's budget — they exist to absorb remapped blocks, not to
+    // host planned ones.
+    let spare_arrays = sc.spare_arrays.unwrap_or(prep.hw.chip.spare_arrays);
+    anyhow::ensure!(
+        spare_arrays < chip.total_arrays(),
+        "spare reserve of {spare_arrays} array(s) leaves nothing of the chip's {} \
+         arrays to allocate; lower --spare-arrays or grow --pes",
+        chip.total_arrays()
+    );
+    let budget = chip.total_arrays() - spare_arrays;
+
     // Allocate
-    let plan = reg.timer("stage.allocate").time(|| {
+    let mut plan = reg.timer("stage.allocate").time(|| {
         if oversub == 1.0 {
-            allocator.allocate(prep.map, prep.profile, chip.total_arrays())
+            allocator.allocate(prep.map, prep.profile, budget)
         } else {
-            allocator.allocate_oversub(prep.map, prep.profile, chip.total_arrays(), oversub)
+            allocator.allocate_oversub(prep.map, prep.profile, budget, oversub)
         }
     })?;
     anyhow::ensure!(
@@ -434,6 +456,44 @@ pub fn run_scenario(
         flow.name(),
         allocator.name()
     );
+
+    // Permanent faults: build the map (measured file or seeded
+    // generation over the plan's array footprint plus the reserve) and
+    // run the fault-aware remap pass. Spare exhaustion surfaces here as
+    // a diagnostic error, before any simulation work.
+    let mut fault_ctx: Option<(crate::alloc::remap::RemapStats, u64)> = None;
+    if sc.has_faults() {
+        let used = plan.arrays_used(prep.map);
+        let faults = match &sc.fault_map {
+            Some(path) => {
+                let m = crate::hw::FaultMap::load(path)?;
+                anyhow::ensure!(
+                    m.arrays >= used + spare_arrays,
+                    "fault map {path} covers {} arrays but scenario {} occupies {used} \
+                     plus {spare_arrays} spare(s)",
+                    m.arrays,
+                    sc.id()
+                );
+                m
+            }
+            None => crate::hw::FaultMap::generate(
+                used + spare_arrays,
+                sc.stuck_at_rate.unwrap_or(0.0),
+                sc.dead_array_rate.unwrap_or(0.0),
+                sc.fault_seed.unwrap_or(0),
+            )?,
+        };
+        let seed = faults.seed;
+        let (repaired, stats) = crate::alloc::remap::remap_plan(
+            &plan,
+            prep.map,
+            &faults,
+            spare_arrays,
+            sc.fault_remap,
+        )?;
+        plan = repaired;
+        fault_ctx = Some((stats, seed));
+    }
     if let Some(d) = dump {
         d.dump(&sub, Stage::Allocate, &artifact::plan_json(&plan, prep.map))?;
     }
@@ -462,10 +522,34 @@ pub fn run_scenario(
         let sigma = sc.fault_sigma.unwrap_or_else(|| prep.hw.device.variance());
         cfg = cfg.with_inject(crate::sim::FaultCfg { seed, sigma });
     }
+    if let Some((rs, fault_seed)) = &fault_ctx {
+        // a stuck cell fails to reprogram roughly half the time it is
+        // targeted, so the mean in-service stuck fraction doubles as the
+        // per-cell write-verify failure probability
+        cfg = cfg.with_write_verify(crate::sim::WriteVerifyCfg {
+            seed: *fault_seed,
+            fail_prob: (rs.mean_stuck_in_use / 2.0).clamp(0.0, 1.0),
+            max_retries: sc.max_write_retries.unwrap_or(3),
+        });
+    }
     let chip = logical;
-    let result = reg
+    let mut result = reg
         .timer("stage.simulate")
         .time(|| crate::sim::simulate(&chip, prep.map, &plan, &placement, prep.trace, cfg));
+    if let Some((rs, _)) = &fault_ctx {
+        // merge the remap pass's repair accounting with the simulator's
+        // write-verify tallies into one FaultStats block
+        let wv = result.faults.unwrap_or_default();
+        result.faults = Some(crate::sim::FaultStats {
+            dead_arrays: rs.dead_arrays,
+            retired_arrays: wv.retired_arrays,
+            remapped_blocks: rs.remapped_blocks,
+            spares_used: rs.spares_used,
+            derated_arrays: rs.derated_arrays,
+            write_retries: wv.write_retries,
+            residual_ber: rs.residual_ber,
+        });
+    }
     if let Some(d) = dump {
         d.dump(&sub, Stage::Simulate, &artifact::sim_result_json(&result))?;
     }
@@ -588,6 +672,60 @@ mod tests {
     fn unknown_net_rejected() {
         assert!(build_graph("alexnet", 32).is_err());
         assert!(min_pes("alexnet", 32).is_err());
+    }
+
+    #[test]
+    fn faulty_scenario_reports_fault_stats() {
+        let prep = prepare(&spec(), None).unwrap();
+        // stuck-at only: nothing needs spares, damage is derated in place
+        let sc = ScenarioBuilder::from_prefix(&spec())
+            .alloc("block-wise")
+            .pes(172)
+            .sim_images(2)
+            .stuck_at_rate(0.01)
+            .fault_seed(7)
+            .build()
+            .unwrap();
+        let out = run_scenario(&prep.view(), &sc, None).unwrap();
+        let fl = out.result.faults.expect("fault axes must report FaultStats");
+        assert!(fl.derated_arrays > 0, "{fl:?}");
+        assert!(fl.residual_ber > 0.0, "{fl:?}");
+        assert_eq!(fl.dead_arrays, 0);
+        assert!(out.plan.read_rows.is_some(), "derating must reach the plan");
+        // fault-free scenarios keep the historical result shape
+        let clean = ScenarioBuilder::from_prefix(&spec())
+            .alloc("block-wise")
+            .pes(172)
+            .sim_images(2)
+            .build()
+            .unwrap();
+        assert!(run_scenario(&prep.view(), &clean, None).unwrap().result.faults.is_none());
+    }
+
+    #[test]
+    fn dead_arrays_remap_onto_spares_or_fail_with_a_diagnostic() {
+        let prep = prepare(&spec(), None).unwrap();
+        let faulty = |spares: Option<usize>| {
+            let mut b = ScenarioBuilder::from_prefix(&spec())
+                .alloc("block-wise")
+                .pes(172)
+                .sim_images(2)
+                .dead_array_rate(0.01)
+                .fault_seed(7);
+            if let Some(sp) = spares {
+                b = b.spare_arrays(sp);
+            }
+            run_scenario(&prep.view(), &b.build().unwrap(), None)
+        };
+        // a healthy reserve absorbs the dead arrays
+        let out = faulty(Some(256)).unwrap();
+        let fl = out.result.faults.unwrap();
+        assert!(fl.dead_arrays > 0, "{fl:?}");
+        assert!(fl.remapped_blocks > 0, "{fl:?}");
+        assert!(fl.spares_used > 0, "{fl:?}");
+        // no reserve: a clear diagnostic, not a panic
+        let err = format!("{:#}", faulty(None).unwrap_err());
+        assert!(err.contains("exceed spare capacity"), "{err}");
     }
 
     #[test]

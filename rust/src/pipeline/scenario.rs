@@ -162,6 +162,28 @@ pub struct Scenario {
     /// `None` defers to the hardware profile's device variance; only
     /// meaningful alongside `inject_seed`.
     pub fault_sigma: Option<f64>,
+    /// Permanent stuck-at-Gon/Goff cell fraction for generated fault
+    /// maps (`--stuck-at-rate`). `None` — the historical case — leaves
+    /// ids and artifacts untouched.
+    pub stuck_at_rate: Option<f64>,
+    /// Whole-dead-array rate for generated fault maps
+    /// (`--dead-array-rate`).
+    pub dead_array_rate: Option<f64>,
+    /// Seed for generated fault maps (`--fault-seed`; defaults to 0
+    /// when rates are given without it).
+    pub fault_seed: Option<u64>,
+    /// Path to a measured fault-map JSON (`--fault-map`) — mutually
+    /// exclusive with the generated rates.
+    pub fault_map: Option<String>,
+    /// Run the fault-aware remap pass over the plan (default; off with
+    /// `--no-fault-remap` to measure the unrepaired chip).
+    pub fault_remap: bool,
+    /// Spare-array reserve override (`--spare-arrays`). `None` defers
+    /// to the hardware profile's [`crate::hw::ChipSpec::spare_arrays`].
+    pub spare_arrays: Option<usize>,
+    /// Write-verify retry budget per cell (`--max-write-retries`).
+    /// `None` defers to the default of 3; only meaningful with faults on.
+    pub max_write_retries: Option<u32>,
 }
 
 impl Scenario {
@@ -192,7 +214,38 @@ impl Scenario {
                 id.push_str(&format!("_fs{sigma}"));
             }
         }
+        if self.has_faults() {
+            if let Some(sa) = self.stuck_at_rate {
+                id.push_str(&format!("_sa{sa}"));
+            }
+            if let Some(da) = self.dead_array_rate {
+                id.push_str(&format!("_da{da}"));
+            }
+            if let Some(seed) = self.fault_seed {
+                id.push_str(&format!("_flt{seed}"));
+            }
+            if let Some(path) = &self.fault_map {
+                id.push_str(&format!("_fmap-{}", sanitized_tag(path)));
+            }
+            if !self.fault_remap {
+                id.push_str("_noremap");
+            }
+            if let Some(sp) = self.spare_arrays {
+                id.push_str(&format!("_sp{sp}"));
+            }
+            if let Some(wr) = self.max_write_retries {
+                id.push_str(&format!("_wr{wr}"));
+            }
+        }
         id
+    }
+
+    /// Does this scenario model permanent faults? (A rate or a map; the
+    /// repair/spare/retry knobs only matter when one is present.)
+    pub fn has_faults(&self) -> bool {
+        self.stuck_at_rate.is_some()
+            || self.dead_array_rate.is_some()
+            || self.fault_map.is_some()
     }
 
     /// Deterministic JSON form (part of every scenario-stage artifact).
@@ -215,6 +268,29 @@ impl Scenario {
         }
         if let Some(sigma) = self.fault_sigma {
             pairs.push(("fault_sigma", Json::num(sigma)));
+        }
+        if self.has_faults() {
+            if let Some(sa) = self.stuck_at_rate {
+                pairs.push(("stuck_at_rate", Json::num(sa)));
+            }
+            if let Some(da) = self.dead_array_rate {
+                pairs.push(("dead_array_rate", Json::num(da)));
+            }
+            if let Some(seed) = self.fault_seed {
+                pairs.push(("fault_seed", Json::num(seed)));
+            }
+            if let Some(path) = &self.fault_map {
+                pairs.push(("fault_map", Json::str(path)));
+            }
+            if !self.fault_remap {
+                pairs.push(("fault_remap", Json::Bool(false)));
+            }
+            if let Some(sp) = self.spare_arrays {
+                pairs.push(("spare_arrays", Json::num(sp)));
+            }
+            if let Some(wr) = self.max_write_retries {
+                pairs.push(("max_write_retries", Json::num(wr)));
+            }
         }
         Json::obj(pairs)
     }
@@ -260,6 +336,13 @@ pub fn scenarios_for(
                 oversub: 1.0,
                 inject_seed: None,
                 fault_sigma: None,
+                stuck_at_rate: None,
+                dead_array_rate: None,
+                fault_seed: None,
+                fault_map: None,
+                fault_remap: true,
+                spare_arrays: None,
+                max_write_retries: None,
             });
         }
     }
@@ -302,6 +385,13 @@ mod tests {
             oversub: 1.0,
             inject_seed: None,
             fault_sigma: None,
+            stuck_at_rate: None,
+            dead_array_rate: None,
+            fault_seed: None,
+            fault_map: None,
+            fault_remap: true,
+            spare_arrays: None,
+            max_write_retries: None,
         }
     }
 
@@ -355,6 +445,55 @@ mod tests {
         sc.fault_sigma = Some(0.05);
         assert_eq!(sc.id(), "block-wise_pes172_img8_err7_fs0.05");
         assert_eq!(sc.to_json().get("fault_sigma").as_f64(), Some(0.05));
+    }
+
+    #[test]
+    fn permanent_faults_show_up_in_the_id_only_when_on() {
+        let mut sc = scenario("block-wise", "block-wise");
+        assert_eq!(sc.id(), "block-wise_pes172_img8"); // off keeps historical form
+        assert!(!sc.has_faults());
+        let clean = sc.to_json().pretty();
+        for key in ["stuck_at_rate", "dead_array_rate", "fault_seed", "fault_map", "fault_remap"]
+        {
+            assert!(!clean.contains(key), "{key} leaked into a fault-free artifact");
+        }
+        // the repair/spare/retry knobs alone do not turn the axis on
+        sc.fault_remap = false;
+        sc.spare_arrays = Some(8);
+        sc.max_write_retries = Some(5);
+        assert_eq!(sc.id(), "block-wise_pes172_img8");
+        assert_eq!(sc.to_json().pretty(), clean);
+        sc.fault_remap = true;
+        sc.spare_arrays = None;
+        sc.max_write_retries = None;
+
+        sc.stuck_at_rate = Some(0.01);
+        sc.dead_array_rate = Some(0.02);
+        sc.fault_seed = Some(7);
+        assert!(sc.has_faults());
+        assert_eq!(sc.id(), "block-wise_pes172_img8_sa0.01_da0.02_flt7");
+        assert_eq!(sc.to_json().get("stuck_at_rate").as_f64(), Some(0.01));
+        assert_eq!(sc.to_json().get("dead_array_rate").as_f64(), Some(0.02));
+        assert_eq!(sc.to_json().get("fault_seed").as_u64(), Some(7));
+        sc.fault_remap = false;
+        sc.spare_arrays = Some(8);
+        sc.max_write_retries = Some(5);
+        assert_eq!(sc.id(), "block-wise_pes172_img8_sa0.01_da0.02_flt7_noremap_sp8_wr5");
+        assert_eq!(sc.to_json().get("fault_remap").as_bool(), Some(false));
+        assert_eq!(sc.to_json().get("spare_arrays").as_usize(), Some(8));
+        assert_eq!(sc.to_json().get("max_write_retries").as_u64(), Some(5));
+    }
+
+    #[test]
+    fn fault_map_paths_make_path_safe_distinct_ids() {
+        let mut a = scenario("block-wise", "block-wise");
+        a.fault_map = Some("maps/chip-a.json".into());
+        let mut b = scenario("block-wise", "block-wise");
+        b.fault_map = Some("maps/chip-b.json".into());
+        assert!(a.id().contains("_fmap-"), "{}", a.id());
+        assert!(!a.id().contains('/'), "{}", a.id());
+        assert_ne!(a.id(), b.id());
+        assert_eq!(a.to_json().get("fault_map").as_str(), Some("maps/chip-a.json"));
     }
 
     #[test]

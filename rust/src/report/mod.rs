@@ -172,6 +172,38 @@ pub fn error_summary(results: &[(String, SimResult)]) -> Table {
     t
 }
 
+/// Permanent-fault summary for faulty-chip runs: dead/retired arrays,
+/// remapped blocks, spares consumed, write-verify retries, and the
+/// residual BER each scenario carries after repair. Only rendered when
+/// at least one result carries [`crate::sim::FaultStats`] (callers skip
+/// it otherwise, so fault-free report output is unchanged).
+pub fn fault_summary(results: &[(String, SimResult)]) -> Table {
+    let mut t = Table::new([
+        "algorithm",
+        "dead",
+        "retired",
+        "remapped",
+        "spares used",
+        "derated",
+        "retries",
+        "residual BER",
+    ]);
+    for (alloc, r) in results {
+        let Some(f) = &r.faults else { continue };
+        t.row([
+            alloc.clone(),
+            f.dead_arrays.to_string(),
+            f.retired_arrays.to_string(),
+            f.remapped_blocks.to_string(),
+            f.spares_used.to_string(),
+            f.derated_arrays.to_string(),
+            crate::util::table::fmt_int(f.write_retries),
+            format!("{:.3e}", f.residual_ber),
+        ]);
+    }
+    t
+}
+
 /// Throughput speedup summary (the paper's headline numbers), relative
 /// to the three reference strategies when present.
 pub fn speedup_summary(results: &[(String, SimResult)]) -> Table {
@@ -219,6 +251,7 @@ mod tests {
             reload_cells: 0,
             reload_stall_cycles: 0,
             errors: None,
+            faults: None,
         }
     }
 
@@ -303,6 +336,27 @@ mod tests {
         assert!(rendered.contains("4.200e-4"), "{rendered}");
         assert!(rendered.contains("L3[1]"), "{rendered}");
         assert!(!rendered.contains("fault-free"), "{rendered}");
+    }
+
+    #[test]
+    fn fault_summary_itemizes_repairs_and_skips_healthy_rows() {
+        let mut r = dummy_result(42.0);
+        r.faults = Some(crate::sim::FaultStats {
+            dead_arrays: 5,
+            retired_arrays: 2,
+            remapped_blocks: 4,
+            spares_used: 7,
+            derated_arrays: 3,
+            write_retries: 1_200_000,
+            residual_ber: 6.1e-3,
+        });
+        let rows =
+            vec![("block-wise".to_string(), r), ("healthy".to_string(), dummy_result(1.0))];
+        let rendered = fault_summary(&rows).render();
+        assert!(rendered.contains("block-wise"), "{rendered}");
+        assert!(rendered.contains("1,200,000"), "{rendered}");
+        assert!(rendered.contains("6.100e-3"), "{rendered}");
+        assert!(!rendered.contains("healthy"), "{rendered}");
     }
 
     #[test]

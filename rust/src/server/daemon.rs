@@ -19,6 +19,14 @@
 //! from running jobs on different workers); `threads` bounds the
 //! intra-prepare fan-out instead.
 //!
+//! Workers are panic-isolated: each scenario runs under
+//! `catch_unwind`, so a panicking allocation strategy (e.g. a buggy
+//! registered plugin) costs the client one typed `error` line and one
+//! `failed` count instead of a dead worker thread. Jobs may carry a
+//! `timeout_ms` deadline (measured from admission): between scenarios
+//! the worker checks it, cooperatively stops at the first scenario past
+//! the deadline, and marks the terminal `done` line `timed_out:true`.
+//!
 //! Shutdown is graceful from either trigger — a `shutdown` wire request
 //! or `SIGTERM`/`SIGINT`: stop accepting, drop queued-but-unstarted
 //! jobs, let in-flight jobs finish, join the workers, remove the Unix
@@ -32,7 +40,7 @@ use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::pool::PrefixPool;
 use super::protocol::{self, Request};
@@ -121,6 +129,9 @@ struct Job {
     handle: Arc<JobHandle>,
     prefix: PrefixSpec,
     scenarios: Vec<Scenario>,
+    /// Absolute deadline derived from the submit's `timeout_ms`
+    /// (measured from admission); `None` = run to completion.
+    deadline: Option<Instant>,
     out: SharedWriter,
 }
 
@@ -486,7 +497,8 @@ fn submit(shared: &Arc<Shared>, out: &SharedWriter, spec: protocol::JobSpec) {
         jobs.insert(id.clone(), handle.clone());
     }
     let n = scenarios.len();
-    let job = Job { handle, prefix, scenarios, out: out.clone() };
+    let deadline = spec.timeout_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+    let job = Job { handle, prefix, scenarios, deadline, out: out.clone() };
     // hold the connection writer across the push and the ack: a worker
     // can pop the job immediately, but its result/done lines block on
     // this mutex, so the client always sees `accepted` first
@@ -523,7 +535,7 @@ fn worker_loop(shared: &Arc<Shared>) {
             job.handle.set_state(JobState::Cancelled);
             shared.stats.cancelled.fetch_add(1, Ordering::Relaxed);
             telemetry::global().counter("serve.jobs.cancelled").incr();
-            write_line(&job.out, &protocol::done_line(job.handle.id(), 0, 0, true));
+            write_line(&job.out, &protocol::done_line(job.handle.id(), 0, 0, true, false));
             shared.unregister(job.handle.id());
             continue;
         }
@@ -549,32 +561,61 @@ fn run_job(shared: &Arc<Shared>, job: &Job) {
                 shared.stats.failed.fetch_add(1, Ordering::Relaxed);
                 telemetry::global().counter("serve.jobs.failed").incr();
                 write_line(&job.out, &protocol::error_line(Some(id), &format!("{e:#}")));
-                write_line(&job.out, &protocol::done_line(id, 0, job.scenarios.len(), false));
+                write_line(
+                    &job.out,
+                    &protocol::done_line(id, 0, job.scenarios.len(), false, false),
+                );
                 return;
             }
         };
-    let (mut ok, mut failed, mut cancelled) = (0usize, 0usize, false);
+    let (mut ok, mut failed, mut cancelled, mut timed_out) = (0usize, 0usize, false, false);
     for (i, sc) in job.scenarios.iter().enumerate() {
         if job.handle.is_cancelled() {
             cancelled = true;
             break;
         }
-        match run_scenario(&prep.view(), sc, None) {
-            Ok(outcome) => {
+        if job.deadline.is_some_and(|d| Instant::now() >= d) {
+            timed_out = true;
+            break;
+        }
+        // panic isolation: a buggy registered strategy (or any other
+        // panic inside the scenario) must cost one error line, not the
+        // worker thread and its queue slot
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_scenario(&prep.view(), sc, None)
+        }));
+        match outcome {
+            Ok(Ok(outcome)) => {
                 ok += 1;
                 write_line(&job.out, &protocol::result_line(id, i, status.name(), &outcome));
             }
-            Err(e) => {
+            Ok(Err(e)) => {
                 failed += 1;
                 write_line(
                     &job.out,
                     &protocol::error_line(Some(id), &format!("scenario {}: {e:#}", sc.id())),
                 );
             }
+            Err(payload) => {
+                failed += 1;
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "opaque panic payload".to_string());
+                telemetry::global().counter("serve.scenarios.panicked").incr();
+                write_line(
+                    &job.out,
+                    &protocol::error_line(
+                        Some(id),
+                        &format!("scenario {}: panicked: {msg}", sc.id()),
+                    ),
+                );
+            }
         }
     }
-    write_line(&job.out, &protocol::done_line(id, ok, failed, cancelled));
-    let (state, counter) = if cancelled {
+    write_line(&job.out, &protocol::done_line(id, ok, failed, cancelled, timed_out));
+    let (state, counter) = if cancelled || timed_out {
         (JobState::Cancelled, &shared.stats.cancelled)
     } else if failed > 0 {
         (JobState::Failed, &shared.stats.failed)

@@ -72,6 +72,10 @@ pub struct JobSpec {
     /// AOT artifacts directory (golden stats only); default
     /// `artifacts`.
     pub artifacts_dir: String,
+    /// Optional job deadline in milliseconds: a running job past its
+    /// deadline is cooperatively cancelled between scenarios and its
+    /// terminal `done` line carries `timed_out:true`. Absent = no limit.
+    pub timeout_ms: Option<u64>,
     /// The scenarios to run against the shared prefix (at least one).
     pub scenarios: Vec<ScenarioReq>,
 }
@@ -88,6 +92,7 @@ impl Default for JobSpec {
             profile_images: 2,
             seed: 7,
             artifacts_dir: "artifacts".into(),
+            timeout_ms: None,
             scenarios: Vec::new(),
         }
     }
@@ -112,6 +117,20 @@ pub struct ScenarioReq {
     pub inject_errors: Option<u64>,
     /// Injection σ override; defaults to the device's variance.
     pub fault_sigma: Option<f64>,
+    /// Permanent stuck-at cell fraction; default absent (fault-free).
+    pub stuck_at_rate: Option<f64>,
+    /// Whole-dead-array rate; default absent (fault-free).
+    pub dead_array_rate: Option<f64>,
+    /// Fault-map generation seed; defaults to 0 when a rate is set.
+    pub fault_seed: Option<u64>,
+    /// Path to a measured fault-map JSON (excludes the rate fields).
+    pub fault_map: Option<String>,
+    /// Whether the fault-aware remap pass runs; default true.
+    pub fault_remap: bool,
+    /// Spare-array reserve override for remapping.
+    pub spare_arrays: Option<usize>,
+    /// Write-verify retry budget override.
+    pub max_write_retries: Option<u32>,
 }
 
 impl Default for ScenarioReq {
@@ -125,6 +144,13 @@ impl Default for ScenarioReq {
             oversub: 1.0,
             inject_errors: None,
             fault_sigma: None,
+            stuck_at_rate: None,
+            dead_array_rate: None,
+            fault_seed: None,
+            fault_map: None,
+            fault_remap: true,
+            spare_arrays: None,
+            max_write_retries: None,
         }
     }
 }
@@ -162,6 +188,27 @@ impl JobSpec {
             }
             if let Some(sigma) = req.fault_sigma {
                 b = b.fault_sigma(sigma);
+            }
+            if let Some(rate) = req.stuck_at_rate {
+                b = b.stuck_at_rate(rate);
+            }
+            if let Some(rate) = req.dead_array_rate {
+                b = b.dead_array_rate(rate);
+            }
+            if let Some(seed) = req.fault_seed {
+                b = b.fault_seed(seed);
+            }
+            if let Some(path) = &req.fault_map {
+                b = b.fault_map(path);
+            }
+            if !req.fault_remap {
+                b = b.fault_remap(false);
+            }
+            if let Some(n) = req.spare_arrays {
+                b = b.spare_arrays(n);
+            }
+            if let Some(n) = req.max_write_retries {
+                b = b.max_write_retries(n);
             }
             scenarios
                 .push(b.build().map_err(|e| anyhow::anyhow!("scenario {i}: {e:#}"))?);
@@ -215,6 +262,19 @@ fn expect_f64(r: &mut IoJsonReader, field: &str) -> Result<f64, ServerError> {
     }
 }
 
+fn expect_bool(r: &mut IoJsonReader, field: &str) -> Result<bool, ServerError> {
+    match r.next_event()? {
+        Some(Event::Bool(b)) => Ok(b),
+        _ => Err(protocol(format!("field '{field}' must be a boolean"))),
+    }
+}
+
+fn expect_u32(r: &mut IoJsonReader, field: &str) -> Result<u32, ServerError> {
+    let n = expect_u64(r, field)?;
+    u32::try_from(n)
+        .map_err(|_| protocol(format!("field '{field}' must fit a 32-bit integer, got {n}")))
+}
+
 fn parse_scenarios(r: &mut IoJsonReader) -> Result<Vec<ScenarioReq>, ServerError> {
     match r.next_event()? {
         Some(Event::BeginArray) => {}
@@ -251,6 +311,15 @@ fn parse_scenario_body(r: &mut IoJsonReader) -> Result<ScenarioReq, ServerError>
             "oversub" => sc.oversub = expect_f64(r, "oversub")?,
             "inject_errors" => sc.inject_errors = Some(expect_u64(r, "inject_errors")?),
             "fault_sigma" => sc.fault_sigma = Some(expect_f64(r, "fault_sigma")?),
+            "stuck_at_rate" => sc.stuck_at_rate = Some(expect_f64(r, "stuck_at_rate")?),
+            "dead_array_rate" => sc.dead_array_rate = Some(expect_f64(r, "dead_array_rate")?),
+            "fault_seed" => sc.fault_seed = Some(expect_u64(r, "fault_seed")?),
+            "fault_map" => sc.fault_map = Some(expect_str(r, "fault_map")?),
+            "fault_remap" => sc.fault_remap = expect_bool(r, "fault_remap")?,
+            "spare_arrays" => sc.spare_arrays = Some(expect_usize(r, "spare_arrays")?),
+            "max_write_retries" => {
+                sc.max_write_retries = Some(expect_u32(r, "max_write_retries")?)
+            }
             other => return Err(protocol(format!("unknown scenario field '{other}'"))),
         }
     }
@@ -294,6 +363,7 @@ pub fn parse_request(line: &[u8]) -> Result<Request, ServerError> {
             "profile_images" => spec.profile_images = expect_usize(&mut r, "profile_images")?,
             "seed" => spec.seed = expect_u64(&mut r, "seed")?,
             "artifacts" => spec.artifacts_dir = expect_str(&mut r, "artifacts")?,
+            "timeout_ms" => spec.timeout_ms = Some(expect_u64(&mut r, "timeout_ms")?),
             "scenarios" => {
                 spec.scenarios = parse_scenarios(&mut r)?;
                 saw_scenarios = true;
@@ -379,8 +449,16 @@ pub fn result_line(job: &str, index: usize, prefix: &str, outcome: &ScenarioOutc
     })
 }
 
-/// `{"type":"done",...}` — the job's terminal line.
-pub fn done_line(job: &str, ok: usize, failed: usize, cancelled: bool) -> Vec<u8> {
+/// `{"type":"done",...}` — the job's terminal line. `timed_out` is
+/// emitted only when true, so deadline-free jobs keep the historical
+/// byte layout.
+pub fn done_line(
+    job: &str,
+    ok: usize,
+    failed: usize,
+    cancelled: bool,
+    timed_out: bool,
+) -> Vec<u8> {
     line(|w| {
         w.begin_obj()?;
         w.key("type")?;
@@ -393,6 +471,10 @@ pub fn done_line(job: &str, ok: usize, failed: usize, cancelled: bool) -> Vec<u8
         w.num_value(failed as u64)?;
         w.key("cancelled")?;
         w.bool_value(cancelled)?;
+        if timed_out {
+            w.key("timed_out")?;
+            w.bool_value(true)?;
+        }
         w.end_obj()
     })
 }
@@ -531,6 +613,66 @@ mod tests {
     }
 
     #[test]
+    fn permanent_faults_ride_the_scenario_and_validate() {
+        let Request::Submit(spec) = parse_request(
+            br#"{"op":"submit","net":"resnet18","res":32,
+                "scenarios":[{"pes":86,"stuck_at_rate":0.01,"dead_array_rate":0.02,
+                              "fault_seed":7,"spare_arrays":16,"max_write_retries":5,
+                              "fault_remap":false}]}"#,
+        )
+        .unwrap() else {
+            panic!("expected submit")
+        };
+        let sc = &spec.scenarios[0];
+        assert_eq!(sc.stuck_at_rate, Some(0.01));
+        assert_eq!(sc.dead_array_rate, Some(0.02));
+        assert_eq!(sc.fault_seed, Some(7));
+        assert!(!sc.fault_remap);
+        assert_eq!(sc.spare_arrays, Some(16));
+        assert_eq!(sc.max_write_retries, Some(5));
+        let (_, scenarios) = spec.build().unwrap();
+        let id = scenarios[0].id();
+        assert!(id.contains("_sa0.01_da0.02_flt7_noremap_sp16_wr5"), "{id}");
+        // builder rules still gate server submissions
+        let Request::Submit(bad) = parse_request(
+            br#"{"op":"submit","net":"resnet18",
+                "scenarios":[{"pes":86,"stuck_at_rate":1.5}]}"#,
+        )
+        .unwrap() else {
+            panic!("expected submit")
+        };
+        let err = format!("{:#}", bad.build().unwrap_err());
+        assert!(err.contains("[0, 1]"), "{err}");
+        let Request::Submit(bad) = parse_request(
+            br#"{"op":"submit","net":"resnet18",
+                "scenarios":[{"pes":86,"fault_map":"m.json","stuck_at_rate":0.01}]}"#,
+        )
+        .unwrap() else {
+            panic!("expected submit")
+        };
+        let err = format!("{:#}", bad.build().unwrap_err());
+        assert!(err.contains("cannot be combined"), "{err}");
+    }
+
+    #[test]
+    fn timeout_ms_parses_on_submit() {
+        let Request::Submit(spec) = parse_request(
+            br#"{"op":"submit","net":"resnet18","timeout_ms":1500,
+                "scenarios":[{"pes":86}]}"#,
+        )
+        .unwrap() else {
+            panic!("expected submit")
+        };
+        assert_eq!(spec.timeout_ms, Some(1500));
+        let err = parse_request(
+            br#"{"op":"submit","net":"r","timeout_ms":"soon","scenarios":[{"pes":1}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("timeout_ms"), "{err}");
+    }
+
+    #[test]
     fn other_ops_parse() {
         assert_eq!(
             parse_request(br#"{"op":"cancel","job":"j1"}"#).unwrap(),
@@ -582,10 +724,16 @@ mod tests {
         assert_eq!(j.get("type").as_str(), Some("accepted"));
         assert_eq!(j.get("queue_depth").as_u64(), Some(1));
 
-        let done = done_line("j1", 2, 0, false);
-        let j = Json::parse(std::str::from_utf8(&done).unwrap().trim()).unwrap();
+        let done = done_line("j1", 2, 0, false, false);
+        let s = std::str::from_utf8(&done).unwrap();
+        let j = Json::parse(s.trim()).unwrap();
         assert_eq!(j.get("ok").as_u64(), Some(2));
         assert_eq!(j.get("cancelled").as_bool(), Some(false));
+        assert!(!s.contains("timed_out"), "deadline-free done lines keep the old layout: {s}");
+
+        let done = done_line("j1", 1, 1, false, true);
+        let j = Json::parse(std::str::from_utf8(&done).unwrap().trim()).unwrap();
+        assert_eq!(j.get("timed_out").as_bool(), Some(true));
 
         let err = error_line(Some("j1"), "boom \"quoted\"");
         let j = Json::parse(std::str::from_utf8(&err).unwrap().trim()).unwrap();

@@ -151,6 +151,54 @@ pub struct ErrorStats {
     pub worst_ber: f64,
 }
 
+/// Write-verify parameters for pool reprogramming
+/// ([`SimCfg::write_verify`]). Each swap re-reads its programmed cells;
+/// failures are reprogrammed (charging write latency/energy again) up
+/// to [`Self::max_retries`] attempts, and cells still failing then
+/// retire their arrays permanently.
+///
+/// Determinism contract mirrors [`FaultCfg`]: each swap forks its own
+/// PRNG stream from `seed` and the pool index, and all counts derive
+/// from the trace arithmetic both engines share — so event, stepped,
+/// and every sweep thread report bit-identical retry/retirement tallies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WriteVerifyCfg {
+    /// Base PRNG seed (the scenario's fault seed).
+    pub seed: u64,
+    /// Probability an individual cell write fails verification — the
+    /// pipeline derives it from the fault map's mean stuck-at fraction
+    /// over in-use arrays. `0.0` verifies cleanly and charges nothing.
+    pub fail_prob: f64,
+    /// Reprogramming attempts after the initial write before an array
+    /// is retired (`--max-write-retries`).
+    pub max_retries: u32,
+}
+
+/// Permanent-fault telemetry ([`SimResult::faults`]) — present only
+/// when the scenario models permanent faults, so fault-free artifacts
+/// stay byte-identical. The simulator fills the write-verify fields;
+/// the pipeline merges in the remap pass's repair accounting
+/// ([`crate::alloc::remap`]).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FaultStats {
+    /// Arrays dead at map time (from the [`crate::hw::FaultMap`]).
+    pub dead_arrays: u64,
+    /// Arrays permanently retired mid-run by exhausted write-verify
+    /// retries.
+    pub retired_arrays: u64,
+    /// Blocks the remap pass steered off unusable arrays onto spares.
+    pub remapped_blocks: u64,
+    /// Spare arrays consumed by that remapping.
+    pub spares_used: u64,
+    /// Partially-faulty arrays kept in service at derated read width.
+    pub derated_arrays: u64,
+    /// Cell writes repeated by write-verify retry loops.
+    pub write_retries: u64,
+    /// Residual bit-error-rate contribution of stuck-at cells left in
+    /// service after repair (0 on a healthy chip).
+    pub residual_ber: f64,
+}
+
 /// Simulation parameters.
 #[derive(Clone, Copy)]
 pub struct SimCfg {
@@ -175,6 +223,10 @@ pub struct SimCfg {
     /// Seeded §III-A error injection. `None` — the historical default —
     /// leaves every read ideal and [`SimResult::errors`] empty.
     pub inject: Option<FaultCfg>,
+    /// Write-verify retry modelling for pool reprogramming. `None` —
+    /// the historical default — programs every cell first try and
+    /// leaves [`SimResult::faults`] empty.
+    pub write_verify: Option<WriteVerifyCfg>,
 }
 
 impl std::fmt::Debug for SimCfg {
@@ -187,6 +239,7 @@ impl std::fmt::Debug for SimCfg {
             .field("warmup", &self.warmup)
             .field("write_latency_ns", &self.write_latency_ns)
             .field("inject", &self.inject)
+            .field("write_verify", &self.write_verify)
             .finish()
     }
 }
@@ -209,6 +262,7 @@ impl SimCfg {
             warmup: (images / 4).min(2),
             write_latency_ns: 100.0,
             inject: None,
+            write_verify: None,
         }
     }
 
@@ -242,6 +296,14 @@ impl SimCfg {
         self.inject = Some(fault);
         self
     }
+
+    /// The same configuration with write-verify retry modelling on (the
+    /// pipeline derives the [`WriteVerifyCfg`] from the scenario's
+    /// fault map and `--max-write-retries`).
+    pub fn with_write_verify(mut self, wv: WriteVerifyCfg) -> SimCfg {
+        self.write_verify = Some(wv);
+        self
+    }
 }
 
 /// Everything a simulation run produces.
@@ -273,6 +335,9 @@ pub struct SimResult {
     pub reload_stall_cycles: u64,
     /// Injected-error telemetry — `Some` iff [`SimCfg::inject`] was set.
     pub errors: Option<ErrorStats>,
+    /// Permanent-fault telemetry — `Some` iff [`SimCfg::write_verify`]
+    /// was set (the pipeline merges repair accounting into it).
+    pub faults: Option<FaultStats>,
 }
 
 impl SimResult {
@@ -467,6 +532,8 @@ pub fn simulate(
     // visible swap cycles stall between them. This accounting is
     // engine-independent — both engines produce identical stage times,
     // so pooled runs stay bit-identical across engines.
+    let mut write_retries = 0u64;
+    let mut retired_arrays = 0u64;
     let (makespan, throughput_ips, reloads, reload_cells, reload_stall_cycles) =
         match plan.pools.as_ref().filter(|ps| ps.pools.len() > 1) {
             None => {
@@ -507,6 +574,40 @@ pub fn simulate(
                         };
                         // PEs drive their arrays' word lines in parallel
                         stall_total += per_cell * vis_cells.div_ceil(chip.pes.max(1) as u64);
+                        // write-verify: re-read what this swap programmed,
+                        // reprogram failures (each retry charges the same
+                        // per-cell write cost and stalls in the same
+                        // visible proportion as the base swap), retire
+                        // arrays whose cells never verify
+                        if let Some(wv) = cfg.write_verify {
+                            let mut rng = Prng::new(wv.seed).fork(i as u64);
+                            let mut failing =
+                                binomial_flips(&mut rng, p.swap_cells, wv.fail_prob);
+                            let mut retried = 0u64;
+                            for _ in 0..wv.max_retries {
+                                if failing == 0 {
+                                    break;
+                                }
+                                retried += failing;
+                                failing = binomial_flips(&mut rng, failing, wv.fail_prob);
+                            }
+                            if failing > 0 {
+                                let per_array =
+                                    (p.swap_cells / p.swap_arrays as u64).max(1);
+                                retired_arrays += failing
+                                    .div_ceil(per_array)
+                                    .min(p.swap_arrays as u64);
+                            }
+                            write_retries += retried;
+                            cells_total += retried;
+                            let vis_retried = if visible == 0 {
+                                0
+                            } else {
+                                (retried * visible).div_ceil(p.swap_arrays as u64)
+                            };
+                            stall_total +=
+                                per_cell * vis_retried.div_ceil(chip.pes.max(1) as u64);
+                        }
                     }
                     prev_resident = p.resident_arrays;
                 }
@@ -542,6 +643,15 @@ pub fn simulate(
     //    never perturbs the parity guarantees above
     let errors = cfg.inject.map(|f| inject_error_stats(map, plan, trace, &cfg, f));
 
+    // 6. write-verify telemetry — like the error tally, computed from
+    //    shared arithmetic, so it is engine- and thread-independent; the
+    //    pipeline merges the remap pass's repair counts into this block
+    let faults = cfg.write_verify.map(|_| FaultStats {
+        retired_arrays,
+        write_retries,
+        ..FaultStats::default()
+    });
+
     SimResult {
         makespan,
         images: cfg.images,
@@ -557,6 +667,7 @@ pub fn simulate(
         reload_cells,
         reload_stall_cycles,
         errors,
+        faults,
     }
 }
 
@@ -665,6 +776,7 @@ mod tests {
                 warmup: 2,
                 write_latency_ns: 100.0,
                 inject: None,
+                write_verify: None,
             },
         );
         assert!(r.layer_util[0] > 0.5, "util {}", r.layer_util[0]);
@@ -703,6 +815,75 @@ mod tests {
         );
         assert_eq!(r.makespan, r2.makespan);
         assert_eq!(r.reload_stall_cycles, r2.reload_stall_cycles);
+    }
+
+    #[test]
+    fn write_verify_retries_are_charged_and_engine_deterministic() {
+        let g = resnet18(32, 10);
+        let map = map_network(&g, ArrayCfg::paper(), false);
+        let acts = synth_activations(&g, &map, 2, 17, SynthCfg::default());
+        let trace = trace_from_activations(&g, &map, &acts);
+        let prof = NetworkProfile::from_trace(&map, &trace);
+        let chip = ChipCfg::paper(22);
+        let a = StrategyRegistry::lookup_allocator("pooled").unwrap();
+        let plan = a.allocate_oversub(&map, &prof, chip.total_arrays(), 4.0).unwrap();
+        let mut logical = chip.clone();
+        logical.arrays_per_pe *= 4;
+        let placement = place(&map, &plan, &logical).unwrap();
+        let base = SimCfg::for_strategy_name("pooled", 6).unwrap();
+
+        // write-verify off ⇒ no record (the historical result shape)
+        let clean = simulate(&logical, &map, &plan, &placement, &trace, base);
+        assert!(clean.faults.is_none());
+
+        let wv = WriteVerifyCfg { seed: 7, fail_prob: 0.05, max_retries: 3 };
+        let cfg = base.with_write_verify(wv);
+        let r1 = simulate(&logical, &map, &plan, &placement, &trace, cfg);
+        let f1 = r1.faults.expect("write-verify on must record stats");
+        assert!(f1.write_retries > 0, "{f1:?}");
+        assert!(r1.reload_cells > clean.reload_cells, "retries reprogram cells");
+        assert!(r1.reload_stall_cycles >= clean.reload_stall_cycles);
+        assert!(r1.makespan >= clean.makespan);
+
+        // bit-identical across engines and replays
+        let r2 = simulate(
+            &logical,
+            &map,
+            &plan,
+            &placement,
+            &trace,
+            cfg.with_engine(&engine::STEPPED),
+        );
+        assert_eq!(r2.faults, Some(f1));
+        assert_eq!(r2.makespan, r1.makespan);
+        assert_eq!(r2.reload_cells, r1.reload_cells);
+        let r3 = simulate(&logical, &map, &plan, &placement, &trace, cfg);
+        assert_eq!(r3.faults, Some(f1));
+
+        // a clean process verifies first try: zero retries, identical
+        // reload accounting to the write-verify-free run
+        let zero = base.with_write_verify(WriteVerifyCfg {
+            seed: 7,
+            fail_prob: 0.0,
+            max_retries: 3,
+        });
+        let rz = simulate(&logical, &map, &plan, &placement, &trace, zero);
+        let fz = rz.faults.unwrap();
+        assert_eq!(fz.write_retries, 0);
+        assert_eq!(fz.retired_arrays, 0);
+        assert_eq!(rz.reload_cells, clean.reload_cells);
+        assert_eq!(rz.makespan, clean.makespan);
+
+        // a hopeless process exhausts its retries and retires arrays
+        let hopeless = base.with_write_verify(WriteVerifyCfg {
+            seed: 7,
+            fail_prob: 0.9,
+            max_retries: 2,
+        });
+        let rh = simulate(&logical, &map, &plan, &placement, &trace, hopeless);
+        let fh = rh.faults.unwrap();
+        assert!(fh.retired_arrays > 0, "{fh:?}");
+        assert!(fh.write_retries > f1.write_retries);
     }
 
     #[test]

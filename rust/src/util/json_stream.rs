@@ -730,13 +730,38 @@ fn write_escaped_io<W: Write>(out: &mut W, s: &str) -> io::Result<()> {
 /// Stream a [`Json`] tree to `path` in the dump format shared by every
 /// artifact file: pretty-printed plus a trailing newline, byte-identical
 /// to the old `fs::write(path, json.pretty() + "\n")`.
+///
+/// The write is crash-safe: bytes land in a unique sibling `.tmp.*` file
+/// first and only an atomic `rename` publishes them at `path`, so a
+/// concurrent reader — or a process killed mid-dump — never observes a
+/// truncated artifact, and re-running the dump repairs it.
 pub fn write_json_file(path: &Path, j: &Json) -> io::Result<()> {
-    let file = std::fs::File::create(path)?;
-    let mut w = JsonWriter::pretty(io::BufWriter::new(file));
-    w.value(j)?;
-    let mut out = w.finish()?;
-    out.write_all(b"\n")?;
-    out.flush()
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static UNIQUE: AtomicU64 = AtomicU64::new(0);
+    let tmp = path.with_extension(format!(
+        "tmp.{}.{}",
+        std::process::id(),
+        UNIQUE.fetch_add(1, Ordering::Relaxed)
+    ));
+    let write = || -> io::Result<()> {
+        let file = std::fs::File::create(&tmp)?;
+        let mut w = JsonWriter::pretty(io::BufWriter::new(file));
+        w.value(j)?;
+        let mut out = w.finish()?;
+        out.write_all(b"\n")?;
+        out.flush()
+    };
+    if let Err(e) = write() {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    match std::fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -917,6 +942,28 @@ mod tests {
         };
         assert_eq!(build(true), v.pretty());
         assert_eq!(build(false), v.compact());
+    }
+
+    #[test]
+    fn write_json_file_publishes_atomically_with_no_stray_tmp_files() {
+        let dir = std::env::temp_dir().join(format!("cimfab-jsonw-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("artifact.json");
+        let v = Json::parse(r#"{"a": [1, 2], "b": "x"}"#).unwrap();
+        write_json_file(&path, &v).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), v.pretty() + "\n");
+        // overwriting an existing artifact renames over it cleanly
+        let v2 = Json::parse(r#"{"a": []}"#).unwrap();
+        write_json_file(&path, &v2).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), v2.pretty() + "\n");
+        let stray: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains("tmp"))
+            .collect();
+        assert!(stray.is_empty(), "stray tmp files: {stray:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

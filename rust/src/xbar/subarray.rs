@@ -221,6 +221,94 @@ impl SubArray {
         (psums32, cycles_for_slice(&self.cfg, mode, x), tally)
     }
 
+    /// [`SubArray::matvec_inject`] composed with a permanent stuck-at
+    /// cell population: a fraction `stuck` of the array's cells are
+    /// stuck, half at Gon (always conduct) and half at Goff (never
+    /// conduct). Per ADC conversion each of the `sum` current-carrying
+    /// cells drops out with probability `stuck/2` (stuck-off) and each
+    /// quiet cell in the batch adds a unit of current with probability
+    /// `stuck/2` (stuck-on); the perturbed current then passes through
+    /// the same Gaussian read-noise and ADC transfer function as
+    /// [`SubArray::matvec_inject`].
+    ///
+    /// With `stuck <= 0` the call delegates to [`SubArray::matvec_inject`]
+    /// and is byte-identical to it (including the `rng` stream), so
+    /// fault-free callers pay nothing. Determinism is the caller's
+    /// contract, exactly as for `matvec_inject`: seed `rng` per
+    /// (seed, array, read-index) via [`Prng::fork`].
+    pub fn matvec_inject_faulty(
+        &self,
+        x: &[u8],
+        mode: ReadMode,
+        sigma: f64,
+        stuck: f64,
+        rng: &mut Prng,
+    ) -> (Vec<i32>, u32, InjectTally) {
+        if stuck <= 0.0 {
+            return self.matvec_inject(x, mode, sigma, rng);
+        }
+        assert_eq!(x.len(), self.rows, "input length {} != rows {}", x.len(), self.rows);
+        let wcols = self.cfg.weight_cols();
+        let adc_rows = self.cfg.adc_rows();
+        let p_stuck = (stuck / 2.0).min(1.0);
+        let mut psums = vec![0i64; wcols];
+        let mut tally = InjectTally::default();
+
+        for ib in 0..self.cfg.input_bits {
+            let active: Vec<usize> = match mode {
+                ReadMode::ZeroSkip => {
+                    (0..self.rows).filter(|&r| (x[r] >> ib) & 1 == 1).collect()
+                }
+                ReadMode::Baseline => (0..self.rows).collect(),
+            };
+            for batch in active.chunks(adc_rows) {
+                for (wb, plane) in self.planes.iter().enumerate() {
+                    let sig: i64 = if wb == self.cfg.weight_bits - 1 {
+                        -(1i64 << wb)
+                    } else {
+                        1i64 << wb
+                    };
+                    for (c, psum) in psums.iter_mut().enumerate() {
+                        let mut sum = 0u32;
+                        for &r in batch {
+                            let inp = match mode {
+                                ReadMode::ZeroSkip => 1u32,
+                                ReadMode::Baseline => ((x[r] >> ib) & 1) as u32,
+                            };
+                            sum += inp * plane[r * wcols + c] as u32;
+                        }
+                        // stuck-off cells among the conducting ones drop
+                        // their unit of current; stuck-on cells among the
+                        // quiet ones add one
+                        let mut current = sum as i64;
+                        for _ in 0..sum {
+                            if rng.chance(p_stuck) {
+                                current -= 1;
+                            }
+                        }
+                        for _ in 0..(batch.len() as u32 - sum) {
+                            if rng.chance(p_stuck) {
+                                current += 1;
+                            }
+                        }
+                        let mut analog = current.max(0) as f64;
+                        if sigma > 0.0 {
+                            analog += sigma * analog.sqrt() * rng.normal();
+                        }
+                        let code = self.adc.read_analog(analog);
+                        tally.conversions += 1;
+                        if code != self.adc.read_ideal(sum) {
+                            tally.flips += 1;
+                        }
+                        *psum += sig * ((code as i64) << ib);
+                    }
+                }
+            }
+        }
+        let psums32 = psums.into_iter().map(|p| p as i32).collect();
+        (psums32, cycles_for_slice(&self.cfg, mode, x), tally)
+    }
+
     /// Reference dot product via plain integer arithmetic (no ADC
     /// batching) — what the analog path must equal.
     pub fn matvec_ref(&self, x: &[u8]) -> Vec<i32> {
@@ -371,6 +459,63 @@ mod tests {
         let mut rng = Prng::new(3);
         let (_, _, tally) = sa.matvec_inject(&x, ReadMode::ZeroSkip, 0.05, &mut rng);
         assert_eq!(tally.conversions, (cfg.weight_bits * cfg.weight_cols()) as u64);
+    }
+
+    #[test]
+    fn faulty_read_at_stuck_zero_delegates_byte_identically() {
+        propcheck::check("faulty@stuck=0 == inject", 0xFA03, 30, |rng| {
+            let cfg = ArrayCfg::paper();
+            let rows = 1 + rng.index(cfg.rows);
+            let w = random_weights(rng, rows, cfg.weight_cols());
+            let sa = SubArray::program(cfg, &w);
+            let x: Vec<u8> = (0..rows).map(|_| rng.next_u32() as u8).collect();
+            let sigma = if rng.chance(0.5) { 0.0 } else { 0.2 };
+            let mut a = Prng::new(42);
+            let mut b = a.clone();
+            let got = sa.matvec_inject_faulty(&x, ReadMode::ZeroSkip, sigma, 0.0, &mut a);
+            let want = sa.matvec_inject(&x, ReadMode::ZeroSkip, sigma, &mut b);
+            crate::prop_assert!(got == want, "stuck=0 diverged at sigma={sigma}");
+            crate::prop_assert!(
+                a.next_u64() == b.next_u64(),
+                "stuck=0 rng stream diverged at sigma={sigma}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn stuck_cells_flip_codes_deterministically_without_noise() {
+        let cfg = ArrayCfg::paper();
+        let mut rng = Prng::new(0xFA04);
+        let w = random_weights(&mut rng, 64, cfg.weight_cols());
+        let sa = SubArray::program(cfg, &w);
+        let x: Vec<u8> = (0..64).map(|_| rng.next_u32() as u8).collect();
+        let run = |stuck: f64| {
+            let mut r = Prng::new(11);
+            sa.matvec_inject_faulty(&x, ReadMode::ZeroSkip, 0.0, stuck, &mut r)
+        };
+        assert_eq!(run(0.2), run(0.2), "same seed must replay bit-identically");
+        let (_, _, tally) = run(0.2);
+        assert!(tally.flips > 0, "20% stuck cells flipped nothing: {tally:?}");
+        // cycles are a read-discipline property, untouched by faults
+        let (_, cycles, _) = run(0.2);
+        assert_eq!(cycles, sa.matvec(&x, ReadMode::ZeroSkip).1);
+    }
+
+    #[test]
+    fn stuck_composes_with_gaussian_noise() {
+        let cfg = ArrayCfg::paper();
+        let mut rng = Prng::new(0xFA05);
+        let w = random_weights(&mut rng, 32, cfg.weight_cols());
+        let sa = SubArray::program(cfg, &w);
+        let x: Vec<u8> = (0..32).map(|_| rng.next_u32() as u8).collect();
+        let run = |sigma: f64, stuck: f64| {
+            let mut r = Prng::new(5);
+            sa.matvec_inject_faulty(&x, ReadMode::ZeroSkip, sigma, stuck, &mut r).2
+        };
+        let both = run(0.3, 0.3);
+        assert!(both.flips > 0, "composed faults flipped nothing: {both:?}");
+        assert_eq!(both, run(0.3, 0.3), "composition must be deterministic");
     }
 
     #[test]

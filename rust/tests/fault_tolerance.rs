@@ -1,0 +1,230 @@
+//! Permanent-fault suite: seeded fault maps, the fault-aware remap
+//! pass, write-verify accounting, and graceful degradation, end to end
+//! through the scenario pipeline.
+//!
+//! The contract under test:
+//!
+//! * fault-free runs are byte-identical to the pre-fault-model world —
+//!   a zero-rate faulty run differs from a clean one only by the
+//!   `faults` accounting object (and the scenario id);
+//! * remapping onto spares measurably recovers the residual bit-error
+//!   rate versus running the same damaged chip unrepaired;
+//! * both simulation engines agree bit-for-bit on faulty runs;
+//! * spare exhaustion is a clear diagnostic (naming `--spare-arrays`),
+//!   never a panic, and `--no-fault-remap` still measures the chip;
+//! * malformed fault-map files fail with errors carrying the path.
+
+use cimfab::hw::FaultMap;
+use cimfab::pipeline::{self, artifact, PrefixSpec, ScenarioBuilder, StatsSource};
+use cimfab::util::json::Json;
+use cimfab::util::propcheck;
+
+/// CI pins `CIMFAB_TEST_SEED=7`; the fault axes reuse it so the sampled
+/// fault maps are reproducible too.
+fn test_seed() -> u64 {
+    std::env::var("CIMFAB_TEST_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(7)
+}
+
+fn spec() -> PrefixSpec {
+    PrefixSpec {
+        net: "resnet18".into(),
+        hw: 32,
+        hw_profile: cimfab::hw::DEFAULT_PROFILE.into(),
+        stats: StatsSource::Synthetic,
+        profile_images: 1,
+        seed: 7,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+#[test]
+fn zero_rate_faults_keep_artifacts_byte_identical() {
+    let prep = pipeline::prepare(&spec(), None).unwrap();
+    propcheck::check("fault-free byte identity", 0xFA_10, 5, |rng| {
+        let pes = 129 + rng.index(80);
+        let base = ScenarioBuilder::from_prefix(&spec()).alloc("block-wise").pes(pes).sim_images(2);
+
+        // clean run: no fault id segments, no faults key anywhere
+        let off = base.clone().build().unwrap();
+        cimfab::prop_assert!(!off.id().contains("_sa") && !off.id().contains("_flt"), "{}", off.id());
+        let off_out = pipeline::run_scenario(&prep.view(), &off, None).unwrap();
+        cimfab::prop_assert!(off_out.result.faults.is_none(), "clean runs must not report faults");
+        let off_json = artifact::sim_result_json(&off_out.result).pretty();
+        cimfab::prop_assert!(!off_json.contains("\"faults\""), "{off_json}");
+        cimfab::prop_assert!(
+            !off_out.report_json().pretty().contains("\"fault_"),
+            "clean reports must not grow fault keys"
+        );
+
+        // zero-rate fault axes: the accounting object appears, all
+        // zeros, and every other byte matches the clean artifact
+        let zero = base
+            .clone()
+            .stuck_at_rate(0.0)
+            .dead_array_rate(0.0)
+            .fault_seed(test_seed())
+            .build()
+            .unwrap();
+        cimfab::prop_assert!(zero.id().contains("_sa") && zero.id().contains("_flt"), "{}", zero.id());
+        let zero_out = pipeline::run_scenario(&prep.view(), &zero, None).unwrap();
+        let fl = zero_out.result.faults.expect("fault axes must always report FaultStats");
+        cimfab::prop_assert!(
+            fl.dead_arrays == 0
+                && fl.retired_arrays == 0
+                && fl.remapped_blocks == 0
+                && fl.spares_used == 0
+                && fl.derated_arrays == 0
+                && fl.write_retries == 0
+                && fl.residual_ber == 0.0,
+            "zero rates must account nothing, got {fl:?}"
+        );
+        let mut stripped = artifact::sim_result_json(&zero_out.result);
+        if let Json::Obj(m) = &mut stripped {
+            m.remove("faults").expect("zero-rate artifact must carry the faults object");
+        }
+        cimfab::prop_assert!(
+            stripped.pretty() == off_json,
+            "zero-rate fault axes changed a fault-free artifact byte at pes={pes}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn remapping_onto_spares_recovers_residual_ber() {
+    let prep = pipeline::prepare(&spec(), None).unwrap();
+    let faulty = |remap: bool| {
+        let mut b = ScenarioBuilder::from_prefix(&spec())
+            .alloc("block-wise")
+            .pes(172)
+            .sim_images(2)
+            .stuck_at_rate(0.01)
+            .dead_array_rate(0.01)
+            .fault_seed(test_seed())
+            .spare_arrays(256);
+        if !remap {
+            b = b.fault_remap(false);
+        }
+        pipeline::run_scenario(&prep.view(), &b.build().unwrap(), None).unwrap()
+    };
+    let with = faulty(true).result.faults.unwrap();
+    let without = faulty(false).result.faults.unwrap();
+    // the same sampled chip either way — only the repair differs
+    assert_eq!(with.dead_arrays, without.dead_arrays);
+    assert!(with.dead_arrays > 0, "{with:?}");
+    assert!(with.remapped_blocks > 0 && with.spares_used > 0, "{with:?}");
+    assert_eq!(without.remapped_blocks, 0, "{without:?}");
+    assert_eq!(without.spares_used, 0, "{without:?}");
+    assert!(
+        with.residual_ber < without.residual_ber,
+        "remapping must recover BER: {} (repaired) vs {} (as-is)",
+        with.residual_ber,
+        without.residual_ber
+    );
+}
+
+#[test]
+fn both_engines_agree_on_faulty_runs() {
+    let prep = pipeline::prepare(&spec(), None).unwrap();
+    let base = ScenarioBuilder::from_prefix(&spec())
+        .alloc("block-wise")
+        .pes(172)
+        .sim_images(2)
+        .stuck_at_rate(0.01)
+        .dead_array_rate(0.01)
+        .fault_seed(test_seed())
+        .spare_arrays(256);
+    let ev = pipeline::run_scenario(&prep.view(), &base.clone().build().unwrap(), None).unwrap();
+    let st = pipeline::run_scenario(&prep.view(), &base.engine("stepped").build().unwrap(), None)
+        .unwrap();
+    assert!(ev.result.faults.is_some());
+    assert_eq!(ev.result.makespan, st.result.makespan);
+    assert_eq!(
+        artifact::sim_result_json(&ev.result).compact(),
+        artifact::sim_result_json(&st.result).compact(),
+        "engines diverged on a faulty chip"
+    );
+}
+
+#[test]
+fn spare_exhaustion_is_a_diagnostic_and_no_remap_still_measures() {
+    let prep = pipeline::prepare(&spec(), None).unwrap();
+    let base = ScenarioBuilder::from_prefix(&spec())
+        .alloc("block-wise")
+        .pes(172)
+        .sim_images(2)
+        .dead_array_rate(0.01)
+        .fault_seed(test_seed());
+    // no reserve: repairing is impossible — a Result error naming the
+    // knobs, not a panic
+    let err = pipeline::run_scenario(&prep.view(), &base.clone().build().unwrap(), None)
+        .map(|_| ())
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("exceed spare capacity"), "{msg}");
+    assert!(msg.contains("--spare-arrays"), "{msg}");
+    // the same chip runs unrepaired in degraded mode, damage accounted
+    let out = pipeline::run_scenario(
+        &prep.view(),
+        &base.fault_remap(false).build().unwrap(),
+        None,
+    )
+    .unwrap();
+    let fl = out.result.faults.unwrap();
+    assert!(fl.dead_arrays > 0 && fl.residual_ber > 0.0, "{fl:?}");
+    assert_eq!(fl.spares_used, 0);
+}
+
+#[test]
+fn malformed_fault_maps_fail_with_path_context() {
+    let tmp = |case: &str, text: &str| {
+        let p = std::env::temp_dir()
+            .join(format!("cimfab-fault-map-{}-{case}.json", std::process::id()));
+        std::fs::write(&p, text).unwrap();
+        p.to_str().unwrap().to_string()
+    };
+
+    // the parser itself: precise per-field diagnostics
+    for (text, needle) in [
+        ("{not json", "invalid JSON"),
+        (r#"{"arrays":4,"bogus":1}"#, "unknown fault-map field 'bogus'"),
+        (r#"{"arrays":0}"#, "at least 1"),
+        (r#"{"arrays":2,"dead":[5]}"#, "out of range"),
+        (r#"{"arrays":2,"stuck":[{"array":0,"fraction":1.5}]}"#, "must be in [0, 1]"),
+    ] {
+        let err = FaultMap::from_json_text(text).unwrap_err();
+        assert!(format!("{err:#}").contains(needle), "{text} -> {err:#}");
+    }
+
+    // load() wraps every failure with the offending path
+    let missing = std::env::temp_dir().join("cimfab-no-such-fault-map.json");
+    let _ = std::fs::remove_file(&missing);
+    let err = FaultMap::load(missing.to_str().unwrap()).unwrap_err();
+    assert!(format!("{err:#}").contains(missing.to_str().unwrap()), "{err:#}");
+    let garbage = tmp("garbage", "{not json");
+    let err = FaultMap::load(&garbage).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains(&garbage) && msg.contains("invalid JSON"), "{msg}");
+
+    // and the pipeline surfaces the same context from --fault-map
+    let prep = pipeline::prepare(&spec(), None).unwrap();
+    let sc = |path: &str| {
+        ScenarioBuilder::from_prefix(&spec())
+            .alloc("block-wise")
+            .pes(172)
+            .sim_images(2)
+            .fault_map(path)
+            .build()
+            .unwrap()
+    };
+    let err = pipeline::run_scenario(&prep.view(), &sc(&garbage), None).map(|_| ()).unwrap_err();
+    assert!(format!("{err:#}").contains(&garbage), "{err:#}");
+    let undersized = tmp("undersized", r#"{"arrays":4}"#);
+    let err =
+        pipeline::run_scenario(&prep.view(), &sc(&undersized), None).map(|_| ()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("covers 4 arrays"), "{msg}");
+    for p in [garbage, undersized] {
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -107,6 +107,45 @@ fn corrupt_entries_degrade_to_a_miss_and_are_repaired() {
 }
 
 #[test]
+fn killed_mid_write_entries_miss_cleanly_and_are_repaired() {
+    let dir = tmp("killed");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = PrefixCache::new(dir.to_str().unwrap()).unwrap();
+    let (cold, s0) = prepare_cached(&spec(17), None, Some(&cache)).unwrap();
+    assert_eq!(s0, CacheStatus::Miss);
+    let entry = std::fs::read_dir(&dir).unwrap().next().unwrap().unwrap().path();
+    let full = std::fs::read(&entry).unwrap();
+    // a writer killed before its atomic rename leaves only a partial
+    // .tmp file behind; the cache must ignore it entirely
+    let stray = entry.with_extension("tmp.99999.0");
+    std::fs::write(&stray, &full[..full.len() / 3]).unwrap();
+    // and a torn entry (however it got there) must degrade to a clean
+    // miss at any truncation point — never a panic or a wrong replay
+    for cut in [0, 1, full.len() / 2, full.len() - 1] {
+        std::fs::write(&entry, &full[..cut]).unwrap();
+        let (again, status) = prepare_cached(&spec(17), None, Some(&cache)).unwrap();
+        assert_eq!(status, CacheStatus::Miss, "entry truncated at {cut} bytes must miss");
+        assert_eq!(cold.trace, again.trace, "repair after truncation at {cut} diverged");
+    }
+    // the last repair rewrote a whole entry: it hits, byte-identical to
+    // the original, and the only tmp file around is the dead writer's
+    assert_eq!(prepare_cached(&spec(17), None, Some(&cache)).unwrap().1, CacheStatus::Hit);
+    assert_eq!(std::fs::read(&entry).unwrap(), full, "repaired entry must be byte-identical");
+    let tmp_files: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.contains(".tmp."))
+        .collect();
+    assert_eq!(
+        tmp_files,
+        vec![stray.file_name().unwrap().to_string_lossy().into_owned()],
+        "repair must not leave tmp files of its own"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn golden_prefixes_never_write_cache_entries() {
     let dir = tmp("golden");
     let _ = std::fs::remove_dir_all(&dir);

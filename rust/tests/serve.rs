@@ -9,6 +9,11 @@
 //!   on the same prefix still runs, on a pool hit);
 //! * malformed request lines answer with an `error` line and leave the
 //!   connection usable;
+//! * a registered strategy that panics mid-scenario is isolated: the
+//!   job reports a typed `error` line and a `done` with the failure
+//!   counted, the worker slot is freed, and the daemon keeps serving;
+//! * a submit with `timeout_ms` past its deadline terminates with
+//!   `done … "timed_out":true` without running the remaining scenarios;
 //! * `shutdown` over the wire stops the daemon with `Ok(())`, and a
 //!   Unix-socket daemon removes its socket file on the way out.
 //!
@@ -260,6 +265,91 @@ fn malformed_lines_answer_error_and_keep_the_connection() {
     let j = c.recv();
     assert_eq!(j.get("type").as_str(), Some("stats"));
     assert_eq!(j.get("server").get("rejected").as_u64(), Some(1), "{j:?}");
+
+    shutdown(addr, h);
+}
+
+/// An allocation strategy that panics on use — registered globally so
+/// the daemon accepts jobs naming it, then detonates inside the worker.
+struct Panicky;
+
+impl cimfab::alloc::Allocator for Panicky {
+    fn name(&self) -> &str {
+        "panicky"
+    }
+    fn describe(&self) -> &str {
+        "deliberately panics (serve isolation test)"
+    }
+    fn allocate(
+        &self,
+        _map: &cimfab::mapping::NetworkMap,
+        _profile: &cimfab::stats::NetworkProfile,
+        _budget: usize,
+    ) -> cimfab::Result<cimfab::mapping::AllocationPlan> {
+        panic!("deliberate test panic");
+    }
+}
+
+#[test]
+fn panicking_strategy_is_isolated_and_frees_the_worker() {
+    cimfab::strategy::StrategyRegistry::register_global(Some(&Panicky), None).unwrap();
+    let mut cfg = ServeCfg::new(Bind::Tcp(String::new()));
+    cfg.workers = 1; // the panic must free the only worker
+    let (addr, h) = start(cfg);
+    let mut c = Client::connect(addr);
+
+    // one scenario panics, its sibling must still run
+    c.send(
+        r#"{"op":"submit","id":"p1","net":"resnet18","res":32,"scenarios":[{"alloc":"panicky","pes":129,"images":2},{"alloc":"block-wise","pes":129,"images":2}]}"#,
+    );
+    let lines = c.recv_job("p1");
+    let err = lines
+        .iter()
+        .find(|l| l.get("type").as_str() == Some("error"))
+        .unwrap_or_else(|| panic!("no error line in {lines:?}"));
+    assert_eq!(err.get("job").as_str(), Some("p1"));
+    assert!(err.get("message").as_str().unwrap().contains("panicked"), "{err:?}");
+    assert!(err.get("message").as_str().unwrap().contains("deliberate test panic"), "{err:?}");
+    let done = lines.last().unwrap();
+    assert_eq!(done.get("ok").as_u64(), Some(1), "{done:?}");
+    assert_eq!(done.get("failed").as_u64(), Some(1), "{done:?}");
+    assert_ne!(done.get("cancelled").as_bool(), Some(true), "{done:?}");
+
+    // the single worker survived the unwind: a fresh job completes
+    c.send(&submit_line("p2", "block-wise", 2));
+    let done = c.recv_job("p2");
+    assert_eq!(done.last().unwrap().get("ok").as_u64(), Some(1), "{done:?}");
+
+    shutdown(addr, h);
+}
+
+#[test]
+fn expired_deadlines_terminate_jobs_as_timed_out() {
+    let (addr, h) = start(ServeCfg::new(Bind::Tcp(String::new())));
+    let mut c = Client::connect(addr);
+
+    // a zero deadline is already past when the worker picks the job up:
+    // no scenario runs, and the done line carries timed_out
+    c.send(
+        r#"{"op":"submit","id":"t1","timeout_ms":0,"net":"resnet18","res":32,"scenarios":[{"alloc":"baseline","pes":129,"images":2},{"alloc":"block-wise","pes":129,"images":2}]}"#,
+    );
+    let lines = c.recv_job("t1");
+    let done = lines.last().unwrap();
+    assert_eq!(done.get("timed_out").as_bool(), Some(true), "{done:?}");
+    assert_eq!(done.get("ok").as_u64(), Some(0), "{done:?}");
+    assert!(
+        !lines.iter().any(|l| l.get("type").as_str() == Some("result")),
+        "no scenario may run past the deadline: {lines:?}"
+    );
+
+    // a generous deadline does not trip, and its done line omits the key
+    c.send(
+        r#"{"op":"submit","id":"t2","timeout_ms":600000,"net":"resnet18","res":32,"scenarios":[{"alloc":"block-wise","pes":129,"images":2}]}"#,
+    );
+    let done = c.recv_job("t2");
+    let done = done.last().unwrap();
+    assert_eq!(done.get("ok").as_u64(), Some(1), "{done:?}");
+    assert_eq!(done.get("timed_out").as_bool(), None, "{done:?}");
 
     shutdown(addr, h);
 }

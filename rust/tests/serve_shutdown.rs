@@ -1,0 +1,90 @@
+//! SIGTERM drain for the `cimfab serve` daemon — in its own test
+//! binary because the daemon's termination flag (and the installed
+//! signal handler) are process-wide: once this test raises `SIGTERM`,
+//! no other daemon test could run in the same process.
+//!
+//! Pins the graceful half of the shutdown contract: a signal arriving
+//! mid-flight lets the running job drain to a normal `done` line,
+//! rejects submits that race the shutdown with a typed error, and
+//! removes the Unix socket file before `run()` returns `Ok`.
+
+#![cfg(unix)]
+
+use cimfab::server::{Bind, ServeCfg, Server};
+use cimfab::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+
+extern "C" {
+    fn raise(sig: i32) -> i32;
+}
+const SIGTERM: i32 = 15;
+
+#[test]
+fn sigterm_drains_in_flight_work_rejects_new_submits_and_removes_the_socket() {
+    let path =
+        std::env::temp_dir().join(format!("cimfab-serve-sigterm-{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let mut cfg = ServeCfg::new(Bind::Unix(path.clone()));
+    cfg.workers = 1;
+    let server = Server::bind(cfg).unwrap();
+    let h = std::thread::spawn(move || server.run());
+
+    let w = UnixStream::connect(&path).unwrap();
+    let mut r = BufReader::new(w.try_clone().unwrap());
+    let send = |line: &str| {
+        (&w).write_all(line.as_bytes()).unwrap();
+        (&w).write_all(b"\n").unwrap();
+    };
+    let mut recv = || {
+        let mut line = String::new();
+        let n = r.read_line(&mut line).unwrap();
+        assert!(n > 0, "server closed the connection unexpectedly");
+        Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad JSON line {line:?}: {e}"))
+    };
+
+    // a two-scenario job; waiting for the first result line puts the
+    // signal squarely mid-flight
+    send(
+        r#"{"op":"submit","id":"drain","net":"resnet18","res":32,"seed":41,"scenarios":[{"alloc":"block-wise","pes":129,"images":6},{"alloc":"baseline","pes":129,"images":6}]}"#,
+    );
+    assert_eq!(recv().get("type").as_str(), Some("accepted"));
+    loop {
+        if recv().get("type").as_str() == Some("result") {
+            break;
+        }
+    }
+
+    unsafe {
+        raise(SIGTERM);
+    }
+    // give the accept loop (25 ms poll) time to observe the signal and
+    // close the queue before the racing submit below
+    std::thread::sleep(std::time::Duration::from_millis(400));
+
+    send(
+        r#"{"op":"submit","id":"late","net":"resnet18","res":32,"scenarios":[{"alloc":"baseline","pes":129,"images":2}]}"#,
+    );
+
+    // the in-flight job drains to a clean done; the late submit bounces
+    let (mut drained, mut rejected) = (None, None);
+    while drained.is_none() || rejected.is_none() {
+        let j = recv();
+        match j.get("type").as_str() {
+            Some("done") if j.get("job").as_str() == Some("drain") => drained = Some(j),
+            Some("error") => rejected = Some(j),
+            _ => {}
+        }
+    }
+    let done = drained.unwrap();
+    assert_eq!(done.get("ok").as_u64(), Some(2), "in-flight job must drain fully: {done:?}");
+    assert_eq!(done.get("failed").as_u64(), Some(0), "{done:?}");
+    assert_ne!(done.get("cancelled").as_bool(), Some(true), "{done:?}");
+    let err = rejected.unwrap();
+    assert_eq!(err.get("job").as_str(), Some("late"), "{err:?}");
+    assert!(err.get("message").as_str().unwrap().contains("shutting down"), "{err:?}");
+
+    // run() returns Ok and the socket file is gone
+    h.join().unwrap().unwrap();
+    assert!(!path.exists(), "daemon left its socket file behind after SIGTERM");
+}
